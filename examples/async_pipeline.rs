@@ -1,0 +1,69 @@
+//! MOUSETRAP protocol walkthrough (paper Fig. 7/8): run the event-driven
+//! gate-level stage, then trace one asynchronous TM inference through the
+//! STG and validate the causal order.
+//!
+//! ```sh
+//! cargo run --release --example async_pipeline
+//! ```
+
+use anyhow::Result;
+
+use tdpc::asynctm::stg::{trace_from_outcome, Stg};
+use tdpc::asynctm::{mousetrap, AsyncTmEngine, MousetrapStage};
+use tdpc::baselines::DesignParams;
+use tdpc::fabric::Device;
+use tdpc::flow::FlowConfig;
+use tdpc::timing::{Circuit, Simulator};
+use tdpc::tm::datasets::synthetic_clause_bits;
+use tdpc::tm::WorkloadSpec;
+use tdpc::util::{Ps, SplitMix64};
+
+fn main() -> Result<()> {
+    // Part 1 — gate-level MOUSETRAP stage on the event-driven simulator.
+    println!("== gate-level MOUSETRAP stage (event-driven) ==");
+    let stage = MousetrapStage::default();
+    let mut c = Circuit::new();
+    let nets = mousetrap::build_event_circuit(&mut c, &stage);
+    let mut sim = Simulator::new(&c);
+    for net in [nets.req_out, nets.enable, nets.data_out] {
+        sim.watch(net);
+    }
+    sim.schedule(nets.data_in, true, Ps(100));
+    sim.schedule(nets.req_in, true, Ps(300)); // bundled request
+    sim.schedule(nets.ack_in, true, Ps(2_000)); // downstream consumes
+    sim.run_until(Ps(100_000));
+    println!("req_out transitions: {:?}", sim.trace(nets.req_out));
+    println!("enable transitions:  {:?}", sim.trace(nets.enable));
+    println!("(latch closes after accepting the token, reopens on ack)");
+    println!("events processed: {}", sim.stats.events_processed);
+
+    // Part 2 — one full asynchronous TM inference, traced through the STG.
+    println!("\n== asynchronous TM inference (STG of Fig. 8) ==");
+    let params = DesignParams::synthetic(4, 20, 64);
+    let mut engine = AsyncTmEngine::build(
+        &Device::xc7z020(),
+        &params,
+        &FlowConfig::table1_default(),
+        7,
+    )?;
+    let spec = WorkloadSpec { n_classes: 4, clauses_per_class: 20, n_features: 64, fire_rate: 0.5 };
+    let mut rng = SplitMix64::new(99);
+    let bits = synthetic_clause_bits(&spec, 2, &mut rng);
+    let out = engine.infer(&bits);
+    let launch = engine.stage.latch_delay + engine.clause_bundle;
+    let trace = trace_from_outcome(launch, &out);
+    for ev in &trace {
+        println!("  t={:>12} {:?}", ev.at.to_string(), ev.signal);
+    }
+    let stg = Stg::new(4);
+    stg.validate(&trace)?;
+    println!("STG validation: PASS");
+    println!(
+        "\nwinner class {} — decision at {} (Completion), cycle closes at {}",
+        out.winner, out.decision_latency, out.cycle_latency
+    );
+    println!(
+        "note: Completion precedes the slowest PDL output — the async win the paper exploits."
+    );
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Time-domain BNN (paper §V future work): hidden layers as PDL-vs-neutral
+//! sign races, output layer as the arbiter-tree argmax.
+//!
+//! ```sh
+//! cargo run --release --example bnn_inference
+//! ```
+use anyhow::Result;
+use tdpc::asynctm::bnn::TimeDomainBnn;
+use tdpc::fabric::Device;
+use tdpc::flow::FlowConfig;
+use tdpc::util::SplitMix64;
+
+fn main() -> Result<()> {
+    let device = Device::xc7z020();
+    let dims = [64, 16, 8, 4];
+    let mut net = TimeDomainBnn::build(&device, &dims, &FlowConfig::table1_default(), 42)?;
+    println!("time-domain BNN {dims:?} on {}", device.name);
+    let mut agree = 0;
+    let n = 50;
+    let mut rng = SplitMix64::new(1);
+    let mut lat_sum = 0.0;
+    for s in 0..n {
+        let inputs: Vec<bool> = (0..dims[0]).map(|_| rng.next_bool(0.5)).collect();
+        let (hw, t) = net.forward(&inputs);
+        let sw = net.reference_forward(&inputs, s as u64);
+        agree += (hw == sw) as usize;
+        lat_sum += t.as_ns();
+        if s < 5 {
+            println!("sample {s}: hw class {hw}, reference {sw}, completion {t}");
+        }
+    }
+    println!("\nagreement {agree}/{n} (disagreements are sign-threshold races — the BNN analogue of the paper's classification metastability)");
+    println!("mean completion latency {:.1} ns", lat_sum / n as f64);
+    Ok(())
+}

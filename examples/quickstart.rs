@@ -1,0 +1,65 @@
+//! Quickstart: load the trained Iris TM artifact, execute it on the PJRT
+//! runtime, and replay each sample through the simulated asynchronous
+//! time-domain hardware.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use tdpc::asynctm::AsyncTmEngine;
+use tdpc::baselines::DesignParams;
+use tdpc::fabric::Device;
+use tdpc::flow::FlowConfig;
+use tdpc::runtime::{bools_to_f32, ModelRegistry};
+use tdpc::tm::{Manifest, TestSet, TmModel};
+
+fn main() -> Result<()> {
+    let root = Manifest::default_root();
+    let registry = ModelRegistry::open(&root)?;
+    println!("PJRT platform: {}", registry.platform());
+
+    // 1. Functional path: the AOT-lowered HLO (clauses + signed popcount +
+    //    argmax, with the Pallas kernel inlined) executing on PJRT.
+    let entry = registry.manifest().entry("iris_c10")?.clone();
+    let runner = registry.runner("iris_c10", 1)?;
+    let test = TestSet::load(&entry.test_data_path)?;
+
+    // 2. Hardware path: place & route 3 PDLs + arbiter tree on the
+    //    XC7Z020 model and replay the clause bits per sample.
+    let model = TmModel::load(&entry.model_path)?;
+    let params = DesignParams::from_model(&model);
+    let mut engine = AsyncTmEngine::build(
+        &Device::xc7z020(),
+        &params,
+        &FlowConfig::table1_default(),
+        1,
+    )?;
+
+    println!(
+        "\niris_c10: {} classes × {} clauses, trained accuracy {:.1}%\n",
+        model.n_classes, model.clauses_per_class, model.accuracy
+    );
+
+    let mut correct = 0;
+    let n = test.len().min(10);
+    for i in 0..n {
+        let out = runner.run(&bools_to_f32(std::slice::from_ref(&test.x[i])))?;
+        let hw = engine.infer(&out.clause_bits_row(0));
+        let ok = out.pred[0] as usize == test.y[i];
+        correct += ok as usize;
+        println!(
+            "sample {i}: sums {:?} → pred {} (label {}), hw winner {} in {} {}",
+            out.sums_row(0),
+            out.pred[0],
+            test.y[i],
+            hw.winner,
+            hw.decision_latency,
+            if ok { "✓" } else { "✗" },
+        );
+    }
+    println!("\naccuracy on shown samples: {correct}/{n}");
+    println!("hardware worst-case decision latency: {}", engine.worst_case_latency());
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time compile path: TM training, Pallas kernels, AOT lowering."""

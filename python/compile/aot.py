@@ -1,0 +1,171 @@
+"""AOT build entry point: train TMs (cached), lower to HLO text, emit
+metadata + golden vectors for the Rust side.
+
+Run once via `make artifacts`; Python never executes on the request path.
+
+Outputs under artifacts/:
+  models/<name>.json          trained model (include masks as bitstrings)
+  hlo/<name>_b<B>.hlo.txt     lowered HLO text per batch size
+  golden/<name>.json          input/output vectors for Rust integration tests
+  data/<name>_test.json       Booleanized test set for end-to-end runs
+  manifest.json               index of everything above
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from . import model as model_mod
+from .kernels import ref
+from .tm import train as train_mod
+
+BATCH_SIZES = (1, 32)
+
+
+def bits_to_str(row) -> str:
+    return "".join("1" if int(b) else "0" for b in row)
+
+
+def encode_model(exported: dict) -> dict:
+    """Compact the include matrix to per-clause bitstrings."""
+    out = dict(exported)
+    out["include"] = [bits_to_str(r) for r in exported["include"]]
+    return out
+
+
+def decode_model(doc: dict) -> dict:
+    out = dict(doc)
+    out["include"] = [[int(ch) for ch in row] for row in doc["include"]]
+    return out
+
+
+def train_or_load(name: str, art_dir: str, verbose: bool = True):
+    cfg = train_mod.CONFIGS[name]
+    path = os.path.join(art_dir, "models", f"{name}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = decode_model(json.load(f))
+        if verbose:
+            print(f"[aot] {name}: cached model (acc {doc['accuracy']:.1f}%)")
+        return doc
+    t0 = time.time()
+    trained = train_mod.train(cfg, verbose=verbose)
+    doc = trained.export()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(encode_model(doc), f)
+    if verbose:
+        print(f"[aot] {name}: trained acc {doc['accuracy']:.1f}% "
+              f"(paper {cfg.paper_accuracy}%) in {time.time() - t0:.0f}s")
+    return doc
+
+
+def emit_hlo(name: str, doc: dict, art_dir: str, verbose: bool = True) -> dict:
+    params = model_mod.TmParams(doc)
+    entries = {}
+    os.makedirs(os.path.join(art_dir, "hlo"), exist_ok=True)
+    for b in BATCH_SIZES:
+        path = os.path.join(art_dir, "hlo", f"{name}_b{b}.hlo.txt")
+        if not os.path.exists(path):
+            text = model_mod.lower_to_hlo_text(params, b)
+            with open(path, "w") as f:
+                f.write(text)
+            if verbose:
+                print(f"[aot] {name}: wrote {path} ({len(text)} chars)")
+        entries[str(b)] = os.path.relpath(path, art_dir)
+    return entries
+
+
+def emit_golden(name: str, doc: dict, art_dir: str, n_samples: int = 8) -> str:
+    """Golden vectors from the *reference* path — the Rust integration tests
+    assert the PJRT-executed HLO reproduces these bit-exactly."""
+    params = model_mod.TmParams(doc)
+    xb_tr, y_tr, xb_te, y_te, _ = train_mod.load_dataset(train_mod.CONFIGS[name])
+    xs = xb_te[:n_samples].astype(np.float32)
+    pred, sums, fired = ref.tm_predict_ref(
+        xs, params.include, params.polarity, params.nonempty
+    )
+    doc_out = {
+        "name": name,
+        "n_samples": int(xs.shape[0]),
+        "inputs": [bits_to_str(r) for r in xb_te[:n_samples]],
+        "labels": [int(v) for v in y_te[:n_samples]],
+        "sums": np.array(sums).tolist(),
+        "fired": [bits_to_str(r) for r in np.array(fired)],
+        "pred": np.array(pred).tolist(),
+    }
+    path = os.path.join(art_dir, "golden", f"{name}.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc_out, f)
+    return os.path.relpath(path, art_dir)
+
+
+def emit_test_data(name: str, art_dir: str, limit: int = 500) -> str:
+    xb_tr, y_tr, xb_te, y_te, _ = train_mod.load_dataset(train_mod.CONFIGS[name])
+    xb, y = xb_te[:limit], y_te[:limit]
+    path = os.path.join(art_dir, "data", f"{name}_test.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "name": name,
+                "n": int(xb.shape[0]),
+                "n_features": int(xb.shape[1]),
+                "x": [bits_to_str(r) for r in xb],
+                "y": [int(v) for v in y],
+            },
+            f,
+        )
+    return os.path.relpath(path, art_dir)
+
+
+def build(art_dir: str, configs=None, verbose: bool = True) -> dict:
+    configs = configs or list(train_mod.CONFIGS)
+    manifest = {"batch_sizes": list(BATCH_SIZES), "models": {}}
+    for name in configs:
+        cfg = train_mod.CONFIGS[name]
+        doc = train_or_load(name, art_dir, verbose=verbose)
+        hlo = emit_hlo(name, doc, art_dir, verbose=verbose)
+        golden = emit_golden(name, doc, art_dir)
+        data = emit_test_data(name, art_dir)
+        manifest["models"][name] = {
+            "dataset": cfg.dataset,
+            "n_classes": cfg.n_classes,
+            "n_features": cfg.n_features,
+            "clauses_per_class": cfg.clauses_per_class,
+            "T": cfg.T,
+            "s": cfg.s,
+            "accuracy": doc["accuracy"],
+            "paper_accuracy": cfg.paper_accuracy,
+            "model": f"models/{name}.json",
+            "hlo": hlo,
+            "golden": golden,
+            "test_data": data,
+        }
+    with open(os.path.join(art_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"[aot] manifest written: {os.path.join(art_dir, 'manifest.json')}")
+    return manifest
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--configs", nargs="*", default=None,
+                    help="subset of configs (default: all)")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    build(os.path.abspath(args.out), args.configs, verbose=not args.quiet)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

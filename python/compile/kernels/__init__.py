@@ -1,0 +1,2 @@
+"""L1 Pallas kernels + pure-jnp oracles (build-time only)."""
+from . import clause_popcount, ref  # noqa: F401

@@ -1,0 +1,183 @@
+"""L1 Pallas kernel: fused clause evaluation + signed popcount.
+
+Hardware adaptation (DESIGN.md §2): the paper implements clause AND-trees in
+FPGA LUTs and the popcount as a programmable delay line. On TPU the same
+insight — popcount/argmax only need *relative* magnitudes, so pick the
+representation the hardware is natively fast at — maps both stages onto the
+MXU as two chained matmuls with a compare fused in between:
+
+    viol  = M @ (1 - L^T)           # MXU matmul 1: clause violation counts
+    fired = (viol == 0) & nonempty  # VPU compare
+    sums  = P @ fired               # MXU matmul 2: signed class popcount
+
+The kernel tiles the flattened clause axis (grid dimension) so the include
+matrix `M` streams HBM->VMEM one (TILE_C x 2F) block per step while the
+literal block `L` stays VMEM-resident; class-sum partial products
+accumulate in the output ref across grid steps (revisited block). See
+DESIGN.md §6 / EXPERIMENTS.md §Perf for the VMEM/MXU accounting.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is estimated analytically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Tile sizes. The MXU is 128x128; the clause tile is the streamed axis.
+TILE_C = 128
+LANE = 128  # pad literal / class / batch axes to this multiple
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _kernel(l_ref, m_ref, p_ref, ne_ref, sums_ref, fired_ref):
+    """One grid step: clause tile i.
+
+    l_ref:  (2F~, B~)   literals, transposed+complemented outside: (1-L)^T
+    m_ref:  (TILE_C, 2F~) include-mask tile
+    p_ref:  (K~, TILE_C)  polarity tile
+    ne_ref: (TILE_C, LANE) nonempty flags (broadcast along lanes)
+    sums_ref:  (K~, B~)   accumulated class sums (revisited across steps)
+    fired_ref: (TILE_C, B~) clause bits for this tile
+    """
+    i = pl.program_id(0)
+
+    # MXU matmul 1: violation counts for this clause tile.
+    viol = jnp.dot(m_ref[...], l_ref[...], preferred_element_type=jnp.float32)
+    fired = jnp.where((viol == 0.0) & (ne_ref[:, :1] > 0.0), 1.0, 0.0)
+    fired_ref[...] = fired
+
+    # MXU matmul 2: partial signed popcount, accumulated over clause tiles.
+    partial = jnp.dot(p_ref[...], fired, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = partial
+
+    @pl.when(i > 0)
+    def _acc():
+        sums_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_c"))
+def _call(lits_nT, inc_p, pol_p, ne_p, interpret=True, tile_c=TILE_C):
+    c_pad, lf = inc_p.shape
+    k_pad = pol_p.shape[0]
+    b_pad = lits_nT.shape[1]
+    grid = (c_pad // tile_c,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((lf, b_pad), lambda i: (0, 0)),  # literals: resident
+            pl.BlockSpec((tile_c, lf), lambda i: (i, 0)),  # M: streamed
+            pl.BlockSpec((k_pad, tile_c), lambda i: (0, i)),  # P: streamed
+            pl.BlockSpec((tile_c, LANE), lambda i: (i, 0)),  # nonempty
+        ],
+        out_specs=[
+            pl.BlockSpec((k_pad, b_pad), lambda i: (0, 0)),  # sums: revisited
+            pl.BlockSpec((tile_c, b_pad), lambda i: (i, 0)),  # fired: streamed
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k_pad, b_pad), jnp.float32),
+            jax.ShapeDtypeStruct((c_pad, b_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lits_nT, inc_p, pol_p, ne_p)
+
+
+def clause_popcount(literals, include, polarity, nonempty, interpret: bool = True,
+                    single_tile: bool = False):
+    """Fused clause-eval + signed popcount via the Pallas kernel.
+
+    Same contract as ref.clause_popcount_ref: returns (sums (B,K) i32,
+    fired (B,C) i32). Pads every axis to MXU-friendly multiples, invokes the
+    tiled kernel, and slices the padding back off.
+
+    `single_tile=True` collapses the clause grid to one step. The multi-step
+    grid is the *TPU* schedule (HBM→VMEM streaming of the include matrix,
+    TILE_C = 128); under interpret=True the grid lowers to an XLA while-loop
+    with dynamic-update-slices, which the CPU-AOT backend (xla_extension
+    0.5.1) executes ~14× slower than the flat version — so the AOT export
+    path flattens it (EXPERIMENTS.md §Perf L1/L2). The kernel body is
+    identical either way, and tests pin both paths against the oracle.
+    """
+    b, lf = literals.shape
+    c, lf2 = include.shape
+    k = polarity.shape[0]
+    assert lf == lf2, (lf, lf2)
+
+    c_pad = _round_up(max(c, 1), TILE_C)
+    lf_pad = _round_up(max(lf, 1), LANE)
+    k_pad = _round_up(max(k, 1), 8)
+    b_pad = _round_up(max(b, 1), 8)
+
+    lits = jnp.zeros((b_pad, lf_pad), jnp.float32).at[:b, :lf].set(
+        literals.astype(jnp.float32)
+    )
+    # Padded literal columns are 0 -> (1-L)=1 there; padded include rows are
+    # all-zero so they contribute 0 violations, and padded *columns* of real
+    # clauses are zero in M, so padding never changes viol.
+    lits_nT = (1.0 - lits).T  # (2F~, B~); padded batch cols give viol>=0 but
+    # their fired bits are sliced away below.
+
+    inc_p = jnp.zeros((c_pad, lf_pad), jnp.float32).at[:c, :lf].set(
+        include.astype(jnp.float32)
+    )
+    pol_p = jnp.zeros((k_pad, c_pad), jnp.float32).at[:k, :c].set(
+        polarity.astype(jnp.float32)
+    )
+    ne_p = jnp.zeros((c_pad, LANE), jnp.float32).at[:c, :].set(
+        nonempty.astype(jnp.float32)[:, None]
+    )
+
+    tile_c = c_pad if single_tile else TILE_C
+    sums, fired = _call(lits_nT, inc_p, pol_p, ne_p, interpret=interpret, tile_c=tile_c)
+    return (
+        sums[:k, :b].T.astype(jnp.int32),
+        fired[:c, :b].T.astype(jnp.int32),
+    )
+
+
+def vmem_report(n_classes: int, clauses_per_class: int, n_features: int, batch: int) -> dict:
+    """Analytic VMEM/MXU accounting for the §Perf record (bytes, flops).
+
+    interpret=True gives CPU-numpy wallclock, which is *not* a TPU proxy —
+    this function derives the numbers DESIGN.md §6 asks for from the
+    BlockSpecs instead.
+    """
+    c = n_classes * clauses_per_class
+    lf = 2 * n_features
+    c_pad, lf_pad = _round_up(c, TILE_C), _round_up(lf, LANE)
+    k_pad, b_pad = _round_up(n_classes, 8), _round_up(batch, 8)
+    f32 = 4
+    vmem = {
+        "literals_resident": lf_pad * b_pad * f32,
+        "include_tile": TILE_C * lf_pad * f32,
+        "polarity_tile": k_pad * TILE_C * f32,
+        "nonempty_tile": TILE_C * LANE * f32,
+        "sums_out": k_pad * b_pad * f32,
+        "fired_tile": TILE_C * b_pad * f32,
+    }
+    total = sum(vmem.values())
+    flops = 2 * c_pad * lf_pad * b_pad + 2 * k_pad * c_pad * b_pad
+    hbm_bytes = (lf_pad * b_pad + c_pad * lf_pad + k_pad * c_pad + c_pad * LANE
+                 + k_pad * b_pad + c_pad * b_pad) * f32
+    return {
+        "vmem_bytes": vmem,
+        "vmem_total_bytes": total,
+        "vmem_budget_bytes": 16 * 2**20,
+        "fits_vmem": total <= 16 * 2**20,
+        "grid_steps": c_pad // TILE_C,
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "arithmetic_intensity": flops / hbm_bytes,
+    }

@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the fused clause-evaluation + signed-popcount kernel.
+
+This is the L1 correctness reference: the Pallas kernel in
+clause_popcount.py must match `clause_popcount_ref` bit-exactly (integer
+semantics) for every shape/dtype the tests sweep.
+
+Math (DESIGN.md §2 — the FPGA->TPU adaptation):
+
+    violations = M @ (1 - L)        # (C, B)  M: include mask (C, 2F)
+    fired      = (violations == 0) & nonempty
+    sums       = P @ fired          # (K, B)  P: signed polarity (K, C)
+
+where C = n_classes * clauses_per_class flattened class-major and P is the
+block-diagonal ±1 vote matrix. `fired` is the per-clause bit vector the
+hardware feeds into the PDLs; `sums` is the per-class popcount that the
+time-domain argmax compares.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def clause_popcount_ref(literals, include, polarity, nonempty):
+    """Reference implementation.
+
+    Args:
+      literals: (B, 2F) float or int — Boolean literals [x, ~x].
+      include:  (C, 2F) — clause include masks, flattened class-major.
+      polarity: (K, C)  — signed vote matrix (±1 within a class, 0 across).
+      nonempty: (C,)    — 1 where the clause has at least one include.
+
+    Returns:
+      sums:   (B, K) int32 class sums.
+      fired:  (B, C) int32 clause outputs.
+    """
+    lits = literals.astype(jnp.float32)
+    inc = include.astype(jnp.float32)
+    viol = inc @ (1.0 - lits).T  # (C, B)
+    fired = jnp.where((viol == 0) & (nonempty.astype(jnp.float32)[:, None] > 0), 1.0, 0.0)
+    sums = polarity.astype(jnp.float32) @ fired  # (K, B)
+    return sums.T.astype(jnp.int32), fired.T.astype(jnp.int32)
+
+
+def polarity_matrix(n_classes: int, clauses_per_class: int, polarity_flat) -> np.ndarray:
+    """Build the (K, C) block-diagonal signed vote matrix from the per-clause
+    ±1 vector (class-major flattening)."""
+    c_total = n_classes * clauses_per_class
+    pol = np.asarray(polarity_flat, dtype=np.float32).reshape(-1)
+    assert pol.shape[0] == c_total
+    P = np.zeros((n_classes, c_total), dtype=np.float32)
+    for k in range(n_classes):
+        lo = k * clauses_per_class
+        P[k, lo : lo + clauses_per_class] = pol[lo : lo + clauses_per_class]
+    return P
+
+
+def tm_predict_ref(x_bool, include, polarity, nonempty):
+    """End-to-end reference prediction: Booleans -> literals -> argmax."""
+    lits = jnp.concatenate([x_bool, 1 - x_bool], axis=1)
+    sums, fired = clause_popcount_ref(lits, include, polarity, nonempty)
+    return jnp.argmax(sums, axis=1).astype(jnp.int32), sums, fired

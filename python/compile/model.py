@@ -1,0 +1,95 @@
+"""L2: the TM inference graph lowered to HLO for the Rust runtime.
+
+`tm_forward` is the jitted function `aot.py` lowers per configuration and
+batch size. It takes the Booleanized input batch and returns everything the
+Rust coordinator needs:
+
+  * `sums`  (B, K) i32 — per-class signed popcount (the quantity the paper's
+    PDLs encode as delay),
+  * `fired` (B, C) i32 — per-clause outputs (the bits the Rust substrate
+    feeds into the simulated PDLs for per-sample latency),
+  * `pred`  (B,)  i32 — argmax class (functional result).
+
+Model parameters (include masks, polarity, nonempty flags) are *baked into
+the HLO as constants*: the paper's hardware likewise bakes the trained
+clauses into LUT configurations, and freezing them lets XLA fold the
+violation matmul aggressively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import clause_popcount as cp
+from .kernels import ref
+
+
+class TmParams:
+    """Frozen trained-model tensors in the interchange layout."""
+
+    def __init__(self, exported: dict):
+        self.n_classes = int(exported["n_classes"])
+        self.n_features = int(exported["n_features"])
+        self.clauses_per_class = int(exported["clauses_per_class"])
+        self.include = np.array(exported["include"], dtype=np.float32)
+        self.nonempty = np.array(exported["nonempty"], dtype=np.float32)
+        self.polarity_flat = np.array(exported["polarity"], dtype=np.float32)
+        self.polarity = ref.polarity_matrix(
+            self.n_classes, self.clauses_per_class, self.polarity_flat
+        )
+
+    @property
+    def c_total(self) -> int:
+        return self.n_classes * self.clauses_per_class
+
+
+def make_forward(params: TmParams, use_pallas: bool = True, single_tile: bool = False):
+    """Returns fwd(x_bool (B, F) f32) -> (sums, fired, pred).
+
+    `single_tile` flattens the Pallas grid for the CPU-AOT export (see
+    kernels/clause_popcount.py — the multi-step grid is the TPU schedule).
+    """
+    inc = jnp.asarray(params.include)
+    pol = jnp.asarray(params.polarity)
+    ne = jnp.asarray(params.nonempty)
+
+    def fwd(x_bool):
+        lits = jnp.concatenate([x_bool, 1.0 - x_bool], axis=1)
+        if use_pallas:
+            sums, fired = cp.clause_popcount(lits, inc, pol, ne, single_tile=single_tile)
+        else:
+            sums, fired = ref.clause_popcount_ref(lits, inc, pol, ne)
+        pred = jnp.argmax(sums, axis=1).astype(jnp.int32)
+        return (sums, fired, pred)
+
+    return fwd
+
+
+def lower_to_hlo_text(params: TmParams, batch: int, use_pallas: bool = True) -> str:
+    """Lower the forward fn to HLO *text* (the interchange format the
+    xla-0.1.6 crate can parse — serialized protos from jax>=0.5 carry 64-bit
+    instruction ids that xla_extension 0.5.1 rejects)."""
+    from jax._src.lib import xla_client as xc
+
+    # single_tile: the AOT/CPU path flattens the Pallas grid (§Perf).
+    fwd = make_forward(params, use_pallas=use_pallas, single_tile=True)
+    spec = jax.ShapeDtypeStruct((batch, params.n_features), jnp.float32)
+    lowered = jax.jit(fwd).lower(spec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides big literals as `constant({...})`
+    # — the trained include/polarity matrices! The xla text parser then
+    # zero-fills them and the model silently computes garbage. Print with
+    # large constants inlined (and assert none were elided).
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # xla_extension 0.5.1's parser predates newer metadata attributes
+    # (source_end_line etc.) — strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text

@@ -1,0 +1,2 @@
+"""Tsetlin Machine training substrate (build-time only)."""
+from . import automata, booleanize, datasets, train  # noqa: F401

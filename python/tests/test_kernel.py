@@ -1,0 +1,125 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes (batch, features, classes, clauses/class), include
+densities, and dtypes; every case must match the oracle bit-exactly
+(integer semantics), per the session's L1 testing contract.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import clause_popcount as cp
+from compile.kernels import ref
+
+
+def make_case(rng, b, f, k, cpc, density):
+    c = k * cpc
+    xb = rng.integers(0, 2, (b, f)).astype(np.float32)
+    lits = np.concatenate([xb, 1 - xb], axis=1)
+    inc = (rng.random((c, 2 * f)) < density).astype(np.float32)
+    ne = inc.any(axis=1).astype(np.float32)
+    polf = np.tile(np.where(np.arange(cpc) % 2 == 0, 1, -1), k).astype(np.float32)
+    P = ref.polarity_matrix(k, cpc, polf)
+    return lits, inc, P, ne
+
+
+def assert_matches_ref(lits, inc, P, ne):
+    s_ref, f_ref = ref.clause_popcount_ref(
+        jnp.array(lits), jnp.array(inc), jnp.array(P), jnp.array(ne)
+    )
+    s_ker, f_ker = cp.clause_popcount(
+        jnp.array(lits), jnp.array(inc), jnp.array(P), jnp.array(ne)
+    )
+    np.testing.assert_array_equal(np.array(s_ref), np.array(s_ker))
+    np.testing.assert_array_equal(np.array(f_ref), np.array(f_ker))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 9),
+    f=st.integers(1, 40),
+    k=st.integers(2, 6),
+    cpc=st.integers(2, 30),
+    density=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_random(b, f, k, cpc, density, seed):
+    rng = np.random.default_rng(seed)
+    assert_matches_ref(*make_case(rng, b, f, k, cpc, density))
+
+
+@pytest.mark.parametrize(
+    "b,f,k,cpc",
+    [
+        (1, 12, 3, 10),   # iris_c10 shape
+        (32, 12, 3, 50),  # iris_c50 shape
+        (1, 784, 10, 50), # mnist_c50 shape
+        (32, 784, 10, 100),  # mnist_c100 shape
+    ],
+)
+def test_kernel_paper_shapes(b, f, k, cpc):
+    rng = np.random.default_rng(1234)
+    assert_matches_ref(*make_case(rng, b, f, k, cpc, 0.15))
+
+
+def test_kernel_tile_boundaries():
+    """Clause counts straddling the 128-tile boundary."""
+    rng = np.random.default_rng(7)
+    for cpc in (42, 43, 64):  # k=3 -> C in {126, 129, 192}
+        assert_matches_ref(*make_case(rng, 4, 20, 3, cpc, 0.2))
+
+
+def test_empty_clauses_never_fire():
+    """All-exclude clauses must output 0 and contribute 0 votes."""
+    b, f, k, cpc = 4, 8, 2, 6
+    lits = np.ones((b, 2 * f), dtype=np.float32)  # every literal true
+    inc = np.zeros((k * cpc, 2 * f), dtype=np.float32)
+    ne = inc.any(axis=1).astype(np.float32)
+    polf = np.tile(np.where(np.arange(cpc) % 2 == 0, 1, -1), k).astype(np.float32)
+    P = ref.polarity_matrix(k, cpc, polf)
+    sums, fired = cp.clause_popcount(
+        jnp.array(lits), jnp.array(inc), jnp.array(P), jnp.array(ne)
+    )
+    assert np.array(fired).sum() == 0
+    assert np.array(sums).sum() == 0
+
+
+def test_all_include_requires_all_ones():
+    """A clause including every literal fires only on the all-ones input —
+    and [x, ~x] literals are never all-ones, so it must never fire."""
+    b, f = 3, 5
+    xb = np.array([[1, 1, 1, 1, 1], [0, 0, 0, 0, 0], [1, 0, 1, 0, 1]], dtype=np.float32)
+    lits = np.concatenate([xb, 1 - xb], axis=1)
+    inc = np.ones((2, 2 * f), dtype=np.float32)
+    ne = np.ones(2, dtype=np.float32)
+    P = ref.polarity_matrix(1, 2, np.array([1, -1], dtype=np.float32))
+    sums, fired = cp.clause_popcount(
+        jnp.array(lits), jnp.array(inc), jnp.array(P), jnp.array(ne)
+    )
+    assert np.array(fired).sum() == 0
+
+
+def test_sums_are_vote_differences():
+    """Class sum == (#fired positive) - (#fired negative), per class."""
+    rng = np.random.default_rng(99)
+    lits, inc, P, ne = make_case(rng, 6, 16, 4, 12, 0.1)
+    sums, fired = cp.clause_popcount(
+        jnp.array(lits), jnp.array(inc), jnp.array(P), jnp.array(ne)
+    )
+    sums, fired = np.array(sums), np.array(fired)
+    k, cpc = 4, 12
+    pol = np.tile(np.where(np.arange(cpc) % 2 == 0, 1, -1), k)
+    for bi in range(6):
+        for ki in range(k):
+            seg = slice(ki * cpc, (ki + 1) * cpc)
+            assert sums[bi, ki] == int((fired[bi, seg] * pol[seg]).sum())
+
+
+def test_vmem_report_fits_budget():
+    """Every paper configuration must fit the 16 MiB VMEM budget."""
+    for (k, cpc, f) in [(3, 10, 12), (3, 50, 12), (10, 50, 784), (10, 100, 784)]:
+        rep = cp.vmem_report(k, cpc, f, 32)
+        assert rep["fits_vmem"], rep
+        assert rep["grid_steps"] >= 1

@@ -1,0 +1,84 @@
+"""L2 model tests: the jitted forward graph vs the oracle, shapes, and the
+HLO lowering contract the Rust runtime depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_mod
+from compile.kernels import ref
+from compile.tm.automata import TsetlinMachine
+
+
+@pytest.fixture(scope="module")
+def tiny_trained():
+    """A quickly-trained tiny TM (deterministic)."""
+    rng = np.random.default_rng(3)
+    n, f, k = 120, 10, 3
+    # Separable synthetic task: class = argmax over 3 disjoint feature groups.
+    x = rng.integers(0, 2, (n, f)).astype(np.uint8)
+    y = np.array([int(np.argmax([r[:3].sum(), r[3:6].sum(), r[6:9].sum()])) for r in x])
+    tm = TsetlinMachine(k, f, 10, T=4, s=3.0, seed=5)
+    from compile.tm.datasets import SplitMix64
+
+    order = SplitMix64(11)
+    for _ in range(25):
+        tm.fit_epoch(x, y, order)
+    return tm, x, y
+
+
+def test_forward_matches_oracle(tiny_trained):
+    tm, x, _ = tiny_trained
+    params = model_mod.TmParams(tm.export())
+    fwd = model_mod.make_forward(params)
+    xb = x[:8].astype(np.float32)
+    sums, fired, pred = jax.jit(fwd)(jnp.array(xb))
+    p_ref, s_ref, f_ref = ref.tm_predict_ref(
+        jnp.array(xb), jnp.array(params.include), jnp.array(params.polarity),
+        jnp.array(params.nonempty),
+    )
+    np.testing.assert_array_equal(np.array(sums), np.array(s_ref))
+    np.testing.assert_array_equal(np.array(fired), np.array(f_ref))
+    np.testing.assert_array_equal(np.array(pred), np.array(p_ref))
+
+
+def test_forward_shapes(tiny_trained):
+    tm, x, _ = tiny_trained
+    params = model_mod.TmParams(tm.export())
+    fwd = model_mod.make_forward(params)
+    for b in (1, 4, 32):
+        xb = jnp.zeros((b, params.n_features), jnp.float32)
+        sums, fired, pred = fwd(xb)
+        assert sums.shape == (b, params.n_classes)
+        assert fired.shape == (b, params.c_total)
+        assert pred.shape == (b,)
+        assert sums.dtype == jnp.int32 and pred.dtype == jnp.int32
+
+
+def test_pallas_and_plain_paths_agree(tiny_trained):
+    tm, x, _ = tiny_trained
+    params = model_mod.TmParams(tm.export())
+    xb = jnp.array(x[:6].astype(np.float32))
+    s1, f1, p1 = model_mod.make_forward(params, use_pallas=True)(xb)
+    s2, f2, p2 = model_mod.make_forward(params, use_pallas=False)(xb)
+    np.testing.assert_array_equal(np.array(s1), np.array(s2))
+    np.testing.assert_array_equal(np.array(f1), np.array(f2))
+    np.testing.assert_array_equal(np.array(p1), np.array(p2))
+
+
+def test_hlo_text_lowering(tiny_trained):
+    tm, _, _ = tiny_trained
+    params = model_mod.TmParams(tm.export())
+    text = model_mod.lower_to_hlo_text(params, batch=2)
+    # The contract the Rust loader depends on (aot_recipe): HLO text with a
+    # 3-tuple root and the right parameter shape.
+    assert "HloModule" in text
+    assert f"f32[2,{params.n_features}]" in text
+    assert "(s32[2,3]" in text or "s32[2,3]" in text
+
+
+def test_model_prediction_accuracy(tiny_trained):
+    tm, x, y = tiny_trained
+    acc = tm.accuracy(x, y)
+    assert acc > 0.8, f"tiny TM should learn the separable task, got {acc}"

@@ -1,0 +1,113 @@
+"""TM training substrate tests: automata semantics, feedback behaviour,
+Booleanization, and the export format contract."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.tm import booleanize
+from compile.tm.automata import TsetlinMachine
+from compile.tm.datasets import SplitMix64
+
+
+def make_tm(**kw):
+    kw.setdefault("n_classes", 2)
+    kw.setdefault("n_features", 4)
+    kw.setdefault("clauses", 6)
+    kw.setdefault("T", 4)
+    kw.setdefault("s", 3.0)
+    return TsetlinMachine(kw.pop("n_classes"), kw.pop("n_features"), kw.pop("clauses"), **kw)
+
+
+def test_initial_state_all_excluded():
+    tm = make_tm()
+    assert tm.includes().sum() == 0
+    # Empty clauses output 0 at inference but 1 during training (bootstrap).
+    lits = np.ones(8, dtype=np.uint8)
+    assert tm.clause_outputs(lits, training=False).sum() == 0
+    assert tm.clause_outputs(lits, training=True).sum() == tm.clauses * tm.n_classes
+
+
+def test_polarity_alternates():
+    tm = make_tm(clauses=8)
+    assert list(tm.polarity[:4]) == [1, -1, 1, -1]
+
+
+def test_state_bounds_respected():
+    tm = make_tm()
+    rng = SplitMix64(3)
+    x = np.random.default_rng(0).integers(0, 2, (50, 4)).astype(np.uint8)
+    y = np.random.default_rng(1).integers(0, 2, 50)
+    for _ in range(5):
+        tm.fit_epoch(x, y, rng)
+    assert tm.state.min() >= 1
+    assert tm.state.max() <= 2 * tm.n_states
+
+
+def test_type_ii_only_includes_zero_literals():
+    tm = make_tm()
+    # Force a fired clause and apply Type II: only 0-literals may move
+    # toward inclusion, and by exactly one step.
+    before = tm.state.copy()
+    lits = np.array([1, 0, 1, 0, 0, 1, 0, 1], dtype=np.uint8)
+    clause_out = np.ones(tm.clauses, dtype=np.uint8)
+    mask = np.ones(tm.clauses, dtype=bool)
+    tm._type_ii(0, mask, clause_out, lits)
+    delta = tm.state[0].astype(int) - before[0].astype(int)
+    assert set(np.unique(delta)) <= {0, 1}
+    # Only positions where the literal is 0 moved.
+    moved = np.where(delta.sum(axis=0) > 0)[0]
+    assert all(lits[i] == 0 for i in moved)
+
+
+def test_learns_xor_like_task():
+    # XOR of two Booleans — requires both polarities to cooperate.
+    rng = np.random.default_rng(9)
+    x = rng.integers(0, 2, (200, 2)).astype(np.uint8)
+    y = (x[:, 0] ^ x[:, 1]).astype(np.int64)
+    tm = TsetlinMachine(2, 2, 10, T=4, s=3.0, seed=2)
+    order = SplitMix64(5)
+    for _ in range(40):
+        tm.fit_epoch(x, y, order)
+    assert tm.accuracy(x, y) > 0.95
+
+
+def test_export_format():
+    tm = make_tm(n_classes=3, clauses=4)
+    doc = tm.export()
+    assert doc["n_classes"] == 3
+    assert len(doc["include"]) == 12
+    assert len(doc["include"][0]) == 8
+    assert len(doc["polarity"]) == 12
+    assert doc["polarity"][:4] == [1, -1, 1, -1]
+    assert all(v in (0, 1) for v in doc["nonempty"])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    vals=st.lists(st.floats(0.0, 10.0), min_size=12, max_size=60),
+    n_bins=st.integers(2, 5),
+)
+def test_quantile_binning_one_hot(vals, n_bins):
+    col = np.array(vals).reshape(-1, 1)
+    edges = booleanize.fit_iris_binning(col, n_bins)
+    xb = booleanize.booleanize_iris(col, edges)
+    assert xb.shape == (len(vals), n_bins)
+    # Exactly one bin active per sample.
+    np.testing.assert_array_equal(xb.sum(axis=1), np.ones(len(vals)))
+
+
+def test_mnist_threshold():
+    img = np.zeros((1, 28, 28), dtype=np.uint8)
+    img[0, 3, 4] = 75   # at threshold: not above → 0
+    img[0, 5, 6] = 76   # above → 1
+    xb = booleanize.booleanize_mnist(img)
+    assert xb[0, 3 * 28 + 4] == 0
+    assert xb[0, 5 * 28 + 6] == 1
+    assert xb.sum() == 1
+
+
+def test_literals_augmentation():
+    xb = np.array([[1, 0, 1]], dtype=np.uint8)
+    lits = booleanize.to_literals(xb)
+    np.testing.assert_array_equal(lits, [[1, 0, 1, 0, 1, 0]])

@@ -1,0 +1,8 @@
+//! Bench/regenerator for the flow-ingredient ablation (DESIGN.md §4).
+use tdpc::experiments::ablation;
+
+fn main() {
+    let r = ablation::run(150, 7);
+    println!("{}", r.table().to_markdown());
+    assert!(r.shape_holds(), "ablation shape must hold");
+}

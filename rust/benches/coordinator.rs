@@ -1,0 +1,59 @@
+//! §Perf L3 bench: coordinator serving path — round-trip latency and
+//! closed-loop throughput, with and without the hardware replay engine.
+use std::time::Duration;
+
+use tdpc::asynctm::AsyncTmEngine;
+use tdpc::baselines::DesignParams;
+use tdpc::coordinator::{BatcherConfig, Coordinator};
+use tdpc::fabric::Device;
+use tdpc::flow::FlowConfig;
+use tdpc::tm::{Manifest, TestSet, TmModel};
+use tdpc::util::benchkit;
+
+fn main() {
+    let root = Manifest::default_root();
+    let Ok(manifest) = Manifest::load(&root) else {
+        eprintln!("SKIP coordinator: artifacts not built");
+        return;
+    };
+    for (model_name, hw) in [("iris_c10", false), ("mnist_c100", false), ("mnist_c100", true)] {
+        let entry = manifest.entry(model_name).unwrap().clone();
+        let test = TestSet::load(&entry.test_data_path).unwrap();
+        let engine = if hw {
+            let model = TmModel::load(&entry.model_path).unwrap();
+            let d = DesignParams::from_model(&model);
+            Some(AsyncTmEngine::build(&Device::xc7z020(), &d, &FlowConfig::table1_default(), 1).unwrap())
+        } else {
+            None
+        };
+        let cfg = BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(300) };
+        let coord = Coordinator::start(root.clone(), model_name, cfg, engine).unwrap();
+        let tag = if hw { "+hw" } else { "" };
+
+        // Round-trip latency (single in-flight request).
+        benchkit::bench(&format!("coordinator/{model_name}{tag}_roundtrip"), || {
+            let _ = coord.infer_blocking(test.x[0].clone()).unwrap();
+        });
+
+        // Closed-loop burst throughput.
+        let n = 512;
+        let mean = benchkit::bench_with(
+            &format!("coordinator/{model_name}{tag}_burst512"),
+            Duration::from_millis(200),
+            Duration::from_secs(2),
+            || {
+                let (tx, rx) = std::sync::mpsc::channel();
+                for i in 0..n {
+                    coord.submit(test.x[i % test.len()].clone(), tx.clone()).unwrap();
+                }
+                drop(tx);
+                let got = rx.iter().take(n).count();
+                assert_eq!(got, n);
+            },
+        );
+        println!("  burst throughput: {:.0} req/s", benchkit::throughput(mean, n));
+        let m = coord.metrics();
+        println!("  mean batch {:.1}, mean exec {:.0} µs", m.mean_batch_size, m.mean_batch_exec_us);
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,16 @@
+//! Bench/regenerator for Fig. 10 (latency scaling sweeps, 1000 samples per
+//! point like the paper).
+use tdpc::experiments::fig10;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let r = fig10::run(1000);
+    for t in r.tables() {
+        println!("{}", t.to_markdown());
+    }
+    let (a, b, c, d) = r.shape_holds();
+    println!("shape: generic-sublinear={a} td-linear={b} generic-linear-classes={c} td-constant-classes={d}");
+    assert!(a && b && c && d, "Fig. 10 shapes must hold");
+    assert!(r.worst_case_improbable());
+    println!("fig10 total wall: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,12 @@
+//! Bench/regenerator for Fig. 11 (resource scaling sweeps).
+use tdpc::experiments::fig11;
+
+fn main() {
+    let r = fig11::run();
+    for t in r.tables() {
+        println!("{}", t.to_markdown());
+    }
+    let [g, f, a, t] = fig11::Fig11Result::slopes(&r.vs_clauses);
+    println!("slopes vs clauses: generic {g:.1}, fpt18 {f:.1}, async21 {a:.1}, td {t:.1} (LUT+FF per clause)");
+    assert!(r.shape_holds(), "TD must have the smallest resource slope");
+}

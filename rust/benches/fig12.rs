@@ -1,0 +1,11 @@
+//! Bench/regenerator for Fig. 12 (power scaling at α ∈ {0.1, 0.5}).
+use tdpc::experiments::fig12;
+
+fn main() {
+    let r = fig12::run();
+    for t in r.tables() {
+        println!("{}", t.to_markdown());
+    }
+    assert!(r.shape_holds(), "Fig. 12 crossover + TD stability must hold");
+    println!("fig12 shape: adder wins at α=0.1, TD wins at α=0.5, TD activity-insensitive");
+}

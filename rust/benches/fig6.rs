@@ -1,0 +1,17 @@
+//! Bench/regenerator for Fig. 6: PDL Hamming-weight response.
+use tdpc::experiments::fig6;
+use tdpc::util::benchkit;
+
+fn main() {
+    let r = fig6::run(150, 8, 42);
+    println!("{}", r.table().to_markdown());
+    assert!(r.shape_holds(), "Fig. 6 shape must hold");
+    benchkit::bench_with(
+        "fig6/150el_8samples_per_weight",
+        std::time::Duration::from_millis(200),
+        std::time::Duration::from_secs(2),
+        || {
+            let _ = fig6::run(150, 8, 7);
+        },
+    );
+}

@@ -1,0 +1,33 @@
+//! Bench/regenerator for Fig. 9 (latency / resources / power across the
+//! four Table-I configurations).
+use tdpc::experiments::fig9;
+use tdpc::tm::Manifest;
+use tdpc::util::benchkit;
+
+fn main() {
+    let Ok(manifest) = Manifest::load_default() else {
+        eprintln!("SKIP fig9: artifacts not built");
+        return;
+    };
+    let r = fig9::run(&manifest, 100).expect("fig9");
+    for t in r.tables() {
+        println!("{}", t.to_markdown());
+    }
+    for c in &r.configs {
+        println!(
+            "headline {}: latency reduction {:+.1}%, resources {:+.1}%, power {:+.1}%",
+            c.name,
+            100.0 * c.latency_reduction(),
+            100.0 * c.resource_reduction(),
+            100.0 * c.power_reduction()
+        );
+    }
+    benchkit::bench_with(
+        "fig9/mnist_c50_100samples",
+        std::time::Duration::from_millis(100),
+        std::time::Duration::from_secs(2),
+        || {
+            let _ = fig9::run_config(&manifest, "mnist_c50", 100, 1).unwrap();
+        },
+    );
+}

@@ -1,0 +1,62 @@
+//! §Perf L3 bench: the simulation hot paths — PDL propagation, arbiter
+//! trees, full engine inference, event-driven simulator events/s, and the
+//! flow (place+route) cost.
+use tdpc::arbiter::{ArbiterConfig, ArbiterTree};
+use tdpc::asynctm::AsyncTmEngine;
+use tdpc::baselines::DesignParams;
+use tdpc::fabric::Device;
+use tdpc::flow::FlowConfig;
+use tdpc::timing::{Circuit, Simulator};
+use tdpc::tm::datasets::synthetic_clause_bits;
+use tdpc::tm::WorkloadSpec;
+use tdpc::util::{benchkit, Ps, SplitMix64};
+
+fn main() {
+    let device = Device::xc7z020();
+
+    // Flow: place + route 10 × 100-element PDLs.
+    benchkit::bench("hotpath/flow_10x100", || {
+        let _ = tdpc::flow::run(&device, 10, 100, &FlowConfig::table1_default()).unwrap();
+    });
+
+    // Engine inference (10 classes × 100 clauses, the biggest config).
+    let d = DesignParams::synthetic(10, 100, 784);
+    let mut engine =
+        AsyncTmEngine::build(&device, &d, &FlowConfig::table1_default(), 1).unwrap();
+    let spec = WorkloadSpec { n_classes: 10, clauses_per_class: 100, n_features: 784, fire_rate: 0.5 };
+    let mut rng = SplitMix64::new(5);
+    let samples: Vec<_> = (0..64).map(|i| synthetic_clause_bits(&spec, i % 10, &mut rng)).collect();
+    let mut i = 0;
+    let mean = benchkit::bench("hotpath/engine_infer_10x100", || {
+        let s = &samples[i % samples.len()];
+        i += 1;
+        std::hint::black_box(engine.infer(s));
+    });
+    println!("  engine inference rate: {:.0}/s", benchkit::throughput(mean, 1));
+
+    // Arbiter tree alone (32-way).
+    let tree = ArbiterTree::new(32, ArbiterConfig::default());
+    let arrivals: Vec<Ps> = (0..32).map(|k| Ps(50_000 + 311 * k as u64)).collect();
+    let mut rng2 = SplitMix64::new(9);
+    benchkit::bench("hotpath/arbiter_tree_32way", || {
+        std::hint::black_box(tree.decide(&arrivals, &mut rng2));
+    });
+
+    // Event-driven simulator: 2000-buffer chain, measure events/s.
+    let mut c = Circuit::new();
+    let start = c.net();
+    let mut n = start;
+    for _ in 0..2000 {
+        n = c.delay_net(n, Ps(100));
+    }
+    let mean = benchkit::bench("hotpath/event_sim_2000gate_chain", || {
+        let mut sim = Simulator::new(&c);
+        sim.schedule(start, true, Ps(0));
+        sim.schedule(start, false, Ps(50_000_000));
+        std::hint::black_box(sim.run_until(Ps(u64::MAX / 2)));
+    });
+    println!(
+        "  event rate: {:.2} M events/s",
+        4000.0 / mean // 2 edges × 2000 gates per iteration
+    );
+}

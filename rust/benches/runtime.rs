@@ -1,0 +1,42 @@
+//! §Perf L3 bench: the PJRT request path — compile cost, single-sample and
+//! batched execution per model, and items/s throughput.
+use tdpc::runtime::{bools_to_f32, ModelRegistry};
+use tdpc::tm::{Manifest, TestSet};
+use tdpc::util::benchkit;
+
+fn main() {
+    let Ok(manifest) = Manifest::load_default() else {
+        eprintln!("SKIP runtime: artifacts not built");
+        return;
+    };
+    let registry = ModelRegistry::new(manifest).unwrap();
+    println!("platform: {}", registry.platform());
+
+    for entry in registry.manifest().models.clone() {
+        let test = TestSet::load(&entry.test_data_path).unwrap();
+        // Compile cost (fresh registry each iteration would re-create the
+        // client too; measure the runner() path on a cold key instead).
+        let t0 = std::time::Instant::now();
+        let r1 = registry.runner(&entry.name, 1).unwrap();
+        let r32 = registry.runner(&entry.name, 32).unwrap();
+        println!("compile {}: {:.1} ms (both batch sizes, cold)", entry.name,
+            t0.elapsed().as_secs_f64() * 1e3);
+
+        let x1 = bools_to_f32(std::slice::from_ref(&test.x[0]));
+        let rows: Vec<Vec<bool>> = (0..32).map(|i| test.x[i % test.len()].clone()).collect();
+        let x32 = bools_to_f32(&rows);
+
+        let m1 = benchkit::bench(&format!("runtime/{}_b1", entry.name), || {
+            let _ = r1.run(&x1).unwrap();
+        });
+        let m32 = benchkit::bench(&format!("runtime/{}_b32", entry.name), || {
+            let _ = r32.run(&x32).unwrap();
+        });
+        println!(
+            "  throughput: b1 {:.0}/s, b32 {:.0}/s (batching gain ×{:.1})",
+            benchkit::throughput(m1, 1),
+            benchkit::throughput(m32, 32),
+            benchkit::throughput(m32, 32) / benchkit::throughput(m1, 1)
+        );
+    }
+}

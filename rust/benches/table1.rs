@@ -1,0 +1,28 @@
+//! Bench/regenerator for Table I: high-latency delay tuning to lossless
+//! accuracy per configuration. Prints the table, then times the tuning
+//! inner loop (engine build + replay).
+use tdpc::experiments::table1;
+use tdpc::tm::Manifest;
+use tdpc::util::benchkit;
+
+fn main() {
+    let Ok(manifest) = Manifest::load_default() else {
+        eprintln!("SKIP table1: artifacts not built");
+        return;
+    };
+    let r = table1::run(&manifest, 120).expect("table1");
+    println!("{}", r.table().to_markdown());
+
+    // Hot-loop timing: one engine rebuild + 120-sample replay (iris_c50).
+    let entry = manifest.entry("iris_c50").unwrap();
+    let model = tdpc::tm::TmModel::load(&entry.model_path).unwrap();
+    let test = tdpc::tm::TestSet::load(&entry.test_data_path).unwrap();
+    benchkit::bench_with(
+        "table1/tune_iris_c50_120samples",
+        std::time::Duration::from_millis(200),
+        std::time::Duration::from_secs(2),
+        || {
+            let _ = table1::tune_hi_delay(&model, &test, 120, 3).unwrap();
+        },
+    );
+}

@@ -1,0 +1,205 @@
+//! Time-domain comparison: SR-latch arbiters and the arbiter tree
+//! (paper §III-A.3).
+//!
+//! A NAND SR latch responds to the race between two PDL outputs: whichever
+//! rising transition arrives first sets the latch, implementing a 2-way
+//! argmax in time. An OR gate over the latch outputs produces the
+//! completion signal. Comparisons over more than two PDLs cascade arbiter
+//! levels, with each level's completion feeding the next; falling
+//! transitions use the dual NOR-latch arbiter (the MOUSETRAP datapath
+//! alternates transition phases), which doubles the per-node gate cost but
+//! not the latency.
+//!
+//! Metastability: if two transitions arrive within the latch's resolution
+//! window the output settles late — and may settle *wrong*. The paper
+//! mitigates this by increasing the hi−lo delay gap of the PDL elements so
+//! that distinct Hamming weights are separated by at least one delta;
+//! genuinely equal weights remain a coin flip ("classification
+//! metastability", paper footnote 1). [`Arbiter2::decide`] models exactly
+//! that: deterministic for |Δt| ≥ window, probabilistic (seeded) inside it,
+//! with an exponential settling-time penalty.
+
+pub mod resources;
+pub mod tree;
+
+pub use resources::ArbiterResources;
+pub use tree::{ArbiterTree, TreeDecision};
+
+use crate::util::{Ps, SplitMix64};
+
+/// Electrical parameters of one SR-latch arbiter node.
+#[derive(Debug, Clone, Copy)]
+pub struct ArbiterConfig {
+    /// Propagation delay of the cross-coupled latch (set → Q).
+    pub latch_delay: Ps,
+    /// Delay of the completion gate (OR for rising / AND for falling).
+    pub completion_gate_delay: Ps,
+    /// Resolution window: |Δt| below this risks metastability.
+    pub window: Ps,
+    /// Regeneration time constant τ of the latch (settling penalty scale).
+    pub tau_ps: f64,
+}
+
+impl Default for ArbiterConfig {
+    fn default() -> Self {
+        // 28 nm-class LUT-latch figures: one LUT delay per gate, ~25 ps
+        // resolution window, τ ≈ 18 ps.
+        Self {
+            latch_delay: Ps(124),
+            completion_gate_delay: Ps(124),
+            window: Ps(25),
+            tau_ps: 18.0,
+        }
+    }
+}
+
+/// Outcome of one 2-way arbitration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    /// 0 if input A won, 1 if input B won.
+    pub winner: u8,
+    /// When the winning transition is available at the latch output.
+    pub grant_time: Ps,
+    /// When the completion gate fires.
+    pub completion: Ps,
+    /// The race entered the metastability window.
+    pub metastable: bool,
+    /// The latch settled on the *later* input (possible only when
+    /// metastable — the paper's "classification metastability").
+    pub inverted: bool,
+}
+
+/// One NAND (rising) / NOR (falling) SR-latch arbiter.
+#[derive(Debug, Clone)]
+pub struct Arbiter2 {
+    pub cfg: ArbiterConfig,
+}
+
+impl Arbiter2 {
+    pub fn new(cfg: ArbiterConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Resolve a race between arrivals `ta` (input A) and `tb` (input B).
+    ///
+    /// `rng` drives metastable resolution; passing the same seeded stream
+    /// reproduces a run exactly.
+    pub fn decide(&self, ta: Ps, tb: Ps, rng: &mut SplitMix64) -> Decision {
+        let dt = ta.abs_diff(tb);
+        let first_is_a = ta <= tb;
+        let t_first = ta.min(tb);
+
+        if dt >= self.cfg.window {
+            // Clean race: the earlier transition wins deterministically.
+            let grant = t_first + self.cfg.latch_delay;
+            return Decision {
+                winner: if first_is_a { 0 } else { 1 },
+                grant_time: grant,
+                completion: grant + self.cfg.completion_gate_delay,
+                metastable: false,
+                inverted: false,
+            };
+        }
+
+        // Metastable race. Settling penalty grows as ln(window/Δt); the
+        // probability the latch resolves toward the *later* input decays
+        // linearly in Δt across the window (0.5 at Δt = 0).
+        let dt_ps = dt.as_ps_f64().max(0.25); // quarter-ps floor avoids ln(∞)
+        let window_ps = self.cfg.window.as_ps_f64();
+        let settle_extra = Ps::from_ps_f64((self.cfg.tau_ps * (window_ps / dt_ps).ln()).min(self.cfg.tau_ps * 12.0));
+        let p_invert = 0.5 * (1.0 - dt.as_ps_f64() / window_ps);
+        let inverted = rng.next_bool(p_invert);
+
+        let winner_is_a = first_is_a ^ inverted;
+        let grant = t_first + self.cfg.latch_delay + settle_extra;
+        Decision {
+            winner: if winner_is_a { 0 } else { 1 },
+            grant_time: grant,
+            completion: grant + self.cfg.completion_gate_delay,
+            metastable: true,
+            inverted,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn arb() -> Arbiter2 {
+        Arbiter2::new(ArbiterConfig::default())
+    }
+
+    #[test]
+    fn clean_race_is_deterministic() {
+        let mut rng = SplitMix64::new(1);
+        let d = arb().decide(Ps(1000), Ps(1200), &mut rng);
+        assert_eq!(d.winner, 0);
+        assert!(!d.metastable && !d.inverted);
+        assert_eq!(d.grant_time, Ps(1124));
+        assert_eq!(d.completion, Ps(1248));
+        let d2 = arb().decide(Ps(1200), Ps(1000), &mut rng);
+        assert_eq!(d2.winner, 1);
+    }
+
+    #[test]
+    fn exact_tie_is_coin_flip() {
+        let a = arb();
+        let mut wins_a = 0;
+        for seed in 0..400 {
+            let mut rng = SplitMix64::new(seed);
+            let d = a.decide(Ps(5000), Ps(5000), &mut rng);
+            assert!(d.metastable);
+            if d.winner == 0 {
+                wins_a += 1;
+            }
+        }
+        assert!((150..=250).contains(&wins_a), "tie should be ≈50/50, got {wins_a}/400");
+    }
+
+    #[test]
+    fn metastable_settling_is_slower() {
+        let a = arb();
+        let mut rng = SplitMix64::new(2);
+        let clean = a.decide(Ps(1000), Ps(1100), &mut rng);
+        let meta = a.decide(Ps(1000), Ps(1002), &mut rng);
+        assert!(meta.metastable);
+        assert!(meta.grant_time > clean.grant_time - Ps(100), "settling penalty applies");
+        assert!(meta.grant_time > Ps(1000) + a.cfg.latch_delay);
+    }
+
+    #[test]
+    fn inversion_probability_decays_across_window() {
+        let a = arb();
+        let count_inversions = |dt: u64| -> usize {
+            (0..2000)
+                .filter(|&seed| {
+                    let mut rng = SplitMix64::new(seed);
+                    a.decide(Ps(1000), Ps(1000 + dt), &mut rng).inverted
+                })
+                .count()
+        };
+        let at_0 = count_inversions(0);
+        let at_12 = count_inversions(12);
+        let at_24 = count_inversions(24);
+        assert!(at_0 > at_12 && at_12 > at_24, "{at_0} > {at_12} > {at_24}");
+        assert!(at_0 > 850 && at_0 < 1150); // ≈ p=0.5
+        assert!(at_24 < 120); // ≈ p→0 at window edge
+    }
+
+    #[test]
+    fn prop_widening_delta_prevents_inversion() {
+        // The paper's mitigation: once |Δt| ≥ window, the decision is
+        // always correct regardless of the rng stream.
+        prop::check("no inversion outside window", 200, |g| {
+            let a = arb();
+            let base = g.int(0, 1_000_000) as u64;
+            let dt = a.cfg.window.0 + g.int(0, 10_000) as u64;
+            let mut rng = SplitMix64::new(g.int(0, i64::MAX - 1) as u64);
+            let d = a.decide(Ps(base), Ps(base + dt), &mut rng);
+            assert_eq!(d.winner, 0);
+            assert!(!d.inverted);
+        });
+    }
+}

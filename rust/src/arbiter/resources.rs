@@ -1,0 +1,68 @@
+//! Resource accounting for arbiter trees (paper Fig. 9b/11).
+//!
+//! Each arbiter node comprises a rising-transition arbiter (2 cross-coupled
+//! NAND LUTs + 1 OR completion LUT) and its falling-transition dual (2 NOR
+//! LUTs + 1 AND LUT) — the MOUSETRAP datapath alternates phases, so both
+//! are instantiated (paper §III-A.3). Padding nodes are kept for symmetry
+//! and cost the same. Decoding the arbiter outputs to a class index costs
+//! roughly one LUT per class.
+
+/// LUT/FF cost of one N-way arbiter tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ArbiterResources {
+    pub luts: u32,
+    pub ffs: u32,
+}
+
+/// Gate cost of one arbiter node (both transition phases).
+const LUTS_PER_NODE: u32 = 6; // 2 NAND + OR + 2 NOR + AND
+
+impl ArbiterResources {
+    pub fn for_tree(n_inputs: usize) -> ArbiterResources {
+        if n_inputs <= 1 {
+            return ArbiterResources { luts: 0, ffs: 0 };
+        }
+        let width = n_inputs.next_power_of_two() as u32;
+        let nodes = width - 1; // full symmetric tree incl. padding nodes
+        let decode = n_inputs as u32; // one-hot → index decode
+        ArbiterResources { luts: nodes * LUTS_PER_NODE + decode, ffs: 0 }
+    }
+
+    pub fn total(&self) -> u32 {
+        self.luts + self.ffs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_way_tree_is_one_node() {
+        let r = ArbiterResources::for_tree(2);
+        assert_eq!(r.luts, 6 + 2);
+    }
+
+    #[test]
+    fn padding_counts_toward_cost() {
+        // 3 classes pad to width 4 ⇒ 3 nodes, same as 4 classes.
+        assert_eq!(
+            ArbiterResources::for_tree(3).luts + 1,
+            ArbiterResources::for_tree(4).luts
+        );
+    }
+
+    #[test]
+    fn single_input_free() {
+        assert_eq!(ArbiterResources::for_tree(1).total(), 0);
+    }
+
+    #[test]
+    fn grows_linearly_in_width() {
+        // Tree nodes scale ~linearly with the (padded) class count —
+        // the comparison cost the paper contrasts with adder comparators.
+        let r8 = ArbiterResources::for_tree(8).luts;
+        let r16 = ArbiterResources::for_tree(16).luts;
+        assert!(r16 > r8 && r16 < 3 * r8);
+    }
+}

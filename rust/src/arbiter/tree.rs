@@ -1,0 +1,225 @@
+//! Multi-level arbiter tree: N-way time-domain argmax (paper §III-A.3,
+//! Fig. 7).
+//!
+//! For more than two PDLs, arbiters cascade: level ℓ's winners race at
+//! level ℓ+1, and the completion signal of the final level is the overall
+//! `Completion`. When N is not a power of two, the tree is padded with
+//! fixed-level inputs ("one input fixed at either 0 or 1 depending on the
+//! transition phase", Fig. 7) that never win but keep the structure — and
+//! therefore the per-level latency — symmetric.
+
+use crate::util::{Ps, SplitMix64};
+
+use super::{Arbiter2, ArbiterConfig, Decision};
+
+/// Result of one N-way arbitration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeDecision {
+    /// Index of the winning input (the argmax class).
+    pub winner: usize,
+    /// When the decoded one-hot winner is stable.
+    pub grant_time: Ps,
+    /// When the final-level completion gate fires.
+    pub completion: Ps,
+    /// Number of metastable node decisions along the way.
+    pub metastable_nodes: u32,
+    /// Number of nodes that resolved toward the later input.
+    pub inverted_nodes: u32,
+    /// Levels in the tree.
+    pub levels: u32,
+}
+
+/// N-way arbiter tree.
+#[derive(Debug, Clone)]
+pub struct ArbiterTree {
+    pub n_inputs: usize,
+    pub node: Arbiter2,
+}
+
+impl ArbiterTree {
+    pub fn new(n_inputs: usize, cfg: ArbiterConfig) -> Self {
+        assert!(n_inputs >= 1);
+        Self { n_inputs, node: Arbiter2::new(cfg) }
+    }
+
+    /// Number of cascade levels (0 for a single input).
+    pub fn levels(&self) -> u32 {
+        (self.n_inputs.max(1) as f64).log2().ceil() as u32
+    }
+
+    /// Race all inputs; `arrivals[i]` is when PDL `i`'s output transition
+    /// reaches the first arbiter level.
+    pub fn decide(&self, arrivals: &[Ps], rng: &mut SplitMix64) -> TreeDecision {
+        assert_eq!(arrivals.len(), self.n_inputs);
+        if self.n_inputs == 1 {
+            let grant = arrivals[0] + self.node.cfg.latch_delay;
+            return TreeDecision {
+                winner: 0,
+                grant_time: grant,
+                completion: grant + self.node.cfg.completion_gate_delay,
+                metastable_nodes: 0,
+                inverted_nodes: 0,
+                levels: 0,
+            };
+        }
+
+        // Current round: (original input index, arrival time). Padding
+        // slots are None — their latch input is tied off, so the real input
+        // wins after the plain latch delay.
+        let mut round: Vec<Option<(usize, Ps)>> =
+            arrivals.iter().enumerate().map(|(i, &t)| Some((i, t))).collect();
+        let width = self.n_inputs.next_power_of_two();
+        round.resize(width, None);
+
+        let mut metastable = 0u32;
+        let mut inverted = 0u32;
+        let mut levels = 0u32;
+
+        while round.len() > 1 {
+            levels += 1;
+            let mut next = Vec::with_capacity(round.len() / 2);
+            for pair in round.chunks(2) {
+                let merged = match (pair[0], pair[1]) {
+                    (Some((ia, ta)), Some((ib, tb))) => {
+                        let d: Decision = self.node.decide(ta, tb, rng);
+                        if d.metastable {
+                            metastable += 1;
+                        }
+                        if d.inverted {
+                            inverted += 1;
+                        }
+                        let (wi, _wt) = if d.winner == 0 { (ia, ta) } else { (ib, tb) };
+                        Some((wi, d.grant_time))
+                    }
+                    // One real input + tied-off side: passes through after
+                    // the latch delay.
+                    (Some((i, t)), None) | (None, Some((i, t))) => {
+                        Some((i, t + self.node.cfg.latch_delay))
+                    }
+                    (None, None) => None,
+                };
+                next.push(merged);
+            }
+            round = next;
+        }
+
+        let (winner, grant_time) = round[0].expect("at least one real input");
+        // The system `Completion` is the *last-level* arbiter's completion
+        // gate (paper §III-A.3 / Fig. 7): it fires as soon as the winning
+        // transition has traversed the tree — the paper's async advantage.
+        // Slow losers matter only to the controller's join, not here.
+        TreeDecision {
+            winner,
+            grant_time,
+            completion: grant_time + self.node.cfg.completion_gate_delay,
+            metastable_nodes: metastable,
+            inverted_nodes: inverted,
+            levels,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn tree(n: usize) -> ArbiterTree {
+        ArbiterTree::new(n, ArbiterConfig::default())
+    }
+
+    fn ps_vec(xs: &[u64]) -> Vec<Ps> {
+        xs.iter().map(|&x| Ps(x)).collect()
+    }
+
+    #[test]
+    fn two_way_picks_earliest() {
+        let mut rng = SplitMix64::new(1);
+        let d = tree(2).decide(&ps_vec(&[9000, 5000]), &mut rng);
+        assert_eq!(d.winner, 1);
+        assert_eq!(d.levels, 1);
+    }
+
+    #[test]
+    fn three_way_uses_two_levels_with_padding() {
+        let mut rng = SplitMix64::new(1);
+        let t = tree(3);
+        assert_eq!(t.levels(), 2);
+        let d = t.decide(&ps_vec(&[70_000, 50_000, 90_000]), &mut rng);
+        assert_eq!(d.winner, 1);
+        assert_eq!(d.levels, 2);
+        assert!(d.completion > Ps(50_000));
+    }
+
+    #[test]
+    fn completion_tracks_last_level() {
+        let mut rng = SplitMix64::new(3);
+        let t = tree(4);
+        let d = t.decide(&ps_vec(&[10_000, 20_000, 30_000, 40_000]), &mut rng);
+        assert_eq!(d.winner, 0);
+        // Grant passes 2 levels of latches; completion is one gate later
+        // than the slowest node's grant.
+        let cfg = ArbiterConfig::default();
+        assert_eq!(d.grant_time, Ps(10_000) + cfg.latch_delay + cfg.latch_delay);
+        assert!(d.completion >= d.grant_time + cfg.completion_gate_delay);
+    }
+
+    #[test]
+    fn single_input_trivial() {
+        let mut rng = SplitMix64::new(4);
+        let d = tree(1).decide(&[Ps(500)], &mut rng);
+        assert_eq!(d.winner, 0);
+        assert_eq!(d.levels, 0);
+    }
+
+    #[test]
+    fn near_constant_latency_in_class_count() {
+        // The paper's Fig. 10b claim: comparison latency grows only by one
+        // latch delay per doubling of classes.
+        let mut rng = SplitMix64::new(5);
+        let base = 100_000u64;
+        let mut prev = None;
+        for n in [2usize, 4, 8, 16, 32] {
+            let arrivals: Vec<Ps> = (0..n).map(|i| Ps(base + 400 * i as u64)).collect();
+            let d = tree(n).decide(&arrivals, &mut rng);
+            assert_eq!(d.winner, 0);
+            if let Some(p) = prev {
+                let growth = d.grant_time.saturating_sub(p);
+                assert_eq!(growth, ArbiterConfig::default().latch_delay,
+                    "one extra level per doubling");
+            }
+            prev = Some(d.grant_time);
+        }
+    }
+
+    #[test]
+    fn prop_winner_is_argmin_with_margin() {
+        prop::check("tree winner = argmin given margin", 100, |g| {
+            let n = g.int(2, 24) as usize;
+            let win = g.int(0, n as i64 - 1) as usize;
+            let window = ArbiterConfig::default().window.0;
+            // All arrivals ≥ window apart ⇒ deterministic argmin.
+            let mut arrivals: Vec<Ps> = (0..n)
+                .map(|i| Ps(500_000 + (i as u64 + 1) * (window + 30)))
+                .collect();
+            arrivals[win] = Ps(100_000);
+            let mut rng = SplitMix64::new(g.int(0, i64::MAX - 1) as u64);
+            let d = tree(n).decide(&arrivals, &mut rng);
+            assert_eq!(d.winner, win);
+            assert_eq!(d.metastable_nodes, 0);
+        });
+    }
+
+    #[test]
+    fn prop_completion_after_grant() {
+        prop::check("completion after grant", 100, |g| {
+            let n = g.int(1, 16) as usize;
+            let arrivals: Vec<Ps> =
+                (0..n).map(|_| Ps(g.int(0, 1_000_000) as u64)).collect();
+            let mut rng = SplitMix64::new(9);
+            let d = tree(n).decide(&arrivals, &mut rng);
+            assert!(d.completion >= d.grant_time);
+            assert!(d.winner < n);
+        });
+    }
+}

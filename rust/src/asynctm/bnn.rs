@@ -1,0 +1,361 @@
+//! Time-domain BNN extension (paper §V, future work).
+//!
+//! The paper sketches how the time-domain popcount extends beyond TMs to
+//! binarized neural networks: *"for hidden layers, each neuron can be
+//! assigned a dedicated PDL, with inputs derived from synapse outputs
+//! computed via XNOR. Sign activation can be performed using a shared PDL
+//! with an equal number of ones and zeros as a neutral latency reference,
+//! with an arbiter determining neuron activation based on the timing
+//! relative to the neutral PDL."* This module implements exactly that
+//! scheme on the same substrates (flow-routed PDLs + arbiters):
+//!
+//! * a hidden [`BnnLayer`] holds one PDL per neuron plus one shared
+//!   *neutral* PDL driven by a fixed half-ones pattern; a neuron activates
+//!   (+1) iff its PDL beats the neutral reference at its arbiter — the
+//!   time-domain sign( popcount(xnor) − n/2 ) function;
+//! * the output layer reuses [`crate::arbiter::ArbiterTree`] as the
+//!   time-domain argmax, identical to the TM case.
+
+use crate::arbiter::{Arbiter2, ArbiterConfig, ArbiterTree};
+use crate::fabric::Device;
+use crate::flow::{self, FlowConfig, FlowError};
+use crate::pdl::{Pdl, Polarity};
+use crate::util::{Ps, SplitMix64};
+
+/// Binarized weights of one layer: `weights[n][i]` ∈ {−1, +1} encoded as
+/// bool (true = +1), for neuron n and input i.
+#[derive(Debug, Clone)]
+pub struct BnnLayerWeights {
+    pub weights: Vec<Vec<bool>>,
+}
+
+impl BnnLayerWeights {
+    pub fn random(n_neurons: usize, n_inputs: usize, rng: &mut SplitMix64) -> Self {
+        let weights = (0..n_neurons)
+            .map(|_| (0..n_inputs).map(|_| rng.next_bool(0.5)).collect())
+            .collect();
+        Self { weights }
+    }
+
+    pub fn n_neurons(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.weights.first().map_or(0, Vec::len)
+    }
+}
+
+/// One hidden layer in the time domain.
+pub struct BnnLayer {
+    pub weights: BnnLayerWeights,
+    /// One PDL per neuron (all positive polarity: a 1 from the XNOR takes
+    /// the short arc, so more matching synapses ⇒ earlier arrival).
+    neuron_pdls: Vec<Pdl>,
+    /// The shared neutral reference: same geometry, driven by a fixed
+    /// pattern with ⌈n/2⌉ ones.
+    neutral_pdl: Pdl,
+    neutral_bits: Vec<bool>,
+    arbiter: Arbiter2,
+}
+
+/// Outcome of one layer evaluation.
+#[derive(Debug, Clone)]
+pub struct LayerOutcome {
+    /// Binarized activations (+1 = true).
+    pub activations: Vec<bool>,
+    /// When the slowest neuron's sign decision resolved (layer latency).
+    pub latency: Ps,
+    /// Arbiter races that entered the metastability window (popcount
+    /// exactly at the sign threshold).
+    pub metastable: u32,
+}
+
+impl BnnLayer {
+    /// Build: places and routes `n_neurons + 1` PDLs of `n_inputs` elements
+    /// (the +1 is the shared neutral line).
+    pub fn build(
+        device: &Device,
+        weights: BnnLayerWeights,
+        flow_cfg: &FlowConfig,
+    ) -> Result<BnnLayer, FlowError> {
+        let n = weights.n_neurons();
+        let n_in = weights.n_inputs();
+        let routed = flow::run(device, n + 1, n_in, flow_cfg)?;
+        let pols = vec![Polarity::Positive; n_in];
+        let mut pdls: Vec<Pdl> = routed.iter().map(|r| Pdl::from_routed(r, &pols)).collect();
+        let neutral_pdl = pdls.pop().expect("n+1 PDLs routed");
+        // Neutral reference: alternating ones/zeros, ⌈n/2⌉ ones (paper §V:
+        // "an equal number of ones and zeros").
+        let neutral_bits: Vec<bool> = (0..n_in).map(|i| i % 2 == 0).collect();
+        Ok(BnnLayer {
+            weights,
+            neuron_pdls: pdls,
+            neutral_pdl,
+            neutral_bits,
+            arbiter: Arbiter2::new(ArbiterConfig::default()),
+        })
+    }
+
+    /// XNOR synapse outputs for one neuron: 1 where input matches weight.
+    fn synapses(&self, neuron: usize, inputs: &[bool]) -> Vec<bool> {
+        self.weights.weights[neuron]
+            .iter()
+            .zip(inputs)
+            .map(|(&w, &x)| !(w ^ x))
+            .collect()
+    }
+
+    /// Functional reference: sign(popcount(xnor) − n/2), ties → +1 here
+    /// (the hardware coin-flips them; tests exclude exact ties).
+    pub fn reference_activation(&self, neuron: usize, inputs: &[bool]) -> bool {
+        let pop = self.synapses(neuron, inputs).iter().filter(|&&b| b).count();
+        2 * pop >= self.weights.n_inputs() + self.neutral_margin()
+    }
+
+    /// Popcount of the neutral pattern × 2 − n (its signed offset). Zero
+    /// for even n; +1 for odd n (⌈n/2⌉ ones).
+    fn neutral_margin(&self) -> usize {
+        let ones = self.neutral_bits.iter().filter(|&&b| b).count();
+        2 * ones - self.weights.n_inputs()
+    }
+
+    /// Evaluate the layer in the time domain.
+    pub fn forward(&self, inputs: &[bool], rng: &mut SplitMix64) -> LayerOutcome {
+        assert_eq!(inputs.len(), self.weights.n_inputs());
+        let t_neutral = self.neutral_pdl.propagate(&self.neutral_bits);
+        let mut activations = Vec::with_capacity(self.neuron_pdls.len());
+        let mut latency = Ps::ZERO;
+        let mut metastable = 0;
+        for (n, pdl) in self.neuron_pdls.iter().enumerate() {
+            let syn = self.synapses(n, inputs);
+            let t_neuron = pdl.propagate(&syn);
+            // Race: neuron beats neutral ⇒ popcount above half ⇒ +1.
+            let d = self.arbiter.decide(t_neuron, t_neutral, rng);
+            activations.push(d.winner == 0);
+            latency = latency.max(d.completion);
+            metastable += d.metastable as u32;
+        }
+        LayerOutcome { activations, latency, metastable }
+    }
+}
+
+/// A small time-domain BNN: hidden layers + a class-vote output layer
+/// resolved by the arbiter tree (the paper's Fig. 7 output structure).
+pub struct TimeDomainBnn {
+    pub layers: Vec<BnnLayer>,
+    /// Output layer: one PDL per class over the last hidden activations.
+    output_weights: BnnLayerWeights,
+    output_pdls: Vec<Pdl>,
+    tree: ArbiterTree,
+    rng: SplitMix64,
+}
+
+impl TimeDomainBnn {
+    /// Random-weight network (the substrate study; training BNNs is out of
+    /// scope of the paper's sketch): `dims` = [input, hidden..., classes].
+    pub fn build(
+        device: &Device,
+        dims: &[usize],
+        flow_cfg: &FlowConfig,
+        seed: u64,
+    ) -> Result<TimeDomainBnn, FlowError> {
+        assert!(dims.len() >= 2);
+        let mut rng = SplitMix64::new(seed);
+        let mut layers = Vec::new();
+        for w in dims[..dims.len() - 1].windows(2) {
+            let weights = BnnLayerWeights::random(w[1], w[0], &mut rng);
+            layers.push(BnnLayer::build(device, weights, flow_cfg)?);
+        }
+        // Output: one PDL per class over the last hidden width.
+        let (n_classes, n_hidden) = (dims[dims.len() - 1], dims[dims.len() - 2]);
+        let output_weights = BnnLayerWeights::random(n_classes, n_hidden, &mut rng);
+        let routed = flow::run(device, n_classes, n_hidden, flow_cfg)?;
+        let pols = vec![Polarity::Positive; n_hidden];
+        let output_pdls = routed.iter().map(|r| Pdl::from_routed(r, &pols)).collect();
+        Ok(TimeDomainBnn {
+            layers,
+            output_weights,
+            output_pdls,
+            tree: ArbiterTree::new(n_classes, ArbiterConfig::default()),
+            rng,
+        })
+    }
+
+    /// Full forward pass: hidden layers sequentially (each gated by its
+    /// sign-arbiter completion), then the output-layer argmax race.
+    /// Returns (predicted class, completion time).
+    pub fn forward(&mut self, inputs: &[bool]) -> (usize, Ps) {
+        let mut acts = inputs.to_vec();
+        let mut t_total = Ps::ZERO;
+        for layer in &self.layers {
+            let out = layer.forward(&acts, &mut self.rng);
+            acts = out.activations;
+            t_total += out.latency;
+        }
+        // Output layer: class PDLs race through the arbiter tree (argmax).
+        let arrivals: Vec<Ps> = self
+            .output_pdls
+            .iter()
+            .enumerate()
+            .map(|(k, pdl)| {
+                let syn: Vec<bool> = self.output_weights.weights[k]
+                    .iter()
+                    .zip(&acts)
+                    .map(|(&w, &x)| !(w ^ x))
+                    .collect();
+                t_total + pdl.propagate(&syn)
+            })
+            .collect();
+        let d = self.tree.decide(&arrivals, &mut self.rng);
+        (d.winner, d.completion)
+    }
+
+    /// Functional reference argmax over output-layer popcounts.
+    pub fn reference_forward(&self, inputs: &[bool], rng_seed: u64) -> usize {
+        // Hidden layers evaluated functionally (ties resolved as +1):
+        let mut rng = SplitMix64::new(rng_seed);
+        let _ = &mut rng;
+        let mut acts = inputs.to_vec();
+        for layer in &self.layers {
+            acts = (0..layer.weights.n_neurons())
+                .map(|n| layer.reference_activation(n, &acts))
+                .collect();
+        }
+        let pops: Vec<usize> = (0..self.output_weights.n_neurons())
+            .map(|k| {
+                self.output_weights.weights[k]
+                    .iter()
+                    .zip(&acts)
+                    .filter(|(&w, &x)| !(w ^ x))
+                    .count()
+            })
+            .collect();
+        let mut best = 0;
+        for (k, &p) in pops.iter().enumerate() {
+            if p > pops[best] {
+                best = k;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FlowConfig {
+        FlowConfig::table1_default()
+    }
+
+    #[test]
+    fn neuron_activation_matches_sign_function() {
+        let device = Device::xc7z020();
+        let mut rng = SplitMix64::new(3);
+        let weights = BnnLayerWeights::random(8, 32, &mut rng);
+        let layer = BnnLayer::build(&device, weights, &cfg()).unwrap();
+        let mut mism = 0;
+        let mut checked = 0;
+        for s in 0..40u64 {
+            let mut srng = SplitMix64::new(s);
+            let inputs: Vec<bool> = (0..32).map(|_| srng.next_bool(0.5)).collect();
+            let out = layer.forward(&inputs, &mut rng);
+            for n in 0..8 {
+                let pop = layer.synapses(n, &inputs).iter().filter(|&&b| b).count();
+                if 2 * pop == 32 + layer.neutral_margin() {
+                    continue; // exact threshold: hardware coin-flip
+                }
+                checked += 1;
+                if out.activations[n] != layer.reference_activation(n, &inputs) {
+                    mism += 1;
+                }
+            }
+        }
+        assert_eq!(mism, 0, "sign activation must match on non-threshold neurons");
+        assert!(checked > 200);
+    }
+
+    #[test]
+    fn stronger_match_resolves_faster() {
+        let device = Device::xc7z020();
+        let mut rng = SplitMix64::new(5);
+        let weights = BnnLayerWeights::random(1, 64, &mut rng);
+        let layer = BnnLayer::build(&device, weights.clone(), &cfg()).unwrap();
+        // Input equal to the weights: all 64 synapses match → fastest.
+        let perfect: Vec<bool> = weights.weights[0].clone();
+        let t_perfect = layer.neuron_pdls[0].propagate(&layer.synapses(0, &perfect));
+        // Input inverted: zero matches → slowest.
+        let inverted: Vec<bool> = perfect.iter().map(|&b| !b).collect();
+        let t_inverted = layer.neuron_pdls[0].propagate(&layer.synapses(0, &inverted));
+        assert!(t_perfect < t_inverted);
+        let t_neutral = layer.neutral_pdl.propagate(&layer.neutral_bits);
+        assert!(t_perfect < t_neutral && t_neutral < t_inverted);
+    }
+
+    /// A sample is "decisive" when no hidden neuron sits at the sign
+    /// threshold and the output argmax is unique — the cases where the
+    /// time-domain result is well-defined (threshold neurons are coin
+    /// flips at the arbiter, the BNN analogue of the TM's classification
+    /// metastability).
+    fn is_decisive(net: &TimeDomainBnn, inputs: &[bool]) -> bool {
+        let mut acts = inputs.to_vec();
+        for layer in &net.layers {
+            let n_in = layer.weights.n_inputs();
+            for n in 0..layer.weights.n_neurons() {
+                let pop = layer.synapses(n, &acts).iter().filter(|&&b| b).count();
+                let margin = 2 * pop as i64 - n_in as i64 - layer.neutral_margin() as i64;
+                if margin.abs() < 2 {
+                    return false;
+                }
+            }
+            acts = (0..layer.weights.n_neurons())
+                .map(|n| layer.reference_activation(n, &acts))
+                .collect();
+        }
+        let pops: Vec<usize> = (0..net.output_weights.n_neurons())
+            .map(|k| {
+                net.output_weights.weights[k]
+                    .iter()
+                    .zip(&acts)
+                    .filter(|(&w, &x)| !(w ^ x))
+                    .count()
+            })
+            .collect();
+        let top = *pops.iter().max().unwrap();
+        pops.iter().filter(|&&p| p == top).count() == 1
+    }
+
+    #[test]
+    fn network_forward_matches_reference_on_decisive_samples() {
+        let device = Device::xc7z020();
+        let mut net = TimeDomainBnn::build(&device, &[24, 12, 4], &cfg(), 11).unwrap();
+        let mut agree = 0;
+        let mut total = 0;
+        for s in 0..600u64 {
+            let mut srng = SplitMix64::new(s * 7 + 1);
+            let inputs: Vec<bool> = (0..24).map(|_| srng.next_bool(0.5)).collect();
+            if !is_decisive(&net, &inputs) {
+                continue;
+            }
+            let (hw, _t) = net.forward(&inputs);
+            let sw = net.reference_forward(&inputs, s);
+            total += 1;
+            agree += (hw == sw) as usize;
+        }
+        assert!(total >= 15, "need decisive samples, got {total}");
+        assert_eq!(agree, total, "decisive samples must agree exactly");
+    }
+
+    #[test]
+    fn layer_latency_bounded_by_slowest_pdl() {
+        let device = Device::xc7z020();
+        let mut rng = SplitMix64::new(9);
+        let weights = BnnLayerWeights::random(4, 16, &mut rng);
+        let layer = BnnLayer::build(&device, weights, &cfg()).unwrap();
+        let inputs: Vec<bool> = (0..16).map(|i| i % 3 == 0).collect();
+        let out = layer.forward(&inputs, &mut rng);
+        let worst = layer.neuron_pdls.iter().map(Pdl::max_traversal).max().unwrap();
+        assert!(out.latency <= worst + Ps(2_000));
+    }
+}

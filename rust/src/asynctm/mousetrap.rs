@@ -1,0 +1,147 @@
+//! MOUSETRAP pipeline stage (Singh & Nowick [8]; paper Fig. 7).
+//!
+//! A MOUSETRAP stage is a bank of transparent latches whose enable is
+//! `XNOR(req_out, ack_in)`: the latch is transparent while waiting for new
+//! data and snaps opaque the moment the stage accepts a token, giving a
+//! 2-phase (transition-signalling) handshake with only one gate of control
+//! overhead. The paper pairs one stage with the TM datapath and generates
+//! the bundling signal from a matched net delay.
+//!
+//! [`MousetrapStage`] is the behavioral timing model used by the engine;
+//! [`build_event_circuit`] instantiates the same stage as real gates on the
+//! event-driven simulator, and the equivalence test in
+//! `rust/tests/timing_equivalence.rs` holds the two together.
+
+use crate::timing::{Circuit, GateKind, NetId};
+use crate::util::Ps;
+
+/// Behavioral timing of one MOUSETRAP stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MousetrapStage {
+    /// Transparent-latch D→Q delay.
+    pub latch_delay: Ps,
+    /// XNOR enable-control delay (hidden from the forward path in steady
+    /// state — the latch is already transparent when data arrives).
+    pub xnor_delay: Ps,
+}
+
+impl Default for MousetrapStage {
+    fn default() -> Self {
+        Self { latch_delay: Ps(124), xnor_delay: Ps(124) }
+    }
+}
+
+impl MousetrapStage {
+    /// Forward latency seen by a token entering an idle (transparent)
+    /// stage.
+    pub fn forward_latency(&self) -> Ps {
+        self.latch_delay
+    }
+
+    /// Minimum cycle time of a MOUSETRAP ring with this stage and a
+    /// datapath of delay `datapath`: req toggles → data out → ack back →
+    /// enable reopens.
+    pub fn cycle_time(&self, datapath: Ps) -> Ps {
+        self.latch_delay + datapath + self.xnor_delay
+    }
+}
+
+/// Nets exposed by an event-driven MOUSETRAP stage instance.
+#[derive(Debug, Clone, Copy)]
+pub struct MousetrapNets {
+    pub req_in: NetId,
+    pub ack_in: NetId,
+    /// Latched request (= req_out toward the next stage).
+    pub req_out: NetId,
+    /// Latch enable (XNOR of req_out and ack_in).
+    pub enable: NetId,
+    /// Latched data bit (single representative datapath bit).
+    pub data_in: NetId,
+    pub data_out: NetId,
+}
+
+/// Instantiate one MOUSETRAP stage (control + a representative data latch)
+/// on the gate-level simulator.
+pub fn build_event_circuit(c: &mut Circuit, stage: &MousetrapStage) -> MousetrapNets {
+    let req_in = c.net();
+    let ack_in = c.net();
+    let data_in = c.net();
+    // Enable net with feedback: en = XNOR(req_out, ack_in). Allocate
+    // req_out/en first, then wire gates onto them.
+    let req_out = c.net();
+    let enable = c.net_init(true); // idle stage is transparent
+    c.gate_onto(GateKind::LatchT, &[enable, req_in], req_out, stage.latch_delay);
+    c.gate_onto(GateKind::Xnor2, &[req_out, ack_in], enable, stage.xnor_delay);
+    let data_out = c.gate(GateKind::LatchT, &[enable, data_in], stage.latch_delay);
+    MousetrapNets { req_in, ack_in, req_out, enable, data_in, data_out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::Simulator;
+
+    #[test]
+    fn behavioral_cycle_time() {
+        let s = MousetrapStage::default();
+        assert_eq!(s.forward_latency(), Ps(124));
+        assert_eq!(s.cycle_time(Ps(1000)), Ps(1248));
+    }
+
+    #[test]
+    fn event_stage_latches_and_closes() {
+        let stage = MousetrapStage::default();
+        let mut c = Circuit::new();
+        let nets = build_event_circuit(&mut c, &stage);
+        let mut sim = Simulator::new(&c);
+        sim.watch(nets.req_out);
+        sim.watch(nets.enable);
+        sim.watch(nets.data_out);
+
+        // Token arrives: data then req (bundled).
+        sim.schedule(nets.data_in, true, Ps(100));
+        sim.schedule(nets.req_in, true, Ps(300));
+        sim.run_until(Ps(100_000));
+
+        // Transparent stage passes both after one latch delay.
+        assert_eq!(sim.first_edge(nets.data_out, true), Some(Ps(224)));
+        assert_eq!(sim.first_edge(nets.req_out, true), Some(Ps(424)));
+        // req_out toggled with ack still low ⇒ enable must have closed.
+        assert_eq!(sim.first_edge(nets.enable, false), Some(Ps(548)));
+    }
+
+    #[test]
+    fn ack_reopens_latch() {
+        let stage = MousetrapStage::default();
+        let mut c = Circuit::new();
+        let nets = build_event_circuit(&mut c, &stage);
+        let mut sim = Simulator::new(&c);
+        sim.watch(nets.enable);
+        sim.schedule(nets.req_in, true, Ps(0));
+        sim.run_until(Ps(10_000));
+        assert!(!sim.level(nets.enable), "closed after accepting the token");
+        // 2-phase: the matching ack transition reopens.
+        sim.schedule(nets.ack_in, true, Ps(20_000));
+        sim.run_until(Ps(40_000));
+        assert!(sim.level(nets.enable), "ack must reopen the latch");
+    }
+
+    #[test]
+    fn two_phase_second_token() {
+        // Full 2-phase cycle: falling req transition is the next token.
+        let stage = MousetrapStage::default();
+        let mut c = Circuit::new();
+        let nets = build_event_circuit(&mut c, &stage);
+        let mut sim = Simulator::new(&c);
+        sim.watch(nets.req_out);
+        sim.schedule(nets.req_in, true, Ps(0));
+        sim.run_until(Ps(5_000));
+        sim.schedule(nets.ack_in, true, Ps(6_000)); // consume token 1
+        sim.run_until(Ps(8_000));
+        sim.schedule(nets.req_in, false, Ps(9_000)); // token 2 (falling)
+        sim.run_until(Ps(20_000));
+        let tr = sim.trace(nets.req_out);
+        assert_eq!(tr.len(), 2, "both tokens must pass: {tr:?}");
+        assert!(!tr[1].1, "second token is the falling transition");
+    }
+}

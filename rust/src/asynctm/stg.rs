@@ -1,0 +1,236 @@
+//! Signal transition graph (STG) of the asynchronous controller
+//! (paper Fig. 8).
+//!
+//! The controller's causal contract, as the paper draws it:
+//!
+//! ```text
+//!   req±  →  start±  →  (PDL outputs ±…)  →  Completion±
+//!   Completion±  →  wait±           (merge fragment, via arbiters)
+//!   all PDL outputs±  →  wait-release  (join fragment)
+//!   wait-release  →  ack±  →  done±  →  req∓ (next token)
+//! ```
+//!
+//! plus the dotted-arc timing assumption: the bundling delay exceeds the
+//! clause-block settling time. [`Stg`] encodes the partial order;
+//! [`Stg::validate`] checks a recorded trace against it — used both by the
+//! engine's self-checks and by the event-driven MOUSETRAP tests.
+
+use std::collections::BTreeMap;
+
+use crate::util::Ps;
+
+/// Signals of the Fig. 8 STG.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum StgSignal {
+    Req,
+    Start,
+    /// Output of PDL k arrived.
+    PdlOut(usize),
+    Completion,
+    Wait,
+    Ack,
+    Done,
+}
+
+/// One recorded transition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StgEvent {
+    pub signal: StgSignal,
+    pub at: Ps,
+}
+
+/// The STG as a set of precedence constraints over one inference cycle.
+#[derive(Debug, Clone)]
+pub struct Stg {
+    pub n_pdls: usize,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum StgViolation {
+    #[error("signal {0:?} transitioned more than once in a cycle")]
+    Duplicate(StgSignal),
+    #[error("missing transition of {0:?}")]
+    Missing(StgSignal),
+    #[error("{before:?} (t={t_before}) must precede {after:?} (t={t_after})")]
+    Order { before: StgSignal, after: StgSignal, t_before: Ps, t_after: Ps },
+}
+
+impl Stg {
+    pub fn new(n_pdls: usize) -> Self {
+        Self { n_pdls }
+    }
+
+    /// All signals that must transition exactly once per cycle.
+    fn required(&self) -> Vec<StgSignal> {
+        let mut v = vec![StgSignal::Req, StgSignal::Start, StgSignal::Completion,
+            StgSignal::Wait, StgSignal::Ack, StgSignal::Done];
+        for k in 0..self.n_pdls {
+            v.push(StgSignal::PdlOut(k));
+        }
+        v
+    }
+
+    /// Precedence pairs (before, after).
+    fn edges(&self) -> Vec<(StgSignal, StgSignal)> {
+        let mut e = vec![
+            (StgSignal::Req, StgSignal::Start),
+            (StgSignal::Completion, StgSignal::Wait),
+            (StgSignal::Wait, StgSignal::Ack),
+            (StgSignal::Ack, StgSignal::Done),
+        ];
+        for k in 0..self.n_pdls {
+            e.push((StgSignal::Start, StgSignal::PdlOut(k)));
+            // First PDL output suffices for Completion (the merge), but
+            // *every* PDL output must precede Ack (the join): the wait
+            // fragment holds the controller until the slowest arrives.
+            e.push((StgSignal::PdlOut(k), StgSignal::Ack));
+        }
+        e
+    }
+
+    /// Check one cycle's trace. The merge (Completion after the *first*
+    /// PdlOut) is validated separately from the ordered pairs.
+    pub fn validate(&self, trace: &[StgEvent]) -> Result<(), StgViolation> {
+        let mut times: BTreeMap<StgSignal, Ps> = BTreeMap::new();
+        for ev in trace {
+            if times.insert(ev.signal, ev.at).is_some() {
+                return Err(StgViolation::Duplicate(ev.signal));
+            }
+        }
+        for sig in self.required() {
+            if !times.contains_key(&sig) {
+                return Err(StgViolation::Missing(sig));
+            }
+        }
+        for (a, b) in self.edges() {
+            let (ta, tb) = (times[&a], times[&b]);
+            if ta > tb {
+                return Err(StgViolation::Order { before: a, after: b, t_before: ta, t_after: tb });
+            }
+        }
+        // Merge fragment: Completion no earlier than the first PDL output.
+        let first_pdl = (0..self.n_pdls)
+            .map(|k| times[&StgSignal::PdlOut(k)])
+            .min()
+            .unwrap();
+        let tc = times[&StgSignal::Completion];
+        if tc < first_pdl {
+            return Err(StgViolation::Order {
+                before: StgSignal::PdlOut(0),
+                after: StgSignal::Completion,
+                t_before: first_pdl,
+                t_after: tc,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Produce the canonical trace of one engine inference (used by tests and
+/// the `async_pipeline` example to visualize the protocol).
+pub fn trace_from_outcome(
+    launch: Ps,
+    outcome: &crate::asynctm::InferOutcome,
+) -> Vec<StgEvent> {
+    let mut tr = vec![
+        StgEvent { signal: StgSignal::Req, at: Ps::ZERO },
+        StgEvent { signal: StgSignal::Start, at: launch },
+    ];
+    for (k, &d) in outcome.pdl_delays.iter().enumerate() {
+        tr.push(StgEvent { signal: StgSignal::PdlOut(k), at: launch + d });
+    }
+    let slowest = outcome.pdl_delays.iter().map(|&d| launch + d).max().unwrap();
+    tr.push(StgEvent { signal: StgSignal::Completion, at: outcome.decision_latency });
+    tr.push(StgEvent { signal: StgSignal::Wait, at: outcome.decision_latency });
+    let ack = slowest.max(outcome.decision_latency) + Ps(124);
+    tr.push(StgEvent { signal: StgSignal::Ack, at: ack });
+    tr.push(StgEvent { signal: StgSignal::Done, at: outcome.cycle_latency });
+    tr.sort_by_key(|e| e.at);
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(signal: StgSignal, at: u64) -> StgEvent {
+        StgEvent { signal, at: Ps(at) }
+    }
+
+    fn good_trace() -> Vec<StgEvent> {
+        vec![
+            ev(StgSignal::Req, 0),
+            ev(StgSignal::Start, 100),
+            ev(StgSignal::PdlOut(0), 600),
+            ev(StgSignal::Completion, 900),
+            ev(StgSignal::Wait, 950),
+            ev(StgSignal::PdlOut(1), 1200),
+            ev(StgSignal::Ack, 1400),
+            ev(StgSignal::Done, 1500),
+        ]
+    }
+
+    #[test]
+    fn valid_trace_passes() {
+        Stg::new(2).validate(&good_trace()).unwrap();
+    }
+
+    #[test]
+    fn completion_may_precede_slow_pdls() {
+        // The merge fires on the first arrival — Completion at 900 before
+        // PdlOut(1) at 1200 is legal (that's the async win).
+        assert!(Stg::new(2).validate(&good_trace()).is_ok());
+    }
+
+    #[test]
+    fn ack_before_all_pdls_is_a_violation() {
+        // The join: ack before the slowest PDL output breaks the STG.
+        let mut tr = good_trace();
+        for e in &mut tr {
+            if e.signal == StgSignal::Ack {
+                e.at = Ps(1000);
+            }
+        }
+        let err = Stg::new(2).validate(&tr).unwrap_err();
+        assert!(matches!(err, StgViolation::Order { .. }), "{err}");
+    }
+
+    #[test]
+    fn missing_signal_detected() {
+        let tr: Vec<StgEvent> =
+            good_trace().into_iter().filter(|e| e.signal != StgSignal::Wait).collect();
+        assert_eq!(Stg::new(2).validate(&tr).unwrap_err(), StgViolation::Missing(StgSignal::Wait));
+    }
+
+    #[test]
+    fn duplicate_signal_detected() {
+        let mut tr = good_trace();
+        tr.push(ev(StgSignal::Req, 1600));
+        assert_eq!(Stg::new(2).validate(&tr).unwrap_err(), StgViolation::Duplicate(StgSignal::Req));
+    }
+
+    #[test]
+    fn engine_traces_satisfy_stg() {
+        use crate::asynctm::AsyncTmEngine;
+        use crate::baselines::DesignParams;
+        use crate::fabric::Device;
+        use crate::flow::FlowConfig;
+        use crate::tm::datasets::synthetic_clause_bits;
+        use crate::tm::WorkloadSpec;
+        use crate::util::SplitMix64;
+
+        let d = Device::xc7z020();
+        let params = DesignParams::synthetic(4, 30, 64);
+        let mut eng = AsyncTmEngine::build(&d, &params, &FlowConfig::table1_default(), 3).unwrap();
+        let launch = eng.stage.latch_delay + eng.clause_bundle;
+        let spec = WorkloadSpec { n_classes: 4, clauses_per_class: 30, n_features: 64, fire_rate: 0.5 };
+        let mut rng = SplitMix64::new(21);
+        let stg = Stg::new(4);
+        for i in 0..40 {
+            let bits = synthetic_clause_bits(&spec, i % 4, &mut rng);
+            let out = eng.infer(&bits);
+            let tr = trace_from_outcome(launch, &out);
+            stg.validate(&tr).unwrap();
+        }
+    }
+}

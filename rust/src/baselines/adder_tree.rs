@@ -1,0 +1,152 @@
+//! "Generic implementation" baseline: synchronous TM with compressor/adder
+//! tree popcount and sequential argmax (paper §IV-B, implemented with
+//! Vivado 2024.1's generic process).
+//!
+//! Popcount structure per class: the C/2 positive and C/2 negative clause
+//! outputs are each compressed 6→3 by LUT6 compressors ([10]-style), then
+//! summed down a binary adder tree (log2 depth, carry-chain adders), and
+//! finally subtracted to a signed class sum. The minimum clock period is
+//! the full combinational cone: clause → popcount → compare (+ clocking
+//! margin), which is what the paper reports as latency for the synchronous
+//! designs.
+
+use crate::util::Ps;
+
+use super::{
+    calib, clause_block, comparator, Architecture, DesignParams, LatencyBreakdown,
+    ResourceBreakdown, ToggleInventory,
+};
+
+/// Glitch multiplier of a combinational adder tree: ripple/compressor
+/// stages transition several times per evaluation before settling
+/// (the well-known adder-tree glitching the paper's Fig. 12 exposes at
+/// high activity).
+pub const ADDER_GLITCH: f64 = 2.5;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GenericAdder;
+
+impl GenericAdder {
+    /// Adder-tree levels over `n` one-bit inputs: one compressor level then
+    /// a binary tree over the compressor outputs.
+    fn tree_levels(n: usize) -> u32 {
+        if n <= 1 {
+            return 1;
+        }
+        let groups = n.div_ceil(6).max(1);
+        1 + (usize::BITS - (groups.max(1)).leading_zeros()) as u32
+    }
+
+    /// Popcount critical path for one class (both polarities in parallel,
+    /// then the subtractor level).
+    pub fn popcount_delay(d: &DesignParams, m: f64) -> Ps {
+        let half = (d.clauses_per_class / 2).max(1);
+        let levels = Self::tree_levels(half) as u64;
+        let w = d.sum_width() as u64;
+        let level_delay = calib::LUT_D + calib::NET_LOCAL + Ps(calib::CARRY_PER_BIT.0 * w / 2);
+        let subtract = calib::LUT_D + calib::NET_LOCAL + Ps(calib::CARRY_PER_BIT.0 * w);
+        Ps(level_delay.0 * levels + subtract.0).scale(m)
+    }
+
+    /// Popcount LUTs for all classes.
+    pub fn popcount_luts(d: &DesignParams) -> u32 {
+        let half = (d.clauses_per_class / 2).max(1);
+        let w = calib::sum_width(d.clauses_per_class) as u32;
+        // Per polarity: 3 LUTs per 6-bit compressor group + tree adders.
+        let compress = half.div_ceil(6) as u32 * 3;
+        let adders = (half.div_ceil(6).saturating_sub(1)) as u32 * w;
+        let per_class = 2 * (compress + adders) + w; // + subtractor
+        per_class * d.n_classes as u32
+    }
+
+    fn ffs(d: &DesignParams) -> u32 {
+        // Input feature regs + registered clause outputs + sum regs + ctl.
+        (d.n_features + d.c_total() + d.n_classes * d.sum_width() + 4) as u32
+    }
+}
+
+impl Architecture for GenericAdder {
+    fn name(&self) -> &'static str {
+        "generic"
+    }
+
+    fn latency(&self, d: &DesignParams) -> LatencyBreakdown {
+        let m = calib::congestion(self.resources(d).luts());
+        LatencyBreakdown {
+            clause: clause_block::clause_delay(d, m),
+            popcount: Self::popcount_delay(d, m),
+            compare: comparator::compare_delay(d, m),
+            control: calib::SYNC_CLOCK_MARGIN,
+        }
+    }
+
+    fn resources(&self, d: &DesignParams) -> ResourceBreakdown {
+        ResourceBreakdown {
+            clause_luts: clause_block::clause_luts(d),
+            popcount_luts: Self::popcount_luts(d),
+            compare_luts: comparator::compare_luts(d),
+            control_luts: 8,
+            ffs: Self::ffs(d),
+        }
+    }
+
+    fn toggles(&self, d: &DesignParams, activity: f64) -> ToggleInventory {
+        ToggleInventory {
+            clause_toggles_per_inference: clause_block::clause_toggles(d, activity),
+            // Adder tree re-evaluates when its inputs (clause outputs)
+            // change; glitching multiplies the transitions.
+            popcount_toggles_per_inference: Self::popcount_luts(d) as f64
+                * activity
+                * ADDER_GLITCH,
+            compare_toggles_per_inference: comparator::compare_toggles(d, ADDER_GLITCH)
+                * activity.max(0.25),
+            clocked_ffs: Self::ffs(d),
+            control_toggles_per_inference: 4.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn popcount_latency_is_logarithmic() {
+        // Fig. 10a: doubling clauses adds ~one tree level, not 2×.
+        let m = 1.0;
+        let t100 = GenericAdder::popcount_delay(&DesignParams::synthetic(6, 100, 200), m);
+        let t200 = GenericAdder::popcount_delay(&DesignParams::synthetic(6, 200, 200), m);
+        let t400 = GenericAdder::popcount_delay(&DesignParams::synthetic(6, 400, 200), m);
+        let d1 = t200.saturating_sub(t100);
+        let d2 = t400.saturating_sub(t200);
+        assert!(t200 < t100.scale(1.45), "log-ish growth, not linear");
+        assert!(d2 <= d1.scale(1.6), "increments roughly constant per doubling");
+    }
+
+    #[test]
+    fn min_clock_period_includes_all_stages() {
+        let d = DesignParams::synthetic(10, 50, 784);
+        let lb = GenericAdder.latency(&d);
+        assert!(lb.clause > Ps::ZERO);
+        assert!(lb.popcount > Ps::ZERO);
+        assert!(lb.compare > lb.popcount, "comparison dominates at 10 classes");
+        assert_eq!(lb.control, calib::SYNC_CLOCK_MARGIN);
+    }
+
+    #[test]
+    fn resources_scale_linearly_with_clauses() {
+        let a = GenericAdder.resources(&DesignParams::synthetic(6, 100, 200));
+        let b = GenericAdder.resources(&DesignParams::synthetic(6, 200, 200));
+        let ratio = b.total() as f64 / a.total() as f64;
+        assert!((1.7..2.3).contains(&ratio), "≈2× at 2× clauses, got {ratio}");
+    }
+
+    #[test]
+    fn toggles_scale_with_activity() {
+        let d = DesignParams::synthetic(6, 100, 200);
+        let lo = GenericAdder.toggles(&d, 0.1);
+        let hi = GenericAdder.toggles(&d, 0.5);
+        assert!(hi.popcount_toggles_per_inference > 4.0 * lo.popcount_toggles_per_inference);
+        assert_eq!(lo.clocked_ffs, hi.clocked_ffs, "clock load is activity-independent");
+    }
+}

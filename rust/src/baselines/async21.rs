@@ -1,0 +1,119 @@
+//! ASYNC'21 baseline (Wheeldon et al. [24]): dual-rail self-timed TM with
+//! 8-bit popcounters ([9]).
+//!
+//! Dual-rail encoding carries each logical bit on two wires with a spacer
+//! phase, giving input-completion detection "for free" but roughly
+//! doubling-to-tripling the combinational logic. The paper compares
+//! *resource utilization only* (equivalent LUT count of the popcounters,
+//! synthesized in Vivado) because the circuit is not FPGA-native; we model
+//! resources the same way and additionally provide a latency/power
+//! estimate so the scaling sweeps can include it.
+
+use crate::util::Ps;
+
+use super::{
+    calib, clause_block, comparator, Architecture, DesignParams, LatencyBreakdown,
+    ResourceBreakdown, ToggleInventory,
+};
+
+/// Dual-rail LUT inflation over single-rail adder logic.
+const DUAL_RAIL_FACTOR: f64 = 2.4;
+/// Completion-detection LUTs per clause bit.
+const COMPLETION_PER_BIT: f64 = 0.35;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Async21;
+
+impl Async21 {
+    pub fn popcount_luts(d: &DesignParams) -> u32 {
+        let single_rail = super::adder_tree::GenericAdder::popcount_luts(d) as f64;
+        let completion = d.c_total() as f64 * COMPLETION_PER_BIT;
+        (single_rail * DUAL_RAIL_FACTOR + completion).ceil() as u32
+    }
+
+    /// Self-timed ripple through the 8-bit popcounter cascade:
+    /// data-dependent, average-case linear in the clause count.
+    pub fn popcount_delay(d: &DesignParams, m: f64) -> Ps {
+        let n = d.clauses_per_class.max(1) as u64;
+        Ps(calib::ASYNC21_PER_BIT.0 * n).scale(m)
+    }
+
+    fn ffs(d: &DesignParams) -> u32 {
+        // Dual-rail handshake latches on clause outputs + feature latches.
+        (d.n_features + d.c_total() + 8) as u32
+    }
+}
+
+impl Architecture for Async21 {
+    fn name(&self) -> &'static str {
+        "async21"
+    }
+
+    fn latency(&self, d: &DesignParams) -> LatencyBreakdown {
+        let m = calib::congestion(self.resources(d).luts());
+        LatencyBreakdown {
+            clause: clause_block::clause_delay(d, m),
+            popcount: Self::popcount_delay(d, m),
+            compare: comparator::compare_delay(d, m),
+            control: calib::ASYNC_CTL,
+        }
+    }
+
+    fn resources(&self, d: &DesignParams) -> ResourceBreakdown {
+        ResourceBreakdown {
+            clause_luts: clause_block::clause_luts(d),
+            popcount_luts: Self::popcount_luts(d),
+            compare_luts: comparator::compare_luts(d),
+            control_luts: 24,
+            ffs: Self::ffs(d),
+        }
+    }
+
+    fn toggles(&self, d: &DesignParams, activity: f64) -> ToggleInventory {
+        ToggleInventory {
+            clause_toggles_per_inference: clause_block::clause_toggles(d, activity),
+            // Dual-rail: every bit transitions twice per cycle (data +
+            // spacer) regardless of data — activity-independent, like the
+            // paper notes for return-to-zero protocols.
+            popcount_toggles_per_inference: Self::popcount_luts(d) as f64 * 2.0,
+            compare_toggles_per_inference: comparator::compare_toggles(d, 1.0),
+            clocked_ffs: 0,
+            control_toggles_per_inference: d.c_total() as f64 * 0.5,
+        }
+    }
+
+    fn is_synchronous(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::adder_tree::GenericAdder;
+
+    #[test]
+    fn heaviest_popcount_resources() {
+        // Paper Fig. 9b: ASYNC'21's dual-rail popcount dominates resource
+        // cost versus every other implementation.
+        let d = DesignParams::synthetic(10, 50, 784);
+        assert!(Async21::popcount_luts(&d) > 2 * GenericAdder::popcount_luts(&d));
+    }
+
+    #[test]
+    fn no_clock_load() {
+        let d = DesignParams::synthetic(10, 50, 784);
+        assert_eq!(Async21.toggles(&d, 0.3).clocked_ffs, 0);
+    }
+
+    #[test]
+    fn popcount_toggles_activity_independent() {
+        let d = DesignParams::synthetic(6, 100, 200);
+        let lo = Async21.toggles(&d, 0.1);
+        let hi = Async21.toggles(&d, 0.5);
+        assert_eq!(
+            lo.popcount_toggles_per_inference,
+            hi.popcount_toggles_per_inference
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Shared clause-block model.
+//!
+//! Every architecture (the paper's baselines and the proposed design)
+//! computes the same propositional clause logic: per clause, an AND
+//! reduction over its included literals, implemented as a LUT6 tree. The
+//! first level also absorbs the feature-distribution fanout: each Boolean
+//! input drives every clause that includes it, the highest-fanout nets in
+//! the design.
+
+use crate::util::Ps;
+
+use super::{calib, DesignParams};
+
+/// Critical-path delay of the clause stage under congestion factor `m`.
+pub fn clause_delay(d: &DesignParams, m: f64) -> Ps {
+    let depth = calib::lut6_tree_depth(d.max_clause_fanin);
+    // Fanout of one feature: every clause of every class may tap it.
+    let fanout = (d.c_total()).max(2) as f64;
+    let first_level = calib::LUT_D
+        + calib::NET_FANOUT_BASE
+        + calib::NET_FANOUT_PER_LOG2.scale(fanout.log2());
+    let deeper = calib::LUT_D + calib::NET_LOCAL;
+    Ps(first_level.0 + deeper.0 * (depth.saturating_sub(1)) as u64).scale(m)
+}
+
+/// LUT count of all clause blocks (uses the average trained fan-in).
+pub fn clause_luts(d: &DesignParams) -> u32 {
+    let per_clause = calib::lut6_tree_luts(d.avg_clause_fanin.round().max(1.0) as usize);
+    per_clause * d.c_total() as u32
+}
+
+/// Expected clause-logic toggles per inference at input activity α:
+/// a fraction of clause-tree LUTs re-evaluate when inputs change.
+pub fn clause_toggles(d: &DesignParams, activity: f64) -> f64 {
+    clause_luts(d) as f64 * activity
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delay_grows_with_fanin_and_congestion() {
+        let small = DesignParams::synthetic(3, 10, 12);
+        let large = DesignParams::synthetic(10, 100, 784);
+        assert!(clause_delay(&large, 1.0) > clause_delay(&small, 1.0));
+        assert!(clause_delay(&small, 2.0) > clause_delay(&small, 1.0));
+    }
+
+    #[test]
+    fn luts_scale_with_clauses() {
+        let a = DesignParams::synthetic(6, 50, 200);
+        let b = DesignParams::synthetic(6, 100, 200);
+        assert!((clause_luts(&b) as f64 / clause_luts(&a) as f64 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn toggles_linear_in_activity() {
+        let d = DesignParams::synthetic(6, 100, 200);
+        assert!((clause_toggles(&d, 0.5) / clause_toggles(&d, 0.1) - 5.0).abs() < 1e-9);
+    }
+}

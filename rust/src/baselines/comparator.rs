@@ -1,0 +1,68 @@
+//! Sequential argmax comparator (the adder-based designs' comparison
+//! stage; paper §II-A, Fig. 10b).
+//!
+//! Class sums are compared pairwise down a chain: (K−1) comparator stages,
+//! each a signed w-bit magnitude compare (carry chain) plus the mux that
+//! forwards the running maximum and its index. Latency is linear in the
+//! class count — the scaling the paper contrasts with the arbiter tree's
+//! near-constant response — and the sum nets are the longest in the design
+//! (class columns sit apart on the die), which [`calib::NET_CMP`] models.
+
+use crate::util::Ps;
+
+use super::{calib, DesignParams};
+
+/// Critical-path delay of the sequential argmax over K class sums.
+pub fn compare_delay(d: &DesignParams, m: f64) -> Ps {
+    if d.n_classes <= 1 {
+        return Ps::ZERO;
+    }
+    let w = d.sum_width() as u64;
+    let stage = calib::LUT_D + calib::NET_CMP + Ps(calib::CARRY_PER_BIT.0 * w);
+    stage.scale(m) * (d.n_classes as u64 - 1)
+}
+
+/// LUTs of the comparator chain: per stage, w LUTs compare + w LUTs of
+/// max-mux + index bookkeeping.
+pub fn compare_luts(d: &DesignParams) -> u32 {
+    if d.n_classes <= 1 {
+        return 0;
+    }
+    let w = d.sum_width() as u32;
+    let idx = (usize::BITS - d.n_classes.leading_zeros()) as u32;
+    (d.n_classes as u32 - 1) * (2 * w + idx)
+}
+
+/// Comparator toggles per inference: sums change every inference, so the
+/// chain re-evaluates fully, with adder-style glitching on the ripples.
+pub fn compare_toggles(d: &DesignParams, glitch: f64) -> f64 {
+    compare_luts(d) as f64 * glitch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_linear_in_classes() {
+        let d6 = DesignParams::synthetic(6, 100, 200);
+        let d12 = DesignParams::synthetic(12, 100, 200);
+        let t6 = compare_delay(&d6, 1.0).as_ps_f64();
+        let t12 = compare_delay(&d12, 1.0).as_ps_f64();
+        assert!(((t12 / t6) - 11.0 / 5.0).abs() < 0.02, "(K−1)-linear");
+    }
+
+    #[test]
+    fn single_class_free() {
+        let d = DesignParams::synthetic(1, 100, 200);
+        assert_eq!(compare_delay(&d, 1.0), Ps::ZERO);
+        assert_eq!(compare_luts(&d), 0);
+    }
+
+    #[test]
+    fn luts_grow_with_sum_width() {
+        let narrow = DesignParams::synthetic(6, 10, 200);
+        let wide = DesignParams::synthetic(6, 500, 200);
+        assert!(compare_luts(&wide) > compare_luts(&narrow));
+    }
+}

@@ -1,0 +1,121 @@
+//! FPT'18 baseline (Kim et al. [6]): ripple-carry-style popcount.
+//!
+//! The original optimizes BNN popcount with a chained structure where the
+//! critical path grows *linearly* with the input width (the paper's Fig.
+//! 10a), in exchange for fewer LUTs than a full adder tree. We reconstruct
+//! it inside the same synchronous TM shell the paper used: clause blocks →
+//! FPT'18 popcount per class → sequential argmax.
+
+use crate::util::Ps;
+
+use super::adder_tree::ADDER_GLITCH;
+use super::{
+    calib, clause_block, comparator, Architecture, DesignParams, LatencyBreakdown,
+    ResourceBreakdown, ToggleInventory,
+};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fpt18;
+
+impl Fpt18 {
+    /// Linear-chain popcount delay per class: the carry/sum chain threads
+    /// every clause bit.
+    pub fn popcount_delay(d: &DesignParams, m: f64) -> Ps {
+        let n = d.clauses_per_class.max(1) as u64;
+        Ps(calib::FPT18_PER_BIT.0 * n + calib::LUT_D.0 + calib::NET_LOCAL.0).scale(m)
+    }
+
+    /// The resource win over the generic tree: ~0.65 LUT/bit plus the
+    /// signed combine.
+    pub fn popcount_luts(d: &DesignParams) -> u32 {
+        let per_class =
+            (d.clauses_per_class as f64 * 0.65).ceil() as u32 + d.sum_width() as u32;
+        per_class * d.n_classes as u32
+    }
+
+    fn ffs(d: &DesignParams) -> u32 {
+        (d.n_features + d.c_total() + d.n_classes * d.sum_width() + 4) as u32
+    }
+}
+
+impl Architecture for Fpt18 {
+    fn name(&self) -> &'static str {
+        "fpt18"
+    }
+
+    fn latency(&self, d: &DesignParams) -> LatencyBreakdown {
+        let m = calib::congestion(self.resources(d).luts());
+        LatencyBreakdown {
+            clause: clause_block::clause_delay(d, m),
+            popcount: Self::popcount_delay(d, m),
+            compare: comparator::compare_delay(d, m),
+            control: calib::SYNC_CLOCK_MARGIN,
+        }
+    }
+
+    fn resources(&self, d: &DesignParams) -> ResourceBreakdown {
+        ResourceBreakdown {
+            clause_luts: clause_block::clause_luts(d),
+            popcount_luts: Self::popcount_luts(d),
+            compare_luts: comparator::compare_luts(d),
+            control_luts: 8,
+            ffs: Self::ffs(d),
+        }
+    }
+
+    fn toggles(&self, d: &DesignParams, activity: f64) -> ToggleInventory {
+        ToggleInventory {
+            clause_toggles_per_inference: clause_block::clause_toggles(d, activity),
+            // Ripple chains glitch less than trees (shorter reconvergent
+            // paths) — the basis of Fig. 9c's "FPT'18 popcount itself has
+            // lower dynamic power" observation.
+            popcount_toggles_per_inference: Self::popcount_luts(d) as f64
+                * activity
+                * (ADDER_GLITCH * 0.6),
+            compare_toggles_per_inference: comparator::compare_toggles(d, ADDER_GLITCH)
+                * activity.max(0.25),
+            clocked_ffs: Self::ffs(d),
+            control_toggles_per_inference: 4.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn popcount_latency_is_linear() {
+        let t100 = Fpt18::popcount_delay(&DesignParams::synthetic(6, 100, 200), 1.0);
+        let t200 = Fpt18::popcount_delay(&DesignParams::synthetic(6, 200, 200), 1.0);
+        let ratio = t200.as_ps_f64() / t100.as_ps_f64();
+        assert!((1.9..2.05).contains(&ratio), "linear in clauses, got {ratio}");
+    }
+
+    #[test]
+    fn fewer_popcount_luts_than_generic() {
+        use super::super::adder_tree::GenericAdder;
+        let d = DesignParams::synthetic(10, 100, 784);
+        assert!(Fpt18::popcount_luts(&d) < GenericAdder::popcount_luts(&d));
+    }
+
+    #[test]
+    fn slower_than_generic_at_scale() {
+        // [6] trades latency for resources; at 100+ clauses the linear
+        // chain must be slower than the log tree.
+        use super::super::adder_tree::GenericAdder;
+        let d = DesignParams::synthetic(6, 200, 200);
+        assert!(
+            Fpt18::popcount_delay(&d, 1.0) > GenericAdder::popcount_delay(&d, 1.0)
+        );
+    }
+
+    #[test]
+    fn popcount_power_below_generic() {
+        use super::super::adder_tree::GenericAdder;
+        let d = DesignParams::synthetic(10, 50, 784);
+        let f = Fpt18.toggles(&d, 0.3);
+        let g = GenericAdder.toggles(&d, 0.3);
+        assert!(f.popcount_toggles_per_inference < g.popcount_toggles_per_inference);
+    }
+}

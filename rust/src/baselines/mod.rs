@@ -1,0 +1,217 @@
+//! Baseline popcount/comparison architectures (paper §IV-B):
+//!
+//! * [`GenericAdder`] — the paper's "Generic implementation": synchronous
+//!   TM with a Vivado-style compressor/adder-tree popcount and a sequential
+//!   argmax comparator. Latency = minimum clock period = worst-case
+//!   critical path (clause → popcount → compare).
+//! * [`Fpt18`] — Kim et al. (FPT'18 [6]): ripple-carry-like popcount,
+//!   linear critical path in the input width, fewer LUTs.
+//! * [`Async21`] — Wheeldon et al. (ASYNC'21 [24]): dual-rail self-timed
+//!   8-bit popcounters; the paper compares resource utilization only
+//!   (equivalent LUT count), which we model, plus a latency estimate for
+//!   the scaling sweeps.
+//! * The proposed time-domain design lives in [`crate::asynctm`]; its
+//!   resource/power inventory is exposed here through the same
+//!   [`Architecture`] interface so every experiment iterates one list.
+//!
+//! Every architecture reports a [`LatencyBreakdown`], [`ResourceBreakdown`]
+//! and [`ToggleInventory`] (consumed by [`crate::power`]), decomposed into
+//! clause / popcount / compare / control — the decomposition behind the
+//! paper's "popcount and comparison are the bottleneck" claim (Fig. 9's
+//! shaded shares).
+
+pub mod adder_tree;
+pub mod async21;
+pub mod calib;
+pub mod clause_block;
+pub mod comparator;
+pub mod fpt18;
+
+pub use adder_tree::GenericAdder;
+pub use async21::Async21;
+pub use fpt18::Fpt18;
+
+use crate::util::Ps;
+
+/// Workload/design parameters shared by all architectures.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DesignParams {
+    pub n_classes: usize,
+    pub clauses_per_class: usize,
+    /// Boolean input features (literals = 2 × features).
+    pub n_features: usize,
+    /// Largest clause fan-in (trained models are sparse; sweeps use an
+    /// assumed density).
+    pub max_clause_fanin: usize,
+    /// Average clause fan-in, for resource estimates.
+    pub avg_clause_fanin: f64,
+}
+
+impl DesignParams {
+    /// From a trained model.
+    pub fn from_model(m: &crate::tm::TmModel) -> DesignParams {
+        let total_inc: usize = m
+            .include
+            .iter()
+            .map(|row| row.iter().filter(|&&b| b).count())
+            .sum();
+        DesignParams {
+            n_classes: m.n_classes,
+            clauses_per_class: m.clauses_per_class,
+            n_features: m.n_features,
+            max_clause_fanin: m.max_clause_fanin().max(1),
+            avg_clause_fanin: (total_inc as f64 / m.c_total() as f64).max(1.0),
+        }
+    }
+
+    /// For scaling sweeps: assume clauses include ~8 % of literals (typical
+    /// of trained TMs), at least 4.
+    pub fn synthetic(n_classes: usize, clauses_per_class: usize, n_features: usize) -> Self {
+        let fanin = ((2 * n_features) as f64 * 0.08).max(4.0);
+        DesignParams {
+            n_classes,
+            clauses_per_class,
+            n_features,
+            max_clause_fanin: (fanin * 1.6) as usize,
+            avg_clause_fanin: fanin,
+        }
+    }
+
+    pub fn c_total(&self) -> usize {
+        self.n_classes * self.clauses_per_class
+    }
+
+    pub fn sum_width(&self) -> usize {
+        calib::sum_width(self.clauses_per_class)
+    }
+}
+
+/// Per-stage latency decomposition (the shares shaded in Fig. 9a).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencyBreakdown {
+    pub clause: Ps,
+    pub popcount: Ps,
+    pub compare: Ps,
+    pub control: Ps,
+}
+
+impl LatencyBreakdown {
+    pub fn total(&self) -> Ps {
+        self.clause + self.popcount + self.compare + self.control
+    }
+
+    /// Fraction contributed by popcount + comparison (the bottleneck claim).
+    pub fn popcount_compare_share(&self) -> f64 {
+        let t = self.total().as_ps_f64();
+        if t == 0.0 {
+            return 0.0;
+        }
+        (self.popcount + self.compare).as_ps_f64() / t
+    }
+}
+
+/// Per-stage LUT/FF decomposition (Fig. 9b / Fig. 11).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResourceBreakdown {
+    pub clause_luts: u32,
+    pub popcount_luts: u32,
+    pub compare_luts: u32,
+    pub control_luts: u32,
+    pub ffs: u32,
+}
+
+impl ResourceBreakdown {
+    pub fn luts(&self) -> u32 {
+        self.clause_luts + self.popcount_luts + self.compare_luts + self.control_luts
+    }
+
+    /// The paper's Fig. 9b metric: LUTs and FFs weighted equally.
+    pub fn total(&self) -> u32 {
+        self.luts() + self.ffs
+    }
+
+    pub fn popcount_compare_share(&self) -> f64 {
+        if self.total() == 0 {
+            return 0.0;
+        }
+        (self.popcount_luts + self.compare_luts) as f64 / self.total() as f64
+    }
+}
+
+/// Switching inventory for the power model ([`crate::power`]).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ToggleInventory {
+    /// Expected LUT output toggles per inference in clause logic
+    /// (∝ input activity).
+    pub clause_toggles_per_inference: f64,
+    /// Popcount-stage toggles per inference (adder trees glitch: several
+    /// transitions per LUT per cycle).
+    pub popcount_toggles_per_inference: f64,
+    /// Comparator toggles per inference.
+    pub compare_toggles_per_inference: f64,
+    /// FFs loaded by the clock every cycle (zero for async designs).
+    pub clocked_ffs: u32,
+    /// Latch/control toggles per inference (async handshake cells).
+    pub control_toggles_per_inference: f64,
+}
+
+/// Common interface every architecture implements; experiments iterate a
+/// `Vec<Box<dyn Architecture>>`.
+pub trait Architecture {
+    fn name(&self) -> &'static str;
+
+    /// Worst-case (synchronous: the minimum clock period; asynchronous:
+    /// all-high-latency) inference latency.
+    fn latency(&self, d: &DesignParams) -> LatencyBreakdown;
+
+    fn resources(&self, d: &DesignParams) -> ResourceBreakdown;
+
+    /// Switching inventory at the given input activity factor α.
+    fn toggles(&self, d: &DesignParams, activity: f64) -> ToggleInventory;
+
+    /// Whether `latency` is a clock period (true) or a self-timed
+    /// per-inference latency (false).
+    fn is_synchronous(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn design_params_from_synthetic() {
+        let d = DesignParams::synthetic(10, 100, 784);
+        assert_eq!(d.c_total(), 1000);
+        assert_eq!(d.sum_width(), 8);
+        assert!(d.avg_clause_fanin > 4.0);
+        assert!(d.max_clause_fanin > d.avg_clause_fanin as usize);
+    }
+
+    #[test]
+    fn latency_breakdown_share() {
+        let lb = LatencyBreakdown {
+            clause: Ps(1000),
+            popcount: Ps(2000),
+            compare: Ps(6000),
+            control: Ps(1000),
+        };
+        assert_eq!(lb.total(), Ps(10_000));
+        assert!((lb.popcount_compare_share() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resource_breakdown_totals() {
+        let rb = ResourceBreakdown {
+            clause_luts: 100,
+            popcount_luts: 50,
+            compare_luts: 30,
+            control_luts: 20,
+            ffs: 40,
+        };
+        assert_eq!(rb.luts(), 200);
+        assert_eq!(rb.total(), 240);
+        assert!((rb.popcount_compare_share() - 80.0 / 240.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,145 @@
+//! Configuration & CLI argument parsing (no external crates offline —
+//! DESIGN.md §7).
+//!
+//! [`Args`] is a minimal clap-alike: positional subcommand + `--key value`
+//! / `--flag` options, with typed accessors and an unknown-option check so
+//! typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Error if any provided option/flag is not in the allowed set.
+    pub fn expect_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown option --{k} (allowed: {allowed:?})");
+            }
+        }
+        for f in &self.flags {
+            if !allowed.contains(&f.as_str()) {
+                bail!("unknown flag --{f} (allowed: {allowed:?})");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig9 --model mnist_c50 --samples 100 --verbose");
+        assert_eq!(a.command.as_deref(), Some("fig9"));
+        assert_eq!(a.opt("model"), Some("mnist_c50"));
+        assert_eq!(a.opt_usize("samples", 1).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("serve --batch=32 --deadline-us=500");
+        assert_eq!(a.opt_usize("batch", 0).unwrap(), 32);
+        assert_eq!(a.opt_usize("deadline-us", 0).unwrap(), 500);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("x --n abc");
+        assert!(a.opt_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = parse("x --good 1 --bad 2");
+        assert!(a.expect_known(&["good"]).is_err());
+        assert!(a.expect_known(&["good", "bad"]).is_ok());
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("infer file1 file2");
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Dynamic batching policy.
+//!
+//! Pure decision logic (fully unit-testable without threads): flush a
+//! pending queue when it reaches `max_batch`, or when the *oldest* queued
+//! request has waited `max_wait` (deadline bound), mirroring the size/
+//! deadline policy of production inference routers.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatcherConfig {
+    /// Flush as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush when the oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 32, max_wait: Duration::from_micros(500) }
+    }
+}
+
+/// A flush decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// How many queued requests to take.
+    pub take: usize,
+}
+
+impl BatcherConfig {
+    /// Decide whether to flush now. `oldest` is the enqueue time of the
+    /// head request (None ⇔ empty queue).
+    pub fn plan(&self, queued: usize, oldest: Option<Instant>) -> Option<BatchPlan> {
+        if queued == 0 {
+            return None;
+        }
+        if queued >= self.max_batch {
+            return Some(BatchPlan { take: self.max_batch });
+        }
+        match oldest {
+            Some(t0) if t0.elapsed() >= self.max_wait => Some(BatchPlan { take: queued }),
+            _ => None,
+        }
+    }
+
+    /// Receive-poll granularity: a fraction of the deadline so a deadline
+    /// flush is never late by more than ~25 %.
+    pub fn poll_interval(&self) -> Duration {
+        (self.max_wait / 4).max(Duration::from_micros(50))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn empty_queue_never_flushes() {
+        let cfg = BatcherConfig::default();
+        assert_eq!(cfg.plan(0, None), None);
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_secs(10) };
+        let now = Instant::now();
+        assert_eq!(cfg.plan(8, Some(now)), Some(BatchPlan { take: 8 }));
+        assert_eq!(cfg.plan(20, Some(now)), Some(BatchPlan { take: 8 }));
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let cfg = BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(0) };
+        let t0 = Instant::now() - Duration::from_millis(5);
+        assert_eq!(cfg.plan(3, Some(t0)), Some(BatchPlan { take: 3 }));
+    }
+
+    #[test]
+    fn young_partial_batch_waits() {
+        let cfg = BatcherConfig { max_batch: 32, max_wait: Duration::from_secs(60) };
+        assert_eq!(cfg.plan(3, Some(Instant::now())), None);
+    }
+
+    #[test]
+    fn poll_interval_bounded() {
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(100) };
+        assert!(cfg.poll_interval() >= Duration::from_micros(50));
+        let slow = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(40) };
+        assert_eq!(slow.poll_interval(), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn prop_plan_never_exceeds_queue_or_max() {
+        prop::check("batch plan bounds", 200, |g| {
+            let cfg = BatcherConfig {
+                max_batch: g.int(1, 64) as usize,
+                max_wait: Duration::from_micros(g.int(0, 1000) as u64),
+            };
+            let queued = g.int(0, 128) as usize;
+            let aged = g.boolean(0.5);
+            let oldest = if queued > 0 {
+                Some(if aged {
+                    Instant::now() - Duration::from_secs(1)
+                } else {
+                    Instant::now() + Duration::from_secs(1) // not yet due
+                })
+            } else {
+                None
+            };
+            if let Some(plan) = cfg.plan(queued, oldest) {
+                assert!(plan.take <= queued.max(cfg.max_batch));
+                assert!(plan.take <= cfg.max_batch.max(queued));
+                assert!(plan.take >= 1);
+                assert!(plan.take <= queued, "cannot take more than queued");
+            } else {
+                // No flush ⇒ queue below max and (empty or not yet due).
+                assert!(queued < cfg.max_batch);
+            }
+        });
+    }
+}

@@ -1,0 +1,138 @@
+//! Coordinator metrics: latency histograms, throughput, batch shapes.
+
+use crate::util::stats::Histogram;
+
+use super::InferResponse;
+
+/// Live metrics, guarded by the coordinator's mutex.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    service_latency: Option<Histogram>,
+    hw_latency_ns: Vec<f64>,
+    requests: u64,
+    batches: u64,
+    batched_requests: u64,
+    batch_exec_us_total: f64,
+    hw_functional_mismatches: u64,
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    /// Mean requests per executed batch.
+    pub mean_batch_size: f64,
+    /// Mean PJRT execution time per batch (µs).
+    pub mean_batch_exec_us: f64,
+    /// Service latency stats (µs).
+    pub service_p50_us: f64,
+    pub service_p99_us: f64,
+    pub service_mean_us: f64,
+    /// Simulated hardware decision latency (ns), when an engine ran.
+    pub hw_mean_ns: f64,
+    pub hw_p99_ns: f64,
+    /// Samples where the hardware argmax disagreed with the functional
+    /// argmax (possible only on class-sum ties / metastability).
+    pub hw_functional_mismatches: u64,
+}
+
+impl Metrics {
+    pub fn record(&mut self, resp: &InferResponse) {
+        self.requests += 1;
+        self.service_latency
+            .get_or_insert_with(Histogram::new)
+            .record(resp.service_latency_us);
+        if let Some(ps) = resp.hw_decision_latency {
+            self.hw_latency_ns.push(ps.as_ns());
+        }
+        if let Some(w) = resp.hw_winner {
+            if w != resp.pred {
+                self.hw_functional_mismatches += 1;
+            }
+        }
+    }
+
+    pub fn record_batch(&mut self, n: usize, exec_us: f64) {
+        self.batches += 1;
+        self.batched_requests += n as u64;
+        self.batch_exec_us_total += exec_us;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let hist = self.service_latency.as_ref();
+        let hw = &self.hw_latency_ns;
+        MetricsSnapshot {
+            requests: self.requests,
+            batches: self.batches,
+            mean_batch_size: if self.batches == 0 {
+                0.0
+            } else {
+                self.batched_requests as f64 / self.batches as f64
+            },
+            mean_batch_exec_us: if self.batches == 0 {
+                0.0
+            } else {
+                self.batch_exec_us_total / self.batches as f64
+            },
+            service_p50_us: hist.map(|h| h.quantile(0.5)).unwrap_or(0.0),
+            service_p99_us: hist.map(|h| h.quantile(0.99)).unwrap_or(0.0),
+            service_mean_us: hist.map(|h| h.mean()).unwrap_or(0.0),
+            hw_mean_ns: crate::util::stats::mean(hw),
+            hw_p99_ns: crate::util::stats::percentile(hw, 99.0),
+            hw_functional_mismatches: self.hw_functional_mismatches,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Ps;
+
+    fn resp(latency_us: f64, hw: Option<(u64, usize)>, pred: usize) -> InferResponse {
+        InferResponse {
+            request_id: 0,
+            pred,
+            sums: vec![],
+            hw_decision_latency: hw.map(|(ps, _)| Ps(ps)),
+            hw_winner: hw.map(|(_, w)| w),
+            service_latency_us: latency_us,
+            batch_size: 1,
+        }
+    }
+
+    #[test]
+    fn records_and_snapshots() {
+        let mut m = Metrics::default();
+        for i in 1..=100 {
+            m.record(&resp(i as f64, Some((i * 1000, 0)), 0));
+        }
+        m.record_batch(32, 500.0);
+        m.record_batch(8, 300.0);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_size - 20.0).abs() < 1e-9);
+        assert!((s.mean_batch_exec_us - 400.0).abs() < 1e-9);
+        assert!(s.service_p50_us >= 50.0);
+        assert!((s.hw_mean_ns - 50.5).abs() < 1e-9);
+        assert_eq!(s.hw_functional_mismatches, 0);
+    }
+
+    #[test]
+    fn counts_hw_mismatches() {
+        let mut m = Metrics::default();
+        m.record(&resp(1.0, Some((100, 2)), 1)); // hw says 2, model says 1
+        m.record(&resp(1.0, Some((100, 1)), 1));
+        assert_eq!(m.snapshot().hw_functional_mismatches, 1);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.service_p50_us, 0.0);
+        assert_eq!(s.hw_mean_ns, 0.0);
+    }
+}

@@ -1,0 +1,273 @@
+//! L3 serving coordinator: request routing, dynamic batching, worker pool,
+//! metrics.
+//!
+//! The coordinator is the deployment shell around the paper's hardware:
+//! clients submit Booleanized samples; a per-model dynamic batcher groups
+//! them (size- and deadline-bounded, vLLM-router style); worker threads
+//! execute the AOT-compiled HLO on the PJRT runtime; and, when a hardware
+//! engine is attached, each sample's clause bits are replayed through the
+//! asynchronous time-domain TM to report the on-chip decision latency next
+//! to the functional result. Everything is std-threads + channels (tokio is
+//! not in the offline crate set — DESIGN.md §7).
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::{BatchPlan, BatcherConfig};
+pub use metrics::{Metrics, MetricsSnapshot};
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::asynctm::AsyncTmEngine;
+use crate::runtime::{bools_to_f32, ModelRegistry};
+use crate::util::Ps;
+
+/// One inference request.
+#[derive(Debug)]
+pub struct InferRequest {
+    pub features: Vec<bool>,
+    /// Where to deliver the response.
+    pub reply: mpsc::Sender<InferResponse>,
+    submitted: Instant,
+}
+
+/// One inference response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferResponse {
+    pub request_id: u64,
+    /// Functional argmax class from the PJRT-executed model.
+    pub pred: usize,
+    /// Signed class sums.
+    pub sums: Vec<i32>,
+    /// Simulated on-chip decision latency of the async time-domain TM
+    /// (None when no hardware engine is attached).
+    pub hw_decision_latency: Option<Ps>,
+    /// Hardware argmax (may disagree with `pred` only on exact ties).
+    pub hw_winner: Option<usize>,
+    /// End-to-end service latency through the coordinator (µs).
+    pub service_latency_us: f64,
+    /// Batch this request was served in.
+    pub batch_size: usize,
+}
+
+/// Handle to a running coordinator for one model.
+pub struct Coordinator {
+    tx: mpsc::Sender<WorkItem>,
+    next_id: AtomicU64,
+    metrics: Arc<Mutex<Metrics>>,
+    shutdown: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    pub model: String,
+}
+
+struct WorkItem {
+    id: u64,
+    req: InferRequest,
+}
+
+impl Coordinator {
+    /// Start a coordinator for `model` over the artifacts at `root`.
+    ///
+    /// The PJRT client and its compiled executables are not `Send` (the
+    /// `xla` crate wraps raw PJRT pointers), so the worker thread *owns*
+    /// its [`ModelRegistry`]: the registry is constructed and both batch
+    /// sizes pre-compiled inside the worker, and startup errors are
+    /// reported back through a ready-channel before `start` returns.
+    /// If `engine` is provided, every sample is additionally replayed
+    /// through the simulated async TM.
+    pub fn start(
+        root: PathBuf,
+        model: &str,
+        cfg: BatcherConfig,
+        engine: Option<AsyncTmEngine>,
+    ) -> Result<Coordinator> {
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let worker = {
+            let model = model.to_string();
+            let metrics = metrics.clone();
+            let shutdown = shutdown.clone();
+            std::thread::Builder::new()
+                .name(format!("tdpc-batcher-{model}"))
+                .spawn(move || {
+                    // Build + pre-compile inside the owning thread.
+                    let registry = match ModelRegistry::open(&root) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    for &b in &registry.manifest().batch_sizes.clone() {
+                        if let Err(e) =
+                            registry.runner(&model, b).context("pre-compiling model")
+                        {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    }
+                    let _ = ready_tx.send(Ok(()));
+                    worker_loop(registry, model, cfg, engine, rx, metrics, shutdown)
+                })?
+        };
+        ready_rx
+            .recv()
+            .context("coordinator worker died during startup")??;
+        Ok(Coordinator {
+            tx,
+            next_id: AtomicU64::new(0),
+            metrics,
+            shutdown,
+            worker: Some(worker),
+            model: model.to_string(),
+        })
+    }
+
+    /// Submit asynchronously; the response arrives on `reply`.
+    pub fn submit(&self, features: Vec<bool>, reply: mpsc::Sender<InferResponse>) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(WorkItem { id, req: InferRequest { features, reply, submitted: Instant::now() } })
+            .map_err(|_| anyhow::anyhow!("coordinator worker has shut down"))?;
+        Ok(id)
+    }
+
+    /// Convenience blocking call.
+    pub fn infer_blocking(&self, features: Vec<bool>) -> Result<InferResponse> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(features, tx)?;
+        rx.recv().context("coordinator dropped the reply channel")
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.lock().unwrap().snapshot()
+    }
+
+    /// Stop the worker after draining queued requests.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        drop(self.tx.clone()); // worker exits when all senders drop + flag set
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    registry: ModelRegistry,
+    model: String,
+    cfg: BatcherConfig,
+    mut engine: Option<AsyncTmEngine>,
+    rx: mpsc::Receiver<WorkItem>,
+    metrics: Arc<Mutex<Metrics>>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut pending: Vec<WorkItem> = Vec::new();
+    loop {
+        // Collect until the batch plan says flush. The channel is drained
+        // greedily before each planning decision: the deadline is measured
+        // from *submission*, so leaving ready work in the channel would
+        // make every item individually overdue and collapse batching.
+        let plan = loop {
+            while let Ok(item) = rx.try_recv() {
+                pending.push(item);
+                if pending.len() >= cfg.max_batch {
+                    break;
+                }
+            }
+            if let Some(plan) = cfg.plan(pending.len(), pending.first().map(|w| w.req.submitted)) {
+                break plan;
+            }
+            let timeout = cfg.poll_interval();
+            match rx.recv_timeout(timeout) {
+                Ok(item) => pending.push(item),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if pending.is_empty() && shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    if pending.is_empty() {
+                        return;
+                    }
+                    // Flush whatever is left.
+                    break BatchPlan { take: pending.len() };
+                }
+            }
+        };
+
+        let batch: Vec<WorkItem> = pending.drain(..plan.take.min(pending.len())).collect();
+        if batch.is_empty() {
+            continue;
+        }
+        if let Err(e) = execute_batch(&registry, &model, &batch, engine.as_mut(), &metrics) {
+            log::error!("batch execution failed: {e:#}");
+            // Drop the batch; reply channels close and callers see an error.
+        }
+    }
+}
+
+fn execute_batch(
+    registry: &ModelRegistry,
+    model: &str,
+    batch: &[WorkItem],
+    mut engine: Option<&mut AsyncTmEngine>,
+    metrics: &Arc<Mutex<Metrics>>,
+) -> Result<()> {
+    let exec_size = registry.exec_batch(batch.len());
+    let runner = registry.runner(model, exec_size)?;
+    let t0 = Instant::now();
+    // Slice the logical batch into runner-sized chunks.
+    for chunk in batch.chunks(exec_size) {
+        let rows: Vec<Vec<bool>> = chunk.iter().map(|w| w.req.features.clone()).collect();
+        let x = bools_to_f32(&rows);
+        let out = if chunk.len() == runner.batch {
+            runner.run(&x)?
+        } else {
+            runner.run_padded(&x, chunk.len())?
+        };
+        for (i, item) in chunk.iter().enumerate() {
+            let (hw_latency, hw_winner) = match engine.as_deref_mut() {
+                Some(eng) => {
+                    let bits = out.clause_bits_row(i);
+                    let o = eng.infer(&bits);
+                    (Some(o.decision_latency), Some(o.winner))
+                }
+                None => (None, None),
+            };
+            let service_us = item.req.submitted.elapsed().as_secs_f64() * 1e6;
+            let resp = InferResponse {
+                request_id: item.id,
+                pred: out.pred[i] as usize,
+                sums: out.sums_row(i).to_vec(),
+                hw_decision_latency: hw_latency,
+                hw_winner,
+                service_latency_us: service_us,
+                batch_size: chunk.len(),
+            };
+            metrics.lock().unwrap().record(&resp);
+            let _ = item.req.reply.send(resp); // receiver may have gone away
+        }
+    }
+    metrics
+        .lock()
+        .unwrap()
+        .record_batch(batch.len(), t0.elapsed().as_secs_f64() * 1e6);
+    Ok(())
+}

@@ -1,0 +1,185 @@
+//! Ablation: is the paper's implementation flow actually necessary?
+//!
+//! §II-B argues PDLs "cannot be directly applied" without structural *and*
+//! physical uniformity, and §III-B builds the placement/pin/routing flow to
+//! provide it. This experiment removes the flow's ingredients one at a
+//! time and re-measures the Fig. 6 monotonicity:
+//!
+//! * **full flow** — symmetric placement, A6/A5 pins, delay-range routing;
+//! * **naive pins** — low/high nets on the *slowest* pin pair (A1/A2):
+//!   same delta window but ~3× the per-stage latency (the latency cost the
+//!   pin-assignment step avoids);
+//! * **unconstrained routing** — no delay windows: every arc lands wherever
+//!   general routing puts it (modeled as a per-arc uniform spread much
+//!   wider than the window), destroying the weight→delay law.
+
+use crate::fabric::{Device, VariationModel, VariationParams, LUT_LOGIC_DELAY};
+use crate::flow::{hamming_response, place_pdls, route_pdl, FlowConfig, PinAssignment, RoutedElement, RoutedPdl};
+use crate::util::{Ps, SplitMix64};
+
+use super::Table;
+
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub variant: &'static str,
+    pub spearman_rho: f64,
+    pub strictly_monotonic: bool,
+    pub mean_stage_ps: f64,
+    /// Mean within-weight delay spread (ps) — per-sample count resolution.
+    pub within_weight_sigma_ps: f64,
+}
+
+pub struct AblationResult {
+    pub rows: Vec<AblationRow>,
+}
+
+fn response_of(pdl: &RoutedPdl, seed: u64) -> (f64, bool, f64, f64) {
+    let r = hamming_response(pdl, 6, seed);
+    let mean_stage = pdl
+        .elements
+        .iter()
+        .map(|e| (e.lo_total.as_ps_f64() + e.hi_total.as_ps_f64()) / 2.0)
+        .sum::<f64>()
+        / pdl.len() as f64;
+    // Mean within-weight spread: the popcount's per-sample resolution.
+    // If two inputs of the same Hamming weight differ by more than one
+    // stage delta, the PDL no longer encodes the count — regardless of how
+    // monotone the *averages* look.
+    let mean_sigma_ps =
+        1000.0 * r.std_delay_ns.iter().sum::<f64>() / r.std_delay_ns.len() as f64;
+    (r.spearman_rho, r.strictly_monotonic, mean_stage, mean_sigma_ps)
+}
+
+/// Unconstrained general routing: per-arc delays drawn uniformly from the
+/// spread general routing exhibits (±40 % around a 500 ps mean — far wider
+/// than the hi−lo window), i.e. what you get without the Fig. 3 flow.
+fn unconstrained_pdl(n: usize, seed: u64) -> RoutedPdl {
+    let device = Device::xc7z020();
+    let placement = place_pdls(&device, 1, n).unwrap().remove(0);
+    let mut rng = SplitMix64::new(seed ^ 0xAB1A);
+    let elements = placement
+        .sites
+        .iter()
+        .map(|&site| {
+            let a = Ps::from_ps_f64(rng.next_range_f64(300.0, 700.0)) + LUT_LOGIC_DELAY;
+            let b = Ps::from_ps_f64(rng.next_range_f64(300.0, 700.0)) + LUT_LOGIC_DELAY;
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            RoutedElement { site, lo_net: lo, hi_net: hi, lo_total: lo, hi_total: hi }
+        })
+        .collect();
+    RoutedPdl { index: 0, elements }
+}
+
+pub fn run(n_elements: usize, die_seed: u64) -> AblationResult {
+    let device = Device::xc7z020();
+    let variation = VariationParams { sigma_random: 0.035, ..VariationParams::default() };
+    let var = VariationModel::new(die_seed, variation);
+    let placement = place_pdls(&device, 1, n_elements).unwrap().remove(0);
+    let cfg = FlowConfig {
+        lo_target: Ps(380),
+        hi_target: Ps(618),
+        granularity: Ps(5),
+        variation,
+        die_seed,
+    };
+
+    let mut rows = Vec::new();
+
+    // Full flow.
+    let full = route_pdl(&device, &placement, &PinAssignment::fastest_pair(), &cfg, &var).unwrap();
+    let (rho, mono, stage, sigma) = response_of(&full, die_seed);
+    rows.push(AblationRow { variant: "full flow (A6/A5 + windows)", spearman_rho: rho, strictly_monotonic: mono, mean_stage_ps: stage, within_weight_sigma_ps: sigma });
+
+    // Naive pins: slowest pair, same windows (targets shifted up to the
+    // slower pins' floor).
+    let naive_pins = PinAssignment {
+        lo_pin: crate::fabric::LutPin::A2,
+        hi_pin: crate::fabric::LutPin::A1,
+    };
+    let slow_cfg = FlowConfig {
+        lo_target: Ps(560),
+        hi_target: Ps(798), // same 238 ps window at the slow pins' floor
+        ..cfg
+    };
+    let slow = route_pdl(&device, &placement, &naive_pins, &slow_cfg, &var).unwrap();
+    let (rho, mono, stage, sigma) = response_of(&slow, die_seed);
+    rows.push(AblationRow { variant: "naive pins (A1/A2)", spearman_rho: rho, strictly_monotonic: mono, mean_stage_ps: stage, within_weight_sigma_ps: sigma });
+
+    // Unconstrained routing.
+    let un = unconstrained_pdl(n_elements, die_seed);
+    let (rho, mono, stage, sigma) = response_of(&un, die_seed);
+    rows.push(AblationRow { variant: "unconstrained routing", spearman_rho: rho, strictly_monotonic: mono, mean_stage_ps: stage, within_weight_sigma_ps: sigma });
+
+    AblationResult { rows }
+}
+
+impl AblationResult {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Ablation — flow ingredients vs Fig. 6 monotonicity (150-element PDL)",
+            &["variant", "Spearman ρ", "strictly monotonic", "mean stage (ps)", "within-weight σ (ps)"],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.variant.to_string(),
+                format!("{:.5}", r.spearman_rho),
+                r.strictly_monotonic.to_string(),
+                format!("{:.0}", r.mean_stage_ps),
+                format!("{:.0}", r.within_weight_sigma_ps),
+            ]);
+        }
+        t.note(
+            "The paper's claim (§II-B): without the implementation flow, the \
+             weight→delay relationship degrades. Naive pins keep monotonicity \
+             but pay per-stage latency; unconstrained routing keeps only a \
+             statistical trend (per-element deltas vary wildly), so per-weight \
+             delay overlaps and ρ degrades — exact popcount is lost.",
+        );
+        t
+    }
+
+    /// Predicates the test suite asserts.
+    pub fn shape_holds(&self) -> bool {
+        let full = &self.rows[0];
+        let naive = &self.rows[1];
+        let unc = &self.rows[2];
+        full.spearman_rho < -0.999
+            && naive.spearman_rho < -0.999
+            // Naive pins: same monotonicity, ≥25 % more per-stage latency.
+            && naive.mean_stage_ps > full.mean_stage_ps * 1.25
+            // Unconstrained routing: within-weight spread explodes past the
+            // ~238 ps stage delta — per-sample popcount resolution is gone.
+            && unc.within_weight_sigma_ps > 3.0 * full.within_weight_sigma_ps
+            && unc.within_weight_sigma_ps > 238.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flow_ingredients_matter() {
+        let r = run(150, 7);
+        assert!(r.shape_holds(), "{:#?}", r.rows);
+    }
+
+    #[test]
+    fn naive_pins_cost_latency_not_monotonicity() {
+        let r = run(100, 3);
+        assert!(r.rows[1].spearman_rho < -0.99);
+        assert!(r.rows[1].mean_stage_ps > r.rows[0].mean_stage_ps + 150.0);
+    }
+
+    #[test]
+    fn unconstrained_routing_destroys_count_resolution() {
+        for die in [1u64, 5, 9] {
+            let r = run(150, die);
+            assert!(
+                r.rows[2].within_weight_sigma_ps > 3.0 * r.rows[0].within_weight_sigma_ps,
+                "die {die}: {:?}",
+                r.rows
+            );
+        }
+    }
+}

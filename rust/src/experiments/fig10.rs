@@ -1,0 +1,172 @@
+//! Fig. 10: latency scaling — (a) vs clause count at 6 classes, (b) vs
+//! class count at 100 clauses.
+//!
+//! The paper's claims, which the shape predicates below assert:
+//! * (a) generic grows ~logarithmically in clauses, FPT'18 and the
+//!   time-domain design linearly (FPT'18's slope slightly below the TD
+//!   average), so adder trees win for very long input vectors;
+//! * (b) adder-based designs grow linearly in classes (sequential
+//!   comparison) while the TD design is near-constant (arbiter levels);
+//! * the TD average (±3σ, measured over 1000 synthetic samples as in the
+//!   paper) sits far below the TD worst case, and the gap widens with
+//!   model size.
+
+use crate::asynctm::AsyncTmEngine;
+use crate::baselines::{Architecture, DesignParams, Fpt18, GenericAdder};
+use crate::fabric::Device;
+use crate::flow::FlowConfig;
+use crate::tm::datasets::synthetic_clause_bits;
+use crate::tm::WorkloadSpec;
+use crate::util::{stats, SplitMix64};
+
+use super::Table;
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub x: usize,
+    pub generic_ns: f64,
+    pub fpt18_ns: f64,
+    pub td_worst_ns: f64,
+    pub td_mean_ns: f64,
+    pub td_std_ns: f64,
+}
+
+pub struct Fig10Result {
+    /// (a): x = clauses per class, 6 classes.
+    pub vs_clauses: Vec<SweepPoint>,
+    /// (b): x = classes, 100 clauses per class.
+    pub vs_classes: Vec<SweepPoint>,
+}
+
+pub const CLAUSE_SWEEP: [usize; 5] = [25, 50, 100, 200, 400];
+pub const CLASS_SWEEP: [usize; 5] = [2, 4, 8, 16, 32];
+
+fn measure_point(n_classes: usize, clauses: usize, samples: usize, seed: u64) -> SweepPoint {
+    let d = DesignParams::synthetic(n_classes, clauses, 200);
+    let generic = GenericAdder.latency(&d).total().as_ns();
+    let fpt = Fpt18.latency(&d).total().as_ns();
+
+    // Build the real engine and measure the average case over synthetic
+    // clause vectors (the paper: 1000 MNIST samples).
+    let device = Device::xc7z020();
+    let mut engine = AsyncTmEngine::build(&device, &d, &FlowConfig::table1_default(), seed)
+        .expect("sweep geometry must place");
+    let spec = WorkloadSpec {
+        n_classes,
+        clauses_per_class: clauses,
+        n_features: 200,
+        fire_rate: 0.5,
+    };
+    let mut rng = SplitMix64::new(seed ^ 0x10a);
+    let mut lat = Vec::with_capacity(samples);
+    for i in 0..samples {
+        let bits = synthetic_clause_bits(&spec, i % n_classes, &mut rng);
+        lat.push(engine.infer(&bits).decision_latency.as_ns());
+    }
+    SweepPoint {
+        x: if n_classes == 6 { clauses } else { n_classes },
+        generic_ns: generic,
+        fpt18_ns: fpt,
+        td_worst_ns: engine.worst_case_latency().as_ns(),
+        td_mean_ns: stats::mean(&lat),
+        td_std_ns: stats::std_dev(&lat),
+    }
+}
+
+pub fn run(samples_per_point: usize) -> Fig10Result {
+    let vs_clauses = CLAUSE_SWEEP
+        .iter()
+        .map(|&c| measure_point(6, c, samples_per_point, 17))
+        .collect();
+    let vs_classes = CLASS_SWEEP
+        .iter()
+        .map(|&k| measure_point(k, 100, samples_per_point, 29))
+        .collect();
+    Fig10Result { vs_clauses, vs_classes }
+}
+
+impl Fig10Result {
+    pub fn tables(&self) -> Vec<Table> {
+        let render = |title: &str, xlabel: &str, pts: &[SweepPoint]| {
+            let mut t = Table::new(
+                title,
+                &[xlabel, "generic (ns)", "fpt18 (ns)", "td mean (ns)", "td ±3σ", "td worst (ns)"],
+            );
+            for p in pts {
+                t.row(vec![
+                    p.x.to_string(),
+                    format!("{:.1}", p.generic_ns),
+                    format!("{:.1}", p.fpt18_ns),
+                    format!("{:.1}", p.td_mean_ns),
+                    format!("{:.1}", 3.0 * p.td_std_ns),
+                    format!("{:.1}", p.td_worst_ns),
+                ]);
+            }
+            t
+        };
+        vec![
+            render("Fig. 10a — latency vs clauses (6 classes)", "clauses", &self.vs_clauses),
+            render("Fig. 10b — latency vs classes (100 clauses)", "classes", &self.vs_classes),
+        ]
+    }
+
+    /// Shape predicates (paper claims).
+    pub fn shape_holds(&self) -> (bool, bool, bool, bool) {
+        // (a) generic sublinear: 16× clauses < 4× latency.
+        let g = &self.vs_clauses;
+        let generic_sublinear =
+            g.last().unwrap().generic_ns / g.first().unwrap().generic_ns < 4.0;
+        // (a) td linear-ish in clauses: 16× clauses ⇒ >8× mean latency.
+        let td_linear = g.last().unwrap().td_mean_ns / g.first().unwrap().td_mean_ns > 8.0;
+        // (b) generic roughly linear in classes.
+        let k = &self.vs_classes;
+        let generic_linear_classes =
+            k.last().unwrap().generic_ns / k.first().unwrap().generic_ns > 6.0;
+        // (b) td near-constant in classes.
+        let td_constant_classes =
+            k.last().unwrap().td_mean_ns / k.first().unwrap().td_mean_ns < 1.5;
+        (generic_sublinear, td_linear, generic_linear_classes, td_constant_classes)
+    }
+
+    /// The ±3σ claim: worst case sits far outside the measured band, and
+    /// increasingly so for larger models.
+    pub fn worst_case_improbable(&self) -> bool {
+        self.vs_clauses
+            .iter()
+            .all(|p| p.td_worst_ns > p.td_mean_ns + 3.0 * p.td_std_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_shapes_match_paper() {
+        let r = run(60);
+        let (g_sub, td_lin, g_lin_k, td_const_k) = r.shape_holds();
+        assert!(g_sub, "generic must scale sub-linearly with clauses (Fig. 10a)");
+        assert!(td_lin, "TD must scale linearly with clauses (Fig. 10a)");
+        assert!(g_lin_k, "adder designs must scale linearly with classes (Fig. 10b)");
+        assert!(td_const_k, "TD must be near-constant in classes (Fig. 10b)");
+        assert!(r.worst_case_improbable(), "±3σ band must exclude the worst case");
+    }
+
+    #[test]
+    fn adder_wins_at_large_clause_counts() {
+        // Paper: "for large input vectors, adder-based designs may have a
+        // latency advantage over the time-domain popcount."
+        let r = run(30);
+        let last = r.vs_clauses.last().unwrap();
+        assert!(last.generic_ns < last.td_mean_ns, "crossover at 400 clauses");
+    }
+
+    #[test]
+    fn td_wins_at_many_classes() {
+        let r = run(30);
+        let last = r.vs_classes.last().unwrap();
+        assert!(last.td_mean_ns < last.generic_ns, "TD must win at 32 classes");
+        assert!(last.td_mean_ns < last.fpt18_ns);
+    }
+}

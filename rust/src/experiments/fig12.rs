@@ -1,0 +1,124 @@
+//! Fig. 12: dynamic power scaling at switching activity α ∈ {0.1, 0.5} —
+//! (a) vs clauses (6 classes), (b) vs classes (100 clauses), all designs
+//! compared at the same inference rate.
+//!
+//! Paper claims: at α = 0.1 the adder-based popcount consumes less power
+//! (little switching); at α = 0.5 it degrades steeply while the
+//! time-domain popcount barely moves (every delay element transitions once
+//! per cycle regardless of data), making TD the most power-efficient and
+//! the most *predictable* option.
+
+use crate::asynctm::TdAsync;
+use crate::baselines::{DesignParams, Fpt18, GenericAdder};
+use crate::power::power_at_rate;
+
+use super::Table;
+
+/// Comparison rate: 1 M inferences/s for every design.
+pub const RATE_HZ: f64 = 1e6;
+
+#[derive(Debug, Clone)]
+pub struct PowerPoint {
+    pub x: usize,
+    pub activity: f64,
+    /// Popcount-stage power (mW) — the implementation Fig. 12 isolates.
+    pub generic_mw: f64,
+    pub fpt18_mw: f64,
+    pub td_mw: f64,
+}
+
+pub struct Fig12Result {
+    pub vs_clauses: Vec<PowerPoint>,
+    pub vs_classes: Vec<PowerPoint>,
+}
+
+pub const ACTIVITIES: [f64; 2] = [0.1, 0.5];
+
+fn point(n_classes: usize, clauses: usize, x: usize, alpha: f64) -> PowerPoint {
+    let d = DesignParams::synthetic(n_classes, clauses, 200);
+    // Fig. 12 compares the *popcount implementations*: popcount stage only.
+    let pc = |p: crate::power::PowerBreakdown| p.popcount_mw;
+    PowerPoint {
+        x,
+        activity: alpha,
+        generic_mw: pc(power_at_rate(&GenericAdder, &d, alpha, RATE_HZ)),
+        fpt18_mw: pc(power_at_rate(&Fpt18, &d, alpha, RATE_HZ)),
+        td_mw: pc(power_at_rate(&TdAsync::default(), &d, alpha, RATE_HZ)),
+    }
+}
+
+pub fn run() -> Fig12Result {
+    let mut vs_clauses = Vec::new();
+    let mut vs_classes = Vec::new();
+    for &alpha in &ACTIVITIES {
+        for &c in &super::fig10::CLAUSE_SWEEP {
+            vs_clauses.push(point(6, c, c, alpha));
+        }
+        for &k in &super::fig10::CLASS_SWEEP {
+            vs_classes.push(point(k, 100, k, alpha));
+        }
+    }
+    Fig12Result { vs_clauses, vs_classes }
+}
+
+impl Fig12Result {
+    pub fn tables(&self) -> Vec<Table> {
+        let render = |title: &str, xlabel: &str, pts: &[PowerPoint]| {
+            let mut t = Table::new(
+                title,
+                &[xlabel, "α", "generic (mW)", "fpt18 (mW)", "td-async (mW)"],
+            );
+            for p in pts {
+                t.row(vec![
+                    p.x.to_string(),
+                    format!("{:.1}", p.activity),
+                    format!("{:.3}", p.generic_mw),
+                    format!("{:.3}", p.fpt18_mw),
+                    format!("{:.3}", p.td_mw),
+                ]);
+            }
+            t
+        };
+        vec![
+            render("Fig. 12a — power vs clauses (6 classes, 1 M inf/s)", "clauses", &self.vs_clauses),
+            render("Fig. 12b — power vs classes (100 clauses, 1 M inf/s)", "classes", &self.vs_classes),
+        ]
+    }
+
+    /// Paper claims as predicates.
+    pub fn shape_holds(&self) -> bool {
+        let lo: Vec<&PowerPoint> =
+            self.vs_clauses.iter().filter(|p| p.activity == 0.1).collect();
+        let hi: Vec<&PowerPoint> =
+            self.vs_clauses.iter().filter(|p| p.activity == 0.5).collect();
+        // α=0.1: adder popcount cheaper at every size.
+        let adder_wins_low = lo.iter().all(|p| p.generic_mw < p.td_mw);
+        // α=0.5: TD cheaper at every size.
+        let td_wins_high = hi.iter().all(|p| p.td_mw < p.generic_mw);
+        // TD is activity-insensitive: ≤5 % change across α.
+        let td_stable = lo.iter().zip(&hi).all(|(l, h)| {
+            (l.td_mw - h.td_mw).abs() / l.td_mw.max(1e-12) < 0.05
+        });
+        // Adder is activity-sensitive: ≥2.5× change.
+        let adder_sensitive = lo.iter().zip(&hi).all(|(l, h)| h.generic_mw > 2.5 * l.generic_mw);
+        adder_wins_low && td_wins_high && td_stable && adder_sensitive
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_crossover_and_stability() {
+        assert!(run().shape_holds());
+    }
+
+    #[test]
+    fn power_grows_with_model_size() {
+        let r = run();
+        let lo: Vec<_> = r.vs_clauses.iter().filter(|p| p.activity == 0.1).collect();
+        assert!(lo.last().unwrap().td_mw > lo.first().unwrap().td_mw);
+        assert!(lo.last().unwrap().generic_mw > lo.first().unwrap().generic_mw);
+    }
+}

@@ -1,0 +1,236 @@
+//! Table I: dataset / TM / PDL details — including the paper's trial-and-
+//! error tuning of the high-latency net delay to the minimum that achieves
+//! *lossless accuracy* (§IV-B).
+//!
+//! For each trained configuration we: evaluate the software model on its
+//! test set; then sweep the high-latency routing target upward, rebuilding
+//! the flow + PDLs + arbiter tree each time, until the simulated hardware's
+//! classification accuracy matches the software accuracy (ties at the
+//! arbiter may legitimately break either way, so the criterion is equal
+//! accuracy, not per-sample agreement — exactly the paper's "lossless
+//! accuracy" notion).
+
+use anyhow::Result;
+
+use crate::asynctm::AsyncTmEngine;
+use crate::baselines::DesignParams;
+use crate::fabric::Device;
+use crate::flow::FlowConfig;
+use crate::tm::{Manifest, TestSet, TmModel};
+use crate::util::Ps;
+
+use super::Table;
+
+/// Tuning outcome for one configuration.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub name: String,
+    pub dataset: String,
+    pub n_classes: usize,
+    pub n_features: usize,
+    pub clauses_per_class: usize,
+    pub t_param: f64,
+    pub s_param: f64,
+    pub sw_accuracy: f64,
+    pub paper_accuracy: f64,
+    /// Tuned net delays (Table I semantics).
+    pub lo_net: Ps,
+    pub hi_net: Ps,
+    pub hw_accuracy: f64,
+}
+
+pub struct Table1Result {
+    pub rows: Vec<Table1Row>,
+}
+
+/// Hardware accuracy of one engine over precomputed clause bits.
+fn hw_accuracy(
+    engine: &mut AsyncTmEngine,
+    clause_bits: &[Vec<Vec<bool>>],
+    labels: &[usize],
+) -> f64 {
+    let mut correct = 0usize;
+    for (bits, &y) in clause_bits.iter().zip(labels) {
+        if engine.infer(bits).winner == y {
+            correct += 1;
+        }
+    }
+    correct as f64 / clause_bits.len() as f64
+}
+
+/// Tune the high-latency target for one model; returns (hi, hw_accuracy).
+pub fn tune_hi_delay(
+    model: &TmModel,
+    test: &TestSet,
+    max_samples: usize,
+    die_seed: u64,
+) -> Result<(Ps, f64, f64)> {
+    // Samples whose top class sum is *tied* are excluded: argmax on a tie
+    // is a coin flip in hardware (arbiter metastability) and an arbitrary
+    // convention in software (paper footnote 1's "classification
+    // metastability") — no delay tuning can make them agree.
+    let mut xs: Vec<&Vec<bool>> = Vec::new();
+    let mut ys: Vec<usize> = Vec::new();
+    for (x, &y) in test.x.iter().zip(&test.y) {
+        if xs.len() >= max_samples {
+            break;
+        }
+        let sums = model.class_sums(x);
+        let top = *sums.iter().max().unwrap();
+        if sums.iter().filter(|&&s| s == top).count() == 1 {
+            xs.push(x);
+            ys.push(y);
+        }
+    }
+    let n = xs.len();
+    anyhow::ensure!(n > 0, "every test sample is argmax-tied");
+    // Software reference accuracy on the same subset.
+    let sw_correct = xs
+        .iter()
+        .zip(&ys)
+        .filter(|(x, &y)| model.predict(x) == y)
+        .count();
+    let sw_acc = sw_correct as f64 / n as f64;
+    // Clause bits are delay-independent: compute once.
+    let clause_bits: Vec<Vec<Vec<bool>>> = xs.iter().map(|x| model.clause_bits(x)).collect();
+
+    let device = Device::xc7z020();
+    let params = DesignParams::from_model(model);
+    // The paper's sweep: smallest-possible low net, grow the high net until
+    // lossless. Candidates step by 40 ps from just above the pin floor.
+    for hi in (440..=1100).step_by(40) {
+        let cfg = FlowConfig {
+            lo_target: Ps(380),
+            hi_target: Ps(hi),
+            granularity: Ps(5),
+            variation: crate::fabric::VariationParams::default(),
+            die_seed,
+        };
+        let mut engine = AsyncTmEngine::build(&device, &params, &cfg, die_seed)?;
+        let acc = hw_accuracy(&mut engine, &clause_bits, &ys);
+        if acc >= sw_acc {
+            return Ok((Ps(hi), acc, sw_acc));
+        }
+    }
+    anyhow::bail!("no lossless hi delay found up to 1100 ps for {}", model.name)
+}
+
+/// Run Table I for every model in the manifest.
+pub fn run(manifest: &Manifest, max_samples: usize) -> Result<Table1Result> {
+    let mut rows = Vec::new();
+    for entry in &manifest.models {
+        let model = TmModel::load(&entry.model_path)?;
+        let test = TestSet::load(&entry.test_data_path)?;
+        let (hi, hw_acc, sw_acc) = tune_hi_delay(&model, &test, max_samples, 1)?;
+        rows.push(Table1Row {
+            name: entry.name.clone(),
+            dataset: entry.dataset.clone(),
+            n_classes: entry.n_classes,
+            n_features: entry.n_features,
+            clauses_per_class: entry.clauses_per_class,
+            t_param: entry.t,
+            s_param: entry.s,
+            sw_accuracy: sw_acc * 100.0,
+            paper_accuracy: entry.paper_accuracy,
+            lo_net: Ps(380),
+            hi_net: hi,
+            hw_accuracy: hw_acc * 100.0,
+        });
+    }
+    Ok(Table1Result { rows })
+}
+
+impl Table1Result {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Table I — dataset, TM model and PDL details",
+            &[
+                "config", "dataset", "classes", "bool features", "clauses/class",
+                "(T,s)", "sw acc %", "paper acc %", "low net (ps)", "high net (ps)",
+                "hw acc %",
+            ],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.name.clone(),
+                r.dataset.clone(),
+                r.n_classes.to_string(),
+                r.n_features.to_string(),
+                r.clauses_per_class.to_string(),
+                format!("({},{})", r.t_param, r.s_param),
+                format!("{:.1}", r.sw_accuracy),
+                format!("{:.1}", r.paper_accuracy),
+                r.lo_net.as_ps().to_string(),
+                r.hi_net.as_ps().to_string(),
+                format!("{:.1}", r.hw_accuracy),
+            ]);
+        }
+        let mean_hi =
+            self.rows.iter().map(|r| r.hi_net.as_ps_f64()).sum::<f64>() / self.rows.len().max(1) as f64;
+        t.note(format!(
+            "Mean tuned delays: low 380 ps / high {mean_hi:.1} ps (paper averages: 384.5 / 617.6 ps). \
+             Hardware argmax is lossless at the tuned delta for every configuration."
+        ));
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::model::TmModel;
+
+    fn toy_model() -> TmModel {
+        // 2 classes × 4 clauses over 3 features, hand-wired so that class 0
+        // wins iff x0 ∧ x1, class 1 wins iff ¬x0.
+        TmModel::assemble(
+            "toy".into(),
+            2,
+            3,
+            4,
+            vec![
+                vec![true, false, false, false, false, false], // +: x0
+                vec![false, false, false, false, false, true], // −: ~x2
+                vec![false, true, false, false, false, false], // +: x1
+                vec![false, false, false, false, false, false],
+                vec![false, false, false, true, false, false], // +: ~x0
+                vec![false, false, false, false, false, false],
+                vec![false, false, false, true, false, false], // +: ~x0
+                vec![false, false, true, false, false, false], // −: x2
+            ],
+            vec![1, -1, 1, -1, 1, -1, 1, -1],
+            vec![true, true, true, false, true, false, true, true],
+            100.0,
+        )
+    }
+
+    fn toy_testset(model: &TmModel) -> TestSet {
+        // Labels = the model's own predictions ⇒ sw accuracy is 100 % and
+        // "lossless" means the hardware matches the model exactly.
+        let xs: Vec<Vec<bool>> = (0..8)
+            .map(|i| vec![i & 1 != 0, i & 2 != 0, i & 4 != 0])
+            .collect();
+        let ys: Vec<usize> = xs.iter().map(|x| model.predict(x)).collect();
+        TestSet { name: "toy".into(), n_features: 3, x: xs, y: ys }
+    }
+
+    #[test]
+    fn tuning_finds_lossless_delta() {
+        let model = toy_model();
+        let test = toy_testset(&model);
+        let (hi, hw_acc, sw_acc) = tune_hi_delay(&model, &test, 8, 5).unwrap();
+        assert_eq!(sw_acc, 1.0);
+        assert_eq!(hw_acc, 1.0, "tuned delta must be lossless");
+        assert!(hi >= Ps(440));
+    }
+
+    #[test]
+    fn tuned_delta_consistent_across_dies() {
+        let model = toy_model();
+        let test = toy_testset(&model);
+        for die in [2u64, 9, 77] {
+            let (_, hw_acc, _) = tune_hi_delay(&model, &test, 8, die).unwrap();
+            assert_eq!(hw_acc, 1.0, "die {die}");
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Process / voltage / temperature variation model.
+//!
+//! The paper's Fig. 6 experiment measures a physically implemented PDL on a
+//! real board, where intra-die process variation, voltage and temperature
+//! perturb every delay element differently; its §III-B.4 argues the PDL
+//! stays monotonic in Hamming weight provided the hi−lo delay gap is large
+//! enough relative to that noise. This module is the stand-in for the real
+//! silicon (DESIGN.md §1): a deterministic, seedable variation field over
+//! the device that multiplies nominal delays.
+//!
+//! Structure follows the standard intra-die decomposition:
+//!   factor(site) = 1 + gradient(x, y) + random(site)
+//! where `gradient` is a smooth across-die systematic component and
+//! `random` is per-site white noise. PVT corners scale everything globally.
+
+use crate::util::{Ps, SplitMix64};
+
+use super::Site;
+
+/// Global operating corner: scales all delays (slow corner > 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PvtCorner {
+    /// Supply voltage scaling: delay ∝ ~1/(V/V_nom)^1.3 around nominal.
+    pub v_scale: f64,
+    /// Junction temperature in °C (delay grows mildly with T at 28 nm).
+    pub temp_c: f64,
+}
+
+impl PvtCorner {
+    pub fn nominal() -> Self {
+        Self { v_scale: 1.0, temp_c: 25.0 }
+    }
+
+    pub fn slow() -> Self {
+        Self { v_scale: 0.95, temp_c: 85.0 }
+    }
+
+    pub fn fast() -> Self {
+        Self { v_scale: 1.05, temp_c: 0.0 }
+    }
+
+    /// Multiplicative delay factor of this corner.
+    pub fn delay_factor(&self) -> f64 {
+        let v = self.v_scale.max(0.5).powf(-1.3);
+        let t = 1.0 + 0.0006 * (self.temp_c - 25.0);
+        v * t
+    }
+}
+
+/// Parameters of the intra-die variation field.
+#[derive(Debug, Clone, Copy)]
+pub struct VariationParams {
+    /// σ of the per-site random component (fraction of nominal delay).
+    /// 28 nm LUT+routing paths show a few percent; default 2 %.
+    pub sigma_random: f64,
+    /// Peak-to-peak amplitude of the smooth across-die gradient (fraction).
+    pub gradient_amplitude: f64,
+    /// PVT corner.
+    pub corner: PvtCorner,
+}
+
+impl Default for VariationParams {
+    fn default() -> Self {
+        Self {
+            sigma_random: 0.02,
+            gradient_amplitude: 0.015,
+            corner: PvtCorner::nominal(),
+        }
+    }
+}
+
+impl VariationParams {
+    /// An idealized device with no variation (for unit tests and for
+    /// isolating algorithmic behaviour from noise).
+    pub fn none() -> Self {
+        Self { sigma_random: 0.0, gradient_amplitude: 0.0, corner: PvtCorner::nominal() }
+    }
+}
+
+/// A sampled variation field for one (simulated) die.
+#[derive(Debug, Clone)]
+pub struct VariationModel {
+    params: VariationParams,
+    seed: u64,
+    /// Random phase of the systematic gradient, per die.
+    phase_x: f64,
+    phase_y: f64,
+}
+
+impl VariationModel {
+    /// `seed` identifies the die: two models with different seeds behave
+    /// like two different physical chips (device-to-device variation).
+    pub fn new(seed: u64, params: VariationParams) -> Self {
+        let mut r = SplitMix64::new(seed ^ 0xD1E_5EED);
+        let phase_x = r.next_f64() * std::f64::consts::TAU;
+        let phase_y = r.next_f64() * std::f64::consts::TAU;
+        Self { params, seed, phase_x, phase_y }
+    }
+
+    pub fn params(&self) -> &VariationParams {
+        &self.params
+    }
+
+    /// Smooth systematic component in [-amp/2, amp/2].
+    fn gradient(&self, site: Site) -> f64 {
+        let amp = self.params.gradient_amplitude;
+        if amp == 0.0 {
+            return 0.0;
+        }
+        // One-ish spatial period across the die in each axis.
+        let fx = (site.x as f64 / 50.0) * std::f64::consts::TAU + self.phase_x;
+        let fy = (site.y as f64 / 133.0) * std::f64::consts::TAU + self.phase_y;
+        (fx.sin() + fy.cos()) * (amp / 4.0)
+    }
+
+    /// Per-site random component, deterministic in (die seed, site, tag).
+    /// `tag` distinguishes multiple delay arcs at the same site (e.g. the
+    /// low- and high-latency nets of one delay element vary independently).
+    fn random(&self, site: Site, tag: u64) -> f64 {
+        if self.params.sigma_random == 0.0 {
+            return 0.0;
+        }
+        let key = (self.seed << 1)
+            ^ ((site.x as u64) << 40)
+            ^ ((site.y as u64) << 24)
+            ^ ((site.slice as u64) << 16)
+            ^ ((site.lut as u64) << 8)
+            ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut r = SplitMix64::new(key);
+        // Warm the stream so low-entropy keys decorrelate.
+        r.next_u64();
+        r.next_gauss() * self.params.sigma_random
+    }
+
+    /// Multiplicative delay factor for a delay arc at `site`.
+    pub fn factor(&self, site: Site, tag: u64) -> f64 {
+        let f = 1.0 + self.gradient(site) + self.random(site, tag);
+        f.max(0.5) * self.params.corner.delay_factor()
+    }
+
+    /// Apply variation to a nominal delay.
+    pub fn apply(&self, nominal: Ps, site: Site, tag: u64) -> Ps {
+        nominal.scale(self.factor(site, tag))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn site(x: u16, y: u16) -> Site {
+        Site { x, y, slice: 0, lut: 1 }
+    }
+
+    #[test]
+    fn no_variation_is_identity_at_nominal() {
+        let m = VariationModel::new(1, VariationParams::none());
+        assert_eq!(m.apply(Ps(500), site(3, 7), 0), Ps(500));
+    }
+
+    #[test]
+    fn deterministic_per_site_and_tag() {
+        let m = VariationModel::new(42, VariationParams::default());
+        let a = m.factor(site(10, 20), 0);
+        let b = m.factor(site(10, 20), 0);
+        assert_eq!(a, b);
+        // Different tag ⇒ (almost surely) different factor.
+        assert_ne!(m.factor(site(10, 20), 0), m.factor(site(10, 20), 1));
+        // Different die ⇒ different field.
+        let m2 = VariationModel::new(43, VariationParams::default());
+        assert_ne!(m.factor(site(10, 20), 0), m2.factor(site(10, 20), 0));
+    }
+
+    #[test]
+    fn random_component_has_requested_sigma() {
+        let m = VariationModel::new(7, VariationParams {
+            sigma_random: 0.03,
+            gradient_amplitude: 0.0,
+            corner: PvtCorner::nominal(),
+        });
+        let xs: Vec<f64> = (0..4000)
+            .map(|i| m.factor(site((i % 50) as u16, (i / 50) as u16), i as u64) - 1.0)
+            .collect();
+        let sd = crate::util::stats::std_dev(&xs);
+        assert!((sd - 0.03).abs() < 0.004, "σ={sd}");
+        assert!(crate::util::stats::mean(&xs).abs() < 0.004);
+    }
+
+    #[test]
+    fn corners_order_delays() {
+        let slow = PvtCorner::slow().delay_factor();
+        let nom = PvtCorner::nominal().delay_factor();
+        let fast = PvtCorner::fast().delay_factor();
+        assert!(fast < nom && nom < slow, "{fast} {nom} {slow}");
+    }
+
+    #[test]
+    fn gradient_is_smooth() {
+        // Neighbouring sites see nearly identical systematic components.
+        let m = VariationModel::new(9, VariationParams {
+            sigma_random: 0.0,
+            gradient_amplitude: 0.02,
+            corner: PvtCorner::nominal(),
+        });
+        let a = m.factor(site(10, 20), 0);
+        let b = m.factor(site(10, 21), 0);
+        assert!((a - b).abs() < 0.002);
+    }
+}

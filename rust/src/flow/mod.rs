@@ -1,0 +1,141 @@
+//! The paper's FPGA implementation flow (Fig. 3), as executable passes.
+//!
+//! ```text
+//!   placement  →  pin assignment  →  routing  →  HW-response evaluation
+//!   (Fig. 4)      (A6/A5, Fig. 2)    (delay ranges, Fig. 5)   (Fig. 6)
+//! ```
+//!
+//! Each pass mirrors one step the paper performs with Vivado Tcl scripts:
+//!
+//! * [`placement`] — symmetric vertical PDL columns, one delay element per
+//!   CLB at an identical relative (slice, LUT) position, cascaded elements
+//!   in adjacent CLBs (paper §III-B.1, Fig. 4);
+//! * [`pins`] — low-/high-latency nets onto the fastest / second-fastest
+//!   physical LUT pins (paper §III-B.2, UG912);
+//! * [`routing`] — delay-range-constrained routing of both nets of every
+//!   element, identical constraints across all PDLs so routing is symmetric
+//!   (paper §III-B.3, Fig. 5), on top of the [`crate::fabric`] variation
+//!   model;
+//! * [`skew`] — the audit the paper argues is mandatory: per-stage and
+//!   cumulative skew between PDLs, and the Hamming-weight monotonicity
+//!   check of §III-B.4 (Spearman ρ, Fig. 6).
+//!
+//! The flow's product is a [`routing::RoutedPdl`] per class, consumed by
+//! [`crate::pdl::Pdl`].
+
+pub mod placement;
+pub mod pins;
+pub mod routing;
+pub mod skew;
+
+use crate::fabric::{Device, VariationModel, VariationParams};
+use crate::util::Ps;
+
+pub use placement::{place_pdls, PdlPlacement, PlacementError};
+pub use pins::PinAssignment;
+pub use routing::{route_pdl, RoutedElement, RoutedPdl, RoutingError};
+pub use skew::{hamming_response, skew_report, HammingResponse, SkewReport};
+
+/// Full configuration of one flow run.
+#[derive(Debug, Clone)]
+pub struct FlowConfig {
+    /// Target *net* delay of the low-latency input (the flow routes the
+    /// low net as fast as it can and clamps to this if larger).
+    pub lo_target: Ps,
+    /// Target *net* delay of the high-latency input — the paper tunes this
+    /// (trial and error, §IV-B) until accuracy is lossless.
+    pub hi_target: Ps,
+    /// Router delay granularity: achieved delays quantize to this step.
+    pub granularity: Ps,
+    /// Intra-die variation / PVT corner of the die being targeted.
+    pub variation: VariationParams,
+    /// Die seed (which simulated chip we are placing onto).
+    pub die_seed: u64,
+}
+
+impl FlowConfig {
+    /// Defaults matching Table I's averages: low 384.5 ps, high 617.6 ps.
+    /// (380 ps is the fabric's minimum achievable low-latency net: A6 base
+    /// reach + one switchbox hop, quantized.)
+    pub fn table1_default() -> Self {
+        Self {
+            lo_target: Ps(380),
+            hi_target: Ps(618),
+            granularity: Ps(5),
+            variation: VariationParams::default(),
+            die_seed: 1,
+        }
+    }
+
+    /// Idealized flow (no variation) for algorithm-level tests.
+    pub fn ideal(lo: Ps, hi: Ps) -> Self {
+        Self {
+            lo_target: lo,
+            hi_target: hi,
+            granularity: Ps(1),
+            variation: VariationParams::none(),
+            die_seed: 0,
+        }
+    }
+
+    pub fn with_hi_target(mut self, hi: Ps) -> Self {
+        self.hi_target = hi;
+        self
+    }
+}
+
+/// Run the complete flow: place `n_pdls` PDLs of `n_elements` each, assign
+/// pins, route under `cfg`, and return the routed PDLs.
+pub fn run(
+    device: &Device,
+    n_pdls: usize,
+    n_elements: usize,
+    cfg: &FlowConfig,
+) -> Result<Vec<RoutedPdl>, FlowError> {
+    let placements = place_pdls(device, n_pdls, n_elements)?;
+    let pins = PinAssignment::fastest_pair();
+    let var = VariationModel::new(cfg.die_seed, cfg.variation);
+    let mut out = Vec::with_capacity(n_pdls);
+    for p in &placements {
+        out.push(route_pdl(device, p, &pins, cfg, &var)?);
+    }
+    Ok(out)
+}
+
+/// Errors from any pass of the flow.
+#[derive(Debug, thiserror::Error)]
+pub enum FlowError {
+    #[error("placement failed: {0}")]
+    Placement(#[from] PlacementError),
+    #[error("routing failed: {0}")]
+    Routing(#[from] RoutingError),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_flow_produces_symmetric_pdls() {
+        let device = Device::xc7z020();
+        let cfg = FlowConfig::ideal(Ps(380), Ps(620));
+        let pdls = run(&device, 3, 50, &cfg).unwrap();
+        assert_eq!(pdls.len(), 3);
+        // With no variation, all PDLs must be delay-identical stage by stage.
+        for i in 0..50 {
+            assert_eq!(pdls[0].elements[i].lo_total, pdls[1].elements[i].lo_total);
+            assert_eq!(pdls[1].elements[i].hi_total, pdls[2].elements[i].hi_total);
+        }
+    }
+
+    #[test]
+    fn flow_respects_targets_in_ideal_conditions() {
+        let device = Device::xc7z020();
+        let cfg = FlowConfig::ideal(Ps(400), Ps(700));
+        let pdls = run(&device, 1, 20, &cfg).unwrap();
+        for e in &pdls[0].elements {
+            assert_eq!(e.lo_net, Ps(400));
+            assert_eq!(e.hi_net, Ps(700));
+        }
+    }
+}

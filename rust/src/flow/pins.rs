@@ -1,0 +1,79 @@
+//! Pin-assignment pass (paper §III-B.2).
+//!
+//! Each delay element is a LUT configured as a 2:1 mux whose two data
+//! inputs arrive over the low- and high-latency nets. The paper audits the
+//! minimal net delay of every physical pin (its Fig. 2 inset) and maps the
+//! low-latency net to the *fastest* pin and the high-latency net to the
+//! *second-fastest* — minimizing overall latency while keeping the delta
+//! between the two nets controllable by routing alone.
+
+use crate::fabric::LutPin;
+use crate::util::Ps;
+
+/// The chosen physical pins for the two inputs of every delay element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PinAssignment {
+    /// Pin carrying the low-latency net.
+    pub lo_pin: LutPin,
+    /// Pin carrying the high-latency net.
+    pub hi_pin: LutPin,
+}
+
+impl PinAssignment {
+    /// The paper's assignment: fastest (A6) and second-fastest (A5) pins.
+    pub fn fastest_pair() -> Self {
+        let ranked = LutPin::ranked();
+        Self { lo_pin: ranked[0], hi_pin: ranked[1] }
+    }
+
+    /// Minimum achievable net delays implied by the pin choice: routing can
+    /// only *add* delay on top of the pin's base reach.
+    pub fn min_net_delays(&self) -> (Ps, Ps) {
+        (self.lo_pin.base_net_delay(), self.hi_pin.base_net_delay())
+    }
+
+    /// The structural delta floor between the nets if both were routed at
+    /// their minimum (the granularity the routing pass must beat).
+    pub fn min_delta(&self) -> Ps {
+        self.hi_pin
+            .base_net_delay()
+            .saturating_sub(self.lo_pin.base_net_delay())
+    }
+}
+
+/// Audit table of all pins ranked by minimal net delay — the data behind
+/// the paper's pinout-selection figure.
+pub fn pin_audit() -> Vec<(LutPin, Ps)> {
+    LutPin::ranked()
+        .into_iter()
+        .map(|p| (p, p.base_net_delay()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fastest_pair_is_a6_a5() {
+        let pa = PinAssignment::fastest_pair();
+        assert_eq!(pa.lo_pin, LutPin::A6);
+        assert_eq!(pa.hi_pin, LutPin::A5);
+        assert!(pa.min_net_delays().0 < pa.min_net_delays().1);
+    }
+
+    #[test]
+    fn audit_is_sorted_fastest_first() {
+        let audit = pin_audit();
+        assert_eq!(audit.len(), 6);
+        for w in audit.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert_eq!(audit[0].0, LutPin::A6);
+    }
+
+    #[test]
+    fn min_delta_positive() {
+        assert!(PinAssignment::fastest_pair().min_delta() > Ps::ZERO);
+    }
+}

@@ -1,0 +1,220 @@
+//! Placement pass (paper §III-B.1, Fig. 4).
+//!
+//! PDLs are aligned vertically: each delay element occupies the same
+//! designated LUT of the same slice in its CLB, cascaded elements sit in
+//! *adjacent* CLBs (minimizing inter-element net length), and every PDL is
+//! mapped to CLB columns positioned identically relative to their
+//! neighbouring switchboxes. When a PDL is longer than the device column,
+//! the chain folds serpentine-style into the next column — the fold pattern
+//! is identical across PDLs, preserving the symmetry the routing pass
+//! relies on.
+
+use crate::fabric::{Device, Site};
+
+/// The designated relative position of every delay element (Fig. 4:
+/// "a designated LUT in a particular slice of each CLB").
+pub const ELEMENT_SLICE: u8 = 0;
+pub const ELEMENT_LUT: u8 = 1;
+
+/// Columns consumed per PDL (serpentine fold width): just wide enough for
+/// the chain, so many short PDLs (large class counts) and few long PDLs
+/// (large clause counts) both fit the device.
+fn cols_per_pdl(n_elements: usize, rows: u16) -> u16 {
+    (n_elements.div_ceil(rows.max(1) as usize)).max(1) as u16
+}
+
+/// One placed PDL: the ordered CLB sites of its delay elements.
+#[derive(Debug, Clone)]
+pub struct PdlPlacement {
+    /// Index of this PDL (class index in the TM case study).
+    pub index: usize,
+    /// Base CLB column of this PDL's serpentine strip.
+    pub base_col: u16,
+    /// Site of each delay element, in chain order.
+    pub sites: Vec<Site>,
+}
+
+impl PdlPlacement {
+    /// Chain-order adjacency audit: max CLB distance between consecutive
+    /// elements (1 everywhere except at serpentine folds, where it is also
+    /// 1 because the fold moves one column sideways).
+    pub fn max_hop(&self) -> u32 {
+        self.sites
+            .windows(2)
+            .map(|w| w[0].clb_distance(w[1]))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// The fold pattern as (column offset, row) pairs — two placements are
+    /// geometrically symmetric iff these are identical.
+    pub fn pattern(&self) -> Vec<(u16, u16)> {
+        self.sites
+            .iter()
+            .map(|s| (s.x - self.base_col, s.y))
+            .collect()
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum PlacementError {
+    #[error("{needed} PDLs × {cols_per} columns exceed device width {available}")]
+    TooManyPdls { needed: usize, cols_per: u16, available: u16 },
+    #[error("PDL of {elements} elements does not fit {capacity} sites in {cols} columns")]
+    PdlTooLong { elements: usize, capacity: usize, cols: u16 },
+    #[error("zero-length PDL")]
+    Empty,
+}
+
+/// Place `n_pdls` PDLs of `n_elements` delay elements each.
+///
+/// Every PDL gets its own `COLS_PER_PDL`-column strip; within the strip the
+/// chain walks up column 0, then down column 1 (serpentine). All PDLs share
+/// the same fold pattern ⇒ identical geometry relative to their switchboxes.
+pub fn place_pdls(
+    device: &Device,
+    n_pdls: usize,
+    n_elements: usize,
+) -> Result<Vec<PdlPlacement>, PlacementError> {
+    if n_elements == 0 {
+        return Err(PlacementError::Empty);
+    }
+    let cols_per = cols_per_pdl(n_elements, device.rows);
+    let needed_cols = n_pdls as u16 * cols_per;
+    if needed_cols > device.cols {
+        return Err(PlacementError::TooManyPdls {
+            needed: n_pdls,
+            cols_per,
+            available: device.cols,
+        });
+    }
+    let capacity = (device.rows as usize) * (cols_per as usize);
+    if n_elements > capacity {
+        return Err(PlacementError::PdlTooLong {
+            elements: n_elements,
+            capacity,
+            cols: cols_per,
+        });
+    }
+
+    let mut out = Vec::with_capacity(n_pdls);
+    for p in 0..n_pdls {
+        let base_col = p as u16 * cols_per;
+        let mut sites = Vec::with_capacity(n_elements);
+        for i in 0..n_elements {
+            let (dx, y) = serpentine(i, device.rows);
+            sites.push(Site {
+                x: base_col + dx,
+                y,
+                slice: ELEMENT_SLICE,
+                lut: ELEMENT_LUT,
+            });
+        }
+        out.push(PdlPlacement { index: p, base_col, sites });
+    }
+    Ok(out)
+}
+
+/// Serpentine coordinates: walk up column 0, fold, walk down column 1.
+fn serpentine(i: usize, rows: u16) -> (u16, u16) {
+    let rows = rows as usize;
+    let col = i / rows;
+    let pos = i % rows;
+    let y = if col % 2 == 0 { pos } else { rows - 1 - pos };
+    (col as u16, y as u16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn adjacent_elements_are_adjacent_clbs() {
+        let d = Device::xc7z020();
+        let pls = place_pdls(&d, 4, 150).unwrap();
+        for p in &pls {
+            assert_eq!(p.max_hop(), 1, "cascaded elements must sit in adjacent CLBs");
+        }
+    }
+
+    #[test]
+    fn placements_are_geometrically_symmetric() {
+        let d = Device::xc7z020();
+        let pls = place_pdls(&d, 6, 150).unwrap();
+        let pattern = pls[0].pattern();
+        for p in &pls[1..] {
+            assert_eq!(p.pattern(), pattern, "all PDLs must share the fold pattern");
+        }
+    }
+
+    #[test]
+    fn all_elements_at_designated_lut() {
+        let d = Device::xc7z020();
+        for p in place_pdls(&d, 3, 140).unwrap() {
+            for s in &p.sites {
+                assert_eq!(s.rel(), (ELEMENT_SLICE, ELEMENT_LUT));
+                assert!(d.contains(*s));
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_oversize_requests() {
+        let d = Device::xc7z020();
+        // 51 one-column PDLs exceed the 50-column device.
+        assert!(matches!(
+            place_pdls(&d, 51, 10),
+            Err(PlacementError::TooManyPdls { .. })
+        ));
+        // 26 two-column PDLs exceed it as well.
+        assert!(matches!(
+            place_pdls(&d, 26, 150),
+            Err(PlacementError::TooManyPdls { .. })
+        ));
+        assert!(matches!(place_pdls(&d, 1, 0), Err(PlacementError::Empty)));
+    }
+
+    #[test]
+    fn wide_and_narrow_workloads_fit() {
+        let d = Device::xc7z020();
+        // Fig. 10a extreme: 6 classes × 400 clauses.
+        let long = place_pdls(&d, 6, 400).unwrap();
+        assert_eq!(long[0].sites.len(), 400);
+        assert_eq!(long[0].max_hop(), 1);
+        // Fig. 10b extreme: 32 classes × 100 clauses.
+        let many = place_pdls(&d, 32, 100).unwrap();
+        assert_eq!(many.len(), 32);
+    }
+
+    #[test]
+    fn prop_no_site_shared_between_pdls() {
+        prop::check("placement sites disjoint", 40, |g| {
+            let d = Device::xc7z020();
+            let n_pdls = g.int(1, 10) as usize;
+            let n_el = g.int(1, 260) as usize;
+            if let Ok(pls) = place_pdls(&d, n_pdls, n_el) {
+                let mut seen = std::collections::HashSet::new();
+                for p in &pls {
+                    for s in &p.sites {
+                        assert!(seen.insert(*s), "site {s:?} placed twice");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_serpentine_is_injective_and_adjacent() {
+        prop::check("serpentine adjacency", 30, |g| {
+            let rows = g.int(2, 200) as u16;
+            let n = g.int(2, 2 * rows as i64) as usize;
+            let coords: Vec<_> = (0..n).map(|i| serpentine(i, rows)).collect();
+            for w in coords.windows(2) {
+                let dx = w[0].0.abs_diff(w[1].0);
+                let dy = w[0].1.abs_diff(w[1].1);
+                assert_eq!(dx + dy, 1, "chain must step one CLB at a time");
+            }
+        });
+    }
+}

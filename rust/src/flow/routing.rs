@@ -1,0 +1,246 @@
+//! Routing pass (paper §III-B.3, Fig. 5).
+//!
+//! For every delay element the low- and high-latency nets are routed under
+//! *delay-range constraints* (the paper's `set_property FIXED_ROUTE` /
+//! delay-window Tcl idiom): the router detours the net until its delay
+//! falls inside the requested window, in steps of the routing granularity.
+//! Because the placement pass put every element at the same geometric
+//! position relative to its switchbox, applying identical windows yields
+//! symmetric routing across PDLs — *up to* intra-die variation, which this
+//! model samples per arc from [`crate::fabric::VariationModel`] (that
+//! residual asymmetry is exactly what Fig. 6 studies).
+
+use crate::fabric::{Device, Site, VariationModel, LUT_LOGIC_DELAY};
+use crate::util::Ps;
+
+use super::pins::PinAssignment;
+use super::placement::PdlPlacement;
+use super::FlowConfig;
+
+/// Routed delay arcs of one delay element.
+#[derive(Debug, Clone, Copy)]
+pub struct RoutedElement {
+    pub site: Site,
+    /// Achieved *net* delays (nominal, post-quantization, pre-variation).
+    pub lo_net: Ps,
+    pub hi_net: Ps,
+    /// Total stage traversal delays (net + LUT logic, with variation):
+    /// the per-stage delay the PDL adds when the mux selects each input.
+    pub lo_total: Ps,
+    pub hi_total: Ps,
+}
+
+impl RoutedElement {
+    /// The usable timing resolution of this stage.
+    pub fn delta(&self) -> Ps {
+        self.hi_total.saturating_sub(self.lo_total)
+    }
+}
+
+/// One fully routed PDL.
+#[derive(Debug, Clone)]
+pub struct RoutedPdl {
+    pub index: usize,
+    pub elements: Vec<RoutedElement>,
+}
+
+impl RoutedPdl {
+    pub fn len(&self) -> usize {
+        self.elements.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.elements.is_empty()
+    }
+
+    /// Cumulative delay if every stage selects the low-latency input
+    /// (fastest possible traversal — all-ones input on a positive PDL).
+    pub fn min_traversal(&self) -> Ps {
+        self.elements.iter().map(|e| e.lo_total).sum()
+    }
+
+    /// Cumulative delay if every stage selects the high-latency input
+    /// (the critical path the paper's §IV-A discusses).
+    pub fn max_traversal(&self) -> Ps {
+        self.elements.iter().map(|e| e.hi_total).sum()
+    }
+
+    /// Mean per-stage hi−lo delta (the PDL's timing resolution).
+    pub fn mean_delta(&self) -> Ps {
+        if self.elements.is_empty() {
+            return Ps::ZERO;
+        }
+        let sum: u64 = self.elements.iter().map(|e| e.delta().0).sum();
+        Ps(sum / self.elements.len() as u64)
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum RoutingError {
+    #[error("low-latency target {target} below minimum achievable {min} for pin")]
+    LoTargetTooFast { target: Ps, min: Ps },
+    #[error("high-latency target {target} below minimum achievable {min} for pin")]
+    HiTargetTooFast { target: Ps, min: Ps },
+    #[error("high-latency target {hi} not above low-latency target {lo}")]
+    InvertedTargets { lo: Ps, hi: Ps },
+}
+
+/// Quantize `target` up to the router granularity grid.
+fn quantize_up(target: Ps, granularity: Ps) -> Ps {
+    let g = granularity.0.max(1);
+    Ps(target.0.div_ceil(g) * g)
+}
+
+/// Route one PDL under the config's delay windows.
+///
+/// Variation tags: arc `2*i` is element `i`'s low net, `2*i + 1` its high
+/// net — each arc of each element varies independently, like distinct
+/// physical wire segments.
+pub fn route_pdl(
+    device: &Device,
+    placement: &PdlPlacement,
+    pins: &PinAssignment,
+    cfg: &FlowConfig,
+    variation: &VariationModel,
+) -> Result<RoutedPdl, RoutingError> {
+    let (lo_min, hi_min) = pins.min_net_delays();
+    // Inter-CLB reach: consecutive elements are in adjacent CLBs (placement
+    // invariant), so the net must cross at least one switchbox.
+    let lo_floor = lo_min + device.net_delay(placement.sites[0], placement.sites[1.min(placement.sites.len() - 1)]);
+    let hi_floor = hi_min + device.net_delay(placement.sites[0], placement.sites[1.min(placement.sites.len() - 1)]);
+
+    if cfg.lo_target < lo_floor {
+        return Err(RoutingError::LoTargetTooFast { target: cfg.lo_target, min: lo_floor });
+    }
+    if cfg.hi_target < hi_floor {
+        return Err(RoutingError::HiTargetTooFast { target: cfg.hi_target, min: hi_floor });
+    }
+    if cfg.hi_target <= cfg.lo_target {
+        return Err(RoutingError::InvertedTargets { lo: cfg.lo_target, hi: cfg.hi_target });
+    }
+
+    let lo_net = quantize_up(cfg.lo_target, cfg.granularity);
+    let hi_net = quantize_up(cfg.hi_target, cfg.granularity);
+
+    let elements = placement
+        .sites
+        .iter()
+        .enumerate()
+        .map(|(i, &site)| {
+            let lo_total = variation.apply(lo_net + LUT_LOGIC_DELAY, site, 2 * i as u64);
+            let hi_total = variation.apply(hi_net + LUT_LOGIC_DELAY, site, 2 * i as u64 + 1);
+            RoutedElement { site, lo_net, hi_net, lo_total, hi_total }
+        })
+        .collect();
+
+    Ok(RoutedPdl { index: placement.index, elements })
+}
+
+/// Route the start-distribution and arbiter-side nets: the arbiter's two
+/// NAND gates are placed symmetrically between the PDL end columns, so both
+/// PDL→arbiter nets get the same window. Returns the (identical nominal)
+/// net delay each PDL output sees to the arbiter, with per-arc variation.
+pub fn route_arbiter_net(
+    pdl_end: Site,
+    arbiter_site: Site,
+    device: &Device,
+    variation: &VariationModel,
+    tag: u64,
+) -> Ps {
+    let nominal = device.net_delay(pdl_end, arbiter_site) + Ps(60); // local fanin
+    variation.apply(nominal, arbiter_site, tag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::VariationParams;
+    use crate::flow::placement::place_pdls;
+    use crate::util::prop;
+
+    fn setup(n: usize) -> (Device, PdlPlacement) {
+        let d = Device::xc7z020();
+        let p = place_pdls(&d, 1, n).unwrap().remove(0);
+        (d, p)
+    }
+
+    #[test]
+    fn rejects_impossible_windows() {
+        let (d, p) = setup(10);
+        let pins = PinAssignment::fastest_pair();
+        let var = VariationModel::new(0, VariationParams::none());
+        let too_fast = FlowConfig::ideal(Ps(10), Ps(600));
+        assert!(matches!(
+            route_pdl(&d, &p, &pins, &too_fast, &var),
+            Err(RoutingError::LoTargetTooFast { .. })
+        ));
+        let inverted = FlowConfig::ideal(Ps(600), Ps(500));
+        assert!(matches!(
+            route_pdl(&d, &p, &pins, &inverted, &var),
+            Err(RoutingError::InvertedTargets { .. })
+        ));
+    }
+
+    #[test]
+    fn quantizes_to_granularity() {
+        let (d, p) = setup(5);
+        let pins = PinAssignment::fastest_pair();
+        let var = VariationModel::new(0, VariationParams::none());
+        let mut cfg = FlowConfig::ideal(Ps(401), Ps(633));
+        cfg.granularity = Ps(10);
+        let r = route_pdl(&d, &p, &pins, &cfg, &var).unwrap();
+        assert_eq!(r.elements[0].lo_net, Ps(410));
+        assert_eq!(r.elements[0].hi_net, Ps(640));
+    }
+
+    #[test]
+    fn totals_include_lut_logic_delay() {
+        let (d, p) = setup(5);
+        let pins = PinAssignment::fastest_pair();
+        let var = VariationModel::new(0, VariationParams::none());
+        let cfg = FlowConfig::ideal(Ps(400), Ps(620));
+        let r = route_pdl(&d, &p, &pins, &cfg, &var).unwrap();
+        assert_eq!(r.elements[0].lo_total, Ps(400) + LUT_LOGIC_DELAY);
+        assert_eq!(r.elements[0].hi_total, Ps(620) + LUT_LOGIC_DELAY);
+        assert_eq!(r.min_traversal(), (Ps(400) + LUT_LOGIC_DELAY) * 5);
+        assert_eq!(r.max_traversal(), (Ps(620) + LUT_LOGIC_DELAY) * 5);
+    }
+
+    #[test]
+    fn variation_perturbs_but_preserves_scale() {
+        let (d, p) = setup(150);
+        let pins = PinAssignment::fastest_pair();
+        let var = VariationModel::new(3, VariationParams::default());
+        let cfg = FlowConfig::table1_default();
+        let r = route_pdl(&d, &p, &pins, &cfg, &var).unwrap();
+        let mean_lo = r.elements.iter().map(|e| e.lo_total.0 as f64).sum::<f64>() / 150.0;
+        let nominal = (cfg.lo_target + LUT_LOGIC_DELAY).0 as f64;
+        assert!((mean_lo / nominal - 1.0).abs() < 0.02, "mean {mean_lo} vs {nominal}");
+        // Not all identical (variation active).
+        let first = r.elements[0].lo_total;
+        assert!(r.elements.iter().any(|e| e.lo_total != first));
+    }
+
+    #[test]
+    fn prop_hi_always_above_lo_when_window_wide() {
+        prop::check("hi window stays above lo under variation", 30, |g| {
+            let (d, p) = setup(g.int(5, 150) as usize);
+            let pins = PinAssignment::fastest_pair();
+            let var = VariationModel::new(g.int(0, 1000) as u64, VariationParams::default());
+            let hi = 600 + g.int(0, 400) as u64;
+            let cfg = FlowConfig {
+                lo_target: Ps(380),
+                hi_target: Ps(hi),
+                granularity: Ps(5),
+                variation: VariationParams::default(),
+                die_seed: 0,
+            };
+            let r = route_pdl(&d, &p, &pins, &cfg, &var).unwrap();
+            // With a ≥220 ps window and σ=2 % of ~500 ps ≈ 10 ps, hi > lo
+            // must hold for every stage (>>6σ margin).
+            for e in &r.elements {
+                assert!(e.hi_total > e.lo_total, "stage inversion: {e:?}");
+            }
+        });
+    }
+}

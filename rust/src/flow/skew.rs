@@ -1,0 +1,223 @@
+//! Skew audit + Hamming-weight response evaluation (paper §III-B.4, Fig. 6).
+//!
+//! The paper stresses that PDL popcount only works if placement/routing
+//! keep the PDLs physically uniform: routing delays dominate logic delays
+//! on FPGAs, so an unaudited implementation skews the Hamming-weight →
+//! delay relationship. [`skew_report`] quantifies the residual per-stage
+//! and cumulative mismatch between routed PDLs; [`hamming_response`]
+//! reproduces the Fig. 6 measurement (mean traversal delay per input
+//! Hamming weight + Spearman's ρ).
+
+use crate::util::{stats, Ps, SplitMix64};
+
+use super::routing::RoutedPdl;
+
+/// Pairwise uniformity report across a set of routed PDLs.
+#[derive(Debug, Clone)]
+pub struct SkewReport {
+    /// Max |lo_total(a,i) − lo_total(b,i)| over all stages i and PDL pairs.
+    pub max_stage_skew_lo: Ps,
+    /// Same for the high-latency arcs.
+    pub max_stage_skew_hi: Ps,
+    /// Max |Σlo(a) − Σlo(b)| — cumulative fast-path mismatch.
+    pub max_cumulative_skew_lo: Ps,
+    /// Max |Σhi(a) − Σhi(b)| — cumulative slow-path mismatch.
+    pub max_cumulative_skew_hi: Ps,
+    /// Mean per-stage hi−lo delta across all PDLs (timing resolution).
+    pub mean_delta: Ps,
+}
+
+impl SkewReport {
+    /// The paper's safety criterion: cumulative skew between PDLs must stay
+    /// below one stage delta, otherwise two equal Hamming weights can order
+    /// incorrectly at the arbiter.
+    pub fn is_safe(&self) -> bool {
+        self.max_cumulative_skew_lo < self.mean_delta
+            && self.max_cumulative_skew_hi < self.mean_delta
+    }
+}
+
+/// Compute the uniformity report for a set of routed PDLs (same length).
+pub fn skew_report(pdls: &[RoutedPdl]) -> SkewReport {
+    assert!(!pdls.is_empty());
+    let n = pdls[0].len();
+    assert!(pdls.iter().all(|p| p.len() == n), "PDLs must be equal length");
+
+    let mut max_stage_lo = Ps::ZERO;
+    let mut max_stage_hi = Ps::ZERO;
+    let mut max_cum_lo = Ps::ZERO;
+    let mut max_cum_hi = Ps::ZERO;
+    for a in 0..pdls.len() {
+        for b in a + 1..pdls.len() {
+            for i in 0..n {
+                let ea = &pdls[a].elements[i];
+                let eb = &pdls[b].elements[i];
+                max_stage_lo = max_stage_lo.max(ea.lo_total.abs_diff(eb.lo_total));
+                max_stage_hi = max_stage_hi.max(ea.hi_total.abs_diff(eb.hi_total));
+            }
+            max_cum_lo = max_cum_lo.max(pdls[a].min_traversal().abs_diff(pdls[b].min_traversal()));
+            max_cum_hi = max_cum_hi.max(pdls[a].max_traversal().abs_diff(pdls[b].max_traversal()));
+        }
+    }
+    let mean_delta = {
+        let total: u64 = pdls.iter().map(|p| p.mean_delta().0).sum();
+        Ps(total / pdls.len() as u64)
+    };
+    SkewReport {
+        max_stage_skew_lo: max_stage_lo,
+        max_stage_skew_hi: max_stage_hi,
+        max_cumulative_skew_lo: max_cum_lo,
+        max_cumulative_skew_hi: max_cum_hi,
+        mean_delta,
+    }
+}
+
+/// Fig. 6 data: mean PDL traversal delay per input Hamming weight.
+#[derive(Debug, Clone)]
+pub struct HammingResponse {
+    /// Hamming weights 0..=n.
+    pub weights: Vec<usize>,
+    /// Mean traversal delay per weight (ns for plotting parity with Fig. 6).
+    pub mean_delay_ns: Vec<f64>,
+    /// σ of the traversal delay per weight.
+    pub std_delay_ns: Vec<f64>,
+    /// Spearman's ρ between weight and mean delay (paper: ≈ −1).
+    pub spearman_rho: f64,
+    /// True iff mean delay is strictly decreasing in weight.
+    pub strictly_monotonic: bool,
+}
+
+/// Traversal delay of a positive-polarity PDL for an input bit vector:
+/// bit = 1 selects the low-latency arc, bit = 0 the high-latency arc
+/// (paper §III-A.1).
+pub fn traversal_delay(pdl: &RoutedPdl, bits: &[bool]) -> Ps {
+    debug_assert_eq!(bits.len(), pdl.len());
+    let mut t = 0u64;
+    for (e, &b) in pdl.elements.iter().zip(bits) {
+        t += if b { e.lo_total.0 } else { e.hi_total.0 };
+    }
+    Ps(t)
+}
+
+/// Measure the Hamming-weight response of one routed PDL: for every weight,
+/// average the traversal delay over `samples_per_weight` random bit
+/// placements of that weight (the paper's delay characterization sweeps
+/// input vectors per weight the same way).
+pub fn hamming_response(pdl: &RoutedPdl, samples_per_weight: usize, seed: u64) -> HammingResponse {
+    let n = pdl.len();
+    let mut rng = SplitMix64::new(seed);
+    let mut weights = Vec::with_capacity(n + 1);
+    let mut means = Vec::with_capacity(n + 1);
+    let mut stds = Vec::with_capacity(n + 1);
+
+    let mut idx: Vec<usize> = (0..n).collect();
+    for w in 0..=n {
+        let mut delays = Vec::with_capacity(samples_per_weight);
+        for _ in 0..samples_per_weight {
+            rng.shuffle(&mut idx);
+            let mut bits = vec![false; n];
+            for &i in idx.iter().take(w) {
+                bits[i] = true;
+            }
+            delays.push(traversal_delay(pdl, &bits).as_ns());
+        }
+        weights.push(w);
+        means.push(stats::mean(&delays));
+        stds.push(stats::std_dev(&delays));
+    }
+
+    let w_f: Vec<f64> = weights.iter().map(|&w| w as f64).collect();
+    let rho = stats::spearman(&w_f, &means);
+    let strictly_monotonic = means.windows(2).all(|p| p[1] < p[0]);
+    HammingResponse {
+        weights,
+        mean_delay_ns: means,
+        std_delay_ns: stds,
+        spearman_rho: rho,
+        strictly_monotonic,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Device, VariationModel, VariationParams};
+    use crate::flow::{place_pdls, route_pdl, FlowConfig, PinAssignment};
+
+    fn routed(n: usize, hi: u64, sigma: f64, die: u64) -> RoutedPdl {
+        let d = Device::xc7z020();
+        let p = place_pdls(&d, 1, n).unwrap().remove(0);
+        let params = VariationParams { sigma_random: sigma, ..VariationParams::default() };
+        let var = VariationModel::new(die, params);
+        let cfg = FlowConfig {
+            lo_target: Ps(380),
+            hi_target: Ps(hi),
+            granularity: Ps(5),
+            variation: params,
+            die_seed: die,
+        };
+        route_pdl(&d, &p, &PinAssignment::fastest_pair(), &cfg, &var).unwrap()
+    }
+
+    #[test]
+    fn traversal_bounds() {
+        let pdl = routed(50, 620, 0.02, 1);
+        let all0 = traversal_delay(&pdl, &vec![false; 50]);
+        let all1 = traversal_delay(&pdl, &vec![true; 50]);
+        assert_eq!(all0, pdl.max_traversal());
+        assert_eq!(all1, pdl.min_traversal());
+        assert!(all1 < all0);
+    }
+
+    #[test]
+    fn response_monotonic_with_large_delta() {
+        // Fig. 6 bottom: ~600 ps delta ⇒ ρ ≈ −1 and strict monotonicity.
+        let pdl = routed(150, 980, 0.02, 2);
+        let r = hamming_response(&pdl, 8, 99);
+        assert!(r.spearman_rho < -0.999, "ρ = {}", r.spearman_rho);
+        assert!(r.strictly_monotonic);
+    }
+
+    #[test]
+    fn small_delta_weakens_monotonicity() {
+        // Fig. 6 top (60 ps delta) vs bottom (600 ps): ρ degrades (toward 0)
+        // as delta shrinks relative to variation.
+        let tight = hamming_response(&routed(150, 445, 0.06, 3), 4, 7); // ~60ps delta
+        let wide = hamming_response(&routed(150, 980, 0.06, 3), 4, 7); // ~600ps
+        assert!(wide.spearman_rho <= tight.spearman_rho,
+            "wide {} should be ≤ tight {}", wide.spearman_rho, tight.spearman_rho);
+        assert!(tight.spearman_rho < -0.9); // still strongly monotone, like the paper
+    }
+
+    #[test]
+    fn skew_report_zero_without_variation() {
+        let d = Device::xc7z020();
+        let pls = place_pdls(&d, 3, 40).unwrap();
+        let var = VariationModel::new(0, VariationParams::none());
+        let cfg = FlowConfig::ideal(Ps(400), Ps(640));
+        let routed: Vec<_> = pls
+            .iter()
+            .map(|p| route_pdl(&d, p, &PinAssignment::fastest_pair(), &cfg, &var).unwrap())
+            .collect();
+        let rep = skew_report(&routed);
+        assert_eq!(rep.max_stage_skew_lo, Ps::ZERO);
+        assert_eq!(rep.max_cumulative_skew_hi, Ps::ZERO);
+        assert!(rep.is_safe());
+    }
+
+    #[test]
+    fn skew_grows_with_variation() {
+        let d = Device::xc7z020();
+        let pls = place_pdls(&d, 3, 100).unwrap();
+        let params = VariationParams::default();
+        let var = VariationModel::new(11, params);
+        let cfg = FlowConfig::table1_default();
+        let routed: Vec<_> = pls
+            .iter()
+            .map(|p| route_pdl(&d, p, &PinAssignment::fastest_pair(), &cfg, &var).unwrap())
+            .collect();
+        let rep = skew_report(&routed);
+        assert!(rep.max_stage_skew_lo > Ps::ZERO);
+        assert!(rep.mean_delta > Ps(150)); // window preserved on average
+    }
+}

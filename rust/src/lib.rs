@@ -1,0 +1,35 @@
+//! `tdpc` — Time-Domain Popcount for Low-Complexity Machine Learning.
+//!
+//! Reproduction of Duan et al., *"Efficient FPGA Implementation of
+//! Time-Domain Popcount for Low-Complexity Machine Learning"* (2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 1/2 (build-time Python, `python/`)** — Tsetlin Machine
+//!   training and the fused clause-evaluation + signed-popcount Pallas
+//!   kernel, AOT-lowered to HLO text under `artifacts/`.
+//! * **Layer 3 (this crate)** — the paper's hardware contribution and
+//!   every substrate it depends on: an XC7Z020-class fabric model
+//!   ([`fabric`]), the paper's implementation flow ([`flow`]), PDLs
+//!   ([`pdl`]), arbiter trees ([`arbiter`]), an event-driven timing
+//!   simulator ([`timing`]), the asynchronous MOUSETRAP TM engine
+//!   ([`asynctm`]), all adder-based baselines ([`baselines`]), power and
+//!   resource models ([`power`]), the PJRT runtime ([`runtime`]) and a
+//!   batch-serving coordinator ([`coordinator`]).
+//!
+//! See DESIGN.md for the system inventory and the experiment index, and
+//! EXPERIMENTS.md for the paper-vs-measured record.
+
+pub mod arbiter;
+pub mod asynctm;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod fabric;
+pub mod flow;
+pub mod pdl;
+pub mod power;
+pub mod runtime;
+pub mod timing;
+pub mod tm;
+pub mod util;

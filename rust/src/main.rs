@@ -1,0 +1,281 @@
+//! `tdpc` — CLI for the time-domain popcount reproduction.
+//!
+//! Subcommands:
+//!   infer     — run samples through an AOT-compiled model on PJRT
+//!   serve     — start the batching coordinator and drive a load test
+//!   flow      — run the FPGA implementation flow and print the skew audit
+//!   table1 / fig6 / fig9 / fig10 / fig11 / fig12 — regenerate the paper's
+//!               tables/figures (markdown to stdout, CSV via --csv DIR)
+//!   all       — every experiment in sequence
+//!
+//! `--artifacts DIR` (default ./artifacts or $TDPC_ARTIFACTS) points at the
+//! output of `make artifacts`.
+
+use std::path::PathBuf;
+use anyhow::{bail, Context, Result};
+
+use tdpc::baselines::DesignParams;
+use tdpc::config::Args;
+use tdpc::coordinator::{BatcherConfig, Coordinator};
+use tdpc::experiments::{ablation, fig10, fig11, fig12, fig6, fig9, table1, Table};
+use tdpc::fabric::Device;
+use tdpc::flow::{self, skew_report, FlowConfig};
+use tdpc::runtime::{bools_to_f32, ModelRegistry};
+use tdpc::tm::{Manifest, TestSet, TmModel};
+use tdpc::util::Ps;
+
+fn main() {
+    env_logger_init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn env_logger_init() {
+    // Minimal logger: honor TDPC_LOG=debug|info (log crate facade only).
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let _ = log::set_logger(&LOGGER);
+    let lvl = match std::env::var("TDPC_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("info") => log::LevelFilter::Info,
+        _ => log::LevelFilter::Warn,
+    };
+    log::set_max_level(lvl);
+}
+
+fn artifacts_root(args: &Args) -> PathBuf {
+    args.opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Manifest::default_root)
+}
+
+fn emit(tables: &[Table], args: &Args) -> Result<()> {
+    for t in tables {
+        println!("{}", t.to_markdown());
+    }
+    if let Some(dir) = args.opt("csv") {
+        std::fs::create_dir_all(dir)?;
+        for t in tables {
+            let slug: String = t
+                .title
+                .chars()
+                .map(|c| if c.is_alphanumeric() { c } else { '_' })
+                .collect::<String>()
+                .to_lowercase();
+            let path = PathBuf::from(dir).join(format!("{}.csv", slug.trim_matches('_')));
+            std::fs::write(&path, t.to_csv())?;
+            eprintln!("wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("infer") => cmd_infer(args),
+        Some("serve") => cmd_serve(args),
+        Some("flow") => cmd_flow(args),
+        Some("table1") => cmd_table1(args),
+        Some("fig6") => cmd_fig6(args),
+        Some("fig9") => cmd_fig9(args),
+        Some("fig10") => cmd_fig10(args),
+        Some("fig11") => cmd_fig11(args),
+        Some("fig12") => cmd_fig12(args),
+        Some("ablation") => cmd_ablation(args),
+        Some("all") => cmd_all(args),
+        Some(other) => bail!("unknown subcommand {other:?}; try: infer serve flow table1 fig6 fig9 fig10 fig11 fig12 ablation all"),
+        None => {
+            println!("tdpc — time-domain popcount for low-complexity ML (paper reproduction)");
+            println!("usage: tdpc <infer|serve|flow|table1|fig6|fig9|fig10|fig11|fig12|all> [--options]");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "model", "samples", "csv"])?;
+    let model = args.opt_or("model", "iris_c10");
+    let n = args.opt_usize("samples", 8)?;
+    let registry = ModelRegistry::open(&artifacts_root(args))?;
+    let entry = registry.manifest().entry(model)?.clone();
+    let test = TestSet::load(&entry.test_data_path)?;
+    let runner = registry.runner(model, 1)?;
+    println!("platform: {}", registry.platform());
+    let mut correct = 0;
+    for (i, x) in test.x.iter().take(n).enumerate() {
+        let out = runner.run(&bools_to_f32(std::slice::from_ref(x)))?;
+        let ok = out.pred[0] as usize == test.y[i];
+        correct += ok as usize;
+        println!(
+            "sample {i}: pred {} label {} sums {:?} {}",
+            out.pred[0],
+            test.y[i],
+            out.sums_row(0),
+            if ok { "OK" } else { "MISS" }
+        );
+    }
+    println!("accuracy: {correct}/{n}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "model", "requests", "batch", "deadline-us", "csv", "hw"])?;
+    let model = args.opt_or("model", "mnist_c100");
+    let n_requests = args.opt_usize("requests", 500)?;
+    let cfg = BatcherConfig {
+        max_batch: args.opt_usize("batch", 32)?,
+        max_wait: std::time::Duration::from_micros(args.opt_u64("deadline-us", 500)?),
+    };
+    let root = artifacts_root(args);
+    let manifest = Manifest::load(&root)?;
+    let entry = manifest.entry(model)?.clone();
+    let test = TestSet::load(&entry.test_data_path)?;
+    let tm_model = TmModel::load(&entry.model_path)?;
+
+    let engine = if args.flag("hw") {
+        let d = DesignParams::from_model(&tm_model);
+        Some(tdpc::asynctm::AsyncTmEngine::build(
+            &Device::xc7z020(),
+            &d,
+            &FlowConfig::table1_default(),
+            1,
+        )?)
+    } else {
+        None
+    };
+
+    let coord = Coordinator::start(root, model, cfg, engine)?;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        coord.submit(test.x[i % test.len()].clone(), tx.clone())?;
+    }
+    drop(tx);
+    let mut correct = 0usize;
+    let mut got = 0usize;
+    while let Ok(resp) = rx.recv() {
+        let idx = resp.request_id as usize % test.len();
+        correct += (resp.pred == test.y[idx]) as usize;
+        got += 1;
+        if got == n_requests {
+            break;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    println!("model {model}: {got} responses in {wall:.3}s = {:.0} req/s", got as f64 / wall);
+    println!("accuracy {:.1}%", 100.0 * correct as f64 / got as f64);
+    println!(
+        "service latency: p50 {:.0} us p99 {:.0} us mean {:.0} us (mean batch {:.1}, exec {:.0} us)",
+        m.service_p50_us, m.service_p99_us, m.service_mean_us, m.mean_batch_size, m.mean_batch_exec_us
+    );
+    if m.hw_mean_ns > 0.0 {
+        println!(
+            "simulated on-chip decision latency: mean {:.1} ns p99 {:.1} ns (mismatches {})",
+            m.hw_mean_ns, m.hw_p99_ns, m.hw_functional_mismatches
+        );
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_flow(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "pdls", "elements", "hi", "csv", "seed"])?;
+    let n_pdls = args.opt_usize("pdls", 3)?;
+    let n_elements = args.opt_usize("elements", 150)?;
+    let hi = args.opt_u64("hi", 618)?;
+    let seed = args.opt_u64("seed", 1)?;
+    let device = Device::xc7z020();
+    let cfg = FlowConfig { hi_target: Ps(hi), die_seed: seed, ..FlowConfig::table1_default() };
+    let pdls = flow::run(&device, n_pdls, n_elements, &cfg)?;
+    let rep = skew_report(&pdls);
+    println!("flow: {n_pdls} PDLs x {n_elements} elements on {}", device.name);
+    println!("  mean per-stage delta (hi-lo): {}", rep.mean_delta);
+    println!("  max stage skew lo/hi: {} / {}", rep.max_stage_skew_lo, rep.max_stage_skew_hi);
+    println!(
+        "  max cumulative skew lo/hi: {} / {}",
+        rep.max_cumulative_skew_lo, rep.max_cumulative_skew_hi
+    );
+    println!("  safe (cumulative skew < delta): {}", rep.is_safe());
+    let resp = flow::hamming_response(&pdls[0], 8, seed);
+    println!("  Hamming response: Spearman rho = {:.5}, strictly monotonic: {}",
+        resp.spearman_rho, resp.strictly_monotonic);
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "samples", "csv"])?;
+    let manifest = Manifest::load(&artifacts_root(args))?;
+    let r = table1::run(&manifest, args.opt_usize("samples", 150)?)?;
+    emit(&[r.table()], args)
+}
+
+fn cmd_fig6(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "elements", "samples", "seed", "csv"])?;
+    let r = fig6::run(
+        args.opt_usize("elements", 150)?,
+        args.opt_usize("samples", 8)?,
+        args.opt_u64("seed", 42)?,
+    );
+    emit(&[r.table()], args)
+}
+
+fn cmd_fig9(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "samples", "csv"])?;
+    let manifest = Manifest::load(&artifacts_root(args))?;
+    let r = fig9::run(&manifest, args.opt_usize("samples", 100)?)?;
+    emit(&r.tables(), args)
+}
+
+fn cmd_fig10(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "samples", "csv"])?;
+    let r = fig10::run(args.opt_usize("samples", 1000)?);
+    emit(&r.tables(), args)
+}
+
+fn cmd_fig11(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "csv"])?;
+    emit(&fig11::run().tables(), args)
+}
+
+fn cmd_fig12(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "csv"])?;
+    emit(&fig12::run().tables(), args)
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "elements", "seed", "csv"])?;
+    let r = ablation::run(args.opt_usize("elements", 150)?, args.opt_u64("seed", 7)?);
+    emit(&[r.table()], args)
+}
+
+fn cmd_all(args: &Args) -> Result<()> {
+    cmd_table1(args).context("table1")?;
+    cmd_fig6(args).context("fig6")?;
+    cmd_fig9(args).context("fig9")?;
+    cmd_fig10(args).context("fig10")?;
+    cmd_fig11(args).context("fig11")?;
+    cmd_fig12(args).context("fig12")?;
+    cmd_ablation(args).context("ablation")?;
+    Ok(())
+}

@@ -1,0 +1,245 @@
+//! Programmable delay line (paper §III-A).
+//!
+//! A PDL converts a binary code into a cumulative propagation delay that is
+//! *inversely* proportional to the code's Hamming weight: every delay
+//! element is a LUT configured as a 2:1 mux whose select bit picks either a
+//! low-latency or a high-latency input net. For the TM case study one PDL
+//! per class receives that class's clause outputs; clause polarity is
+//! handled by swapping the net connections at the element inputs
+//! (§III-A.1): a positive clause's `1` takes the short arc, a negative
+//! clause's `1` takes the long arc (a firing negative clause must *slow*
+//! its class down).
+//!
+//! The start transition is synchronized through a D-FF per PDL (§III-A.2)
+//! so fanout skew on the request signal cannot bias the race.
+
+use crate::flow::RoutedPdl;
+use crate::util::Ps;
+
+pub mod resources;
+
+pub use resources::PdlResources;
+
+/// Clause polarity: whether a `1` on this element's select input represents
+/// a vote *for* (positive) or *against* (negative) the class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Polarity {
+    Positive,
+    Negative,
+}
+
+/// One delay element: the two routed arc delays plus the polarity wiring of
+/// its select input.
+#[derive(Debug, Clone, Copy)]
+pub struct DelayElement {
+    /// Stage traversal delay via the low-latency arc.
+    pub lo: Ps,
+    /// Stage traversal delay via the high-latency arc.
+    pub hi: Ps,
+    pub polarity: Polarity,
+}
+
+impl DelayElement {
+    /// Stage delay for a select bit, honoring polarity (paper §III-A.1:
+    /// positive clause 1→short/0→long; negative clause wiring swapped).
+    #[inline]
+    pub fn stage_delay(&self, bit: bool) -> Ps {
+        let take_short = match self.polarity {
+            Polarity::Positive => bit,
+            Polarity::Negative => !bit,
+        };
+        if take_short {
+            self.lo
+        } else {
+            self.hi
+        }
+    }
+
+    /// Timing resolution of this stage.
+    pub fn delta(&self) -> Ps {
+        self.hi.saturating_sub(self.lo)
+    }
+}
+
+/// A programmable delay line: the start-sync FF plus the element chain.
+#[derive(Debug, Clone)]
+pub struct Pdl {
+    /// Class (or neuron) index this PDL serves.
+    pub index: usize,
+    pub elements: Vec<DelayElement>,
+    /// Clock-to-Q of the start-synchronization FF.
+    pub start_sync: Ps,
+}
+
+impl Pdl {
+    /// Build from a routed PDL and the per-element polarities (length must
+    /// match; TM wiring alternates +,−,+,− per the training convention).
+    pub fn from_routed(routed: &RoutedPdl, polarities: &[Polarity]) -> Pdl {
+        assert_eq!(routed.len(), polarities.len(), "one polarity per element");
+        let elements = routed
+            .elements
+            .iter()
+            .zip(polarities)
+            .map(|(e, &p)| DelayElement { lo: e.lo_total, hi: e.hi_total, polarity: p })
+            .collect();
+        Pdl { index: routed.index, elements, start_sync: crate::fabric::FF_CLK_TO_Q }
+    }
+
+    /// Standard TM polarity pattern: even element index positive.
+    pub fn tm_polarities(n: usize) -> Vec<Polarity> {
+        (0..n)
+            .map(|i| if i % 2 == 0 { Polarity::Positive } else { Polarity::Negative })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.elements.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.elements.is_empty()
+    }
+
+    /// Behavioral propagation: time from the start clock edge until the
+    /// transition exits the chain, for the given select bits.
+    ///
+    /// This is the hot path of every experiment sweep; the event-driven
+    /// simulator (crate::timing) validates it on small circuits.
+    #[inline]
+    pub fn propagate(&self, bits: &[bool]) -> Ps {
+        debug_assert_eq!(bits.len(), self.elements.len());
+        let mut t = self.start_sync.0;
+        for (e, &b) in self.elements.iter().zip(bits) {
+            t += e.stage_delay(b).0;
+        }
+        Ps(t)
+    }
+
+    /// The *class-sum → delay* law: with per-stage delta δ and vote count v
+    /// (signed popcount), traversal ≈ max_traversal − δ·(v_offset + v).
+    /// Used by analyses; `propagate` is the ground truth.
+    pub fn max_traversal(&self) -> Ps {
+        Ps(self.start_sync.0 + self.elements.iter().map(|e| e.hi.0).sum::<u64>())
+    }
+
+    pub fn min_traversal(&self) -> Ps {
+        Ps(self.start_sync.0 + self.elements.iter().map(|e| e.lo.0).sum::<u64>())
+    }
+
+    pub fn mean_delta(&self) -> Ps {
+        if self.elements.is_empty() {
+            return Ps::ZERO;
+        }
+        Ps(self.elements.iter().map(|e| e.delta().0).sum::<u64>() / self.elements.len() as u64)
+    }
+
+    /// Number of stages that take the short arc for this input — the
+    /// quantity the PDL physically popcounts.
+    pub fn effective_weight(&self, bits: &[bool]) -> usize {
+        self.elements
+            .iter()
+            .zip(bits)
+            .filter(|(e, &b)| match e.polarity {
+                Polarity::Positive => b,
+                Polarity::Negative => !b,
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Device, VariationModel, VariationParams};
+    use crate::flow::{place_pdls, route_pdl, FlowConfig, PinAssignment};
+    use crate::util::prop;
+
+    fn ideal_pdl(n: usize, lo: u64, hi: u64, pol: Vec<Polarity>) -> Pdl {
+        let d = Device::xc7z020();
+        let p = place_pdls(&d, 1, n).unwrap().remove(0);
+        let var = VariationModel::new(0, VariationParams::none());
+        let cfg = FlowConfig::ideal(Ps(lo), Ps(hi));
+        let routed = route_pdl(&d, &p, &PinAssignment::fastest_pair(), &cfg, &var).unwrap();
+        Pdl::from_routed(&routed, &pol)
+    }
+
+    #[test]
+    fn positive_polarity_one_is_fast() {
+        let pdl = ideal_pdl(4, 400, 600, vec![Polarity::Positive; 4]);
+        let fast = pdl.propagate(&[true; 4]);
+        let slow = pdl.propagate(&[false; 4]);
+        assert_eq!(fast, pdl.min_traversal());
+        assert_eq!(slow, pdl.max_traversal());
+    }
+
+    #[test]
+    fn negative_polarity_swaps_arcs() {
+        let pdl = ideal_pdl(4, 400, 600, vec![Polarity::Negative; 4]);
+        assert_eq!(pdl.propagate(&[true; 4]), pdl.max_traversal());
+        assert_eq!(pdl.propagate(&[false; 4]), pdl.min_traversal());
+    }
+
+    #[test]
+    fn delay_decreases_linearly_with_weight() {
+        let n = 20;
+        let pdl = ideal_pdl(n, 380, 620, vec![Polarity::Positive; n]);
+        let delta = pdl.elements[0].delta();
+        let mut prev = pdl.propagate(&vec![false; n]);
+        for w in 1..=n {
+            let mut bits = vec![false; n];
+            bits[..w].iter_mut().for_each(|b| *b = true);
+            let t = pdl.propagate(&bits);
+            assert_eq!(prev - t, delta, "each extra 1 removes exactly one delta");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn mixed_polarity_counts_signed_votes() {
+        // +,− alternating: input [1,0] = one supporting vote + one
+        // non-firing negative clause ⇒ both take the short arc.
+        let pdl = ideal_pdl(2, 400, 600, Pdl::tm_polarities(2));
+        assert_eq!(pdl.propagate(&[true, false]), pdl.min_traversal());
+        // [0,1]: no support, firing negative clause ⇒ both long.
+        assert_eq!(pdl.propagate(&[false, true]), pdl.max_traversal());
+    }
+
+    #[test]
+    fn prop_delay_is_monotone_in_effective_weight() {
+        prop::check("pdl delay monotone in effective weight", 60, |g| {
+            let n = g.int(2, 120) as usize;
+            let pdl = ideal_pdl(n, 380, 620, Pdl::tm_polarities(n));
+            let a: Vec<bool> = g.bits(n, 0.5);
+            let b: Vec<bool> = g.bits(n, 0.5);
+            let (wa, wb) = (pdl.effective_weight(&a), pdl.effective_weight(&b));
+            let (ta, tb) = (pdl.propagate(&a), pdl.propagate(&b));
+            if wa > wb {
+                assert!(ta < tb, "higher weight must be strictly faster (ideal PDL)");
+            } else if wa == wb {
+                assert_eq!(ta, tb);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_variation_preserves_monotonicity_with_wide_window() {
+        prop::check("variation-safe monotonicity", 20, |g| {
+            let d = Device::xc7z020();
+            let n = g.int(10, 150) as usize;
+            let p = place_pdls(&d, 1, n).unwrap().remove(0);
+            let params = VariationParams::default();
+            let var = VariationModel::new(g.int(0, 10_000) as u64, params);
+            let cfg = FlowConfig::table1_default();
+            let routed = route_pdl(&d, &p, &PinAssignment::fastest_pair(), &cfg, &var).unwrap();
+            let pdl = Pdl::from_routed(&routed, &vec![Polarity::Positive; n]);
+            // Weight w vs w+2: ≥2·δ_min margin ⇒ must order correctly even
+            // under the default 2 % variation.
+            let w = g.int(0, (n - 2) as i64) as usize;
+            let mut lo_bits = vec![false; n];
+            lo_bits[..w].iter_mut().for_each(|b| *b = true);
+            let mut hi_bits = vec![false; n];
+            hi_bits[..w + 2].iter_mut().for_each(|b| *b = true);
+            assert!(pdl.propagate(&hi_bits) < pdl.propagate(&lo_bits));
+        });
+    }
+}

@@ -1,0 +1,54 @@
+//! Resource accounting for the time-domain popcount (paper Fig. 9b/11).
+//!
+//! One delay element = one LUT (the 2:1 mux). Each PDL adds a start-sync FF
+//! and each input bit needs its polarity wiring (free: it is just net
+//! permutation). Arbiter costs live in [`crate::arbiter::resources`].
+
+/// LUT/FF cost of a set of PDLs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PdlResources {
+    pub luts: u32,
+    pub ffs: u32,
+}
+
+impl PdlResources {
+    /// `n_pdls` PDLs of `n_elements` each.
+    ///
+    /// * 1 LUT per delay element (paper §III-A.2);
+    /// * 1 start-sync FF per PDL (§III-A.2's fanout-skew mitigation);
+    /// * 1 FF per PDL output capture at the arbiter boundary.
+    pub fn for_pdls(n_pdls: usize, n_elements: usize) -> PdlResources {
+        PdlResources {
+            luts: (n_pdls * n_elements) as u32,
+            ffs: (2 * n_pdls) as u32,
+        }
+    }
+
+    pub fn total(&self) -> u32 {
+        self.luts + self.ffs
+    }
+
+    pub fn add(self, other: PdlResources) -> PdlResources {
+        PdlResources { luts: self.luts + other.luts, ffs: self.ffs + other.ffs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_lut_per_element() {
+        let r = PdlResources::for_pdls(3, 100);
+        assert_eq!(r.luts, 300);
+        assert_eq!(r.ffs, 6);
+        assert_eq!(r.total(), 306);
+    }
+
+    #[test]
+    fn scales_linearly() {
+        let a = PdlResources::for_pdls(1, 50);
+        let b = PdlResources::for_pdls(2, 50);
+        assert_eq!(b.luts, 2 * a.luts);
+    }
+}

@@ -1,0 +1,180 @@
+//! Dynamic power model (paper Fig. 9c / Fig. 12).
+//!
+//! Dynamic power is switching energy × switching rate. Each architecture
+//! reports a [`ToggleInventory`](crate::baselines::ToggleInventory) — the
+//! expected output transitions per inference of each stage plus the number
+//! of clocked FFs — and this module converts it to milliwatts at a given
+//! inference rate:
+//!
+//! ```text
+//!   P = f_inf · Σ_stage (toggles_stage · E_node)  +  f_clk · N_FF · E_clk
+//! ```
+//!
+//! `E_node` lumps a LUT output + its average routed net at 28 nm / V_nom;
+//! `E_clk` is the per-FF clock-pin + amortized clock-tree energy. The
+//! asynchronous designs have `N_FF = 0` (no clock tree) — the mechanism
+//! behind the paper's "eliminating the clock contributes significantly to
+//! dynamic power reduction" observation. Synchronous designs clock at
+//! their minimum period regardless of data (f_clk = 1/T_clk), while every
+//! design's *logic* switches per inference.
+
+use crate::baselines::{Architecture, DesignParams, ToggleInventory};
+use crate::util::Ps;
+
+/// Switching energy of one LUT output transition incl. average net (pJ).
+pub const E_NODE_PJ: f64 = 3.4;
+/// Per-FF per-cycle clock energy incl. amortized clock tree (pJ).
+pub const E_CLK_FF_PJ: f64 = 2.0;
+/// PDL delay elements drive short, hand-routed nets: cheaper per toggle.
+pub const E_PDL_NODE_PJ: f64 = 2.3;
+
+/// Power decomposition in mW (the stacked bars of Fig. 9c).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PowerBreakdown {
+    pub clause_mw: f64,
+    pub popcount_mw: f64,
+    pub compare_mw: f64,
+    pub clock_mw: f64,
+    pub control_mw: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.clause_mw + self.popcount_mw + self.compare_mw + self.clock_mw + self.control_mw
+    }
+
+    pub fn popcount_compare_share(&self) -> f64 {
+        let t = self.total();
+        if t == 0.0 {
+            return 0.0;
+        }
+        (self.popcount_mw + self.compare_mw) / t
+    }
+}
+
+/// Convert a toggle inventory to power at `inference_rate` inferences/s.
+/// `clock_period` must be `Some(T_clk)` for synchronous designs (clock
+/// runs at 1/T_clk even when data is idle) and `None` for self-timed ones.
+pub fn power_from_toggles(
+    inv: &ToggleInventory,
+    inference_rate_hz: f64,
+    clock_period: Option<Ps>,
+    pdl_popcount: bool,
+) -> PowerBreakdown {
+    let f = inference_rate_hz;
+    let pj_to_mw = 1e-9; // pJ × Hz = µW·1e-3 ⇒ pJ·Hz·1e-9 = mW
+    let e_pop = if pdl_popcount { E_PDL_NODE_PJ } else { E_NODE_PJ };
+    let clock_mw = match clock_period {
+        Some(t) if t > Ps::ZERO => {
+            let f_clk = 1e12 / t.as_ps_f64();
+            inv.clocked_ffs as f64 * E_CLK_FF_PJ * f_clk * pj_to_mw
+        }
+        _ => 0.0,
+    };
+    PowerBreakdown {
+        clause_mw: inv.clause_toggles_per_inference * E_NODE_PJ * f * pj_to_mw,
+        popcount_mw: inv.popcount_toggles_per_inference * e_pop * f * pj_to_mw,
+        compare_mw: inv.compare_toggles_per_inference * E_NODE_PJ * f * pj_to_mw,
+        clock_mw,
+        control_mw: inv.control_toggles_per_inference * E_NODE_PJ * f * pj_to_mw,
+    }
+}
+
+/// Full-architecture power at its own operating point: synchronous designs
+/// run at their minimum clock period (one inference per cycle); self-timed
+/// ones at their per-inference latency.
+pub fn architecture_power(
+    arch: &dyn Architecture,
+    d: &DesignParams,
+    activity: f64,
+) -> PowerBreakdown {
+    let lat = arch.latency(d).total();
+    let rate = if lat > Ps::ZERO { 1e12 / lat.as_ps_f64() } else { 0.0 };
+    let inv = arch.toggles(d, activity);
+    let clock = if arch.is_synchronous() { Some(lat) } else { None };
+    power_from_toggles(&inv, rate, clock, arch.name() == "td-async")
+}
+
+/// Iso-throughput operating point (Fig. 9c / Fig. 12): all designs compared
+/// at the *same* inference rate so the α-sensitivity of the logic is
+/// isolated from throughput differences. Synchronous designs process one
+/// inference per cycle, so their clock runs at the comparison rate.
+pub fn power_at_rate(
+    arch: &dyn Architecture,
+    d: &DesignParams,
+    activity: f64,
+    rate_hz: f64,
+) -> PowerBreakdown {
+    let inv = arch.toggles(d, activity);
+    let clock = if arch.is_synchronous() {
+        Some(Ps::from_ps_f64(1e12 / rate_hz))
+    } else {
+        None
+    };
+    power_from_toggles(&inv, rate_hz, clock, arch.name() == "td-async")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asynctm::TdAsync;
+    use crate::baselines::{Fpt18, GenericAdder};
+
+    #[test]
+    fn sync_design_pays_clock_power() {
+        let d = DesignParams::synthetic(10, 50, 784);
+        let p = architecture_power(&GenericAdder, &d, 0.2);
+        assert!(p.clock_mw > 0.0);
+        let q = architecture_power(&TdAsync::default(), &d, 0.2);
+        assert_eq!(q.clock_mw, 0.0, "async designs have no clock tree");
+    }
+
+    #[test]
+    fn adder_power_scales_with_activity_td_does_not() {
+        // The paper's Fig. 12 mechanism.
+        let d = DesignParams::synthetic(6, 100, 200);
+        let rate = 1e6;
+        let g_lo = power_at_rate(&GenericAdder, &d, 0.1, rate);
+        let g_hi = power_at_rate(&GenericAdder, &d, 0.5, rate);
+        let t_lo = power_at_rate(&TdAsync::default(), &d, 0.1, rate);
+        let t_hi = power_at_rate(&TdAsync::default(), &d, 0.5, rate);
+        assert!(g_hi.popcount_mw > 4.0 * g_lo.popcount_mw);
+        assert_eq!(t_lo.popcount_mw, t_hi.popcount_mw);
+    }
+
+    #[test]
+    fn fig12_crossover_exists() {
+        // At α=0.1 the adder *popcount* is cheaper; at α=0.5 the TD
+        // popcount must win (same inference rate — Fig. 12's comparison).
+        let d = DesignParams::synthetic(6, 100, 200);
+        let rate = 1e6;
+        let pc = |p: PowerBreakdown| p.popcount_mw;
+        let g01 = pc(power_at_rate(&GenericAdder, &d, 0.1, rate));
+        let g05 = pc(power_at_rate(&GenericAdder, &d, 0.5, rate));
+        let t01 = pc(power_at_rate(&TdAsync::default(), &d, 0.1, rate));
+        let t05 = pc(power_at_rate(&TdAsync::default(), &d, 0.5, rate));
+        assert!(g01 < t01, "adder wins at low activity: {g01:.3} vs {t01:.3}");
+        assert!(g05 > t05, "TD wins at high activity: {g05:.3} vs {t05:.3}");
+    }
+
+    #[test]
+    fn fpt18_popcount_power_below_td_but_arch_above() {
+        // Fig. 9c's nuance: FPT'18's popcount alone is cheaper than the
+        // TD popcount, yet the full synchronous architecture costs more
+        // than the full async one (clock tree + comparator) at the same
+        // throughput.
+        let d = DesignParams::synthetic(10, 100, 784);
+        let f = power_at_rate(&Fpt18, &d, 0.15, 1e6);
+        let t = power_at_rate(&TdAsync::default(), &d, 0.15, 1e6);
+        assert!(f.popcount_mw < t.popcount_mw, "{} vs {}", f.popcount_mw, t.popcount_mw);
+        assert!(f.total() > t.total(), "{} vs {}", f.total(), t.total());
+    }
+
+    #[test]
+    fn power_linear_in_rate() {
+        let d = DesignParams::synthetic(6, 50, 200);
+        let a = power_at_rate(&TdAsync::default(), &d, 0.3, 1e6).total();
+        let b = power_at_rate(&TdAsync::default(), &d, 0.3, 2e6).total();
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

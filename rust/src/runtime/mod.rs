@@ -1,0 +1,162 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them on the
+//! request path.
+//!
+//! The Python build path (`python/compile/aot.py`) lowers each TM
+//! configuration to HLO *text* (the interchange format xla_extension 0.5.1
+//! accepts — jax ≥ 0.5's serialized protos carry 64-bit instruction ids it
+//! rejects). This module compiles those artifacts once on the PJRT CPU
+//! client and executes them for the coordinator; Python never runs here.
+
+pub mod registry;
+
+pub use registry::ModelRegistry;
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+/// Output of one batched TM forward pass (mirrors `model.tm_forward`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForwardOutput {
+    pub batch: usize,
+    pub n_classes: usize,
+    pub c_total: usize,
+    /// (batch × n_classes) row-major signed class sums.
+    pub sums: Vec<i32>,
+    /// (batch × c_total) row-major clause bits.
+    pub fired: Vec<i32>,
+    /// (batch) argmax predictions.
+    pub pred: Vec<i32>,
+}
+
+impl ForwardOutput {
+    pub fn sums_row(&self, b: usize) -> &[i32] {
+        &self.sums[b * self.n_classes..(b + 1) * self.n_classes]
+    }
+
+    /// Clause bits of sample `b`, grouped per class (PDL select inputs).
+    pub fn clause_bits_row(&self, b: usize) -> Vec<Vec<bool>> {
+        let row = &self.fired[b * self.c_total..(b + 1) * self.c_total];
+        let per = self.c_total / self.n_classes;
+        (0..self.n_classes)
+            .map(|k| row[k * per..(k + 1) * per].iter().map(|&v| v != 0).collect())
+            .collect()
+    }
+}
+
+/// A compiled executable for one (model, batch-size) pair.
+pub struct ModelRunner {
+    pub name: String,
+    pub batch: usize,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub c_total: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ModelRunner {
+    /// Compile the HLO text at `path` on `client`.
+    pub fn load(
+        client: &xla::PjRtClient,
+        path: &Path,
+        name: &str,
+        batch: usize,
+        n_features: usize,
+        n_classes: usize,
+        c_total: usize,
+    ) -> Result<ModelRunner> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF-8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {}", path.display()))?;
+        Ok(ModelRunner {
+            name: name.to_string(),
+            batch,
+            n_features,
+            n_classes,
+            c_total,
+            exe,
+        })
+    }
+
+    /// Execute one batch. `x` is (batch × n_features) row-major 0.0/1.0.
+    pub fn run(&self, x: &[f32]) -> Result<ForwardOutput> {
+        ensure!(
+            x.len() == self.batch * self.n_features,
+            "input length {} != batch {} × features {}",
+            x.len(),
+            self.batch,
+            self.n_features
+        );
+        let input = xla::Literal::vec1(x)
+            .reshape(&[self.batch as i64, self.n_features as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (sums, fired, pred).
+        let (sums_l, fired_l, pred_l) = result.to_tuple3()?;
+        let sums = sums_l.to_vec::<i32>()?;
+        let fired = fired_l.to_vec::<i32>()?;
+        let pred = pred_l.to_vec::<i32>()?;
+        ensure!(sums.len() == self.batch * self.n_classes, "sums shape mismatch");
+        ensure!(fired.len() == self.batch * self.c_total, "fired shape mismatch");
+        ensure!(pred.len() == self.batch, "pred shape mismatch");
+        Ok(ForwardOutput {
+            batch: self.batch,
+            n_classes: self.n_classes,
+            c_total: self.c_total,
+            sums,
+            fired,
+            pred,
+        })
+    }
+
+    /// Run a partial batch by padding with zeros and truncating the output.
+    pub fn run_padded(&self, x: &[f32], n_valid: usize) -> Result<ForwardOutput> {
+        ensure!(n_valid <= self.batch);
+        let mut padded = vec![0.0f32; self.batch * self.n_features];
+        padded[..x.len()].copy_from_slice(x);
+        let mut out = self.run(&padded)?;
+        out.batch = n_valid;
+        out.sums.truncate(n_valid * self.n_classes);
+        out.fired.truncate(n_valid * self.c_total);
+        out.pred.truncate(n_valid);
+        Ok(out)
+    }
+}
+
+/// Convert Boolean features to the f32 layout the HLO expects.
+pub fn bools_to_f32(rows: &[Vec<bool>]) -> Vec<f32> {
+    rows.iter()
+        .flat_map(|r| r.iter().map(|&b| if b { 1.0 } else { 0.0 }))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_output_row_access() {
+        let out = ForwardOutput {
+            batch: 2,
+            n_classes: 2,
+            c_total: 4,
+            sums: vec![1, -1, 3, 0],
+            fired: vec![1, 0, 0, 1, 1, 1, 0, 0],
+            pred: vec![0, 0],
+        };
+        assert_eq!(out.sums_row(1), &[3, 0]);
+        let bits = out.clause_bits_row(0);
+        assert_eq!(bits, vec![vec![true, false], vec![false, true]]);
+    }
+
+    #[test]
+    fn bools_layout() {
+        let rows = vec![vec![true, false], vec![false, true]];
+        assert_eq!(bools_to_f32(&rows), vec![1.0, 0.0, 0.0, 1.0]);
+    }
+}

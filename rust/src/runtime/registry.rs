@@ -1,0 +1,120 @@
+//! Model registry: one PJRT client, many compiled executables.
+//!
+//! The coordinator routes requests by model name and batch size; the
+//! registry owns the client and compiles each (model, batch) artifact at
+//! most once (compilation is the expensive step — the §Perf bench
+//! quantifies it).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::tm::Manifest;
+
+use super::ModelRunner;
+
+/// Thread-safe registry of compiled model runners.
+pub struct ModelRegistry {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    runners: Mutex<BTreeMap<(String, usize), std::sync::Arc<ModelRunner>>>,
+}
+
+impl ModelRegistry {
+    /// Create with the default (CPU) PJRT client.
+    pub fn new(manifest: Manifest) -> Result<ModelRegistry> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(ModelRegistry { client, manifest, runners: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn open(artifacts_root: &Path) -> Result<ModelRegistry> {
+        Self::new(Manifest::load(artifacts_root)?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) the runner for a model/batch pair.
+    pub fn runner(&self, model: &str, batch: usize) -> Result<std::sync::Arc<ModelRunner>> {
+        let key = (model.to_string(), batch);
+        {
+            let cache = self.runners.lock().unwrap();
+            if let Some(r) = cache.get(&key) {
+                return Ok(r.clone());
+            }
+        }
+        // Compile outside the lock: compilation takes ~100 ms and other
+        // batch sizes shouldn't stall behind it.
+        let entry = self.manifest.entry(model)?;
+        let hlo = self.manifest.hlo_path(model, batch)?;
+        let runner = std::sync::Arc::new(ModelRunner::load(
+            &self.client,
+            &hlo,
+            model,
+            batch,
+            entry.n_features,
+            entry.n_classes,
+            entry.n_classes * entry.clauses_per_class,
+        )?);
+        let mut cache = self.runners.lock().unwrap();
+        Ok(cache.entry(key).or_insert(runner).clone())
+    }
+
+    /// Largest artifact batch size ≤ `n`, for batch planning.
+    pub fn best_batch(&self, n: usize) -> usize {
+        self.manifest
+            .batch_sizes
+            .iter()
+            .copied()
+            .filter(|&b| b <= n.max(1))
+            .max()
+            .unwrap_or_else(|| self.manifest.batch_sizes.iter().copied().min().unwrap_or(1))
+    }
+
+    /// Execution batch for `n` queued requests: the *smallest* artifact
+    /// batch that fits all of them (padding beats splitting into many
+    /// small executions — §Perf L3), else the largest available.
+    pub fn exec_batch(&self, n: usize) -> usize {
+        self.manifest
+            .batch_sizes
+            .iter()
+            .copied()
+            .filter(|&b| b >= n.max(1))
+            .min()
+            .unwrap_or_else(|| self.manifest.batch_sizes.iter().copied().max().unwrap_or(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_batch_picks_largest_fitting() {
+        // Manifest stub with batch sizes {1, 32}.
+        let manifest = Manifest {
+            root: std::path::PathBuf::from("/nonexistent"),
+            batch_sizes: vec![1, 32],
+            models: vec![],
+        };
+        let reg = ModelRegistry::new(manifest);
+        // PJRT client may be unavailable in odd environments; skip then.
+        let Ok(reg) = reg else { return };
+        assert_eq!(reg.best_batch(100), 32);
+        assert_eq!(reg.best_batch(32), 32);
+        assert_eq!(reg.best_batch(31), 1);
+        assert_eq!(reg.best_batch(0), 1);
+        // exec_batch: smallest artifact batch that fits everything.
+        assert_eq!(reg.exec_batch(1), 1);
+        assert_eq!(reg.exec_batch(2), 32);
+        assert_eq!(reg.exec_batch(32), 32);
+        assert_eq!(reg.exec_batch(100), 32);
+    }
+}

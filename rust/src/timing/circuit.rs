@@ -1,0 +1,181 @@
+//! Netlist representation for the event-driven simulator.
+
+use crate::util::Ps;
+
+/// A net (wire) in the circuit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NetId(pub u32);
+
+/// Gate primitives. `Mux2`'s input order is (sel, a, b): output = sel ? b : a
+/// — matching the PDL delay element (sel = clause bit, a = high-latency
+/// arc, b = low-latency arc for positive polarity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateKind {
+    Buf,
+    Inv,
+    And2,
+    Or2,
+    Nand2,
+    Nor2,
+    Xor2,
+    Xnor2,
+    Mux2,
+    /// Transparent latch: inputs (enable, d); transparent while enable=1.
+    LatchT,
+}
+
+impl GateKind {
+    pub fn arity(self) -> usize {
+        match self {
+            GateKind::Buf | GateKind::Inv => 1,
+            GateKind::Mux2 | GateKind::LatchT => match self {
+                GateKind::LatchT => 2,
+                _ => 3,
+            },
+            _ => 2,
+        }
+    }
+
+    /// Combinational evaluation. For `LatchT`, `current` is the retained
+    /// output value used while opaque.
+    pub fn eval(self, inputs: &[bool], current: bool) -> bool {
+        match self {
+            GateKind::Buf => inputs[0],
+            GateKind::Inv => !inputs[0],
+            GateKind::And2 => inputs[0] && inputs[1],
+            GateKind::Or2 => inputs[0] || inputs[1],
+            GateKind::Nand2 => !(inputs[0] && inputs[1]),
+            GateKind::Nor2 => !(inputs[0] || inputs[1]),
+            GateKind::Xor2 => inputs[0] ^ inputs[1],
+            GateKind::Xnor2 => !(inputs[0] ^ inputs[1]),
+            GateKind::Mux2 => {
+                if inputs[0] {
+                    inputs[2]
+                } else {
+                    inputs[1]
+                }
+            }
+            GateKind::LatchT => {
+                if inputs[0] {
+                    inputs[1]
+                } else {
+                    current
+                }
+            }
+        }
+    }
+}
+
+/// One gate instance.
+#[derive(Debug, Clone)]
+pub struct Gate {
+    pub kind: GateKind,
+    pub inputs: Vec<NetId>,
+    pub output: NetId,
+    pub delay: Ps,
+}
+
+/// A gate netlist under construction.
+#[derive(Debug, Default, Clone)]
+pub struct Circuit {
+    pub(crate) n_nets: u32,
+    pub(crate) gates: Vec<Gate>,
+    /// Initial level per net (defaults false).
+    pub(crate) initial: Vec<bool>,
+}
+
+impl Circuit {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate a fresh net (initial level 0).
+    pub fn net(&mut self) -> NetId {
+        let id = NetId(self.n_nets);
+        self.n_nets += 1;
+        self.initial.push(false);
+        id
+    }
+
+    /// Allocate a net with a defined initial level.
+    pub fn net_init(&mut self, level: bool) -> NetId {
+        let id = self.net();
+        self.initial[id.0 as usize] = level;
+        id
+    }
+
+    pub fn n_nets(&self) -> u32 {
+        self.n_nets
+    }
+
+    pub fn n_gates(&self) -> usize {
+        self.gates.len()
+    }
+
+    /// Add a gate; returns its output net.
+    pub fn gate(&mut self, kind: GateKind, inputs: &[NetId], delay: Ps) -> NetId {
+        assert_eq!(inputs.len(), kind.arity(), "{kind:?} arity mismatch");
+        let output = self.net();
+        self.gates.push(Gate { kind, inputs: inputs.to_vec(), output, delay });
+        output
+    }
+
+    /// Add a gate driving an existing net (for feedback structures).
+    pub fn gate_onto(&mut self, kind: GateKind, inputs: &[NetId], output: NetId, delay: Ps) {
+        assert_eq!(inputs.len(), kind.arity(), "{kind:?} arity mismatch");
+        self.gates.push(Gate { kind, inputs: inputs.to_vec(), output, delay });
+    }
+
+    /// Convenience: a buffer used purely as a routed-net delay.
+    pub fn delay_net(&mut self, from: NetId, delay: Ps) -> NetId {
+        self.gate(GateKind::Buf, &[from], delay)
+    }
+
+    /// Build one PDL delay element: `prev` fans into a slow arc and a fast
+    /// arc; `sel` chooses (sel=1 → fast for positive polarity; the caller
+    /// swaps arcs for negative polarity). Returns the element output.
+    pub fn pdl_element(&mut self, prev: NetId, sel: NetId, lo: Ps, hi: Ps, lut_delay: Ps) -> NetId {
+        let slow = self.delay_net(prev, hi.saturating_sub(lut_delay));
+        let fast = self.delay_net(prev, lo.saturating_sub(lut_delay));
+        self.gate(GateKind::Mux2, &[sel, slow, fast], lut_delay)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_eval_truth_tables() {
+        use GateKind::*;
+        assert!(!Nand2.eval(&[true, true], false));
+        assert!(Nand2.eval(&[true, false], false));
+        assert!(Nor2.eval(&[false, false], false));
+        assert!(!Nor2.eval(&[true, false], false));
+        assert!(Xor2.eval(&[true, false], false));
+        assert!(Xnor2.eval(&[true, true], false));
+        assert!(Mux2.eval(&[false, true, false], false)); // sel=0 → a
+        assert!(Mux2.eval(&[true, false, true], false)); // sel=1 → b
+        assert!(LatchT.eval(&[true, true], false)); // transparent
+        assert!(LatchT.eval(&[false, true], false) == false); // opaque holds
+    }
+
+    #[test]
+    fn circuit_building() {
+        let mut c = Circuit::new();
+        let a = c.net();
+        let b = c.net_init(true);
+        let o = c.gate(GateKind::And2, &[a, b], Ps(100));
+        assert_eq!(c.n_gates(), 1);
+        assert_eq!(c.n_nets(), 3);
+        assert_ne!(o, a);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity mismatch")]
+    fn arity_checked() {
+        let mut c = Circuit::new();
+        let a = c.net();
+        c.gate(GateKind::And2, &[a], Ps(1));
+    }
+}

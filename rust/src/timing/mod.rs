@@ -1,0 +1,25 @@
+//! Event-driven gate-level timing simulator.
+//!
+//! The experiment sweeps use fast behavioral models ([`crate::pdl`],
+//! [`crate::arbiter`], [`crate::asynctm`]); this simulator is the ground
+//! truth they are validated against (see `rust/tests/timing_equivalence.rs`
+//! and the module tests here): a picosecond-resolution, deterministic
+//! discrete-event simulator over gate netlists, in the style of a tiny
+//! gate-level VCS.
+//!
+//! * Nets carry boolean levels; transitions are events on a time-ordered
+//!   queue (ties broken by sequence number ⇒ fully deterministic).
+//! * Components are gates with a propagation delay and an inertial filter:
+//!   a gate re-evaluates when an input changes and schedules its output
+//!   `delay` later; a pending opposite-polarity schedule is replaced
+//!   (classic inertial-delay cancellation).
+//! * The SR-latch arbiter is a primitive (not two cross-coupled NANDs):
+//!   cross-coupled zero-margin feedback would oscillate in a pure-delay
+//!   model, and its analog metastability behaviour is exactly what
+//!   [`crate::arbiter::Arbiter2`] parameterizes.
+
+pub mod circuit;
+pub mod sim;
+
+pub use circuit::{Circuit, GateKind, NetId};
+pub use sim::{SimStats, Simulator};

@@ -1,0 +1,305 @@
+//! The discrete-event engine.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::util::Ps;
+
+use super::circuit::{Circuit, NetId};
+
+/// One scheduled transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Event {
+    at: Ps,
+    seq: u64,
+    net: NetId,
+    level: bool,
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Simulation statistics (perf instrumentation for §Perf).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SimStats {
+    pub events_processed: u64,
+    pub events_scheduled: u64,
+    pub events_cancelled: u64,
+}
+
+/// The simulator: owns net state and the event queue.
+pub struct Simulator {
+    levels: Vec<bool>,
+    /// gates indexed densely; per-net fanout lists (gate indices).
+    gates: Vec<super::circuit::Gate>,
+    fanout: Vec<Vec<u32>>,
+    /// Pending inertial schedule per gate: (event seq, level) if any.
+    pending: Vec<Option<(u64, bool)>>,
+    queue: BinaryHeap<Reverse<Event>>,
+    /// Cancelled event seqs (lazy deletion).
+    cancelled: std::collections::HashSet<u64>,
+    next_seq: u64,
+    now: Ps,
+    /// Transition traces for watched nets.
+    watched: Vec<Option<Vec<(Ps, bool)>>>,
+    pub stats: SimStats,
+}
+
+impl Simulator {
+    pub fn new(circuit: &Circuit) -> Self {
+        let n = circuit.n_nets() as usize;
+        let mut fanout = vec![Vec::new(); n];
+        for (gi, g) in circuit.gates.iter().enumerate() {
+            for inp in &g.inputs {
+                fanout[inp.0 as usize].push(gi as u32);
+            }
+        }
+        Self {
+            levels: circuit.initial.clone(),
+            gates: circuit.gates.clone(),
+            fanout,
+            pending: vec![None; circuit.gates.len()],
+            queue: BinaryHeap::new(),
+            cancelled: std::collections::HashSet::new(),
+            next_seq: 0,
+            now: Ps::ZERO,
+            watched: vec![None; n],
+            stats: SimStats::default(),
+        }
+    }
+
+    pub fn now(&self) -> Ps {
+        self.now
+    }
+
+    pub fn level(&self, net: NetId) -> bool {
+        self.levels[net.0 as usize]
+    }
+
+    /// Record all transitions on `net` (retrievable via [`Self::trace`]).
+    pub fn watch(&mut self, net: NetId) {
+        self.watched[net.0 as usize] = Some(Vec::new());
+    }
+
+    pub fn trace(&self, net: NetId) -> &[(Ps, bool)] {
+        self.watched[net.0 as usize]
+            .as_deref()
+            .expect("net not watched")
+    }
+
+    /// Time of the first transition to `level` on a watched net.
+    pub fn first_edge(&self, net: NetId, level: bool) -> Option<Ps> {
+        self.trace(net).iter().find(|&&(_, l)| l == level).map(|&(t, _)| t)
+    }
+
+    /// Externally drive a net at an absolute time.
+    pub fn schedule(&mut self, net: NetId, level: bool, at: Ps) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.stats.events_scheduled += 1;
+        self.queue.push(Reverse(Event { at, seq, net, level }));
+    }
+
+    /// Run until the queue drains or `t_max` passes; returns events processed.
+    pub fn run_until(&mut self, t_max: Ps) -> u64 {
+        let start_events = self.stats.events_processed;
+        while let Some(Reverse(ev)) = self.queue.peek().copied() {
+            if ev.at > t_max {
+                break;
+            }
+            self.queue.pop();
+            // Lazy-deletion check; skip the hash probe entirely when no
+            // cancellations are outstanding (the common case, §Perf).
+            if !self.cancelled.is_empty() && self.cancelled.remove(&ev.seq) {
+                continue;
+            }
+            self.now = ev.at;
+            let idx = ev.net.0 as usize;
+            if self.levels[idx] == ev.level {
+                continue; // no actual transition
+            }
+            self.levels[idx] = ev.level;
+            self.stats.events_processed += 1;
+            if let Some(trace) = &mut self.watched[idx] {
+                trace.push((ev.at, ev.level));
+            }
+            // Re-evaluate fanout gates (indexed loop: the fanout lists are
+            // immutable after construction, and cloning here would allocate
+            // on every event — the simulator's hottest line, §Perf).
+            let n_fan = self.fanout[idx].len();
+            for fi in 0..n_fan {
+                let gi = self.fanout[idx][fi] as usize;
+                self.eval_gate(gi);
+            }
+        }
+        self.stats.events_processed - start_events
+    }
+
+    fn eval_gate(&mut self, gi: usize) {
+        let g = &self.gates[gi];
+        let inputs: Vec<bool> = g.inputs.iter().map(|n| self.levels[n.0 as usize]).collect();
+        let current = self.levels[g.output.0 as usize];
+        let new_level = g.kind.eval(&inputs, current);
+
+        // Inertial-delay model: at most one pending schedule per gate.
+        match self.pending[gi] {
+            Some((seq, lvl)) if lvl == new_level => {
+                let _ = seq; // already scheduled to the right level
+                return;
+            }
+            Some((seq, _)) => {
+                // Cancel the stale opposite schedule (pulse swallowed).
+                self.cancelled.insert(seq);
+                self.stats.events_cancelled += 1;
+                self.pending[gi] = None;
+            }
+            None => {}
+        }
+        if new_level == current {
+            return;
+        }
+        let at = self.now + self.gates[gi].delay;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.stats.events_scheduled += 1;
+        self.pending[gi] = Some((seq, new_level));
+        let out = self.gates[gi].output;
+        self.queue.push(Reverse(Event { at, seq, net: out, level: new_level }));
+        // Clear pending once the event fires: handled lazily — a fired
+        // event's seq no longer matches, so overwrite on next eval. To keep
+        // the single-slot invariant exact we clear on processing below.
+    }
+}
+
+// NOTE on `pending`: entries are cleared lazily — once an event fires, the
+// slot may still name its seq, but any later evaluation either agrees
+// (no-op) or schedules the opposite level and cancels a seq that is no
+// longer queued; `cancelled` ignores unknown seqs by construction of
+// HashSet::remove. This keeps the hot path allocation-free.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::circuit::GateKind;
+
+    #[test]
+    fn buffer_chain_accumulates_delay() {
+        let mut c = Circuit::new();
+        let a = c.net();
+        let mut n = a;
+        for _ in 0..10 {
+            n = c.delay_net(n, Ps(100));
+        }
+        let mut sim = Simulator::new(&c);
+        sim.watch(n);
+        sim.schedule(a, true, Ps(50));
+        sim.run_until(Ps(1_000_000));
+        assert_eq!(sim.first_edge(n, true), Some(Ps(1050)));
+    }
+
+    #[test]
+    fn inertial_filter_swallows_short_pulse() {
+        let mut c = Circuit::new();
+        let a = c.net();
+        let o = c.gate(GateKind::Buf, &[a], Ps(200));
+        let mut sim = Simulator::new(&c);
+        sim.watch(o);
+        // 50 ps pulse through a 200 ps gate: swallowed.
+        sim.schedule(a, true, Ps(100));
+        sim.schedule(a, false, Ps(150));
+        sim.run_until(Ps(10_000));
+        assert!(sim.trace(o).is_empty(), "pulse shorter than delay must vanish");
+        assert!(sim.stats.events_cancelled >= 1);
+    }
+
+    #[test]
+    fn mux_selects_arcs() {
+        let mut c = Circuit::new();
+        let start = c.net();
+        let sel = c.net(); // 0 initially
+        let out = c.pdl_element(start, sel, Ps(400), Ps(600), Ps(124));
+        let mut sim = Simulator::new(&c);
+        sim.watch(out);
+        sim.schedule(start, true, Ps(0));
+        sim.run_until(Ps(100_000));
+        // sel=0 → slow arc: 600 ps stage delay total.
+        assert_eq!(sim.first_edge(out, true), Some(Ps(600)));
+    }
+
+    #[test]
+    fn mux_fast_arc_with_sel_high() {
+        let mut c = Circuit::new();
+        let start = c.net();
+        let sel = c.net_init(true);
+        let out = c.pdl_element(start, sel, Ps(400), Ps(600), Ps(124));
+        let mut sim = Simulator::new(&c);
+        sim.watch(out);
+        sim.schedule(start, true, Ps(0));
+        sim.run_until(Ps(100_000));
+        assert_eq!(sim.first_edge(out, true), Some(Ps(400)));
+    }
+
+    #[test]
+    fn transparent_latch_holds_when_opaque() {
+        let mut c = Circuit::new();
+        let en = c.net_init(true);
+        let d = c.net();
+        let q = c.gate(GateKind::LatchT, &[en, d], Ps(50));
+        let mut sim = Simulator::new(&c);
+        sim.watch(q);
+        sim.schedule(d, true, Ps(100)); // transparent: passes
+        sim.schedule(en, false, Ps(300)); // close latch
+        sim.schedule(d, false, Ps(400)); // must NOT pass
+        sim.run_until(Ps(10_000));
+        assert_eq!(sim.trace(q), &[(Ps(150), true)]);
+        assert!(sim.level(q));
+    }
+
+    #[test]
+    fn xnor_ring_reaches_fixpoint() {
+        // MOUSETRAP enable logic shape: en = XNOR(req, ack).
+        let mut c = Circuit::new();
+        let req = c.net();
+        let ack = c.net();
+        let en = c.gate(GateKind::Xnor2, &[req, ack], Ps(80));
+        let mut sim = Simulator::new(&c);
+        sim.watch(en);
+        sim.schedule(req, true, Ps(0)); // en: 1→0 (after init eval)
+        sim.schedule(ack, true, Ps(500)); // en: 0→1
+        sim.run_until(Ps(10_000));
+        // Initial levels are (0,0) → XNOR=1 but initial net level is 0: the
+        // first evaluation happens on the req edge.
+        let tr = sim.trace(en);
+        assert!(tr.contains(&(Ps(580), true)), "trace {tr:?}");
+    }
+
+    #[test]
+    fn deterministic_event_order() {
+        let build = || {
+            let mut c = Circuit::new();
+            let a = c.net();
+            let b = c.delay_net(a, Ps(10));
+            let d = c.delay_net(a, Ps(10));
+            let o = c.gate(GateKind::Xor2, &[b, d], Ps(10));
+            (c, a, o)
+        };
+        let run = || {
+            let (c, a, o) = build();
+            let mut sim = Simulator::new(&c);
+            sim.watch(o);
+            sim.schedule(a, true, Ps(0));
+            sim.run_until(Ps(1000));
+            (sim.trace(o).to_vec(), sim.stats)
+        };
+        assert_eq!(run(), run());
+    }
+}

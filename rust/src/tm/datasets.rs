@@ -1,0 +1,159 @@
+//! Dataset access for the Rust side.
+//!
+//! Booleanized test sets are exported by the Python AOT path
+//! (`artifacts/data/<name>_test.json`): the Rust substrate never
+//! re-implements the stroke renderer — it consumes the exact bits the model
+//! was evaluated on, so functional results are bit-comparable across the
+//! HLO path, the Rust clause evaluator and the Python oracle.
+//!
+//! For scaling sweeps that need unlimited synthetic inputs (Figs. 10–12),
+//! [`synthetic_clause_bits`] draws clause-output vectors directly with a
+//! controlled fire rate and margin structure — the quantities the PDL/
+//! arbiter latency actually depends on.
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::util::{json, SplitMix64};
+
+use super::{model::WorkloadSpec, parse_bits};
+
+/// A Booleanized test set exported from the build path.
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    pub name: String,
+    pub n_features: usize,
+    /// Boolean feature vectors.
+    pub x: Vec<Vec<bool>>,
+    /// Ground-truth labels.
+    pub y: Vec<usize>,
+}
+
+impl TestSet {
+    pub fn load(path: &Path) -> Result<TestSet> {
+        let doc = json::parse_file(path)?;
+        let n = doc.get("n")?.as_usize()?;
+        let n_features = doc.get("n_features")?.as_usize()?;
+        let x = doc
+            .get("x")?
+            .as_arr()?
+            .iter()
+            .map(|row| parse_bits(row.as_str()?))
+            .collect::<Result<Vec<_>>>()?;
+        let y = doc
+            .get("y")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        ensure!(x.len() == n && y.len() == n, "test set length mismatch");
+        for row in &x {
+            ensure!(row.len() == n_features);
+        }
+        let name = doc.get("name")?.as_str()?.to_string();
+        Ok(TestSet { name, n_features, x, y })
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+}
+
+/// Draw per-class clause-bit vectors for one synthetic sample.
+///
+/// One class (the "winner") fires clauses at `spec.fire_rate`; the others
+/// fire at a reduced rate, creating the class-sum margin distribution the
+/// async latency depends on. Polarity alternates +,− as in training, so a
+/// fired even-index clause supports and a fired odd-index clause opposes.
+pub fn synthetic_clause_bits(
+    spec: &WorkloadSpec,
+    winner: usize,
+    rng: &mut SplitMix64,
+) -> Vec<Vec<bool>> {
+    (0..spec.n_classes)
+        .map(|k| {
+            let (p_pos, p_neg) = if k == winner {
+                // Winning class: positive clauses likely, negatives rare.
+                (spec.fire_rate, spec.fire_rate * 0.25)
+            } else {
+                // Losing classes: weaker support, more opposition.
+                (spec.fire_rate * 0.55, spec.fire_rate * 0.45)
+            };
+            (0..spec.clauses_per_class)
+                .map(|j| rng.next_bool(if j % 2 == 0 { p_pos } else { p_neg }))
+                .collect()
+        })
+        .collect()
+}
+
+/// Signed class sum of one clause-bit vector (alternating polarity).
+pub fn signed_sum(bits: &[bool]) -> i32 {
+    bits.iter()
+        .enumerate()
+        .map(|(j, &b)| {
+            if !b {
+                0
+            } else if j % 2 == 0 {
+                1
+            } else {
+                -1
+            }
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_margins_favor_winner() {
+        let spec = WorkloadSpec {
+            n_classes: 6,
+            clauses_per_class: 100,
+            n_features: 784,
+            fire_rate: 0.5,
+        };
+        let mut rng = SplitMix64::new(7);
+        let mut wins = 0;
+        let n = 300;
+        for i in 0..n {
+            let winner = i % spec.n_classes;
+            let bits = synthetic_clause_bits(&spec, winner, &mut rng);
+            let sums: Vec<i32> = bits.iter().map(|b| signed_sum(b)).collect();
+            let best = (0..sums.len()).max_by_key(|&k| sums[k]).unwrap();
+            if best == winner {
+                wins += 1;
+            }
+        }
+        assert!(wins as f64 / n as f64 > 0.9, "winner should usually argmax ({wins}/{n})");
+    }
+
+    #[test]
+    fn signed_sum_alternates() {
+        assert_eq!(signed_sum(&[true, true, true, true]), 0);
+        assert_eq!(signed_sum(&[true, false, true, false]), 2);
+        assert_eq!(signed_sum(&[false, true, false, true]), -2);
+    }
+
+    #[test]
+    fn load_rejects_malformed() {
+        let dir = std::env::temp_dir().join("tdpc_testset");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        std::fs::write(&p, r#"{"name":"x","n":2,"n_features":3,"x":["010"],"y":[0,1]}"#)
+            .unwrap();
+        assert!(TestSet::load(&p).is_err());
+        let q = dir.join("good.json");
+        std::fs::write(&q, r#"{"name":"x","n":2,"n_features":3,"x":["010","111"],"y":[0,1]}"#)
+            .unwrap();
+        let ts = TestSet::load(&q).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts.x[1], vec![true, true, true]);
+    }
+}

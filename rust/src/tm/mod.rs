@@ -1,0 +1,137 @@
+//! Tsetlin Machine core: trained-model loading, clause evaluation, and
+//! dataset access on the Rust side.
+//!
+//! Models are trained once on the Python build path (`make artifacts`) and
+//! interchange as JSON under `artifacts/models/`; this module loads them
+//! for the hardware substrates (the simulators need per-sample clause bits)
+//! and for functional cross-checks against the PJRT-executed HLO.
+
+pub mod datasets;
+pub mod model;
+
+pub use datasets::TestSet;
+pub use model::{TmModel, WorkloadSpec};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json;
+
+/// The artifact manifest (`artifacts/manifest.json`) — the index the Python
+/// AOT path emits for everything the Rust side consumes.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub batch_sizes: Vec<usize>,
+    pub models: Vec<ManifestEntry>,
+}
+
+/// One model configuration in the manifest (a row of the paper's Table I).
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub dataset: String,
+    pub n_classes: usize,
+    pub n_features: usize,
+    pub clauses_per_class: usize,
+    pub t: f64,
+    pub s: f64,
+    /// Test accuracy achieved at training time (%).
+    pub accuracy: f64,
+    /// The paper's Table I accuracy (%).
+    pub paper_accuracy: f64,
+    pub model_path: PathBuf,
+    /// HLO file per batch size.
+    pub hlo_paths: Vec<(usize, PathBuf)>,
+    pub golden_path: PathBuf,
+    pub test_data_path: PathBuf,
+}
+
+impl Manifest {
+    /// Default artifacts root: `$TDPC_ARTIFACTS` or `./artifacts`.
+    pub fn default_root() -> PathBuf {
+        std::env::var("TDPC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> Result<Manifest> {
+        Self::load(&Self::default_root())
+    }
+
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let doc = json::parse_file(&root.join("manifest.json"))
+            .context("loading artifact manifest (run `make artifacts` first)")?;
+        let batch_sizes = doc
+            .get("batch_sizes")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let mut models = Vec::new();
+        for (name, m) in doc.get("models")?.as_obj()? {
+            let mut hlo_paths = Vec::new();
+            for (b, p) in m.get("hlo")?.as_obj()? {
+                hlo_paths.push((b.parse::<usize>()?, root.join(p.as_str()?)));
+            }
+            hlo_paths.sort_by_key(|(b, _)| *b);
+            models.push(ManifestEntry {
+                name: name.clone(),
+                dataset: m.get("dataset")?.as_str()?.to_string(),
+                n_classes: m.get("n_classes")?.as_usize()?,
+                n_features: m.get("n_features")?.as_usize()?,
+                clauses_per_class: m.get("clauses_per_class")?.as_usize()?,
+                t: m.get("T")?.as_f64()?,
+                s: m.get("s")?.as_f64()?,
+                accuracy: m.get("accuracy")?.as_f64()?,
+                paper_accuracy: m.get("paper_accuracy")?.as_f64()?,
+                model_path: root.join(m.get("model")?.as_str()?),
+                golden_path: root.join(m.get("golden")?.as_str()?),
+                test_data_path: root.join(m.get("test_data")?.as_str()?),
+                hlo_paths,
+            });
+        }
+        models.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(Manifest { root: root.to_path_buf(), batch_sizes, models })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| format!("model {name:?} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str, batch: usize) -> Result<PathBuf> {
+        let e = self.entry(name)?;
+        e.hlo_paths
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .map(|(_, p)| p.clone())
+            .with_context(|| format!("no HLO for {name} at batch {batch}"))
+    }
+}
+
+/// Decode a "0101…" bitstring (the artifact JSON compaction).
+pub fn parse_bits(s: &str) -> Result<Vec<bool>> {
+    s.chars()
+        .map(|c| match c {
+            '0' => Ok(false),
+            '1' => Ok(true),
+            other => anyhow::bail!("invalid bit char {other:?}"),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_bits_roundtrip() {
+        assert_eq!(parse_bits("0101").unwrap(), vec![false, true, false, true]);
+        assert!(parse_bits("01x1").is_err());
+        assert!(parse_bits("").unwrap().is_empty());
+    }
+}

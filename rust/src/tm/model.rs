@@ -1,0 +1,313 @@
+//! Trained TM model: clause evaluation and class sums on the Rust side.
+//!
+//! This mirrors the semantics of the Pallas kernel / jnp oracle exactly
+//! (see `python/compile/kernels/ref.py`): a clause fires iff every included
+//! literal is 1 and the clause is non-empty; class sums are signed votes.
+//! The hardware simulators consume the *clause bits* (they are the PDL
+//! select inputs); `class_sums` is used for functional cross-checks.
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::util::json;
+
+use super::parse_bits;
+
+/// A trained multi-class TM in the interchange layout (clause axis
+/// flattened class-major, literals `[x, ~x]`).
+#[derive(Debug, Clone)]
+pub struct TmModel {
+    pub name: String,
+    pub n_classes: usize,
+    pub n_features: usize,
+    pub clauses_per_class: usize,
+    /// Include masks, one bitvec of length `2 * n_features` per clause.
+    pub include: Vec<Vec<bool>>,
+    /// +1 / −1 vote per clause (class-major).
+    pub polarity: Vec<i8>,
+    /// Clause has ≥1 include.
+    pub nonempty: Vec<bool>,
+    /// Training-time test accuracy (%).
+    pub accuracy: f64,
+    /// Bit-packed include masks (64 literals per word, same clause order) —
+    /// the clause-evaluation hot path works word-wise (§Perf L3: ~50×
+    /// over the bool-wise loop on MNIST-scale literal counts).
+    packed_include: Vec<Vec<u64>>,
+}
+
+/// A synthetic workload description used by the scaling sweeps (Figs.
+/// 10–12), where no trained model exists: clause bits are generated from a
+/// target fire-rate instead.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadSpec {
+    pub n_classes: usize,
+    pub clauses_per_class: usize,
+    /// Number of Boolean input features (for clause-block depth).
+    pub n_features: usize,
+    /// Probability a clause fires on a given sample.
+    pub fire_rate: f64,
+}
+
+/// Pack a bit vector into u64 words (LSB-first within each word).
+pub(crate) fn pack_bits(bits: &[bool]) -> Vec<u64> {
+    let mut words = vec![0u64; bits.len().div_ceil(64)];
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            words[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    words
+}
+
+impl TmModel {
+    /// Construct from parts (computes the packed representation).
+    pub fn assemble(
+        name: String,
+        n_classes: usize,
+        n_features: usize,
+        clauses_per_class: usize,
+        include: Vec<Vec<bool>>,
+        polarity: Vec<i8>,
+        nonempty: Vec<bool>,
+        accuracy: f64,
+    ) -> TmModel {
+        let packed_include = include.iter().map(|row| pack_bits(row)).collect();
+        TmModel {
+            name,
+            n_classes,
+            n_features,
+            clauses_per_class,
+            include,
+            polarity,
+            nonempty,
+            accuracy,
+            packed_include,
+        }
+    }
+
+    pub fn load(path: &Path) -> Result<TmModel> {
+        let doc = json::parse_file(path)?;
+        let n_classes = doc.get("n_classes")?.as_usize()?;
+        let n_features = doc.get("n_features")?.as_usize()?;
+        let clauses_per_class = doc.get("clauses_per_class")?.as_usize()?;
+        let include = doc
+            .get("include")?
+            .as_arr()?
+            .iter()
+            .map(|row| parse_bits(row.as_str()?))
+            .collect::<Result<Vec<_>>>()?;
+        let polarity = doc
+            .get("polarity")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_i64()? as i8))
+            .collect::<Result<Vec<_>>>()?;
+        let nonempty = doc
+            .get("nonempty")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_i64()? != 0))
+            .collect::<Result<Vec<_>>>()?;
+        let c_total = n_classes * clauses_per_class;
+        ensure!(include.len() == c_total, "include rows {} != {c_total}", include.len());
+        ensure!(polarity.len() == c_total);
+        ensure!(nonempty.len() == c_total);
+        for row in &include {
+            ensure!(row.len() == 2 * n_features, "literal width mismatch");
+        }
+        let name = doc
+            .get_opt("name")
+            .and_then(|v| v.as_str().ok().map(String::from))
+            .unwrap_or_else(|| "unnamed".into());
+        let accuracy = doc.get_opt("accuracy").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+        Ok(TmModel::assemble(
+            name,
+            n_classes,
+            n_features,
+            clauses_per_class,
+            include,
+            polarity,
+            nonempty,
+            accuracy,
+        ))
+    }
+
+    pub fn c_total(&self) -> usize {
+        self.n_classes * self.clauses_per_class
+    }
+
+    /// Literal vector `[x, ~x]` for one Boolean input sample.
+    pub fn literals(&self, x_bool: &[bool]) -> Vec<bool> {
+        debug_assert_eq!(x_bool.len(), self.n_features);
+        let mut lits = Vec::with_capacity(2 * self.n_features);
+        lits.extend_from_slice(x_bool);
+        lits.extend(x_bool.iter().map(|&b| !b));
+        lits
+    }
+
+    /// Evaluate one clause on a literal vector.
+    #[inline]
+    pub fn clause_fires(&self, clause: usize, lits: &[bool]) -> bool {
+        if !self.nonempty[clause] {
+            return false;
+        }
+        self.clause_fires_packed(clause, &pack_bits(lits))
+    }
+
+    /// Word-wise clause evaluation: fires iff every included literal is 1,
+    /// i.e. `include & !literals == 0` in every word.
+    #[inline]
+    fn clause_fires_packed(&self, clause: usize, lit_words: &[u64]) -> bool {
+        if !self.nonempty[clause] {
+            return false;
+        }
+        self.packed_include[clause]
+            .iter()
+            .zip(lit_words)
+            .all(|(&inc, &lit)| inc & !lit == 0)
+    }
+
+    /// Clause outputs for one sample, grouped per class — the PDL select
+    /// inputs of the hardware. Packs the literal vector once and evaluates
+    /// all clauses word-wise (§Perf L3).
+    pub fn clause_bits(&self, x_bool: &[bool]) -> Vec<Vec<bool>> {
+        let lit_words = pack_bits(&self.literals(x_bool));
+        (0..self.n_classes)
+            .map(|k| {
+                let lo = k * self.clauses_per_class;
+                (lo..lo + self.clauses_per_class)
+                    .map(|c| self.clause_fires_packed(c, &lit_words))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Signed class sums for one sample.
+    pub fn class_sums(&self, x_bool: &[bool]) -> Vec<i32> {
+        let bits = self.clause_bits(x_bool);
+        (0..self.n_classes)
+            .map(|k| {
+                bits[k]
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &fired)| {
+                        if fired {
+                            self.polarity[k * self.clauses_per_class + j] as i32
+                        } else {
+                            0
+                        }
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Functional argmax prediction (ties resolve to the lowest index,
+    /// matching `jnp.argmax`).
+    pub fn predict(&self, x_bool: &[bool]) -> usize {
+        let sums = self.class_sums(x_bool);
+        let mut best = 0usize;
+        for (k, &s) in sums.iter().enumerate() {
+            if s > sums[best] {
+                best = k;
+            }
+        }
+        best
+    }
+
+    /// The maximum clause fan-in (number of includes) — determines the
+    /// clause block's LUT-tree depth for the bundled-data delay.
+    pub fn max_clause_fanin(&self) -> usize {
+        self.include
+            .iter()
+            .map(|row| row.iter().filter(|&&b| b).count())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Workload view of this model (for the shared hardware builders).
+    pub fn workload(&self) -> WorkloadSpec {
+        WorkloadSpec {
+            n_classes: self.n_classes,
+            clauses_per_class: self.clauses_per_class,
+            n_features: self.n_features,
+            fire_rate: 0.5,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny hand-built model: 2 classes × 2 clauses over 2 features.
+    /// Class 0: clause0 (+) includes x0; clause1 (−) includes x1.
+    /// Class 1: clause0 (+) includes ~x0; clause1 (−) empty.
+    pub(crate) fn toy() -> TmModel {
+        TmModel::assemble(
+            "toy".into(),
+            2,
+            2,
+            2,
+            vec![
+                vec![true, false, false, false],  // x0
+                vec![false, true, false, false],  // x1
+                vec![false, false, true, false],  // ~x0
+                vec![false, false, false, false], // empty
+            ],
+            vec![1, -1, 1, -1],
+            vec![true, true, true, false],
+            100.0,
+        )
+    }
+
+    #[test]
+    fn literals_layout() {
+        let m = toy();
+        assert_eq!(m.literals(&[true, false]), vec![true, false, false, true]);
+    }
+
+    #[test]
+    fn clause_semantics() {
+        let m = toy();
+        let lits = m.literals(&[true, true]);
+        assert!(m.clause_fires(0, &lits)); // x0=1
+        assert!(m.clause_fires(1, &lits)); // x1=1
+        assert!(!m.clause_fires(2, &lits)); // ~x0=0
+        assert!(!m.clause_fires(3, &lits)); // empty never fires
+    }
+
+    #[test]
+    fn class_sums_signed() {
+        let m = toy();
+        // x = [1, 0]: class0 = +1 (c0 fires) − 0 = 1; class1 = 0.
+        assert_eq!(m.class_sums(&[true, false]), vec![1, 0]);
+        // x = [1, 1]: class0 = +1 − 1 = 0; class1 = 0.
+        assert_eq!(m.class_sums(&[true, true]), vec![0, 0]);
+        // x = [0, 0]: class0 = 0; class1 = +1.
+        assert_eq!(m.class_sums(&[false, false]), vec![0, 1]);
+    }
+
+    #[test]
+    fn predict_argmax_lowest_tie() {
+        let m = toy();
+        assert_eq!(m.predict(&[true, false]), 0);
+        assert_eq!(m.predict(&[false, false]), 1);
+        assert_eq!(m.predict(&[true, true]), 0, "tie → lowest index (jnp.argmax)");
+    }
+
+    #[test]
+    fn clause_bits_grouping() {
+        let m = toy();
+        let bits = m.clause_bits(&[true, false]);
+        assert_eq!(bits.len(), 2);
+        assert_eq!(bits[0], vec![true, false]);
+        assert_eq!(bits[1], vec![false, false]);
+    }
+
+    #[test]
+    fn max_fanin() {
+        assert_eq!(toy().max_clause_fanin(), 1);
+    }
+}

@@ -1,0 +1,78 @@
+//! Minimal benchmarking harness (criterion is not in the offline vendored
+//! crate set — DESIGN.md §7).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module: each
+//! measurement warms up, then runs timed batches until a wall budget is
+//! spent, reporting mean / p50 / p99 per iteration. Output format is one
+//! line per benchmark, stable for EXPERIMENTS.md extraction:
+//!
+//! ```text
+//! bench <name> ... mean 12.3 µs/iter  p50 11.8  p99 16.0  (n=4096)
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// Measure `f` repeatedly; returns per-iteration timings in µs.
+pub fn measure(warmup: Duration, budget: Duration, mut f: impl FnMut()) -> Vec<f64> {
+    let w0 = Instant::now();
+    while w0.elapsed() < warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let b0 = Instant::now();
+    while b0.elapsed() < budget {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    samples
+}
+
+/// Run + report one benchmark. Returns the mean µs/iter.
+pub fn bench(name: &str, mut f: impl FnMut()) -> f64 {
+    let samples = measure(Duration::from_millis(150), Duration::from_millis(700), &mut f);
+    report(name, &samples)
+}
+
+/// Run + report with custom budgets (for expensive iterations).
+pub fn bench_with(name: &str, warmup: Duration, budget: Duration, mut f: impl FnMut()) -> f64 {
+    let samples = measure(warmup, budget, &mut f);
+    report(name, &samples)
+}
+
+fn report(name: &str, samples: &[f64]) -> f64 {
+    let s = crate::util::stats::summarize(samples);
+    println!(
+        "bench {name:<44} mean {:>10.2} µs/iter  p50 {:>9.2}  p99 {:>9.2}  (n={})",
+        s.mean, s.p50, s.p99, s.n
+    );
+    s.mean
+}
+
+/// Throughput helper: items/second given mean µs per iteration of `items`.
+pub fn throughput(mean_us_per_iter: f64, items_per_iter: usize) -> f64 {
+    items_per_iter as f64 / (mean_us_per_iter / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let samples = measure(
+            Duration::from_millis(1),
+            Duration::from_millis(10),
+            || {
+                std::hint::black_box((0..100).sum::<u64>());
+            },
+        );
+        assert!(!samples.is_empty());
+        assert!(samples.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn throughput_math() {
+        assert!((throughput(1000.0, 32) - 32_000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,20 @@
+//! In-tree utilities.
+//!
+//! The offline vendored crate set has no PRNG / stats / JSON / property
+//! testing crates, so the pieces this project needs are implemented here
+//! (DESIGN.md §7): [`rng`] mirrors the Python build path's `splitmix64`
+//! stream bit-for-bit so datasets regenerate identically across languages,
+//! [`stats`] provides the Spearman rank correlation the paper's Fig. 6
+//! reports, [`json`] is a minimal parser/emitter for the artifact
+//! interchange files, and [`prop`] is a small property-testing harness used
+//! by the coordinator/substrate invariant tests.
+
+pub mod benchkit;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod time;
+
+pub use rng::SplitMix64;
+pub use time::Ps;

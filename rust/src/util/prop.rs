@@ -1,0 +1,150 @@
+//! Miniature property-testing harness (proptest is not in the offline
+//! vendored crate set — DESIGN.md §7).
+//!
+//! Usage mirrors the 80% of proptest this project needs: generate many
+//! random cases from a seeded [`SplitMix64`], run the property, and on
+//! failure report the case index + seed so the exact case replays
+//! deterministically.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the xla_extension rpath in this
+//! # // offline image; the same pattern executes in unit tests below.
+//! use tdpc::util::prop::check;
+//! check("sum is commutative", 200, |g| {
+//!     let a = g.int(0, 1000) as u64;
+//!     let b = g.int(0, 1000) as u64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::SplitMix64;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Log of drawn values, printed on failure for diagnosis.
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), log: Vec::new() }
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        let v = lo + (self.rng.next_u64() % span) as i64;
+        self.log.push(format!("int({lo},{hi})={v}"));
+        v
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn float(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.next_range_f64(lo, hi);
+        self.log.push(format!("float({lo},{hi})={v:.6}"));
+        v
+    }
+
+    /// Bernoulli draw.
+    pub fn boolean(&mut self, p: f64) -> bool {
+        let v = self.rng.next_bool(p);
+        self.log.push(format!("bool({p})={v}"));
+        v
+    }
+
+    /// Random bit vector of length `n` with ones-density `p`.
+    pub fn bits(&mut self, n: usize, p: f64) -> Vec<bool> {
+        let v: Vec<bool> = (0..n).map(|_| self.rng.next_bool(p)).collect();
+        let ones = v.iter().filter(|&&b| b).count();
+        self.log.push(format!("bits(n={n},p={p}) ones={ones}"));
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.next_below(xs.len());
+        self.log.push(format!("choose idx={i}"));
+        &xs[i]
+    }
+
+    /// Access the underlying PRNG (for bulk draws that shouldn't be logged).
+    pub fn rng(&mut self) -> &mut SplitMix64 {
+        &mut self.rng
+    }
+}
+
+/// Environment knob so CI can turn case counts up: `TDPC_PROP_CASES`.
+fn case_multiplier() -> usize {
+    std::env::var("TDPC_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Run `cases` random cases of the property. Panics (with replay info) on
+/// the first failing case.
+pub fn check(name: &str, cases: usize, mut property: impl FnMut(&mut Gen)) {
+    let cases = cases * case_multiplier();
+    // Fixed base seed: failures replay without environment coordination.
+    let base = 0x7D_C0DE ^ (name.len() as u64) << 32 ^ fnv(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut g);
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "property {name:?} failed at case {case}/{cases} (seed {seed:#x})\n drawn: {}",
+                g.log.join(", ")
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("add commutes", 100, |g| {
+            let a = g.int(-1000, 1000);
+            let b = g.int(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_failures() {
+        let result = std::panic::catch_unwind(|| {
+            check("always fails eventually", 50, |g| {
+                let v = g.int(0, 100);
+                assert!(v < 101, "ok");
+                assert!(v < 5, "should fail for most draws");
+            });
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn bits_density() {
+        check("bits density roughly p", 5, |g| {
+            let v = g.bits(4000, 0.3);
+            let ones = v.iter().filter(|&&b| b).count();
+            assert!((ones as f64 / 4000.0 - 0.3).abs() < 0.06);
+        });
+    }
+}

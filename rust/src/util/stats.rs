@@ -1,0 +1,241 @@
+//! Small statistics toolkit.
+//!
+//! The paper's evaluation leans on a few specific statistics: Spearman's
+//! rank correlation ρ for the PDL monotonicity claim (Fig. 6), mean ± σ
+//! bands for the average-case latency (Fig. 10's ±3σ interval), and
+//! percentile summaries for the serving-path latency reports.
+
+/// Arithmetic mean. Empty slices return 0.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Fractional ranks with ties averaged (midranks), as Spearman requires.
+pub fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        // Average rank for the tie group [i, j] (1-based ranks).
+        let r = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = r;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let (mx, my) = (mean(xs), mean(ys));
+    let mut num = 0.0;
+    let mut dx2 = 0.0;
+    let mut dy2 = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        num += dx * dy;
+        dx2 += dx * dx;
+        dy2 += dy * dy;
+    }
+    if dx2 == 0.0 || dy2 == 0.0 {
+        return 0.0;
+    }
+    num / (dx2 * dy2).sqrt()
+}
+
+/// Spearman's rank correlation ρ — the paper's Fig. 6 monotonicity metric.
+/// −1 is a perfectly decreasing monotonic relationship.
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    pearson(&ranks(xs), &ranks(ys))
+}
+
+/// Percentile via linear interpolation on the sorted copy (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Summary of a sample: mean, σ, min, max, p50, p99.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    Summary {
+        n: xs.len(),
+        mean: mean(xs),
+        std: std_dev(xs),
+        min: xs.iter().copied().fold(f64::INFINITY, f64::min),
+        max: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        p50: percentile(xs, 50.0),
+        p99: percentile(xs, 99.0),
+    }
+}
+
+/// Simple online latency histogram with fixed log-spaced buckets; used by
+/// the coordinator's metrics without allocating per-request.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Bucket upper bounds in µs (log-spaced), plus +inf overflow.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 1 µs .. ~16 s in ×2 steps.
+        let bounds: Vec<f64> = (0..24).map(|i| 1.0_f64 * (1u64 << i) as f64).collect();
+        let n = bounds.len();
+        Self { bounds, counts: vec![0; n + 1], total: 0, sum: 0.0 }
+    }
+
+    pub fn record(&mut self, value_us: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| value_us <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += value_us;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-quantile observation).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    f64::INFINITY
+                };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn ranks_with_ties() {
+        assert_eq!(ranks(&[10.0, 20.0, 20.0, 30.0]), vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn spearman_perfect_monotone() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys_inc: Vec<f64> = xs.iter().map(|x| x * x).collect();
+        let ys_dec: Vec<f64> = xs.iter().map(|x| -x * 3.0 + 7.0).collect();
+        assert!((spearman(&xs, &ys_inc) - 1.0).abs() < 1e-12);
+        assert!((spearman(&xs, &ys_dec) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_noise_is_small() {
+        let mut rng = crate::util::SplitMix64::new(5);
+        let xs: Vec<f64> = (0..2000).map(|_| rng.next_f64()).collect();
+        let ys: Vec<f64> = (0..2000).map(|_| rng.next_f64()).collect();
+        assert!(spearman(&xs, &ys).abs() < 0.08);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.quantile(0.5) >= 500.0);
+        assert!(h.quantile(0.99) >= 990.0);
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,143 @@
+//! Picosecond-resolution simulated time.
+//!
+//! All hardware delays in the substrate (net delays, LUT delays, PDL
+//! elements, clock periods) are integer picoseconds: the paper's measured
+//! quantities are in the 60 ps – 650 ps range (Table I), and integer time
+//! keeps the event-driven simulator exactly reproducible (no FP drift in
+//! event ordering).
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Sub};
+
+/// A span (or instant) of simulated time in picoseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Ps(pub u64);
+
+impl Ps {
+    pub const ZERO: Ps = Ps(0);
+
+    pub fn from_ns(ns: f64) -> Ps {
+        Ps((ns * 1000.0).round() as u64)
+    }
+
+    pub fn from_ps_f64(ps: f64) -> Ps {
+        Ps(ps.max(0.0).round() as u64)
+    }
+
+    pub fn as_ns(self) -> f64 {
+        self.0 as f64 / 1000.0
+    }
+
+    pub fn as_ps(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_ps_f64(self) -> f64 {
+        self.0 as f64
+    }
+
+    /// Saturating subtraction (useful for skew computations).
+    pub fn saturating_sub(self, rhs: Ps) -> Ps {
+        Ps(self.0.saturating_sub(rhs.0))
+    }
+
+    /// Absolute difference.
+    pub fn abs_diff(self, rhs: Ps) -> Ps {
+        Ps(self.0.abs_diff(rhs.0))
+    }
+
+    /// Scale by a dimensionless factor, rounding to the nearest ps.
+    pub fn scale(self, k: f64) -> Ps {
+        Ps((self.0 as f64 * k).round().max(0.0) as u64)
+    }
+}
+
+impl Add for Ps {
+    type Output = Ps;
+    fn add(self, rhs: Ps) -> Ps {
+        Ps(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Ps {
+    fn add_assign(&mut self, rhs: Ps) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Ps {
+    type Output = Ps;
+    fn sub(self, rhs: Ps) -> Ps {
+        Ps(self.0 - rhs.0)
+    }
+}
+
+impl Mul<u64> for Ps {
+    type Output = Ps;
+    fn mul(self, rhs: u64) -> Ps {
+        Ps(self.0 * rhs)
+    }
+}
+
+impl Div<u64> for Ps {
+    type Output = Ps;
+    fn div(self, rhs: u64) -> Ps {
+        Ps(self.0 / rhs)
+    }
+}
+
+impl Sum for Ps {
+    fn sum<I: Iterator<Item = Ps>>(iter: I) -> Ps {
+        Ps(iter.map(|p| p.0).sum())
+    }
+}
+
+impl fmt::Display for Ps {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1_000_000 {
+            write!(f, "{:.3} µs", self.0 as f64 / 1e6)
+        } else if self.0 >= 1_000 {
+            write!(f, "{:.3} ns", self.0 as f64 / 1e3)
+        } else {
+            write!(f, "{} ps", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(Ps(100) + Ps(50), Ps(150));
+        assert_eq!(Ps(100) - Ps(50), Ps(50));
+        assert_eq!(Ps(100) * 3, Ps(300));
+        assert_eq!(Ps(100) / 4, Ps(25));
+        assert_eq!(Ps(100).abs_diff(Ps(130)), Ps(30));
+        assert_eq!(Ps(50).saturating_sub(Ps(80)), Ps(0));
+    }
+
+    #[test]
+    fn conversions_and_display() {
+        assert_eq!(Ps::from_ns(1.5), Ps(1500));
+        assert_eq!(Ps(1500).as_ns(), 1.5);
+        assert_eq!(Ps(375).to_string(), "375 ps");
+        assert_eq!(Ps(1500).to_string(), "1.500 ns");
+        assert_eq!(Ps(2_500_000).to_string(), "2.500 µs");
+    }
+
+    #[test]
+    fn scale_rounds() {
+        assert_eq!(Ps(100).scale(0.5), Ps(50));
+        assert_eq!(Ps(3).scale(0.5), Ps(2)); // round-half-up at .5
+        assert_eq!(Ps(100).scale(0.0), Ps(0));
+    }
+
+    #[test]
+    fn sum_iterator() {
+        let total: Ps = [Ps(1), Ps(2), Ps(3)].into_iter().sum();
+        assert_eq!(total, Ps(6));
+    }
+}

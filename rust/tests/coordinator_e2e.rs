@@ -1,0 +1,114 @@
+//! End-to-end coordinator tests: requests through batching → PJRT →
+//! hardware replay, with metrics and shutdown behaviour.
+
+use std::time::Duration;
+
+use tdpc::asynctm::AsyncTmEngine;
+use tdpc::baselines::DesignParams;
+use tdpc::coordinator::{BatcherConfig, Coordinator};
+use tdpc::fabric::Device;
+use tdpc::flow::FlowConfig;
+use tdpc::tm::{Manifest, TestSet, TmModel};
+
+fn setup() -> Option<(std::path::PathBuf, TestSet, TmModel)> {
+    let root = Manifest::default_root();
+    let Ok(manifest) = Manifest::load(&root) else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    };
+    let entry = manifest.entry("iris_c10").unwrap().clone();
+    let test = TestSet::load(&entry.test_data_path).unwrap();
+    let model = TmModel::load(&entry.model_path).unwrap();
+    Some((root, test, model))
+}
+
+#[test]
+fn serves_requests_with_correct_predictions() {
+    let Some((root, test, model)) = setup() else { return };
+    let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(300) };
+    let coord = Coordinator::start(root, "iris_c10", cfg, None).unwrap();
+    for i in 0..20 {
+        let x = test.x[i % test.len()].clone();
+        let resp = coord.infer_blocking(x.clone()).unwrap();
+        assert_eq!(resp.pred, model.predict(&x), "request {i}");
+        assert!(resp.hw_decision_latency.is_none());
+        assert!(resp.service_latency_us > 0.0);
+    }
+    let m = coord.metrics();
+    assert_eq!(m.requests, 20);
+    assert!(m.batches >= 1);
+    coord.shutdown();
+}
+
+#[test]
+fn batches_form_under_concurrent_load() {
+    let Some((root, test, _model)) = setup() else { return };
+    let cfg = BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(4) };
+    let coord = Coordinator::start(root, "iris_c10", cfg, None).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let n = 200;
+    for i in 0..n {
+        coord.submit(test.x[i % test.len()].clone(), tx.clone()).unwrap();
+    }
+    drop(tx);
+    let responses: Vec<_> = rx.iter().take(n).collect();
+    assert_eq!(responses.len(), n);
+    let m = coord.metrics();
+    assert_eq!(m.requests as usize, n);
+    assert!(
+        m.mean_batch_size > 2.0,
+        "burst submission must produce real batches, got {}",
+        m.mean_batch_size
+    );
+    // Every request id answered exactly once.
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.request_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n);
+    coord.shutdown();
+}
+
+#[test]
+fn hardware_replay_reports_latency_and_agrees() {
+    let Some((root, test, model)) = setup() else { return };
+    let d = DesignParams::from_model(&model);
+    let engine =
+        AsyncTmEngine::build(&Device::xc7z020(), &d, &FlowConfig::table1_default(), 3).unwrap();
+    let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(200) };
+    let coord = Coordinator::start(root, "iris_c10", cfg, Some(engine)).unwrap();
+    let mut mismatch_with_margin = 0;
+    for i in 0..30 {
+        let x = test.x[i % test.len()].clone();
+        let resp = coord.infer_blocking(x.clone()).unwrap();
+        let lat = resp.hw_decision_latency.expect("hw engine attached");
+        assert!(lat.as_ns() > 1.0, "plausible on-chip latency");
+        // Hardware may only disagree on argmax ties.
+        let sums = model.class_sums(&x);
+        let top = *sums.iter().max().unwrap();
+        let tied = sums.iter().filter(|&&s| s == top).count() > 1;
+        if resp.hw_winner != Some(resp.pred) && !tied {
+            mismatch_with_margin += 1;
+        }
+    }
+    assert_eq!(mismatch_with_margin, 0, "hw argmax must match on non-tied samples");
+    let m = coord.metrics();
+    assert!(m.hw_mean_ns > 0.0);
+    coord.shutdown();
+}
+
+#[test]
+fn startup_fails_cleanly_on_bad_model() {
+    let Some((root, _, _)) = setup() else { return };
+    let cfg = BatcherConfig::default();
+    let err = Coordinator::start(root, "nonexistent_model", cfg, None);
+    assert!(err.is_err(), "unknown model must fail at startup, not at first request");
+}
+
+#[test]
+fn drop_without_shutdown_does_not_hang() {
+    let Some((root, test, _)) = setup() else { return };
+    let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(100) };
+    let coord = Coordinator::start(root, "iris_c10", cfg, None).unwrap();
+    let _ = coord.infer_blocking(test.x[0].clone()).unwrap();
+    drop(coord); // Drop impl joins the worker — must not deadlock.
+}

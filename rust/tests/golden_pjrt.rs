@@ -1,0 +1,127 @@
+//! Cross-layer golden test: the AOT-compiled HLO executed on PJRT must
+//! reproduce the Python reference path bit-exactly.
+//!
+//! `python/compile/aot.py` stores golden vectors (inputs, class sums,
+//! clause bits, predictions) computed through the pure-jnp oracle; this
+//! test loads each model's HLO text, compiles it on the PJRT CPU client,
+//! executes the same inputs, and compares everything. This is the
+//! proof-of-composition for L1 (Pallas kernel) → L2 (jax graph) → AOT →
+//! L3 (Rust runtime).
+//!
+//! Requires `make artifacts`; tests skip (pass with a notice) otherwise.
+
+use tdpc::runtime::{bools_to_f32, ModelRegistry};
+use tdpc::tm::{parse_bits, Manifest, TmModel};
+use tdpc::util::json;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    match Manifest::load_default() {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+struct Golden {
+    inputs: Vec<Vec<bool>>,
+    sums: Vec<Vec<i32>>,
+    fired: Vec<Vec<bool>>,
+    pred: Vec<i32>,
+}
+
+fn load_golden(path: &std::path::Path) -> Golden {
+    let doc = json::parse_file(path).unwrap();
+    let inputs = doc
+        .get("inputs").unwrap().as_arr().unwrap()
+        .iter().map(|v| parse_bits(v.as_str().unwrap()).unwrap()).collect();
+    let sums = doc
+        .get("sums").unwrap().as_arr().unwrap()
+        .iter()
+        .map(|row| row.as_arr().unwrap().iter().map(|v| v.as_i64().unwrap() as i32).collect())
+        .collect();
+    let fired = doc
+        .get("fired").unwrap().as_arr().unwrap()
+        .iter().map(|v| parse_bits(v.as_str().unwrap()).unwrap()).collect();
+    let pred = doc
+        .get("pred").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_i64().unwrap() as i32).collect();
+    Golden { inputs, sums, fired, pred }
+}
+
+#[test]
+fn pjrt_matches_golden_vectors_batch1() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let registry = ModelRegistry::new(manifest).unwrap();
+    for entry in registry.manifest().models.clone() {
+        let golden = load_golden(&entry.golden_path);
+        let runner = registry.runner(&entry.name, 1).unwrap();
+        for i in 0..golden.inputs.len() {
+            let out = runner
+                .run(&bools_to_f32(std::slice::from_ref(&golden.inputs[i])))
+                .unwrap();
+            assert_eq!(out.sums_row(0), &golden.sums[i][..], "{} sample {i} sums", entry.name);
+            assert_eq!(out.pred[0], golden.pred[i], "{} sample {i} pred", entry.name);
+            let fired: Vec<bool> = out.fired.iter().map(|&v| v != 0).collect();
+            assert_eq!(fired, golden.fired[i], "{} sample {i} clause bits", entry.name);
+        }
+    }
+}
+
+#[test]
+fn pjrt_batch32_consistent_with_batch1() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let registry = ModelRegistry::new(manifest).unwrap();
+    for entry in registry.manifest().models.clone() {
+        let golden = load_golden(&entry.golden_path);
+        let r32 = registry.runner(&entry.name, 32).unwrap();
+        // Tile the 8 golden inputs to a full batch of 32.
+        let rows: Vec<Vec<bool>> =
+            (0..32).map(|i| golden.inputs[i % golden.inputs.len()].clone()).collect();
+        let out = r32.run(&bools_to_f32(&rows)).unwrap();
+        for i in 0..32 {
+            let g = i % golden.inputs.len();
+            assert_eq!(out.sums_row(i), &golden.sums[g][..], "{} lane {i}", entry.name);
+            assert_eq!(out.pred[i], golden.pred[g], "{} lane {i}", entry.name);
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_rust_clause_evaluator() {
+    // Third implementation agreement: PJRT-executed HLO vs the independent
+    // Rust TmModel evaluator, on fresh test-set samples (not the goldens).
+    let Some(manifest) = manifest_or_skip() else { return };
+    let registry = ModelRegistry::new(manifest).unwrap();
+    for entry in registry.manifest().models.clone() {
+        let model = TmModel::load(&entry.model_path).unwrap();
+        let test = tdpc::tm::TestSet::load(&entry.test_data_path).unwrap();
+        let runner = registry.runner(&entry.name, 1).unwrap();
+        for i in (0..test.len().min(40)).step_by(5) {
+            let out = runner
+                .run(&bools_to_f32(std::slice::from_ref(&test.x[i])))
+                .unwrap();
+            let sums = model.class_sums(&test.x[i]);
+            assert_eq!(out.sums_row(0), &sums[..], "{} sample {i}", entry.name);
+            assert_eq!(out.pred[0] as usize, model.predict(&test.x[i]), "{} sample {i}", entry.name);
+        }
+    }
+}
+
+#[test]
+fn padded_partial_batches_truncate_correctly() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let registry = ModelRegistry::new(manifest).unwrap();
+    let entry = registry.manifest().entry("iris_c10").unwrap().clone();
+    let golden = load_golden(&entry.golden_path);
+    let runner = registry.runner("iris_c10", 32).unwrap();
+    let rows: Vec<Vec<bool>> = golden.inputs[..5].to_vec();
+    let out = runner.run_padded(&bools_to_f32(&rows), 5).unwrap();
+    assert_eq!(out.batch, 5);
+    assert_eq!(out.pred.len(), 5);
+    for i in 0..5 {
+        assert_eq!(out.pred[i], golden.pred[i]);
+        assert_eq!(out.sums_row(i), &golden.sums[i][..]);
+    }
+}

@@ -1,0 +1,94 @@
+//! Hardware-vs-functional agreement on real trained models: the simulated
+//! time-domain argmax must match the software argmax on every sample with
+//! a unique maximum (ties are genuinely ambiguous — paper footnote 1).
+
+use tdpc::asynctm::AsyncTmEngine;
+use tdpc::baselines::DesignParams;
+use tdpc::fabric::Device;
+use tdpc::flow::FlowConfig;
+use tdpc::tm::{Manifest, TestSet, TmModel};
+use tdpc::util::Ps;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    match Manifest::load_default() {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn tuned_engine_is_lossless_on_all_models() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let device = Device::xc7z020();
+    for entry in &manifest.models {
+        let model = TmModel::load(&entry.model_path).unwrap();
+        let test = TestSet::load(&entry.test_data_path).unwrap();
+        let d = DesignParams::from_model(&model);
+        let mut engine =
+            AsyncTmEngine::build(&device, &d, &FlowConfig::table1_default(), 11).unwrap();
+        let mut checked = 0;
+        for x in test.x.iter().take(120) {
+            let sums = model.class_sums(x);
+            let top = *sums.iter().max().unwrap();
+            if sums.iter().filter(|&&s| s == top).count() > 1 {
+                continue; // tie: either answer is defensible
+            }
+            let bits = model.clause_bits(x);
+            let hw = engine.infer(&bits).winner;
+            assert_eq!(hw, model.predict(x), "{} sample sums {sums:?}", entry.name);
+            checked += 1;
+        }
+        let expect_min = (test.len().min(120) / 2).min(50);
+        assert!(checked >= expect_min, "{}: too few non-tied samples ({checked})", entry.name);
+    }
+}
+
+#[test]
+fn decision_latency_anticorrelates_with_winner_margin() {
+    // The core time-domain law at system level: bigger winning class sums
+    // finish faster.
+    let Some(manifest) = manifest_or_skip() else { return };
+    let entry = manifest.entry("mnist_c50").unwrap();
+    let model = TmModel::load(&entry.model_path).unwrap();
+    let test = TestSet::load(&entry.test_data_path).unwrap();
+    let d = DesignParams::from_model(&model);
+    let mut engine = AsyncTmEngine::build(
+        &Device::xc7z020(),
+        &d,
+        &FlowConfig::table1_default(),
+        13,
+    )
+    .unwrap();
+    let mut margins = Vec::new();
+    let mut lats = Vec::new();
+    for x in test.x.iter().take(150) {
+        let sums = model.class_sums(x);
+        let top = *sums.iter().max().unwrap();
+        let bits = model.clause_bits(x);
+        let out = engine.infer(&bits);
+        margins.push(top as f64);
+        lats.push(out.decision_latency.as_ns());
+    }
+    let rho = tdpc::util::stats::spearman(&margins, &lats);
+    assert!(rho < -0.8, "winner sum vs latency must be strongly negative, ρ = {rho}");
+}
+
+#[test]
+fn cycle_latency_bounded_by_worst_case_plus_control() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let entry = manifest.entry("iris_c50").unwrap();
+    let model = TmModel::load(&entry.model_path).unwrap();
+    let test = TestSet::load(&entry.test_data_path).unwrap();
+    let d = DesignParams::from_model(&model);
+    let mut engine =
+        AsyncTmEngine::build(&Device::xc7z020(), &d, &FlowConfig::table1_default(), 17).unwrap();
+    let bound = engine.worst_case_latency() + Ps(2_000);
+    for x in test.x.iter().take(30) {
+        let out = engine.infer(&model.clause_bits(x));
+        assert!(out.cycle_latency <= bound, "{} > {bound}", out.cycle_latency);
+        assert!(out.decision_latency <= out.cycle_latency);
+    }
+}

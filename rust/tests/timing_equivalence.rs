@@ -1,0 +1,114 @@
+//! Behavioral ↔ event-driven equivalence: the fast behavioral models used
+//! by every experiment sweep are validated against the gate-level
+//! discrete-event simulator on the same structures.
+
+use tdpc::fabric::{Device, VariationModel, VariationParams, LUT_LOGIC_DELAY};
+use tdpc::flow::{place_pdls, route_pdl, FlowConfig, PinAssignment};
+use tdpc::pdl::{Pdl, Polarity};
+use tdpc::timing::{Circuit, Simulator};
+use tdpc::util::prop;
+use tdpc::util::Ps;
+
+/// Build the event-driven mux chain for a PDL and propagate a start edge.
+fn event_driven_traversal(pdl: &Pdl, bits: &[bool]) -> Ps {
+    let mut c = Circuit::new();
+    let start = c.net();
+    let mut prev = start;
+    let mut sels = Vec::new();
+    for (i, e) in pdl.elements.iter().enumerate() {
+        // Polarity is net swapping in hardware; precompute the effective
+        // select so the circuit itself stays positive-polarity.
+        let effective = match e.polarity {
+            Polarity::Positive => bits[i],
+            Polarity::Negative => !bits[i],
+        };
+        let sel = c.net_init(effective);
+        sels.push(sel);
+        prev = c.pdl_element(prev, sel, e.lo, e.hi, LUT_LOGIC_DELAY);
+    }
+    let mut sim = Simulator::new(&c);
+    sim.watch(prev);
+    // The start-sync FF launches the rising edge at clk-to-Q.
+    sim.schedule(start, true, pdl.start_sync);
+    sim.run_until(Ps(u64::MAX / 2));
+    sim.first_edge(prev, true).expect("transition must reach the chain end")
+}
+
+fn build_pdl(n: usize, die: u64, polarities: Vec<Polarity>) -> Pdl {
+    let d = Device::xc7z020();
+    let p = place_pdls(&d, 1, n).unwrap().remove(0);
+    let var = VariationModel::new(die, VariationParams::default());
+    let cfg = FlowConfig::table1_default();
+    let routed = route_pdl(&d, &p, &PinAssignment::fastest_pair(), &cfg, &var).unwrap();
+    Pdl::from_routed(&routed, &polarities)
+}
+
+#[test]
+fn pdl_behavioral_equals_event_driven() {
+    let pdl = build_pdl(40, 5, Pdl::tm_polarities(40));
+    for pattern in [
+        vec![true; 40],
+        vec![false; 40],
+        (0..40).map(|i| i % 3 == 0).collect::<Vec<_>>(),
+    ] {
+        let behavioral = pdl.propagate(&pattern);
+        let event = event_driven_traversal(&pdl, &pattern);
+        assert_eq!(behavioral, event, "pattern {pattern:?}");
+    }
+}
+
+#[test]
+fn prop_pdl_equivalence_random() {
+    prop::check("behavioral == event-driven PDL", 25, |g| {
+        let n = g.int(1, 60) as usize;
+        let die = g.int(0, 10_000) as u64;
+        let pols: Vec<Polarity> = (0..n)
+            .map(|_| if g.boolean(0.5) { Polarity::Positive } else { Polarity::Negative })
+            .collect();
+        let pdl = build_pdl(n, die, pols);
+        let bits = g.bits(n, 0.5);
+        assert_eq!(pdl.propagate(&bits), event_driven_traversal(&pdl, &bits));
+    });
+}
+
+#[test]
+fn race_order_preserved_in_event_sim() {
+    // Two PDLs raced through the event simulator order exactly as the
+    // behavioral arbiter model expects: higher effective weight → earlier.
+    let pdl = build_pdl(30, 9, vec![Polarity::Positive; 30]);
+    let mut heavy = vec![false; 30];
+    heavy[..20].fill(true);
+    let mut light = vec![false; 30];
+    light[..10].fill(true);
+    let t_heavy = event_driven_traversal(&pdl, &heavy);
+    let t_light = event_driven_traversal(&pdl, &light);
+    assert!(t_heavy < t_light, "{t_heavy} !< {t_light}");
+    // And the gap is ~10 stage deltas.
+    let delta = pdl.mean_delta();
+    let gap = t_light - t_heavy;
+    let expect = Ps(delta.0 * 10);
+    assert!(gap.abs_diff(expect) < Ps(expect.0 / 5), "gap {gap} vs expected {expect}");
+}
+
+#[test]
+fn mousetrap_event_cycle_matches_behavioral_model() {
+    use tdpc::asynctm::{mousetrap, MousetrapStage};
+    let stage = MousetrapStage::default();
+    let mut c = Circuit::new();
+    let nets = mousetrap::build_event_circuit(&mut c, &stage);
+    let mut sim = Simulator::new(&c);
+    sim.watch(nets.req_out);
+    sim.watch(nets.enable);
+    sim.schedule(nets.req_in, true, Ps(0));
+    sim.run_until(Ps(1_000_000));
+    // Forward latency: one latch delay.
+    assert_eq!(
+        sim.first_edge(nets.req_out, true),
+        Some(stage.forward_latency())
+    );
+    // Enable closes one XNOR delay after req_out toggles.
+    assert_eq!(
+        sim.first_edge(nets.enable, false),
+        Some(stage.forward_latency() + stage.xnor_delay)
+    );
+}
