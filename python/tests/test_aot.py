@@ -10,6 +10,10 @@ import pytest
 from compile import aot
 from compile.tm import train as train_mod
 
+# compile.aot imports the jax lowering stack at module scope; auto-skipped
+# when jax is absent (see conftest.py).
+pytestmark = pytest.mark.requires_jax
+
 ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
 
 

@@ -10,6 +10,10 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+# Whole module needs the jax/Pallas toolchain; auto-skipped when absent
+# (see conftest.py).
+pytestmark = pytest.mark.requires_jax
+
 from compile.kernels import clause_popcount as cp
 from compile.kernels import ref
 

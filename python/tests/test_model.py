@@ -10,6 +10,10 @@ from compile import model as model_mod
 from compile.kernels import ref
 from compile.tm.automata import TsetlinMachine
 
+# Whole module needs the jax/Pallas toolchain; auto-skipped when absent
+# (see conftest.py).
+pytestmark = pytest.mark.requires_jax
+
 
 @pytest.fixture(scope="module")
 def tiny_trained():

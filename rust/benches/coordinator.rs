@@ -1,10 +1,12 @@
 //! §Perf L3 bench: coordinator serving path — round-trip latency and
-//! closed-loop throughput, with and without the hardware replay engine.
+//! closed-loop throughput across pool sizes, with and without the
+//! hardware replay engine.
+
 use std::time::Duration;
 
 use tdpc::asynctm::AsyncTmEngine;
 use tdpc::baselines::DesignParams;
-use tdpc::coordinator::{BatcherConfig, Coordinator};
+use tdpc::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy};
 use tdpc::fabric::Device;
 use tdpc::flow::FlowConfig;
 use tdpc::tm::{Manifest, TestSet, TmModel};
@@ -16,29 +18,50 @@ fn main() {
         eprintln!("SKIP coordinator: artifacts not built");
         return;
     };
-    for (model_name, hw) in [("iris_c10", false), ("mnist_c100", false), ("mnist_c100", true)] {
+    let cases = [
+        ("iris_c10", 1usize, false),
+        ("mnist_c100", 1, false),
+        ("mnist_c100", 4, false),
+        ("mnist_c100", 1, true),
+    ];
+    for (model_name, n_workers, hw) in cases {
         let entry = manifest.entry(model_name).unwrap().clone();
         let test = TestSet::load(&entry.test_data_path).unwrap();
-        let engine = if hw {
+        let engines = if hw {
             let model = TmModel::load(&entry.model_path).unwrap();
             let d = DesignParams::from_model(&model);
-            Some(AsyncTmEngine::build(&Device::xc7z020(), &d, &FlowConfig::table1_default(), 1).unwrap())
+            (0..n_workers)
+                .map(|i| {
+                    AsyncTmEngine::build(
+                        &Device::xc7z020(),
+                        &d,
+                        &FlowConfig::table1_default(),
+                        1 + i as u64,
+                    )
+                    .unwrap()
+                })
+                .collect()
         } else {
-            None
+            Vec::new()
         };
-        let cfg = BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(300) };
-        let coord = Coordinator::start(root.clone(), model_name, cfg, engine).unwrap();
-        let tag = if hw { "+hw" } else { "" };
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(300) },
+            n_workers,
+            dispatch: DispatchPolicy::LeastLoaded,
+            ..CoordinatorConfig::default()
+        };
+        let coord = Coordinator::start(root.clone(), model_name, cfg, engines).unwrap();
+        let tag = format!("{model_name}_w{n_workers}{}", if hw { "+hw" } else { "" });
 
         // Round-trip latency (single in-flight request).
-        benchkit::bench(&format!("coordinator/{model_name}{tag}_roundtrip"), || {
+        benchkit::bench(&format!("coordinator/{tag}_roundtrip"), || {
             let _ = coord.infer_blocking(test.x[0].clone()).unwrap();
         });
 
         // Closed-loop burst throughput.
         let n = 512;
         let mean = benchkit::bench_with(
-            &format!("coordinator/{model_name}{tag}_burst512"),
+            &format!("coordinator/{tag}_burst512"),
             Duration::from_millis(200),
             Duration::from_secs(2),
             || {
@@ -53,7 +76,10 @@ fn main() {
         );
         println!("  burst throughput: {:.0} req/s", benchkit::throughput(mean, n));
         let m = coord.metrics();
-        println!("  mean batch {:.1}, mean exec {:.0} µs", m.mean_batch_size, m.mean_batch_exec_us);
+        println!(
+            "  mean batch {:.1}, mean exec {:.0} µs",
+            m.mean_batch_size, m.mean_batch_exec_us
+        );
         coord.shutdown();
     }
 }

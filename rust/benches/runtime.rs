@@ -1,42 +1,61 @@
-//! §Perf L3 bench: the PJRT request path — compile cost, single-sample and
-//! batched execution per model, and items/s throughput.
-use tdpc::runtime::{bools_to_f32, ModelRegistry};
-use tdpc::tm::{Manifest, TestSet};
-use tdpc::util::benchkit;
+//! §Perf L3 bench: the inference request path through the backend seam —
+//! single-sample and batched execution, items/s throughput.
+//!
+//! Always benches a synthetic MNIST-scale model on the native backend (no
+//! artifacts needed, so this runs in any checkout); additionally benches
+//! every trained artifact model when `make artifacts` has been run.
+
+use std::sync::Arc;
+
+use tdpc::runtime::{InferenceBackend, ModelRegistry, NativeBackend};
+use tdpc::tm::{Manifest, TestSet, TmModel};
+use tdpc::util::{benchkit, SplitMix64};
+
+/// MNIST-c100-shaped synthetic model (10 classes × 100 clauses × 784
+/// Boolean features) with a realistic include density.
+fn synthetic_model() -> TmModel {
+    TmModel::synthetic("synthetic_mnist", 10, 100, 784, 0.05, 7)
+}
+
+fn bench_backend(tag: &str, backend: &dyn InferenceBackend, rows: &[Vec<bool>]) {
+    let one = &rows[..1];
+    let m1 = benchkit::bench(&format!("runtime/{tag}_b1"), || {
+        let _ = backend.forward(one).unwrap();
+    });
+    let m32 = benchkit::bench(&format!("runtime/{tag}_b32"), || {
+        let _ = backend.forward(rows).unwrap();
+    });
+    println!(
+        "  throughput: b1 {:.0}/s, b32 {:.0}/s (batching gain ×{:.1})",
+        benchkit::throughput(m1, 1),
+        benchkit::throughput(m32, 32),
+        benchkit::throughput(m32, 32) / benchkit::throughput(m1, 1)
+    );
+}
 
 fn main() {
+    // Hermetic part: synthetic model, runs everywhere.
+    let model = synthetic_model();
+    let mut rng = SplitMix64::new(11);
+    let rows: Vec<Vec<bool>> =
+        (0..32).map(|_| (0..model.n_features).map(|_| rng.next_bool(0.5)).collect()).collect();
+    let backend = NativeBackend::new(Arc::new(model));
+    bench_backend("synthetic_native", &backend, &rows);
+
+    // Artifact part: every trained model, when artifacts exist.
     let Ok(manifest) = Manifest::load_default() else {
-        eprintln!("SKIP runtime: artifacts not built");
+        eprintln!("SKIP runtime artifact models: artifacts not built");
         return;
     };
-    let registry = ModelRegistry::new(manifest).unwrap();
-    println!("platform: {}", registry.platform());
-
-    for entry in registry.manifest().models.clone() {
+    let root = manifest.root.clone();
+    let registry = ModelRegistry::open(&root).unwrap();
+    println!("backend: {}", registry.platform());
+    for entry in manifest.models {
         let test = TestSet::load(&entry.test_data_path).unwrap();
-        // Compile cost (fresh registry each iteration would re-create the
-        // client too; measure the runner() path on a cold key instead).
         let t0 = std::time::Instant::now();
-        let r1 = registry.runner(&entry.name, 1).unwrap();
-        let r32 = registry.runner(&entry.name, 32).unwrap();
-        println!("compile {}: {:.1} ms (both batch sizes, cold)", entry.name,
-            t0.elapsed().as_secs_f64() * 1e3);
-
-        let x1 = bools_to_f32(std::slice::from_ref(&test.x[0]));
+        let backend = registry.backend(&entry.name).unwrap();
+        println!("open {}: {:.1} ms (cold)", entry.name, t0.elapsed().as_secs_f64() * 1e3);
         let rows: Vec<Vec<bool>> = (0..32).map(|i| test.x[i % test.len()].clone()).collect();
-        let x32 = bools_to_f32(&rows);
-
-        let m1 = benchkit::bench(&format!("runtime/{}_b1", entry.name), || {
-            let _ = r1.run(&x1).unwrap();
-        });
-        let m32 = benchkit::bench(&format!("runtime/{}_b32", entry.name), || {
-            let _ = r32.run(&x32).unwrap();
-        });
-        println!(
-            "  throughput: b1 {:.0}/s, b32 {:.0}/s (batching gain ×{:.1})",
-            benchkit::throughput(m1, 1),
-            benchkit::throughput(m32, 32),
-            benchkit::throughput(m32, 32) / benchkit::throughput(m1, 1)
-        );
+        bench_backend(&entry.name, backend.as_ref(), &rows);
     }
 }

@@ -1,11 +1,12 @@
 //! End-to-end driver (DESIGN.md §5): serve the MNIST-100 TM through the
-//! full stack — coordinator (dynamic batching) → PJRT runtime (AOT HLO
-//! with the Pallas clause/popcount kernel) → asynchronous time-domain
-//! hardware replay per sample.
+//! full stack — multi-worker coordinator (dispatch + per-worker dynamic
+//! batching) → native inference backend (bit-packed clause evaluation +
+//! signed popcount) → asynchronous time-domain hardware replay per sample
+//! on every worker.
 //!
 //! Reports functional accuracy, service latency percentiles, throughput,
-//! and the simulated on-chip async-vs-sync latency ratio — the numbers
-//! recorded in EXPERIMENTS.md §End-to-end.
+//! per-worker load, and the simulated on-chip async-vs-sync latency
+//! ratio — the numbers recorded in EXPERIMENTS.md §End-to-end.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example mnist_serving
@@ -17,13 +18,14 @@ use anyhow::Result;
 
 use tdpc::asynctm::AsyncTmEngine;
 use tdpc::baselines::{Architecture, DesignParams, GenericAdder};
-use tdpc::coordinator::{BatcherConfig, Coordinator};
+use tdpc::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy};
 use tdpc::fabric::Device;
 use tdpc::flow::FlowConfig;
 use tdpc::tm::{Manifest, TestSet, TmModel};
 
 const MODEL: &str = "mnist_c100";
 const N_REQUESTS: usize = 2000;
+const N_WORKERS: usize = 2;
 
 fn main() -> Result<()> {
     let root = Manifest::default_root();
@@ -33,14 +35,28 @@ fn main() -> Result<()> {
     let model = TmModel::load(&entry.model_path)?;
     let d = DesignParams::from_model(&model);
 
-    // Attach the simulated hardware so every response carries the on-chip
-    // decision latency of the paper's architecture.
-    let engine =
-        AsyncTmEngine::build(&Device::xc7z020(), &d, &FlowConfig::table1_default(), 1)?;
+    // Attach one simulated hardware die per worker (independent process
+    // variation seeds), so every response carries the on-chip decision
+    // latency of the paper's architecture.
+    let engines = (0..N_WORKERS)
+        .map(|i| {
+            let seed = 1 + i as u64;
+            AsyncTmEngine::build(&Device::xc7z020(), &d, &FlowConfig::table1_default(), seed)
+                .map_err(anyhow::Error::from)
+        })
+        .collect::<Result<Vec<_>>>()?;
 
-    let cfg = BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(400) };
-    println!("starting coordinator for {MODEL} (batch ≤ {}, deadline {:?})", cfg.max_batch, cfg.max_wait);
-    let coord = Coordinator::start(root, MODEL, cfg, Some(engine))?;
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(400) },
+        n_workers: N_WORKERS,
+        dispatch: DispatchPolicy::LeastLoaded,
+        ..CoordinatorConfig::default()
+    };
+    println!(
+        "starting {N_WORKERS}-worker coordinator for {MODEL} (batch ≤ {}, deadline {:?})",
+        cfg.batcher.max_batch, cfg.batcher.max_wait
+    );
+    let coord = Coordinator::start(root, MODEL, cfg, engines)?;
 
     // Closed-loop load: a client pool submitting from the test set.
     let (tx, rx) = std::sync::mpsc::channel();
@@ -74,9 +90,15 @@ fn main() -> Result<()> {
         m.service_p50_us, m.service_p99_us, m.service_mean_us
     );
     println!(
-        "batching:            mean batch {:.1}, mean PJRT exec {:.0} µs/batch",
+        "batching:            mean batch {:.1}, mean exec {:.0} µs/batch",
         m.mean_batch_size, m.mean_batch_exec_us
     );
+    for (i, wm) in coord.worker_metrics().iter().enumerate() {
+        println!(
+            "  worker {i}:          {} requests, {} batches",
+            wm.requests, wm.batches
+        );
+    }
 
     // The paper's comparison: simulated async hardware vs the synchronous
     // adder-based min clock period for the same model.

@@ -1,29 +1,31 @@
-//! Quickstart: load the trained Iris TM artifact, execute it on the PJRT
-//! runtime, and replay each sample through the simulated asynchronous
-//! time-domain hardware.
+//! Quickstart: load the trained Iris TM artifact, execute it on the
+//! native (pure-Rust) backend, and replay each sample through the
+//! simulated asynchronous time-domain hardware.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use tdpc::asynctm::AsyncTmEngine;
 use tdpc::baselines::DesignParams;
 use tdpc::fabric::Device;
 use tdpc::flow::FlowConfig;
-use tdpc::runtime::{bools_to_f32, ModelRegistry};
+use tdpc::runtime::{InferenceBackend, ModelRegistry};
 use tdpc::tm::{Manifest, TestSet, TmModel};
 
 fn main() -> Result<()> {
     let root = Manifest::default_root();
     let registry = ModelRegistry::open(&root)?;
-    println!("PJRT platform: {}", registry.platform());
 
-    // 1. Functional path: the AOT-lowered HLO (clauses + signed popcount +
-    //    argmax, with the Pallas kernel inlined) executing on PJRT.
-    let entry = registry.manifest().entry("iris_c10")?.clone();
-    let runner = registry.runner("iris_c10", 1)?;
+    // 1. Functional path: bit-packed clause evaluation + signed popcount +
+    //    argmax straight from the trained weights (the same semantics the
+    //    AOT-lowered HLO executes under `--features pjrt`).
+    let manifest = registry.manifest().context("artifact manifest missing")?;
+    let entry = manifest.entry("iris_c10")?.clone();
+    let backend = registry.backend("iris_c10")?;
+    println!("backend: {} (platform {})", backend.kind(), backend.platform());
     let test = TestSet::load(&entry.test_data_path)?;
 
     // 2. Hardware path: place & route 3 PDLs + arbiter tree on the
@@ -45,7 +47,7 @@ fn main() -> Result<()> {
     let mut correct = 0;
     let n = test.len().min(10);
     for i in 0..n {
-        let out = runner.run(&bools_to_f32(std::slice::from_ref(&test.x[i])))?;
+        let out = backend.forward(std::slice::from_ref(&test.x[i]))?;
         let hw = engine.infer(&out.clause_bits_row(0));
         let ok = out.pred[0] as usize == test.y[i];
         correct += ok as usize;

@@ -93,6 +93,42 @@ mod tests {
     }
 
     #[test]
+    fn max_batch_one_flushes_every_request_immediately() {
+        // Degenerate pool: batching disabled, every queued request is its
+        // own batch regardless of age.
+        let cfg = BatcherConfig { max_batch: 1, max_wait: Duration::from_secs(60) };
+        assert_eq!(cfg.plan(1, Some(Instant::now())), Some(BatchPlan { take: 1 }));
+        assert_eq!(cfg.plan(7, Some(Instant::now())), Some(BatchPlan { take: 1 }));
+        assert_eq!(cfg.plan(0, None), None);
+    }
+
+    #[test]
+    fn deadline_exactly_elapsed_flushes() {
+        // elapsed() >= max_wait must flush when the head request is
+        // *exactly* max_wait old (the comparison is >=, not >).
+        let cfg = BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(5) };
+        let t0 = Instant::now() - cfg.max_wait;
+        assert_eq!(cfg.plan(3, Some(t0)), Some(BatchPlan { take: 3 }));
+    }
+
+    #[test]
+    fn partial_take_then_empty_queue_stops_flushing() {
+        // An over-full queue drains in max_batch-sized takes; once the
+        // worker has drained it, an empty queue must plan None again.
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(0) };
+        let old = Instant::now() - Duration::from_millis(1);
+        let mut queued = 5usize;
+        let p1 = cfg.plan(queued, Some(old)).unwrap();
+        assert_eq!(p1.take, 4);
+        queued -= p1.take;
+        let p2 = cfg.plan(queued, Some(old)).unwrap();
+        assert_eq!(p2.take, 1, "deadline-expired remainder flushes alone");
+        queued -= p2.take;
+        assert_eq!(queued, 0);
+        assert_eq!(cfg.plan(queued, None), None, "empty queue after partial takes");
+    }
+
+    #[test]
     fn prop_plan_never_exceeds_queue_or_max() {
         prop::check("batch plan bounds", 200, |g| {
             let cfg = BatcherConfig {

@@ -1,4 +1,10 @@
 //! Coordinator metrics: latency histograms, throughput, batch shapes.
+//!
+//! Each worker records into its own [`Metrics`] (no cross-worker lock
+//! contention on the hot path); the coordinator aggregates them with
+//! [`Metrics::merge`] — histograms merge bucket-wise, counters sum — so
+//! pool-level p50/p99 are computed over *all* requests, not averaged
+//! across workers.
 
 use crate::util::stats::Histogram;
 
@@ -59,6 +65,21 @@ impl Metrics {
         self.batch_exec_us_total += exec_us;
     }
 
+    /// Fold another worker's metrics into this one.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests += other.requests;
+        if let Some(theirs) = &other.service_latency {
+            self.service_latency
+                .get_or_insert_with(Histogram::new)
+                .merge(theirs);
+        }
+        self.hw_latency_ns.extend_from_slice(&other.hw_latency_ns);
+        self.batches += other.batches;
+        self.batched_requests += other.batched_requests;
+        self.batch_exec_us_total += other.batch_exec_us_total;
+        self.hw_functional_mismatches += other.hw_functional_mismatches;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let hist = self.service_latency.as_ref();
         let hw = &self.hw_latency_ns;
@@ -99,6 +120,7 @@ mod tests {
             hw_winner: hw.map(|(_, w)| w),
             service_latency_us: latency_us,
             batch_size: 1,
+            worker: 0,
         }
     }
 
@@ -134,5 +156,50 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.service_p50_us, 0.0);
         assert_eq!(s.hw_mean_ns, 0.0);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        // Two workers recording disjoint halves must merge to the same
+        // snapshot as one worker recording everything.
+        let mut combined = Metrics::default();
+        let mut w0 = Metrics::default();
+        let mut w1 = Metrics::default();
+        for i in 1..=100 {
+            let r = resp(i as f64, Some((i * 1000, (i % 3) as usize)), 0);
+            combined.record(&r);
+            if i % 2 == 0 { w0.record(&r) } else { w1.record(&r) };
+        }
+        combined.record_batch(32, 500.0);
+        combined.record_batch(8, 300.0);
+        w0.record_batch(32, 500.0);
+        w1.record_batch(8, 300.0);
+
+        let mut agg = Metrics::default();
+        agg.merge(&w0);
+        agg.merge(&w1);
+        let (a, c) = (agg.snapshot(), combined.snapshot());
+        assert_eq!(a.requests, c.requests);
+        assert_eq!(a.batches, c.batches);
+        assert!((a.mean_batch_size - c.mean_batch_size).abs() < 1e-9);
+        assert!((a.mean_batch_exec_us - c.mean_batch_exec_us).abs() < 1e-9);
+        assert_eq!(a.service_p50_us, c.service_p50_us);
+        assert_eq!(a.service_p99_us, c.service_p99_us);
+        assert!((a.hw_mean_ns - c.hw_mean_ns).abs() < 1e-9);
+        assert_eq!(a.hw_functional_mismatches, c.hw_functional_mismatches);
+    }
+
+    #[test]
+    fn merge_into_empty_is_identity() {
+        let mut m = Metrics::default();
+        m.record(&resp(5.0, None, 1));
+        m.record_batch(1, 10.0);
+        let mut agg = Metrics::default();
+        agg.merge(&m);
+        assert_eq!(agg.snapshot(), m.snapshot());
+        // And merging an empty set of workers leaves it empty.
+        let mut empty = Metrics::default();
+        empty.merge(&Metrics::default());
+        assert_eq!(empty.snapshot().requests, 0);
     }
 }

@@ -1,14 +1,17 @@
-//! L3 serving coordinator: request routing, dynamic batching, worker pool,
-//! metrics.
+//! L3 serving coordinator: request routing, dynamic batching, a
+//! multi-worker execution pool, metrics.
 //!
 //! The coordinator is the deployment shell around the paper's hardware:
-//! clients submit Booleanized samples; a per-model dynamic batcher groups
-//! them (size- and deadline-bounded, vLLM-router style); worker threads
-//! execute the AOT-compiled HLO on the PJRT runtime; and, when a hardware
-//! engine is attached, each sample's clause bits are replayed through the
-//! asynchronous time-domain TM to report the on-chip decision latency next
-//! to the functional result. Everything is std-threads + channels (tokio is
-//! not in the offline crate set — DESIGN.md §7).
+//! clients submit Booleanized samples; a dispatcher routes each request to
+//! one of `n_workers` worker threads (round-robin or least-loaded); each
+//! worker runs its own dynamic batcher (size- and deadline-bounded,
+//! vLLM-router style) and *owns* its execution backend — constructed
+//! inside the worker thread from a [`BackendSpec`], because PJRT clients
+//! are not `Send` while native backends are. When a hardware engine is
+//! attached to a worker, each sample's clause bits are replayed through
+//! the asynchronous time-domain TM to report the on-chip decision latency
+//! next to the functional result. Everything is std-threads + channels
+//! (tokio is not in the offline crate set — DESIGN.md §7).
 
 pub mod batcher;
 pub mod metrics;
@@ -17,14 +20,14 @@ pub use batcher::{BatchPlan, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::asynctm::AsyncTmEngine;
-use crate::runtime::{bools_to_f32, ModelRegistry};
+use crate::runtime::{BackendSpec, InferenceBackend, ModelRegistry};
 use crate::util::Ps;
 
 /// One inference request.
@@ -40,29 +43,66 @@ pub struct InferRequest {
 #[derive(Debug, Clone, PartialEq)]
 pub struct InferResponse {
     pub request_id: u64,
-    /// Functional argmax class from the PJRT-executed model.
+    /// Functional argmax class from the executing backend.
     pub pred: usize,
     /// Signed class sums.
     pub sums: Vec<i32>,
     /// Simulated on-chip decision latency of the async time-domain TM
-    /// (None when no hardware engine is attached).
+    /// (None when no hardware engine is attached to the serving worker).
     pub hw_decision_latency: Option<Ps>,
     /// Hardware argmax (may disagree with `pred` only on exact ties).
     pub hw_winner: Option<usize>,
     /// End-to-end service latency through the coordinator (µs).
     pub service_latency_us: f64,
-    /// Batch this request was served in.
+    /// Logical batch this request was served in.
     pub batch_size: usize,
+    /// Index of the worker that served this request.
+    pub worker: usize,
 }
 
-/// Handle to a running coordinator for one model.
-pub struct Coordinator {
-    tx: mpsc::Sender<WorkItem>,
-    next_id: AtomicU64,
-    metrics: Arc<Mutex<Metrics>>,
-    shutdown: Arc<AtomicBool>,
-    worker: Option<std::thread::JoinHandle<()>>,
-    pub model: String,
+/// How the dispatcher assigns incoming requests to workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Cycle through workers in submission order.
+    RoundRobin,
+    /// Send to the worker with the fewest in-flight requests
+    /// (ties → lowest index).
+    LeastLoaded,
+}
+
+impl DispatchPolicy {
+    pub fn from_name(name: &str) -> Result<DispatchPolicy> {
+        match name {
+            "round-robin" => Ok(DispatchPolicy::RoundRobin),
+            "least-loaded" => Ok(DispatchPolicy::LeastLoaded),
+            other => anyhow::bail!(
+                "unknown dispatch policy {other:?} (expected: round-robin, least-loaded)"
+            ),
+        }
+    }
+}
+
+/// Pool-level configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Per-worker dynamic batching policy.
+    pub batcher: BatcherConfig,
+    /// Number of worker threads (≥ 1), each owning its own backend.
+    pub n_workers: usize,
+    pub dispatch: DispatchPolicy,
+    /// How each worker constructs its execution backend.
+    pub backend: BackendSpec,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            batcher: BatcherConfig::default(),
+            n_workers: 1,
+            dispatch: DispatchPolicy::RoundRobin,
+            backend: BackendSpec::default(),
+        }
+    }
 }
 
 struct WorkItem {
@@ -70,72 +110,166 @@ struct WorkItem {
     req: InferRequest,
 }
 
+/// One worker thread's handle: its queue, load gauge, metrics, and join
+/// handle.
+struct WorkerHandle {
+    tx: Option<mpsc::Sender<WorkItem>>,
+    /// Requests dispatched but not yet answered (least-loaded gauge).
+    depth: Arc<AtomicUsize>,
+    metrics: Arc<Mutex<Metrics>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Handle to a running coordinator pool for one model.
+pub struct Coordinator {
+    workers: Vec<WorkerHandle>,
+    next_id: AtomicU64,
+    rr: AtomicUsize,
+    dispatch: DispatchPolicy,
+    shutdown: Arc<AtomicBool>,
+    pub model: String,
+}
+
 impl Coordinator {
-    /// Start a coordinator for `model` over the artifacts at `root`.
+    /// Start a worker pool for `model` over the artifacts at `root`.
     ///
-    /// The PJRT client and its compiled executables are not `Send` (the
-    /// `xla` crate wraps raw PJRT pointers), so the worker thread *owns*
-    /// its [`ModelRegistry`]: the registry is constructed and both batch
-    /// sizes pre-compiled inside the worker, and startup errors are
-    /// reported back through a ready-channel before `start` returns.
-    /// If `engine` is provided, every sample is additionally replayed
-    /// through the simulated async TM.
+    /// Each worker thread constructs its own [`ModelRegistry`] and backend
+    /// from `cfg.backend` (PJRT backends are not `Send`; native backends
+    /// are, but per-worker ownership keeps the two paths uniform), and
+    /// startup errors from every worker are reported back before `start`
+    /// returns. `engines` are handed out to workers in index order —
+    /// worker `i` replays samples through `engines[i]` when present.
     pub fn start(
         root: PathBuf,
         model: &str,
-        cfg: BatcherConfig,
-        engine: Option<AsyncTmEngine>,
+        cfg: CoordinatorConfig,
+        engines: Vec<AsyncTmEngine>,
     ) -> Result<Coordinator> {
-        let (tx, rx) = mpsc::channel::<WorkItem>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        ensure!(cfg.n_workers >= 1, "coordinator needs at least one worker");
+        ensure!(
+            engines.len() <= cfg.n_workers,
+            "{} hardware engines for {} workers",
+            engines.len(),
+            cfg.n_workers
+        );
         let shutdown = Arc::new(AtomicBool::new(false));
-        let worker = {
-            let model = model.to_string();
-            let metrics = metrics.clone();
-            let shutdown = shutdown.clone();
-            std::thread::Builder::new()
-                .name(format!("tdpc-batcher-{model}"))
-                .spawn(move || {
-                    // Build + pre-compile inside the owning thread.
-                    let registry = match ModelRegistry::open(&root) {
-                        Ok(r) => r,
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(e));
-                            return;
-                        }
-                    };
-                    for &b in &registry.manifest().batch_sizes.clone() {
-                        if let Err(e) =
-                            registry.runner(&model, b).context("pre-compiling model")
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut workers = Vec::with_capacity(cfg.n_workers);
+        let mut engines = engines.into_iter();
+        for w in 0..cfg.n_workers {
+            let (tx, rx) = mpsc::channel::<WorkItem>();
+            let depth = Arc::new(AtomicUsize::new(0));
+            let metrics = Arc::new(Mutex::new(Metrics::default()));
+            let join = {
+                let root = root.clone();
+                let model = model.to_string();
+                let spec = cfg.backend.clone();
+                let batcher = cfg.batcher;
+                let engine = engines.next();
+                let depth = depth.clone();
+                let metrics = metrics.clone();
+                let shutdown = shutdown.clone();
+                let ready_tx = ready_tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("tdpc-worker-{model}-{w}"))
+                    .spawn(move || {
+                        // Build the backend inside the owning thread.
+                        let backend = match ModelRegistry::open_with(&root, spec)
+                            .and_then(|reg| reg.backend(&model))
                         {
-                            let _ = ready_tx.send(Err(e));
-                            return;
-                        }
-                    }
-                    let _ = ready_tx.send(Ok(()));
-                    worker_loop(registry, model, cfg, engine, rx, metrics, shutdown)
-                })?
-        };
-        ready_rx
-            .recv()
-            .context("coordinator worker died during startup")??;
+                            Ok(b) => b,
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(e));
+                                return;
+                            }
+                        };
+                        let _ = ready_tx.send(Ok(()));
+                        drop(ready_tx);
+                        worker_loop(
+                            w,
+                            backend.as_ref(),
+                            batcher,
+                            engine,
+                            rx,
+                            metrics,
+                            shutdown,
+                            depth,
+                        )
+                    })?
+            };
+            workers.push(WorkerHandle { tx: Some(tx), depth, metrics, join: Some(join) });
+        }
+        drop(ready_tx);
+
+        // Collect one readiness report per worker before declaring the
+        // pool up.
+        let mut startup_err: Option<anyhow::Error> = None;
+        for _ in 0..cfg.n_workers {
+            let report = ready_rx
+                .recv()
+                .unwrap_or_else(|_| Err(anyhow!("coordinator worker died during startup")));
+            if let Err(e) = report {
+                startup_err.get_or_insert(e);
+            }
+        }
+        if let Some(e) = startup_err {
+            shutdown.store(true, Ordering::SeqCst);
+            for w in &mut workers {
+                w.tx = None;
+            }
+            for w in &mut workers {
+                if let Some(h) = w.join.take() {
+                    let _ = h.join();
+                }
+            }
+            return Err(e).context("coordinator startup failed");
+        }
+
         Ok(Coordinator {
-            tx,
+            workers,
             next_id: AtomicU64::new(0),
-            metrics,
+            rr: AtomicUsize::new(0),
+            dispatch: cfg.dispatch,
             shutdown,
-            worker: Some(worker),
             model: model.to_string(),
         })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn pick_worker(&self) -> usize {
+        match self.dispatch {
+            DispatchPolicy::RoundRobin => {
+                self.rr.fetch_add(1, Ordering::Relaxed) % self.workers.len()
+            }
+            DispatchPolicy::LeastLoaded => self
+                .workers
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, w)| w.depth.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        }
     }
 
     /// Submit asynchronously; the response arrives on `reply`.
     pub fn submit(&self, features: Vec<bool>, reply: mpsc::Sender<InferResponse>) -> Result<u64> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(WorkItem { id, req: InferRequest { features, reply, submitted: Instant::now() } })
-            .map_err(|_| anyhow::anyhow!("coordinator worker has shut down"))?;
+        let w = self.pick_worker();
+        let worker = &self.workers[w];
+        let tx = worker
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("coordinator is shutting down"))?;
+        worker.depth.fetch_add(1, Ordering::Relaxed);
+        let item =
+            WorkItem { id, req: InferRequest { features, reply, submitted: Instant::now() } };
+        if tx.send(item).is_err() {
+            worker.depth.fetch_sub(1, Ordering::Relaxed);
+            return Err(anyhow!("coordinator worker {w} has shut down"));
+        }
         Ok(id)
     }
 
@@ -146,37 +280,60 @@ impl Coordinator {
         rx.recv().context("coordinator dropped the reply channel")
     }
 
+    /// Aggregated metrics across all workers (latency histograms merge,
+    /// counters sum).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.lock().unwrap().snapshot()
+        let mut agg = Metrics::default();
+        for w in &self.workers {
+            agg.merge(&w.metrics.lock().unwrap());
+        }
+        agg.snapshot()
     }
 
-    /// Stop the worker after draining queued requests.
+    /// Per-worker metrics snapshots, in worker-index order.
+    pub fn worker_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.workers
+            .iter()
+            .map(|w| w.metrics.lock().unwrap().snapshot())
+            .collect()
+    }
+
+    /// Stop every worker after draining all queued requests.
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        drop(self.tx.clone()); // worker exits when all senders drop + flag set
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
+        // Drop all senders first so every worker sees Disconnected and
+        // flushes its pending queue, then join.
+        for w in &mut self.workers {
+            w.tx = None;
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.join.take() {
+                let _ = h.join();
+            }
         }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
-        }
+        self.stop_and_join();
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    registry: ModelRegistry,
-    model: String,
+    worker: usize,
+    backend: &dyn InferenceBackend,
     cfg: BatcherConfig,
     mut engine: Option<AsyncTmEngine>,
     rx: mpsc::Receiver<WorkItem>,
     metrics: Arc<Mutex<Metrics>>,
     shutdown: Arc<AtomicBool>,
+    depth: Arc<AtomicUsize>,
 ) {
     let mut pending: Vec<WorkItem> = Vec::new();
     loop {
@@ -206,68 +363,77 @@ fn worker_loop(
                     if pending.is_empty() {
                         return;
                     }
-                    // Flush whatever is left.
+                    // Flush whatever is left (graceful drain).
                     break BatchPlan { take: pending.len() };
                 }
             }
         };
 
-        let batch: Vec<WorkItem> = pending.drain(..plan.take.min(pending.len())).collect();
+        let mut batch: Vec<WorkItem> = pending.drain(..plan.take.min(pending.len())).collect();
         if batch.is_empty() {
             continue;
         }
-        if let Err(e) = execute_batch(&registry, &model, &batch, engine.as_mut(), &metrics) {
-            log::error!("batch execution failed: {e:#}");
+        if let Err(e) =
+            execute_batch(worker, backend, &mut batch, engine.as_mut(), &metrics, &depth)
+        {
+            log::error!("worker {worker}: batch execution failed: {e:#}");
             // Drop the batch; reply channels close and callers see an error.
         }
     }
 }
 
 fn execute_batch(
-    registry: &ModelRegistry,
-    model: &str,
-    batch: &[WorkItem],
+    worker: usize,
+    backend: &dyn InferenceBackend,
+    batch: &mut [WorkItem],
     mut engine: Option<&mut AsyncTmEngine>,
     metrics: &Arc<Mutex<Metrics>>,
+    depth: &AtomicUsize,
 ) -> Result<()> {
-    let exec_size = registry.exec_batch(batch.len());
-    let runner = registry.runner(model, exec_size)?;
+    // The batch owns its feature vectors and never reads them again after
+    // the forward pass — move them out instead of cloning on the hot path.
+    let rows: Vec<Vec<bool>> =
+        batch.iter_mut().map(|w| std::mem::take(&mut w.req.features)).collect();
     let t0 = Instant::now();
-    // Slice the logical batch into runner-sized chunks.
-    for chunk in batch.chunks(exec_size) {
-        let rows: Vec<Vec<bool>> = chunk.iter().map(|w| w.req.features.clone()).collect();
-        let x = bools_to_f32(&rows);
-        let out = if chunk.len() == runner.batch {
-            runner.run(&x)?
-        } else {
-            runner.run_padded(&x, chunk.len())?
-        };
-        for (i, item) in chunk.iter().enumerate() {
-            let (hw_latency, hw_winner) = match engine.as_deref_mut() {
-                Some(eng) => {
-                    let bits = out.clause_bits_row(i);
-                    let o = eng.infer(&bits);
-                    (Some(o.decision_latency), Some(o.winner))
-                }
-                None => (None, None),
-            };
-            let service_us = item.req.submitted.elapsed().as_secs_f64() * 1e6;
-            let resp = InferResponse {
-                request_id: item.id,
-                pred: out.pred[i] as usize,
-                sums: out.sums_row(i).to_vec(),
-                hw_decision_latency: hw_latency,
-                hw_winner,
-                service_latency_us: service_us,
-                batch_size: chunk.len(),
-            };
-            metrics.lock().unwrap().record(&resp);
-            let _ = item.req.reply.send(resp); // receiver may have gone away
+    let out = match backend.forward(&rows) {
+        Ok(out) => out,
+        Err(e) => {
+            // The whole batch is dropped: release its load in one go.
+            depth.fetch_sub(batch.len(), Ordering::Relaxed);
+            return Err(e);
         }
-    }
+    };
+    // Record the batch before any reply goes out, so metrics are complete
+    // the moment a client has seen the last response (no settle race).
     metrics
         .lock()
         .unwrap()
         .record_batch(batch.len(), t0.elapsed().as_secs_f64() * 1e6);
+    for (i, item) in batch.iter().enumerate() {
+        let (hw_latency, hw_winner) = match engine.as_deref_mut() {
+            Some(eng) => {
+                let bits = out.clause_bits_row(i);
+                let o = eng.infer(&bits);
+                (Some(o.decision_latency), Some(o.winner))
+            }
+            None => (None, None),
+        };
+        let service_us = item.req.submitted.elapsed().as_secs_f64() * 1e6;
+        let resp = InferResponse {
+            request_id: item.id,
+            pred: out.pred[i] as usize,
+            sums: out.sums_row(i).to_vec(),
+            hw_decision_latency: hw_latency,
+            hw_winner,
+            service_latency_us: service_us,
+            batch_size: batch.len(),
+            worker,
+        };
+        metrics.lock().unwrap().record(&resp);
+        // Release the load gauge *before* replying so a blocking caller's
+        // next submit observes the decrement (least-loaded determinism).
+        depth.fetch_sub(1, Ordering::Relaxed);
+        let _ = item.req.reply.send(resp); // receiver may have gone away
+    }
     Ok(())
 }

@@ -13,10 +13,28 @@
 //!   ([`pdl`]), arbiter trees ([`arbiter`]), an event-driven timing
 //!   simulator ([`timing`]), the asynchronous MOUSETRAP TM engine
 //!   ([`asynctm`]), all adder-based baselines ([`baselines`]), power and
-//!   resource models ([`power`]), the PJRT runtime ([`runtime`]) and a
-//!   batch-serving coordinator ([`coordinator`]).
+//!   resource models ([`power`]), the pluggable inference runtime
+//!   ([`runtime`]) and a multi-worker batch-serving coordinator
+//!   ([`coordinator`]).
 //!
-//! See DESIGN.md for the system inventory and the experiment index, and
+//! # Execution backends
+//!
+//! The request path runs through the [`runtime::InferenceBackend`] seam:
+//!
+//! | feature set | backend | needs | use |
+//! |---|---|---|---|
+//! | `default` | [`runtime::NativeBackend`] | nothing (hermetic) | CI, tests, serving |
+//! | `--features pjrt` | `runtime::PjrtBackend` | XLA/PJRT bindings + `make artifacts` | HLO cross-checks |
+//!
+//! The default build is pure Rust and is what CI builds, tests, lints and
+//! benches on every change (`.github/workflows/ci.yml`). The
+//! [`coordinator`] runs a pool of `n_workers ≥ 1` worker threads, each
+//! owning its backend (PJRT clients are not `Send`), with round-robin or
+//! least-loaded dispatch, per-worker dynamic batching, and metrics that
+//! aggregate across the pool.
+//!
+//! See rust/README.md for the feature matrix and local verify commands,
+//! DESIGN.md for the system inventory and the experiment index, and
 //! EXPERIMENTS.md for the paper-vs-measured record.
 
 pub mod arbiter;

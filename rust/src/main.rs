@@ -1,8 +1,11 @@
 //! `tdpc` — CLI for the time-domain popcount reproduction.
 //!
 //! Subcommands:
-//!   infer     — run samples through an AOT-compiled model on PJRT
-//!   serve     — start the batching coordinator and drive a load test
+//!   infer     — run samples through a model on the selected backend
+//!               (--backend native|pjrt; native is the default and needs
+//!               no XLA toolchain)
+//!   serve     — start the multi-worker batching coordinator and drive a
+//!               load test (--workers N, --dispatch round-robin|least-loaded)
 //!   flow      — run the FPGA implementation flow and print the skew audit
 //!   table1 / fig6 / fig9 / fig10 / fig11 / fig12 — regenerate the paper's
 //!               tables/figures (markdown to stdout, CSV via --csv DIR)
@@ -16,11 +19,11 @@ use anyhow::{bail, Context, Result};
 
 use tdpc::baselines::DesignParams;
 use tdpc::config::Args;
-use tdpc::coordinator::{BatcherConfig, Coordinator};
+use tdpc::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy};
 use tdpc::experiments::{ablation, fig10, fig11, fig12, fig6, fig9, table1, Table};
 use tdpc::fabric::Device;
 use tdpc::flow::{self, skew_report, FlowConfig};
-use tdpc::runtime::{bools_to_f32, ModelRegistry};
+use tdpc::runtime::{BackendSpec, InferenceBackend, ModelRegistry};
 use tdpc::tm::{Manifest, TestSet, TmModel};
 use tdpc::util::Ps;
 
@@ -113,17 +116,19 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 fn cmd_infer(args: &Args) -> Result<()> {
-    args.expect_known(&["artifacts", "model", "samples", "csv"])?;
+    args.expect_known(&["artifacts", "model", "samples", "backend", "csv"])?;
     let model = args.opt_or("model", "iris_c10");
     let n = args.opt_usize("samples", 8)?;
-    let registry = ModelRegistry::open(&artifacts_root(args))?;
-    let entry = registry.manifest().entry(model)?.clone();
+    let spec = BackendSpec::from_name(args.opt_or("backend", "native"))?;
+    let registry = ModelRegistry::open_with(&artifacts_root(args), spec)?;
+    let manifest = registry.manifest().context("infer needs the artifact manifest")?;
+    let entry = manifest.entry(model)?.clone();
     let test = TestSet::load(&entry.test_data_path)?;
-    let runner = registry.runner(model, 1)?;
-    println!("platform: {}", registry.platform());
+    let backend = registry.backend(model)?;
+    println!("backend: {} (platform {})", backend.kind(), backend.platform());
     let mut correct = 0;
     for (i, x) in test.x.iter().take(n).enumerate() {
-        let out = runner.run(&bools_to_f32(std::slice::from_ref(x)))?;
+        let out = backend.forward(std::slice::from_ref(x))?;
         let ok = out.pred[0] as usize == test.y[i];
         correct += ok as usize;
         println!(
@@ -139,12 +144,21 @@ fn cmd_infer(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.expect_known(&["artifacts", "model", "requests", "batch", "deadline-us", "csv", "hw"])?;
+    args.expect_known(&[
+        "artifacts", "model", "requests", "batch", "deadline-us", "workers", "dispatch",
+        "backend", "csv", "hw",
+    ])?;
     let model = args.opt_or("model", "mnist_c100");
     let n_requests = args.opt_usize("requests", 500)?;
-    let cfg = BatcherConfig {
-        max_batch: args.opt_usize("batch", 32)?,
-        max_wait: std::time::Duration::from_micros(args.opt_u64("deadline-us", 500)?),
+    let n_workers = args.opt_usize("workers", 1)?;
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: args.opt_usize("batch", 32)?,
+            max_wait: std::time::Duration::from_micros(args.opt_u64("deadline-us", 500)?),
+        },
+        n_workers,
+        dispatch: DispatchPolicy::from_name(args.opt_or("dispatch", "round-robin"))?,
+        backend: BackendSpec::from_name(args.opt_or("backend", "native"))?,
     };
     let root = artifacts_root(args);
     let manifest = Manifest::load(&root)?;
@@ -152,19 +166,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let test = TestSet::load(&entry.test_data_path)?;
     let tm_model = TmModel::load(&entry.model_path)?;
 
-    let engine = if args.flag("hw") {
+    // --hw attaches one simulated async TM per worker (independently
+    // seeded dies), so every response carries an on-chip latency.
+    let engines = if args.flag("hw") {
         let d = DesignParams::from_model(&tm_model);
-        Some(tdpc::asynctm::AsyncTmEngine::build(
-            &Device::xc7z020(),
-            &d,
-            &FlowConfig::table1_default(),
-            1,
-        )?)
+        (0..n_workers)
+            .map(|i| {
+                tdpc::asynctm::AsyncTmEngine::build(
+                    &Device::xc7z020(),
+                    &d,
+                    &FlowConfig::table1_default(),
+                    1 + i as u64,
+                )
+                .map_err(anyhow::Error::from)
+            })
+            .collect::<Result<Vec<_>>>()?
     } else {
-        None
+        Vec::new()
     };
 
-    let coord = Coordinator::start(root, model, cfg, engine)?;
+    let coord = Coordinator::start(root, model, cfg, engines)?;
     let (tx, rx) = std::sync::mpsc::channel();
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
@@ -183,12 +204,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let m = coord.metrics();
-    println!("model {model}: {got} responses in {wall:.3}s = {:.0} req/s", got as f64 / wall);
+    println!(
+        "model {model}: {got} responses in {wall:.3}s = {:.0} req/s ({} workers)",
+        got as f64 / wall,
+        coord.n_workers()
+    );
     println!("accuracy {:.1}%", 100.0 * correct as f64 / got as f64);
     println!(
         "service latency: p50 {:.0} us p99 {:.0} us mean {:.0} us (mean batch {:.1}, exec {:.0} us)",
         m.service_p50_us, m.service_p99_us, m.service_mean_us, m.mean_batch_size, m.mean_batch_exec_us
     );
+    for (i, wm) in coord.worker_metrics().iter().enumerate() {
+        println!(
+            "  worker {i}: {} requests in {} batches (mean batch {:.1})",
+            wm.requests, wm.batches, wm.mean_batch_size
+        );
+    }
     if m.hw_mean_ns > 0.0 {
         println!(
             "simulated on-chip decision latency: mean {:.1} ns p99 {:.1} ns (mismatches {})",

@@ -1,0 +1,255 @@
+//! The pluggable inference-backend seam.
+//!
+//! [`InferenceBackend`] is the execution contract the coordinator and CLI
+//! program against; [`BackendSpec`] is the thread-crossing factory (PJRT
+//! backends are not `Send`, so every worker constructs its own backend
+//! from the spec inside its own thread); [`NativeBackend`] is the
+//! default pure-Rust implementation.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::tm::{Manifest, TmModel};
+
+use super::ForwardOutput;
+
+/// One inference execution engine for a single model.
+///
+/// Implementations accept a logical batch of any size (chunking and
+/// padding to fixed artifact batch sizes, where needed, is the backend's
+/// concern, not the caller's).
+pub trait InferenceBackend {
+    /// Short backend identifier (`"native"`, `"pjrt"`).
+    fn kind(&self) -> &'static str;
+    /// Execution platform label for operator-facing output (e.g. the
+    /// PJRT client's device name); defaults to the backend kind.
+    fn platform(&self) -> String {
+        self.kind().to_string()
+    }
+    /// Name of the model this backend executes.
+    fn model_name(&self) -> &str;
+    fn n_features(&self) -> usize;
+    fn n_classes(&self) -> usize;
+    /// Total clause count (`n_classes × clauses_per_class`).
+    fn c_total(&self) -> usize;
+    /// Run the forward pass over `rows` (each a Boolean feature vector).
+    fn forward(&self, rows: &[Vec<bool>]) -> Result<ForwardOutput>;
+}
+
+/// A `Send + Clone` recipe for constructing a backend inside a worker
+/// thread. This is the only backend handle that crosses threads.
+#[derive(Debug, Clone, Default)]
+pub enum BackendSpec {
+    /// Pure-Rust evaluation of a model loaded from the artifact manifest.
+    #[default]
+    Native,
+    /// Pure-Rust evaluation of an in-memory model — no artifacts required
+    /// (synthetic workloads, tests, CI).
+    InMemory(Arc<TmModel>),
+    /// Execute the AOT-compiled HLO on a PJRT client (requires artifacts
+    /// and real xla bindings; see rust/README.md).
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+impl BackendSpec {
+    /// Parse a CLI-style backend name.
+    pub fn from_name(name: &str) -> Result<BackendSpec> {
+        match name {
+            "native" => Ok(BackendSpec::Native),
+            #[cfg(feature = "pjrt")]
+            "pjrt" => Ok(BackendSpec::Pjrt),
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => bail!("this binary was built without the `pjrt` feature"),
+            other => bail!("unknown backend {other:?} (expected: native, pjrt)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendSpec::Native => "native",
+            BackendSpec::InMemory(_) => "native(in-memory)",
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt => "pjrt",
+        }
+    }
+
+    /// Whether this spec needs the artifact manifest at `root` to open.
+    pub fn needs_manifest(&self) -> bool {
+        !matches!(self, BackendSpec::InMemory(_))
+    }
+
+    /// Construct the backend for `model` from the artifacts at `root`.
+    ///
+    /// Called from the thread that will own the backend; performs all
+    /// expensive startup work (model load, PJRT pre-compilation) so
+    /// failures surface at startup rather than on the first request.
+    pub fn open(&self, root: &Path, model: &str) -> Result<Box<dyn InferenceBackend>> {
+        match self {
+            BackendSpec::Native => Ok(Box::new(NativeBackend::open(root, model)?)),
+            BackendSpec::InMemory(m) => {
+                // Keep the "unknown model fails at startup" guarantee the
+                // manifest-backed specs get from `Manifest::entry`.
+                ensure!(
+                    m.name == model,
+                    "in-memory spec holds model {:?}, not {model:?}",
+                    m.name
+                );
+                Ok(Box::new(NativeBackend::new(m.clone())))
+            }
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt => {
+                let b = super::pjrt::PjrtBackend::open(root, model)?;
+                b.warm()?;
+                Ok(Box::new(b))
+            }
+        }
+    }
+}
+
+/// Pure-Rust execution of the TM forward pass (clause evaluation with
+/// bit-packed `u64` words, signed popcount, argmax) directly from the
+/// trained model weights. `Send + Sync`: the model is immutable shared
+/// data, so one model can serve any number of worker threads.
+pub struct NativeBackend {
+    model: Arc<TmModel>,
+}
+
+impl NativeBackend {
+    pub fn new(model: Arc<TmModel>) -> NativeBackend {
+        NativeBackend { model }
+    }
+
+    /// Load `model` from the artifact manifest at `root`.
+    pub fn open(root: &Path, model: &str) -> Result<NativeBackend> {
+        let manifest = Manifest::load(root)?;
+        let entry = manifest.entry(model)?;
+        Ok(NativeBackend::new(Arc::new(TmModel::load(&entry.model_path)?)))
+    }
+
+    pub fn model(&self) -> &TmModel {
+        &self.model
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    fn model_name(&self) -> &str {
+        &self.model.name
+    }
+
+    fn n_features(&self) -> usize {
+        self.model.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.model.n_classes
+    }
+
+    fn c_total(&self) -> usize {
+        self.model.c_total()
+    }
+
+    fn forward(&self, rows: &[Vec<bool>]) -> Result<ForwardOutput> {
+        let m = &self.model;
+        let k = m.n_classes;
+        let cpc = m.clauses_per_class;
+        let mut out = ForwardOutput::empty(k, m.c_total());
+        out.batch = rows.len();
+        out.sums.reserve(rows.len() * k);
+        out.fired.reserve(rows.len() * m.c_total());
+        out.pred.reserve(rows.len());
+        for (r, row) in rows.iter().enumerate() {
+            ensure!(
+                row.len() == m.n_features,
+                "row {r}: feature length {} != model features {}",
+                row.len(),
+                m.n_features
+            );
+            let bits = m.clause_bits(row);
+            let mut best = 0usize;
+            let mut best_sum = i32::MIN;
+            for (ki, class_bits) in bits.iter().enumerate() {
+                let mut s = 0i32;
+                for (j, &fired) in class_bits.iter().enumerate() {
+                    out.fired.push(fired as i32);
+                    if fired {
+                        s += m.polarity[ki * cpc + j] as i32;
+                    }
+                }
+                // Ties resolve to the lowest class index (jnp.argmax).
+                if s > best_sum {
+                    best_sum = s;
+                    best = ki;
+                }
+                out.sums.push(s);
+            }
+            out.pred.push(best as i32);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::model::tests::toy;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new(Arc::new(toy()))
+    }
+
+    #[test]
+    fn forward_matches_model_methods() {
+        let b = backend();
+        let rows = vec![
+            vec![true, false],
+            vec![true, true],
+            vec![false, false],
+        ];
+        let out = b.forward(&rows).unwrap();
+        assert_eq!(out.batch, 3);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(out.sums_row(i), &b.model().class_sums(row)[..], "row {i}");
+            assert_eq!(out.pred[i] as usize, b.model().predict(row), "row {i}");
+            let per_class: Vec<Vec<bool>> = out.clause_bits_row(i);
+            assert_eq!(per_class, b.model().clause_bits(row), "row {i}");
+        }
+    }
+
+    #[test]
+    fn forward_rejects_wrong_feature_width() {
+        let b = backend();
+        assert!(b.forward(&[vec![true; 3]]).is_err());
+    }
+
+    #[test]
+    fn forward_empty_batch() {
+        let b = backend();
+        let out = b.forward(&[]).unwrap();
+        assert_eq!(out.batch, 0);
+        assert!(out.pred.is_empty());
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert!(matches!(BackendSpec::from_name("native"), Ok(BackendSpec::Native)));
+        assert!(BackendSpec::from_name("hls").is_err());
+        assert_eq!(BackendSpec::default().name(), "native");
+        assert!(!BackendSpec::InMemory(Arc::new(toy())).needs_manifest());
+    }
+
+    #[test]
+    fn in_memory_spec_opens_without_artifacts() {
+        let spec = BackendSpec::InMemory(Arc::new(toy()));
+        let b = spec.open(std::path::Path::new("/nonexistent"), "toy").unwrap();
+        assert_eq!(b.kind(), "native");
+        assert_eq!(b.model_name(), "toy");
+        assert_eq!(b.n_classes(), 2);
+    }
+}

@@ -1,21 +1,34 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them on the
-//! request path.
+//! Inference runtime: pluggable execution backends behind one seam.
 //!
-//! The Python build path (`python/compile/aot.py`) lowers each TM
-//! configuration to HLO *text* (the interchange format xla_extension 0.5.1
-//! accepts — jax ≥ 0.5's serialized protos carry 64-bit instruction ids it
-//! rejects). This module compiles those artifacts once on the PJRT CPU
-//! client and executes them for the coordinator; Python never runs here.
+//! The request path executes TM forward passes through the
+//! [`InferenceBackend`] trait. Two implementations exist:
+//!
+//! * [`NativeBackend`] (default) — pure-Rust bit-packed clause evaluation
+//!   straight from the trained [`crate::tm::TmModel`]. Hermetic: no XLA
+//!   toolchain, deterministic, and what CI builds and tests.
+//! * `PjrtBackend` (`--features pjrt`) — compiles the AOT-lowered HLO text
+//!   emitted by `python/compile/aot.py` on the PJRT CPU client and executes
+//!   it. PJRT clients wrap raw pointers and are not `Send`, so PJRT
+//!   backends must be constructed inside the thread that uses them — the
+//!   coordinator's worker pool does exactly that via [`BackendSpec`].
+//!
+//! [`BackendSpec`] is the `Send + Clone` factory that crosses thread
+//! boundaries; [`ModelRegistry`] caches constructed backends per model.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod registry;
 
+pub use backend::{BackendSpec, InferenceBackend, NativeBackend};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{ModelRunner, PjrtBackend};
 pub use registry::ModelRegistry;
 
-use std::path::Path;
+use anyhow::{ensure, Result};
 
-use anyhow::{ensure, Context, Result};
-
-/// Output of one batched TM forward pass (mirrors `model.tm_forward`).
+/// Output of one batched TM forward pass (mirrors `model.tm_forward` on the
+/// Python side; identical layout across every backend).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ForwardOutput {
     pub batch: usize,
@@ -30,6 +43,36 @@ pub struct ForwardOutput {
 }
 
 impl ForwardOutput {
+    /// An output with zero rows (identity for [`ForwardOutput::append`]).
+    pub fn empty(n_classes: usize, c_total: usize) -> ForwardOutput {
+        ForwardOutput {
+            batch: 0,
+            n_classes,
+            c_total,
+            sums: Vec::new(),
+            fired: Vec::new(),
+            pred: Vec::new(),
+        }
+    }
+
+    /// Concatenate another output's rows onto this one (used by backends
+    /// that execute a logical batch as several fixed-size chunks).
+    pub fn append(&mut self, other: ForwardOutput) -> Result<()> {
+        ensure!(
+            self.n_classes == other.n_classes && self.c_total == other.c_total,
+            "cannot append outputs of different shapes ({}/{} vs {}/{})",
+            self.n_classes,
+            self.c_total,
+            other.n_classes,
+            other.c_total
+        );
+        self.batch += other.batch;
+        self.sums.extend(other.sums);
+        self.fired.extend(other.fired);
+        self.pred.extend(other.pred);
+        Ok(())
+    }
+
     pub fn sums_row(&self, b: usize) -> &[i32] {
         &self.sums[b * self.n_classes..(b + 1) * self.n_classes]
     }
@@ -41,90 +84,6 @@ impl ForwardOutput {
         (0..self.n_classes)
             .map(|k| row[k * per..(k + 1) * per].iter().map(|&v| v != 0).collect())
             .collect()
-    }
-}
-
-/// A compiled executable for one (model, batch-size) pair.
-pub struct ModelRunner {
-    pub name: String,
-    pub batch: usize,
-    pub n_features: usize,
-    pub n_classes: usize,
-    pub c_total: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl ModelRunner {
-    /// Compile the HLO text at `path` on `client`.
-    pub fn load(
-        client: &xla::PjRtClient,
-        path: &Path,
-        name: &str,
-        batch: usize,
-        n_features: usize,
-        n_classes: usize,
-        c_total: usize,
-    ) -> Result<ModelRunner> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-UTF-8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("PJRT compile of {}", path.display()))?;
-        Ok(ModelRunner {
-            name: name.to_string(),
-            batch,
-            n_features,
-            n_classes,
-            c_total,
-            exe,
-        })
-    }
-
-    /// Execute one batch. `x` is (batch × n_features) row-major 0.0/1.0.
-    pub fn run(&self, x: &[f32]) -> Result<ForwardOutput> {
-        ensure!(
-            x.len() == self.batch * self.n_features,
-            "input length {} != batch {} × features {}",
-            x.len(),
-            self.batch,
-            self.n_features
-        );
-        let input = xla::Literal::vec1(x)
-            .reshape(&[self.batch as i64, self.n_features as i64])?;
-        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: (sums, fired, pred).
-        let (sums_l, fired_l, pred_l) = result.to_tuple3()?;
-        let sums = sums_l.to_vec::<i32>()?;
-        let fired = fired_l.to_vec::<i32>()?;
-        let pred = pred_l.to_vec::<i32>()?;
-        ensure!(sums.len() == self.batch * self.n_classes, "sums shape mismatch");
-        ensure!(fired.len() == self.batch * self.c_total, "fired shape mismatch");
-        ensure!(pred.len() == self.batch, "pred shape mismatch");
-        Ok(ForwardOutput {
-            batch: self.batch,
-            n_classes: self.n_classes,
-            c_total: self.c_total,
-            sums,
-            fired,
-            pred,
-        })
-    }
-
-    /// Run a partial batch by padding with zeros and truncating the output.
-    pub fn run_padded(&self, x: &[f32], n_valid: usize) -> Result<ForwardOutput> {
-        ensure!(n_valid <= self.batch);
-        let mut padded = vec![0.0f32; self.batch * self.n_features];
-        padded[..x.len()].copy_from_slice(x);
-        let mut out = self.run(&padded)?;
-        out.batch = n_valid;
-        out.sums.truncate(n_valid * self.n_classes);
-        out.fired.truncate(n_valid * self.c_total);
-        out.pred.truncate(n_valid);
-        Ok(out)
     }
 }
 
@@ -158,5 +117,26 @@ mod tests {
     fn bools_layout() {
         let rows = vec![vec![true, false], vec![false, true]];
         assert_eq!(bools_to_f32(&rows), vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn append_concatenates_rows() {
+        let mut a = ForwardOutput::empty(2, 4);
+        let b = ForwardOutput {
+            batch: 1,
+            n_classes: 2,
+            c_total: 4,
+            sums: vec![1, -1],
+            fired: vec![1, 0, 0, 1],
+            pred: vec![0],
+        };
+        a.append(b.clone()).unwrap();
+        a.append(b).unwrap();
+        assert_eq!(a.batch, 2);
+        assert_eq!(a.sums, vec![1, -1, 1, -1]);
+        assert_eq!(a.pred, vec![0, 0]);
+        // Shape mismatch is rejected.
+        let mut c = ForwardOutput::empty(3, 6);
+        assert!(c.append(a).is_err());
     }
 }

@@ -1,0 +1,227 @@
+//! PJRT execution backend (`--features pjrt`): load AOT-compiled HLO
+//! artifacts and execute them on the request path.
+//!
+//! The Python build path (`python/compile/aot.py`) lowers each TM
+//! configuration to HLO *text* (the interchange format xla_extension 0.5.1
+//! accepts — jax ≥ 0.5's serialized protos carry 64-bit instruction ids it
+//! rejects). [`PjrtBackend`] compiles those artifacts once per batch size
+//! on the PJRT CPU client and executes them; Python never runs here.
+//!
+//! PJRT clients wrap raw pointers and are not `Send`: construct the
+//! backend inside the thread that uses it (the coordinator's worker pool
+//! does this through `BackendSpec::Pjrt`).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::tm::{Manifest, ManifestEntry};
+use crate::util::sync::OnceMap;
+
+use super::{bools_to_f32, ForwardOutput, InferenceBackend};
+
+/// A compiled executable for one (model, batch-size) pair.
+pub struct ModelRunner {
+    pub name: String,
+    pub batch: usize,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub c_total: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ModelRunner {
+    /// Compile the HLO text at `path` on `client`.
+    pub fn load(
+        client: &xla::PjRtClient,
+        path: &Path,
+        name: &str,
+        batch: usize,
+        n_features: usize,
+        n_classes: usize,
+        c_total: usize,
+    ) -> Result<ModelRunner> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF-8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {}", path.display()))?;
+        Ok(ModelRunner {
+            name: name.to_string(),
+            batch,
+            n_features,
+            n_classes,
+            c_total,
+            exe,
+        })
+    }
+
+    /// Execute one batch. `x` is (batch × n_features) row-major 0.0/1.0.
+    pub fn run(&self, x: &[f32]) -> Result<ForwardOutput> {
+        ensure!(
+            x.len() == self.batch * self.n_features,
+            "input length {} != batch {} × features {}",
+            x.len(),
+            self.batch,
+            self.n_features
+        );
+        let input = xla::Literal::vec1(x)
+            .reshape(&[self.batch as i64, self.n_features as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (sums, fired, pred).
+        let (sums_l, fired_l, pred_l) = result.to_tuple3()?;
+        let sums = sums_l.to_vec::<i32>()?;
+        let fired = fired_l.to_vec::<i32>()?;
+        let pred = pred_l.to_vec::<i32>()?;
+        ensure!(sums.len() == self.batch * self.n_classes, "sums shape mismatch");
+        ensure!(fired.len() == self.batch * self.c_total, "fired shape mismatch");
+        ensure!(pred.len() == self.batch, "pred shape mismatch");
+        Ok(ForwardOutput {
+            batch: self.batch,
+            n_classes: self.n_classes,
+            c_total: self.c_total,
+            sums,
+            fired,
+            pred,
+        })
+    }
+
+    /// Run a partial batch by padding with zeros and truncating the output.
+    pub fn run_padded(&self, x: &[f32], n_valid: usize) -> Result<ForwardOutput> {
+        ensure!(n_valid <= self.batch);
+        let mut padded = vec![0.0f32; self.batch * self.n_features];
+        padded[..x.len()].copy_from_slice(x);
+        let mut out = self.run(&padded)?;
+        out.batch = n_valid;
+        out.sums.truncate(n_valid * self.n_classes);
+        out.fired.truncate(n_valid * self.c_total);
+        out.pred.truncate(n_valid);
+        Ok(out)
+    }
+}
+
+/// PJRT backend for one model: a client plus compiled executables per
+/// artifact batch size, compiled at most once each.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    entry: ManifestEntry,
+    /// Compile-once cache. The [`OnceMap`] holds its mutex only around
+    /// map access, never across PJRT compilation — compilation of two
+    /// *different* batch sizes proceeds concurrently, while a second
+    /// request for the *same* batch size waits instead of compiling a
+    /// duplicate (the double-lock hazard the old registry design
+    /// invited).
+    runners: OnceMap<usize, Arc<ModelRunner>>,
+}
+
+impl PjrtBackend {
+    /// Open `model` from the artifact manifest at `root`.
+    pub fn open(root: &Path, model: &str) -> Result<PjrtBackend> {
+        Self::new(Manifest::load(root)?, model)
+    }
+
+    pub fn new(manifest: Manifest, model: &str) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let entry = manifest.entry(model)?.clone();
+        Ok(PjrtBackend { client, manifest, entry, runners: OnceMap::new() })
+    }
+
+    /// Pre-compile every artifact batch size (startup warm-up, so errors
+    /// surface before the first request).
+    pub fn warm(&self) -> Result<()> {
+        for &b in &self.manifest.batch_sizes {
+            self.runner(b).context("pre-compiling model")?;
+        }
+        Ok(())
+    }
+
+    /// Get (compiling on first use) the runner for one batch size. The
+    /// ~100 ms compilation runs outside the cache lock, so other batch
+    /// sizes never stall behind it.
+    pub fn runner(&self, batch: usize) -> Result<Arc<ModelRunner>> {
+        self.runners
+            .get_or_try_insert(batch, || self.compile(batch).map(Arc::new))
+    }
+
+    fn compile(&self, batch: usize) -> Result<ModelRunner> {
+        let hlo = self.manifest.hlo_path(&self.entry.name, batch)?;
+        ModelRunner::load(
+            &self.client,
+            &hlo,
+            &self.entry.name,
+            batch,
+            self.entry.n_features,
+            self.entry.n_classes,
+            self.entry.n_classes * self.entry.clauses_per_class,
+        )
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// The PJRT client's actual platform name (e.g. `cpu`), not just the
+    /// backend kind.
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn model_name(&self) -> &str {
+        &self.entry.name
+    }
+
+    fn n_features(&self) -> usize {
+        self.entry.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.entry.n_classes
+    }
+
+    fn c_total(&self) -> usize {
+        self.entry.n_classes * self.entry.clauses_per_class
+    }
+
+    /// Execute a logical batch of any size by slicing it into artifact-
+    /// sized chunks (padding the tail — §Perf L3: padding beats splitting
+    /// into many small executions).
+    fn forward(&self, rows: &[Vec<bool>]) -> Result<ForwardOutput> {
+        for (r, row) in rows.iter().enumerate() {
+            ensure!(
+                row.len() == self.entry.n_features,
+                "row {r}: feature length {} != model features {}",
+                row.len(),
+                self.entry.n_features
+            );
+        }
+        let mut out = ForwardOutput::empty(self.n_classes(), self.c_total());
+        let mut i = 0;
+        while i < rows.len() {
+            let remaining = rows.len() - i;
+            let exec = self
+                .manifest
+                .exec_batch(remaining)
+                .ok_or_else(|| anyhow!("manifest lists no artifact batch sizes"))?;
+            let take = exec.min(remaining);
+            let chunk = &rows[i..i + take];
+            let runner = self.runner(exec)?;
+            let x = bools_to_f32(chunk);
+            let o = if take == runner.batch {
+                runner.run(&x)?
+            } else {
+                runner.run_padded(&x, take)?
+            };
+            out.append(o)?;
+            i += take;
+        }
+        Ok(out)
+    }
+}

@@ -1,120 +1,100 @@
-//! Model registry: one PJRT client, many compiled executables.
+//! Model registry: one backend spec, many constructed backends.
 //!
-//! The coordinator routes requests by model name and batch size; the
-//! registry owns the client and compiles each (model, batch) artifact at
-//! most once (compilation is the expensive step — the §Perf bench
-//! quantifies it).
+//! A registry is owned by whoever executes models — each coordinator
+//! worker constructs its own inside its thread (backends are not
+//! necessarily `Send`), the CLI constructs one per invocation. It caches
+//! one [`InferenceBackend`] per model name, constructing each at most
+//! once via [`OnceMap`]: the cache mutex is held only around map access,
+//! never across backend construction (which for PJRT includes executable
+//! compilation), so two different models open concurrently while a second
+//! request for the *same* model waits instead of duplicating the work.
 
-use std::collections::BTreeMap;
-use std::path::Path;
-use std::sync::Mutex;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::tm::Manifest;
+use crate::util::sync::OnceMap;
 
-use super::ModelRunner;
+use super::backend::{BackendSpec, InferenceBackend};
 
-/// Thread-safe registry of compiled model runners.
+/// Registry of constructed backends for one artifact root.
 pub struct ModelRegistry {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    runners: Mutex<BTreeMap<(String, usize), std::sync::Arc<ModelRunner>>>,
+    root: PathBuf,
+    spec: BackendSpec,
+    /// `None` for in-memory specs, which need no artifacts at all.
+    manifest: Option<Manifest>,
+    backends: OnceMap<String, Arc<dyn InferenceBackend>>,
 }
 
 impl ModelRegistry {
-    /// Create with the default (CPU) PJRT client.
-    pub fn new(manifest: Manifest) -> Result<ModelRegistry> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(ModelRegistry { client, manifest, runners: Mutex::new(BTreeMap::new()) })
+    /// Open with the default (native) backend spec.
+    pub fn open(root: &Path) -> Result<ModelRegistry> {
+        Self::open_with(root, BackendSpec::Native)
     }
 
-    pub fn open(artifacts_root: &Path) -> Result<ModelRegistry> {
-        Self::new(Manifest::load(artifacts_root)?)
+    /// Open with an explicit backend spec. Loads the artifact manifest
+    /// unless the spec carries its own in-memory model.
+    pub fn open_with(root: &Path, spec: BackendSpec) -> Result<ModelRegistry> {
+        let manifest = if spec.needs_manifest() {
+            Some(Manifest::load(root).context("loading artifact manifest")?)
+        } else {
+            None
+        };
+        Ok(ModelRegistry {
+            root: root.to_path_buf(),
+            spec,
+            manifest,
+            backends: OnceMap::new(),
+        })
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_ref()
     }
 
+    pub fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    /// Execution platform label, for operator-facing output.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.spec.name().to_string()
     }
 
-    /// Get (compiling on first use) the runner for a model/batch pair.
-    pub fn runner(&self, model: &str, batch: usize) -> Result<std::sync::Arc<ModelRunner>> {
-        let key = (model.to_string(), batch);
-        {
-            let cache = self.runners.lock().unwrap();
-            if let Some(r) = cache.get(&key) {
-                return Ok(r.clone());
-            }
-        }
-        // Compile outside the lock: compilation takes ~100 ms and other
-        // batch sizes shouldn't stall behind it.
-        let entry = self.manifest.entry(model)?;
-        let hlo = self.manifest.hlo_path(model, batch)?;
-        let runner = std::sync::Arc::new(ModelRunner::load(
-            &self.client,
-            &hlo,
-            model,
-            batch,
-            entry.n_features,
-            entry.n_classes,
-            entry.n_classes * entry.clauses_per_class,
-        )?);
-        let mut cache = self.runners.lock().unwrap();
-        Ok(cache.entry(key).or_insert(runner).clone())
-    }
-
-    /// Largest artifact batch size ≤ `n`, for batch planning.
-    pub fn best_batch(&self, n: usize) -> usize {
-        self.manifest
-            .batch_sizes
-            .iter()
-            .copied()
-            .filter(|&b| b <= n.max(1))
-            .max()
-            .unwrap_or_else(|| self.manifest.batch_sizes.iter().copied().min().unwrap_or(1))
-    }
-
-    /// Execution batch for `n` queued requests: the *smallest* artifact
-    /// batch that fits all of them (padding beats splitting into many
-    /// small executions — §Perf L3), else the largest available.
-    pub fn exec_batch(&self, n: usize) -> usize {
-        self.manifest
-            .batch_sizes
-            .iter()
-            .copied()
-            .filter(|&b| b >= n.max(1))
-            .min()
-            .unwrap_or_else(|| self.manifest.batch_sizes.iter().copied().max().unwrap_or(1))
+    /// Get (constructing on first use) the backend for `model`. The
+    /// construction — model load, PJRT compilation — runs outside the
+    /// cache lock, so unrelated models never serialize behind it.
+    pub fn backend(&self, model: &str) -> Result<Arc<dyn InferenceBackend>> {
+        self.backends.get_or_try_insert(model.to_string(), || {
+            self.spec
+                .open(&self.root, model)
+                .map(|b| -> Arc<dyn InferenceBackend> { Arc::from(b) })
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tm::model::tests::toy;
 
     #[test]
-    fn best_batch_picks_largest_fitting() {
-        // Manifest stub with batch sizes {1, 32}.
-        let manifest = Manifest {
-            root: std::path::PathBuf::from("/nonexistent"),
-            batch_sizes: vec![1, 32],
-            models: vec![],
-        };
-        let reg = ModelRegistry::new(manifest);
-        // PJRT client may be unavailable in odd environments; skip then.
-        let Ok(reg) = reg else { return };
-        assert_eq!(reg.best_batch(100), 32);
-        assert_eq!(reg.best_batch(32), 32);
-        assert_eq!(reg.best_batch(31), 1);
-        assert_eq!(reg.best_batch(0), 1);
-        // exec_batch: smallest artifact batch that fits everything.
-        assert_eq!(reg.exec_batch(1), 1);
-        assert_eq!(reg.exec_batch(2), 32);
-        assert_eq!(reg.exec_batch(32), 32);
-        assert_eq!(reg.exec_batch(100), 32);
+    fn in_memory_registry_needs_no_artifacts() {
+        let spec = BackendSpec::InMemory(std::sync::Arc::new(toy()));
+        let reg = ModelRegistry::open_with(Path::new("/nonexistent"), spec).unwrap();
+        assert!(reg.manifest().is_none());
+        assert_eq!(reg.platform(), "native(in-memory)");
+        let b = reg.backend("toy").unwrap();
+        assert_eq!(b.model_name(), "toy");
+        // Second lookup hits the cache (same Arc).
+        let b2 = reg.backend("toy").unwrap();
+        assert!(Arc::ptr_eq(&b, &b2));
+    }
+
+    #[test]
+    fn native_registry_fails_cleanly_without_manifest() {
+        assert!(ModelRegistry::open(Path::new("/nonexistent")).is_err());
     }
 }

@@ -111,6 +111,30 @@ impl Manifest {
             .map(|(_, p)| p.clone())
             .with_context(|| format!("no HLO for {name} at batch {batch}"))
     }
+
+    /// Largest artifact batch size ≤ `n` (falls back to the smallest
+    /// available). `None` iff the manifest lists no batch sizes.
+    pub fn best_batch(&self, n: usize) -> Option<usize> {
+        self.batch_sizes
+            .iter()
+            .copied()
+            .filter(|&b| b <= n.max(1))
+            .max()
+            .or_else(|| self.batch_sizes.iter().copied().min())
+    }
+
+    /// Execution batch for `n` queued requests: the *smallest* artifact
+    /// batch that fits all of them (padding beats splitting into many
+    /// small executions — §Perf L3), else the largest available. `None`
+    /// iff the manifest lists no batch sizes.
+    pub fn exec_batch(&self, n: usize) -> Option<usize> {
+        self.batch_sizes
+            .iter()
+            .copied()
+            .filter(|&b| b >= n.max(1))
+            .min()
+            .or_else(|| self.batch_sizes.iter().copied().max())
+    }
 }
 
 /// Decode a "0101…" bitstring (the artifact JSON compaction).
@@ -133,5 +157,26 @@ mod tests {
         assert_eq!(parse_bits("0101").unwrap(), vec![false, true, false, true]);
         assert!(parse_bits("01x1").is_err());
         assert!(parse_bits("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn batch_planning_on_manifest() {
+        let manifest = Manifest {
+            root: PathBuf::from("/nonexistent"),
+            batch_sizes: vec![1, 32],
+            models: vec![],
+        };
+        assert_eq!(manifest.best_batch(100), Some(32));
+        assert_eq!(manifest.best_batch(32), Some(32));
+        assert_eq!(manifest.best_batch(31), Some(1));
+        assert_eq!(manifest.best_batch(0), Some(1));
+        // exec_batch: smallest artifact batch that fits everything.
+        assert_eq!(manifest.exec_batch(1), Some(1));
+        assert_eq!(manifest.exec_batch(2), Some(32));
+        assert_eq!(manifest.exec_batch(32), Some(32));
+        assert_eq!(manifest.exec_batch(100), Some(32));
+        let empty = Manifest { root: PathBuf::from("/x"), batch_sizes: vec![], models: vec![] };
+        assert_eq!(empty.best_batch(4), None);
+        assert_eq!(empty.exec_batch(4), None);
     }
 }

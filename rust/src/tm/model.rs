@@ -86,6 +86,60 @@ impl TmModel {
         }
     }
 
+    /// [`TmModel::assemble`] with `nonempty` derived from the include
+    /// masks — the invariant trained artifacts satisfy; synthetic model
+    /// builders should use this instead of deriving it by hand.
+    pub fn assemble_derived(
+        name: String,
+        n_classes: usize,
+        n_features: usize,
+        clauses_per_class: usize,
+        include: Vec<Vec<bool>>,
+        polarity: Vec<i8>,
+        accuracy: f64,
+    ) -> TmModel {
+        let nonempty = include.iter().map(|row| row.iter().any(|&b| b)).collect();
+        TmModel::assemble(
+            name,
+            n_classes,
+            n_features,
+            clauses_per_class,
+            include,
+            polarity,
+            nonempty,
+            accuracy,
+        )
+    }
+
+    /// Deterministic random model for synthetic workloads (benches and
+    /// the artifact-free coordinator tests): include masks drawn at
+    /// `density`, alternating clause polarity.
+    pub fn synthetic(
+        name: &str,
+        n_classes: usize,
+        clauses_per_class: usize,
+        n_features: usize,
+        density: f64,
+        seed: u64,
+    ) -> TmModel {
+        let mut rng = crate::util::SplitMix64::new(seed);
+        let c_total = n_classes * clauses_per_class;
+        let include: Vec<Vec<bool>> = (0..c_total)
+            .map(|_| (0..2 * n_features).map(|_| rng.next_bool(density)).collect())
+            .collect();
+        let polarity: Vec<i8> =
+            (0..c_total).map(|c| if c % 2 == 0 { 1 } else { -1 }).collect();
+        TmModel::assemble_derived(
+            name.to_string(),
+            n_classes,
+            n_features,
+            clauses_per_class,
+            include,
+            polarity,
+            0.0,
+        )
+    }
+
     pub fn load(path: &Path) -> Result<TmModel> {
         let doc = json::parse_file(path)?;
         let n_classes = doc.get("n_classes")?.as_usize()?;
@@ -226,6 +280,43 @@ impl TmModel {
             .unwrap_or(0)
     }
 
+    /// Naive reference forward pass for one sample — bool-wise loops, no
+    /// bit packing. The clause-evaluation *loop* is deliberately
+    /// independent of the packed hot path so differential tests
+    /// (`tests/native_backend.rs`) can pit the `NativeBackend` against it
+    /// on randomized models; the stored `nonempty` mask is consulted like
+    /// the production path does (it is authoritative, not re-derived).
+    ///
+    /// Returns `(fired, sums, pred)`: flat clause bits (class-major),
+    /// signed class sums, and the argmax prediction (ties → lowest index).
+    pub fn forward_reference(&self, x_bool: &[bool]) -> (Vec<bool>, Vec<i32>, usize) {
+        assert_eq!(x_bool.len(), self.n_features, "feature width mismatch");
+        let lits = self.literals(x_bool);
+        let mut fired = Vec::with_capacity(self.c_total());
+        for clause in 0..self.c_total() {
+            let mut all = true;
+            for (&lit, &inc) in lits.iter().zip(&self.include[clause]) {
+                if inc && !lit {
+                    all = false;
+                }
+            }
+            fired.push(self.nonempty[clause] && all);
+        }
+        let mut sums = vec![0i32; self.n_classes];
+        for (clause, &f) in fired.iter().enumerate() {
+            if f {
+                sums[clause / self.clauses_per_class] += self.polarity[clause] as i32;
+            }
+        }
+        let mut pred = 0usize;
+        for (k, &s) in sums.iter().enumerate() {
+            if s > sums[pred] {
+                pred = k;
+            }
+        }
+        (fired, sums, pred)
+    }
+
     /// Workload view of this model (for the shared hardware builders).
     pub fn workload(&self) -> WorkloadSpec {
         WorkloadSpec {
@@ -238,7 +329,7 @@ impl TmModel {
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
 
     /// A tiny hand-built model: 2 classes × 2 clauses over 2 features.
@@ -309,5 +400,17 @@ mod tests {
     #[test]
     fn max_fanin() {
         assert_eq!(toy().max_clause_fanin(), 1);
+    }
+
+    #[test]
+    fn reference_forward_agrees_with_packed_path() {
+        let m = toy();
+        for x in [[true, false], [true, true], [false, false], [false, true]] {
+            let (fired, sums, pred) = m.forward_reference(&x);
+            assert_eq!(sums, m.class_sums(&x), "{x:?}");
+            assert_eq!(pred, m.predict(&x), "{x:?}");
+            let packed: Vec<bool> = m.clause_bits(&x).concat();
+            assert_eq!(fired, packed, "{x:?}");
+        }
     }
 }

@@ -14,6 +14,7 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod time;
 
 pub use rng::SplitMix64;

@@ -163,6 +163,18 @@ impl Histogram {
         }
     }
 
+    /// Merge another histogram's observations into this one (used to
+    /// aggregate per-worker latency histograms; both sides use the fixed
+    /// bucket layout from [`Histogram::new`]).
+    pub fn merge(&mut self, other: &Histogram) {
+        debug_assert_eq!(self.bounds, other.bounds, "histogram bucket layouts differ");
+        for (a, &b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+    }
+
     /// Approximate quantile from bucket boundaries (upper bound of the
     /// bucket containing the q-quantile observation).
     pub fn quantile(&self, q: f64) -> f64 {
@@ -237,5 +249,28 @@ mod tests {
         assert!(h.quantile(0.5) >= 500.0);
         assert!(h.quantile(0.99) >= 990.0);
         assert!((h.mean() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_recording() {
+        let mut combined = Histogram::new();
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 1..=100 {
+            combined.record(i as f64);
+            if i % 2 == 0 {
+                a.record(i as f64);
+            } else {
+                b.record(i as f64);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), combined.count());
+        assert!((a.mean() - combined.mean()).abs() < 1e-9);
+        assert_eq!(a.quantile(0.5), combined.quantile(0.5));
+        assert_eq!(a.quantile(0.99), combined.quantile(0.99));
+        // Merging an empty histogram is a no-op.
+        a.merge(&Histogram::new());
+        assert_eq!(a.count(), combined.count());
     }
 }

@@ -1,0 +1,123 @@
+//! Concurrency helpers for the runtime's compile-once caches.
+
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+
+enum Slot<V> {
+    /// Some caller is running the builder for this key right now.
+    Building,
+    Ready(V),
+}
+
+/// A keyed build-at-most-once cache.
+///
+/// [`OnceMap::get_or_try_insert`] runs the builder *outside* the map
+/// lock, so builds for two different keys proceed concurrently while a
+/// second request for the *same* key waits on a condvar instead of
+/// duplicating the work (the double-lock hazard a check-unlock-build
+/// cache invites). A failed build releases its claim so a later caller
+/// can retry.
+///
+/// Used by `ModelRegistry` (backend per model) and `PjrtBackend`
+/// (compiled executable per batch size), where a build is an expensive
+/// model load or PJRT compilation.
+pub struct OnceMap<K, V> {
+    slots: Mutex<BTreeMap<K, Slot<V>>>,
+    ready: Condvar,
+}
+
+impl<K: Ord + Clone, V: Clone> OnceMap<K, V> {
+    pub fn new() -> OnceMap<K, V> {
+        OnceMap { slots: Mutex::new(BTreeMap::new()), ready: Condvar::new() }
+    }
+
+    /// Return the cached value for `key`, or claim the key and run
+    /// `build` (outside the lock) to produce it.
+    pub fn get_or_try_insert<E>(
+        &self,
+        key: K,
+        build: impl FnOnce() -> Result<V, E>,
+    ) -> Result<V, E> {
+        {
+            let mut slots = self.slots.lock().unwrap();
+            loop {
+                match slots.get(&key) {
+                    Some(Slot::Ready(v)) => return Ok(v.clone()),
+                    // Same key in flight elsewhere: wait, don't duplicate.
+                    Some(Slot::Building) => {}
+                    None => {
+                        slots.insert(key.clone(), Slot::Building);
+                        break;
+                    }
+                }
+                slots = self.ready.wait(slots).unwrap();
+            }
+        }
+        let result = build();
+        let mut slots = self.slots.lock().unwrap();
+        match result {
+            Ok(v) => {
+                slots.insert(key, Slot::Ready(v.clone()));
+                self.ready.notify_all();
+                Ok(v)
+            }
+            Err(e) => {
+                // Clear the claim so a later caller can retry.
+                slots.remove(&key);
+                self.ready.notify_all();
+                Err(e)
+            }
+        }
+    }
+}
+
+impl<K: Ord + Clone, V: Clone> Default for OnceMap<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn builds_once_per_key_under_contention() {
+        let map: Arc<OnceMap<usize, usize>> = Arc::new(OnceMap::new());
+        let builds = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let map = map.clone();
+            let builds = builds.clone();
+            handles.push(std::thread::spawn(move || {
+                let key = t % 2;
+                let v = map
+                    .get_or_try_insert(key, || {
+                        builds.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                        Ok::<usize, ()>(key * 100)
+                    })
+                    .unwrap();
+                assert_eq!(v, key * 100);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(builds.load(Ordering::SeqCst), 2, "one build per distinct key");
+    }
+
+    #[test]
+    fn failed_build_releases_claim_for_retry() {
+        let map: OnceMap<&'static str, i32> = OnceMap::new();
+        let err = map.get_or_try_insert("k", || Err::<i32, &str>("boom"));
+        assert_eq!(err.unwrap_err(), "boom");
+        let ok = map.get_or_try_insert("k", || Ok::<i32, &str>(7));
+        assert_eq!(ok.unwrap(), 7);
+        // Cached now: builder must not run again.
+        let cached = map.get_or_try_insert("k", || panic!("must not rebuild"));
+        assert_eq!(cached.unwrap(), 7);
+    }
+}

@@ -1,0 +1,32 @@
+//! Shared integration-test helpers: the golden-vector loader for the
+//! artifacts `python/compile/aot.py` emits (used by both the native and
+//! PJRT backend golden suites).
+
+use tdpc::tm::parse_bits;
+use tdpc::util::json;
+
+pub struct Golden {
+    pub inputs: Vec<Vec<bool>>,
+    pub sums: Vec<Vec<i32>>,
+    pub fired: Vec<Vec<bool>>,
+    pub pred: Vec<i32>,
+}
+
+pub fn load_golden(path: &std::path::Path) -> Golden {
+    let doc = json::parse_file(path).unwrap();
+    let inputs = doc
+        .get("inputs").unwrap().as_arr().unwrap()
+        .iter().map(|v| parse_bits(v.as_str().unwrap()).unwrap()).collect();
+    let sums = doc
+        .get("sums").unwrap().as_arr().unwrap()
+        .iter()
+        .map(|row| row.as_arr().unwrap().iter().map(|v| v.as_i64().unwrap() as i32).collect())
+        .collect();
+    let fired = doc
+        .get("fired").unwrap().as_arr().unwrap()
+        .iter().map(|v| parse_bits(v.as_str().unwrap()).unwrap()).collect();
+    let pred = doc
+        .get("pred").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_i64().unwrap() as i32).collect();
+    Golden { inputs, sums, fired, pred }
+}

@@ -1,58 +1,171 @@
-//! End-to-end coordinator tests: requests through batching → PJRT →
-//! hardware replay, with metrics and shutdown behaviour.
+//! End-to-end coordinator tests: requests through dispatch → per-worker
+//! batching → native backend → hardware replay, with metrics aggregation
+//! and shutdown behaviour.
+//!
+//! These run against an in-memory model via `BackendSpec::InMemory`, so
+//! they need no artifacts and exercise the full pool on every CI run.
 
+use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use tdpc::asynctm::AsyncTmEngine;
 use tdpc::baselines::DesignParams;
-use tdpc::coordinator::{BatcherConfig, Coordinator};
+use tdpc::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy};
 use tdpc::fabric::Device;
 use tdpc::flow::FlowConfig;
-use tdpc::tm::{Manifest, TestSet, TmModel};
+use tdpc::runtime::BackendSpec;
+use tdpc::tm::TmModel;
+use tdpc::util::SplitMix64;
 
-fn setup() -> Option<(std::path::PathBuf, TestSet, TmModel)> {
-    let root = Manifest::default_root();
-    let Ok(manifest) = Manifest::load(&root) else {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
-        return None;
-    };
-    let entry = manifest.entry("iris_c10").unwrap().clone();
-    let test = TestSet::load(&entry.test_data_path).unwrap();
-    let model = TmModel::load(&entry.model_path).unwrap();
-    Some((root, test, model))
+/// Deterministic iris-scale random model: 3 classes × 10 clauses over 16
+/// Boolean features.
+fn test_model(seed: u64) -> Arc<TmModel> {
+    Arc::new(TmModel::synthetic("e2e_model", 3, 10, 16, 0.15, seed))
+}
+
+fn test_inputs(model: &TmModel, n: usize, seed: u64) -> Vec<Vec<bool>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| (0..model.n_features).map(|_| rng.next_bool(0.5)).collect()).collect()
+}
+
+/// Artifacts root placeholder — in-memory specs never read it.
+fn unused_root() -> PathBuf {
+    PathBuf::from("/nonexistent-artifacts-root")
+}
+
+fn pool_config(
+    n_workers: usize,
+    dispatch: DispatchPolicy,
+    model: Arc<TmModel>,
+) -> CoordinatorConfig {
+    CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(300) },
+        n_workers,
+        dispatch,
+        backend: BackendSpec::InMemory(model),
+    }
 }
 
 #[test]
 fn serves_requests_with_correct_predictions() {
-    let Some((root, test, model)) = setup() else { return };
-    let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(300) };
-    let coord = Coordinator::start(root, "iris_c10", cfg, None).unwrap();
-    for i in 0..20 {
-        let x = test.x[i % test.len()].clone();
+    let model = test_model(1);
+    let cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg, Vec::new()).unwrap();
+    for (i, x) in test_inputs(&model, 20, 2).into_iter().enumerate() {
         let resp = coord.infer_blocking(x.clone()).unwrap();
         assert_eq!(resp.pred, model.predict(&x), "request {i}");
+        assert_eq!(resp.sums, model.class_sums(&x), "request {i}");
         assert!(resp.hw_decision_latency.is_none());
         assert!(resp.service_latency_us > 0.0);
+        assert_eq!(resp.worker, 0);
     }
     let m = coord.metrics();
     assert_eq!(m.requests, 20);
     assert!(m.batches >= 1);
+    // A single-worker pool's aggregate equals its only worker's snapshot.
+    assert_eq!(coord.worker_metrics()[0], m);
     coord.shutdown();
 }
 
 #[test]
-fn batches_form_under_concurrent_load() {
-    let Some((root, test, _model)) = setup() else { return };
-    let cfg = BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(4) };
-    let coord = Coordinator::start(root, "iris_c10", cfg, None).unwrap();
-    let (tx, rx) = std::sync::mpsc::channel();
+fn four_worker_pool_answers_each_request_once_and_metrics_sum() {
+    let model = test_model(3);
+    let cfg = pool_config(4, DispatchPolicy::RoundRobin, model.clone());
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg, Vec::new()).unwrap();
+    assert_eq!(coord.n_workers(), 4);
+
     let n = 200;
-    for i in 0..n {
-        coord.submit(test.x[i % test.len()].clone(), tx.clone()).unwrap();
+    let inputs = test_inputs(&model, n, 4);
+    let (tx, rx) = std::sync::mpsc::channel();
+    for x in &inputs {
+        coord.submit(x.clone(), tx.clone()).unwrap();
     }
     drop(tx);
     let responses: Vec<_> = rx.iter().take(n).collect();
     assert_eq!(responses.len(), n);
+
+    // Every request id answered exactly once, each with the right result.
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.request_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n);
+    for r in &responses {
+        assert_eq!(r.pred, model.predict(&inputs[r.request_id as usize]));
+        assert!(r.worker < 4);
+    }
+    // All four workers actually served traffic (round-robin → 50 each).
+    for w in 0..4 {
+        assert!(
+            responses.iter().any(|r| r.worker == w),
+            "worker {w} served nothing"
+        );
+    }
+
+    let m = coord.metrics();
+    let per_worker = coord.worker_metrics();
+    assert_eq!(m.requests as usize, n, "aggregate request count");
+    assert_eq!(
+        per_worker.iter().map(|w| w.requests).sum::<u64>(),
+        m.requests,
+        "per-worker requests must sum to the aggregate"
+    );
+    assert_eq!(
+        per_worker.iter().map(|w| w.batches).sum::<u64>(),
+        m.batches,
+        "per-worker batch counts must sum to the aggregate"
+    );
+    for (i, w) in per_worker.iter().enumerate() {
+        assert_eq!(w.requests, 50, "round-robin shares traffic evenly (worker {i})");
+        assert!(w.batches >= 1, "worker {i} executed no batches");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn least_loaded_prefers_idle_workers() {
+    let model = test_model(5);
+    let cfg = pool_config(2, DispatchPolicy::LeastLoaded, model.clone());
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg, Vec::new()).unwrap();
+    // Sequential blocking requests: the pool is idle at each submit, so the
+    // tie-break (lowest index) pins every request to worker 0.
+    for x in test_inputs(&model, 10, 6) {
+        let resp = coord.infer_blocking(x).unwrap();
+        assert_eq!(resp.worker, 0);
+    }
+    // A burst deepens worker 0's queue, so worker 1 must pick up load.
+    let n = 100;
+    let (tx, rx) = std::sync::mpsc::channel();
+    for x in test_inputs(&model, n, 7) {
+        coord.submit(x, tx.clone()).unwrap();
+    }
+    drop(tx);
+    let responses: Vec<_> = rx.iter().take(n).collect();
+    assert_eq!(responses.len(), n);
+    assert!(
+        responses.iter().any(|r| r.worker == 1),
+        "burst load never spilled to the second worker"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn batches_form_under_burst_load() {
+    let model = test_model(8);
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(50) },
+        n_workers: 1,
+        dispatch: DispatchPolicy::RoundRobin,
+        backend: BackendSpec::InMemory(model.clone()),
+    };
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg, Vec::new()).unwrap();
+    let n = 200;
+    let (tx, rx) = std::sync::mpsc::channel();
+    for x in test_inputs(&model, n, 9) {
+        coord.submit(x, tx.clone()).unwrap();
+    }
+    drop(tx);
+    assert_eq!(rx.iter().take(n).count(), n);
     let m = coord.metrics();
     assert_eq!(m.requests as usize, n);
     assert!(
@@ -60,28 +173,26 @@ fn batches_form_under_concurrent_load() {
         "burst submission must produce real batches, got {}",
         m.mean_batch_size
     );
-    // Every request id answered exactly once.
-    let mut ids: Vec<u64> = responses.iter().map(|r| r.request_id).collect();
-    ids.sort_unstable();
-    ids.dedup();
-    assert_eq!(ids.len(), n);
     coord.shutdown();
 }
 
 #[test]
 fn hardware_replay_reports_latency_and_agrees() {
-    let Some((root, test, model)) = setup() else { return };
+    let model = test_model(10);
     let d = DesignParams::from_model(&model);
-    let engine =
-        AsyncTmEngine::build(&Device::xc7z020(), &d, &FlowConfig::table1_default(), 3).unwrap();
-    let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(200) };
-    let coord = Coordinator::start(root, "iris_c10", cfg, Some(engine)).unwrap();
+    let engines: Vec<AsyncTmEngine> = (0..2)
+        .map(|i| {
+            AsyncTmEngine::build(&Device::xc7z020(), &d, &FlowConfig::table1_default(), 3 + i)
+                .unwrap()
+        })
+        .collect();
+    let cfg = pool_config(2, DispatchPolicy::RoundRobin, model.clone());
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg, engines).unwrap();
     let mut mismatch_with_margin = 0;
-    for i in 0..30 {
-        let x = test.x[i % test.len()].clone();
+    for (i, x) in test_inputs(&model, 30, 11).into_iter().enumerate() {
         let resp = coord.infer_blocking(x.clone()).unwrap();
-        let lat = resp.hw_decision_latency.expect("hw engine attached");
-        assert!(lat.as_ns() > 1.0, "plausible on-chip latency");
+        let lat = resp.hw_decision_latency.expect("hw engine attached to every worker");
+        assert!(lat.as_ns() > 1.0, "plausible on-chip latency (request {i})");
         // Hardware may only disagree on argmax ties.
         let sums = model.class_sums(&x);
         let top = *sums.iter().max().unwrap();
@@ -97,18 +208,59 @@ fn hardware_replay_reports_latency_and_agrees() {
 }
 
 #[test]
-fn startup_fails_cleanly_on_bad_model() {
-    let Some((root, _, _)) = setup() else { return };
-    let cfg = BatcherConfig::default();
-    let err = Coordinator::start(root, "nonexistent_model", cfg, None);
-    assert!(err.is_err(), "unknown model must fail at startup, not at first request");
+fn shutdown_drains_queued_requests() {
+    let model = test_model(12);
+    let cfg = pool_config(3, DispatchPolicy::RoundRobin, model.clone());
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg, Vec::new()).unwrap();
+    let n = 120;
+    let (tx, rx) = std::sync::mpsc::channel();
+    for x in test_inputs(&model, n, 13) {
+        coord.submit(x, tx.clone()).unwrap();
+    }
+    drop(tx);
+    // Graceful shutdown must answer everything already accepted.
+    coord.shutdown();
+    assert_eq!(rx.iter().count(), n, "shutdown dropped queued requests");
+}
+
+#[test]
+fn startup_fails_cleanly_on_missing_artifacts() {
+    // Native spec with no artifacts: every worker fails to open the
+    // manifest, and start reports it instead of hanging.
+    let cfg = CoordinatorConfig {
+        n_workers: 4,
+        ..CoordinatorConfig::default()
+    };
+    let err = Coordinator::start(unused_root(), "nonexistent_model", cfg, Vec::new());
+    assert!(err.is_err(), "missing artifacts must fail at startup, not at first request");
+}
+
+#[test]
+fn start_rejects_zero_workers_and_excess_engines() {
+    let model = test_model(14);
+    let mut cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    cfg.n_workers = 0;
+    assert!(Coordinator::start(unused_root(), "e2e_model", cfg, Vec::new()).is_err());
+
+    let d = DesignParams::from_model(&model);
+    let engines: Vec<AsyncTmEngine> = (0..2)
+        .map(|i| {
+            AsyncTmEngine::build(&Device::xc7z020(), &d, &FlowConfig::table1_default(), 20 + i)
+                .unwrap()
+        })
+        .collect();
+    let cfg = pool_config(1, DispatchPolicy::RoundRobin, model);
+    assert!(
+        Coordinator::start(unused_root(), "e2e_model", cfg, engines).is_err(),
+        "more engines than workers must be rejected"
+    );
 }
 
 #[test]
 fn drop_without_shutdown_does_not_hang() {
-    let Some((root, test, _)) = setup() else { return };
-    let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(100) };
-    let coord = Coordinator::start(root, "iris_c10", cfg, None).unwrap();
-    let _ = coord.infer_blocking(test.x[0].clone()).unwrap();
-    drop(coord); // Drop impl joins the worker — must not deadlock.
+    let model = test_model(15);
+    let cfg = pool_config(2, DispatchPolicy::RoundRobin, model.clone());
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg, Vec::new()).unwrap();
+    let _ = coord.infer_blocking(test_inputs(&model, 1, 16).remove(0)).unwrap();
+    drop(coord); // Drop impl joins all workers — must not deadlock.
 }

@@ -1,7 +1,14 @@
 //! Cross-language determinism: the Rust SplitMix64 must emit the same
 //! stream as `python/compile/tm/datasets.py::SplitMix64` (pinned in
-//! `python/tests/test_cross_language.py` against the same constants).
+//! `python/tests/test_cross_language.py` against the same constants),
+//! and the native backend must honour the jnp conventions the Python
+//! oracle bakes into the golden vectors (argmax ties → lowest index,
+//! empty clauses never fire).
 
+use std::sync::Arc;
+
+use tdpc::runtime::{InferenceBackend, NativeBackend};
+use tdpc::tm::TmModel;
 use tdpc::util::SplitMix64;
 
 #[test]
@@ -34,4 +41,36 @@ fn pinned_gauss_stream() {
     for (a, b) in g.iter().zip(expect) {
         assert!((a - b).abs() < 1e-14, "{a} vs {b}");
     }
+}
+
+#[test]
+fn native_backend_honours_jnp_conventions() {
+    // 2 classes × 2 clauses over 2 features. Class 0: +x0, −x1;
+    // class 1: +~x0, and one empty clause (never fires, like the oracle).
+    let model = Arc::new(TmModel::assemble(
+        "conv".into(),
+        2,
+        2,
+        2,
+        vec![
+            vec![true, false, false, false],  // x0
+            vec![false, true, false, false],  // x1
+            vec![false, false, true, false],  // ~x0
+            vec![false, false, false, false], // empty
+        ],
+        vec![1, -1, 1, -1],
+        vec![true, true, true, false],
+        100.0,
+    ));
+    let backend = NativeBackend::new(model);
+    // x = [1, 1]: sums tie at (0, 0) → jnp.argmax picks class 0.
+    let out = backend.forward(&[vec![true, true]]).unwrap();
+    assert_eq!(out.sums_row(0), &[0, 0]);
+    assert_eq!(out.pred[0], 0, "tie must resolve to the lowest index (jnp.argmax)");
+    // x = [0, 0]: only ~x0 fires → class 1 wins; the empty clause stayed
+    // silent even though all of its (zero) literals are satisfied.
+    let out = backend.forward(&[vec![false, false]]).unwrap();
+    assert_eq!(out.sums_row(0), &[0, 1]);
+    assert_eq!(out.pred[0], 1);
+    assert_eq!(out.fired, vec![0, 0, 1, 0]);
 }

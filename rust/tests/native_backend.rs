@@ -1,0 +1,91 @@
+//! Backend-seam correctness: the bit-packed `NativeBackend` must agree
+//! with the naive bool-wise reference evaluator (`TmModel::forward_reference`)
+//! on randomized models, and with the Python-emitted golden vectors when
+//! artifacts are present.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::load_golden;
+use tdpc::runtime::{BackendSpec, InferenceBackend, NativeBackend};
+use tdpc::tm::{Manifest, TmModel};
+use tdpc::util::prop;
+
+/// Build a random model from the property generator (shapes and include
+/// density vary per case; `nonempty` derives from the include masks like
+/// trained artifacts).
+fn random_model(g: &mut prop::Gen) -> TmModel {
+    let k = g.int(1, 5) as usize;
+    let cpc = g.int(1, 12) as usize;
+    let f = g.int(1, 80) as usize;
+    let density = g.float(0.0, 0.4);
+    let c_total = k * cpc;
+    let include: Vec<Vec<bool>> = (0..c_total).map(|_| g.bits(2 * f, density)).collect();
+    let polarity: Vec<i8> =
+        (0..c_total).map(|_| if g.boolean(0.5) { 1 } else { -1 }).collect();
+    TmModel::assemble_derived("prop".into(), k, f, cpc, include, polarity, 0.0)
+}
+
+#[test]
+fn prop_native_backend_matches_reference_forward() {
+    prop::check("native backend vs reference forward", 120, |g| {
+        let model = random_model(g);
+        let n_rows = g.int(1, 6) as usize;
+        let rows: Vec<Vec<bool>> =
+            (0..n_rows).map(|_| g.bits(model.n_features, 0.5)).collect();
+        let backend = NativeBackend::new(Arc::new(model));
+        let out = backend.forward(&rows).unwrap();
+        assert_eq!(out.batch, n_rows);
+        for (i, row) in rows.iter().enumerate() {
+            let (fired, sums, pred) = backend.model().forward_reference(row);
+            assert_eq!(out.sums_row(i), &sums[..], "sums, row {i}");
+            assert_eq!(out.pred[i] as usize, pred, "argmax, row {i}");
+            let got_fired: Vec<bool> =
+                out.fired[i * out.c_total..(i + 1) * out.c_total].iter().map(|&v| v != 0).collect();
+            assert_eq!(got_fired, fired, "clause bits, row {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_argmax_ties_resolve_to_lowest_index() {
+    // The cross-language contract: ties break like jnp.argmax.
+    prop::check("argmax tie convention", 60, |g| {
+        let model = random_model(g);
+        let row = g.bits(model.n_features, 0.5);
+        let backend = NativeBackend::new(Arc::new(model));
+        let out = backend.forward(std::slice::from_ref(&row)).unwrap();
+        let sums = out.sums_row(0);
+        let top = *sums.iter().max().unwrap();
+        let first_top = sums.iter().position(|&s| s == top).unwrap();
+        assert_eq!(out.pred[0] as usize, first_top);
+    });
+}
+
+#[test]
+fn native_backend_matches_golden_vectors() {
+    // The same proof-of-composition the PJRT path runs (L1 Pallas kernel →
+    // jnp oracle → goldens), executed on the native backend. Skips when
+    // artifacts are not built.
+    let Ok(manifest) = Manifest::load_default() else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    for entry in &manifest.models {
+        let golden = load_golden(&entry.golden_path);
+        let spec = BackendSpec::Native;
+        let backend = spec.open(&manifest.root, &entry.name).unwrap();
+        let out = backend.forward(&golden.inputs).unwrap();
+        for i in 0..golden.inputs.len() {
+            assert_eq!(out.sums_row(i), &golden.sums[i][..], "{} sample {i} sums", entry.name);
+            assert_eq!(out.pred[i], golden.pred[i], "{} sample {i} pred", entry.name);
+            let fired: Vec<bool> = out.fired
+                [i * out.c_total..(i + 1) * out.c_total]
+                .iter()
+                .map(|&v| v != 0)
+                .collect();
+            assert_eq!(fired, golden.fired[i], "{} sample {i} clause bits", entry.name);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Compile-only stub of the `xla` PJRT binding surface the `tdpc` crate
+//! uses.
+//!
+//! The real `xla` crate links the XLA/PJRT C++ toolchain, which is not
+//! available in hermetic build environments (CI, developer laptops without
+//! the toolchain). This stub implements the exact API shape the `pjrt`
+//! feature of `tdpc` compiles against, so `cargo build --features pjrt`
+//! and `cargo clippy --features pjrt` work everywhere; every entry point
+//! fails at *runtime* with a clear message.
+//!
+//! To execute HLO for real, replace this path dependency with a checkout
+//! of the actual bindings (edit the `xla` entry in `rust/Cargo.toml`, or
+//! add a `[patch]` section pointing at your xla-rs checkout). The types
+//! here are deliberately `!Send`/`!Sync` — the real bindings wrap raw
+//! PJRT pointers — so code written against the stub carries the same
+//! threading constraints as code written against the real thing.
+
+use std::fmt;
+use std::marker::PhantomData;
+
+/// Marker making stub types `!Send`/`!Sync`, like the real raw-pointer
+/// wrappers.
+type NotThreadSafe = PhantomData<*const ()>;
+
+const STUB_MSG: &str = "xla stub: the real PJRT bindings are not linked into this build \
+     (see rust/README.md — patch the `xla` dependency to enable execution)";
+
+/// Error type mirroring the real binding's error enum.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn stub() -> Error {
+        Error(STUB_MSG.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _marker: NotThreadSafe,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub())
+    }
+}
+
+/// A parsed HLO module proto (stub: parsing always fails).
+pub struct HloModuleProto {
+    _marker: NotThreadSafe,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _marker: NotThreadSafe,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _marker: PhantomData }
+    }
+}
+
+/// A compiled executable (stub: never constructible, execution fails).
+pub struct PjRtLoadedExecutable {
+    _marker: NotThreadSafe,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub())
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer {
+    _marker: NotThreadSafe,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub())
+    }
+}
+
+/// A host literal (stub: constructible, but conversions fail).
+pub struct Literal {
+    _marker: NotThreadSafe,
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _marker: PhantomData }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::stub())
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal)> {
+        Err(Error::stub())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::stub())
+    }
+}
