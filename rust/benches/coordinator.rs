@@ -55,7 +55,7 @@ fn main() {
 
         // Round-trip latency (single in-flight request).
         benchkit::bench(&format!("coordinator/{tag}_roundtrip"), || {
-            let _ = coord.infer_blocking(test.x[0].clone()).unwrap();
+            let _ = coord.infer_blocking(&test.x[0]).unwrap();
         });
 
         // Closed-loop burst throughput.
@@ -67,7 +67,7 @@ fn main() {
             || {
                 let (tx, rx) = std::sync::mpsc::channel();
                 for i in 0..n {
-                    coord.submit(test.x[i % test.len()].clone(), tx.clone()).unwrap();
+                    coord.submit(&test.x[i % test.len()], tx.clone()).unwrap();
                 }
                 drop(tx);
                 let got = rx.iter().take(n).count();

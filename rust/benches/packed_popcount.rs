@@ -1,0 +1,124 @@
+//! §Perf L3 bench: the packed popcount voter vs the legacy per-clause
+//! summation — the speedup this repo's packed-bit-plane data path exists
+//! to deliver, recorded in CI-compilable bench code.
+//!
+//! Three comparisons on an MNIST-c100-shaped synthetic model (hermetic,
+//! no artifacts needed):
+//!
+//! 1. *summation only*: `class_sums_from_fired` (word-level
+//!    `popcount(fired & pos) − popcount(fired & neg)` over polarity
+//!    masks) vs `class_sums_per_clause` (test-and-add per clause bit) on
+//!    identical fired words;
+//! 2. *end-to-end packed*: `forward_packed` over a pre-packed batch —
+//!    the production request path;
+//! 3. *end-to-end legacy*: per-row bool clause bits + per-clause signed
+//!    summation — the shape of the pre-packed-data-path backend loop.
+
+use tdpc::tm::{bits, PackedBatch, TmModel};
+use tdpc::util::{benchkit, SplitMix64};
+
+const BATCH: usize = 32;
+
+/// The old NativeBackend inner loop: bool clause bits per class, signed
+/// per-clause accumulation, `Vec<i32>` fired lanes.
+fn forward_legacy(model: &TmModel, rows: &[Vec<bool>]) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+    let cpc = model.clauses_per_class;
+    let mut sums = Vec::with_capacity(rows.len() * model.n_classes);
+    let mut fired_lanes = Vec::with_capacity(rows.len() * model.c_total());
+    let mut pred = Vec::with_capacity(rows.len());
+    for row in rows {
+        let bits = model.clause_bits(row);
+        let mut best = 0usize;
+        let mut best_sum = i32::MIN;
+        for (ki, class_bits) in bits.iter().enumerate() {
+            let mut s = 0i32;
+            for (j, &f) in class_bits.iter().enumerate() {
+                fired_lanes.push(f as i32);
+                if f {
+                    s += model.polarity[ki * cpc + j] as i32;
+                }
+            }
+            if s > best_sum {
+                best_sum = s;
+                best = ki;
+            }
+            sums.push(s);
+        }
+        pred.push(best as i32);
+    }
+    (sums, fired_lanes, pred)
+}
+
+fn main() {
+    let model = TmModel::synthetic("packed_vs_legacy", 10, 100, 784, 0.05, 7);
+    let mut rng = SplitMix64::new(13);
+    let rows: Vec<Vec<bool>> = (0..BATCH)
+        .map(|_| (0..model.n_features).map(|_| rng.next_bool(0.5)).collect())
+        .collect();
+    let batch = PackedBatch::from_rows(&rows).unwrap();
+
+    // -- 1. summation only, on identical fired words ----------------------
+    let fired_rows: Vec<Vec<u64>> = (0..batch.rows())
+        .map(|r| {
+            let out = model.forward_packed(&PackedBatch::from_rows(&rows[r..r + 1]).unwrap());
+            out.unwrap().fired_words_row(0).to_vec()
+        })
+        .collect();
+    let mut i = 0usize;
+    let m_pop = benchkit::bench("packed_popcount/sums_popcount_masks", || {
+        let f = &fired_rows[i % fired_rows.len()];
+        i += 1;
+        std::hint::black_box(model.class_sums_from_fired(f));
+    });
+    let mut j = 0usize;
+    let m_clause = benchkit::bench("packed_popcount/sums_per_clause", || {
+        let f = &fired_rows[j % fired_rows.len()];
+        j += 1;
+        std::hint::black_box(model.class_sums_per_clause(f));
+    });
+    println!(
+        "  summation speedup: ×{:.1} (popcount masks over per-clause loop)",
+        m_clause / m_pop
+    );
+
+    // Cross-check before timing the end-to-end paths: both voters and
+    // both forward passes must agree bit-for-bit.
+    let packed_out = model.forward_packed(&batch).unwrap();
+    let (legacy_sums, legacy_fired, legacy_pred) = forward_legacy(&model, &rows);
+    assert_eq!(packed_out.sums, legacy_sums, "sums diverge");
+    assert_eq!(packed_out.pred, legacy_pred, "preds diverge");
+    for r in 0..BATCH {
+        let unpacked: Vec<i32> =
+            packed_out.fired_row(r).iter().map(|&b| b as i32).collect();
+        assert_eq!(
+            unpacked,
+            legacy_fired[r * model.c_total()..(r + 1) * model.c_total()],
+            "fired bits diverge at row {r}"
+        );
+        assert_eq!(
+            model.class_sums_from_fired(&fired_rows[r]),
+            model.class_sums_per_clause(&fired_rows[r]),
+            "voters diverge at row {r}"
+        );
+    }
+
+    // -- 2 & 3. end-to-end forward passes ---------------------------------
+    let m_packed = benchkit::bench("packed_popcount/forward_packed_b32", || {
+        std::hint::black_box(model.forward_packed(&batch).unwrap());
+    });
+    let m_legacy = benchkit::bench("packed_popcount/forward_legacy_b32", || {
+        std::hint::black_box(forward_legacy(&model, &rows));
+    });
+    println!(
+        "  end-to-end: packed {:.0}/s vs legacy {:.0}/s (×{:.1})",
+        benchkit::throughput(m_packed, BATCH),
+        benchkit::throughput(m_legacy, BATCH),
+        m_legacy / m_packed
+    );
+    println!(
+        "  fired-row memory: {} B packed vs {} B as i32 lanes (×{:.0} smaller)",
+        bits::words_for(model.c_total()) * 8,
+        model.c_total() * 4,
+        (model.c_total() * 4) as f64 / (bits::words_for(model.c_total()) * 8) as f64
+    );
+}

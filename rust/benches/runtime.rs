@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use tdpc::runtime::{InferenceBackend, ModelRegistry, NativeBackend};
-use tdpc::tm::{Manifest, TestSet, TmModel};
+use tdpc::tm::{Manifest, PackedBatch, TestSet, TmModel};
 use tdpc::util::{benchkit, SplitMix64};
 
 /// MNIST-c100-shaped synthetic model (10 classes × 100 clauses × 784
@@ -18,12 +18,15 @@ fn synthetic_model() -> TmModel {
 }
 
 fn bench_backend(tag: &str, backend: &dyn InferenceBackend, rows: &[Vec<bool>]) {
-    let one = &rows[..1];
+    // Batches are packed once up front, as the coordinator does at
+    // ingestion; the forward pass consumes words.
+    let one = PackedBatch::from_rows(&rows[..1]).unwrap();
+    let full = PackedBatch::from_rows(rows).unwrap();
     let m1 = benchkit::bench(&format!("runtime/{tag}_b1"), || {
-        let _ = backend.forward(one).unwrap();
+        let _ = backend.forward(&one).unwrap();
     });
     let m32 = benchkit::bench(&format!("runtime/{tag}_b32"), || {
-        let _ = backend.forward(rows).unwrap();
+        let _ = backend.forward(&full).unwrap();
     });
     println!(
         "  throughput: b1 {:.0}/s, b32 {:.0}/s (batching gain ×{:.1})",

@@ -62,7 +62,7 @@ fn main() -> Result<()> {
     let (tx, rx) = std::sync::mpsc::channel();
     let t0 = Instant::now();
     for i in 0..N_REQUESTS {
-        coord.submit(test.x[i % test.len()].clone(), tx.clone())?;
+        coord.submit(&test.x[i % test.len()], tx.clone())?;
     }
     drop(tx);
     let mut correct = 0usize;

@@ -13,7 +13,7 @@ use tdpc::baselines::DesignParams;
 use tdpc::fabric::Device;
 use tdpc::flow::FlowConfig;
 use tdpc::runtime::{InferenceBackend, ModelRegistry};
-use tdpc::tm::{Manifest, TestSet, TmModel};
+use tdpc::tm::{Manifest, PackedBatch, TestSet, TmModel};
 
 fn main() -> Result<()> {
     let root = Manifest::default_root();
@@ -47,7 +47,7 @@ fn main() -> Result<()> {
     let mut correct = 0;
     let n = test.len().min(10);
     for i in 0..n {
-        let out = backend.forward(std::slice::from_ref(&test.x[i]))?;
+        let out = backend.forward(&PackedBatch::single(&test.x[i]))?;
         let hw = engine.infer(&out.clause_bits_row(0));
         let ok = out.pred[0] as usize == test.y[i];
         correct += ok as usize;

@@ -2,7 +2,9 @@
 //! multi-worker execution pool, metrics.
 //!
 //! The coordinator is the deployment shell around the paper's hardware:
-//! clients submit Booleanized samples; a dispatcher routes each request to
+//! clients submit Booleanized samples, which are bit-packed once at
+//! ingestion (the packed words are the native currency of the whole
+//! request path — see `tm::bits`); a dispatcher routes each request to
 //! one of `n_workers` worker threads (round-robin or least-loaded); each
 //! worker runs its own dynamic batcher (size- and deadline-bounded,
 //! vLLM-router style) and *owns* its execution backend — constructed
@@ -28,12 +30,16 @@ use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::asynctm::AsyncTmEngine;
 use crate::runtime::{BackendSpec, InferenceBackend, ModelRegistry};
+use crate::tm::{BitVec64, PackedBatch};
 use crate::util::Ps;
 
-/// One inference request.
+/// One inference request. Features are bit-packed at ingestion
+/// ([`Coordinator::submit`] packs the caller's bools exactly once), so
+/// the batcher, workers, and backends all consume the packed form — batch
+/// assembly is a word memcpy per request.
 #[derive(Debug)]
 pub struct InferRequest {
-    pub features: Vec<bool>,
+    pub features: BitVec64,
     /// Where to deliver the response.
     pub reply: mpsc::Sender<InferResponse>,
     submitted: Instant,
@@ -255,7 +261,11 @@ impl Coordinator {
     }
 
     /// Submit asynchronously; the response arrives on `reply`.
-    pub fn submit(&self, features: Vec<bool>, reply: mpsc::Sender<InferResponse>) -> Result<u64> {
+    ///
+    /// The Boolean feature row is bit-packed here, once, at ingestion —
+    /// everything downstream (dispatch, batching, the backend forward
+    /// pass) works on `u64` words.
+    pub fn submit(&self, features: &[bool], reply: mpsc::Sender<InferResponse>) -> Result<u64> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let w = self.pick_worker();
         let worker = &self.workers[w];
@@ -264,8 +274,14 @@ impl Coordinator {
             .as_ref()
             .ok_or_else(|| anyhow!("coordinator is shutting down"))?;
         worker.depth.fetch_add(1, Ordering::Relaxed);
-        let item =
-            WorkItem { id, req: InferRequest { features, reply, submitted: Instant::now() } };
+        let item = WorkItem {
+            id,
+            req: InferRequest {
+                features: BitVec64::from_bools(features),
+                reply,
+                submitted: Instant::now(),
+            },
+        };
         if tx.send(item).is_err() {
             worker.depth.fetch_sub(1, Ordering::Relaxed);
             return Err(anyhow!("coordinator worker {w} has shut down"));
@@ -274,7 +290,7 @@ impl Coordinator {
     }
 
     /// Convenience blocking call.
-    pub fn infer_blocking(&self, features: Vec<bool>) -> Result<InferResponse> {
+    pub fn infer_blocking(&self, features: &[bool]) -> Result<InferResponse> {
         let (tx, rx) = mpsc::channel();
         self.submit(features, tx)?;
         rx.recv().context("coordinator dropped the reply channel")
@@ -390,12 +406,19 @@ fn execute_batch(
     metrics: &Arc<Mutex<Metrics>>,
     depth: &AtomicUsize,
 ) -> Result<()> {
-    // The batch owns its feature vectors and never reads them again after
-    // the forward pass — move them out instead of cloning on the hot path.
-    let rows: Vec<Vec<bool>> =
-        batch.iter_mut().map(|w| std::mem::take(&mut w.req.features)).collect();
+    // Assemble the packed execution batch: requests were packed at
+    // ingestion, so each row is a word memcpy. A width-mismatched request
+    // fails assembly and drops the whole batch, exactly like a forward
+    // error (reply channels close and callers see the disconnect).
+    let rows = (|| -> Result<PackedBatch> {
+        let mut rows = PackedBatch::new(backend.n_features());
+        for w in batch.iter_mut() {
+            rows.push_bitvec(&std::mem::take(&mut w.req.features))?;
+        }
+        Ok(rows)
+    })();
     let t0 = Instant::now();
-    let out = match backend.forward(&rows) {
+    let out = match rows.and_then(|rows| backend.forward(&rows)) {
         Ok(out) => out,
         Err(e) => {
             // The whole batch is dropped: release its load in one go.

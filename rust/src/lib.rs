@@ -33,6 +33,24 @@
 //! least-loaded dispatch, per-worker dynamic batching, and metrics that
 //! aggregate across the pool.
 //!
+//! # The packed data plane
+//!
+//! The request path's native currency is the bit plane of [`tm::bits`]:
+//! `u64` words, LSB-first (bit `i` → word `i / 64`, position `i % 64`),
+//! tail bits zero, batches row-major ([`tm::PackedBatch`]). The
+//! [`coordinator`] packs each request's Boolean features **once at
+//! ingestion**; dispatch, batching, and [`runtime::InferenceBackend::forward`]
+//! all consume packed rows, and [`runtime::ForwardOutput`] returns the
+//! fired-clause bits packed the same way (32× smaller than i32 lanes at
+//! MNIST clause counts). Inside [`tm::TmModel::forward_packed`], literal
+//! vectors `[x, ~x]` are assembled word-wise, clauses evaluate as
+//! `include & !literals == 0` per word, and class sums are
+//! `popcount(fired & pos) − popcount(fired & neg)` over precomputed
+//! class-major polarity masks — the software mirror of the paper's
+//! time-domain popcount voter, where votes are never materialized as
+//! integers either. Only the PJRT backend unpacks, at the HLO boundary,
+//! because the AOT artifact was lowered against f32 lanes.
+//!
 //! See rust/README.md for the feature matrix and local verify commands,
 //! DESIGN.md for the system inventory and the experiment index, and
 //! EXPERIMENTS.md for the paper-vs-measured record.

@@ -24,7 +24,7 @@ use tdpc::experiments::{ablation, fig10, fig11, fig12, fig6, fig9, table1, Table
 use tdpc::fabric::Device;
 use tdpc::flow::{self, skew_report, FlowConfig};
 use tdpc::runtime::{BackendSpec, InferenceBackend, ModelRegistry};
-use tdpc::tm::{Manifest, TestSet, TmModel};
+use tdpc::tm::{Manifest, PackedBatch, TestSet, TmModel};
 use tdpc::util::Ps;
 
 fn main() {
@@ -128,7 +128,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
     println!("backend: {} (platform {})", backend.kind(), backend.platform());
     let mut correct = 0;
     for (i, x) in test.x.iter().take(n).enumerate() {
-        let out = backend.forward(std::slice::from_ref(x))?;
+        let out = backend.forward(&PackedBatch::single(x))?;
         let ok = out.pred[0] as usize == test.y[i];
         correct += ok as usize;
         println!(
@@ -189,7 +189,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (tx, rx) = std::sync::mpsc::channel();
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
-        coord.submit(test.x[i % test.len()].clone(), tx.clone())?;
+        coord.submit(&test.x[i % test.len()], tx.clone())?;
     }
     drop(tx);
     let mut correct = 0usize;

@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::tm::{Manifest, TmModel};
+use crate::tm::{Manifest, PackedBatch, TmModel};
 
 use super::ForwardOutput;
 
@@ -19,7 +19,9 @@ use super::ForwardOutput;
 ///
 /// Implementations accept a logical batch of any size (chunking and
 /// padding to fixed artifact batch sizes, where needed, is the backend's
-/// concern, not the caller's).
+/// concern, not the caller's). The batch arrives *bit-packed* — the
+/// coordinator packs each request once at ingestion, so backends never
+/// see a `Vec<bool>` on the request path.
 pub trait InferenceBackend {
     /// Short backend identifier (`"native"`, `"pjrt"`).
     fn kind(&self) -> &'static str;
@@ -34,8 +36,10 @@ pub trait InferenceBackend {
     fn n_classes(&self) -> usize;
     /// Total clause count (`n_classes × clauses_per_class`).
     fn c_total(&self) -> usize;
-    /// Run the forward pass over `rows` (each a Boolean feature vector).
-    fn forward(&self, rows: &[Vec<bool>]) -> Result<ForwardOutput>;
+    /// Run the forward pass over a packed batch of feature rows
+    /// (`batch.bits()` must equal [`InferenceBackend::n_features`] unless
+    /// the batch is empty).
+    fn forward(&self, batch: &PackedBatch) -> Result<ForwardOutput>;
 }
 
 /// A `Send + Clone` recipe for constructing a backend inside a worker
@@ -109,10 +113,12 @@ impl BackendSpec {
     }
 }
 
-/// Pure-Rust execution of the TM forward pass (clause evaluation with
-/// bit-packed `u64` words, signed popcount, argmax) directly from the
-/// trained model weights. `Send + Sync`: the model is immutable shared
-/// data, so one model can serve any number of worker threads.
+/// Pure-Rust execution of the TM forward pass, fully packed: clause
+/// evaluation over bit-packed `u64` literal words, class sums via
+/// `popcount(fired & polarity_mask)`, argmax — directly from the trained
+/// model weights, with no bool/int materialization anywhere. `Send +
+/// Sync`: the model is immutable shared data, so one model can serve any
+/// number of worker threads.
 pub struct NativeBackend {
     model: Arc<TmModel>,
 }
@@ -155,43 +161,8 @@ impl InferenceBackend for NativeBackend {
         self.model.c_total()
     }
 
-    fn forward(&self, rows: &[Vec<bool>]) -> Result<ForwardOutput> {
-        let m = &self.model;
-        let k = m.n_classes;
-        let cpc = m.clauses_per_class;
-        let mut out = ForwardOutput::empty(k, m.c_total());
-        out.batch = rows.len();
-        out.sums.reserve(rows.len() * k);
-        out.fired.reserve(rows.len() * m.c_total());
-        out.pred.reserve(rows.len());
-        for (r, row) in rows.iter().enumerate() {
-            ensure!(
-                row.len() == m.n_features,
-                "row {r}: feature length {} != model features {}",
-                row.len(),
-                m.n_features
-            );
-            let bits = m.clause_bits(row);
-            let mut best = 0usize;
-            let mut best_sum = i32::MIN;
-            for (ki, class_bits) in bits.iter().enumerate() {
-                let mut s = 0i32;
-                for (j, &fired) in class_bits.iter().enumerate() {
-                    out.fired.push(fired as i32);
-                    if fired {
-                        s += m.polarity[ki * cpc + j] as i32;
-                    }
-                }
-                // Ties resolve to the lowest class index (jnp.argmax).
-                if s > best_sum {
-                    best_sum = s;
-                    best = ki;
-                }
-                out.sums.push(s);
-            }
-            out.pred.push(best as i32);
-        }
-        Ok(out)
+    fn forward(&self, batch: &PackedBatch) -> Result<ForwardOutput> {
+        self.model.forward_packed(batch)
     }
 }
 
@@ -212,7 +183,7 @@ mod tests {
             vec![true, true],
             vec![false, false],
         ];
-        let out = b.forward(&rows).unwrap();
+        let out = b.forward(&PackedBatch::from_rows(&rows).unwrap()).unwrap();
         assert_eq!(out.batch, 3);
         for (i, row) in rows.iter().enumerate() {
             assert_eq!(out.sums_row(i), &b.model().class_sums(row)[..], "row {i}");
@@ -225,13 +196,13 @@ mod tests {
     #[test]
     fn forward_rejects_wrong_feature_width() {
         let b = backend();
-        assert!(b.forward(&[vec![true; 3]]).is_err());
+        assert!(b.forward(&PackedBatch::single(&[true; 3])).is_err());
     }
 
     #[test]
     fn forward_empty_batch() {
         let b = backend();
-        let out = b.forward(&[]).unwrap();
+        let out = b.forward(&PackedBatch::from_rows(&[]).unwrap()).unwrap();
         assert_eq!(out.batch, 0);
         assert!(out.pred.is_empty());
     }

@@ -14,6 +14,13 @@
 //!
 //! [`BackendSpec`] is the `Send + Clone` factory that crosses thread
 //! boundaries; [`ModelRegistry`] caches constructed backends per model.
+//!
+//! The data plane is *packed end-to-end*: [`InferenceBackend::forward`]
+//! consumes a [`crate::tm::PackedBatch`] of bit-packed feature rows (the
+//! coordinator packs each request once at ingestion) and produces a
+//! [`ForwardOutput`] whose clause bits are bit-packed words. The native
+//! backend never unpacks; the PJRT backend unpacks only at the HLO
+//! boundary, where the AOT artifact demands f32 lanes.
 
 pub mod backend;
 #[cfg(feature = "pjrt")]
@@ -25,78 +32,20 @@ pub use backend::{BackendSpec, InferenceBackend, NativeBackend};
 pub use pjrt::{ModelRunner, PjrtBackend};
 pub use registry::ModelRegistry;
 
-use anyhow::{ensure, Result};
-
-/// Output of one batched TM forward pass (mirrors `model.tm_forward` on the
-/// Python side; identical layout across every backend).
-#[derive(Debug, Clone, PartialEq)]
-pub struct ForwardOutput {
-    pub batch: usize,
-    pub n_classes: usize,
-    pub c_total: usize,
-    /// (batch × n_classes) row-major signed class sums.
-    pub sums: Vec<i32>,
-    /// (batch × c_total) row-major clause bits.
-    pub fired: Vec<i32>,
-    /// (batch) argmax predictions.
-    pub pred: Vec<i32>,
-}
-
-impl ForwardOutput {
-    /// An output with zero rows (identity for [`ForwardOutput::append`]).
-    pub fn empty(n_classes: usize, c_total: usize) -> ForwardOutput {
-        ForwardOutput {
-            batch: 0,
-            n_classes,
-            c_total,
-            sums: Vec::new(),
-            fired: Vec::new(),
-            pred: Vec::new(),
-        }
-    }
-
-    /// Concatenate another output's rows onto this one (used by backends
-    /// that execute a logical batch as several fixed-size chunks).
-    pub fn append(&mut self, other: ForwardOutput) -> Result<()> {
-        ensure!(
-            self.n_classes == other.n_classes && self.c_total == other.c_total,
-            "cannot append outputs of different shapes ({}/{} vs {}/{})",
-            self.n_classes,
-            self.c_total,
-            other.n_classes,
-            other.c_total
-        );
-        self.batch += other.batch;
-        self.sums.extend(other.sums);
-        self.fired.extend(other.fired);
-        self.pred.extend(other.pred);
-        Ok(())
-    }
-
-    pub fn sums_row(&self, b: usize) -> &[i32] {
-        &self.sums[b * self.n_classes..(b + 1) * self.n_classes]
-    }
-
-    /// Clause bits of sample `b`, grouped per class (PDL select inputs).
-    pub fn clause_bits_row(&self, b: usize) -> Vec<Vec<bool>> {
-        let row = &self.fired[b * self.c_total..(b + 1) * self.c_total];
-        let per = self.c_total / self.n_classes;
-        (0..self.n_classes)
-            .map(|k| row[k * per..(k + 1) * per].iter().map(|&v| v != 0).collect())
-            .collect()
-    }
-}
-
-/// Convert Boolean features to the f32 layout the HLO expects.
-pub fn bools_to_f32(rows: &[Vec<bool>]) -> Vec<f32> {
-    rows.iter()
-        .flat_map(|r| r.iter().map(|&b| if b { 1.0 } else { 0.0 }))
-        .collect()
-}
+/// The forward-pass output every backend returns. Defined next to
+/// [`crate::tm::TmModel::forward_packed`] in the model layer (so `tm`
+/// has no dependency on the serving runtime) and re-exported here as the
+/// seam's interchange type.
+pub use crate::tm::model::ForwardOutput;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tm::PackedBatch;
+
+    fn packed(rows: &[Vec<bool>]) -> PackedBatch {
+        PackedBatch::from_rows(rows).unwrap()
+    }
 
     #[test]
     fn forward_output_row_access() {
@@ -105,18 +54,17 @@ mod tests {
             n_classes: 2,
             c_total: 4,
             sums: vec![1, -1, 3, 0],
-            fired: vec![1, 0, 0, 1, 1, 1, 0, 0],
+            fired: packed(&[
+                vec![true, false, false, true],
+                vec![true, true, false, false],
+            ]),
             pred: vec![0, 0],
         };
         assert_eq!(out.sums_row(1), &[3, 0]);
         let bits = out.clause_bits_row(0);
         assert_eq!(bits, vec![vec![true, false], vec![false, true]]);
-    }
-
-    #[test]
-    fn bools_layout() {
-        let rows = vec![vec![true, false], vec![false, true]];
-        assert_eq!(bools_to_f32(&rows), vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(out.fired_row(1), vec![true, true, false, false]);
+        assert_eq!(out.fired_words_row(0), &[0b1001u64]);
     }
 
     #[test]
@@ -127,12 +75,13 @@ mod tests {
             n_classes: 2,
             c_total: 4,
             sums: vec![1, -1],
-            fired: vec![1, 0, 0, 1],
+            fired: packed(&[vec![true, false, false, true]]),
             pred: vec![0],
         };
         a.append(b.clone()).unwrap();
         a.append(b).unwrap();
         assert_eq!(a.batch, 2);
+        assert_eq!(a.fired.rows(), 2);
         assert_eq!(a.sums, vec![1, -1, 1, -1]);
         assert_eq!(a.pred, vec![0, 0]);
         // Shape mismatch is rejected.

@@ -16,10 +16,42 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::tm::{Manifest, ManifestEntry};
+use crate::tm::{bits::BitVec64, Manifest, ManifestEntry, PackedBatch};
 use crate::util::sync::OnceMap;
 
-use super::{bools_to_f32, ForwardOutput, InferenceBackend};
+use super::{ForwardOutput, InferenceBackend};
+
+/// Unpack rows `[lo, hi)` of a packed batch to the f32 layout the HLO
+/// expects (1.0/0.0 lanes, row-major). This is the *only* place the
+/// request path unpacks: everything upstream of the PJRT boundary is
+/// `u64` words.
+fn packed_to_f32(batch: &PackedBatch, lo: usize, hi: usize) -> Vec<f32> {
+    let bits = batch.bits();
+    let mut out = Vec::with_capacity((hi - lo) * bits);
+    for r in lo..hi {
+        for i in 0..bits {
+            out.push(if batch.bit(r, i) { 1.0 } else { 0.0 });
+        }
+    }
+    out
+}
+
+/// Pack the i32 clause-bit lanes an HLO execution returns (batch ×
+/// c_total, row-major) into the bit-packed interchange form.
+fn pack_fired_lanes(fired: &[i32], batch: usize, c_total: usize) -> PackedBatch {
+    let mut out = PackedBatch::new(c_total);
+    for b in 0..batch {
+        let row = &fired[b * c_total..(b + 1) * c_total];
+        let mut v = BitVec64::zeros(c_total);
+        for (i, &lane) in row.iter().enumerate() {
+            if lane != 0 {
+                v.set(i, true);
+            }
+        }
+        out.push_bitvec(&v).expect("row width is c_total by construction");
+    }
+    out
+}
 
 /// A compiled executable for one (model, batch-size) pair.
 pub struct ModelRunner {
@@ -86,7 +118,7 @@ impl ModelRunner {
             n_classes: self.n_classes,
             c_total: self.c_total,
             sums,
-            fired,
+            fired: pack_fired_lanes(&fired, self.batch, self.c_total),
             pred,
         })
     }
@@ -99,7 +131,7 @@ impl ModelRunner {
         let mut out = self.run(&padded)?;
         out.batch = n_valid;
         out.sums.truncate(n_valid * self.n_classes);
-        out.fired.truncate(n_valid * self.c_total);
+        out.fired.truncate_rows(n_valid);
         out.pred.truncate(n_valid);
         Ok(out)
     }
@@ -192,28 +224,27 @@ impl InferenceBackend for PjrtBackend {
 
     /// Execute a logical batch of any size by slicing it into artifact-
     /// sized chunks (padding the tail — §Perf L3: padding beats splitting
-    /// into many small executions).
-    fn forward(&self, rows: &[Vec<bool>]) -> Result<ForwardOutput> {
-        for (r, row) in rows.iter().enumerate() {
-            ensure!(
-                row.len() == self.entry.n_features,
-                "row {r}: feature length {} != model features {}",
-                row.len(),
-                self.entry.n_features
-            );
-        }
+    /// into many small executions). The packed batch is unpacked to f32
+    /// lanes here, chunk by chunk, because that is the layout the AOT
+    /// artifact was lowered against — nothing upstream unpacks.
+    fn forward(&self, batch: &PackedBatch) -> Result<ForwardOutput> {
+        ensure!(
+            batch.is_empty() || batch.bits() == self.entry.n_features,
+            "batch feature width {} != model features {}",
+            batch.bits(),
+            self.entry.n_features
+        );
         let mut out = ForwardOutput::empty(self.n_classes(), self.c_total());
         let mut i = 0;
-        while i < rows.len() {
-            let remaining = rows.len() - i;
+        while i < batch.rows() {
+            let remaining = batch.rows() - i;
             let exec = self
                 .manifest
                 .exec_batch(remaining)
                 .ok_or_else(|| anyhow!("manifest lists no artifact batch sizes"))?;
             let take = exec.min(remaining);
-            let chunk = &rows[i..i + take];
             let runner = self.runner(exec)?;
-            let x = bools_to_f32(chunk);
+            let x = packed_to_f32(batch, i, i + take);
             let o = if take == runner.batch {
                 runner.run(&x)?
             } else {

@@ -1,0 +1,398 @@
+//! Packed bit-plane primitives: the native currency of the request path.
+//!
+//! The paper's hardware never sees a clause bit as an integer — votes are
+//! events counted by a time-domain popcount. The software mirror of that
+//! is a dense `u64` bit plane: [`BitVec64`] is one logical bit vector
+//! (LSB-first within each word, tail bits zero), [`PackedBatch`] is a
+//! row-major batch of equal-width vectors. Feature rows, literal vectors,
+//! clause-include masks, fired-clause outputs, and polarity masks all use
+//! this one layout, so clause evaluation and class summation reduce to
+//! word-wise `AND`/`popcount` (`count_ones`) — the software analogue of
+//! the paper's popcount voter.
+//!
+//! Layout conventions (shared with `python/compile`, see rust/README.md
+//! §Data plane):
+//!
+//! * bit `i` of a vector lives in word `i / 64`, position `i % 64`
+//!   (LSB-first);
+//! * words beyond the logical length are absent; bits beyond it in the
+//!   last word are **always zero** (every constructor and mutator
+//!   maintains this, so `count_ones` needs no masking);
+//! * a [`PackedBatch`] stores its rows contiguously at
+//!   `words_per_row = ceil(bits / 64)` words each, so row `r` is the word
+//!   slice `[r * words_per_row, (r + 1) * words_per_row)`.
+
+use anyhow::{ensure, Result};
+
+/// Bits per storage word.
+pub const WORD_BITS: usize = 64;
+
+/// Number of `u64` words needed to hold `bits` bits.
+#[inline]
+pub fn words_for(bits: usize) -> usize {
+    bits.div_ceil(WORD_BITS)
+}
+
+/// Mask selecting the valid bits of the last word of a `bits`-bit vector
+/// (all ones when `bits` is a multiple of 64 or zero).
+#[inline]
+pub fn tail_mask(bits: usize) -> u64 {
+    match bits % WORD_BITS {
+        0 => u64::MAX,
+        r => (1u64 << r) - 1,
+    }
+}
+
+/// Copy the low `n_bits` of `src` into `dst` starting at bit offset
+/// `dst_off`, OR-ing into whatever is already there (callers start from
+/// zeroed destinations). Bits of `src` beyond `n_bits` are ignored.
+pub fn copy_bits(dst: &mut [u64], dst_off: usize, src: &[u64], n_bits: usize) {
+    if n_bits == 0 {
+        return;
+    }
+    let shift = dst_off % WORD_BITS;
+    let base = dst_off / WORD_BITS;
+    for w in 0..words_for(n_bits) {
+        let valid = (n_bits - w * WORD_BITS).min(WORD_BITS);
+        let v = if valid < WORD_BITS { src[w] & ((1u64 << valid) - 1) } else { src[w] };
+        dst[base + w] |= v << shift;
+        if shift != 0 {
+            let hi = v >> (WORD_BITS - shift);
+            if hi != 0 {
+                dst[base + w + 1] |= hi;
+            }
+        }
+    }
+}
+
+/// One bit vector backed by `u64` words (LSB-first, zero tail).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BitVec64 {
+    bits: usize,
+    words: Vec<u64>,
+}
+
+impl BitVec64 {
+    /// All-zeros vector of `bits` bits.
+    pub fn zeros(bits: usize) -> BitVec64 {
+        BitVec64 { bits, words: vec![0u64; words_for(bits)] }
+    }
+
+    /// Construct from pre-packed words (tail bits must already be zero).
+    pub fn from_words(bits: usize, words: Vec<u64>) -> BitVec64 {
+        assert_eq!(words.len(), words_for(bits), "word count mismatch for {bits} bits");
+        debug_assert!(
+            words.is_empty() || words[words.len() - 1] & !tail_mask(bits) == 0,
+            "tail bits beyond the logical length must be zero"
+        );
+        BitVec64 { bits, words }
+    }
+
+    /// Pack a bool slice.
+    pub fn from_bools(bits: &[bool]) -> BitVec64 {
+        let mut v = BitVec64::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.words[i / WORD_BITS] |= 1u64 << (i % WORD_BITS);
+            }
+        }
+        v
+    }
+
+    /// Logical length in bits.
+    pub fn len(&self) -> usize {
+        self.bits
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits == 0
+    }
+
+    /// Backing words (tail bits guaranteed zero).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Consume into the backing words (tail bits guaranteed zero).
+    pub fn into_words(self) -> Vec<u64> {
+        self.words
+    }
+
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.bits, "bit {i} out of range {}", self.bits);
+        (self.words[i / WORD_BITS] >> (i % WORD_BITS)) & 1 == 1
+    }
+
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.bits, "bit {i} out of range {}", self.bits);
+        let mask = 1u64 << (i % WORD_BITS);
+        if v {
+            self.words[i / WORD_BITS] |= mask;
+        } else {
+            self.words[i / WORD_BITS] &= !mask;
+        }
+    }
+
+    /// Population count (no masking needed: tail bits are zero).
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Unpack to bools (interchange/debug only — not a hot path).
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.bits).map(|i| self.get(i)).collect()
+    }
+}
+
+/// A row-major batch of equal-width packed bit vectors.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PackedBatch {
+    rows: usize,
+    bits: usize,
+    words: Vec<u64>,
+}
+
+impl PackedBatch {
+    /// Empty batch of `bits`-bit rows.
+    pub fn new(bits: usize) -> PackedBatch {
+        PackedBatch { rows: 0, bits, words: Vec::new() }
+    }
+
+    /// Pack a uniform-width bool matrix. An empty slice yields a
+    /// zero-row, zero-bit batch (accepted by every backend).
+    pub fn from_rows(rows: &[Vec<bool>]) -> Result<PackedBatch> {
+        let bits = rows.first().map_or(0, |r| r.len());
+        let mut b = PackedBatch::new(bits);
+        for row in rows {
+            b.push_bools(row)?;
+        }
+        Ok(b)
+    }
+
+    /// Single-row batch (the CLI / example convenience).
+    pub fn single(row: &[bool]) -> PackedBatch {
+        let mut b = PackedBatch::new(row.len());
+        b.push_bools(row).expect("width matches by construction");
+        b
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Bits per row.
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Words per row (`ceil(bits / 64)`).
+    pub fn words_per_row(&self) -> usize {
+        words_for(self.bits)
+    }
+
+    /// All backing words, row-major.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Word slice of row `r`.
+    pub fn row(&self, r: usize) -> &[u64] {
+        let wpr = self.words_per_row();
+        &self.words[r * wpr..(r + 1) * wpr]
+    }
+
+    /// Bit `i` of row `r`.
+    pub fn bit(&self, r: usize, i: usize) -> bool {
+        assert!(i < self.bits, "bit {i} out of range {}", self.bits);
+        (self.row(r)[i / WORD_BITS] >> (i % WORD_BITS)) & 1 == 1
+    }
+
+    /// Unpack row `r` to bools (interchange/debug only).
+    pub fn row_bools(&self, r: usize) -> Vec<bool> {
+        (0..self.bits).map(|i| self.bit(r, i)).collect()
+    }
+
+    /// Append one bool row (must match the batch width).
+    pub fn push_bools(&mut self, row: &[bool]) -> Result<()> {
+        ensure!(
+            row.len() == self.bits,
+            "row width {} != batch width {}",
+            row.len(),
+            self.bits
+        );
+        let wpr = self.words_per_row();
+        let base = self.words.len();
+        self.words.resize(base + wpr, 0);
+        for (i, &b) in row.iter().enumerate() {
+            if b {
+                self.words[base + i / WORD_BITS] |= 1u64 << (i % WORD_BITS);
+            }
+        }
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Append an already-packed row — a word memcpy, the ingestion hot
+    /// path (the coordinator packs each request once at submit and batch
+    /// assembly reuses the words).
+    pub fn push_bitvec(&mut self, row: &BitVec64) -> Result<()> {
+        ensure!(
+            row.len() == self.bits,
+            "row width {} != batch width {}",
+            row.len(),
+            self.bits
+        );
+        self.words.extend_from_slice(row.words());
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Append a row given as pre-masked words (tail bits must be zero;
+    /// `debug_assert`ed). Used by forward passes emitting fired words.
+    pub fn push_words(&mut self, row: &[u64]) {
+        debug_assert_eq!(row.len(), self.words_per_row());
+        debug_assert!(
+            row.is_empty() || row[row.len() - 1] & !tail_mask(self.bits) == 0,
+            "tail bits beyond row width must be zero"
+        );
+        self.words.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Concatenate another batch's rows onto this one.
+    pub fn append(&mut self, other: &PackedBatch) -> Result<()> {
+        ensure!(
+            other.is_empty() || other.bits == self.bits,
+            "cannot append {}-bit rows onto a {}-bit batch",
+            other.bits,
+            self.bits
+        );
+        self.words.extend_from_slice(&other.words);
+        self.rows += other.rows;
+        Ok(())
+    }
+
+    /// Keep only the first `n` rows (PJRT padding truncation).
+    pub fn truncate_rows(&mut self, n: usize) {
+        if n < self.rows {
+            self.words.truncate(n * self.words_per_row());
+            self.rows = n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn bitvec_roundtrip_across_word_boundaries() {
+        for n in [0usize, 1, 63, 64, 65, 127, 128, 130] {
+            let mut rng = SplitMix64::new(n as u64 + 1);
+            let bools: Vec<bool> = (0..n).map(|_| rng.next_bool(0.5)).collect();
+            let v = BitVec64::from_bools(&bools);
+            assert_eq!(v.len(), n);
+            assert_eq!(v.words().len(), words_for(n));
+            assert_eq!(v.to_bools(), bools, "n={n}");
+            assert_eq!(v.count_ones(), bools.iter().filter(|&&b| b).count(), "n={n}");
+            // Tail invariant: bits beyond the logical length are zero.
+            if let Some(&last) = v.words().last() {
+                assert_eq!(last & !tail_mask(n), 0, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitvec_set_get() {
+        let mut v = BitVec64::zeros(70);
+        v.set(0, true);
+        v.set(63, true);
+        v.set(64, true);
+        v.set(69, true);
+        assert!(v.get(0) && v.get(63) && v.get(64) && v.get(69));
+        assert!(!v.get(1) && !v.get(65));
+        assert_eq!(v.count_ones(), 4);
+        v.set(63, false);
+        assert!(!v.get(63));
+        assert_eq!(v.count_ones(), 3);
+    }
+
+    #[test]
+    fn copy_bits_at_unaligned_offsets() {
+        let mut rng = SplitMix64::new(99);
+        for n in [1usize, 7, 63, 64, 65, 120] {
+            for off in [0usize, 1, 31, 63, 64, 65] {
+                let src_bools: Vec<bool> = (0..n).map(|_| rng.next_bool(0.5)).collect();
+                let src = BitVec64::from_bools(&src_bools);
+                let mut dst = vec![0u64; words_for(off + n)];
+                copy_bits(&mut dst, off, src.words(), n);
+                for (i, &b) in src_bools.iter().enumerate() {
+                    let got = (dst[(off + i) / 64] >> ((off + i) % 64)) & 1 == 1;
+                    assert_eq!(got, b, "n={n} off={off} bit {i}");
+                }
+                // Nothing below the offset was touched.
+                for i in 0..off {
+                    assert_eq!((dst[i / 64] >> (i % 64)) & 1, 0, "n={n} off={off} low bit {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_batch_row_access() {
+        let rows = vec![
+            vec![true, false, true],
+            vec![false, true, true],
+            vec![false, false, false],
+        ];
+        let b = PackedBatch::from_rows(&rows).unwrap();
+        assert_eq!(b.rows(), 3);
+        assert_eq!(b.bits(), 3);
+        assert_eq!(b.words_per_row(), 1);
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(&b.row_bools(r), row, "row {r}");
+        }
+        assert!(b.bit(0, 0) && !b.bit(0, 1) && b.bit(1, 2));
+    }
+
+    #[test]
+    fn packed_batch_rejects_ragged_rows() {
+        assert!(PackedBatch::from_rows(&[vec![true; 4], vec![true; 5]]).is_err());
+        let mut b = PackedBatch::new(8);
+        assert!(b.push_bitvec(&BitVec64::zeros(9)).is_err());
+        assert!(b.push_bools(&[true; 7]).is_err());
+        assert_eq!(b.rows(), 0, "failed pushes must not grow the batch");
+    }
+
+    #[test]
+    fn packed_batch_append_and_truncate() {
+        let mut a = PackedBatch::from_rows(&[vec![true; 65], vec![false; 65]]).unwrap();
+        let b = PackedBatch::from_rows(&[vec![true; 65]]).unwrap();
+        a.append(&b).unwrap();
+        assert_eq!(a.rows(), 3);
+        assert!(a.bit(2, 64));
+        // Appending an empty batch is the identity regardless of width.
+        a.append(&PackedBatch::new(0)).unwrap();
+        assert_eq!(a.rows(), 3);
+        let mut c = PackedBatch::new(4);
+        assert!(c.append(&a).is_err(), "width mismatch must be rejected");
+        a.truncate_rows(1);
+        assert_eq!(a.rows(), 1);
+        assert_eq!(a.words().len(), a.words_per_row());
+    }
+
+    #[test]
+    fn empty_batch_conventions() {
+        let b = PackedBatch::from_rows(&[]).unwrap();
+        assert!(b.is_empty());
+        assert_eq!(b.bits(), 0);
+        let s = PackedBatch::single(&[true, false]);
+        assert_eq!(s.rows(), 1);
+        assert_eq!(s.row_bools(0), vec![true, false]);
+    }
+}

@@ -6,9 +6,11 @@
 //! for the hardware substrates (the simulators need per-sample clause bits)
 //! and for functional cross-checks against the PJRT-executed HLO.
 
+pub mod bits;
 pub mod datasets;
 pub mod model;
 
+pub use bits::{BitVec64, PackedBatch};
 pub use datasets::TestSet;
 pub use model::{TmModel, WorkloadSpec};
 

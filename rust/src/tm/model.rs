@@ -5,6 +5,13 @@
 //! literal is 1 and the clause is non-empty; class sums are signed votes.
 //! The hardware simulators consume the *clause bits* (they are the PDL
 //! select inputs); `class_sums` is used for functional cross-checks.
+//!
+//! The request path is fully packed (§Data plane, rust/README.md):
+//! [`TmModel::forward_packed`] consumes a [`PackedBatch`] of feature rows
+//! and emits packed fired-clause words, with class sums computed as
+//! `popcount(fired & pos) − popcount(fired & neg)` over precomputed
+//! class-major polarity masks — the software analogue of the paper's
+//! time-domain popcount voter.
 
 use std::path::Path;
 
@@ -12,7 +19,88 @@ use anyhow::{ensure, Result};
 
 use crate::util::json;
 
+use super::bits::{copy_bits, tail_mask, words_for, BitVec64, PackedBatch, WORD_BITS};
 use super::parse_bits;
+
+/// Output of one batched TM forward pass (mirrors `model.tm_forward` on the
+/// Python side; identical layout across every backend — re-exported as
+/// `runtime::ForwardOutput`, the type every [`crate::runtime::InferenceBackend`]
+/// returns).
+///
+/// Clause bits are stored *bit-packed*: `fired` holds one `c_total`-bit
+/// row per sample (class-major clause order, LSB-first `u64` words — the
+/// layout of [`crate::tm::bits`]). At MNIST clause counts this is 32×
+/// smaller than the old `Vec<i32>` row (1000 clauses: 16 words vs 1000
+/// i32s), and it is the form the polarity-mask popcount voter consumes
+/// directly. Consumers that want bools (hardware sims, goldens) go
+/// through [`ForwardOutput::clause_bits_row`] / [`ForwardOutput::fired_row`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForwardOutput {
+    pub batch: usize,
+    pub n_classes: usize,
+    pub c_total: usize,
+    /// (batch × n_classes) row-major signed class sums.
+    pub sums: Vec<i32>,
+    /// Bit-packed clause outputs: one `c_total`-bit row per sample.
+    pub fired: PackedBatch,
+    /// (batch) argmax predictions.
+    pub pred: Vec<i32>,
+}
+
+impl ForwardOutput {
+    /// An output with zero rows (identity for [`ForwardOutput::append`]).
+    pub fn empty(n_classes: usize, c_total: usize) -> ForwardOutput {
+        ForwardOutput {
+            batch: 0,
+            n_classes,
+            c_total,
+            sums: Vec::new(),
+            fired: PackedBatch::new(c_total),
+            pred: Vec::new(),
+        }
+    }
+
+    /// Concatenate another output's rows onto this one (used by backends
+    /// that execute a logical batch as several fixed-size chunks).
+    pub fn append(&mut self, other: ForwardOutput) -> Result<()> {
+        ensure!(
+            self.n_classes == other.n_classes && self.c_total == other.c_total,
+            "cannot append outputs of different shapes ({}/{} vs {}/{})",
+            self.n_classes,
+            self.c_total,
+            other.n_classes,
+            other.c_total
+        );
+        self.batch += other.batch;
+        self.sums.extend(other.sums);
+        self.fired.append(&other.fired)?;
+        self.pred.extend(other.pred);
+        Ok(())
+    }
+
+    pub fn sums_row(&self, b: usize) -> &[i32] {
+        &self.sums[b * self.n_classes..(b + 1) * self.n_classes]
+    }
+
+    /// Packed fired-clause words of sample `b` (the native popcount form).
+    pub fn fired_words_row(&self, b: usize) -> &[u64] {
+        self.fired.row(b)
+    }
+
+    /// Flat clause bits of sample `b`, class-major (unpacked — for
+    /// goldens and tests, not the hot path).
+    pub fn fired_row(&self, b: usize) -> Vec<bool> {
+        self.fired.row_bools(b)
+    }
+
+    /// Clause bits of sample `b`, grouped per class (PDL select inputs).
+    pub fn clause_bits_row(&self, b: usize) -> Vec<Vec<bool>> {
+        let per = self.c_total / self.n_classes;
+        (0..self.n_classes)
+            .map(|k| (k * per..(k + 1) * per).map(|c| self.fired.bit(b, c)).collect())
+            .collect()
+    }
+}
 
 /// A trained multi-class TM in the interchange layout (clause axis
 /// flattened class-major, literals `[x, ~x]`).
@@ -34,6 +122,21 @@ pub struct TmModel {
     /// the clause-evaluation hot path works word-wise (§Perf L3: ~50×
     /// over the bool-wise loop on MNIST-scale literal counts).
     packed_include: Vec<Vec<u64>>,
+    /// Per-class polarity masks over the packed fired-clause words
+    /// (§Perf L3: class sums by word-level popcount, no per-clause loop).
+    class_masks: Vec<ClassMasks>,
+}
+
+/// Polarity masks for one class over the flat class-major fired bit
+/// space. `pos`/`neg` cover only the word span the class's clauses
+/// occupy (starting at word `start`), with every bit outside the class's
+/// clause range already zeroed — so the class sum is exactly
+/// `Σ_w popcount(fired[start+w] & pos[w]) − popcount(fired[start+w] & neg[w])`.
+#[derive(Debug, Clone)]
+struct ClassMasks {
+    start: usize,
+    pos: Vec<u64>,
+    neg: Vec<u64>,
 }
 
 /// A synthetic workload description used by the scaling sweeps (Figs.
@@ -49,15 +152,44 @@ pub struct WorkloadSpec {
     pub fire_rate: f64,
 }
 
-/// Pack a bit vector into u64 words (LSB-first within each word).
+/// Pack a bit vector into u64 words (LSB-first within each word) — thin
+/// wrapper over the one packing loop in [`crate::tm::bits`].
 pub(crate) fn pack_bits(bits: &[bool]) -> Vec<u64> {
-    let mut words = vec![0u64; bits.len().div_ceil(64)];
-    for (i, &b) in bits.iter().enumerate() {
-        if b {
-            words[i / 64] |= 1u64 << (i % 64);
-        }
-    }
-    words
+    BitVec64::from_bools(bits).into_words()
+}
+
+/// Build the per-class polarity masks. A clause contributes to the mask
+/// only if it is non-empty (an empty clause's fired bit is always 0
+/// anyway, but keeping the masks tight makes them self-describing).
+fn build_class_masks(
+    n_classes: usize,
+    clauses_per_class: usize,
+    polarity: &[i8],
+    nonempty: &[bool],
+) -> Vec<ClassMasks> {
+    (0..n_classes)
+        .map(|k| {
+            let lo = k * clauses_per_class;
+            let hi = lo + clauses_per_class;
+            let start = lo / WORD_BITS;
+            let span = if clauses_per_class == 0 { 0 } else { (hi - 1) / WORD_BITS + 1 - start };
+            let mut pos = vec![0u64; span];
+            let mut neg = vec![0u64; span];
+            for c in lo..hi {
+                if !nonempty[c] {
+                    continue;
+                }
+                let w = c / WORD_BITS - start;
+                let bit = 1u64 << (c % WORD_BITS);
+                if polarity[c] > 0 {
+                    pos[w] |= bit;
+                } else {
+                    neg[w] |= bit;
+                }
+            }
+            ClassMasks { start, pos, neg }
+        })
+        .collect()
 }
 
 impl TmModel {
@@ -73,6 +205,7 @@ impl TmModel {
         accuracy: f64,
     ) -> TmModel {
         let packed_include = include.iter().map(|row| pack_bits(row)).collect();
+        let class_masks = build_class_masks(n_classes, clauses_per_class, &polarity, &nonempty);
         TmModel {
             name,
             n_classes,
@@ -83,6 +216,7 @@ impl TmModel {
             nonempty,
             accuracy,
             packed_include,
+            class_masks,
         }
     }
 
@@ -164,11 +298,34 @@ impl TmModel {
             .map(|v| Ok(v.as_i64()? != 0))
             .collect::<Result<Vec<_>>>()?;
         let c_total = n_classes * clauses_per_class;
-        ensure!(include.len() == c_total, "include rows {} != {c_total}", include.len());
-        ensure!(polarity.len() == c_total);
-        ensure!(nonempty.len() == c_total);
-        for row in &include {
-            ensure!(row.len() == 2 * n_features, "literal width mismatch");
+        ensure!(
+            include.len() == c_total,
+            "corrupt model artifact {}: {} include rows != {c_total} clauses \
+             ({n_classes} classes × {clauses_per_class} clauses/class)",
+            path.display(),
+            include.len()
+        );
+        ensure!(
+            polarity.len() == c_total,
+            "corrupt model artifact {}: {} polarity entries != {c_total} clauses",
+            path.display(),
+            polarity.len()
+        );
+        ensure!(
+            nonempty.len() == c_total,
+            "corrupt model artifact {}: {} nonempty flags != {c_total} clauses",
+            path.display(),
+            nonempty.len()
+        );
+        for (c, row) in include.iter().enumerate() {
+            ensure!(
+                row.len() == 2 * n_features,
+                "corrupt model artifact {}: clause {c} has {} literals, expected {} \
+                 (2 × {n_features} features)",
+                path.display(),
+                row.len(),
+                2 * n_features
+            );
         }
         let name = doc
             .get_opt("name")
@@ -200,19 +357,48 @@ impl TmModel {
         lits
     }
 
-    /// Evaluate one clause on a literal vector.
-    #[inline]
-    pub fn clause_fires(&self, clause: usize, lits: &[bool]) -> bool {
-        if !self.nonempty[clause] {
-            return false;
-        }
-        self.clause_fires_packed(clause, &pack_bits(lits))
+    /// Packed literal vector `[x, ~x]` from packed features: the `~x`
+    /// half is built word-wise (negate + tail-mask + bit-shift into
+    /// place), so no per-bit loop runs at any feature width.
+    pub fn packed_literals(&self, x_words: &[u64]) -> BitVec64 {
+        let mut out = vec![0u64; words_for(2 * self.n_features)];
+        let mut negated = Vec::with_capacity(x_words.len());
+        self.packed_literals_into(x_words, &mut negated, &mut out);
+        BitVec64::from_words(2 * self.n_features, out)
     }
 
-    /// Word-wise clause evaluation: fires iff every included literal is 1,
-    /// i.e. `include & !literals == 0` in every word.
+    /// Allocation-free core of [`TmModel::packed_literals`]: writes the
+    /// literal words into `out` (length `words_for(2 * n_features)`,
+    /// overwritten) using `negated` as reusable scratch — the batched
+    /// forward pass hoists both buffers out of its row loop.
+    fn packed_literals_into(&self, x_words: &[u64], negated: &mut Vec<u64>, out: &mut [u64]) {
+        let f = self.n_features;
+        debug_assert_eq!(x_words.len(), words_for(f));
+        debug_assert_eq!(out.len(), words_for(2 * f));
+        out.fill(0);
+        copy_bits(out, 0, x_words, f);
+        // ~x, masked to the feature width so no stray tail bits leak in.
+        negated.clear();
+        negated.extend(x_words.iter().map(|w| !w));
+        if let Some(last) = negated.last_mut() {
+            *last &= tail_mask(f);
+        }
+        copy_bits(out, f, negated, f);
+    }
+
+    /// Evaluate one clause on a pre-packed literal vector (pack once with
+    /// [`TmModel::packed_literals`], reuse across every clause).
     #[inline]
-    fn clause_fires_packed(&self, clause: usize, lit_words: &[u64]) -> bool {
+    pub fn clause_fires(&self, clause: usize, lits: &BitVec64) -> bool {
+        self.clause_fires_packed(clause, lits.words())
+    }
+
+    /// Word-wise clause evaluation: fires iff the clause is non-empty and
+    /// every included literal is 1, i.e. `include & !literals == 0` in
+    /// every word. This is the single `nonempty` checkpoint on the
+    /// evaluation path.
+    #[inline]
+    pub fn clause_fires_packed(&self, clause: usize, lit_words: &[u64]) -> bool {
         if !self.nonempty[clause] {
             return false;
         }
@@ -222,39 +408,112 @@ impl TmModel {
             .all(|(&inc, &lit)| inc & !lit == 0)
     }
 
+    /// Fired-clause words for one pre-packed literal vector: one bit per
+    /// clause, class-major, `words_for(c_total)` words. `out` is
+    /// overwritten.
+    fn fired_words_into(&self, lit_words: &[u64], out: &mut [u64]) {
+        debug_assert_eq!(out.len(), words_for(self.c_total()));
+        out.fill(0);
+        for c in 0..self.c_total() {
+            if self.clause_fires_packed(c, lit_words) {
+                out[c / WORD_BITS] |= 1u64 << (c % WORD_BITS);
+            }
+        }
+    }
+
+    /// Class sums from packed fired-clause words via the polarity masks:
+    /// `popcount(fired & pos) − popcount(fired & neg)` per class — the
+    /// software analogue of the paper's time-domain popcount voter.
+    pub fn class_sums_from_fired(&self, fired_words: &[u64]) -> Vec<i32> {
+        debug_assert_eq!(fired_words.len(), words_for(self.c_total()));
+        self.class_masks
+            .iter()
+            .map(|m| {
+                let mut s = 0i32;
+                for (w, (&p, &n)) in m.pos.iter().zip(&m.neg).enumerate() {
+                    let f = fired_words[m.start + w];
+                    s += (f & p).count_ones() as i32 - (f & n).count_ones() as i32;
+                }
+                s
+            })
+            .collect()
+    }
+
+    /// Per-clause signed summation over packed fired words — the pre-
+    /// packed-data-path voter, kept (not on the request path) as the
+    /// differential baseline for `benches/packed_popcount.rs` and the
+    /// property suites.
+    pub fn class_sums_per_clause(&self, fired_words: &[u64]) -> Vec<i32> {
+        let mut sums = vec![0i32; self.n_classes];
+        for c in 0..self.c_total() {
+            if (fired_words[c / WORD_BITS] >> (c % WORD_BITS)) & 1 == 1 {
+                sums[c / self.clauses_per_class] += self.polarity[c] as i32;
+            }
+        }
+        sums
+    }
+
+    /// Batched packed forward pass — the request path. Consumes packed
+    /// feature rows, emits packed fired words per sample, class sums via
+    /// the polarity-mask popcount, and argmax predictions (ties → lowest
+    /// index, matching `jnp.argmax`).
+    pub fn forward_packed(&self, batch: &PackedBatch) -> Result<ForwardOutput> {
+        ensure!(
+            batch.is_empty() || batch.bits() == self.n_features,
+            "batch feature width {} != model features {}",
+            batch.bits(),
+            self.n_features
+        );
+        let k = self.n_classes;
+        let mut out = ForwardOutput::empty(k, self.c_total());
+        out.batch = batch.rows();
+        out.sums.reserve(batch.rows() * k);
+        out.pred.reserve(batch.rows());
+        // All scratch is hoisted out of the row loop: the per-sample body
+        // allocates nothing (§Perf L3).
+        let mut lits = vec![0u64; words_for(2 * self.n_features)];
+        let mut negated = Vec::with_capacity(words_for(self.n_features));
+        let mut fired = vec![0u64; words_for(self.c_total())];
+        for r in 0..batch.rows() {
+            self.packed_literals_into(batch.row(r), &mut negated, &mut lits);
+            self.fired_words_into(&lits, &mut fired);
+            let sums = self.class_sums_from_fired(&fired);
+            let mut best = 0usize;
+            for (ki, &s) in sums.iter().enumerate() {
+                // Ties resolve to the lowest class index (jnp.argmax).
+                if s > sums[best] {
+                    best = ki;
+                }
+            }
+            out.fired.push_words(&fired);
+            out.sums.extend_from_slice(&sums);
+            out.pred.push(best as i32);
+        }
+        Ok(out)
+    }
+
     /// Clause outputs for one sample, grouped per class — the PDL select
     /// inputs of the hardware. Packs the literal vector once and evaluates
     /// all clauses word-wise (§Perf L3).
     pub fn clause_bits(&self, x_bool: &[bool]) -> Vec<Vec<bool>> {
-        let lit_words = pack_bits(&self.literals(x_bool));
+        let lits = self.packed_literals(BitVec64::from_bools(x_bool).words());
         (0..self.n_classes)
             .map(|k| {
                 let lo = k * self.clauses_per_class;
                 (lo..lo + self.clauses_per_class)
-                    .map(|c| self.clause_fires_packed(c, &lit_words))
+                    .map(|c| self.clause_fires_packed(c, lits.words()))
                     .collect()
             })
             .collect()
     }
 
-    /// Signed class sums for one sample.
+    /// Signed class sums for one sample (single-row convenience over the
+    /// packed path).
     pub fn class_sums(&self, x_bool: &[bool]) -> Vec<i32> {
-        let bits = self.clause_bits(x_bool);
-        (0..self.n_classes)
-            .map(|k| {
-                bits[k]
-                    .iter()
-                    .enumerate()
-                    .map(|(j, &fired)| {
-                        if fired {
-                            self.polarity[k * self.clauses_per_class + j] as i32
-                        } else {
-                            0
-                        }
-                    })
-                    .sum()
-            })
-            .collect()
+        let lits = self.packed_literals(BitVec64::from_bools(x_bool).words());
+        let mut fired = vec![0u64; words_for(self.c_total())];
+        self.fired_words_into(lits.words(), &mut fired);
+        self.class_sums_from_fired(&fired)
     }
 
     /// Functional argmax prediction (ties resolve to the lowest index,
@@ -360,9 +619,22 @@ pub(crate) mod tests {
     }
 
     #[test]
+    fn packed_literals_match_bool_literals() {
+        // Word-boundary feature counts: the ~x half lands at offsets
+        // 63/64/65 and must shift across words correctly.
+        for f in [1usize, 2, 31, 32, 33, 63, 64, 65, 100] {
+            let mut rng = crate::util::SplitMix64::new(f as u64);
+            let m = TmModel::synthetic("lit", 2, 3, f, 0.2, 9);
+            let x: Vec<bool> = (0..f).map(|_| rng.next_bool(0.5)).collect();
+            let packed = m.packed_literals(BitVec64::from_bools(&x).words());
+            assert_eq!(packed.to_bools(), m.literals(&x), "f={f}");
+        }
+    }
+
+    #[test]
     fn clause_semantics() {
         let m = toy();
-        let lits = m.literals(&[true, true]);
+        let lits = m.packed_literals(BitVec64::from_bools(&[true, true]).words());
         assert!(m.clause_fires(0, &lits)); // x0=1
         assert!(m.clause_fires(1, &lits)); // x1=1
         assert!(!m.clause_fires(2, &lits)); // ~x0=0
@@ -378,6 +650,27 @@ pub(crate) mod tests {
         assert_eq!(m.class_sums(&[true, true]), vec![0, 0]);
         // x = [0, 0]: class0 = 0; class1 = +1.
         assert_eq!(m.class_sums(&[false, false]), vec![0, 1]);
+    }
+
+    #[test]
+    fn popcount_sums_agree_with_per_clause_sums() {
+        // The popcount voter vs the per-clause loop, on shapes whose
+        // class boundaries are word-unaligned.
+        for (k, cpc) in [(2usize, 2usize), (3, 21), (5, 13), (2, 32), (1, 127)] {
+            let m = TmModel::synthetic("sum", k, cpc, 24, 0.2, 3);
+            let mut rng = crate::util::SplitMix64::new(17);
+            for _ in 0..8 {
+                let x: Vec<bool> = (0..24).map(|_| rng.next_bool(0.5)).collect();
+                let lits = m.packed_literals(BitVec64::from_bools(&x).words());
+                let mut fired = vec![0u64; words_for(m.c_total())];
+                m.fired_words_into(lits.words(), &mut fired);
+                assert_eq!(
+                    m.class_sums_from_fired(&fired),
+                    m.class_sums_per_clause(&fired),
+                    "k={k} cpc={cpc}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -412,5 +705,30 @@ pub(crate) mod tests {
             let packed: Vec<bool> = m.clause_bits(&x).concat();
             assert_eq!(fired, packed, "{x:?}");
         }
+    }
+
+    #[test]
+    fn forward_packed_matches_reference() {
+        let m = TmModel::synthetic("fwd", 3, 10, 19, 0.25, 5);
+        let mut rng = crate::util::SplitMix64::new(8);
+        let rows: Vec<Vec<bool>> =
+            (0..7).map(|_| (0..19).map(|_| rng.next_bool(0.5)).collect()).collect();
+        let out = m.forward_packed(&PackedBatch::from_rows(&rows).unwrap()).unwrap();
+        assert_eq!(out.batch, 7);
+        for (i, row) in rows.iter().enumerate() {
+            let (fired, sums, pred) = m.forward_reference(row);
+            assert_eq!(out.sums_row(i), &sums[..], "row {i}");
+            assert_eq!(out.pred[i] as usize, pred, "row {i}");
+            assert_eq!(out.fired_row(i), fired, "row {i}");
+        }
+    }
+
+    #[test]
+    fn forward_packed_rejects_wrong_width() {
+        let m = toy();
+        let batch = PackedBatch::from_rows(&[vec![true; 3]]).unwrap();
+        assert!(m.forward_packed(&batch).is_err());
+        // Empty batches pass regardless of their (zero) width.
+        assert_eq!(m.forward_packed(&PackedBatch::new(0)).unwrap().batch, 0);
     }
 }

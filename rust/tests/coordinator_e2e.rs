@@ -53,7 +53,7 @@ fn serves_requests_with_correct_predictions() {
     let cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg, Vec::new()).unwrap();
     for (i, x) in test_inputs(&model, 20, 2).into_iter().enumerate() {
-        let resp = coord.infer_blocking(x.clone()).unwrap();
+        let resp = coord.infer_blocking(&x).unwrap();
         assert_eq!(resp.pred, model.predict(&x), "request {i}");
         assert_eq!(resp.sums, model.class_sums(&x), "request {i}");
         assert!(resp.hw_decision_latency.is_none());
@@ -79,7 +79,7 @@ fn four_worker_pool_answers_each_request_once_and_metrics_sum() {
     let inputs = test_inputs(&model, n, 4);
     let (tx, rx) = std::sync::mpsc::channel();
     for x in &inputs {
-        coord.submit(x.clone(), tx.clone()).unwrap();
+        coord.submit(x, tx.clone()).unwrap();
     }
     drop(tx);
     let responses: Vec<_> = rx.iter().take(n).collect();
@@ -130,14 +130,14 @@ fn least_loaded_prefers_idle_workers() {
     // Sequential blocking requests: the pool is idle at each submit, so the
     // tie-break (lowest index) pins every request to worker 0.
     for x in test_inputs(&model, 10, 6) {
-        let resp = coord.infer_blocking(x).unwrap();
+        let resp = coord.infer_blocking(&x).unwrap();
         assert_eq!(resp.worker, 0);
     }
     // A burst deepens worker 0's queue, so worker 1 must pick up load.
     let n = 100;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 7) {
-        coord.submit(x, tx.clone()).unwrap();
+        coord.submit(&x, tx.clone()).unwrap();
     }
     drop(tx);
     let responses: Vec<_> = rx.iter().take(n).collect();
@@ -162,7 +162,7 @@ fn batches_form_under_burst_load() {
     let n = 200;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 9) {
-        coord.submit(x, tx.clone()).unwrap();
+        coord.submit(&x, tx.clone()).unwrap();
     }
     drop(tx);
     assert_eq!(rx.iter().take(n).count(), n);
@@ -190,7 +190,7 @@ fn hardware_replay_reports_latency_and_agrees() {
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg, engines).unwrap();
     let mut mismatch_with_margin = 0;
     for (i, x) in test_inputs(&model, 30, 11).into_iter().enumerate() {
-        let resp = coord.infer_blocking(x.clone()).unwrap();
+        let resp = coord.infer_blocking(&x).unwrap();
         let lat = resp.hw_decision_latency.expect("hw engine attached to every worker");
         assert!(lat.as_ns() > 1.0, "plausible on-chip latency (request {i})");
         // Hardware may only disagree on argmax ties.
@@ -215,7 +215,7 @@ fn shutdown_drains_queued_requests() {
     let n = 120;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 13) {
-        coord.submit(x, tx.clone()).unwrap();
+        coord.submit(&x, tx.clone()).unwrap();
     }
     drop(tx);
     // Graceful shutdown must answer everything already accepted.
@@ -261,6 +261,52 @@ fn drop_without_shutdown_does_not_hang() {
     let model = test_model(15);
     let cfg = pool_config(2, DispatchPolicy::RoundRobin, model.clone());
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg, Vec::new()).unwrap();
-    let _ = coord.infer_blocking(test_inputs(&model, 1, 16).remove(0)).unwrap();
+    let _ = coord.infer_blocking(&test_inputs(&model, 1, 16)[0]).unwrap();
     drop(coord); // Drop impl joins all workers — must not deadlock.
+}
+
+#[test]
+fn word_boundary_models_batch_correctly_through_four_workers() {
+    // The packed request path end-to-end at clause/feature counts that
+    // straddle u64 word edges: pack at submit → dispatch → per-worker
+    // batch assembly → packed forward → popcount sums, for 4 workers,
+    // cross-checked per response against the bool-wise reference forward.
+    for (k, cpc, f) in [(1usize, 63usize, 63usize), (2, 32, 64), (5, 13, 65), (1, 127, 31)] {
+        let model =
+            Arc::new(TmModel::synthetic("e2e_model", k, cpc, f, 0.15, (k * cpc + f) as u64));
+        let cfg = pool_config(4, DispatchPolicy::RoundRobin, model.clone());
+        let coord = Coordinator::start(unused_root(), "e2e_model", cfg, Vec::new()).unwrap();
+        let n = 64;
+        let inputs = test_inputs(&model, n, 21);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for x in &inputs {
+            coord.submit(x, tx.clone()).unwrap();
+        }
+        drop(tx);
+        let responses: Vec<_> = rx.iter().take(n).collect();
+        assert_eq!(responses.len(), n, "k={k} cpc={cpc} f={f}");
+        for r in &responses {
+            let x = &inputs[r.request_id as usize];
+            let (_, sums, pred) = model.forward_reference(x);
+            assert_eq!(r.sums, sums, "k={k} cpc={cpc} f={f} request {}", r.request_id);
+            assert_eq!(r.pred, pred, "k={k} cpc={cpc} f={f} request {}", r.request_id);
+        }
+        coord.shutdown();
+    }
+}
+
+#[test]
+fn width_mismatched_request_fails_batch_not_pool() {
+    // A wrong-width request poisons only the batch it lands in: its reply
+    // channel closes, and the pool keeps serving later requests.
+    let model = test_model(30);
+    let cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg, Vec::new()).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    coord.submit(&vec![true; model.n_features + 3], tx).unwrap();
+    assert!(rx.recv().is_err(), "mismatched request must get no reply");
+    let x = test_inputs(&model, 1, 31).remove(0);
+    let resp = coord.infer_blocking(&x).unwrap();
+    assert_eq!(resp.pred, model.predict(&x), "pool must survive the bad batch");
+    coord.shutdown();
 }

@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use tdpc::runtime::{InferenceBackend, NativeBackend};
-use tdpc::tm::TmModel;
+use tdpc::tm::{PackedBatch, TmModel};
 use tdpc::util::SplitMix64;
 
 #[test]
@@ -64,13 +64,13 @@ fn native_backend_honours_jnp_conventions() {
     ));
     let backend = NativeBackend::new(model);
     // x = [1, 1]: sums tie at (0, 0) → jnp.argmax picks class 0.
-    let out = backend.forward(&[vec![true, true]]).unwrap();
+    let out = backend.forward(&PackedBatch::single(&[true, true])).unwrap();
     assert_eq!(out.sums_row(0), &[0, 0]);
     assert_eq!(out.pred[0], 0, "tie must resolve to the lowest index (jnp.argmax)");
     // x = [0, 0]: only ~x0 fires → class 1 wins; the empty clause stayed
     // silent even though all of its (zero) literals are satisfied.
-    let out = backend.forward(&[vec![false, false]]).unwrap();
+    let out = backend.forward(&PackedBatch::single(&[false, false])).unwrap();
     assert_eq!(out.sums_row(0), &[0, 1]);
     assert_eq!(out.pred[0], 1);
-    assert_eq!(out.fired, vec![0, 0, 1, 0]);
+    assert_eq!(out.fired_row(0), vec![false, false, true, false]);
 }

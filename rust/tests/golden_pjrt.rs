@@ -19,7 +19,7 @@ mod common;
 
 use common::load_golden;
 use tdpc::runtime::{InferenceBackend, PjrtBackend};
-use tdpc::tm::{Manifest, TmModel};
+use tdpc::tm::{Manifest, PackedBatch, TmModel};
 
 fn manifest_or_skip() -> Option<Manifest> {
     match Manifest::load_default() {
@@ -51,12 +51,11 @@ fn pjrt_matches_golden_vectors_sample_by_sample() {
         let golden = load_golden(&entry.golden_path);
         for i in 0..golden.inputs.len() {
             let out = backend
-                .forward(std::slice::from_ref(&golden.inputs[i]))
+                .forward(&PackedBatch::single(&golden.inputs[i]))
                 .unwrap();
             assert_eq!(out.sums_row(0), &golden.sums[i][..], "{} sample {i} sums", entry.name);
             assert_eq!(out.pred[0], golden.pred[i], "{} sample {i} pred", entry.name);
-            let fired: Vec<bool> = out.fired.iter().map(|&v| v != 0).collect();
-            assert_eq!(fired, golden.fired[i], "{} sample {i} clause bits", entry.name);
+            assert_eq!(out.fired_row(0), golden.fired[i], "{} sample {i} clause bits", entry.name);
         }
     }
 }
@@ -71,7 +70,7 @@ fn pjrt_full_batch_consistent_with_single_samples() {
         // the 32-wide artifact internally.
         let rows: Vec<Vec<bool>> =
             (0..32).map(|i| golden.inputs[i % golden.inputs.len()].clone()).collect();
-        let out = backend.forward(&rows).unwrap();
+        let out = backend.forward(&PackedBatch::from_rows(&rows).unwrap()).unwrap();
         assert_eq!(out.batch, 32);
         for i in 0..32 {
             let g = i % golden.inputs.len();
@@ -91,7 +90,7 @@ fn pjrt_matches_rust_clause_evaluator() {
         let model = TmModel::load(&entry.model_path).unwrap();
         let test = tdpc::tm::TestSet::load(&entry.test_data_path).unwrap();
         for i in (0..test.len().min(40)).step_by(5) {
-            let out = backend.forward(std::slice::from_ref(&test.x[i])).unwrap();
+            let out = backend.forward(&PackedBatch::single(&test.x[i])).unwrap();
             let sums = model.class_sums(&test.x[i]);
             assert_eq!(out.sums_row(0), &sums[..], "{} sample {i}", entry.name);
             let want = model.predict(&test.x[i]);
@@ -108,7 +107,7 @@ fn padded_partial_batches_truncate_correctly() {
     let golden = load_golden(&entry.golden_path);
     // 5 rows force the 32-wide artifact with zero-padding + truncation.
     let rows: Vec<Vec<bool>> = golden.inputs[..5].to_vec();
-    let out = backend.forward(&rows).unwrap();
+    let out = backend.forward(&PackedBatch::from_rows(&rows).unwrap()).unwrap();
     assert_eq!(out.batch, 5);
     assert_eq!(out.pred.len(), 5);
     for i in 0..5 {

@@ -2,6 +2,10 @@
 //! with the naive bool-wise reference evaluator (`TmModel::forward_reference`)
 //! on randomized models, and with the Python-emitted golden vectors when
 //! artifacts are present.
+//!
+//! The word-boundary suite pins the packed data path at literal and
+//! clause counts that straddle `u64` word edges (63/64/65/127 bits) —
+//! the widths where shift/mask bugs in `tm::bits` would hide.
 
 mod common;
 
@@ -9,7 +13,7 @@ use std::sync::Arc;
 
 use common::load_golden;
 use tdpc::runtime::{BackendSpec, InferenceBackend, NativeBackend};
-use tdpc::tm::{Manifest, TmModel};
+use tdpc::tm::{Manifest, PackedBatch, TmModel};
 use tdpc::util::prop;
 
 /// Build a random model from the property generator (shapes and include
@@ -20,11 +24,36 @@ fn random_model(g: &mut prop::Gen) -> TmModel {
     let cpc = g.int(1, 12) as usize;
     let f = g.int(1, 80) as usize;
     let density = g.float(0.0, 0.4);
+    random_model_shaped(g, k, cpc, f, density)
+}
+
+fn random_model_shaped(
+    g: &mut prop::Gen,
+    k: usize,
+    cpc: usize,
+    f: usize,
+    density: f64,
+) -> TmModel {
     let c_total = k * cpc;
     let include: Vec<Vec<bool>> = (0..c_total).map(|_| g.bits(2 * f, density)).collect();
     let polarity: Vec<i8> =
         (0..c_total).map(|_| if g.boolean(0.5) { 1 } else { -1 }).collect();
     TmModel::assemble_derived("prop".into(), k, f, cpc, include, polarity, 0.0)
+}
+
+/// Assert the packed forward pass reproduces the bool-wise reference on
+/// every row of a batch: sums, argmax, and every fired clause bit.
+fn assert_packed_matches_reference(model: &TmModel, rows: &[Vec<bool>], ctx: &str) {
+    let backend = NativeBackend::new(Arc::new(model.clone()));
+    let batch = PackedBatch::from_rows(rows).unwrap();
+    let out = backend.forward(&batch).unwrap();
+    assert_eq!(out.batch, rows.len(), "{ctx}: batch size");
+    for (i, row) in rows.iter().enumerate() {
+        let (fired, sums, pred) = model.forward_reference(row);
+        assert_eq!(out.sums_row(i), &sums[..], "{ctx}: sums, row {i}");
+        assert_eq!(out.pred[i] as usize, pred, "{ctx}: argmax, row {i}");
+        assert_eq!(out.fired_row(i), fired, "{ctx}: clause bits, row {i}");
+    }
 }
 
 #[test]
@@ -34,17 +63,43 @@ fn prop_native_backend_matches_reference_forward() {
         let n_rows = g.int(1, 6) as usize;
         let rows: Vec<Vec<bool>> =
             (0..n_rows).map(|_| g.bits(model.n_features, 0.5)).collect();
-        let backend = NativeBackend::new(Arc::new(model));
-        let out = backend.forward(&rows).unwrap();
-        assert_eq!(out.batch, n_rows);
-        for (i, row) in rows.iter().enumerate() {
-            let (fired, sums, pred) = backend.model().forward_reference(row);
-            assert_eq!(out.sums_row(i), &sums[..], "sums, row {i}");
-            assert_eq!(out.pred[i] as usize, pred, "argmax, row {i}");
-            let got_fired: Vec<bool> =
-                out.fired[i * out.c_total..(i + 1) * out.c_total].iter().map(|&v| v != 0).collect();
-            assert_eq!(got_fired, fired, "clause bits, row {i}");
-        }
+        assert_packed_matches_reference(&model, &rows, "random shape");
+    });
+}
+
+#[test]
+fn prop_packed_forward_at_word_boundary_widths() {
+    // Feature counts straddling 32/64-bit literal-word edges (the literal
+    // vector is 2 × f bits: f = 31..33 → 62/64/66 literals, f = 63..65 →
+    // 126/128/130) crossed with clause totals straddling fired-word edges
+    // (63/64/65/127 clause bits, class boundaries word-unaligned).
+    let features = [31usize, 32, 33, 63, 64, 65];
+    let shapes = [(1usize, 63usize), (2, 32), (5, 13), (1, 127), (3, 21)];
+    prop::check("packed forward at word-boundary widths", 60, |g| {
+        let f = *g.choose(&features);
+        let &(k, cpc) = g.choose(&shapes);
+        let density = g.float(0.0, 0.4);
+        let model = random_model_shaped(g, k, cpc, f, density);
+        assert_eq!(model.c_total(), k * cpc);
+        let n_rows = g.int(1, 5) as usize;
+        let rows: Vec<Vec<bool>> = (0..n_rows).map(|_| g.bits(f, 0.5)).collect();
+        assert_packed_matches_reference(&model, &rows, &format!("k={k} cpc={cpc} f={f}"));
+    });
+}
+
+#[test]
+fn prop_popcount_voter_matches_per_clause_voter() {
+    // The polarity-mask popcount sums vs the per-clause signed loop, on
+    // the packed fired words the forward pass actually emits.
+    prop::check("popcount voter vs per-clause voter", 80, |g| {
+        let model = random_model(g);
+        let row = g.bits(model.n_features, 0.5);
+        let out = model.forward_packed(&PackedBatch::single(&row)).unwrap();
+        let fired = out.fired_words_row(0);
+        assert_eq!(
+            model.class_sums_from_fired(fired),
+            model.class_sums_per_clause(fired)
+        );
     });
 }
 
@@ -55,7 +110,7 @@ fn prop_argmax_ties_resolve_to_lowest_index() {
         let model = random_model(g);
         let row = g.bits(model.n_features, 0.5);
         let backend = NativeBackend::new(Arc::new(model));
-        let out = backend.forward(std::slice::from_ref(&row)).unwrap();
+        let out = backend.forward(&PackedBatch::single(&row)).unwrap();
         let sums = out.sums_row(0);
         let top = *sums.iter().max().unwrap();
         let first_top = sums.iter().position(|&s| s == top).unwrap();
@@ -76,16 +131,12 @@ fn native_backend_matches_golden_vectors() {
         let golden = load_golden(&entry.golden_path);
         let spec = BackendSpec::Native;
         let backend = spec.open(&manifest.root, &entry.name).unwrap();
-        let out = backend.forward(&golden.inputs).unwrap();
+        let batch = PackedBatch::from_rows(&golden.inputs).unwrap();
+        let out = backend.forward(&batch).unwrap();
         for i in 0..golden.inputs.len() {
             assert_eq!(out.sums_row(i), &golden.sums[i][..], "{} sample {i} sums", entry.name);
             assert_eq!(out.pred[i], golden.pred[i], "{} sample {i} pred", entry.name);
-            let fired: Vec<bool> = out.fired
-                [i * out.c_total..(i + 1) * out.c_total]
-                .iter()
-                .map(|&v| v != 0)
-                .collect();
-            assert_eq!(fired, golden.fired[i], "{} sample {i} clause bits", entry.name);
+            assert_eq!(out.fired_row(i), golden.fired[i], "{} sample {i} clause bits", entry.name);
         }
     }
 }
