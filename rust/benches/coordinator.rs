@@ -1,15 +1,19 @@
 //! §Perf L3 bench: coordinator serving path — round-trip latency and
 //! closed-loop throughput across pool sizes, with and without the
-//! hardware replay engine.
+//! time-domain hardware backend (replay policy: full).
+//!
+//! Needs `make artifacts`; `benches/hw_backend.rs` is the artifact-free
+//! native-vs-replay sweep.
 
 use std::time::Duration;
 
-use tdpc::asynctm::AsyncTmEngine;
-use tdpc::baselines::DesignParams;
-use tdpc::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy};
-use tdpc::fabric::Device;
+use tdpc::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy, ReplayPolicy,
+};
 use tdpc::flow::FlowConfig;
-use tdpc::tm::{Manifest, TestSet, TmModel};
+use tdpc::hw::HwArch;
+use tdpc::runtime::BackendSpec;
+use tdpc::tm::{Manifest, TestSet};
 use tdpc::util::benchkit;
 
 fn main() {
@@ -27,30 +31,26 @@ fn main() {
     for (model_name, n_workers, hw) in cases {
         let entry = manifest.entry(model_name).unwrap().clone();
         let test = TestSet::load(&entry.test_data_path).unwrap();
-        let engines = if hw {
-            let model = TmModel::load(&entry.model_path).unwrap();
-            let d = DesignParams::from_model(&model);
-            (0..n_workers)
-                .map(|i| {
-                    AsyncTmEngine::build(
-                        &Device::xc7z020(),
-                        &d,
-                        &FlowConfig::table1_default(),
-                        1 + i as u64,
-                    )
-                    .unwrap()
-                })
-                .collect()
+        let (backend, replay) = if hw {
+            (
+                BackendSpec::TimeDomain {
+                    arch: HwArch::Async,
+                    flow: FlowConfig::table1_default(),
+                    model: None,
+                },
+                ReplayPolicy::Full,
+            )
         } else {
-            Vec::new()
+            (BackendSpec::Native, ReplayPolicy::Off)
         };
         let cfg = CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(300) },
             n_workers,
             dispatch: DispatchPolicy::LeastLoaded,
-            ..CoordinatorConfig::default()
+            backend,
+            replay,
         };
-        let coord = Coordinator::start(root.clone(), model_name, cfg, engines).unwrap();
+        let coord = Coordinator::start(root.clone(), model_name, cfg).unwrap();
         let tag = format!("{model_name}_w{n_workers}{}", if hw { "+hw" } else { "" });
 
         // Round-trip latency (single in-flight request).
@@ -80,6 +80,9 @@ fn main() {
             "  mean batch {:.1}, mean exec {:.0} µs",
             m.mean_batch_size, m.mean_batch_exec_us
         );
+        if m.hw_mean_ns > 0.0 {
+            println!("  hw decision latency: p50 {} p99 {}", m.hw_p50, m.hw_p99);
+        }
         coord.shutdown();
     }
 }

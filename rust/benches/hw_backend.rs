@@ -1,0 +1,96 @@
+//! §Perf L3 bench: cost of the hardware replay seam on the serving path.
+//!
+//! Artifact-free (synthetic in-memory model): one coordinator per replay
+//! configuration — native-only serving, `ReplayPolicy::Sample(8)`, and
+//! `ReplayPolicy::Full` over the async time-domain backend — so the
+//! overhead of per-request hardware timing is directly measurable as a
+//! throughput delta. Registered in CI as a compile target
+//! (`cargo bench --bench hw_backend --no-run`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tdpc::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy, ReplayPolicy,
+};
+use tdpc::flow::FlowConfig;
+use tdpc::hw::HwArch;
+use tdpc::runtime::BackendSpec;
+use tdpc::tm::TmModel;
+use tdpc::util::{benchkit, SplitMix64};
+
+fn main() {
+    // MNIST-shaped but flow-buildable quickly: 8 classes × 64 clauses
+    // over 128 Boolean features.
+    let model = Arc::new(TmModel::synthetic("hw_bench", 8, 64, 128, 0.10, 7));
+    let mut rng = SplitMix64::new(11);
+    let inputs: Vec<Vec<bool>> = (0..256)
+        .map(|_| (0..model.n_features).map(|_| rng.next_bool(0.5)).collect())
+        .collect();
+
+    let cases: [(&str, BackendSpec, ReplayPolicy); 3] = [
+        ("native", BackendSpec::InMemory(model.clone()), ReplayPolicy::Off),
+        (
+            "hw_sample8",
+            BackendSpec::TimeDomain {
+                arch: HwArch::Async,
+                flow: FlowConfig::table1_default(),
+                model: Some(model.clone()),
+            },
+            ReplayPolicy::Sample(8),
+        ),
+        (
+            "hw_full",
+            BackendSpec::TimeDomain {
+                arch: HwArch::Async,
+                flow: FlowConfig::table1_default(),
+                model: Some(model.clone()),
+            },
+            ReplayPolicy::Full,
+        ),
+    ];
+
+    let mut throughputs: Vec<(&str, f64)> = Vec::new();
+    for (tag, backend, replay) in cases {
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(300) },
+            n_workers: 2,
+            dispatch: DispatchPolicy::LeastLoaded,
+            backend,
+            replay,
+        };
+        let coord = Coordinator::start(std::path::PathBuf::from("/unused"), "hw_bench", cfg)
+            .unwrap();
+
+        let n = inputs.len();
+        let mean = benchkit::bench_with(
+            &format!("hw_backend/{tag}_burst{n}"),
+            Duration::from_millis(200),
+            Duration::from_secs(2),
+            || {
+                let (tx, rx) = std::sync::mpsc::channel();
+                for x in &inputs {
+                    coord.submit(x, tx.clone()).unwrap();
+                }
+                drop(tx);
+                let got = rx.iter().take(n).count();
+                assert_eq!(got, n);
+            },
+        );
+        let rps = benchkit::throughput(mean, n);
+        println!("  burst throughput: {rps:.0} req/s");
+        let m = coord.metrics();
+        if m.hw_mean_ns > 0.0 {
+            println!("  hw decision latency: p50 {} p99 {}", m.hw_p50, m.hw_p99);
+        }
+        throughputs.push((tag, rps));
+        coord.shutdown();
+    }
+
+    // The headline: replay overhead as a fraction of native throughput.
+    if let Some((_, native)) = throughputs.iter().find(|(t, _)| *t == "native") {
+        for (tag, rps) in &throughputs {
+            println!("  {tag}: {:.1}% of native throughput", 100.0 * rps / native);
+        }
+    }
+}

@@ -1,8 +1,9 @@
 //! End-to-end driver (DESIGN.md §5): serve the MNIST-100 TM through the
 //! full stack — multi-worker coordinator (dispatch + per-worker dynamic
-//! batching) → native inference backend (bit-packed clause evaluation +
-//! signed popcount) → asynchronous time-domain hardware replay per sample
-//! on every worker.
+//! batching) → time-domain hardware backend (`BackendSpec::TimeDomain`:
+//! native bit-packed forward pass for functional results, one
+//! independently-seeded simulated async die per worker) → full-replay
+//! hardware timing on every response.
 //!
 //! Reports functional accuracy, service latency percentiles, throughput,
 //! per-worker load, and the simulated on-chip async-vs-sync latency
@@ -16,11 +17,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use tdpc::asynctm::AsyncTmEngine;
 use tdpc::baselines::{Architecture, DesignParams, GenericAdder};
-use tdpc::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy};
-use tdpc::fabric::Device;
+use tdpc::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy, ReplayPolicy,
+};
 use tdpc::flow::FlowConfig;
+use tdpc::hw::HwArch;
+use tdpc::runtime::BackendSpec;
 use tdpc::tm::{Manifest, TestSet, TmModel};
 
 const MODEL: &str = "mnist_c100";
@@ -35,28 +38,27 @@ fn main() -> Result<()> {
     let model = TmModel::load(&entry.model_path)?;
     let d = DesignParams::from_model(&model);
 
-    // Attach one simulated hardware die per worker (independent process
-    // variation seeds), so every response carries the on-chip decision
-    // latency of the paper's architecture.
-    let engines = (0..N_WORKERS)
-        .map(|i| {
-            let seed = 1 + i as u64;
-            AsyncTmEngine::build(&Device::xc7z020(), &d, &FlowConfig::table1_default(), seed)
-                .map_err(anyhow::Error::from)
-        })
-        .collect::<Result<Vec<_>>>()?;
-
+    // Simulated hardware is just another backend: every worker builds its
+    // own die from the spec, and the Full replay policy tags each response
+    // with the on-chip decision latency of the paper's architecture.
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(400) },
         n_workers: N_WORKERS,
         dispatch: DispatchPolicy::LeastLoaded,
-        ..CoordinatorConfig::default()
+        backend: BackendSpec::TimeDomain {
+            arch: HwArch::Async,
+            flow: FlowConfig::table1_default(),
+            model: None,
+        },
+        replay: ReplayPolicy::Full,
     };
     println!(
-        "starting {N_WORKERS}-worker coordinator for {MODEL} (batch ≤ {}, deadline {:?})",
-        cfg.batcher.max_batch, cfg.batcher.max_wait
+        "starting {N_WORKERS}-worker coordinator for {MODEL} (backend {}, batch ≤ {}, deadline {:?})",
+        cfg.backend.name(),
+        cfg.batcher.max_batch,
+        cfg.batcher.max_wait
     );
-    let coord = Coordinator::start(root, MODEL, cfg, engines)?;
+    let coord = Coordinator::start(root, MODEL, cfg)?;
 
     // Closed-loop load: a client pool submitting from the test set.
     let (tx, rx) = std::sync::mpsc::channel();
@@ -104,7 +106,10 @@ fn main() -> Result<()> {
     // adder-based min clock period for the same model.
     let sync_ns = GenericAdder.latency(&d).total().as_ns();
     println!("\n== simulated on-chip latency (paper Fig. 9a) ==");
-    println!("async time-domain:   mean {:.1} ns, p99 {:.1} ns", m.hw_mean_ns, m.hw_p99_ns);
+    println!(
+        "async time-domain:   mean {:.1} ns, p50 {}, p99 {}",
+        m.hw_mean_ns, m.hw_p50, m.hw_p99
+    );
     println!("sync adder baseline: {sync_ns:.1} ns (min clock period)");
     println!(
         "async/sync ratio:    {:.2} ({}{:.1}% latency)",

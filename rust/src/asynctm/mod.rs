@@ -34,7 +34,7 @@ use crate::baselines::{
 };
 use crate::fabric::Device;
 use crate::flow::{self, FlowConfig};
-use crate::pdl::{Pdl, PdlResources};
+use crate::pdl::{Pdl, PdlResources, Polarity};
 use crate::util::{Ps, SplitMix64};
 
 /// Result of one asynchronous inference.
@@ -62,21 +62,51 @@ pub struct AsyncTmEngine {
     pub clause_bundle: Ps,
     params: DesignParams,
     rng: SplitMix64,
+    /// Previous replayed fired vector — state for the hardware-seam
+    /// toggle model (`crate::hw`), which defines per-request activity as
+    /// the clause-output hamming change between consecutive samples.
+    pub(crate) replay_fired: Option<Vec<bool>>,
 }
 
 impl AsyncTmEngine {
     /// Build from a workload: runs the full implementation flow (placement
     /// → pins → routing) for `n_classes` PDLs of `clauses_per_class`
     /// elements on the device, then assembles the arbiter tree and stage.
+    /// Every PDL gets the standard alternating TM polarity wiring
+    /// (element 0 positive); use [`AsyncTmEngine::build_with_polarities`]
+    /// to wire a trained model's actual clause polarities.
     pub fn build(
         device: &Device,
         params: &DesignParams,
         flow_cfg: &FlowConfig,
         seed: u64,
     ) -> Result<AsyncTmEngine, flow::FlowError> {
-        let routed = flow::run(device, params.n_classes, params.clauses_per_class, flow_cfg)?;
         let pols = Pdl::tm_polarities(params.clauses_per_class);
-        let pdls: Vec<Pdl> = routed.iter().map(|r| Pdl::from_routed(r, &pols)).collect();
+        let per_class = vec![pols; params.n_classes];
+        Self::build_with_polarities(device, params, flow_cfg, seed, &per_class)
+    }
+
+    /// [`AsyncTmEngine::build`] with explicit per-class element polarities
+    /// (`polarities[k][j]` wires class k's element j). Trained models
+    /// order clause polarity over the *global* class-major clause index,
+    /// which de-phases from the per-PDL alternating pattern whenever
+    /// `clauses_per_class` is odd — the hardware backend wires the model's
+    /// true signs through here so the PDL race counts the same votes the
+    /// functional argmax does.
+    pub fn build_with_polarities(
+        device: &Device,
+        params: &DesignParams,
+        flow_cfg: &FlowConfig,
+        seed: u64,
+        polarities: &[Vec<Polarity>],
+    ) -> Result<AsyncTmEngine, flow::FlowError> {
+        assert_eq!(polarities.len(), params.n_classes, "one polarity vector per class");
+        let routed = flow::run(device, params.n_classes, params.clauses_per_class, flow_cfg)?;
+        let pdls: Vec<Pdl> = routed
+            .iter()
+            .zip(polarities)
+            .map(|(r, pols)| Pdl::from_routed(r, pols))
+            .collect();
         let m = calib::congestion(Self::static_resources(params).luts());
         let clause_bundle =
             clause_block::clause_delay(params, m).scale(calib::BUNDLE_MARGIN);
@@ -87,6 +117,7 @@ impl AsyncTmEngine {
             clause_bundle,
             params: *params,
             rng: SplitMix64::new(seed ^ 0xA5_1C_7000),
+            replay_fired: None,
         })
     }
 

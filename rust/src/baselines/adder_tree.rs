@@ -38,11 +38,21 @@ impl GenericAdder {
     }
 
     /// Popcount critical path for one class (both polarities in parallel,
-    /// then the subtractor level).
+    /// then the subtractor level) — the worst case, i.e. every carry chain
+    /// rippling through the full sum width.
     pub fn popcount_delay(d: &DesignParams, m: f64) -> Ps {
+        Self::popcount_settle(d, m, d.sum_width())
+    }
+
+    /// Combinational settle time of the popcount stage when the widest
+    /// actual class sum occupies only `w` bits (`w ≤ sum_width`): carry
+    /// chains stop rippling at the top active bit, so small sums settle
+    /// earlier than the worst case. This is the per-request latency model
+    /// the executable engine ([`crate::hw::SyncReplayEngine`]) evaluates.
+    pub fn popcount_settle(d: &DesignParams, m: f64, w: usize) -> Ps {
         let half = (d.clauses_per_class / 2).max(1);
         let levels = Self::tree_levels(half) as u64;
-        let w = d.sum_width() as u64;
+        let w = w.clamp(1, d.sum_width()) as u64;
         let level_delay = calib::LUT_D + calib::NET_LOCAL + Ps(calib::CARRY_PER_BIT.0 * w / 2);
         let subtract = calib::LUT_D + calib::NET_LOCAL + Ps(calib::CARRY_PER_BIT.0 * w);
         Ps(level_delay.0 * levels + subtract.0).scale(m)

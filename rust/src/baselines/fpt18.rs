@@ -19,9 +19,19 @@ pub struct Fpt18;
 
 impl Fpt18 {
     /// Linear-chain popcount delay per class: the carry/sum chain threads
-    /// every clause bit.
+    /// every clause bit (the worst case — an increment at position 0).
     pub fn popcount_delay(d: &DesignParams, m: f64) -> Ps {
-        let n = d.clauses_per_class.max(1) as u64;
+        Self::popcount_settle(d, m, d.clauses_per_class.max(1))
+    }
+
+    /// Per-request settle time of the ripple chain: the recomputation wave
+    /// must thread every stage up to the furthest fired clause position
+    /// (`active`, 1-based; ≤ clauses/class) — stages beyond it see no new
+    /// increment and contribute only the fixed epilogue term. Evaluated by
+    /// [`crate::hw::SyncReplayEngine`] with each sample's actual fired
+    /// positions.
+    pub fn popcount_settle(d: &DesignParams, m: f64, active: usize) -> Ps {
+        let n = active.clamp(1, d.clauses_per_class.max(1)) as u64;
         Ps(calib::FPT18_PER_BIT.0 * n + calib::LUT_D.0 + calib::NET_LOCAL.0).scale(m)
     }
 

@@ -7,6 +7,7 @@
 //! across workers.
 
 use crate::util::stats::Histogram;
+use crate::util::Ps;
 
 use super::InferResponse;
 
@@ -35,9 +36,13 @@ pub struct MetricsSnapshot {
     pub service_p50_us: f64,
     pub service_p99_us: f64,
     pub service_mean_us: f64,
-    /// Simulated hardware decision latency (ns), when an engine ran.
+    /// Mean simulated hardware decision latency (ns), when an engine ran.
     pub hw_mean_ns: f64,
-    pub hw_p99_ns: f64,
+    /// Hardware decision-latency percentiles in simulated time, over every
+    /// row the [`super::ReplayPolicy`] replayed (merged across workers
+    /// like the wall-clock histograms; `Ps::ZERO` when nothing replayed).
+    pub hw_p50: Ps,
+    pub hw_p99: Ps,
     /// Samples where the hardware argmax disagreed with the functional
     /// argmax (possible only on class-sum ties / metastability).
     pub hw_functional_mismatches: u64,
@@ -100,7 +105,8 @@ impl Metrics {
             service_p99_us: hist.map(|h| h.quantile(0.99)).unwrap_or(0.0),
             service_mean_us: hist.map(|h| h.mean()).unwrap_or(0.0),
             hw_mean_ns: crate::util::stats::mean(hw),
-            hw_p99_ns: crate::util::stats::percentile(hw, 99.0),
+            hw_p50: Ps::from_ns(crate::util::stats::percentile(hw, 50.0)),
+            hw_p99: Ps::from_ns(crate::util::stats::percentile(hw, 99.0)),
             hw_functional_mismatches: self.hw_functional_mismatches,
         }
     }
@@ -139,6 +145,9 @@ mod tests {
         assert!((s.mean_batch_exec_us - 400.0).abs() < 1e-9);
         assert!(s.service_p50_us >= 50.0);
         assert!((s.hw_mean_ns - 50.5).abs() < 1e-9);
+        // Simulated-time percentiles: latencies were 1..=100 ns.
+        assert_eq!(s.hw_p50, Ps::from_ns(50.5));
+        assert!(s.hw_p99 >= Ps(99_000) && s.hw_p99 <= Ps(100_000), "{:?}", s.hw_p99);
         assert_eq!(s.hw_functional_mismatches, 0);
     }
 
@@ -156,6 +165,8 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.service_p50_us, 0.0);
         assert_eq!(s.hw_mean_ns, 0.0);
+        assert_eq!(s.hw_p50, Ps::ZERO);
+        assert_eq!(s.hw_p99, Ps::ZERO);
     }
 
     #[test]
@@ -186,6 +197,8 @@ mod tests {
         assert_eq!(a.service_p50_us, c.service_p50_us);
         assert_eq!(a.service_p99_us, c.service_p99_us);
         assert!((a.hw_mean_ns - c.hw_mean_ns).abs() < 1e-9);
+        assert_eq!(a.hw_p50, c.hw_p50, "hw p50 merges across workers");
+        assert_eq!(a.hw_p99, c.hw_p99, "hw p99 merges across workers");
         assert_eq!(a.hw_functional_mismatches, c.hw_functional_mismatches);
     }
 

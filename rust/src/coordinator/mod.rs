@@ -9,11 +9,14 @@
 //! worker runs its own dynamic batcher (size- and deadline-bounded,
 //! vLLM-router style) and *owns* its execution backend — constructed
 //! inside the worker thread from a [`BackendSpec`], because PJRT clients
-//! are not `Send` while native backends are. When a hardware engine is
-//! attached to a worker, each sample's clause bits are replayed through
-//! the asynchronous time-domain TM to report the on-chip decision latency
-//! next to the functional result. Everything is std-threads + channels
-//! (tokio is not in the offline crate set — DESIGN.md §7).
+//! are not `Send` while native backends are. Simulated hardware is just
+//! another backend (`BackendSpec::TimeDomain` → `runtime::HwBackend`,
+//! one independently-seeded die per worker): the worker-side
+//! [`ReplayPolicy`] decides which served rows are additionally replayed
+//! through the backend's hardware engine for on-chip decision latency,
+//! with no backend-specific plumbing anywhere in the pool. Everything is
+//! std-threads + channels (tokio is not in the offline crate set —
+//! DESIGN.md §7).
 
 pub mod batcher;
 pub mod metrics;
@@ -28,7 +31,6 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::asynctm::AsyncTmEngine;
 use crate::runtime::{BackendSpec, InferenceBackend, ModelRegistry};
 use crate::tm::{BitVec64, PackedBatch};
 use crate::util::Ps;
@@ -53,10 +55,12 @@ pub struct InferResponse {
     pub pred: usize,
     /// Signed class sums.
     pub sums: Vec<i32>,
-    /// Simulated on-chip decision latency of the async time-domain TM
-    /// (None when no hardware engine is attached to the serving worker).
+    /// Simulated on-chip decision latency of the backend's hardware
+    /// engine (None when the backend has no engine, or the [`ReplayPolicy`]
+    /// skipped this row).
     pub hw_decision_latency: Option<Ps>,
-    /// Hardware argmax (may disagree with `pred` only on exact ties).
+    /// Hardware argmax (may disagree with `pred` only on exact class-sum
+    /// ties, and only for the async architecture — see `crate::hw`).
     pub hw_winner: Option<usize>,
     /// End-to-end service latency through the coordinator (µs).
     pub service_latency_us: f64,
@@ -88,6 +92,54 @@ impl DispatchPolicy {
     }
 }
 
+/// Which served rows are replayed through the backend's hardware engine
+/// ([`InferenceBackend::replay`]) for on-chip timing. Works against any
+/// engine-carrying backend; backends without an engine simply report no
+/// hardware fields whatever the policy says.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplayPolicy {
+    /// Never replay (pure functional serving).
+    #[default]
+    Off,
+    /// Replay one row in N (per worker), amortizing the simulation cost
+    /// while keeping the latency histograms populated.
+    Sample(u32),
+    /// Replay every row (full per-request hardware telemetry).
+    Full,
+}
+
+impl ReplayPolicy {
+    /// Parse a CLI-style policy name: `off`, `sample:<N>`, `full`.
+    pub fn from_name(name: &str) -> Result<ReplayPolicy> {
+        match name {
+            "off" => Ok(ReplayPolicy::Off),
+            "full" => Ok(ReplayPolicy::Full),
+            other => {
+                if let Some(n) = other.strip_prefix("sample:") {
+                    let n: u32 = n.parse().with_context(|| {
+                        format!("replay policy sample:<N> expects an integer, got {n:?}")
+                    })?;
+                    ensure!(n >= 1, "replay policy sample:<N> needs N ≥ 1");
+                    Ok(ReplayPolicy::Sample(n))
+                } else {
+                    anyhow::bail!(
+                        "unknown replay policy {other:?} (expected: off, sample:<N>, full)"
+                    )
+                }
+            }
+        }
+    }
+
+    /// Whether the `seq`-th row a worker serves (0-based) gets replayed.
+    pub fn take(self, seq: u64) -> bool {
+        match self {
+            ReplayPolicy::Off => false,
+            ReplayPolicy::Full => true,
+            ReplayPolicy::Sample(n) => seq % u64::from(n.max(1)) == 0,
+        }
+    }
+}
+
 /// Pool-level configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -98,6 +150,8 @@ pub struct CoordinatorConfig {
     pub dispatch: DispatchPolicy,
     /// How each worker constructs its execution backend.
     pub backend: BackendSpec,
+    /// Which served rows replay through the backend's hardware engine.
+    pub replay: ReplayPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -107,6 +161,7 @@ impl Default for CoordinatorConfig {
             n_workers: 1,
             dispatch: DispatchPolicy::RoundRobin,
             backend: BackendSpec::default(),
+            replay: ReplayPolicy::default(),
         }
     }
 }
@@ -141,27 +196,15 @@ impl Coordinator {
     ///
     /// Each worker thread constructs its own [`ModelRegistry`] and backend
     /// from `cfg.backend` (PJRT backends are not `Send`; native backends
-    /// are, but per-worker ownership keeps the two paths uniform), and
-    /// startup errors from every worker are reported back before `start`
-    /// returns. `engines` are handed out to workers in index order —
-    /// worker `i` replays samples through `engines[i]` when present.
-    pub fn start(
-        root: PathBuf,
-        model: &str,
-        cfg: CoordinatorConfig,
-        engines: Vec<AsyncTmEngine>,
-    ) -> Result<Coordinator> {
+    /// are, but per-worker ownership keeps the paths uniform — and gives
+    /// time-domain backends one independently-seeded simulated die per
+    /// worker via [`BackendSpec::for_worker`]). Startup errors from every
+    /// worker are reported back before `start` returns.
+    pub fn start(root: PathBuf, model: &str, cfg: CoordinatorConfig) -> Result<Coordinator> {
         ensure!(cfg.n_workers >= 1, "coordinator needs at least one worker");
-        ensure!(
-            engines.len() <= cfg.n_workers,
-            "{} hardware engines for {} workers",
-            engines.len(),
-            cfg.n_workers
-        );
         let shutdown = Arc::new(AtomicBool::new(false));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let mut workers = Vec::with_capacity(cfg.n_workers);
-        let mut engines = engines.into_iter();
         for w in 0..cfg.n_workers {
             let (tx, rx) = mpsc::channel::<WorkItem>();
             let depth = Arc::new(AtomicUsize::new(0));
@@ -169,9 +212,9 @@ impl Coordinator {
             let join = {
                 let root = root.clone();
                 let model = model.to_string();
-                let spec = cfg.backend.clone();
+                let spec = cfg.backend.clone().for_worker(w);
                 let batcher = cfg.batcher;
-                let engine = engines.next();
+                let replay = cfg.replay;
                 let depth = depth.clone();
                 let metrics = metrics.clone();
                 let shutdown = shutdown.clone();
@@ -195,7 +238,7 @@ impl Coordinator {
                             w,
                             backend.as_ref(),
                             batcher,
-                            engine,
+                            replay,
                             rx,
                             metrics,
                             shutdown,
@@ -345,13 +388,15 @@ fn worker_loop(
     worker: usize,
     backend: &dyn InferenceBackend,
     cfg: BatcherConfig,
-    mut engine: Option<AsyncTmEngine>,
+    replay: ReplayPolicy,
     rx: mpsc::Receiver<WorkItem>,
     metrics: Arc<Mutex<Metrics>>,
     shutdown: Arc<AtomicBool>,
     depth: Arc<AtomicUsize>,
 ) {
     let mut pending: Vec<WorkItem> = Vec::new();
+    // Rows this worker has served, for 1-in-N replay sampling.
+    let mut replay_seq: u64 = 0;
     loop {
         // Collect until the batch plan says flush. The channel is drained
         // greedily before each planning decision: the deadline is measured
@@ -389,20 +434,28 @@ fn worker_loop(
         if batch.is_empty() {
             continue;
         }
-        if let Err(e) =
-            execute_batch(worker, backend, &mut batch, engine.as_mut(), &metrics, &depth)
-        {
+        if let Err(e) = execute_batch(
+            worker,
+            backend,
+            &mut batch,
+            replay,
+            &mut replay_seq,
+            &metrics,
+            &depth,
+        ) {
             log::error!("worker {worker}: batch execution failed: {e:#}");
             // Drop the batch; reply channels close and callers see an error.
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn execute_batch(
     worker: usize,
     backend: &dyn InferenceBackend,
     batch: &mut [WorkItem],
-    mut engine: Option<&mut AsyncTmEngine>,
+    replay: ReplayPolicy,
+    replay_seq: &mut u64,
     metrics: &Arc<Mutex<Metrics>>,
     depth: &AtomicUsize,
 ) -> Result<()> {
@@ -433,13 +486,17 @@ fn execute_batch(
         .unwrap()
         .record_batch(batch.len(), t0.elapsed().as_secs_f64() * 1e6);
     for (i, item) in batch.iter().enumerate() {
-        let (hw_latency, hw_winner) = match engine.as_deref_mut() {
-            Some(eng) => {
-                let bits = out.clause_bits_row(i);
-                let o = eng.infer(&bits);
-                (Some(o.decision_latency), Some(o.winner))
+        // The replay policy is engine-agnostic: any backend carrying a
+        // hardware engine answers `replay`; all others return None.
+        let seq = *replay_seq;
+        *replay_seq += 1;
+        let (hw_latency, hw_winner) = if replay.take(seq) {
+            match backend.replay(&out, i) {
+                Some(o) => (Some(o.decision_latency), Some(o.winner)),
+                None => (None, None),
             }
-            None => (None, None),
+        } else {
+            (None, None)
         };
         let service_us = item.req.submitted.elapsed().as_secs_f64() * 1e6;
         let resp = InferResponse {
@@ -459,4 +516,37 @@ fn execute_batch(
         let _ = item.req.reply.send(resp); // receiver may have gone away
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replay_policy_parsing() {
+        assert_eq!(ReplayPolicy::from_name("off").unwrap(), ReplayPolicy::Off);
+        assert_eq!(ReplayPolicy::from_name("full").unwrap(), ReplayPolicy::Full);
+        assert_eq!(
+            ReplayPolicy::from_name("sample:8").unwrap(),
+            ReplayPolicy::Sample(8)
+        );
+        for bad in ["sample:0", "sample:x", "some", "sample"] {
+            let err = ReplayPolicy::from_name(bad);
+            assert!(err.is_err(), "{bad} must be rejected");
+        }
+        let msg = ReplayPolicy::from_name("everything").unwrap_err().to_string();
+        assert!(msg.contains("off") && msg.contains("sample:<N>") && msg.contains("full"));
+    }
+
+    #[test]
+    fn replay_policy_take_schedule() {
+        assert!(!ReplayPolicy::Off.take(0));
+        assert!(ReplayPolicy::Full.take(17));
+        let s = ReplayPolicy::Sample(4);
+        let taken: Vec<u64> = (0..12).filter(|&i| s.take(i)).collect();
+        assert_eq!(taken, vec![0, 4, 8]);
+        // A zero sample rate (only constructible directly) degrades to
+        // every-row rather than dividing by zero.
+        assert!(ReplayPolicy::Sample(0).take(5));
+    }
 }

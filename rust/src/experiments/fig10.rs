@@ -10,12 +10,14 @@
 //! * the TD average (±3σ, measured over 1000 synthetic samples as in the
 //!   paper) sits far below the TD worst case, and the gap widens with
 //!   model size.
+//!
+//! Every sweep point runs through the unified [`crate::hw::HwEngine`]
+//! seam — the same executable engines the serving path replays against.
 
-use crate::asynctm::AsyncTmEngine;
-use crate::baselines::{Architecture, DesignParams, Fpt18, GenericAdder};
-use crate::fabric::Device;
+use crate::baselines::DesignParams;
 use crate::flow::FlowConfig;
-use crate::tm::datasets::synthetic_clause_bits;
+use crate::hw::{self, HwArch, HwEngine};
+use crate::tm::datasets::{signed_sum, synthetic_clause_bits};
 use crate::tm::WorkloadSpec;
 use crate::util::{stats, SplitMix64};
 
@@ -44,33 +46,56 @@ pub const CLASS_SWEEP: [usize; 5] = [2, 4, 8, 16, 32];
 
 fn measure_point(n_classes: usize, clauses: usize, samples: usize, seed: u64) -> SweepPoint {
     let d = DesignParams::synthetic(n_classes, clauses, 200);
-    let generic = GenericAdder.latency(&d).total().as_ns();
-    let fpt = Fpt18.latency(&d).total().as_ns();
-
-    // Build the real engine and measure the average case over synthetic
-    // clause vectors (the paper: 1000 MNIST samples).
-    let device = Device::xc7z020();
-    let mut engine = AsyncTmEngine::build(&device, &d, &FlowConfig::table1_default(), seed)
-        .expect("sweep geometry must place");
     let spec = WorkloadSpec {
         n_classes,
         clauses_per_class: clauses,
         n_features: 200,
         fire_rate: 0.5,
     };
+
+    // All three architectures run through the unified engine seam
+    // (`hw::engine_list`): the synchronous engines report their cycle
+    // latency — the minimum clock period, i.e. the analytic bound — while
+    // the async design measures per-sample decision latencies over
+    // synthetic clause vectors (the paper: 1000 MNIST samples).
+    let mut engines = hw::engine_list(&d, &FlowConfig::table1_default(), seed)
+        .expect("sweep geometry must place");
     let mut rng = SplitMix64::new(seed ^ 0x10a);
-    let mut lat = Vec::with_capacity(samples);
-    for i in 0..samples {
-        let bits = synthetic_clause_bits(&spec, i % n_classes, &mut rng);
-        lat.push(engine.infer(&bits).decision_latency.as_ns());
+    let mut generic_ns = 0.0;
+    let mut fpt18_ns = 0.0;
+    let (mut td_worst, mut td_mean, mut td_std) = (0.0, 0.0, 0.0);
+    for eng in engines.iter_mut() {
+        match eng.arch() {
+            HwArch::Adder | HwArch::Fpt18 => {
+                // Sync cycle latency is the data-independent minimum
+                // clock period — no sample replay needed to read it.
+                let cycle = eng.worst_case().as_ns();
+                if eng.arch() == HwArch::Adder {
+                    generic_ns = cycle;
+                } else {
+                    fpt18_ns = cycle;
+                }
+            }
+            HwArch::Async => {
+                let mut lat = Vec::with_capacity(samples);
+                for i in 0..samples {
+                    let bits = synthetic_clause_bits(&spec, i % n_classes, &mut rng);
+                    let sums: Vec<i32> = bits.iter().map(|b| signed_sum(b)).collect();
+                    lat.push(eng.replay_row(&bits, &sums).decision_latency.as_ns());
+                }
+                td_worst = eng.worst_case().as_ns();
+                td_mean = stats::mean(&lat);
+                td_std = stats::std_dev(&lat);
+            }
+        }
     }
     SweepPoint {
         x: if n_classes == 6 { clauses } else { n_classes },
-        generic_ns: generic,
-        fpt18_ns: fpt,
-        td_worst_ns: engine.worst_case_latency().as_ns(),
-        td_mean_ns: stats::mean(&lat),
-        td_std_ns: stats::std_dev(&lat),
+        generic_ns,
+        fpt18_ns,
+        td_worst_ns: td_worst,
+        td_mean_ns: td_mean,
+        td_std_ns: td_std,
     }
 }
 

@@ -7,13 +7,17 @@
 //! critical path); the proposed async design reports the *measured mean*
 //! decision latency over real test samples replayed through the built
 //! engine (the paper averages over 100 samples), alongside its worst case.
+//! Every architecture is additionally replayed per-request through the
+//! unified [`crate::hw::HwEngine`] seam — the same executable engines the
+//! serving path's `ReplayPolicy` drives — so the figure and the
+//! coordinator benches share one code path.
 
 use anyhow::Result;
 
-use crate::asynctm::{AsyncTmEngine, TdAsync};
+use crate::asynctm::TdAsync;
 use crate::baselines::{Architecture, Async21, DesignParams, Fpt18, GenericAdder};
-use crate::fabric::Device;
 use crate::flow::FlowConfig;
+use crate::hw::{self, HwArch, HwEngine};
 use crate::power::{power_at_rate, PowerBreakdown};
 use crate::tm::{Manifest, TestSet, TmModel};
 use crate::util::{stats, Ps};
@@ -26,6 +30,9 @@ pub struct Fig9Config {
     pub name: String,
     /// (arch, total latency, popcount+compare share) — sync: min period.
     pub latency: Vec<(String, Ps, f64)>,
+    /// Per-request decision latency measured through the unified engine
+    /// seam: (arch label, mean ns, std ns), one entry per [`HwArch`].
+    pub measured: Vec<(String, f64, f64)>,
     /// Measured async cycle-latency statistics (ns) over the sample set.
     pub td_measured_mean_ns: f64,
     pub td_measured_std_ns: f64,
@@ -59,7 +66,7 @@ pub fn dataset_activity(test: &TestSet) -> f64 {
     toggles as f64 / total as f64
 }
 
-/// Run one configuration.
+/// Run one manifest configuration (loads the model + test set).
 pub fn run_config(
     manifest: &Manifest,
     name: &str,
@@ -69,30 +76,63 @@ pub fn run_config(
     let entry = manifest.entry(name)?;
     let model = TmModel::load(&entry.model_path)?;
     let test = TestSet::load(&entry.test_data_path)?;
-    let d = DesignParams::from_model(&model);
-    let activity = dataset_activity(&test);
+    run_model(name, &model, &test, n_samples, die_seed)
+}
 
-    // --- Measured async latency over real samples (paper: 100 samples).
-    let device = Device::xc7z020();
-    let mut engine =
-        AsyncTmEngine::build(&device, &d, &FlowConfig::table1_default(), die_seed)?;
+/// Manifest-free core: all Fig. 9 numbers for one in-memory model + test
+/// set (the experiments smoke test runs this on a synthetic pair).
+pub fn run_model(
+    name: &str,
+    model: &TmModel,
+    test: &TestSet,
+    n_samples: usize,
+    die_seed: u64,
+) -> Result<Fig9Config> {
+    let d = DesignParams::from_model(model);
+    let activity = dataset_activity(test);
+
+    // --- Per-request replay over real samples through the unified engine
+    // seam (paper: 100 samples for the async measurement). The paper
+    // reports the async design's full handshake *cycle* (bundling → PDLs
+    // → join → ack) — what batch-mode throughput exposes; the
+    // Completion-based decision latency goes in the notes.
     let n = test.len().min(n_samples);
-    // The paper measures "average inference time over 100 samples" on the
-    // board — the full handshake *cycle* (bundling → PDLs → join → ack),
-    // which is what batch-mode throughput exposes. The Completion-based
-    // decision latency (classification available) is reported in the notes.
-    let mut cycle_ns = Vec::with_capacity(n);
-    let mut decision_ns = Vec::with_capacity(n);
-    for x in test.x.iter().take(n) {
-        let bits = model.clause_bits(x);
-        let out = engine.infer(&bits);
-        cycle_ns.push(out.cycle_latency.as_ns());
-        decision_ns.push(out.decision_latency.as_ns());
+    let rows: Vec<(Vec<Vec<bool>>, Vec<i32>)> = test
+        .x
+        .iter()
+        .take(n)
+        .map(|x| (model.clause_bits(x), model.class_sums(x)))
+        .collect();
+    // Engines wired from the model's true clause polarities, exactly like
+    // the serving path's `HwBackend` (the alternating default de-phases
+    // from a trained model whenever clauses/class is odd).
+    let mut engines = hw::engine_list_for_model(model, &FlowConfig::table1_default(), die_seed)?;
+    let mut measured = Vec::new();
+    let mut td_cycle_ns = Vec::new();
+    let mut td_decision_ns = Vec::new();
+    let mut td_worst = 0.0;
+    for eng in engines.iter_mut() {
+        let mut decision = Vec::with_capacity(n);
+        let mut cycle = Vec::with_capacity(n);
+        for (bits, sums) in &rows {
+            let o = eng.replay_row(bits, sums);
+            decision.push(o.decision_latency.as_ns());
+            cycle.push(o.cycle_latency.as_ns());
+        }
+        measured.push((
+            eng.arch().arch_label().to_string(),
+            stats::mean(&decision),
+            stats::std_dev(&decision),
+        ));
+        if eng.arch() == HwArch::Async {
+            td_worst = eng.worst_case().as_ns();
+            td_cycle_ns = cycle;
+            td_decision_ns = decision;
+        }
     }
-    let td_mean = stats::mean(&cycle_ns);
-    let td_std = stats::std_dev(&cycle_ns);
-    let td_decision_mean = stats::mean(&decision_ns);
-    let td_worst = engine.worst_case_latency().as_ns();
+    let td_mean = stats::mean(&td_cycle_ns);
+    let td_std = stats::std_dev(&td_cycle_ns);
+    let td_decision_mean = stats::mean(&td_decision_ns);
 
     // --- Architecture handles.
     let td = TdAsync::default();
@@ -140,6 +180,7 @@ pub fn run_config(
     Ok(Fig9Config {
         name: name.to_string(),
         latency,
+        measured,
         td_measured_mean_ns: td_mean,
         td_measured_std_ns: td_std,
         td_decision_mean_ns: td_decision_mean,
@@ -215,6 +256,16 @@ impl Fig9Result {
                 "{}: td-async measured cycle {:.1} ± {:.1} ns, decision (Completion) {:.1} ns, worst case {:.1} ns",
                 c.name, c.td_measured_mean_ns, c.td_measured_std_ns,
                 c.td_decision_mean_ns, c.td_worst_ns
+            ));
+            let per_arch: Vec<String> = c
+                .measured
+                .iter()
+                .map(|(a, mean, std)| format!("{a} {mean:.1} ± {std:.1} ns"))
+                .collect();
+            lat.note(format!(
+                "{}: per-request decision settle via the unified engine seam: {}",
+                c.name,
+                per_arch.join(", ")
             ));
         }
 

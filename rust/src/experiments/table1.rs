@@ -16,6 +16,7 @@ use crate::asynctm::AsyncTmEngine;
 use crate::baselines::DesignParams;
 use crate::fabric::Device;
 use crate::flow::FlowConfig;
+use crate::hw::HwEngine;
 use crate::tm::{Manifest, TestSet, TmModel};
 use crate::util::Ps;
 
@@ -43,15 +44,19 @@ pub struct Table1Result {
     pub rows: Vec<Table1Row>,
 }
 
-/// Hardware accuracy of one engine over precomputed clause bits.
+/// Hardware accuracy of one engine over precomputed clause bits + sums —
+/// engine-generic: works against any [`HwEngine`], not just the async
+/// design (the tuning loop below drives the async engine through this
+/// same seam the serving replay uses).
 fn hw_accuracy(
-    engine: &mut AsyncTmEngine,
+    engine: &mut dyn HwEngine,
     clause_bits: &[Vec<Vec<bool>>],
+    sums: &[Vec<i32>],
     labels: &[usize],
 ) -> f64 {
     let mut correct = 0usize;
-    for (bits, &y) in clause_bits.iter().zip(labels) {
-        if engine.infer(bits).winner == y {
+    for ((bits, s), &y) in clause_bits.iter().zip(sums).zip(labels) {
+        if engine.replay_row(bits, s).winner == y {
             correct += 1;
         }
     }
@@ -71,6 +76,7 @@ pub fn tune_hi_delay(
     // metastability") — no delay tuning can make them agree.
     let mut xs: Vec<&Vec<bool>> = Vec::new();
     let mut ys: Vec<usize> = Vec::new();
+    let mut kept_sums: Vec<Vec<i32>> = Vec::new();
     for (x, &y) in test.x.iter().zip(&test.y) {
         if xs.len() >= max_samples {
             break;
@@ -80,6 +86,7 @@ pub fn tune_hi_delay(
         if sums.iter().filter(|&&s| s == top).count() == 1 {
             xs.push(x);
             ys.push(y);
+            kept_sums.push(sums);
         }
     }
     let n = xs.len();
@@ -107,7 +114,7 @@ pub fn tune_hi_delay(
             die_seed,
         };
         let mut engine = AsyncTmEngine::build(&device, &params, &cfg, die_seed)?;
-        let acc = hw_accuracy(&mut engine, &clause_bits, &ys);
+        let acc = hw_accuracy(&mut engine, &clause_bits, &kept_sums, &ys);
         if acc >= sw_acc {
             return Ok((Ps(hi), acc, sw_acc));
         }

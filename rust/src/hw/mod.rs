@@ -1,0 +1,501 @@
+//! The unified hardware-engine seam: every architecture of the paper's
+//! comparison is *executable* on the request path.
+//!
+//! [`HwEngine`] is the per-request timing contract: it consumes one
+//! sample's clause bits (the PDL select inputs, as produced by
+//! [`ForwardOutput::clause_bits_row`]) plus the signed class sums, and
+//! returns the hardware's argmax, its decision/cycle latency, and the
+//! switching inventory of that inference. Three implementations exist:
+//!
+//! * [`crate::asynctm::AsyncTmEngine`] — the proposed asynchronous
+//!   time-domain design: winner from the arbiter race, decision latency =
+//!   the *winning* PDL traversal (bigger class sums finish **faster**).
+//! * [`SyncReplayEngine`] over [`GenericAdder`] — the synchronous adder
+//!   tree: winner from a sequential argmax, cycle latency = the minimum
+//!   clock period, and a per-request combinational *settle* model in
+//!   which wider actual class sums ripple **longer** carry chains — the
+//!   inverse of the time-domain law.
+//! * [`SyncReplayEngine`] over [`Fpt18`] — the ripple-chain popcount:
+//!   settle tracks the furthest fired clause position in any class.
+//!
+//! Experiments ([`crate::experiments::fig9`], `fig10`), the serving path
+//! ([`crate::runtime`]'s `HwBackend` + the coordinator's `ReplayPolicy`),
+//! and the benches all iterate the same [`engine_list`], so paper figures
+//! and production replay share one code path.
+//!
+//! Tie-break contract: the synchronous engines resolve argmax ties to the
+//! *lowest* class index, exactly like `jnp.argmax` and the native
+//! functional path — their winner is bit-identical to the functional
+//! prediction on every input. The asynchronous engine resolves ties by an
+//! arbiter race (paper footnote 1's "classification metastability"), so
+//! it may legitimately disagree on exact class-sum ties and only there —
+//! with one physical caveat: a class-k PDL's arrival encodes
+//! `neg_count(k) + sum(k)` (a non-firing negative clause takes the short
+//! arc), so classes with *unequal negative-clause counts* shift the race
+//! by the difference. Balanced polarity (every trained artifact; any even
+//! `clauses_per_class` under the alternating convention) makes the offset
+//! uniform and the contract exact; odd clauses/class biases margin-1
+//! decisions by one vote. [`HwArch::build_for_model`] wires the model's
+//! true signs so this is the *only* residual divergence.
+
+use anyhow::Result;
+
+use crate::asynctm::{AsyncTmEngine, TdAsync};
+use crate::baselines::{
+    calib, Architecture, DesignParams, Fpt18, GenericAdder, LatencyBreakdown, ToggleInventory,
+};
+use crate::fabric::Device;
+use crate::flow::FlowConfig;
+use crate::pdl::Polarity;
+use crate::tm::model::ForwardOutput;
+use crate::tm::TmModel;
+use crate::util::Ps;
+
+/// Which hardware architecture an engine (or backend) simulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HwArch {
+    /// The paper's proposed asynchronous time-domain design.
+    Async,
+    /// "Generic implementation": synchronous compressor/adder tree.
+    Adder,
+    /// Kim et al. FPT'18 ripple-chain popcount.
+    Fpt18,
+}
+
+impl HwArch {
+    /// Every architecture, in the order the paper's tables list them
+    /// (synchronous baselines first, the proposed design last).
+    pub const ALL: [HwArch; 3] = [HwArch::Adder, HwArch::Fpt18, HwArch::Async];
+
+    /// Parse a CLI-style architecture name (`hw:<name>` backend syntax).
+    pub fn from_name(name: &str) -> Result<HwArch> {
+        match name {
+            "async" => Ok(HwArch::Async),
+            "adder" => Ok(HwArch::Adder),
+            "fpt18" => Ok(HwArch::Fpt18),
+            other => anyhow::bail!(
+                "unknown hardware architecture {other:?} (expected: async, adder, fpt18)"
+            ),
+        }
+    }
+
+    /// CLI / backend-spec name.
+    pub fn name(self) -> &'static str {
+        match self {
+            HwArch::Async => "async",
+            HwArch::Adder => "adder",
+            HwArch::Fpt18 => "fpt18",
+        }
+    }
+
+    /// Row label used by the experiment tables (Fig. 9/10 conventions).
+    pub fn arch_label(self) -> &'static str {
+        match self {
+            HwArch::Async => "td-async",
+            HwArch::Adder => "generic",
+            HwArch::Fpt18 => "fpt18",
+        }
+    }
+
+    /// Build the executable engine for this architecture. The async design
+    /// runs the full implementation flow (placement → pins → routing) on
+    /// the canonical device; the synchronous designs need no flow.
+    pub fn build(
+        self,
+        d: &DesignParams,
+        flow: &FlowConfig,
+        seed: u64,
+    ) -> Result<Box<dyn HwEngine>> {
+        match self {
+            HwArch::Async => {
+                let eng = AsyncTmEngine::build(&Device::xc7z020(), d, flow, seed)
+                    .map_err(anyhow::Error::from)?;
+                Ok(Box::new(eng))
+            }
+            HwArch::Adder | HwArch::Fpt18 => Ok(Box::new(SyncReplayEngine::new(self, d))),
+        }
+    }
+
+    /// [`HwArch::build`] for a trained model: the async design wires each
+    /// PDL element's polarity from the model's class-major clause
+    /// polarities (via [`AsyncTmEngine::build_with_polarities`]), so the
+    /// replayed clause bits race with exactly the vote signs the
+    /// functional argmax counts — the alternating default de-phases from
+    /// the model whenever `clauses_per_class` is odd. The synchronous
+    /// engines take their argmax from the class sums directly and need
+    /// only the design parameters.
+    pub fn build_for_model(
+        self,
+        model: &TmModel,
+        flow: &FlowConfig,
+        seed: u64,
+    ) -> Result<Box<dyn HwEngine>> {
+        let d = DesignParams::from_model(model);
+        match self {
+            HwArch::Async => {
+                let cpc = model.clauses_per_class;
+                let pols: Vec<Vec<Polarity>> = (0..model.n_classes)
+                    .map(|k| {
+                        (0..cpc)
+                            .map(|j| {
+                                if model.polarity[k * cpc + j] > 0 {
+                                    Polarity::Positive
+                                } else {
+                                    Polarity::Negative
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let eng = AsyncTmEngine::build_with_polarities(
+                    &Device::xc7z020(),
+                    &d,
+                    flow,
+                    seed,
+                    &pols,
+                )
+                .map_err(anyhow::Error::from)?;
+                Ok(Box::new(eng))
+            }
+            HwArch::Adder | HwArch::Fpt18 => Ok(Box::new(SyncReplayEngine::new(self, &d))),
+        }
+    }
+}
+
+/// Result of replaying one sample through a hardware engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwOutcome {
+    /// The hardware's argmax class (see the module-level tie contract).
+    pub winner: usize,
+    /// Request → classification available. Per-request: a function of the
+    /// actual class sums, not an analytic worst-case bound.
+    pub decision_latency: Ps,
+    /// Request → ready for the next sample (async: the handshake join;
+    /// sync: the minimum clock period).
+    pub cycle_latency: Ps,
+    /// Switching inventory of this inference (feeds [`crate::power`]).
+    pub toggles: ToggleInventory,
+}
+
+/// One executable hardware architecture: batched per-request replay of
+/// clause bits + class sums into winner / latency / toggles.
+///
+/// Engines are stateful (`&mut self`): the async engine owns the arbiter
+/// metastability RNG, the synchronous engines track the previous fired
+/// vector for their data-dependent toggle model.
+pub trait HwEngine: Send {
+    fn arch(&self) -> HwArch;
+
+    /// Replay one sample: `clause_bits[k]` are class k's clause outputs
+    /// (as from [`ForwardOutput::clause_bits_row`]), `sums` the signed
+    /// class sums of the same sample.
+    fn replay_row(&mut self, clause_bits: &[Vec<bool>], sums: &[i32]) -> HwOutcome;
+
+    /// Replay every row of a forward output, in order.
+    fn replay(&mut self, out: &ForwardOutput) -> Vec<HwOutcome> {
+        let mut v = Vec::with_capacity(out.batch);
+        for b in 0..out.batch {
+            v.push(self.replay_row(&out.clause_bits_row(b), out.sums_row(b)));
+        }
+        v
+    }
+
+    /// Worst-case decision latency (async: all-high-arc traversal; sync:
+    /// the minimum clock period).
+    fn worst_case(&self) -> Ps;
+}
+
+/// Build one engine per architecture in [`HwArch::ALL`] order — the list
+/// the experiments, benches, and serving replay all iterate. Use this
+/// form for *synthetic* workloads (whose clause bits follow the per-class
+/// alternating convention); replaying a trained model's clause bits goes
+/// through [`engine_list_for_model`] so the async PDLs carry the model's
+/// true vote signs.
+pub fn engine_list(
+    d: &DesignParams,
+    flow: &FlowConfig,
+    seed: u64,
+) -> Result<Vec<Box<dyn HwEngine>>> {
+    HwArch::ALL.iter().map(|a| a.build(d, flow, seed)).collect()
+}
+
+/// [`engine_list`] wired for a trained model ([`HwArch::build_for_model`]
+/// per architecture) — what fig9/table-style replays of real clause bits
+/// and the serving path's `HwBackend` both build from, so figures and
+/// production replay share one code path.
+pub fn engine_list_for_model(
+    model: &TmModel,
+    flow: &FlowConfig,
+    seed: u64,
+) -> Result<Vec<Box<dyn HwEngine>>> {
+    HwArch::ALL.iter().map(|a| a.build_for_model(model, flow, seed)).collect()
+}
+
+/// Per-request activity shared by every engine's toggle model: the
+/// fraction of clause outputs that changed since the previous replayed
+/// sample (first sample: the fired density). `prev` is the engine's
+/// history slot, updated in place — the same definition
+/// [`crate::experiments::fig9::dataset_activity`] uses at the input.
+fn replay_activity(prev: &mut Option<Vec<bool>>, clause_bits: &[Vec<bool>]) -> f64 {
+    let flat: Vec<bool> = clause_bits.concat();
+    let total = flat.len().max(1) as f64;
+    let act = match prev {
+        Some(p) if p.len() == flat.len() => {
+            p.iter().zip(&flat).filter(|(a, b)| a != b).count() as f64 / total
+        }
+        _ => flat.iter().filter(|&&b| b).count() as f64 / total,
+    };
+    *prev = Some(flat);
+    act
+}
+
+impl HwEngine for AsyncTmEngine {
+    fn arch(&self) -> HwArch {
+        HwArch::Async
+    }
+
+    fn replay_row(&mut self, clause_bits: &[Vec<bool>], _sums: &[i32]) -> HwOutcome {
+        let d = *self.params();
+        let act = replay_activity(&mut self.replay_fired, clause_bits);
+        let out = self.infer(clause_bits);
+        HwOutcome {
+            winner: out.winner,
+            decision_latency: out.decision_latency,
+            cycle_latency: out.cycle_latency,
+            // One analytic source of truth ([`TdAsync::toggles`], Fig. 12):
+            // the time-domain popcount propagates exactly one transition
+            // per delay element per inference, whatever the data; only the
+            // clause logic scales with this sample's activity.
+            toggles: TdAsync::default().toggles(&d, act),
+        }
+    }
+
+    fn worst_case(&self) -> Ps {
+        self.worst_case_latency()
+    }
+}
+
+/// Executable synchronous baseline ([`GenericAdder`] or [`Fpt18`]): the
+/// cycle latency is the analytic minimum clock period, but the *decision*
+/// latency is a per-request combinational settle time driven by the
+/// actual class sums — the adder tree's carry chains only ripple as far
+/// as the widest real sum, the FPT'18 chain only as far as the furthest
+/// fired clause.
+pub struct SyncReplayEngine {
+    arch: HwArch,
+    d: DesignParams,
+    /// Congestion multiplier at this design size.
+    m: f64,
+    /// Analytic worst-case decomposition (the minimum clock period).
+    worst: LatencyBreakdown,
+    /// Previous flat fired vector, for the data-dependent toggle model.
+    prev_fired: Option<Vec<bool>>,
+}
+
+impl SyncReplayEngine {
+    pub fn new(arch: HwArch, d: &DesignParams) -> SyncReplayEngine {
+        let (m, worst) = match arch {
+            HwArch::Adder => (
+                calib::congestion(GenericAdder.resources(d).luts()),
+                GenericAdder.latency(d),
+            ),
+            HwArch::Fpt18 => (calib::congestion(Fpt18.resources(d).luts()), Fpt18.latency(d)),
+            HwArch::Async => panic!("SyncReplayEngine models synchronous architectures only"),
+        };
+        SyncReplayEngine { arch, d: *d, m, worst, prev_fired: None }
+    }
+
+    /// Per-request popcount settle time (≤ the worst-case stage delay).
+    fn popcount_settle(&self, clause_bits: &[Vec<bool>], sums: &[i32]) -> Ps {
+        match self.arch {
+            HwArch::Adder => {
+                // Carry chains stop rippling at the top active bit of the
+                // widest actual sum: small sums settle early.
+                let max_abs = sums.iter().map(|s| s.unsigned_abs()).max().unwrap_or(0);
+                GenericAdder::popcount_settle(&self.d, self.m, calib::sum_width(max_abs as usize))
+            }
+            HwArch::Fpt18 => {
+                // The ripple chain settles once the increment injected by
+                // the furthest fired clause has propagated out.
+                let active = clause_bits
+                    .iter()
+                    .map(|b| b.iter().rposition(|&x| x).map_or(0, |p| p + 1))
+                    .max()
+                    .unwrap_or(0);
+                Fpt18::popcount_settle(&self.d, self.m, active.max(1))
+            }
+            HwArch::Async => unreachable!(),
+        }
+    }
+}
+
+impl HwEngine for SyncReplayEngine {
+    fn arch(&self) -> HwArch {
+        self.arch
+    }
+
+    fn replay_row(&mut self, clause_bits: &[Vec<bool>], sums: &[i32]) -> HwOutcome {
+        // Sequential argmax: ties resolve to the lowest class index,
+        // matching jnp.argmax and the native functional path bit-exactly.
+        let mut winner = 0usize;
+        for (k, &s) in sums.iter().enumerate() {
+            if s > sums[winner] {
+                winner = k;
+            }
+        }
+        let decision = self.worst.clause + self.popcount_settle(clause_bits, sums) + self.worst.compare;
+        let cycle = self.worst.total();
+        let act = replay_activity(&mut self.prev_fired, clause_bits);
+        let toggles = match self.arch {
+            HwArch::Adder => GenericAdder.toggles(&self.d, act),
+            HwArch::Fpt18 => Fpt18.toggles(&self.d, act),
+            HwArch::Async => unreachable!(),
+        };
+        HwOutcome {
+            winner,
+            decision_latency: decision.min(cycle),
+            cycle_latency: cycle,
+            toggles,
+        }
+    }
+
+    fn worst_case(&self) -> Ps {
+        self.worst.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::datasets::{signed_sum, synthetic_clause_bits};
+    use crate::tm::WorkloadSpec;
+    use crate::util::SplitMix64;
+
+    fn sample(k: usize, c: usize, winner: usize, seed: u64) -> (Vec<Vec<bool>>, Vec<i32>) {
+        let spec = WorkloadSpec {
+            n_classes: k,
+            clauses_per_class: c,
+            n_features: 96,
+            fire_rate: 0.5,
+        };
+        let mut rng = SplitMix64::new(seed);
+        let bits = synthetic_clause_bits(&spec, winner, &mut rng);
+        let sums: Vec<i32> = bits.iter().map(|b| signed_sum(b)).collect();
+        (bits, sums)
+    }
+
+    #[test]
+    fn arch_names_round_trip() {
+        for a in HwArch::ALL {
+            assert_eq!(HwArch::from_name(a.name()).unwrap(), a);
+        }
+        let err = HwArch::from_name("systolic").unwrap_err().to_string();
+        assert!(err.contains("async") && err.contains("adder") && err.contains("fpt18"));
+    }
+
+    #[test]
+    fn engine_list_covers_every_arch_in_table_order() {
+        let d = DesignParams::synthetic(3, 20, 96);
+        let engines = engine_list(&d, &FlowConfig::table1_default(), 7).unwrap();
+        let archs: Vec<HwArch> = engines.iter().map(|e| e.arch()).collect();
+        assert_eq!(archs, HwArch::ALL.to_vec());
+    }
+
+    #[test]
+    fn sync_winner_matches_functional_argmax_even_on_ties() {
+        let d = DesignParams::synthetic(4, 10, 96);
+        let mut eng = SyncReplayEngine::new(HwArch::Adder, &d);
+        let bits = vec![vec![false; 10]; 4];
+        // Tie between classes 1 and 3 → lowest index wins.
+        let out = eng.replay_row(&bits, &[-1, 5, 0, 5]);
+        assert_eq!(out.winner, 1);
+    }
+
+    #[test]
+    fn sync_decision_bounded_by_cycle_and_monotone_in_sum_width() {
+        let d = DesignParams::synthetic(3, 60, 96);
+        for arch in [HwArch::Adder, HwArch::Fpt18] {
+            let mut eng = SyncReplayEngine::new(arch, &d);
+            let (bits, sums) = sample(3, 60, 0, 5);
+            let out = eng.replay_row(&bits, &sums);
+            assert!(out.decision_latency <= out.cycle_latency, "{arch:?}");
+            assert_eq!(out.cycle_latency, eng.worst_case(), "{arch:?}");
+            assert!(out.decision_latency > Ps::ZERO, "{arch:?}");
+        }
+        // Adder tree: a wider actual sum ripples a longer carry chain.
+        let mut eng = SyncReplayEngine::new(HwArch::Adder, &d);
+        let quiet = vec![vec![false; 60]; 3];
+        let narrow = eng.replay_row(&quiet, &[1, 0, 0]).decision_latency;
+        let wide = eng.replay_row(&quiet, &[29, 0, 0]).decision_latency;
+        assert!(wide > narrow, "bigger sums must settle later on the adder tree");
+    }
+
+    #[test]
+    fn fpt18_settle_tracks_furthest_fired_clause() {
+        let d = DesignParams::synthetic(2, 80, 96);
+        let mut eng = SyncReplayEngine::new(HwArch::Fpt18, &d);
+        let mut early = vec![vec![false; 80]; 2];
+        early[0][2] = true;
+        let mut late = vec![vec![false; 80]; 2];
+        late[0][78] = true;
+        let t_early = eng.replay_row(&early, &[1, 0]).decision_latency;
+        let t_late = eng.replay_row(&late, &[1, 0]).decision_latency;
+        assert!(t_late > t_early);
+    }
+
+    #[test]
+    fn sync_toggles_are_data_dependent_async_popcount_is_not() {
+        let d = DesignParams::synthetic(3, 40, 96);
+        let mut eng = SyncReplayEngine::new(HwArch::Adder, &d);
+        let (bits, sums) = sample(3, 40, 1, 9);
+        let first = eng.replay_row(&bits, &sums);
+        // Identical consecutive sample → zero switching in the datapath.
+        let repeat = eng.replay_row(&bits, &sums);
+        assert!(repeat.toggles.popcount_toggles_per_inference
+            < first.toggles.popcount_toggles_per_inference);
+        assert_eq!(repeat.toggles.popcount_toggles_per_inference, 0.0);
+
+        let mut engines = engine_list(&d, &FlowConfig::table1_default(), 3).unwrap();
+        let td = engines.iter_mut().find(|e| e.arch() == HwArch::Async).unwrap();
+        let a = td.replay_row(&bits, &sums);
+        let b = td.replay_row(&bits, &sums);
+        assert_eq!(
+            a.toggles.popcount_toggles_per_inference,
+            b.toggles.popcount_toggles_per_inference
+        );
+        assert_eq!(a.toggles.popcount_toggles_per_inference, d.c_total() as f64);
+        assert_eq!(a.toggles.clocked_ffs, 0);
+        // Clause-stage activity uses the same hamming-vs-previous
+        // definition as the sync engines: an identical repeat is quiet.
+        assert_eq!(b.toggles.clause_toggles_per_inference, 0.0);
+        assert!(a.toggles.clause_toggles_per_inference > 0.0);
+    }
+
+    #[test]
+    fn async_replay_matches_inherent_infer_semantics() {
+        let d = DesignParams::synthetic(4, 30, 96);
+        let mut eng = HwArch::Async.build(&d, &FlowConfig::table1_default(), 11).unwrap();
+        let (bits, sums) = sample(4, 30, 2, 13);
+        let out = eng.replay_row(&bits, &sums);
+        assert!(out.decision_latency <= out.cycle_latency);
+        assert!(out.decision_latency <= eng.worst_case());
+        assert!(out.winner < 4);
+    }
+
+    #[test]
+    fn batched_replay_is_rowwise() {
+        let d = DesignParams::synthetic(2, 8, 4);
+        let mut eng = SyncReplayEngine::new(HwArch::Adder, &d);
+        let model = crate::tm::TmModel::synthetic("hw", 2, 8, 4, 0.3, 5);
+        let rows: Vec<Vec<bool>> =
+            (0..3).map(|i| (0..4).map(|j| (i + j) % 2 == 0).collect()).collect();
+        let out = model
+            .forward_packed(&crate::tm::PackedBatch::from_rows(&rows).unwrap())
+            .unwrap();
+        let outcomes = eng.replay(&out);
+        assert_eq!(outcomes.len(), 3);
+        for (b, o) in outcomes.iter().enumerate() {
+            assert_eq!(o.winner, out.pred[b] as usize, "row {b}");
+        }
+    }
+}

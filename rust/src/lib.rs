@@ -13,9 +13,9 @@
 //!   ([`pdl`]), arbiter trees ([`arbiter`]), an event-driven timing
 //!   simulator ([`timing`]), the asynchronous MOUSETRAP TM engine
 //!   ([`asynctm`]), all adder-based baselines ([`baselines`]), power and
-//!   resource models ([`power`]), the pluggable inference runtime
-//!   ([`runtime`]) and a multi-worker batch-serving coordinator
-//!   ([`coordinator`]).
+//!   resource models ([`power`]), the unified executable hardware-engine
+//!   seam ([`hw`]), the pluggable inference runtime ([`runtime`]) and a
+//!   multi-worker batch-serving coordinator ([`coordinator`]).
 //!
 //! # Execution backends
 //!
@@ -24,6 +24,7 @@
 //! | feature set | backend | needs | use |
 //! |---|---|---|---|
 //! | `default` | [`runtime::NativeBackend`] | nothing (hermetic) | CI, tests, serving |
+//! | `default` | [`runtime::HwBackend`] (`hw:<async\|adder\|fpt18>`) | nothing (hermetic) | serving with simulated on-chip timing |
 //! | `--features pjrt` | `runtime::PjrtBackend` | XLA/PJRT bindings + `make artifacts` | HLO cross-checks |
 //!
 //! The default build is pure Rust and is what CI builds, tests, lints and
@@ -32,6 +33,21 @@
 //! owning its backend (PJRT clients are not `Send`), with round-robin or
 //! least-loaded dispatch, per-worker dynamic batching, and metrics that
 //! aggregate across the pool.
+//!
+//! # The hardware-engine seam
+//!
+//! Every architecture of the paper's comparison is *executable* behind
+//! the [`hw::HwEngine`] trait: the asynchronous time-domain design (built
+//! through the real implementation flow), the generic adder tree, and the
+//! FPT'18 ripple chain each replay a sample's clause bits + class sums
+//! into a winner, per-request decision/cycle latency, and a switching
+//! inventory. [`runtime::HwBackend`] attaches one engine per worker on
+//! the serving path; the coordinator's `ReplayPolicy` (`Off` /
+//! `Sample(1-in-N)` / `Full`) decides which requests pay for timing
+//! replay and feeds hardware decision-latency p50/p99 into the pool
+//! metrics. The experiments ([`experiments::table1`], `fig9`, `fig10`)
+//! iterate the same [`hw::engine_list`], so paper figures and serving
+//! benches share one code path.
 //!
 //! # The packed data plane
 //!
@@ -63,6 +79,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod fabric;
 pub mod flow;
+pub mod hw;
 pub mod pdl;
 pub mod power;
 pub mod runtime;

@@ -2,10 +2,12 @@
 //!
 //! Subcommands:
 //!   infer     — run samples through a model on the selected backend
-//!               (--backend native|pjrt; native is the default and needs
-//!               no XLA toolchain)
+//!               (--backend native|pjrt|hw:<async|adder|fpt18>; native is
+//!               the default and needs no XLA toolchain)
 //!   serve     — start the multi-worker batching coordinator and drive a
-//!               load test (--workers N, --dispatch round-robin|least-loaded)
+//!               load test (--workers N, --dispatch round-robin|least-loaded,
+//!               --backend hw:<arch> for simulated-hardware serving with
+//!               --hw-replay off|sample:N|full row replay)
 //!   flow      — run the FPGA implementation flow and print the skew audit
 //!   table1 / fig6 / fig9 / fig10 / fig11 / fig12 — regenerate the paper's
 //!               tables/figures (markdown to stdout, CSV via --csv DIR)
@@ -17,14 +19,15 @@
 use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
-use tdpc::baselines::DesignParams;
 use tdpc::config::Args;
-use tdpc::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy};
+use tdpc::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy, ReplayPolicy,
+};
 use tdpc::experiments::{ablation, fig10, fig11, fig12, fig6, fig9, table1, Table};
 use tdpc::fabric::Device;
 use tdpc::flow::{self, skew_report, FlowConfig};
 use tdpc::runtime::{BackendSpec, InferenceBackend, ModelRegistry};
-use tdpc::tm::{Manifest, PackedBatch, TestSet, TmModel};
+use tdpc::tm::{Manifest, PackedBatch, TestSet};
 use tdpc::util::Ps;
 
 fn main() {
@@ -146,11 +149,15 @@ fn cmd_infer(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(&[
         "artifacts", "model", "requests", "batch", "deadline-us", "workers", "dispatch",
-        "backend", "csv", "hw",
+        "backend", "hw-replay", "csv",
     ])?;
     let model = args.opt_or("model", "mnist_c100");
     let n_requests = args.opt_usize("requests", 500)?;
     let n_workers = args.opt_usize("workers", 1)?;
+    // `--backend hw:<async|adder|fpt18>` serves through simulated hardware
+    // (one independently-seeded die per worker); `--hw-replay` picks which
+    // rows pay for timing replay. The default `full` is a no-op on
+    // engine-less backends, so it only matters with hw:<arch>.
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig {
             max_batch: args.opt_usize("batch", 32)?,
@@ -159,33 +166,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n_workers,
         dispatch: DispatchPolicy::from_name(args.opt_or("dispatch", "round-robin"))?,
         backend: BackendSpec::from_name(args.opt_or("backend", "native"))?,
+        replay: ReplayPolicy::from_name(args.opt_or("hw-replay", "full"))?,
     };
     let root = artifacts_root(args);
     let manifest = Manifest::load(&root)?;
     let entry = manifest.entry(model)?.clone();
     let test = TestSet::load(&entry.test_data_path)?;
-    let tm_model = TmModel::load(&entry.model_path)?;
 
-    // --hw attaches one simulated async TM per worker (independently
-    // seeded dies), so every response carries an on-chip latency.
-    let engines = if args.flag("hw") {
-        let d = DesignParams::from_model(&tm_model);
-        (0..n_workers)
-            .map(|i| {
-                tdpc::asynctm::AsyncTmEngine::build(
-                    &Device::xc7z020(),
-                    &d,
-                    &FlowConfig::table1_default(),
-                    1 + i as u64,
-                )
-                .map_err(anyhow::Error::from)
-            })
-            .collect::<Result<Vec<_>>>()?
-    } else {
-        Vec::new()
-    };
-
-    let coord = Coordinator::start(root, model, cfg, engines)?;
+    let coord = Coordinator::start(root, model, cfg)?;
     let (tx, rx) = std::sync::mpsc::channel();
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
@@ -222,8 +210,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if m.hw_mean_ns > 0.0 {
         println!(
-            "simulated on-chip decision latency: mean {:.1} ns p99 {:.1} ns (mismatches {})",
-            m.hw_mean_ns, m.hw_p99_ns, m.hw_functional_mismatches
+            "simulated on-chip decision latency: mean {:.1} ns p50 {} p99 {} (mismatches {})",
+            m.hw_mean_ns, m.hw_p50, m.hw_p99, m.hw_functional_mismatches
         );
     }
     coord.shutdown();

@@ -11,6 +11,8 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
+use crate::flow::FlowConfig;
+use crate::hw::{HwArch, HwOutcome};
 use crate::tm::{Manifest, PackedBatch, TmModel};
 
 use super::ForwardOutput;
@@ -40,6 +42,20 @@ pub trait InferenceBackend {
     /// (`batch.bits()` must equal [`InferenceBackend::n_features`] unless
     /// the batch is empty).
     fn forward(&self, batch: &PackedBatch) -> Result<ForwardOutput>;
+    /// Replay row `row` of a forward output through the attached simulated
+    /// hardware engine, if this backend carries one (see
+    /// [`crate::hw::HwEngine`]). Backends without hardware return `None`,
+    /// so callers (the coordinator's `ReplayPolicy`) need no
+    /// special-casing per backend kind.
+    fn replay(&self, out: &ForwardOutput, row: usize) -> Option<HwOutcome> {
+        let _ = (out, row);
+        None
+    }
+    /// The simulated hardware architecture attached to this backend, if
+    /// any.
+    fn hw_arch(&self) -> Option<HwArch> {
+        None
+    }
 }
 
 /// A `Send + Clone` recipe for constructing a backend inside a worker
@@ -52,6 +68,16 @@ pub enum BackendSpec {
     /// Pure-Rust evaluation of an in-memory model — no artifacts required
     /// (synthetic workloads, tests, CI).
     InMemory(Arc<TmModel>),
+    /// Native functional results plus a simulated hardware engine
+    /// ([`crate::hw::HwEngine`]) of the chosen architecture for per-request
+    /// on-chip timing (`--backend hw:<async|adder|fpt18>`). `model: None`
+    /// loads from the artifact manifest; `Some` serves an in-memory model
+    /// (tests, synthetic workloads).
+    TimeDomain {
+        arch: HwArch,
+        flow: FlowConfig,
+        model: Option<Arc<TmModel>>,
+    },
     /// Execute the AOT-compiled HLO on a PJRT client (requires artifacts
     /// and real xla bindings; see rust/README.md).
     #[cfg(feature = "pjrt")]
@@ -61,13 +87,25 @@ pub enum BackendSpec {
 impl BackendSpec {
     /// Parse a CLI-style backend name.
     pub fn from_name(name: &str) -> Result<BackendSpec> {
+        if let Some(arch) = name.strip_prefix("hw:") {
+            return Ok(BackendSpec::TimeDomain {
+                arch: HwArch::from_name(arch)?,
+                flow: FlowConfig::table1_default(),
+                model: None,
+            });
+        }
         match name {
             "native" => Ok(BackendSpec::Native),
+            "hw" => bail!(
+                "backend `hw` needs an architecture: hw:async, hw:adder, hw:fpt18"
+            ),
             #[cfg(feature = "pjrt")]
             "pjrt" => Ok(BackendSpec::Pjrt),
             #[cfg(not(feature = "pjrt"))]
             "pjrt" => bail!("this binary was built without the `pjrt` feature"),
-            other => bail!("unknown backend {other:?} (expected: native, pjrt)"),
+            other => bail!(
+                "unknown backend {other:?} (expected: native, pjrt, hw:<async|adder|fpt18>)"
+            ),
         }
     }
 
@@ -75,6 +113,9 @@ impl BackendSpec {
         match self {
             BackendSpec::Native => "native",
             BackendSpec::InMemory(_) => "native(in-memory)",
+            BackendSpec::TimeDomain { arch: HwArch::Async, .. } => "hw:async",
+            BackendSpec::TimeDomain { arch: HwArch::Adder, .. } => "hw:adder",
+            BackendSpec::TimeDomain { arch: HwArch::Fpt18, .. } => "hw:fpt18",
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt => "pjrt",
         }
@@ -82,7 +123,20 @@ impl BackendSpec {
 
     /// Whether this spec needs the artifact manifest at `root` to open.
     pub fn needs_manifest(&self) -> bool {
-        !matches!(self, BackendSpec::InMemory(_))
+        !matches!(
+            self,
+            BackendSpec::InMemory(_) | BackendSpec::TimeDomain { model: Some(_), .. }
+        )
+    }
+
+    /// Derive the spec worker `w` should open: time-domain specs get a
+    /// distinct die seed per worker (independent simulated chips, like a
+    /// rack of boards), every other spec is unchanged.
+    pub fn for_worker(mut self, w: usize) -> BackendSpec {
+        if let BackendSpec::TimeDomain { flow, .. } = &mut self {
+            flow.die_seed = flow.die_seed.wrapping_add(w as u64);
+        }
+        self
     }
 
     /// Construct the backend for `model` from the artifacts at `root`.
@@ -102,6 +156,24 @@ impl BackendSpec {
                     m.name
                 );
                 Ok(Box::new(NativeBackend::new(m.clone())))
+            }
+            BackendSpec::TimeDomain { arch, flow, model: mem } => {
+                let m = match mem {
+                    Some(m) => {
+                        ensure!(
+                            m.name == model,
+                            "in-memory spec holds model {:?}, not {model:?}",
+                            m.name
+                        );
+                        m.clone()
+                    }
+                    None => {
+                        let manifest = Manifest::load(root)?;
+                        let entry = manifest.entry(model)?;
+                        Arc::new(TmModel::load(&entry.model_path)?)
+                    }
+                };
+                Ok(Box::new(super::hw_backend::HwBackend::build(m, *arch, flow)?))
             }
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt => {
@@ -213,6 +285,34 @@ mod tests {
         assert!(BackendSpec::from_name("hls").is_err());
         assert_eq!(BackendSpec::default().name(), "native");
         assert!(!BackendSpec::InMemory(Arc::new(toy())).needs_manifest());
+    }
+
+    #[test]
+    fn hw_spec_parsing() {
+        let spec = BackendSpec::from_name("hw:adder").unwrap();
+        assert!(matches!(spec, BackendSpec::TimeDomain { arch: HwArch::Adder, .. }));
+        assert_eq!(spec.name(), "hw:adder");
+        assert!(spec.needs_manifest(), "manifest-backed until a model is attached");
+        // Bad architecture names fail with the valid set listed.
+        let err = BackendSpec::from_name("hw:systolic").unwrap_err().to_string();
+        assert!(err.contains("adder") && err.contains("fpt18"), "{err}");
+        assert!(BackendSpec::from_name("hw").is_err());
+        // In-memory time-domain specs need no artifacts, and each worker
+        // gets its own die.
+        let spec = BackendSpec::TimeDomain {
+            arch: HwArch::Async,
+            flow: FlowConfig::table1_default(),
+            model: Some(Arc::new(toy())),
+        };
+        assert!(!spec.needs_manifest());
+        let reseeded = spec.clone().for_worker(3);
+        match (&spec, &reseeded) {
+            (
+                BackendSpec::TimeDomain { flow: f0, .. },
+                BackendSpec::TimeDomain { flow: f3, .. },
+            ) => assert_eq!(f3.die_seed, f0.die_seed + 3),
+            _ => unreachable!(),
+        }
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! Simulated hardware as a first-class inference backend.
+//!
+//! [`HwBackend`] makes the paper's architectures peers of
+//! [`super::NativeBackend`]/`PjrtBackend` on the request path: functional
+//! results come from the same packed native forward pass (so predictions
+//! are bit-identical to the native backend), while per-request on-chip
+//! timing comes from the attached [`crate::hw::HwEngine`] via
+//! [`super::InferenceBackend::replay`]. The engine is stateful (arbiter
+//! RNG, toggle history) and sits behind a mutex; each coordinator worker
+//! owns its own backend — and therefore its own simulated die — so the
+//! lock is uncontended on the serving path.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::flow::FlowConfig;
+use crate::hw::{HwArch, HwEngine, HwOutcome};
+use crate::tm::{PackedBatch, TmModel};
+
+use super::backend::InferenceBackend;
+use super::ForwardOutput;
+
+/// Native functional forward pass + simulated hardware timing engine.
+pub struct HwBackend {
+    model: Arc<TmModel>,
+    arch: HwArch,
+    engine: Mutex<Box<dyn HwEngine>>,
+}
+
+impl HwBackend {
+    /// Build the engine for `model` and wrap both. For the async
+    /// architecture this runs the full implementation flow and wires the
+    /// PDL polarities from the model's trained clause signs
+    /// ([`HwArch::build_for_model`]); `flow.die_seed` selects the
+    /// simulated die (the coordinator gives every worker a distinct one
+    /// via `BackendSpec::for_worker`).
+    pub fn build(model: Arc<TmModel>, arch: HwArch, flow: &FlowConfig) -> Result<HwBackend> {
+        let engine = arch.build_for_model(&model, flow, flow.die_seed)?;
+        Ok(HwBackend { model, arch, engine: Mutex::new(engine) })
+    }
+
+    pub fn arch(&self) -> HwArch {
+        self.arch
+    }
+}
+
+impl InferenceBackend for HwBackend {
+    fn kind(&self) -> &'static str {
+        "hw"
+    }
+
+    fn platform(&self) -> String {
+        format!("hw:{} (simulated)", self.arch.name())
+    }
+
+    fn model_name(&self) -> &str {
+        &self.model.name
+    }
+
+    fn n_features(&self) -> usize {
+        self.model.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.model.n_classes
+    }
+
+    fn c_total(&self) -> usize {
+        self.model.c_total()
+    }
+
+    fn forward(&self, batch: &PackedBatch) -> Result<ForwardOutput> {
+        self.model.forward_packed(batch)
+    }
+
+    fn replay(&self, out: &ForwardOutput, row: usize) -> Option<HwOutcome> {
+        let mut engine = self.engine.lock().unwrap();
+        Some(engine.replay_row(&out.clause_bits_row(row), out.sums_row(row)))
+    }
+
+    fn hw_arch(&self) -> Option<HwArch> {
+        Some(self.arch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::BackendSpec;
+
+    fn model() -> Arc<TmModel> {
+        Arc::new(TmModel::synthetic("hwb", 3, 10, 16, 0.15, 21))
+    }
+
+    fn rows(n: usize, f: usize, seed: u64) -> Vec<Vec<bool>> {
+        let mut rng = crate::util::SplitMix64::new(seed);
+        (0..n).map(|_| (0..f).map(|_| rng.next_bool(0.5)).collect()).collect()
+    }
+
+    #[test]
+    fn time_domain_spec_opens_without_artifacts_and_replays() {
+        let m = model();
+        for arch in HwArch::ALL {
+            let spec = BackendSpec::TimeDomain {
+                arch,
+                flow: FlowConfig::table1_default(),
+                model: Some(m.clone()),
+            };
+            let b = spec.open(std::path::Path::new("/nonexistent"), "hwb").unwrap();
+            assert_eq!(b.kind(), "hw");
+            assert_eq!(b.hw_arch(), Some(arch));
+            assert!(b.platform().contains(arch.name()));
+            let batch = PackedBatch::from_rows(&rows(4, 16, 3)).unwrap();
+            let out = b.forward(&batch).unwrap();
+            for i in 0..out.batch {
+                let o = b.replay(&out, i).expect("hw backend always replays");
+                assert!(o.decision_latency <= o.cycle_latency, "{arch:?} row {i}");
+                assert!(o.decision_latency > crate::util::Ps::ZERO, "{arch:?} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn functional_results_match_native_backend_exactly() {
+        let m = model();
+        let native = super::super::NativeBackend::new(m.clone());
+        let hw = HwBackend::build(m, HwArch::Adder, &FlowConfig::table1_default()).unwrap();
+        let batch = PackedBatch::from_rows(&rows(8, 16, 5)).unwrap();
+        let a = native.forward(&batch).unwrap();
+        let b = hw.forward(&batch).unwrap();
+        assert_eq!(a, b, "functional path is the same packed forward pass");
+    }
+
+    #[test]
+    fn time_domain_spec_rejects_wrong_model_name() {
+        let spec = BackendSpec::TimeDomain {
+            arch: HwArch::Adder,
+            flow: FlowConfig::table1_default(),
+            model: Some(model()),
+        };
+        assert!(spec.open(std::path::Path::new("/nonexistent"), "other").is_err());
+    }
+}

@@ -1,11 +1,16 @@
 //! Inference runtime: pluggable execution backends behind one seam.
 //!
 //! The request path executes TM forward passes through the
-//! [`InferenceBackend`] trait. Two implementations exist:
+//! [`InferenceBackend`] trait. Three implementations exist:
 //!
 //! * [`NativeBackend`] (default) — pure-Rust bit-packed clause evaluation
 //!   straight from the trained [`crate::tm::TmModel`]. Hermetic: no XLA
 //!   toolchain, deterministic, and what CI builds and tests.
+//! * [`HwBackend`] (`BackendSpec::TimeDomain`, CLI `hw:<arch>`) — the same
+//!   packed native forward pass for functional results, plus a simulated
+//!   hardware engine ([`crate::hw::HwEngine`]: the async time-domain
+//!   design, the generic adder tree, or FPT'18) reachable through
+//!   [`InferenceBackend::replay`] for per-request on-chip timing.
 //! * `PjrtBackend` (`--features pjrt`) — compiles the AOT-lowered HLO text
 //!   emitted by `python/compile/aot.py` on the PJRT CPU client and executes
 //!   it. PJRT clients wrap raw pointers and are not `Send`, so PJRT
@@ -23,11 +28,13 @@
 //! boundary, where the AOT artifact demands f32 lanes.
 
 pub mod backend;
+pub mod hw_backend;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod registry;
 
 pub use backend::{BackendSpec, InferenceBackend, NativeBackend};
+pub use hw_backend::HwBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::{ModelRunner, PjrtBackend};
 pub use registry::ModelRegistry;

@@ -14,6 +14,8 @@ struct Event {
     seq: u64,
     net: NetId,
     level: bool,
+    /// Gate whose pending slot owns this event (None for external drives).
+    gate: Option<u32>,
 }
 
 impl Ord for Event {
@@ -34,6 +36,11 @@ pub struct SimStats {
     pub events_processed: u64,
     pub events_scheduled: u64,
     pub events_cancelled: u64,
+    /// Cancelled seqs reclaimed from the lazy-deletion set when their
+    /// event was popped. Once the queue drains this equals
+    /// `events_cancelled` — the invariant that keeps the set from growing
+    /// for the life of the simulator.
+    pub cancelled_reclaimed: u64,
 }
 
 /// The simulator: owns net state and the event queue.
@@ -101,12 +108,18 @@ impl Simulator {
         self.trace(net).iter().find(|&&(_, l)| l == level).map(|&(t, _)| t)
     }
 
+    /// Cancelled seqs still awaiting lazy reclamation (drains to zero once
+    /// the queue drains — asserted by the test suite).
+    pub fn outstanding_cancellations(&self) -> usize {
+        self.cancelled.len()
+    }
+
     /// Externally drive a net at an absolute time.
     pub fn schedule(&mut self, net: NetId, level: bool, at: Ps) {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.stats.events_scheduled += 1;
-        self.queue.push(Reverse(Event { at, seq, net, level }));
+        self.queue.push(Reverse(Event { at, seq, net, level, gate: None }));
     }
 
     /// Run until the queue drains or `t_max` passes; returns events processed.
@@ -117,9 +130,19 @@ impl Simulator {
                 break;
             }
             self.queue.pop();
+            // The event is leaving the queue: release its gate's pending
+            // slot *now*, so a later evaluation can never cancel a seq
+            // that is no longer queued (such a seq would sit in
+            // `cancelled` for the life of the simulator).
+            if let Some(gi) = ev.gate {
+                if matches!(self.pending[gi as usize], Some((seq, _)) if seq == ev.seq) {
+                    self.pending[gi as usize] = None;
+                }
+            }
             // Lazy-deletion check; skip the hash probe entirely when no
             // cancellations are outstanding (the common case, §Perf).
             if !self.cancelled.is_empty() && self.cancelled.remove(&ev.seq) {
+                self.stats.cancelled_reclaimed += 1;
                 continue;
             }
             self.now = ev.at;
@@ -150,7 +173,11 @@ impl Simulator {
         let current = self.levels[g.output.0 as usize];
         let new_level = g.kind.eval(&inputs, current);
 
-        // Inertial-delay model: at most one pending schedule per gate.
+        // Inertial-delay model: at most one pending schedule per gate. The
+        // slot is cleared eagerly when its event pops in `run_until`, so
+        // an occupied slot always names a *queued* event: cancelling it
+        // really removes work, and the cancelled seq is guaranteed to be
+        // reclaimed when that event is popped and skipped.
         match self.pending[gi] {
             Some((seq, lvl)) if lvl == new_level => {
                 let _ = seq; // already scheduled to the right level
@@ -173,18 +200,10 @@ impl Simulator {
         self.stats.events_scheduled += 1;
         self.pending[gi] = Some((seq, new_level));
         let out = self.gates[gi].output;
-        self.queue.push(Reverse(Event { at, seq, net: out, level: new_level }));
-        // Clear pending once the event fires: handled lazily — a fired
-        // event's seq no longer matches, so overwrite on next eval. To keep
-        // the single-slot invariant exact we clear on processing below.
+        self.queue
+            .push(Reverse(Event { at, seq, net: out, level: new_level, gate: Some(gi as u32) }));
     }
 }
-
-// NOTE on `pending`: entries are cleared lazily — once an event fires, the
-// slot may still name its seq, but any later evaluation either agrees
-// (no-op) or schedules the opposite level and cancels a seq that is no
-// longer queued; `cancelled` ignores unknown seqs by construction of
-// HashSet::remove. This keeps the hot path allocation-free.
 
 #[cfg(test)]
 mod tests {
@@ -219,6 +238,39 @@ mod tests {
         sim.run_until(Ps(10_000));
         assert!(sim.trace(o).is_empty(), "pulse shorter than delay must vanish");
         assert!(sim.stats.events_cancelled >= 1);
+        // Lazy-deletion bookkeeping drains with the queue.
+        assert_eq!(sim.stats.cancelled_reclaimed, sim.stats.events_cancelled);
+        assert_eq!(sim.outstanding_cancellations(), 0);
+    }
+
+    #[test]
+    fn cancelled_set_drains_under_sustained_glitching() {
+        // A chain of slow gates fed with many sub-delay pulses produces a
+        // steady stream of inertial cancellations. Every cancelled seq
+        // must be reclaimed when its event pops — the set may not grow for
+        // the life of the simulator (it previously leaked seqs whenever a
+        // stale pending slot was cancelled after its event had fired).
+        let mut c = Circuit::new();
+        let a = c.net();
+        let mut n = a;
+        for _ in 0..6 {
+            n = c.gate(GateKind::Buf, &[n], Ps(300));
+        }
+        let mut sim = Simulator::new(&c);
+        sim.watch(n);
+        let mut t = 0u64;
+        for i in 0..200u64 {
+            // Irregular pulse train, mostly shorter than the gate delay.
+            t += 40 + (i % 7) * 35;
+            sim.schedule(a, i % 2 == 0, Ps(t));
+        }
+        sim.run_until(Ps(1_000_000));
+        assert!(sim.stats.events_cancelled > 10, "workload must actually cancel");
+        assert_eq!(
+            sim.stats.cancelled_reclaimed, sim.stats.events_cancelled,
+            "every cancellation reclaimed once the queue drains"
+        );
+        assert_eq!(sim.outstanding_cancellations(), 0, "lazy-deletion set must drain");
     }
 
     #[test]

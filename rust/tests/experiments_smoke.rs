@@ -1,0 +1,83 @@
+//! Artifact-free smoke tests for the figure/table drivers, so the paper
+//! experiment code cannot silently rot: tiny-config `table1` tuning and a
+//! full `fig9` run (through the unified hardware-engine seam) execute on
+//! every `cargo test`, with no manifest and no trained artifacts.
+
+use tdpc::experiments::{fig9, table1};
+use tdpc::tm::{TestSet, TmModel};
+
+/// 2 classes × 4 clauses over 3 features, hand-wired so that class 0 wins
+/// iff x0 ∧ x1 and class 1 wins iff ¬x0 (same construction as the table1
+/// unit suite: labels = model predictions ⇒ "lossless" is achievable).
+fn tiny_model() -> TmModel {
+    TmModel::assemble(
+        "tiny".into(),
+        2,
+        3,
+        4,
+        vec![
+            vec![true, false, false, false, false, false], // +: x0
+            vec![false, false, false, false, false, true], // −: ~x2
+            vec![false, true, false, false, false, false], // +: x1
+            vec![false, false, false, false, false, false],
+            vec![false, false, false, true, false, false], // +: ~x0
+            vec![false, false, false, false, false, false],
+            vec![false, false, false, true, false, false], // +: ~x0
+            vec![false, false, true, false, false, false], // −: x2
+        ],
+        vec![1, -1, 1, -1, 1, -1, 1, -1],
+        vec![true, true, true, false, true, false, true, true],
+        100.0,
+    )
+}
+
+fn tiny_testset(model: &TmModel) -> TestSet {
+    let xs: Vec<Vec<bool>> = (0..8)
+        .map(|i| vec![i & 1 != 0, i & 2 != 0, i & 4 != 0])
+        .collect();
+    let ys: Vec<usize> = xs.iter().map(|x| model.predict(x)).collect();
+    TestSet { name: "tiny".into(), n_features: 3, x: xs, y: ys }
+}
+
+#[test]
+fn table1_tuning_smoke() {
+    let model = tiny_model();
+    let test = tiny_testset(&model);
+    let (hi, hw_acc, sw_acc) = table1::tune_hi_delay(&model, &test, 8, 5).unwrap();
+    assert_eq!(sw_acc, 1.0);
+    assert_eq!(hw_acc, 1.0, "tiny config must tune lossless");
+    assert!(hi.as_ps() >= 440);
+}
+
+#[test]
+fn fig9_runs_on_a_synthetic_model() {
+    // A synthetic iris-scale model exercises the whole fig9 path: engine
+    // list construction (flow + PDLs + arbiter for the async design),
+    // per-request replay of every architecture, analytic latency /
+    // resource / power rows, and table rendering.
+    let model = TmModel::synthetic("smoke", 3, 10, 16, 0.15, 41);
+    let mut rng = tdpc::util::SplitMix64::new(7);
+    let xs: Vec<Vec<bool>> =
+        (0..12).map(|_| (0..16).map(|_| rng.next_bool(0.5)).collect()).collect();
+    let ys: Vec<usize> = xs.iter().map(|x| model.predict(x)).collect();
+    let test = TestSet { name: "smoke".into(), n_features: 16, x: xs, y: ys };
+
+    let cfg = fig9::run_model("smoke", &model, &test, 10, 1).unwrap();
+    assert_eq!(cfg.measured.len(), 3, "one measured entry per architecture");
+    for (arch, mean, _std) in &cfg.measured {
+        assert!(*mean > 0.0, "{arch}: measured decision latency must be positive");
+    }
+    assert!(cfg.td_measured_mean_ns > 0.0);
+    assert!(cfg.td_worst_ns >= cfg.td_decision_mean_ns);
+    assert!(cfg.latency_reduction().is_finite());
+    assert!(cfg.power_reduction().is_finite());
+
+    // Rendering: three tables (9a/9b/9c), each with one row per arch for
+    // the single config, and the engine-seam note present.
+    let tables = fig9::Fig9Result { configs: vec![cfg] }.tables();
+    assert_eq!(tables.len(), 3);
+    assert_eq!(tables[0].rows.len(), 3, "latency rows: generic, fpt18, td-async");
+    assert_eq!(tables[1].rows.len(), 4, "resource rows include async21");
+    let md = tables[0].to_markdown();
+    assert!(md.contains("unified engine seam"), "{md}");
+}

@@ -1,0 +1,138 @@
+//! HwBackend functional-agreement property suite.
+//!
+//! The contract (documented in `crate::hw`): `HwBackend` predictions are
+//! the native packed forward pass, so `pred` is bit-identical to
+//! `NativeBackend` on every input; the *hardware winner* additionally
+//! matches except where the contract says it may not —
+//!
+//! * synchronous engines (adder, fpt18) resolve argmax ties to the lowest
+//!   class index, exactly like the functional path: bit-exact agreement
+//!   on every row, ties included;
+//! * the async engine resolves ties by an arbiter race, so it may
+//!   disagree on exact class-sum ties; and its PDL arrival physically
+//!   encodes `neg_count + sum`, so an *odd* clauses/class (which leaves
+//!   classes with ±1 different negative-clause counts under the
+//!   alternating convention) may additionally bias a margin-1 decision by
+//!   one vote. At margin ≥ 2 — and everywhere, for balanced shapes — the
+//!   async winner must equal the functional argmax.
+//!
+//! The engines run on an *ideal* (zero-variation) flow so the contract is
+//! deterministic; variation robustness is table1's delay-tuning concern,
+//! not this suite's. Exercised across word-boundary shapes: features
+//! f ∈ {63, 64, 65} and total clause counts c_total ∈ {63, 64, 65, 127}.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use tdpc::flow::FlowConfig;
+use tdpc::hw::HwArch;
+use tdpc::runtime::{BackendSpec, InferenceBackend, NativeBackend};
+use tdpc::tm::{PackedBatch, TmModel};
+use tdpc::util::{Ps, SplitMix64};
+
+/// (n_classes, clauses_per_class, n_features): c_total ∈ {63, 64, 65, 127},
+/// f ∈ {63, 64, 65} — every shape straddles a u64 word edge somewhere.
+const SHAPES: [(usize, usize, usize); 4] =
+    [(3, 21, 63), (2, 32, 64), (5, 13, 65), (1, 127, 64)];
+
+fn rows(n: usize, f: usize, seed: u64) -> Vec<Vec<bool>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| (0..f).map(|_| rng.next_bool(0.5)).collect()).collect()
+}
+
+fn hw_backend(arch: HwArch, model: Arc<TmModel>) -> Box<dyn InferenceBackend> {
+    let name = model.name.clone();
+    // Ideal flow: Table-I nominal delays, zero process variation — the
+    // margin contract below is then exact rather than statistical.
+    BackendSpec::TimeDomain { arch, flow: FlowConfig::ideal(Ps(380), Ps(618)), model: Some(model) }
+        .open(Path::new("/nonexistent"), &name)
+        .unwrap()
+}
+
+#[test]
+fn hw_backend_agrees_with_native_across_word_boundary_shapes() {
+    for (k, cpc, f) in SHAPES {
+        let model = Arc::new(TmModel::synthetic(
+            "agree",
+            k,
+            cpc,
+            f,
+            0.12,
+            (k * 1000 + cpc * 10 + f) as u64,
+        ));
+        let native = NativeBackend::new(model.clone());
+        let inputs = rows(24, f, 97);
+        let batch = PackedBatch::from_rows(&inputs).unwrap();
+        let reference = native.forward(&batch).unwrap();
+
+        for arch in HwArch::ALL {
+            let hw = hw_backend(arch, model.clone());
+            let out = hw.forward(&batch).unwrap();
+            // Functional results: the same packed forward pass, bit-exact
+            // (sums, fired bits, and predictions all identical).
+            assert_eq!(out, reference, "k={k} cpc={cpc} f={f} {arch:?}");
+
+            for i in 0..out.batch {
+                let o = hw.replay(&out, i).expect("hw backend always replays");
+                let sums = out.sums_row(i);
+                let top = *sums.iter().max().unwrap();
+                let tied = sums.iter().filter(|&&s| s == top).count() > 1;
+                let pred = out.pred[i] as usize;
+                match arch {
+                    // Sync engines: lowest-index tie-break = functional
+                    // argmax, so agreement is unconditional.
+                    HwArch::Adder | HwArch::Fpt18 => assert_eq!(
+                        o.winner, pred,
+                        "k={k} cpc={cpc} f={f} {arch:?} row {i} sums {sums:?}"
+                    ),
+                    // Async engine: exact except ties for balanced
+                    // polarity; odd clauses/class (unequal negative
+                    // counts) may bias a margin-1 race by one vote.
+                    HwArch::Async => {
+                        let balanced = cpc % 2 == 0 || k == 1;
+                        let margin2 =
+                            sums.iter().filter(|&&s| s >= top - 1).count() == 1;
+                        if balanced && !tied {
+                            assert_eq!(
+                                o.winner, pred,
+                                "k={k} cpc={cpc} f={f} row {i} sums {sums:?}"
+                            );
+                        } else if !balanced && margin2 {
+                            assert_eq!(
+                                o.winner, pred,
+                                "k={k} cpc={cpc} f={f} row {i} sums {sums:?} (margin ≥ 2)"
+                            );
+                        } else {
+                            assert!(
+                                sums[o.winner] >= top - 1,
+                                "k={k} cpc={cpc} f={f} row {i}: winner within one \
+                                 vote of the maximum, sums {sums:?}"
+                            );
+                        }
+                    }
+                }
+                assert!(
+                    o.decision_latency <= o.cycle_latency,
+                    "k={k} cpc={cpc} f={f} {arch:?} row {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn replay_is_deterministic_for_sync_engines() {
+    // Replaying the same forward output twice through a fresh sync
+    // backend yields identical outcomes (no hidden RNG on the sync path).
+    let (k, cpc, f) = SHAPES[1];
+    let model = Arc::new(TmModel::synthetic("agree", k, cpc, f, 0.12, 5));
+    let batch = PackedBatch::from_rows(&rows(8, f, 3)).unwrap();
+    for arch in [HwArch::Adder, HwArch::Fpt18] {
+        let a = hw_backend(arch, model.clone());
+        let b = hw_backend(arch, model.clone());
+        let out = a.forward(&batch).unwrap();
+        for i in 0..out.batch {
+            assert_eq!(a.replay(&out, i), b.replay(&out, i), "{arch:?} row {i}");
+        }
+    }
+}
