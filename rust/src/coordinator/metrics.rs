@@ -21,6 +21,9 @@ pub struct Metrics {
     batched_requests: u64,
     batch_exec_us_total: f64,
     hw_functional_mismatches: u64,
+    rejected_requests: u64,
+    shed_requests: u64,
+    failed_batches: u64,
 }
 
 /// Point-in-time copy for reporting.
@@ -46,6 +49,18 @@ pub struct MetricsSnapshot {
     /// Samples where the hardware argmax disagreed with the functional
     /// argmax (possible only on class-sum ties / metastability).
     pub hw_functional_mismatches: u64,
+    /// Requests refused at admission (the feature-width gate): each one
+    /// was answered with a typed `WidthMismatch` instead of joining a
+    /// batch.
+    pub rejected_requests: u64,
+    /// Requests shed by the bounded per-worker queue (typed `QueueFull`):
+    /// refused at submit under reject-new, or dropped from the worker's
+    /// pending queue under drop-oldest.
+    pub shed_requests: u64,
+    /// Backend forward calls that returned an error. A failed multi-row
+    /// batch counts once for the batch, plus once per row whose solo
+    /// retry also failed (those rows were answered with `BackendFailed`).
+    pub failed_batches: u64,
 }
 
 impl Metrics {
@@ -70,6 +85,21 @@ impl Metrics {
         self.batch_exec_us_total += exec_us;
     }
 
+    /// Count `n` requests refused at admission (feature-width gate).
+    pub fn record_rejected(&mut self, n: u64) {
+        self.rejected_requests += n;
+    }
+
+    /// Count `n` requests shed by the bounded-queue policy (`QueueFull`).
+    pub fn record_shed(&mut self, n: u64) {
+        self.shed_requests += n;
+    }
+
+    /// Count one backend forward call that returned an error.
+    pub fn record_failed_batch(&mut self) {
+        self.failed_batches += 1;
+    }
+
     /// Fold another worker's metrics into this one.
     pub fn merge(&mut self, other: &Metrics) {
         self.requests += other.requests;
@@ -83,6 +113,9 @@ impl Metrics {
         self.batched_requests += other.batched_requests;
         self.batch_exec_us_total += other.batch_exec_us_total;
         self.hw_functional_mismatches += other.hw_functional_mismatches;
+        self.rejected_requests += other.rejected_requests;
+        self.shed_requests += other.shed_requests;
+        self.failed_batches += other.failed_batches;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -108,6 +141,9 @@ impl Metrics {
             hw_p50: Ps::from_ns(crate::util::stats::percentile(hw, 50.0)),
             hw_p99: Ps::from_ns(crate::util::stats::percentile(hw, 99.0)),
             hw_functional_mismatches: self.hw_functional_mismatches,
+            rejected_requests: self.rejected_requests,
+            shed_requests: self.shed_requests,
+            failed_batches: self.failed_batches,
         }
     }
 }
@@ -149,6 +185,7 @@ mod tests {
         assert_eq!(s.hw_p50, Ps::from_ns(50.5));
         assert!(s.hw_p99 >= Ps(99_000) && s.hw_p99 <= Ps(100_000), "{:?}", s.hw_p99);
         assert_eq!(s.hw_functional_mismatches, 0);
+        assert_eq!((s.rejected_requests, s.shed_requests, s.failed_batches), (0, 0, 0));
     }
 
     #[test]
@@ -167,6 +204,30 @@ mod tests {
         assert_eq!(s.hw_mean_ns, 0.0);
         assert_eq!(s.hw_p50, Ps::ZERO);
         assert_eq!(s.hw_p99, Ps::ZERO);
+        assert_eq!(s.rejected_requests, 0);
+        assert_eq!(s.shed_requests, 0);
+        assert_eq!(s.failed_batches, 0);
+    }
+
+    #[test]
+    fn fail_soft_counters_record_and_merge() {
+        let mut w0 = Metrics::default();
+        let mut w1 = Metrics::default();
+        w0.record_rejected(1);
+        w0.record_shed(3);
+        w1.record_failed_batch();
+        w1.record_failed_batch();
+        w1.record_shed(2);
+        let mut agg = Metrics::default();
+        agg.merge(&w0);
+        agg.merge(&w1);
+        let s = agg.snapshot();
+        assert_eq!(s.rejected_requests, 1);
+        assert_eq!(s.shed_requests, 5);
+        assert_eq!(s.failed_batches, 2);
+        // Dropped work is visible without being double-counted as served.
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.batches, 0);
     }
 
     #[test]
@@ -185,6 +246,14 @@ mod tests {
         combined.record_batch(8, 300.0);
         w0.record_batch(32, 500.0);
         w1.record_batch(8, 300.0);
+        // Fail-soft counters split across workers the same way.
+        combined.record_rejected(1);
+        w0.record_rejected(1);
+        combined.record_shed(4);
+        w0.record_shed(1);
+        w1.record_shed(3);
+        combined.record_failed_batch();
+        w1.record_failed_batch();
 
         let mut agg = Metrics::default();
         agg.merge(&w0);
@@ -200,6 +269,9 @@ mod tests {
         assert_eq!(a.hw_p50, c.hw_p50, "hw p50 merges across workers");
         assert_eq!(a.hw_p99, c.hw_p99, "hw p99 merges across workers");
         assert_eq!(a.hw_functional_mismatches, c.hw_functional_mismatches);
+        assert_eq!(a.rejected_requests, c.rejected_requests);
+        assert_eq!(a.shed_requests, c.shed_requests);
+        assert_eq!(a.failed_batches, c.failed_batches);
     }
 
     #[test]

@@ -1,22 +1,35 @@
-//! L3 serving coordinator: request routing, dynamic batching, a
-//! multi-worker execution pool, metrics.
+//! L3 serving coordinator: admission control, request routing, dynamic
+//! batching, a multi-worker execution pool, fail-soft error delivery,
+//! metrics.
 //!
 //! The coordinator is the deployment shell around the paper's hardware:
-//! clients submit Booleanized samples, which are bit-packed once at
-//! ingestion (the packed words are the native currency of the whole
-//! request path — see `tm::bits`); a dispatcher routes each request to
-//! one of `n_workers` worker threads (round-robin or least-loaded); each
-//! worker runs its own dynamic batcher (size- and deadline-bounded,
-//! vLLM-router style) and *owns* its execution backend — constructed
-//! inside the worker thread from a [`BackendSpec`], because PJRT clients
-//! are not `Send` while native backends are. Simulated hardware is just
-//! another backend (`BackendSpec::TimeDomain` → `runtime::HwBackend`,
-//! one independently-seeded die per worker): the worker-side
+//! clients submit Booleanized samples, which are width-validated against
+//! the served model and bit-packed once at ingestion (the packed words
+//! are the native currency of the whole request path — see `tm::bits`);
+//! a dispatcher routes each request to one of `n_workers` worker threads
+//! (round-robin or least-loaded); each worker runs its own dynamic
+//! batcher (size- and deadline-bounded, vLLM-router style) and *owns*
+//! its execution backend — constructed inside the worker thread from a
+//! [`BackendSpec`], because PJRT clients are not `Send` while native
+//! backends are. Simulated hardware is just another backend
+//! (`BackendSpec::TimeDomain` → `runtime::HwBackend`, one
+//! independently-seeded die per worker): the worker-side
 //! [`ReplayPolicy`] decides which served rows are additionally replayed
 //! through the backend's hardware engine for on-chip decision latency,
-//! with no backend-specific plumbing anywhere in the pool. Everything is
-//! std-threads + channels (tokio is not in the offline crate set —
-//! DESIGN.md §7).
+//! with no backend-specific plumbing anywhere in the pool.
+//!
+//! **The fail-soft contract.** Every call to [`Coordinator::submit`]
+//! delivers exactly one [`Reply`] — `Ok(InferResponse)` or a typed
+//! [`InferError`] — so callers never diagnose a bare closed channel.
+//! Malformed rows are refused at ingestion (`WidthMismatch`) before they
+//! can join a batch, overload is shed against a bounded per-worker queue
+//! (`QueueFull`, policy [`ShedPolicy`]), and a backend failure on a
+//! batch falls back to per-row retry so one bad row cannot poison its
+//! `max_batch − 1` neighbors (`BackendFailed` goes only to the rows that
+//! actually fail). Dropped work is visible: see the
+//! `rejected_requests` / `shed_requests` / `failed_batches` counters in
+//! [`MetricsSnapshot`]. Everything is std-threads + channels (tokio is
+//! not in the offline crate set — DESIGN.md §7).
 
 pub mod batcher;
 pub mod metrics;
@@ -24,6 +37,8 @@ pub mod metrics;
 pub use batcher::{BatchPlan, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
 
+use std::num::NonZeroU32;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -31,19 +46,20 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::runtime::{BackendSpec, InferenceBackend, ModelRegistry};
+use crate::runtime::{BackendSpec, ForwardOutput, InferenceBackend, ModelRegistry};
 use crate::tm::{BitVec64, PackedBatch};
 use crate::util::Ps;
 
 /// One inference request. Features are bit-packed at ingestion
-/// ([`Coordinator::submit`] packs the caller's bools exactly once), so
-/// the batcher, workers, and backends all consume the packed form — batch
-/// assembly is a word memcpy per request.
+/// ([`Coordinator::submit`] validates the width and packs the caller's
+/// bools exactly once), so the batcher, workers, and backends all
+/// consume the packed form — batch assembly is a word memcpy per
+/// request.
 #[derive(Debug)]
 pub struct InferRequest {
     pub features: BitVec64,
-    /// Where to deliver the response.
-    pub reply: mpsc::Sender<InferResponse>,
+    /// Where to deliver the response (or the typed error).
+    pub reply: mpsc::Sender<Reply>,
     submitted: Instant,
 }
 
@@ -64,11 +80,57 @@ pub struct InferResponse {
     pub hw_winner: Option<usize>,
     /// End-to-end service latency through the coordinator (µs).
     pub service_latency_us: f64,
-    /// Logical batch this request was served in.
+    /// Logical batch this request was served in (1 when the row was
+    /// isolated by a per-row retry after its batch failed).
     pub batch_size: usize,
     /// Index of the worker that served this request.
     pub worker: usize,
 }
+
+/// Typed per-request failure, delivered on the caller's reply channel.
+///
+/// The serving contract is fail-soft: a request that cannot be served is
+/// answered with one of these instead of a silently dropped channel.
+/// [`Coordinator::infer_blocking`] converts them into `anyhow::Error`;
+/// the original variant stays recoverable via
+/// `err.downcast_ref::<InferError>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InferError {
+    /// The feature row's width does not match the served model. Rejected
+    /// at admission, before the row can join (and poison) a batch.
+    WidthMismatch { got: usize, expected: usize },
+    /// The chosen worker's bounded queue was full and the shed policy
+    /// dropped this request. `depth` is the worker's in-flight load when
+    /// the decision was made.
+    QueueFull { depth: usize, limit: usize },
+    /// The backend's forward pass failed for this row — even after the
+    /// batch it arrived in was split and retried row-by-row.
+    BackendFailed(String),
+    /// The pool (or its worker) went away before the request could be
+    /// queued.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::WidthMismatch { got, expected } => {
+                write!(f, "feature width {got} does not match model width {expected}")
+            }
+            InferError::QueueFull { depth, limit } => {
+                write!(f, "worker queue full ({depth} in flight, limit {limit}); request shed")
+            }
+            InferError::BackendFailed(msg) => write!(f, "backend forward pass failed: {msg}"),
+            InferError::ShuttingDown => write!(f, "coordinator is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+/// What a caller receives on its reply channel: exactly one per
+/// submitted request.
+pub type Reply = Result<InferResponse, InferError>;
 
 /// How the dispatcher assigns incoming requests to workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -92,6 +154,39 @@ impl DispatchPolicy {
     }
 }
 
+/// What happens when a worker is at [`CoordinatorConfig::queue_limit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShedPolicy {
+    /// Refuse the incoming request at admission: the new caller gets
+    /// [`InferError::QueueFull`]; queued work is untouched. When the
+    /// dispatcher's pick is full, the request first spills to the
+    /// least-loaded worker with room — only a fully saturated pool
+    /// rejects.
+    #[default]
+    RejectNew,
+    /// Admit the incoming request and have the worker shed its *stalest*
+    /// queued request instead, so the freshest work survives —
+    /// event-driven clients usually prefer a current answer over a stale
+    /// one. A drop-oldest queue at its limit also flushes immediately
+    /// (eviction keeps replacing the queue head, which would otherwise
+    /// reset the batcher's age deadline forever under sustained
+    /// overload).
+    DropOldest,
+}
+
+impl ShedPolicy {
+    /// Parse a CLI-style policy name: `reject-new`, `drop-oldest`.
+    pub fn from_name(name: &str) -> Result<ShedPolicy> {
+        match name {
+            "reject-new" => Ok(ShedPolicy::RejectNew),
+            "drop-oldest" => Ok(ShedPolicy::DropOldest),
+            other => anyhow::bail!(
+                "unknown shed policy {other:?} (expected: reject-new, drop-oldest)"
+            ),
+        }
+    }
+}
+
 /// Which served rows are replayed through the backend's hardware engine
 /// ([`InferenceBackend::replay`]) for on-chip timing. Works against any
 /// engine-carrying backend; backends without an engine simply report no
@@ -102,8 +197,9 @@ pub enum ReplayPolicy {
     #[default]
     Off,
     /// Replay one row in N (per worker), amortizing the simulation cost
-    /// while keeping the latency histograms populated.
-    Sample(u32),
+    /// while keeping the latency histograms populated. `NonZeroU32`
+    /// makes the divide-by-zero degenerate unrepresentable.
+    Sample(NonZeroU32),
     /// Replay every row (full per-request hardware telemetry).
     Full,
 }
@@ -119,7 +215,8 @@ impl ReplayPolicy {
                     let n: u32 = n.parse().with_context(|| {
                         format!("replay policy sample:<N> expects an integer, got {n:?}")
                     })?;
-                    ensure!(n >= 1, "replay policy sample:<N> needs N ≥ 1");
+                    let n = NonZeroU32::new(n)
+                        .ok_or_else(|| anyhow!("replay policy sample:<N> needs N ≥ 1"))?;
                     Ok(ReplayPolicy::Sample(n))
                 } else {
                     anyhow::bail!(
@@ -135,7 +232,7 @@ impl ReplayPolicy {
         match self {
             ReplayPolicy::Off => false,
             ReplayPolicy::Full => true,
-            ReplayPolicy::Sample(n) => seq % u64::from(n.max(1)) == 0,
+            ReplayPolicy::Sample(n) => seq % u64::from(n.get()) == 0,
         }
     }
 }
@@ -152,6 +249,14 @@ pub struct CoordinatorConfig {
     pub backend: BackendSpec,
     /// Which served rows replay through the backend's hardware engine.
     pub replay: ReplayPolicy,
+    /// Bound on each worker's in-flight load (requests dispatched to it
+    /// but not yet answered — the same `depth` gauge least-loaded
+    /// dispatch reads). `None` accepts without bound. With multiple
+    /// concurrent submitters the bound is approximate: admission reads
+    /// the gauge without a lock.
+    pub queue_limit: Option<usize>,
+    /// What to shed when a worker is at `queue_limit`.
+    pub shed: ShedPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -162,6 +267,8 @@ impl Default for CoordinatorConfig {
             dispatch: DispatchPolicy::RoundRobin,
             backend: BackendSpec::default(),
             replay: ReplayPolicy::default(),
+            queue_limit: None,
+            shed: ShedPolicy::default(),
         }
     }
 }
@@ -175,7 +282,8 @@ struct WorkItem {
 /// handle.
 struct WorkerHandle {
     tx: Option<mpsc::Sender<WorkItem>>,
-    /// Requests dispatched but not yet answered (least-loaded gauge).
+    /// Requests dispatched but not yet answered (least-loaded gauge and
+    /// admission-control bound).
     depth: Arc<AtomicUsize>,
     metrics: Arc<Mutex<Metrics>>,
     join: Option<std::thread::JoinHandle<()>>,
@@ -187,6 +295,18 @@ pub struct Coordinator {
     next_id: AtomicU64,
     rr: AtomicUsize,
     dispatch: DispatchPolicy,
+    /// Feature width of the served model, cached at startup so
+    /// [`Coordinator::submit`] can gate admission without a backend
+    /// round-trip.
+    n_features: usize,
+    queue_limit: Option<usize>,
+    shed: ShedPolicy,
+    /// Admission-time counters (width rejections, reject-new sheds).
+    /// Lock-free on purpose: the fast-reject path must not serialize
+    /// overloaded client threads on a mutex. Folded into
+    /// [`Coordinator::metrics`] at snapshot time.
+    admission_rejected: AtomicU64,
+    admission_shed: AtomicU64,
     shutdown: Arc<AtomicBool>,
     pub model: String,
 }
@@ -199,11 +319,14 @@ impl Coordinator {
     /// are, but per-worker ownership keeps the paths uniform — and gives
     /// time-domain backends one independently-seeded simulated die per
     /// worker via [`BackendSpec::for_worker`]). Startup errors from every
-    /// worker are reported back before `start` returns.
+    /// worker are reported back before `start` returns; on success each
+    /// worker also reports the model's feature width, which `start`
+    /// caches for the admission-control width gate in
+    /// [`Coordinator::submit`].
     pub fn start(root: PathBuf, model: &str, cfg: CoordinatorConfig) -> Result<Coordinator> {
         ensure!(cfg.n_workers >= 1, "coordinator needs at least one worker");
         let shutdown = Arc::new(AtomicBool::new(false));
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
         let mut workers = Vec::with_capacity(cfg.n_workers);
         for w in 0..cfg.n_workers {
             let (tx, rx) = mpsc::channel::<WorkItem>();
@@ -214,6 +337,8 @@ impl Coordinator {
                 let model = model.to_string();
                 let spec = cfg.backend.clone().for_worker(w);
                 let batcher = cfg.batcher;
+                let queue_limit = cfg.queue_limit;
+                let shed = cfg.shed;
                 let replay = cfg.replay;
                 let depth = depth.clone();
                 let metrics = metrics.clone();
@@ -232,12 +357,14 @@ impl Coordinator {
                                 return;
                             }
                         };
-                        let _ = ready_tx.send(Ok(()));
+                        let _ = ready_tx.send(Ok(backend.n_features()));
                         drop(ready_tx);
                         worker_loop(
                             w,
                             backend.as_ref(),
                             batcher,
+                            queue_limit,
+                            shed,
                             replay,
                             rx,
                             metrics,
@@ -253,32 +380,47 @@ impl Coordinator {
         // Collect one readiness report per worker before declaring the
         // pool up.
         let mut startup_err: Option<anyhow::Error> = None;
+        let mut n_features: Option<usize> = None;
         for _ in 0..cfg.n_workers {
             let report = ready_rx
                 .recv()
                 .unwrap_or_else(|_| Err(anyhow!("coordinator worker died during startup")));
-            if let Err(e) = report {
-                startup_err.get_or_insert(e);
-            }
-        }
-        if let Some(e) = startup_err {
-            shutdown.store(true, Ordering::SeqCst);
-            for w in &mut workers {
-                w.tx = None;
-            }
-            for w in &mut workers {
-                if let Some(h) = w.join.take() {
-                    let _ = h.join();
+            match report {
+                Ok(width) => {
+                    n_features.get_or_insert(width);
+                }
+                Err(e) => {
+                    startup_err.get_or_insert(e);
                 }
             }
-            return Err(e).context("coordinator startup failed");
         }
+        let n_features = match (startup_err, n_features) {
+            (None, Some(width)) => width,
+            (err, _) => {
+                shutdown.store(true, Ordering::SeqCst);
+                for h in &mut workers {
+                    h.tx = None;
+                }
+                for h in &mut workers {
+                    if let Some(j) = h.join.take() {
+                        let _ = j.join();
+                    }
+                }
+                let e = err.unwrap_or_else(|| anyhow!("no coordinator worker reported ready"));
+                return Err(e).context("coordinator startup failed");
+            }
+        };
 
         Ok(Coordinator {
             workers,
             next_id: AtomicU64::new(0),
             rr: AtomicUsize::new(0),
             dispatch: cfg.dispatch,
+            n_features,
+            queue_limit: cfg.queue_limit,
+            shed: cfg.shed,
+            admission_rejected: AtomicU64::new(0),
+            admission_shed: AtomicU64::new(0),
             shutdown,
             model: model.to_string(),
         })
@@ -286,6 +428,12 @@ impl Coordinator {
 
     pub fn n_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Feature width of the served model — the width
+    /// [`Coordinator::submit`] admits against.
+    pub fn n_features(&self) -> usize {
+        self.n_features
     }
 
     fn pick_worker(&self) -> usize {
@@ -303,19 +451,53 @@ impl Coordinator {
         }
     }
 
-    /// Submit asynchronously; the response arrives on `reply`.
+    /// Submit asynchronously. Exactly one [`Reply`] is delivered on
+    /// `reply` for every call: a response, or a typed [`InferError`]
+    /// when the request is refused at admission (width gate, bounded
+    /// queue), shed, or fails in the backend. Returns the request id.
     ///
-    /// The Boolean feature row is bit-packed here, once, at ingestion —
-    /// everything downstream (dispatch, batching, the backend forward
-    /// pass) works on `u64` words.
-    pub fn submit(&self, features: &[bool], reply: mpsc::Sender<InferResponse>) -> Result<u64> {
+    /// The Boolean feature row is validated against the served model's
+    /// width *here*, at ingestion — a malformed row is answered with
+    /// [`InferError::WidthMismatch`] before it can join (and poison) a
+    /// batch — then bit-packed once, so everything downstream (dispatch,
+    /// batching, the backend forward pass) works on `u64` words.
+    pub fn submit(&self, features: &[bool], reply: mpsc::Sender<Reply>) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let w = self.pick_worker();
+        if features.len() != self.n_features {
+            self.admission_rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Err(InferError::WidthMismatch {
+                got: features.len(),
+                expected: self.n_features,
+            }));
+            return id;
+        }
+        let mut w = self.pick_worker();
+        if let (ShedPolicy::RejectNew, Some(limit)) = (self.shed, self.queue_limit) {
+            if self.workers[w].depth.load(Ordering::Relaxed) >= limit {
+                // The dispatcher's pick is full. Spill to the least-loaded
+                // worker with room before shedding, so a pool with idle
+                // capacity never rejects (round-robin can land on a full
+                // worker while its neighbors sit empty).
+                let depths = self.workers.iter().map(|h| h.depth.load(Ordering::Relaxed));
+                match spill_target(depths, limit) {
+                    Some(alt) => w = alt,
+                    None => {
+                        // An admission-time event: counted lock-free on
+                        // the coordinator, keeping overloaded client
+                        // threads off every metrics mutex.
+                        let depth = self.workers[w].depth.load(Ordering::Relaxed);
+                        self.admission_shed.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply.send(Err(InferError::QueueFull { depth, limit }));
+                        return id;
+                    }
+                }
+            }
+        }
         let worker = &self.workers[w];
-        let tx = worker
-            .tx
-            .as_ref()
-            .ok_or_else(|| anyhow!("coordinator is shutting down"))?;
+        let Some(tx) = worker.tx.as_ref() else {
+            let _ = reply.send(Err(InferError::ShuttingDown));
+            return id;
+        };
         worker.depth.fetch_add(1, Ordering::Relaxed);
         let item = WorkItem {
             id,
@@ -325,27 +507,43 @@ impl Coordinator {
                 submitted: Instant::now(),
             },
         };
-        if tx.send(item).is_err() {
+        if let Err(mpsc::SendError(item)) = tx.send(item) {
+            // The worker died; the item comes back, so its caller still
+            // gets a typed answer instead of a dead channel.
             worker.depth.fetch_sub(1, Ordering::Relaxed);
-            return Err(anyhow!("coordinator worker {w} has shut down"));
+            let _ = item.req.reply.send(Err(InferError::ShuttingDown));
         }
-        Ok(id)
+        id
     }
 
-    /// Convenience blocking call.
+    /// Convenience blocking call. Rejected, shed, and backend-failed
+    /// requests surface as a typed [`InferError`] (recoverable via
+    /// `err.downcast_ref::<InferError>()`), never a bare closed-channel
+    /// error.
     pub fn infer_blocking(&self, features: &[bool]) -> Result<InferResponse> {
         let (tx, rx) = mpsc::channel();
-        self.submit(features, tx)?;
-        rx.recv().context("coordinator dropped the reply channel")
+        self.submit(features, tx);
+        let reply = rx.recv().context("coordinator dropped the reply channel")?;
+        reply.map_err(anyhow::Error::from)
     }
 
-    /// Aggregated metrics across all workers (latency histograms merge,
-    /// counters sum).
+    /// Aggregated metrics across all workers plus admission-time events
+    /// (latency histograms merge, counters sum). Admission-time events —
+    /// width rejections and reject-new sheds — happen before any worker
+    /// is involved and are counted lock-free on the coordinator, so they
+    /// appear in this aggregate but not in
+    /// [`Coordinator::worker_metrics`]; drop-oldest sheds and batch
+    /// failures are worker-side and appear in both. (The worker-side
+    /// assembly guard in `execute_batch` — unreachable through the
+    /// public API — attributes its rejection to the worker that caught
+    /// it.)
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut agg = Metrics::default();
         for w in &self.workers {
             agg.merge(&w.metrics.lock().unwrap());
         }
+        agg.record_rejected(self.admission_rejected.load(Ordering::Relaxed));
+        agg.record_shed(self.admission_shed.load(Ordering::Relaxed));
         agg.snapshot()
     }
 
@@ -383,11 +581,69 @@ impl Drop for Coordinator {
     }
 }
 
+/// Reject-new admission spill: when the dispatcher's pick is at the
+/// queue limit, the least-loaded worker with room (ties → lowest index)
+/// should take the request instead; `None` means the whole pool is
+/// saturated and the request must be shed. Pure decision logic.
+fn spill_target<I: Iterator<Item = usize>>(depths: I, limit: usize) -> Option<usize> {
+    depths
+        .enumerate()
+        .filter(|&(_, d)| d < limit)
+        .min_by_key(|&(_, d)| d)
+        .map(|(i, _)| i)
+}
+
+/// Greedily drain ready channel items into `pending`, never growing it
+/// past `max_batch`. Regression guard: the old loop pushed *before*
+/// checking the bound, so a queue the `recv_timeout` arm had already
+/// filled to `max_batch` could over-fill on the next pass.
+fn drain_ready(rx: &mpsc::Receiver<WorkItem>, pending: &mut Vec<WorkItem>, max_batch: usize) {
+    while pending.len() < max_batch {
+        match rx.try_recv() {
+            Ok(item) => pending.push(item),
+            Err(_) => break,
+        }
+    }
+}
+
+/// Drop-oldest shedding: trim `pending` to its freshest `limit` rows,
+/// answering each evicted (stalest-first) request with
+/// [`InferError::QueueFull`] and releasing its load. Trims by the
+/// *local* queue length, never the global gauge: the gauge counts
+/// channel backlog too, and shedding against it would evict rows the
+/// very flush that follows is about to serve.
+fn shed_to_limit(
+    limit: usize,
+    pending: &mut Vec<WorkItem>,
+    depth: &AtomicUsize,
+    metrics: &Mutex<Metrics>,
+) {
+    let overflow = pending.len().saturating_sub(limit);
+    if overflow == 0 {
+        return;
+    }
+    // One O(n) drain of the stalest prefix, not per-item remove(0) —
+    // this runs on the overload hot path against a just-drained backlog.
+    let mut shed: Vec<(WorkItem, usize)> = Vec::with_capacity(overflow);
+    for item in pending.drain(..overflow) {
+        let observed = depth.fetch_sub(1, Ordering::Relaxed);
+        shed.push((item, observed));
+    }
+    // Count before replying (metrics are complete the moment a caller
+    // sees its answer), then deliver the typed sheds.
+    metrics.lock().unwrap().record_shed(shed.len() as u64);
+    for (item, observed) in shed {
+        let _ = item.req.reply.send(Err(InferError::QueueFull { depth: observed, limit }));
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker: usize,
     backend: &dyn InferenceBackend,
     cfg: BatcherConfig,
+    queue_limit: Option<usize>,
+    shed: ShedPolicy,
     replay: ReplayPolicy,
     rx: mpsc::Receiver<WorkItem>,
     metrics: Arc<Mutex<Metrics>>,
@@ -403,17 +659,29 @@ fn worker_loop(
         // from *submission*, so leaving ready work in the channel would
         // make every item individually overdue and collapse batching.
         let plan = loop {
-            while let Ok(item) = rx.try_recv() {
-                pending.push(item);
-                if pending.len() >= cfg.max_batch {
-                    break;
+            drain_ready(&rx, &mut pending, cfg.max_batch);
+            if let (ShedPolicy::DropOldest, Some(limit)) = (shed, queue_limit) {
+                if depth.load(Ordering::Relaxed) > limit {
+                    // Over the bound. The channel backlog has to come out
+                    // either way — to be shed or served — so drain it
+                    // all, keep the freshest `limit` rows, shed the rest,
+                    // and flush *now*: eviction keeps replacing the head,
+                    // so waiting on the head-age deadline would starve
+                    // serving under sustained overload, and at the limit
+                    // there is nothing to gain by batching longer.
+                    drain_ready(&rx, &mut pending, usize::MAX);
+                    shed_to_limit(limit, &mut pending, &depth, &metrics);
+                    if !pending.is_empty() {
+                        break BatchPlan { take: pending.len().min(cfg.max_batch) };
+                    }
                 }
             }
             if let Some(plan) = cfg.plan(pending.len(), pending.first().map(|w| w.req.submitted)) {
                 break plan;
             }
-            let timeout = cfg.poll_interval();
-            match rx.recv_timeout(timeout) {
+            match rx.recv_timeout(cfg.poll_interval()) {
+                // `plan` returned None, so pending is below max_batch and
+                // this push cannot over-fill it.
                 Ok(item) => pending.push(item),
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     if pending.is_empty() && shutdown.load(Ordering::SeqCst) {
@@ -430,97 +698,201 @@ fn worker_loop(
             }
         };
 
-        let mut batch: Vec<WorkItem> = pending.drain(..plan.take.min(pending.len())).collect();
+        let batch: Vec<WorkItem> = pending.drain(..plan.take.min(pending.len())).collect();
         if batch.is_empty() {
             continue;
         }
-        if let Err(e) = execute_batch(
-            worker,
-            backend,
-            &mut batch,
-            replay,
-            &mut replay_seq,
-            &metrics,
-            &depth,
-        ) {
-            log::error!("worker {worker}: batch execution failed: {e:#}");
-            // Drop the batch; reply channels close and callers see an error.
-        }
+        execute_batch(worker, backend, batch, replay, &mut replay_seq, &metrics, &depth);
     }
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Execute one batch fail-soft, delivering exactly one [`Reply`] per
+/// item. Failure isolation, in order:
+///
+/// 1. a row that fails packed assembly (unreachable through the public
+///    API — [`Coordinator::submit`] gates width at ingestion) is
+///    answered with [`InferError::WidthMismatch`] and excluded instead
+///    of poisoning its neighbors;
+/// 2. a failed multi-row forward pass falls back to per-row retry, so
+///    one bad row costs only itself — every healthy neighbor is still
+///    served — and each caller whose row really cannot be served gets a
+///    typed [`InferError::BackendFailed`];
+/// 3. metrics accumulate into a local delta and fold into the worker's
+///    [`Metrics`] under one lock per batch (not one per row), before any
+///    reply goes out so aggregate counters are complete the moment a
+///    client has seen the last response (no settle race).
 fn execute_batch(
     worker: usize,
     backend: &dyn InferenceBackend,
-    batch: &mut [WorkItem],
+    batch: Vec<WorkItem>,
     replay: ReplayPolicy,
     replay_seq: &mut u64,
-    metrics: &Arc<Mutex<Metrics>>,
+    metrics: &Mutex<Metrics>,
     depth: &AtomicUsize,
-) -> Result<()> {
-    // Assemble the packed execution batch: requests were packed at
-    // ingestion, so each row is a word memcpy. A width-mismatched request
-    // fails assembly and drops the whole batch, exactly like a forward
-    // error (reply channels close and callers see the disconnect).
-    let rows = (|| -> Result<PackedBatch> {
-        let mut rows = PackedBatch::new(backend.n_features());
-        for w in batch.iter_mut() {
-            rows.push_bitvec(&std::mem::take(&mut w.req.features))?;
-        }
-        Ok(rows)
-    })();
-    let t0 = Instant::now();
-    let out = match rows.and_then(|rows| backend.forward(&rows)) {
-        Ok(out) => out,
-        Err(e) => {
-            // The whole batch is dropped: release its load in one go.
-            depth.fetch_sub(batch.len(), Ordering::Relaxed);
-            return Err(e);
-        }
-    };
-    // Record the batch before any reply goes out, so metrics are complete
-    // the moment a client has seen the last response (no settle race).
-    metrics
-        .lock()
-        .unwrap()
-        .record_batch(batch.len(), t0.elapsed().as_secs_f64() * 1e6);
-    for (i, item) in batch.iter().enumerate() {
-        // The replay policy is engine-agnostic: any backend carrying a
-        // hardware engine answers `replay`; all others return None.
-        let seq = *replay_seq;
-        *replay_seq += 1;
-        let (hw_latency, hw_winner) = if replay.take(seq) {
-            match backend.replay(&out, i) {
-                Some(o) => (Some(o.decision_latency), Some(o.winner)),
-                None => (None, None),
-            }
+) {
+    let expected = backend.n_features();
+    let mut rows = PackedBatch::new(expected);
+    let mut items: Vec<WorkItem> = Vec::with_capacity(batch.len());
+    let mut delta = Metrics::default();
+    let mut outbox: Vec<(WorkItem, Reply)> = Vec::with_capacity(batch.len());
+    for mut item in batch {
+        let features = std::mem::take(&mut item.req.features);
+        let got = features.len();
+        if rows.push_bitvec(&features).is_ok() {
+            items.push(item);
         } else {
-            (None, None)
-        };
-        let service_us = item.req.submitted.elapsed().as_secs_f64() * 1e6;
-        let resp = InferResponse {
-            request_id: item.id,
-            pred: out.pred[i] as usize,
-            sums: out.sums_row(i).to_vec(),
-            hw_decision_latency: hw_latency,
-            hw_winner,
-            service_latency_us: service_us,
-            batch_size: batch.len(),
-            worker,
-        };
-        metrics.lock().unwrap().record(&resp);
+            delta.record_rejected(1);
+            outbox.push((item, Err(InferError::WidthMismatch { got, expected })));
+        }
+    }
+
+    if !items.is_empty() {
+        let n = items.len();
+        let t0 = Instant::now();
+        match forward_caught(backend, &rows) {
+            Ok(out) => {
+                delta.record_batch(n, t0.elapsed().as_secs_f64() * 1e6);
+                for (i, item) in items.into_iter().enumerate() {
+                    let resp =
+                        make_response(worker, backend, &out, i, n, replay, replay_seq, &item);
+                    delta.record(&resp);
+                    outbox.push((item, Ok(resp)));
+                }
+            }
+            Err(e) if n == 1 => {
+                delta.record_failed_batch();
+                log::warn!("worker {worker}: forward failed for a single-row batch: {e:#}");
+                let item = items.pop().expect("n == 1");
+                outbox.push((item, Err(InferError::BackendFailed(format!("{e:#}")))));
+            }
+            Err(e) => {
+                // Fail-soft: split the batch and retry each row alone, so
+                // one poisonous row costs only itself.
+                delta.record_failed_batch();
+                log::warn!(
+                    "worker {worker}: forward failed for a {n}-row batch ({e:#}); \
+                     retrying rows individually"
+                );
+                for (i, item) in items.into_iter().enumerate() {
+                    let mut single = PackedBatch::new(expected);
+                    single.push_words(rows.row(i));
+                    let t1 = Instant::now();
+                    match forward_caught(backend, &single) {
+                        Ok(out) => {
+                            delta.record_batch(1, t1.elapsed().as_secs_f64() * 1e6);
+                            let resp = make_response(
+                                worker,
+                                backend,
+                                &out,
+                                0,
+                                1,
+                                replay,
+                                replay_seq,
+                                &item,
+                            );
+                            delta.record(&resp);
+                            outbox.push((item, Ok(resp)));
+                        }
+                        Err(re) => {
+                            delta.record_failed_batch();
+                            let err = InferError::BackendFailed(format!("{re:#}"));
+                            outbox.push((item, Err(err)));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // One metrics lock per batch, taken before any reply goes out so
+    // aggregate counters are complete the moment a client has seen the
+    // last response.
+    metrics.lock().unwrap().merge(&delta);
+    for (item, reply) in outbox {
         // Release the load gauge *before* replying so a blocking caller's
         // next submit observes the decrement (least-loaded determinism).
         depth.fetch_sub(1, Ordering::Relaxed);
-        let _ = item.req.reply.send(resp); // receiver may have gone away
+        let _ = item.req.reply.send(reply); // receiver may have gone away
     }
-    Ok(())
+}
+
+/// Run the backend forward pass with panic containment: a panicking
+/// backend becomes an ordinary error instead of an unwinding worker
+/// thread. An unwind here would drop the reply sender of every queued
+/// request — exactly the bare closed-channel failure the typed
+/// [`Reply`] contract forbids.
+fn forward_caught(backend: &dyn InferenceBackend, rows: &PackedBatch) -> Result<ForwardOutput> {
+    match catch_unwind(AssertUnwindSafe(|| backend.forward(rows))) {
+        Ok(res) => res,
+        Err(panic) => Err(anyhow!("backend forward panicked: {}", panic_message(&panic))),
+    }
+}
+
+/// Best-effort human-readable payload of a caught panic.
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Build the reply for `row` of a forward output: replay-policy-driven
+/// hardware timing, service latency stamped at delivery time.
+#[allow(clippy::too_many_arguments)]
+fn make_response(
+    worker: usize,
+    backend: &dyn InferenceBackend,
+    out: &ForwardOutput,
+    row: usize,
+    batch_size: usize,
+    replay: ReplayPolicy,
+    replay_seq: &mut u64,
+    item: &WorkItem,
+) -> InferResponse {
+    // The replay policy is engine-agnostic: any backend carrying a
+    // hardware engine answers `replay`; all others return None. Replay
+    // is telemetry, so a panicking engine degrades to "no hardware
+    // fields" rather than killing the worker (and every queued reply
+    // sender) mid-batch.
+    let seq = *replay_seq;
+    *replay_seq += 1;
+    let (hw_latency, hw_winner) = if replay.take(seq) {
+        match catch_unwind(AssertUnwindSafe(|| backend.replay(out, row))) {
+            Ok(Some(o)) => (Some(o.decision_latency), Some(o.winner)),
+            Ok(None) => (None, None),
+            Err(panic) => {
+                log::warn!(
+                    "worker {worker}: hardware replay panicked: {}",
+                    panic_message(&panic)
+                );
+                (None, None)
+            }
+        }
+    } else {
+        (None, None)
+    };
+    InferResponse {
+        request_id: item.id,
+        pred: out.pred[row] as usize,
+        sums: out.sums_row(row).to_vec(),
+        hw_decision_latency: hw_latency,
+        hw_winner,
+        service_latency_us: item.req.submitted.elapsed().as_secs_f64() * 1e6,
+        batch_size,
+        worker,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn nz(n: u32) -> NonZeroU32 {
+        NonZeroU32::new(n).unwrap()
+    }
 
     #[test]
     fn replay_policy_parsing() {
@@ -528,7 +900,7 @@ mod tests {
         assert_eq!(ReplayPolicy::from_name("full").unwrap(), ReplayPolicy::Full);
         assert_eq!(
             ReplayPolicy::from_name("sample:8").unwrap(),
-            ReplayPolicy::Sample(8)
+            ReplayPolicy::Sample(nz(8))
         );
         for bad in ["sample:0", "sample:x", "some", "sample"] {
             let err = ReplayPolicy::from_name(bad);
@@ -542,11 +914,124 @@ mod tests {
     fn replay_policy_take_schedule() {
         assert!(!ReplayPolicy::Off.take(0));
         assert!(ReplayPolicy::Full.take(17));
-        let s = ReplayPolicy::Sample(4);
+        let s = ReplayPolicy::Sample(nz(4));
         let taken: Vec<u64> = (0..12).filter(|&i| s.take(i)).collect();
         assert_eq!(taken, vec![0, 4, 8]);
-        // A zero sample rate (only constructible directly) degrades to
-        // every-row rather than dividing by zero.
-        assert!(ReplayPolicy::Sample(0).take(5));
+        // `Sample(NonZeroU32)` makes the old divide-by-zero degenerate
+        // unrepresentable; a 1-in-1 sample is simply every row.
+        assert!(ReplayPolicy::Sample(nz(1)).take(5));
+    }
+
+    #[test]
+    fn shed_policy_parsing() {
+        assert_eq!(ShedPolicy::from_name("reject-new").unwrap(), ShedPolicy::RejectNew);
+        assert_eq!(ShedPolicy::from_name("drop-oldest").unwrap(), ShedPolicy::DropOldest);
+        let msg = ShedPolicy::from_name("newest").unwrap_err().to_string();
+        assert!(msg.contains("reject-new") && msg.contains("drop-oldest"));
+        assert_eq!(ShedPolicy::default(), ShedPolicy::RejectNew);
+    }
+
+    #[test]
+    fn spill_target_picks_least_loaded_with_room() {
+        assert_eq!(spill_target([4, 2, 3].into_iter(), 4), Some(1));
+        assert_eq!(spill_target([4, 4, 1].into_iter(), 4), Some(2));
+        // Ties break to the lowest index (min_by_key returns the first
+        // minimum).
+        assert_eq!(spill_target([2, 0, 0].into_iter(), 4), Some(1));
+        // Saturated pool: nobody has room, the request must be shed.
+        assert_eq!(spill_target([4, 5, 4].into_iter(), 4), None);
+        assert_eq!(spill_target([0].into_iter(), 0), None);
+    }
+
+    #[test]
+    fn infer_error_messages_are_actionable() {
+        fn is_error<E: std::error::Error>(_: &E) {}
+        let e = InferError::WidthMismatch { got: 17, expected: 16 };
+        is_error(&e);
+        assert!(e.to_string().contains("17") && e.to_string().contains("16"));
+        let e = InferError::QueueFull { depth: 9, limit: 8 };
+        assert!(e.to_string().contains('9') && e.to_string().contains('8'));
+        assert!(InferError::BackendFailed("boom".into()).to_string().contains("boom"));
+        assert!(InferError::ShuttingDown.to_string().contains("shutting down"));
+    }
+
+    /// Regression for the worker drain over-fill: `pending` already at
+    /// `max_batch` (the `recv_timeout` arm filled it) plus a non-empty
+    /// channel used to grow `pending` to `max_batch + 1`, because the old
+    /// loop pushed before checking the bound.
+    #[test]
+    fn drain_ready_never_grows_pending_past_max_batch() {
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let (reply_tx, _reply_rx) = mpsc::channel::<Reply>();
+        let item = |id: u64| WorkItem {
+            id,
+            req: InferRequest {
+                features: BitVec64::from_bools(&[true, false, true, false]),
+                reply: reply_tx.clone(),
+                submitted: Instant::now(),
+            },
+        };
+        let max_batch = 4;
+        let mut pending: Vec<WorkItem> = (0..max_batch as u64).map(item).collect();
+        for id in 10..13 {
+            tx.send(item(id)).unwrap();
+        }
+        drain_ready(&rx, &mut pending, max_batch);
+        assert_eq!(pending.len(), max_batch, "pending must never exceed max_batch");
+
+        // The queued items stayed in the channel and drain on the next
+        // pass, oldest first.
+        pending.clear();
+        drain_ready(&rx, &mut pending, max_batch);
+        assert_eq!(pending.len(), 3);
+        assert_eq!(pending[0].id, 10);
+
+        // A partial queue fills up to the bound and no further.
+        for id in 20..30 {
+            tx.send(item(id)).unwrap();
+        }
+        drain_ready(&rx, &mut pending, max_batch);
+        assert_eq!(pending.len(), max_batch);
+        assert_eq!(pending[3].id, 20);
+    }
+
+    /// Drop-oldest shedding trims the *local* queue to its freshest
+    /// `limit` rows — it must not consult the global gauge, which also
+    /// counts channel backlog (shedding against that starves serving
+    /// under sustained overload).
+    #[test]
+    fn shed_to_limit_evicts_stalest_keeps_freshest() {
+        let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+        // Gauge above pending.len(): two more requests still in the
+        // channel backlog. Only the local overflow (5 − 2 = 3) sheds.
+        let depth = AtomicUsize::new(7);
+        let metrics = Mutex::new(Metrics::default());
+        let mut pending: Vec<WorkItem> = (0..5u64)
+            .map(|id| WorkItem {
+                id,
+                req: InferRequest {
+                    features: BitVec64::from_bools(&[true; 4]),
+                    reply: reply_tx.clone(),
+                    submitted: Instant::now(),
+                },
+            })
+            .collect();
+        shed_to_limit(2, &mut pending, &depth, &metrics);
+        assert_eq!(pending.len(), 2, "freshest work survives");
+        assert_eq!(pending[0].id, 3);
+        assert_eq!(depth.load(Ordering::Relaxed), 4, "3 shed, backlog untouched");
+        assert_eq!(metrics.lock().unwrap().snapshot().shed_requests, 3);
+        for _ in 0..3 {
+            match reply_rx.try_recv().unwrap() {
+                Err(InferError::QueueFull { limit: 2, .. }) => {}
+                other => panic!("expected QueueFull, got {other:?}"),
+            }
+        }
+        assert!(reply_rx.try_recv().is_err(), "survivors must not be answered");
+
+        // At or under the limit nothing sheds.
+        shed_to_limit(2, &mut pending, &depth, &metrics);
+        assert_eq!(pending.len(), 2);
+        assert_eq!(metrics.lock().unwrap().snapshot().shed_requests, 3);
     }
 }

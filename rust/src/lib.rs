@@ -31,7 +31,10 @@
 //! benches on every change (`.github/workflows/ci.yml`). The
 //! [`coordinator`] runs a pool of `n_workers ≥ 1` worker threads, each
 //! owning its backend (PJRT clients are not `Send`), with round-robin or
-//! least-loaded dispatch, per-worker dynamic batching, and metrics that
+//! least-loaded dispatch, per-worker dynamic batching, width-gated
+//! admission over bounded queues with typed fail-soft errors
+//! ([`coordinator::InferError`]: reject / shed / per-row-retried backend
+//! failure, never a silently dropped reply channel), and metrics that
 //! aggregate across the pool.
 //!
 //! # The hardware-engine seam

@@ -7,7 +7,9 @@
 //!   serve     — start the multi-worker batching coordinator and drive a
 //!               load test (--workers N, --dispatch round-robin|least-loaded,
 //!               --backend hw:<arch> for simulated-hardware serving with
-//!               --hw-replay off|sample:N|full row replay)
+//!               --hw-replay off|sample:N|full row replay; --queue-limit N
+//!               bounds each worker's in-flight load, 0 = unbounded, with
+//!               --shed reject-new|drop-oldest deciding what QueueFull drops)
 //!   flow      — run the FPGA implementation flow and print the skew audit
 //!   table1 / fig6 / fig9 / fig10 / fig11 / fig12 — regenerate the paper's
 //!               tables/figures (markdown to stdout, CSV via --csv DIR)
@@ -21,7 +23,7 @@ use anyhow::{bail, Context, Result};
 
 use tdpc::config::Args;
 use tdpc::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy, ReplayPolicy,
+    BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy, ReplayPolicy, ShedPolicy,
 };
 use tdpc::experiments::{ablation, fig10, fig11, fig12, fig6, fig9, table1, Table};
 use tdpc::fabric::Device;
@@ -149,7 +151,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(&[
         "artifacts", "model", "requests", "batch", "deadline-us", "workers", "dispatch",
-        "backend", "hw-replay", "csv",
+        "backend", "hw-replay", "queue-limit", "shed", "csv",
     ])?;
     let model = args.opt_or("model", "mnist_c100");
     let n_requests = args.opt_usize("requests", 500)?;
@@ -158,6 +160,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // (one independently-seeded die per worker); `--hw-replay` picks which
     // rows pay for timing replay. The default `full` is a no-op on
     // engine-less backends, so it only matters with hw:<arch>.
+    // `--queue-limit 0` (the default) accepts without bound; any other N
+    // bounds each worker's in-flight load, shedding per `--shed`.
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig {
             max_batch: args.opt_usize("batch", 32)?,
@@ -167,6 +171,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         dispatch: DispatchPolicy::from_name(args.opt_or("dispatch", "round-robin"))?,
         backend: BackendSpec::from_name(args.opt_or("backend", "native"))?,
         replay: ReplayPolicy::from_name(args.opt_or("hw-replay", "full"))?,
+        queue_limit: match args.opt_usize("queue-limit", 0)? {
+            0 => None,
+            n => Some(n),
+        },
+        shed: ShedPolicy::from_name(args.opt_or("shed", "reject-new"))?,
     };
     let root = artifacts_root(args);
     let manifest = Manifest::load(&root)?;
@@ -177,15 +186,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (tx, rx) = std::sync::mpsc::channel();
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
-        coord.submit(&test.x[i % test.len()], tx.clone())?;
+        coord.submit(&test.x[i % test.len()], tx.clone());
     }
     drop(tx);
+    // Every submit is answered exactly once: a response, or a typed
+    // InferError (QueueFull under --queue-limit saturation).
     let mut correct = 0usize;
+    let mut served = 0usize;
+    let mut failed = 0usize;
     let mut got = 0usize;
-    while let Ok(resp) = rx.recv() {
-        let idx = resp.request_id as usize % test.len();
-        correct += (resp.pred == test.y[idx]) as usize;
+    while let Ok(reply) = rx.recv() {
         got += 1;
+        match reply {
+            Ok(resp) => {
+                let idx = resp.request_id as usize % test.len();
+                correct += (resp.pred == test.y[idx]) as usize;
+                served += 1;
+            }
+            Err(e) => {
+                log::debug!("request failed: {e}");
+                failed += 1;
+            }
+        }
         if got == n_requests {
             break;
         }
@@ -193,11 +215,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let m = coord.metrics();
     println!(
-        "model {model}: {got} responses in {wall:.3}s = {:.0} req/s ({} workers)",
+        "model {model}: {served} served / {failed} failed of {got} replies in {wall:.3}s \
+         = {:.0} req/s ({} workers)",
         got as f64 / wall,
         coord.n_workers()
     );
-    println!("accuracy {:.1}%", 100.0 * correct as f64 / got as f64);
+    println!("accuracy {:.1}%", 100.0 * correct as f64 / served.max(1) as f64);
     println!(
         "service latency: p50 {:.0} us p99 {:.0} us mean {:.0} us (mean batch {:.1}, exec {:.0} us)",
         m.service_p50_us, m.service_p99_us, m.service_mean_us, m.mean_batch_size, m.mean_batch_exec_us
@@ -212,6 +235,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "simulated on-chip decision latency: mean {:.1} ns p50 {} p99 {} (mismatches {})",
             m.hw_mean_ns, m.hw_p50, m.hw_p99, m.hw_functional_mismatches
+        );
+    }
+    if m.rejected_requests + m.shed_requests + m.failed_batches > 0 {
+        println!(
+            "fail-soft: {} rejected (width), {} shed (queue full), {} failed forward calls",
+            m.rejected_requests, m.shed_requests, m.failed_batches
         );
     }
     coord.shutdown();

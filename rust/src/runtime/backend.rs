@@ -34,6 +34,11 @@ pub trait InferenceBackend {
     }
     /// Name of the model this backend executes.
     fn model_name(&self) -> &str;
+    /// Feature width of the served model. This is the admission-control
+    /// contract: the coordinator caches it at pool startup and refuses
+    /// width-mismatched rows at ingestion (typed `WidthMismatch`), so
+    /// `forward` normally sees width-matched batches from the pool — the
+    /// `Result` stays for defense in depth and non-pool callers.
     fn n_features(&self) -> usize;
     fn n_classes(&self) -> usize;
     /// Total clause count (`n_classes × clauses_per_class`).
@@ -68,6 +73,11 @@ pub enum BackendSpec {
     /// Pure-Rust evaluation of an in-memory model — no artifacts required
     /// (synthetic workloads, tests, CI).
     InMemory(Arc<TmModel>),
+    /// [`FaultInjectingBackend`] over an in-memory model: native
+    /// evaluation whose `forward` fails whenever the batch contains the
+    /// all-true poison row. Chaos drills and the coordinator's fail-soft
+    /// tests; not reachable from the CLI.
+    FaultInjecting(Arc<TmModel>),
     /// Native functional results plus a simulated hardware engine
     /// ([`crate::hw::HwEngine`]) of the chosen architecture for per-request
     /// on-chip timing (`--backend hw:<async|adder|fpt18>`). `model: None`
@@ -113,6 +123,7 @@ impl BackendSpec {
         match self {
             BackendSpec::Native => "native",
             BackendSpec::InMemory(_) => "native(in-memory)",
+            BackendSpec::FaultInjecting(_) => "native+faults",
             BackendSpec::TimeDomain { arch: HwArch::Async, .. } => "hw:async",
             BackendSpec::TimeDomain { arch: HwArch::Adder, .. } => "hw:adder",
             BackendSpec::TimeDomain { arch: HwArch::Fpt18, .. } => "hw:fpt18",
@@ -125,7 +136,9 @@ impl BackendSpec {
     pub fn needs_manifest(&self) -> bool {
         !matches!(
             self,
-            BackendSpec::InMemory(_) | BackendSpec::TimeDomain { model: Some(_), .. }
+            BackendSpec::InMemory(_)
+                | BackendSpec::FaultInjecting(_)
+                | BackendSpec::TimeDomain { model: Some(_), .. }
         )
     }
 
@@ -156,6 +169,14 @@ impl BackendSpec {
                     m.name
                 );
                 Ok(Box::new(NativeBackend::new(m.clone())))
+            }
+            BackendSpec::FaultInjecting(m) => {
+                ensure!(
+                    m.name == model,
+                    "in-memory spec holds model {:?}, not {model:?}",
+                    m.name
+                );
+                Ok(Box::new(FaultInjectingBackend::new(m.clone())))
             }
             BackendSpec::TimeDomain { arch, flow, model: mem } => {
                 let m = match mem {
@@ -238,6 +259,83 @@ impl InferenceBackend for NativeBackend {
     }
 }
 
+/// Fault-injection wrapper around [`NativeBackend`] (chaos drills and
+/// the coordinator's fail-soft tests): `forward` fails whenever the
+/// batch contains a *poison row* — every feature bit set — **panics**
+/// on a *panic row* — every bit set except the first — and behaves
+/// exactly like the native backend otherwise. This exercises the
+/// coordinator's split-and-retry and panic-containment paths through
+/// the real backend seam instead of a mock: a marked row submitted
+/// alongside healthy neighbors fails its batch, the coordinator retries
+/// per-row, the neighbors are served, and only the marked caller sees a
+/// typed `BackendFailed`.
+pub struct FaultInjectingBackend {
+    inner: NativeBackend,
+}
+
+impl FaultInjectingBackend {
+    pub fn new(model: Arc<TmModel>) -> FaultInjectingBackend {
+        FaultInjectingBackend { inner: NativeBackend::new(model) }
+    }
+
+    /// The input that makes `forward` fail: a row of all-true features.
+    pub fn poison_row(n_features: usize) -> Vec<bool> {
+        vec![true; n_features]
+    }
+
+    /// The input that makes `forward` *panic* (needs ≥ 2 features): all
+    /// bits set except the first.
+    pub fn panic_row(n_features: usize) -> Vec<bool> {
+        let mut row = vec![true; n_features];
+        row[0] = false;
+        row
+    }
+
+    fn is_poison(batch: &PackedBatch, row: usize) -> bool {
+        batch.bits() > 0 && (0..batch.bits()).all(|i| batch.bit(row, i))
+    }
+
+    fn is_panic(batch: &PackedBatch, row: usize) -> bool {
+        batch.bits() > 1
+            && !batch.bit(row, 0)
+            && (1..batch.bits()).all(|i| batch.bit(row, i))
+    }
+}
+
+impl InferenceBackend for FaultInjectingBackend {
+    fn kind(&self) -> &'static str {
+        "native+faults"
+    }
+
+    fn model_name(&self) -> &str {
+        self.inner.model_name()
+    }
+
+    fn n_features(&self) -> usize {
+        self.inner.n_features()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.inner.n_classes()
+    }
+
+    fn c_total(&self) -> usize {
+        self.inner.c_total()
+    }
+
+    fn forward(&self, batch: &PackedBatch) -> Result<ForwardOutput> {
+        for r in 0..batch.rows() {
+            if Self::is_poison(batch, r) {
+                bail!("injected fault: row {r} of {} is the poison row", batch.rows());
+            }
+            if Self::is_panic(batch, r) {
+                panic!("injected panic: row {r} of {} is the panic row", batch.rows());
+            }
+        }
+        self.inner.forward(batch)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -313,6 +411,43 @@ mod tests {
             ) => assert_eq!(f3.die_seed, f0.die_seed + 3),
             _ => unreachable!(),
         }
+    }
+
+    #[test]
+    fn fault_injecting_backend_fails_only_on_poison_rows() {
+        let model = Arc::new(toy());
+        let faulty = FaultInjectingBackend::new(model.clone());
+        let native = NativeBackend::new(model.clone());
+        let clean = vec![vec![true, false], vec![false, false]];
+        let batch = PackedBatch::from_rows(&clean).unwrap();
+        assert_eq!(
+            faulty.forward(&batch).unwrap(),
+            native.forward(&batch).unwrap(),
+            "clean batches are served exactly like the native backend"
+        );
+
+        // Any batch containing the poison row fails, with the row named.
+        let poison = FaultInjectingBackend::poison_row(model.n_features);
+        let rows = vec![clean[0].clone(), poison, clean[1].clone()];
+        let err = faulty.forward(&PackedBatch::from_rows(&rows).unwrap()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("injected fault") && msg.contains("row 1"), "{msg}");
+
+        // The panic row panics (callers contain it with catch_unwind).
+        let panic_rows = vec![FaultInjectingBackend::panic_row(model.n_features)];
+        let batch = PackedBatch::from_rows(&panic_rows).unwrap();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = faulty.forward(&batch);
+        }));
+        assert!(caught.is_err(), "panic row must panic");
+
+        // The spec opens artifact-free and enforces the model name.
+        let spec = BackendSpec::FaultInjecting(model);
+        assert_eq!(spec.name(), "native+faults");
+        assert!(!spec.needs_manifest());
+        let b = spec.open(std::path::Path::new("/nonexistent"), "toy").unwrap();
+        assert_eq!(b.kind(), "native+faults");
+        assert!(spec.open(std::path::Path::new("/nonexistent"), "other").is_err());
     }
 
     #[test]

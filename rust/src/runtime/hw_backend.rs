@@ -75,7 +75,12 @@ impl InferenceBackend for HwBackend {
     }
 
     fn replay(&self, out: &ForwardOutput, row: usize) -> Option<HwOutcome> {
-        let mut engine = self.engine.lock().unwrap();
+        // Recover a poisoned lock: a replay panic (contained by the
+        // coordinator's catch_unwind) must not permanently disable this
+        // die's telemetry. The engine holds only simulation state
+        // (arbiter RNG, toggle history), so continuing after a
+        // mid-update unwind is safe.
+        let mut engine = self.engine.lock().unwrap_or_else(|e| e.into_inner());
         Some(engine.replay_row(&out.clause_bits_row(row), out.sums_row(row)))
     }
 

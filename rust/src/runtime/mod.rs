@@ -19,6 +19,10 @@
 //!
 //! [`BackendSpec`] is the `Send + Clone` factory that crosses thread
 //! boundaries; [`ModelRegistry`] caches constructed backends per model.
+//! [`FaultInjectingBackend`] (`BackendSpec::FaultInjecting`) wraps the
+//! native backend with a deterministic failure mode (the all-true poison
+//! row) so chaos drills and the coordinator's fail-soft tests exercise
+//! per-row retry through the real seam.
 //!
 //! The data plane is *packed end-to-end*: [`InferenceBackend::forward`]
 //! consumes a [`crate::tm::PackedBatch`] of bit-packed feature rows (the
@@ -33,7 +37,7 @@ pub mod hw_backend;
 pub mod pjrt;
 pub mod registry;
 
-pub use backend::{BackendSpec, InferenceBackend, NativeBackend};
+pub use backend::{BackendSpec, FaultInjectingBackend, InferenceBackend, NativeBackend};
 pub use hw_backend::HwBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::{ModelRunner, PjrtBackend};

@@ -1,22 +1,27 @@
-//! End-to-end coordinator tests: requests through dispatch → per-worker
-//! batching → backend forward → policy-driven hardware replay, with
-//! metrics aggregation and shutdown behaviour.
+//! End-to-end coordinator tests: requests through admission → dispatch →
+//! per-worker batching → backend forward → policy-driven hardware
+//! replay, with typed fail-soft errors, metrics aggregation and shutdown
+//! behaviour.
 //!
 //! These run against in-memory models (`BackendSpec::InMemory` /
-//! `BackendSpec::TimeDomain { model: Some(_) }`), so they need no
-//! artifacts and exercise the full pool — including simulated-hardware
-//! serving — on every CI run.
+//! `BackendSpec::FaultInjecting` / `BackendSpec::TimeDomain { model:
+//! Some(_) }`), so they need no artifacts and exercise the full pool —
+//! including simulated-hardware serving and the fail-soft error path —
+//! on every CI run.
 
+use std::collections::HashMap;
+use std::num::NonZeroU32;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
 use tdpc::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy, ReplayPolicy,
+    BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy, InferError, ReplayPolicy,
+    ShedPolicy,
 };
 use tdpc::flow::FlowConfig;
 use tdpc::hw::HwArch;
-use tdpc::runtime::BackendSpec;
+use tdpc::runtime::{BackendSpec, FaultInjectingBackend};
 use tdpc::tm::TmModel;
 use tdpc::util::{Ps, SplitMix64};
 
@@ -47,6 +52,8 @@ fn pool_config(
         dispatch,
         backend: BackendSpec::InMemory(model),
         replay: ReplayPolicy::Off,
+        queue_limit: None,
+        shed: ShedPolicy::RejectNew,
     }
 }
 
@@ -79,7 +86,9 @@ fn serves_requests_with_correct_predictions() {
     let m = coord.metrics();
     assert_eq!(m.requests, 20);
     assert!(m.batches >= 1);
-    // A single-worker pool's aggregate equals its only worker's snapshot.
+    assert_eq!((m.rejected_requests, m.shed_requests, m.failed_batches), (0, 0, 0));
+    // A single-worker pool's aggregate equals its only worker's snapshot
+    // (no admission-time events happened).
     assert_eq!(coord.worker_metrics()[0], m);
     coord.shutdown();
 }
@@ -95,10 +104,11 @@ fn four_worker_pool_answers_each_request_once_and_metrics_sum() {
     let inputs = test_inputs(&model, n, 4);
     let (tx, rx) = std::sync::mpsc::channel();
     for x in &inputs {
-        coord.submit(x, tx.clone()).unwrap();
+        coord.submit(x, tx.clone());
     }
     drop(tx);
-    let responses: Vec<_> = rx.iter().take(n).collect();
+    let responses: Vec<_> =
+        rx.iter().take(n).map(|r| r.expect("valid requests all serve")).collect();
     assert_eq!(responses.len(), n);
 
     // Every request id answered exactly once, each with the right result.
@@ -153,10 +163,11 @@ fn least_loaded_prefers_idle_workers() {
     let n = 100;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 7) {
-        coord.submit(&x, tx.clone()).unwrap();
+        coord.submit(&x, tx.clone());
     }
     drop(tx);
-    let responses: Vec<_> = rx.iter().take(n).collect();
+    let responses: Vec<_> =
+        rx.iter().take(n).map(|r| r.expect("valid requests all serve")).collect();
     assert_eq!(responses.len(), n);
     assert!(
         responses.iter().any(|r| r.worker == 1),
@@ -171,18 +182,17 @@ fn batches_form_under_burst_load() {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(50) },
         n_workers: 1,
-        dispatch: DispatchPolicy::RoundRobin,
         backend: BackendSpec::InMemory(model.clone()),
-        replay: ReplayPolicy::Off,
+        ..CoordinatorConfig::default()
     };
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
     let n = 200;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 9) {
-        coord.submit(&x, tx.clone()).unwrap();
+        coord.submit(&x, tx.clone());
     }
     drop(tx);
-    assert_eq!(rx.iter().take(n).count(), n);
+    assert_eq!(rx.iter().take(n).filter(|r| r.is_ok()).count(), n);
     let m = coord.metrics();
     assert_eq!(m.requests as usize, n);
     assert!(
@@ -210,10 +220,11 @@ fn four_worker_time_domain_pool_replays_every_response() {
     let inputs = test_inputs(&model, n, 11);
     let (tx, rx) = std::sync::mpsc::channel();
     for x in &inputs {
-        coord.submit(x, tx.clone()).unwrap();
+        coord.submit(x, tx.clone());
     }
     drop(tx);
-    let responses: Vec<_> = rx.iter().take(n).collect();
+    let responses: Vec<_> =
+        rx.iter().take(n).map(|r| r.expect("valid requests all serve")).collect();
     assert_eq!(responses.len(), n);
 
     let mut mismatch_without_tie = 0;
@@ -243,15 +254,16 @@ fn sampled_replay_tags_exactly_one_in_n() {
     let model = test_model(17);
     let mut cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
     cfg.backend = hw_spec(HwArch::Adder, model.clone());
-    cfg.replay = ReplayPolicy::Sample(4);
+    cfg.replay = ReplayPolicy::Sample(NonZeroU32::new(4).unwrap());
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
     let n = 64;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 18) {
-        coord.submit(&x, tx.clone()).unwrap();
+        coord.submit(&x, tx.clone());
     }
     drop(tx);
-    let responses: Vec<_> = rx.iter().take(n).collect();
+    let responses: Vec<_> =
+        rx.iter().take(n).map(|r| r.expect("valid requests all serve")).collect();
     // One worker serves rows 0..64 in order ⇒ exactly every 4th replayed.
     let replayed = responses.iter().filter(|r| r.hw_decision_latency.is_some()).count();
     assert_eq!(replayed, n / 4, "1-in-4 sampling on a single worker is exact");
@@ -273,12 +285,12 @@ fn shutdown_drains_queued_requests() {
     let n = 120;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 13) {
-        coord.submit(&x, tx.clone()).unwrap();
+        coord.submit(&x, tx.clone());
     }
     drop(tx);
     // Graceful shutdown must answer everything already accepted.
     coord.shutdown();
-    assert_eq!(rx.iter().count(), n, "shutdown dropped queued requests");
+    assert_eq!(rx.iter().filter(|r| r.is_ok()).count(), n, "shutdown dropped queued requests");
 }
 
 #[test]
@@ -346,10 +358,11 @@ fn word_boundary_models_batch_correctly_through_four_workers() {
         let inputs = test_inputs(&model, n, 21);
         let (tx, rx) = std::sync::mpsc::channel();
         for x in &inputs {
-            coord.submit(x, tx.clone()).unwrap();
+            coord.submit(x, tx.clone());
         }
         drop(tx);
-        let responses: Vec<_> = rx.iter().take(n).collect();
+        let responses: Vec<_> =
+            rx.iter().take(n).map(|r| r.expect("valid requests all serve")).collect();
         assert_eq!(responses.len(), n, "k={k} cpc={cpc} f={f}");
         for r in &responses {
             let x = &inputs[r.request_id as usize];
@@ -361,18 +374,386 @@ fn word_boundary_models_batch_correctly_through_four_workers() {
     }
 }
 
+/// The fail-soft acceptance path: a width-mismatched submit in the middle
+/// of a burst is rejected with a *typed* `WidthMismatch` at ingestion,
+/// and every concurrent valid request on the same worker is served —
+/// the bad row never reaches a batch, so it cannot poison its
+/// `max_batch − 1` neighbors.
 #[test]
-fn width_mismatched_request_fails_batch_not_pool() {
-    // A wrong-width request poisons only the batch it lands in: its reply
-    // channel closes, and the pool keeps serving later requests.
+fn width_mismatch_rejected_typed_while_neighbors_serve() {
     let model = test_model(30);
     let cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let f = model.n_features;
+    assert_eq!(coord.n_features(), f, "model width cached at startup");
+
+    let inputs = test_inputs(&model, 10, 31);
     let (tx, rx) = std::sync::mpsc::channel();
-    coord.submit(&vec![true; model.n_features + 3], tx).unwrap();
-    assert!(rx.recv().is_err(), "mismatched request must get no reply");
-    let x = test_inputs(&model, 1, 31).remove(0);
+    let (bad_tx, bad_rx) = std::sync::mpsc::channel();
+    let mut expected: HashMap<u64, &Vec<bool>> = HashMap::new();
+    for (i, x) in inputs.iter().enumerate() {
+        if i == 5 {
+            coord.submit(&vec![true; f + 3], bad_tx.clone());
+        }
+        let id = coord.submit(x, tx.clone());
+        expected.insert(id, x);
+    }
+    drop(tx);
+    drop(bad_tx);
+
+    // The malformed row gets a typed rejection, not a dead channel.
+    match bad_rx.recv().expect("rejected request still gets a reply") {
+        Err(InferError::WidthMismatch { got, expected }) => {
+            assert_eq!((got, expected), (f + 3, f));
+        }
+        other => panic!("expected WidthMismatch, got {other:?}"),
+    }
+    // Every neighbor in the same burst is served, correctly.
+    let responses: Vec<_> = rx.iter().map(|r| r.expect("valid rows all serve")).collect();
+    assert_eq!(responses.len(), inputs.len());
+    for r in &responses {
+        assert_eq!(r.pred, model.predict(expected[&r.request_id]));
+    }
+    let m = coord.metrics();
+    assert_eq!(m.rejected_requests, 1, "the rejection is visible in metrics");
+    assert_eq!(m.requests, 10);
+    assert_eq!(m.failed_batches, 0, "no batch ever failed");
+    // Width rejections happen at admission, before any worker is
+    // involved — they appear in the aggregate, not per-worker.
+    assert_eq!(coord.worker_metrics()[0].rejected_requests, 0);
+    coord.shutdown();
+}
+
+/// Saturation with the default reject-new policy: a burst beyond
+/// `queue_limit` sheds exactly the overflow, each shed caller gets a
+/// typed `QueueFull`, and the accepted requests are all served.
+#[test]
+fn saturation_sheds_exactly_beyond_queue_limit() {
+    let model = test_model(40);
+    let mut cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    // A deadline the test never reaches: the worker cannot flush (and
+    // free capacity) mid-burst even on a badly stalled CI machine, so
+    // admission decisions are deterministic. The accepted requests are
+    // served by the shutdown drain below, not the deadline.
+    cfg.batcher = BatcherConfig { max_batch: 64, max_wait: Duration::from_secs(60) };
+    cfg.queue_limit = Some(4);
+    cfg.shed = ShedPolicy::RejectNew;
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+
+    let n = 20;
+    let limit = 4;
+    let (tx, rx) = std::sync::mpsc::channel();
+    for x in test_inputs(&model, n, 41) {
+        coord.submit(&x, tx.clone());
+    }
+    drop(tx);
+
+    // The n − limit rejections were delivered synchronously at submit.
+    let rejects: Vec<_> = rx.iter().take(n - limit).collect();
+    for r in &rejects {
+        match r {
+            Err(e) => assert_eq!(*e, InferError::QueueFull { depth: limit, limit }),
+            Ok(resp) => panic!("nothing can be served before the drain, got {resp:?}"),
+        }
+    }
+    let m = coord.metrics();
+    assert_eq!(m.shed_requests as usize, n - limit, "sheds exactly beyond the limit");
+    assert_eq!(m.requests, 0, "nothing served yet");
+    // Reject-new sheds are admission-time events: aggregate-only, like
+    // width rejections — not attributed to any worker.
+    assert_eq!(coord.worker_metrics()[0].shed_requests, 0);
+
+    // Graceful shutdown serves everything that was admitted.
+    coord.shutdown();
+    let served: Vec<_> = rx.iter().collect();
+    assert_eq!(served.len(), limit, "exactly queue_limit requests were admitted");
+    assert!(served.iter().all(|r| r.is_ok()));
+}
+
+/// Drop-oldest under a heavy burst. Whatever the interleaving of the
+/// worker's drain/shed/flush with the submit loop:
+/// (a) every request is answered exactly once,
+/// (b) the freshest `queue_limit` ids are always *served* — evicting
+///     id k requires more than `limit` unanswered requests at-or-after
+///     k, impossible for the last `limit` submissions — so sheds hit
+///     only stale work,
+/// (c) sheds are typed `QueueFull` and the counters reconcile.
+#[test]
+fn drop_oldest_sheds_stalest_never_freshest() {
+    let model = test_model(45);
+    let mut cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    cfg.batcher = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(200) };
+    cfg.queue_limit = Some(4);
+    cfg.shed = ShedPolicy::DropOldest;
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+
+    let n = 200;
+    let limit = 4u64;
+    let inputs = test_inputs(&model, n, 46);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut ids = Vec::with_capacity(n);
+    for x in &inputs {
+        ids.push(coord.submit(x, tx.clone()));
+    }
+    drop(tx);
+    // A fresh pool assigns sequential ids, so id order == submission age.
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+    let replies: Vec<_> = rx.iter().collect();
+    assert_eq!(replies.len(), n, "every submit is answered exactly once");
+
+    let served: Vec<u64> = replies
+        .iter()
+        .filter_map(|r| r.as_ref().ok().map(|x| x.request_id))
+        .collect();
+    let shed = replies.iter().filter(|r| r.is_err()).count();
+    assert_eq!(served.len() + shed, n, "each request served xor shed");
+    for id in (n as u64 - limit)..n as u64 {
+        assert!(
+            served.contains(&id),
+            "drop-oldest must never shed one of the freshest {limit} requests (id {id})"
+        );
+    }
+    // A tight 200-request burst against a 4-deep queue must shed: for
+    // zero sheds the worker would have to fully drain and serve between
+    // ~200 consecutive sub-µs submits, with each serve paying a forward
+    // pass.
+    assert!(shed > 0, "the burst must actually exercise shedding");
+    for r in &replies {
+        if let Err(e) = r {
+            assert!(
+                matches!(e, InferError::QueueFull { limit: 4, .. }),
+                "expected QueueFull, got {e:?}"
+            );
+        }
+    }
+    let m = coord.metrics();
+    assert_eq!(m.shed_requests as usize, shed);
+    assert_eq!(m.requests as usize, served.len());
+    assert_eq!(coord.worker_metrics()[0].shed_requests as usize, shed);
+    coord.shutdown();
+}
+
+/// The zero-capacity drop-oldest degenerate is deterministic: every
+/// admitted request is shed by the worker before anything can be served.
+#[test]
+fn drop_oldest_with_zero_limit_sheds_everything() {
+    let model = test_model(47);
+    let mut cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    cfg.queue_limit = Some(0);
+    cfg.shed = ShedPolicy::DropOldest;
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let n = 30;
+    let (tx, rx) = std::sync::mpsc::channel();
+    for x in test_inputs(&model, n, 48) {
+        coord.submit(&x, tx.clone());
+    }
+    drop(tx);
+    let replies: Vec<_> = rx.iter().collect();
+    assert_eq!(replies.len(), n);
+    for r in &replies {
+        assert!(
+            matches!(r, Err(InferError::QueueFull { limit: 0, .. })),
+            "a zero-length queue sheds everything, got {r:?}"
+        );
+    }
+    let m = coord.metrics();
+    assert_eq!(m.shed_requests as usize, n);
+    assert_eq!(m.requests, 0);
+    coord.shutdown();
+}
+
+/// Reject-new only sheds when the *pool* is saturated: with round-robin
+/// dispatch over two bounded workers, a burst fills both workers to the
+/// limit (spilling if the pick is full) before the first `QueueFull`.
+#[test]
+fn reject_new_sheds_only_when_whole_pool_is_full() {
+    let model = test_model(49);
+    let mut cfg = pool_config(2, DispatchPolicy::RoundRobin, model.clone());
+    // Unreachable deadline: no worker can flush mid-burst, so admission
+    // is deterministic; the shutdown drain serves the admitted requests.
+    cfg.batcher = BatcherConfig { max_batch: 64, max_wait: Duration::from_secs(60) };
+    cfg.queue_limit = Some(3);
+    cfg.shed = ShedPolicy::RejectNew;
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+
+    let n = 20;
+    let pool_capacity = 2 * 3;
+    let (tx, rx) = std::sync::mpsc::channel();
+    for x in test_inputs(&model, n, 50) {
+        coord.submit(&x, tx.clone());
+    }
+    drop(tx);
+
+    let rejects: Vec<_> = rx.iter().take(n - pool_capacity).collect();
+    for r in &rejects {
+        match r {
+            Err(e) => assert_eq!(*e, InferError::QueueFull { depth: 3, limit: 3 }),
+            Ok(resp) => panic!("nothing can be served before the drain, got {resp:?}"),
+        }
+    }
+    let m = coord.metrics();
+    assert_eq!(m.shed_requests as usize, n - pool_capacity);
+    assert_eq!(m.requests, 0, "nothing served yet");
+
+    coord.shutdown();
+    let served: Vec<_> = rx.iter().collect();
+    assert_eq!(served.len(), pool_capacity, "both workers filled to the limit");
+    assert!(served.iter().all(|r| r.is_ok()));
+}
+
+/// A panicking backend is contained: the panic becomes a typed
+/// `BackendFailed`, neighbors in the batch are served via per-row retry,
+/// and the worker thread survives to serve later traffic.
+#[test]
+fn backend_panic_contained_as_typed_error() {
+    let model = test_model(55);
+    let mut cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    cfg.backend = BackendSpec::FaultInjecting(model.clone());
+    cfg.batcher = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(200) };
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+
+    let inputs = test_inputs(&model, 7, 56);
+    for x in &inputs {
+        assert!(!x.iter().all(|&b| b), "input collides with the poison marker");
+        assert!(
+            x[0] || !x[1..].iter().all(|&b| b),
+            "input collides with the panic marker"
+        );
+    }
+    let (tx, rx) = std::sync::mpsc::channel();
+    let (bad_tx, bad_rx) = std::sync::mpsc::channel();
+    let mut expected: HashMap<u64, &Vec<bool>> = HashMap::new();
+    for (i, x) in inputs.iter().enumerate() {
+        if i == 2 {
+            coord.submit(&FaultInjectingBackend::panic_row(model.n_features), bad_tx.clone());
+        }
+        let id = coord.submit(x, tx.clone());
+        expected.insert(id, x);
+    }
+    drop(tx);
+    drop(bad_tx);
+
+    match bad_rx.recv().expect("a panicking row still gets a typed reply") {
+        Err(InferError::BackendFailed(msg)) => {
+            assert!(msg.contains("panicked"), "{msg}")
+        }
+        other => panic!("expected BackendFailed, got {other:?}"),
+    }
+    let responses: Vec<_> = rx
+        .iter()
+        .map(|r| r.expect("healthy rows must be served despite the panicking batch"))
+        .collect();
+    assert_eq!(responses.len(), inputs.len());
+    for r in &responses {
+        assert_eq!(r.pred, model.predict(expected[&r.request_id]));
+    }
+    // The worker thread survived the panic and keeps serving.
+    let x = &inputs[0];
+    assert_eq!(coord.infer_blocking(x).unwrap().pred, model.predict(x));
+    assert!(coord.metrics().failed_batches >= 1);
+    coord.shutdown();
+}
+
+/// One poisonous row must cost only itself: the batch it lands in fails,
+/// the coordinator splits and retries per-row, every healthy neighbor is
+/// served, and only the poison caller gets `BackendFailed`.
+#[test]
+fn backend_failure_isolated_to_poison_row_neighbors_served() {
+    let model = test_model(50);
+    let mut cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    cfg.backend = BackendSpec::FaultInjecting(model.clone());
+    cfg.batcher = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(200) };
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+
+    let inputs = test_inputs(&model, 7, 51);
+    for x in &inputs {
+        assert!(!x.iter().all(|&b| b), "seeded inputs must not be poison rows");
+    }
+    let (tx, rx) = std::sync::mpsc::channel();
+    let (bad_tx, bad_rx) = std::sync::mpsc::channel();
+    let mut expected: HashMap<u64, &Vec<bool>> = HashMap::new();
+    for (i, x) in inputs.iter().enumerate() {
+        if i == 3 {
+            coord.submit(&FaultInjectingBackend::poison_row(model.n_features), bad_tx.clone());
+        }
+        let id = coord.submit(x, tx.clone());
+        expected.insert(id, x);
+    }
+    drop(tx);
+    drop(bad_tx);
+
+    match bad_rx.recv().expect("failed request still gets a typed reply") {
+        Err(InferError::BackendFailed(msg)) => {
+            assert!(msg.contains("injected fault"), "{msg}")
+        }
+        other => panic!("expected BackendFailed, got {other:?}"),
+    }
+    let responses: Vec<_> = rx
+        .iter()
+        .map(|r| r.expect("healthy rows must be served despite the poisoned batch"))
+        .collect();
+    assert_eq!(responses.len(), inputs.len());
+    for r in &responses {
+        assert_eq!(r.pred, model.predict(expected[&r.request_id]));
+    }
+    let m = coord.metrics();
+    assert_eq!(m.requests as usize, inputs.len());
+    assert!(
+        m.failed_batches >= 1,
+        "the failed forward call(s) must be visible, got {}",
+        m.failed_batches
+    );
+    assert_eq!(m.rejected_requests, 0);
+    coord.shutdown();
+}
+
+/// `infer_blocking` surfaces typed `InferError`s — never a bare
+/// closed-channel error — for rejected, shed, and backend-failed rows.
+#[test]
+fn infer_blocking_surfaces_typed_errors() {
+    let model = test_model(60);
+
+    // Rejected: the admission width gate.
+    let cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let err = coord.infer_blocking(&vec![true; model.n_features + 1]).unwrap_err();
+    let want = InferError::WidthMismatch {
+        got: model.n_features + 1,
+        expected: model.n_features,
+    };
+    assert_eq!(err.downcast_ref::<InferError>(), Some(&want));
+    coord.shutdown();
+
+    // Shed: a zero-length queue rejects every request as QueueFull.
+    let mut cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    cfg.queue_limit = Some(0);
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let x = test_inputs(&model, 1, 61).remove(0);
+    let err = coord.infer_blocking(&x).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<InferError>(),
+        Some(&InferError::QueueFull { depth: 0, limit: 0 })
+    );
+    assert_eq!(coord.metrics().shed_requests, 1);
+    coord.shutdown();
+
+    // Backend-failed: the fault-injecting backend's poison row, alone in
+    // its batch (no neighbors to save, no retry possible).
+    let mut cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    cfg.backend = BackendSpec::FaultInjecting(model.clone());
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let err = coord
+        .infer_blocking(&FaultInjectingBackend::poison_row(model.n_features))
+        .unwrap_err();
+    match err.downcast_ref::<InferError>() {
+        Some(InferError::BackendFailed(msg)) => {
+            assert!(msg.contains("injected fault"), "{msg}")
+        }
+        other => panic!("expected BackendFailed, got {other:?}"),
+    }
+    assert_eq!(coord.metrics().failed_batches, 1);
+    // The pool survives the failure and keeps serving.
     let resp = coord.infer_blocking(&x).unwrap();
-    assert_eq!(resp.pred, model.predict(&x), "pool must survive the bad batch");
+    assert_eq!(resp.pred, model.predict(&x));
     coord.shutdown();
 }
