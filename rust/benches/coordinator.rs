@@ -1,25 +1,109 @@
 //! §Perf L3 bench: coordinator serving path — round-trip latency and
 //! closed-loop throughput across pool sizes, with and without the
-//! time-domain hardware backend (replay policy: full).
+//! time-domain hardware backend (replay policy: full), plus the cost of
+//! model-keyed batching: a two-model interleaved burst vs the same
+//! traffic through a single-model pool.
 //!
-//! Needs `make artifacts`; `benches/hw_backend.rs` is the artifact-free
+//! The multi-model section is artifact-free (synthetic in-memory
+//! models) and always runs; the per-artifact sweep needs
+//! `make artifacts`. `benches/hw_backend.rs` is the artifact-free
 //! native-vs-replay sweep.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use tdpc::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy, ReplayPolicy,
+    BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy, ModelId, ReplayPolicy,
 };
 use tdpc::flow::FlowConfig;
 use tdpc::hw::HwArch;
 use tdpc::runtime::BackendSpec;
-use tdpc::tm::{Manifest, TestSet};
-use tdpc::util::benchkit;
+use tdpc::tm::{Manifest, TestSet, TmModel};
+use tdpc::util::{benchkit, SplitMix64};
+
+/// Burst `batches` of pre-built (model, row) submissions through the
+/// pool and wait for every reply; returns requests served per second.
+fn burst_throughput(
+    name: &str,
+    coord: &Coordinator,
+    work: &[(ModelId, Vec<bool>)],
+) -> f64 {
+    let n = work.len();
+    let mean = benchkit::bench_with(
+        name,
+        Duration::from_millis(200),
+        Duration::from_secs(2),
+        || {
+            let (tx, rx) = std::sync::mpsc::channel();
+            for (mid, x) in work {
+                coord.submit(*mid, x, tx.clone());
+            }
+            drop(tx);
+            let got = rx.iter().take(n).filter(|r| r.is_ok()).count();
+            assert_eq!(got, n);
+        },
+    );
+    benchkit::throughput(mean, n)
+}
+
+/// Model-keyed batching overhead, measured not assumed: the same 512-row
+/// burst served (a) by a single-model pool, (b) as a two-model
+/// interleaved stream through one multi-model pool — identical total
+/// work per forward pass, but (b) pays the per-model pending map and
+/// splits each worker's stream into two batch queues.
+fn multi_model_overhead() {
+    let a = Arc::new(TmModel::synthetic("mm_a", 8, 64, 128, 0.10, 7));
+    let b = Arc::new(TmModel::synthetic("mm_b", 8, 64, 128, 0.10, 8));
+    let mut rng = SplitMix64::new(11);
+    let mut row = |f: usize| -> Vec<bool> { (0..f).map(|_| rng.next_bool(0.5)).collect() };
+    let n = 512;
+
+    let cfg = |backend: BackendSpec| CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(300) },
+        n_workers: 2,
+        dispatch: DispatchPolicy::LeastLoaded,
+        backend,
+        replay: ReplayPolicy::Off,
+        ..CoordinatorConfig::default()
+    };
+    let root = std::path::PathBuf::from("/unused");
+
+    // Baseline: one model, 512 rows.
+    let solo = Coordinator::start(root.clone(), "mm_a", cfg(BackendSpec::InMemory(a.clone())))
+        .unwrap();
+    let sid = solo.model_id("mm_a").unwrap();
+    let solo_work: Vec<(ModelId, Vec<bool>)> = (0..n).map(|_| (sid, row(128))).collect();
+    let solo_rps = burst_throughput("coordinator/single_model_burst512", &solo, &solo_work);
+    println!("  single-model burst: {solo_rps:.0} req/s");
+    solo.shutdown();
+
+    // Two models, alternating submissions, same total row count and the
+    // same per-row compute shape.
+    let set = BackendSpec::InMemorySet(Arc::new(vec![a, b]));
+    let duo = Coordinator::start_multi(root, &["mm_a", "mm_b"], cfg(set)).unwrap();
+    let mid_a = duo.model_id("mm_a").unwrap();
+    let mid_b = duo.model_id("mm_b").unwrap();
+    let duo_work: Vec<(ModelId, Vec<bool>)> = (0..n)
+        .map(|i| (if i % 2 == 0 { mid_a } else { mid_b }, row(128)))
+        .collect();
+    let duo_rps = burst_throughput("coordinator/two_model_interleaved_burst512", &duo, &duo_work);
+    println!("  two-model interleaved burst: {duo_rps:.0} req/s");
+    let m = duo.metrics();
+    println!(
+        "  two-model mean batch {:.1} ({} batches); {:.1}% of single-model throughput",
+        m.mean_batch_size,
+        m.batches,
+        100.0 * duo_rps / solo_rps
+    );
+    duo.shutdown();
+}
 
 fn main() {
+    multi_model_overhead();
+
     let root = Manifest::default_root();
     let Ok(manifest) = Manifest::load(&root) else {
-        eprintln!("SKIP coordinator: artifacts not built");
+        eprintln!("SKIP coordinator artifact sweep: artifacts not built");
         return;
     };
     let cases = [
@@ -52,30 +136,20 @@ fn main() {
             ..CoordinatorConfig::default()
         };
         let coord = Coordinator::start(root.clone(), model_name, cfg).unwrap();
+        let mid = coord.model_id(model_name).unwrap();
         let tag = format!("{model_name}_w{n_workers}{}", if hw { "+hw" } else { "" });
 
         // Round-trip latency (single in-flight request).
         benchkit::bench(&format!("coordinator/{tag}_roundtrip"), || {
-            let _ = coord.infer_blocking(&test.x[0]).unwrap();
+            let _ = coord.infer_blocking(mid, &test.x[0]).unwrap();
         });
 
         // Closed-loop burst throughput.
         let n = 512;
-        let mean = benchkit::bench_with(
-            &format!("coordinator/{tag}_burst512"),
-            Duration::from_millis(200),
-            Duration::from_secs(2),
-            || {
-                let (tx, rx) = std::sync::mpsc::channel();
-                for i in 0..n {
-                    coord.submit(&test.x[i % test.len()], tx.clone());
-                }
-                drop(tx);
-                let got = rx.iter().take(n).filter(|r| r.is_ok()).count();
-                assert_eq!(got, n);
-            },
-        );
-        println!("  burst throughput: {:.0} req/s", benchkit::throughput(mean, n));
+        let work: Vec<(ModelId, Vec<bool>)> =
+            (0..n).map(|i| (mid, test.x[i % test.len()].clone())).collect();
+        let rps = burst_throughput(&format!("coordinator/{tag}_burst512"), &coord, &work);
+        println!("  burst throughput: {rps:.0} req/s");
         let m = coord.metrics();
         println!(
             "  mean batch {:.1}, mean exec {:.0} µs",

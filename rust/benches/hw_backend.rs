@@ -63,6 +63,7 @@ fn main() {
         };
         let coord = Coordinator::start(std::path::PathBuf::from("/unused"), "hw_bench", cfg)
             .unwrap();
+        let mid = coord.model_id("hw_bench").unwrap();
 
         let n = inputs.len();
         let mean = benchkit::bench_with(
@@ -72,7 +73,7 @@ fn main() {
             || {
                 let (tx, rx) = std::sync::mpsc::channel();
                 for x in &inputs {
-                    coord.submit(x, tx.clone());
+                    coord.submit(mid, x, tx.clone());
                 }
                 drop(tx);
                 let got = rx.iter().take(n).filter(|r| r.is_ok()).count();

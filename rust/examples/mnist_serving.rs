@@ -12,10 +12,20 @@
 //! ```sh
 //! make artifacts && cargo run --release --example mnist_serving
 //! ```
+//!
+//! `--smoke` runs the artifact-free **multi-model** exercise instead
+//! (what CI drives as a binary): synthetic artifacts for two models of
+//! different shapes are written to a temp dir, served through one pool,
+//! and one of them is hot-swapped mid-traffic — asserting zero lost
+//! requests and per-generation golden predictions throughout.
+//!
+//! ```sh
+//! cargo run --release --example mnist_serving -- --smoke
+//! ```
 
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use tdpc::baselines::{Architecture, DesignParams, GenericAdder};
 use tdpc::coordinator::{
@@ -25,12 +35,16 @@ use tdpc::flow::FlowConfig;
 use tdpc::hw::HwArch;
 use tdpc::runtime::BackendSpec;
 use tdpc::tm::{Manifest, TestSet, TmModel};
+use tdpc::util::SplitMix64;
 
 const MODEL: &str = "mnist_c100";
 const N_REQUESTS: usize = 2000;
 const N_WORKERS: usize = 2;
 
 fn main() -> Result<()> {
+    if std::env::args().any(|a| a == "--smoke") {
+        return smoke();
+    }
     let root = Manifest::default_root();
     let manifest = Manifest::load(&root)?;
     let entry = manifest.entry(MODEL)?.clone();
@@ -67,13 +81,15 @@ fn main() -> Result<()> {
         cfg.batcher.max_wait
     );
     let coord = Coordinator::start(root, MODEL, cfg)?;
+    let mid = coord.model_id(MODEL).expect("started model resolves");
+    assert_eq!(coord.n_features_for(mid), Some(model.n_features));
 
     // Open-loop burst load: every request submitted before any reply is
     // read, from the test set.
     let (tx, rx) = std::sync::mpsc::channel();
     let t0 = Instant::now();
     for i in 0..N_REQUESTS {
-        coord.submit(&test.x[i % test.len()], tx.clone());
+        coord.submit(mid, &test.x[i % test.len()], tx.clone());
     }
     drop(tx);
     // Every submit is answered exactly once — a response or a typed
@@ -141,5 +157,123 @@ fn main() -> Result<()> {
     );
 
     coord.shutdown();
+    Ok(())
+}
+
+/// The artifact-free multi-model + hot-swap exercise CI runs as a
+/// binary: two models of different shapes behind one pool, interleaved
+/// traffic, one mid-run reload, everything asserted against in-process
+/// goldens. Exits non-zero on any violated invariant.
+fn smoke() -> Result<()> {
+    let root = std::env::temp_dir().join(format!("tdpc-smoke-{}", std::process::id()));
+    let result = smoke_in(&root);
+    std::fs::remove_dir_all(&root).ok();
+    result
+}
+
+fn smoke_in(root: &std::path::Path) -> Result<()> {
+    // Two tenants with different widths and class counts, plus the
+    // retrained v2 of tenant A that the reload swaps in.
+    let a_v1 = TmModel::synthetic("smoke_a", 3, 12, 24, 0.2, 11);
+    let a_v2 = TmModel::synthetic("smoke_a", 3, 12, 24, 0.2, 12);
+    let b = TmModel::synthetic("smoke_b", 2, 10, 40, 0.25, 21);
+    Manifest::write_synthetic(root, &[&a_v1, &b])?;
+
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_micros(300) },
+        n_workers: 2,
+        dispatch: DispatchPolicy::RoundRobin,
+        backend: BackendSpec::Native,
+        replay: ReplayPolicy::Off,
+        queue_limit: None,
+        shed: ShedPolicy::RejectNew,
+    };
+    println!("smoke: 2-worker pool over synthetic artifacts at {}", root.display());
+    let coord = Coordinator::start_multi(root.to_path_buf(), &["smoke_a", "smoke_b"], cfg)?;
+    let mid_a = coord.model_id("smoke_a").expect("smoke_a served");
+    let mid_b = coord.model_id("smoke_b").expect("smoke_b served");
+    ensure!(coord.n_features_for(mid_a) == Some(24), "width table entry for smoke_a");
+    ensure!(coord.n_features_for(mid_b) == Some(40), "width table entry for smoke_b");
+
+    let mut rng = SplitMix64::new(7);
+    let mut row = |f: usize| -> Vec<bool> { (0..f).map(|_| rng.next_bool(0.5)).collect() };
+    let phase = 300usize; // interleaved submits per phase, per model
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut inputs_a = Vec::new();
+    let mut inputs_b = Vec::new();
+    let mut submit_round = |inputs_a: &mut Vec<Vec<bool>>, inputs_b: &mut Vec<Vec<bool>>| {
+        for _ in 0..phase {
+            let xa = row(24);
+            let xb = row(40);
+            coord.submit(mid_a, &xa, tx.clone());
+            coord.submit(mid_b, &xb, tx.clone());
+            inputs_a.push(xa);
+            inputs_b.push(xb);
+        }
+    };
+
+    // Phase 1 against generation 0, then hot-swap A while phase-1 rows
+    // may still be in flight, then phase 2 against generation 1.
+    submit_round(&mut inputs_a, &mut inputs_b);
+    Manifest::write_synthetic(root, &[&a_v2, &b])?;
+    coord.reload(mid_a)?;
+    println!("smoke: reloaded smoke_a (generation 1) under live traffic");
+    submit_round(&mut inputs_a, &mut inputs_b);
+    drop(tx);
+
+    let mut served = 0usize;
+    for reply in rx.iter() {
+        let resp = reply.map_err(|e| anyhow::anyhow!("request failed: {e}"))?;
+        served += 1;
+        // Ids are issued in submission order: even slots → A, odd → B,
+        // alternating within each phase round.
+        let round = resp.request_id as usize / 2;
+        if resp.model == mid_a {
+            let x = &inputs_a[round];
+            let want = match resp.generation {
+                0 => a_v1.predict(x),
+                1 => a_v2.predict(x),
+                g => anyhow::bail!("impossible generation {g} for smoke_a"),
+            };
+            ensure!(
+                resp.pred == want,
+                "smoke_a row {round}: pred {} != generation-{} golden {want}",
+                resp.pred,
+                resp.generation
+            );
+            // Phase 2 rows were submitted after reload() returned, so
+            // they must all be served by the new generation.
+            ensure!(
+                round < phase || resp.generation == 1,
+                "smoke_a row {round} served by generation {} after the swap",
+                resp.generation
+            );
+        } else {
+            ensure!(resp.model == mid_b && resp.generation == 0, "smoke_b untouched");
+            ensure!(resp.pred == b.predict(&inputs_b[round]), "smoke_b row {round}");
+        }
+    }
+    ensure!(served == 4 * phase, "zero-loss: {served} of {} replies", 4 * phase);
+
+    let pool = coord.metrics();
+    ensure!(pool.failed_batches == 0, "no forward call may fail");
+    ensure!(pool.rejected_requests == 0, "no width rejections");
+    let mut per_model_requests = 0;
+    for (mid, name) in coord.served_models() {
+        let pm = coord.metrics_for(mid).expect("served model has metrics");
+        println!(
+            "smoke: model {name}: {} requests in {} batches, p50 {:.0} µs p99 {:.0} µs",
+            pm.requests, pm.batches, pm.service_p50_us, pm.service_p99_us
+        );
+        per_model_requests += pm.requests;
+    }
+    ensure!(
+        per_model_requests == pool.requests,
+        "per-model requests ({per_model_requests}) must sum to the pool total ({})",
+        pool.requests
+    );
+    coord.shutdown();
+    println!("smoke: OK ({served} served, zero lost, hot-swap verified)");
     Ok(())
 }

@@ -4,6 +4,15 @@
 //! pending queue when it reaches `max_batch`, or when the *oldest* queued
 //! request has waited `max_wait` (deadline bound), mirroring the size/
 //! deadline policy of production inference routers.
+//!
+//! A multi-model worker keeps one pending queue *per model* (a batch
+//! must never mix feature widths or backends); [`BatcherConfig::plan_multi`]
+//! is the flush decision over that queue set: every queue shares the
+//! same `max_batch`/`max_wait` knobs, full queues drain oldest-head
+//! first, and the deadline is measured on the globally oldest head —
+//! so one model's burst cannot starve another model's aging requests.
+//! The single-queue [`BatcherConfig::plan`] is the degenerate one-model
+//! case of the same decision.
 
 use std::time::{Duration, Instant};
 
@@ -29,20 +38,53 @@ pub struct BatchPlan {
     pub take: usize,
 }
 
+/// One model's pending-queue state, as seen by the multi-model planner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueState {
+    pub queued: usize,
+    /// Enqueue time of the head (oldest) request; `None` ⇔ empty queue.
+    pub oldest: Option<Instant>,
+}
+
 impl BatcherConfig {
     /// Decide whether to flush now. `oldest` is the enqueue time of the
     /// head request (None ⇔ empty queue).
     pub fn plan(&self, queued: usize, oldest: Option<Instant>) -> Option<BatchPlan> {
-        if queued == 0 {
-            return None;
+        self.plan_multi(&[QueueState { queued, oldest }]).map(|(_, plan)| plan)
+    }
+
+    /// Multi-model flush decision: which queue (by index) flushes now,
+    /// and how much. At most one queue flushes per call — the worker
+    /// executes the batch and re-plans, so several due models drain in
+    /// consecutive rounds rather than one giant head-of-line batch.
+    ///
+    /// Order of precedence:
+    /// 1. **Deadline bound** — if the globally oldest head has waited
+    ///    `max_wait`, its queue flushes up to `max_batch` rows. Checked
+    ///    *first* so one model's sustained full-queue burst can never
+    ///    starve another model's overdue head (with a single queue the
+    ///    order is unobservable: an overdue full queue takes `max_batch`
+    ///    either way).
+    /// 2. **Size bound** — otherwise any queue at/over `max_batch`
+    ///    flushes a full `max_batch`; among several, the one whose
+    ///    *head* has waited longest goes first (ties → lowest index).
+    pub fn plan_multi(&self, queues: &[QueueState]) -> Option<(usize, BatchPlan)> {
+        let (head_ix, head) = queues
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| q.queued > 0)
+            .min_by_key(|&(i, q)| (q.oldest, i))?;
+        if let Some(t0) = head.oldest {
+            if t0.elapsed() >= self.max_wait {
+                return Some((head_ix, BatchPlan { take: head.queued.min(self.max_batch) }));
+            }
         }
-        if queued >= self.max_batch {
-            return Some(BatchPlan { take: self.max_batch });
-        }
-        match oldest {
-            Some(t0) if t0.elapsed() >= self.max_wait => Some(BatchPlan { take: queued }),
-            _ => None,
-        }
+        let full = queues
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| q.queued >= self.max_batch && q.queued > 0)
+            .min_by_key(|&(i, q)| (q.oldest, i));
+        full.map(|(i, _)| (i, BatchPlan { take: self.max_batch }))
     }
 
     /// Receive-poll granularity: a fraction of the deadline so a deadline
@@ -126,6 +168,89 @@ mod tests {
         queued -= p2.take;
         assert_eq!(queued, 0);
         assert_eq!(cfg.plan(queued, None), None, "empty queue after partial takes");
+    }
+
+    fn q(queued: usize, oldest: Option<Instant>) -> QueueState {
+        QueueState { queued, oldest }
+    }
+
+    #[test]
+    fn plan_multi_empty_or_young_queues_wait() {
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_secs(60) };
+        assert_eq!(cfg.plan_multi(&[]), None);
+        assert_eq!(cfg.plan_multi(&[q(0, None), q(0, None)]), None);
+        let now = Instant::now();
+        assert_eq!(cfg.plan_multi(&[q(3, Some(now)), q(5, Some(now))]), None);
+    }
+
+    #[test]
+    fn plan_multi_full_queue_flushes_oldest_head_first() {
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_secs(60) };
+        let older = Instant::now() - Duration::from_millis(10);
+        let newer = Instant::now();
+        // Only one queue is full: it flushes even though its head is the
+        // *younger* one (size beats deadline).
+        let plan = cfg.plan_multi(&[q(2, Some(older)), q(6, Some(newer))]);
+        assert_eq!(plan, Some((1, BatchPlan { take: 4 })));
+        // Two full queues: the older head drains first.
+        let plan = cfg.plan_multi(&[q(5, Some(newer)), q(4, Some(older))]);
+        assert_eq!(plan, Some((1, BatchPlan { take: 4 })));
+        // Equal heads tie-break to the lowest index.
+        let t = Instant::now();
+        let plan = cfg.plan_multi(&[q(0, None), q(4, Some(t)), q(9, Some(t))]);
+        assert_eq!(plan, Some((1, BatchPlan { take: 4 })));
+    }
+
+    #[test]
+    fn plan_multi_deadline_flushes_the_globally_oldest_model() {
+        let cfg = BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(5) };
+        let overdue = Instant::now() - Duration::from_millis(50);
+        let fresh = Instant::now();
+        // Model 2's head is overdue: it flushes everything it has, and
+        // the fresher model 0 keeps batching.
+        let plan = cfg.plan_multi(&[q(7, Some(fresh)), q(0, None), q(3, Some(overdue))]);
+        assert_eq!(plan, Some((2, BatchPlan { take: 3 })));
+        // The globally oldest head decides even when another queue is
+        // longer.
+        let older = Instant::now() - Duration::from_millis(80);
+        let plan = cfg.plan_multi(&[q(12, Some(overdue)), q(2, Some(older))]);
+        assert_eq!(plan, Some((1, BatchPlan { take: 2 })));
+    }
+
+    /// The anti-starvation guarantee: another model's full queue must
+    /// not preempt an *overdue* head. Under a sustained burst on model
+    /// 0 (its queue re-fills to `max_batch` before every replan), model
+    /// 1's single aging row still flushes once it passes `max_wait`.
+    #[test]
+    fn plan_multi_overdue_head_beats_competing_full_queue() {
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) };
+        let overdue = Instant::now() - Duration::from_millis(50);
+        let fresh = Instant::now();
+        let plan = cfg.plan_multi(&[q(400, Some(fresh)), q(1, Some(overdue))]);
+        assert_eq!(plan, Some((1, BatchPlan { take: 1 })));
+        // An overdue head on the full queue itself behaves like the old
+        // size rule: take is still capped at max_batch.
+        let plan = cfg.plan_multi(&[q(400, Some(overdue)), q(1, Some(fresh))]);
+        assert_eq!(plan, Some((0, BatchPlan { take: 4 })));
+    }
+
+    #[test]
+    fn plan_multi_single_queue_matches_plan() {
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(10) };
+        for (queued, oldest) in [
+            (0usize, None),
+            (3, Some(Instant::now())),
+            (3, Some(Instant::now() - Duration::from_secs(1))),
+            (8, Some(Instant::now())),
+            (20, Some(Instant::now())),
+        ] {
+            let single = cfg.plan(queued, oldest);
+            let multi = cfg.plan_multi(&[q(queued, oldest)]);
+            assert_eq!(single, multi.map(|(_, p)| p), "queued={queued}");
+            if let Some((i, _)) = multi {
+                assert_eq!(i, 0);
+            }
+        }
     }
 
     #[test]

@@ -1,10 +1,16 @@
 //! Coordinator metrics: latency histograms, throughput, batch shapes.
 //!
-//! Each worker records into its own [`Metrics`] (no cross-worker lock
-//! contention on the hot path); the coordinator aggregates them with
-//! [`Metrics::merge`] — histograms merge bucket-wise, counters sum — so
-//! pool-level p50/p99 are computed over *all* requests, not averaged
-//! across workers.
+//! Each worker records into its own [`Metrics`] — one slot **per served
+//! model** (batches never mix models, so every delta lands in exactly
+//! one slot), all under a single per-worker lock, with no cross-worker
+//! contention on the hot path. The coordinator aggregates the
+//! (worker × model) matrix with [`Metrics::merge`] — histograms merge
+//! bucket-wise, counters sum — along either axis: across everything for
+//! the pool view (`Coordinator::metrics`), across workers for one
+//! tenant's view (`Coordinator::metrics_for`), across models for one
+//! worker's view (`Coordinator::worker_metrics`). Merging is exact and
+//! order-independent (bucket-wise sums; percentile inputs are sorted at
+//! snapshot), so the per-model snapshots always sum to the pool totals.
 
 use crate::util::stats::Histogram;
 use crate::util::Ps;
@@ -156,6 +162,8 @@ mod tests {
     fn resp(latency_us: f64, hw: Option<(u64, usize)>, pred: usize) -> InferResponse {
         InferResponse {
             request_id: 0,
+            model: crate::coordinator::ModelId::new(0, 0),
+            generation: 0,
             pred,
             sums: vec![],
             hw_decision_latency: hw.map(|(ps, _)| Ps(ps)),
@@ -272,6 +280,57 @@ mod tests {
         assert_eq!(a.rejected_requests, c.rejected_requests);
         assert_eq!(a.shed_requests, c.shed_requests);
         assert_eq!(a.failed_batches, c.failed_batches);
+    }
+
+    /// The (worker × model) matrix merges to the same snapshot along
+    /// either axis order — the property `metrics()` / `metrics_for()` /
+    /// `worker_metrics()` consistency stands on.
+    #[test]
+    fn matrix_merge_is_axis_order_independent() {
+        // 2 workers × 2 models, disjoint recordings.
+        let mut cells = vec![vec![Metrics::default(), Metrics::default()]; 2];
+        for (w, row) in cells.iter_mut().enumerate() {
+            for (m, cell) in row.iter_mut().enumerate() {
+                for i in 1..=20 {
+                    let lat = (w * 100 + m * 10 + i) as f64;
+                    cell.record(&resp(lat, Some((i as u64 * 500, 0)), 0));
+                }
+                cell.record_batch(20, 50.0);
+                cell.record_shed((w + m) as u64);
+            }
+        }
+        // Pool view: fold workers then models…
+        let mut by_worker = Metrics::default();
+        for row in &cells {
+            for cell in row {
+                by_worker.merge(cell);
+            }
+        }
+        // …vs models then workers (the metrics_for axis).
+        let mut by_model = Metrics::default();
+        for m in 0..2 {
+            for row in &cells {
+                by_model.merge(&row[m]);
+            }
+        }
+        assert_eq!(by_worker.snapshot(), by_model.snapshot());
+        // And per-model partitions sum to the pool totals exactly.
+        let pool = by_worker.snapshot();
+        let per_model: Vec<MetricsSnapshot> = (0..2)
+            .map(|m| {
+                let mut agg = Metrics::default();
+                for row in &cells {
+                    agg.merge(&row[m]);
+                }
+                agg.snapshot()
+            })
+            .collect();
+        assert_eq!(per_model.iter().map(|s| s.requests).sum::<u64>(), pool.requests);
+        assert_eq!(per_model.iter().map(|s| s.batches).sum::<u64>(), pool.batches);
+        assert_eq!(
+            per_model.iter().map(|s| s.shed_requests).sum::<u64>(),
+            pool.shed_requests
+        );
     }
 
     #[test]

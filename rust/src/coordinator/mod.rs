@@ -1,16 +1,21 @@
-//! L3 serving coordinator: admission control, request routing, dynamic
-//! batching, a multi-worker execution pool, fail-soft error delivery,
+//! L3 serving coordinator: admission control, model-keyed request
+//! routing, dynamic batching, a multi-worker execution pool serving
+//! *many models at once*, live model hot-swap, fail-soft error delivery,
 //! metrics.
 //!
 //! The coordinator is the deployment shell around the paper's hardware:
-//! clients submit Booleanized samples, which are width-validated against
-//! the served model and bit-packed once at ingestion (the packed words
-//! are the native currency of the whole request path — see `tm::bits`);
-//! a dispatcher routes each request to one of `n_workers` worker threads
-//! (round-robin or least-loaded); each worker runs its own dynamic
-//! batcher (size- and deadline-bounded, vLLM-router style) and *owns*
-//! its execution backend — constructed inside the worker thread from a
-//! [`BackendSpec`], because PJRT clients are not `Send` while native
+//! clients submit Booleanized samples *for a named model* (interned to a
+//! [`ModelId`] at pool startup), which are width-validated against that
+//! model's width table entry and bit-packed once at ingestion (the
+//! packed words are the native currency of the whole request path — see
+//! `tm::bits`); a dispatcher routes each request to one of `n_workers`
+//! worker threads (round-robin or least-loaded); each worker runs its
+//! own dynamic batcher with **one pending queue per model** — a batch
+//! never mixes feature widths or backends; full queues drain oldest-head
+//! first and the shared deadline is measured on the globally oldest head
+//! (see [`BatcherConfig::plan_multi`]) — and *owns* one backend per
+//! served model, constructed inside the worker thread through its own
+//! [`ModelRegistry`], because PJRT clients are not `Send` while native
 //! backends are. Simulated hardware is just another backend
 //! (`BackendSpec::TimeDomain` → `runtime::HwBackend`, one
 //! independently-seeded die per worker): the worker-side
@@ -18,28 +23,42 @@
 //! through the backend's hardware engine for on-chip decision latency,
 //! with no backend-specific plumbing anywhere in the pool.
 //!
+//! **Hot-swap.** [`Coordinator::reload`] replaces one model's backend in
+//! every worker while the pool keeps serving: the model's generation
+//! counter is bumped, each worker first drains the rows it already holds
+//! for that model against the old backend (rows and control messages
+//! share one ordered channel, so "submitted before the reload" ⇒
+//! "served by the old generation"), then re-opens the artifact through
+//! `ModelRegistry::invalidate` + re-construction and serves subsequent
+//! rows from the new backend. Every [`InferResponse`] carries the
+//! generation that served it. Zero requests are lost across a swap; a
+//! worker whose re-open fails keeps serving the previous generation and
+//! the error is returned to the reloader.
+//!
 //! **The fail-soft contract.** Every call to [`Coordinator::submit`]
 //! delivers exactly one [`Reply`] — `Ok(InferResponse)` or a typed
 //! [`InferError`] — so callers never diagnose a bare closed channel.
-//! Malformed rows are refused at ingestion (`WidthMismatch`) before they
-//! can join a batch, overload is shed against a bounded per-worker queue
-//! (`QueueFull`, policy [`ShedPolicy`]), and a backend failure on a
-//! batch falls back to per-row retry so one bad row cannot poison its
-//! `max_batch − 1` neighbors (`BackendFailed` goes only to the rows that
-//! actually fail). Dropped work is visible: see the
+//! Unregistered models are refused at ingestion (`UnknownModel`), as are
+//! malformed rows (`WidthMismatch`, against the *per-model* width), so
+//! neither can join a batch; overload is shed against a bounded
+//! per-worker queue (`QueueFull`, policy [`ShedPolicy`]), and a backend
+//! failure on a batch falls back to per-row retry so one bad row cannot
+//! poison its `max_batch − 1` neighbors (`BackendFailed` goes only to
+//! the rows that actually fail). Dropped work is visible: see the
 //! `rejected_requests` / `shed_requests` / `failed_batches` counters in
-//! [`MetricsSnapshot`]. Everything is std-threads + channels (tokio is
-//! not in the offline crate set — DESIGN.md §7).
+//! [`MetricsSnapshot`] — pool-wide via [`Coordinator::metrics`], per
+//! tenant via [`Coordinator::metrics_for`]. Everything is std-threads +
+//! channels (tokio is not in the offline crate set — DESIGN.md §7).
 
 pub mod batcher;
 pub mod metrics;
 
-pub use batcher::{BatchPlan, BatcherConfig};
+pub use batcher::{BatchPlan, BatcherConfig, QueueState};
 pub use metrics::{Metrics, MetricsSnapshot};
 
 use std::num::NonZeroU32;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
@@ -50,13 +69,51 @@ use crate::runtime::{BackendSpec, ForwardOutput, InferenceBackend, ModelRegistry
 use crate::tm::{BitVec64, PackedBatch};
 use crate::util::Ps;
 
+/// Interned identity of one served model: a dense index into the pool's
+/// model table, assigned by [`Coordinator::start_multi`] in serve-list
+/// order. Requests carry this `Copy` id, never a per-request `String` —
+/// resolve a name once with [`Coordinator::model_id`] (or use
+/// [`Coordinator::submit_named`], which resolves per call). Ids are only
+/// meaningful on the pool that issued them: each carries its pool's
+/// process-unique tag, so a foreign or stale id — even one whose index
+/// happens to be in range — is answered with
+/// [`InferError::UnknownModel`], never silently routed to whatever
+/// model occupies that index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId {
+    /// Process-unique tag of the issuing pool.
+    pool: u32,
+    index: u32,
+}
+
+impl ModelId {
+    pub(crate) fn new(pool: u32, index: u32) -> ModelId {
+        ModelId { pool, index }
+    }
+
+    /// Dense index into the issuing pool's model table (serve-list
+    /// order).
+    pub fn index(self) -> usize {
+        self.index as usize
+    }
+}
+
+impl std::fmt::Display for ModelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "model#{}@pool{}", self.index, self.pool)
+    }
+}
+
 /// One inference request. Features are bit-packed at ingestion
-/// ([`Coordinator::submit`] validates the width and packs the caller's
-/// bools exactly once), so the batcher, workers, and backends all
-/// consume the packed form — batch assembly is a word memcpy per
-/// request.
+/// ([`Coordinator::submit`] validates the width against the request's
+/// model and packs the caller's bools exactly once), so the batcher,
+/// workers, and backends all consume the packed form — batch assembly is
+/// a word memcpy per request.
 #[derive(Debug)]
 pub struct InferRequest {
+    /// Which model this row is for — the batching key: a worker groups
+    /// pending rows by model, so a batch never mixes widths or backends.
+    pub model: ModelId,
     pub features: BitVec64,
     /// Where to deliver the response (or the typed error).
     pub reply: mpsc::Sender<Reply>,
@@ -67,6 +124,13 @@ pub struct InferRequest {
 #[derive(Debug, Clone, PartialEq)]
 pub struct InferResponse {
     pub request_id: u64,
+    /// The model that served this request.
+    pub model: ModelId,
+    /// Hot-swap generation of the backend that served it: 0 until the
+    /// first successful [`Coordinator::reload`] of this model, then the
+    /// reload's generation. Under a concurrent reload, a reply carries
+    /// whichever generation actually computed it.
+    pub generation: u64,
     /// Functional argmax class from the executing backend.
     pub pred: usize,
     /// Signed class sums.
@@ -96,8 +160,11 @@ pub struct InferResponse {
 /// `err.downcast_ref::<InferError>()`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum InferError {
-    /// The feature row's width does not match the served model. Rejected
-    /// at admission, before the row can join (and poison) a batch.
+    /// The request named a model this pool does not serve (or carried a
+    /// foreign/stale [`ModelId`]). Rejected at admission.
+    UnknownModel { name: String },
+    /// The feature row's width does not match its model. Rejected at
+    /// admission, before the row can join (and poison) a batch.
     WidthMismatch { got: usize, expected: usize },
     /// The chosen worker's bounded queue was full and the shed policy
     /// dropped this request. `depth` is the worker's in-flight load when
@@ -114,6 +181,9 @@ pub enum InferError {
 impl std::fmt::Display for InferError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
+            InferError::UnknownModel { name } => {
+                write!(f, "model {name:?} is not served by this pool")
+            }
             InferError::WidthMismatch { got, expected } => {
                 write!(f, "feature width {got} does not match model width {expected}")
             }
@@ -167,10 +237,11 @@ pub enum ShedPolicy {
     /// Admit the incoming request and have the worker shed its *stalest*
     /// queued request instead, so the freshest work survives —
     /// event-driven clients usually prefer a current answer over a stale
-    /// one. A drop-oldest queue at its limit also flushes immediately
-    /// (eviction keeps replacing the queue head, which would otherwise
-    /// reset the batcher's age deadline forever under sustained
-    /// overload).
+    /// one. Staleness is global across the worker's per-model queues
+    /// (request ids are issued monotonically at submit). A drop-oldest
+    /// queue at its limit also flushes immediately (eviction keeps
+    /// replacing the queue head, which would otherwise reset the
+    /// batcher's age deadline forever under sustained overload).
     DropOldest,
 }
 
@@ -240,20 +311,22 @@ impl ReplayPolicy {
 /// Pool-level configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Per-worker dynamic batching policy.
+    /// Per-worker dynamic batching policy (shared by every served
+    /// model's pending queue).
     pub batcher: BatcherConfig,
-    /// Number of worker threads (≥ 1), each owning its own backend.
+    /// Number of worker threads (≥ 1), each owning one backend per
+    /// served model.
     pub n_workers: usize,
     pub dispatch: DispatchPolicy,
-    /// How each worker constructs its execution backend.
+    /// How each worker constructs its execution backends.
     pub backend: BackendSpec,
     /// Which served rows replay through the backend's hardware engine.
     pub replay: ReplayPolicy,
     /// Bound on each worker's in-flight load (requests dispatched to it
     /// but not yet answered — the same `depth` gauge least-loaded
-    /// dispatch reads). `None` accepts without bound. With multiple
-    /// concurrent submitters the bound is approximate: admission reads
-    /// the gauge without a lock.
+    /// dispatch reads), across all models. `None` accepts without
+    /// bound. With multiple concurrent submitters the bound is
+    /// approximate: admission reads the gauge without a lock.
     pub queue_limit: Option<usize>,
     /// What to shed when a worker is at `queue_limit`.
     pub shed: ShedPolicy,
@@ -278,63 +351,129 @@ struct WorkItem {
     req: InferRequest,
 }
 
-/// One worker thread's handle: its queue, load gauge, metrics, and join
-/// handle.
+/// What travels down a worker's channel: inference rows interleaved, in
+/// order, with hot-swap control messages. The shared ordered channel is
+/// what makes reload zero-loss: a row enqueued before the `Reload`
+/// control is flushed against the old backend, a row after it meets the
+/// new one.
+enum WorkMsg {
+    Infer(WorkItem),
+    Reload {
+        /// Index into the worker's model slots (== [`ModelId::index`]).
+        model_ix: usize,
+        generation: u64,
+        ack: mpsc::Sender<ReloadReport>,
+    },
+}
+
+/// One worker's answer to a `Reload` control: the new backend's feature
+/// width, or why the swap failed (in which case the worker keeps serving
+/// the previous generation).
+struct ReloadReport {
+    worker: usize,
+    result: Result<usize>,
+}
+
+/// One worker thread's handle: its queue, load gauge, per-model metrics,
+/// and join handle.
 struct WorkerHandle {
-    tx: Option<mpsc::Sender<WorkItem>>,
+    tx: Option<mpsc::Sender<WorkMsg>>,
     /// Requests dispatched but not yet answered (least-loaded gauge and
-    /// admission-control bound).
+    /// admission-control bound), across all models.
     depth: Arc<AtomicUsize>,
-    metrics: Arc<Mutex<Metrics>>,
+    /// One [`Metrics`] per served model (serve-list order), under a
+    /// single lock per worker.
+    metrics: Arc<Mutex<Vec<Metrics>>>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
-/// Handle to a running coordinator pool for one model.
+/// Coordinator-side state for one served model.
+struct ModelEntry {
+    name: String,
+    /// Feature width gate for admission, populated from worker
+    /// ready-reports at startup (every successful start has one) and
+    /// refreshed by reload acks — atomic because a reload commits the
+    /// new width while submitters read it.
+    n_features: AtomicUsize,
+    /// Hot-swap generation counter; each [`Coordinator::reload`] attempt
+    /// consumes the next value.
+    generation: AtomicU64,
+    /// Admission-time counters (width rejections, unknown-model hits
+    /// resolved to this entry never happen — unknown models have no
+    /// entry — and reject-new sheds). Lock-free on purpose: the
+    /// fast-reject path must not serialize overloaded client threads on
+    /// a mutex. Folded into [`Coordinator::metrics`] /
+    /// [`Coordinator::metrics_for`] at snapshot time.
+    admission_rejected: AtomicU64,
+    admission_shed: AtomicU64,
+}
+
+/// Process-wide pool-instance counter behind [`ModelId`]'s pool tag.
+static POOL_TAG: AtomicU64 = AtomicU64::new(0);
+
+/// Handle to a running multi-model coordinator pool.
 pub struct Coordinator {
     workers: Vec<WorkerHandle>,
     next_id: AtomicU64,
     rr: AtomicUsize,
     dispatch: DispatchPolicy,
-    /// Feature width of the served model, cached at startup so
-    /// [`Coordinator::submit`] can gate admission without a backend
-    /// round-trip.
-    n_features: usize,
+    /// This pool's [`ModelId`] tag: ids from other pools never resolve
+    /// here, whatever their index.
+    pool_tag: u32,
+    /// Per-model table, indexed by [`ModelId`] (serve-list order).
+    models: Vec<ModelEntry>,
     queue_limit: Option<usize>,
     shed: ShedPolicy,
-    /// Admission-time counters (width rejections, reject-new sheds).
-    /// Lock-free on purpose: the fast-reject path must not serialize
-    /// overloaded client threads on a mutex. Folded into
-    /// [`Coordinator::metrics`] at snapshot time.
-    admission_rejected: AtomicU64,
-    admission_shed: AtomicU64,
+    /// Serializes [`Coordinator::reload`] calls: two racing reloads
+    /// would interleave their per-worker control messages and could
+    /// leave workers on different final backends.
+    reload_lock: Mutex<()>,
     shutdown: Arc<AtomicBool>,
-    pub model: String,
 }
 
 impl Coordinator {
-    /// Start a worker pool for `model` over the artifacts at `root`.
-    ///
-    /// Each worker thread constructs its own [`ModelRegistry`] and backend
-    /// from `cfg.backend` (PJRT backends are not `Send`; native backends
-    /// are, but per-worker ownership keeps the paths uniform — and gives
-    /// time-domain backends one independently-seeded simulated die per
-    /// worker via [`BackendSpec::for_worker`]). Startup errors from every
-    /// worker are reported back before `start` returns; on success each
-    /// worker also reports the model's feature width, which `start`
-    /// caches for the admission-control width gate in
-    /// [`Coordinator::submit`].
+    /// Start a worker pool serving the single model `model` — the
+    /// one-model convenience over [`Coordinator::start_multi`].
     pub fn start(root: PathBuf, model: &str, cfg: CoordinatorConfig) -> Result<Coordinator> {
+        Self::start_multi(root, &[model], cfg)
+    }
+
+    /// Start a worker pool serving every model in `models` over the
+    /// artifacts at `root`.
+    ///
+    /// Each worker thread constructs its own [`ModelRegistry`] and one
+    /// backend per model from `cfg.backend` (PJRT backends are not
+    /// `Send`; native backends are, but per-worker ownership keeps the
+    /// paths uniform — and gives time-domain backends one
+    /// independently-seeded simulated die per worker via
+    /// [`BackendSpec::for_worker`]). Startup errors from every worker
+    /// are reported back before `start_multi` returns — an unknown model
+    /// name fails here, not at first request; on success each worker
+    /// also reports the models' feature widths, which populate the
+    /// per-model width table behind the admission gate in
+    /// [`Coordinator::submit`].
+    pub fn start_multi(
+        root: PathBuf,
+        models: &[&str],
+        cfg: CoordinatorConfig,
+    ) -> Result<Coordinator> {
         ensure!(cfg.n_workers >= 1, "coordinator needs at least one worker");
+        ensure!(!models.is_empty(), "coordinator needs at least one model");
+        ensure!(cfg.batcher.max_batch >= 1, "batcher max_batch must be ≥ 1");
+        for (i, m) in models.iter().enumerate() {
+            ensure!(!models[..i].contains(m), "duplicate model {m:?} in the serve list");
+        }
+        let names: Arc<Vec<String>> = Arc::new(models.iter().map(|s| s.to_string()).collect());
         let shutdown = Arc::new(AtomicBool::new(false));
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<usize>>>();
         let mut workers = Vec::with_capacity(cfg.n_workers);
         for w in 0..cfg.n_workers {
-            let (tx, rx) = mpsc::channel::<WorkItem>();
+            let (tx, rx) = mpsc::channel::<WorkMsg>();
             let depth = Arc::new(AtomicUsize::new(0));
-            let metrics = Arc::new(Mutex::new(Metrics::default()));
+            let metrics = Arc::new(Mutex::new(vec![Metrics::default(); names.len()]));
             let join = {
                 let root = root.clone();
-                let model = model.to_string();
+                let names = names.clone();
                 let spec = cfg.backend.clone().for_worker(w);
                 let batcher = cfg.batcher;
                 let queue_limit = cfg.queue_limit;
@@ -345,32 +484,36 @@ impl Coordinator {
                 let shutdown = shutdown.clone();
                 let ready_tx = ready_tx.clone();
                 std::thread::Builder::new()
-                    .name(format!("tdpc-worker-{model}-{w}"))
+                    .name(format!("tdpc-worker-{w}"))
                     .spawn(move || {
-                        // Build the backend inside the owning thread.
-                        let backend = match ModelRegistry::open_with(&root, spec)
-                            .and_then(|reg| reg.backend(&model))
-                        {
-                            Ok(b) => b,
-                            Err(e) => {
-                                let _ = ready_tx.send(Err(e));
-                                return;
-                            }
-                        };
-                        let _ = ready_tx.send(Ok(backend.n_features()));
+                        // Build the registry and every model's backend
+                        // inside the owning thread.
+                        let (registry, slots, widths) =
+                            match open_worker_models(&root, spec, &names) {
+                                Ok(opened) => opened,
+                                Err(e) => {
+                                    let _ = ready_tx.send(Err(e));
+                                    return;
+                                }
+                            };
+                        let _ = ready_tx.send(Ok(widths));
                         drop(ready_tx);
-                        worker_loop(
-                            w,
-                            backend.as_ref(),
-                            batcher,
+                        Worker {
+                            index: w,
+                            registry,
+                            slots,
+                            pending: names.iter().map(|_| Vec::new()).collect(),
+                            states: Vec::with_capacity(names.len()),
+                            cfg: batcher,
                             queue_limit,
                             shed,
                             replay,
-                            rx,
                             metrics,
-                            shutdown,
                             depth,
-                        )
+                            shutdown,
+                            replay_seq: 0,
+                        }
+                        .run(rx)
                     })?
             };
             workers.push(WorkerHandle { tx: Some(tx), depth, metrics, join: Some(join) });
@@ -378,24 +521,24 @@ impl Coordinator {
         drop(ready_tx);
 
         // Collect one readiness report per worker before declaring the
-        // pool up.
+        // pool up; the first successful report populates the width table.
         let mut startup_err: Option<anyhow::Error> = None;
-        let mut n_features: Option<usize> = None;
+        let mut widths: Option<Vec<usize>> = None;
         for _ in 0..cfg.n_workers {
             let report = ready_rx
                 .recv()
                 .unwrap_or_else(|_| Err(anyhow!("coordinator worker died during startup")));
             match report {
-                Ok(width) => {
-                    n_features.get_or_insert(width);
+                Ok(ws) => {
+                    widths.get_or_insert(ws);
                 }
                 Err(e) => {
                     startup_err.get_or_insert(e);
                 }
             }
         }
-        let n_features = match (startup_err, n_features) {
-            (None, Some(width)) => width,
+        let widths = match (startup_err, widths) {
+            (None, Some(ws)) => ws,
             (err, _) => {
                 shutdown.store(true, Ordering::SeqCst);
                 for h in &mut workers {
@@ -411,18 +554,29 @@ impl Coordinator {
             }
         };
 
+        let entries = names
+            .iter()
+            .zip(&widths)
+            .map(|(name, &width)| ModelEntry {
+                name: name.clone(),
+                n_features: AtomicUsize::new(width),
+                generation: AtomicU64::new(0),
+                admission_rejected: AtomicU64::new(0),
+                admission_shed: AtomicU64::new(0),
+            })
+            .collect();
+
         Ok(Coordinator {
             workers,
             next_id: AtomicU64::new(0),
             rr: AtomicUsize::new(0),
             dispatch: cfg.dispatch,
-            n_features,
+            pool_tag: POOL_TAG.fetch_add(1, Ordering::Relaxed) as u32,
+            models: entries,
             queue_limit: cfg.queue_limit,
             shed: cfg.shed,
-            admission_rejected: AtomicU64::new(0),
-            admission_shed: AtomicU64::new(0),
+            reload_lock: Mutex::new(()),
             shutdown,
-            model: model.to_string(),
         })
     }
 
@@ -430,10 +584,38 @@ impl Coordinator {
         self.workers.len()
     }
 
-    /// Feature width of the served model — the width
-    /// [`Coordinator::submit`] admits against.
-    pub fn n_features(&self) -> usize {
-        self.n_features
+    /// Resolve a model name to this pool's interned [`ModelId`] (`None`
+    /// if the pool does not serve it). Resolve once, submit many.
+    pub fn model_id(&self, name: &str) -> Option<ModelId> {
+        self.models
+            .iter()
+            .position(|m| m.name == name)
+            .map(|i| ModelId::new(self.pool_tag, i as u32))
+    }
+
+    /// The served models, in [`ModelId`] order.
+    pub fn served_models(&self) -> impl Iterator<Item = (ModelId, &str)> + '_ {
+        self.models
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (ModelId::new(self.pool_tag, i as u32), e.name.as_str()))
+    }
+
+    /// This pool's entry for `model`, `None` for a foreign or
+    /// out-of-range id — the single resolution point every model-keyed
+    /// API goes through.
+    fn entry(&self, model: ModelId) -> Option<&ModelEntry> {
+        if model.pool != self.pool_tag {
+            return None;
+        }
+        self.models.get(model.index())
+    }
+
+    /// Feature width of one served model — the width
+    /// [`Coordinator::submit`] admits that model's rows against. `None`
+    /// for a foreign or unknown id.
+    pub fn n_features_for(&self, model: ModelId) -> Option<usize> {
+        Some(self.entry(model)?.n_features.load(Ordering::Relaxed))
     }
 
     fn pick_worker(&self) -> usize {
@@ -451,23 +633,30 @@ impl Coordinator {
         }
     }
 
-    /// Submit asynchronously. Exactly one [`Reply`] is delivered on
-    /// `reply` for every call: a response, or a typed [`InferError`]
-    /// when the request is refused at admission (width gate, bounded
-    /// queue), shed, or fails in the backend. Returns the request id.
+    /// Submit asynchronously for one model. Exactly one [`Reply`] is
+    /// delivered on `reply` for every call: a response, or a typed
+    /// [`InferError`] when the request is refused at admission (unknown
+    /// model, width gate, bounded queue), shed, or fails in the backend.
+    /// Returns the request id.
     ///
-    /// The Boolean feature row is validated against the served model's
-    /// width *here*, at ingestion — a malformed row is answered with
+    /// The Boolean feature row is validated against *its model's* width
+    /// *here*, at ingestion — a malformed row is answered with
     /// [`InferError::WidthMismatch`] before it can join (and poison) a
     /// batch — then bit-packed once, so everything downstream (dispatch,
-    /// batching, the backend forward pass) works on `u64` words.
-    pub fn submit(&self, features: &[bool], reply: mpsc::Sender<Reply>) -> u64 {
+    /// per-model batching, the backend forward pass) works on `u64`
+    /// words.
+    pub fn submit(&self, model: ModelId, features: &[bool], reply: mpsc::Sender<Reply>) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        if features.len() != self.n_features {
-            self.admission_rejected.fetch_add(1, Ordering::Relaxed);
+        let Some(entry) = self.entry(model) else {
+            let _ = reply.send(Err(InferError::UnknownModel { name: model.to_string() }));
+            return id;
+        };
+        let expected = entry.n_features.load(Ordering::Relaxed);
+        if features.len() != expected {
+            entry.admission_rejected.fetch_add(1, Ordering::Relaxed);
             let _ = reply.send(Err(InferError::WidthMismatch {
                 got: features.len(),
-                expected: self.n_features,
+                expected,
             }));
             return id;
         }
@@ -483,10 +672,10 @@ impl Coordinator {
                     Some(alt) => w = alt,
                     None => {
                         // An admission-time event: counted lock-free on
-                        // the coordinator, keeping overloaded client
-                        // threads off every metrics mutex.
+                        // the coordinator (per model), keeping overloaded
+                        // client threads off every metrics mutex.
                         let depth = self.workers[w].depth.load(Ordering::Relaxed);
-                        self.admission_shed.fetch_add(1, Ordering::Relaxed);
+                        entry.admission_shed.fetch_add(1, Ordering::Relaxed);
                         let _ = reply.send(Err(InferError::QueueFull { depth, limit }));
                         return id;
                     }
@@ -502,56 +691,179 @@ impl Coordinator {
         let item = WorkItem {
             id,
             req: InferRequest {
+                model,
                 features: BitVec64::from_bools(features),
                 reply,
                 submitted: Instant::now(),
             },
         };
-        if let Err(mpsc::SendError(item)) = tx.send(item) {
+        if let Err(mpsc::SendError(msg)) = tx.send(WorkMsg::Infer(item)) {
             // The worker died; the item comes back, so its caller still
             // gets a typed answer instead of a dead channel.
             worker.depth.fetch_sub(1, Ordering::Relaxed);
-            let _ = item.req.reply.send(Err(InferError::ShuttingDown));
+            if let WorkMsg::Infer(item) = msg {
+                let _ = item.req.reply.send(Err(InferError::ShuttingDown));
+            }
         }
         id
+    }
+
+    /// [`Coordinator::submit`] with per-call name resolution: an
+    /// unregistered name is answered with a typed
+    /// [`InferError::UnknownModel`] on the reply channel (still exactly
+    /// one [`Reply`] per call). Hot paths should resolve once via
+    /// [`Coordinator::model_id`] and use `submit`.
+    pub fn submit_named(&self, model: &str, features: &[bool], reply: mpsc::Sender<Reply>) -> u64 {
+        match self.model_id(model) {
+            Some(mid) => self.submit(mid, features, reply),
+            None => {
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Err(InferError::UnknownModel { name: model.to_string() }));
+                id
+            }
+        }
     }
 
     /// Convenience blocking call. Rejected, shed, and backend-failed
     /// requests surface as a typed [`InferError`] (recoverable via
     /// `err.downcast_ref::<InferError>()`), never a bare closed-channel
     /// error.
-    pub fn infer_blocking(&self, features: &[bool]) -> Result<InferResponse> {
+    pub fn infer_blocking(&self, model: ModelId, features: &[bool]) -> Result<InferResponse> {
         let (tx, rx) = mpsc::channel();
-        self.submit(features, tx);
+        self.submit(model, features, tx);
         let reply = rx.recv().context("coordinator dropped the reply channel")?;
         reply.map_err(anyhow::Error::from)
     }
 
-    /// Aggregated metrics across all workers plus admission-time events
-    /// (latency histograms merge, counters sum). Admission-time events —
-    /// width rejections and reject-new sheds — happen before any worker
-    /// is involved and are counted lock-free on the coordinator, so they
-    /// appear in this aggregate but not in
+    /// Hot-swap one model: re-open its artifact in every worker while
+    /// the pool keeps serving, losing zero requests.
+    ///
+    /// The model's generation counter is bumped, then a generation-
+    /// stamped control message is enqueued on every worker's ordered
+    /// channel. Each worker, on reaching it, (1) flushes the rows it
+    /// already holds for that model against the old backend — rows
+    /// submitted before `reload` drain against the generation they saw —
+    /// then (2) invalidates the model in its [`ModelRegistry`] and
+    /// re-opens it, so the artifact (and its manifest) are re-read from
+    /// disk, and (3) serves every subsequent row from the new backend,
+    /// stamping replies with the new generation. Blocks until every
+    /// worker has swapped (or failed).
+    ///
+    /// Fail-soft: a worker whose re-open fails (missing/corrupt new
+    /// artifact) keeps serving the previous generation and this call
+    /// returns its error — no worker ever serves from a half-loaded
+    /// model, and no prediction is ever wrong. On a *partial* failure
+    /// (some workers swapped, some refused) the pool serves mixed
+    /// generations until a retry succeeds — observable per reply via
+    /// [`InferResponse::generation`]; if the retrain also changed the
+    /// feature width, rows meeting the wrong-width side are answered
+    /// with a typed `WidthMismatch` by the worker-side assembly guard
+    /// (the admission width table commits only on full success), so a
+    /// failed width-changing swap degrades to typed errors, not silent
+    /// misprediction — retry `reload` to converge. A failed attempt
+    /// still consumes a generation number. Reloads are serialized
+    /// internally.
+    pub fn reload(&self, model: ModelId) -> Result<()> {
+        let entry = self
+            .entry(model)
+            .ok_or_else(|| anyhow!("{model} is not served by this pool"))?;
+        let _swap = self.reload_lock.lock().unwrap();
+        let generation = entry.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        let (ack_tx, ack_rx) = mpsc::channel::<ReloadReport>();
+        let mut sent = 0usize;
+        for wk in &self.workers {
+            if let Some(tx) = wk.tx.as_ref() {
+                let msg =
+                    WorkMsg::Reload { model_ix: model.index(), generation, ack: ack_tx.clone() };
+                if tx.send(msg).is_ok() {
+                    sent += 1;
+                }
+            }
+        }
+        drop(ack_tx);
+        ensure!(sent == self.workers.len(), "coordinator is shutting down");
+        let mut new_width: Option<usize> = None;
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..sent {
+            match ack_rx.recv() {
+                Ok(ReloadReport { result: Ok(width), .. }) => {
+                    new_width.get_or_insert(width);
+                }
+                Ok(ReloadReport { worker, result: Err(e) }) => {
+                    first_err
+                        .get_or_insert(e.context(format!("worker {worker} failed to swap")));
+                }
+                Err(_) => {
+                    first_err.get_or_insert(anyhow!("a worker died during the reload"));
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e).with_context(|| {
+                format!(
+                    "reloading model {:?} (failed workers keep serving the previous generation)",
+                    entry.name
+                )
+            });
+        }
+        if let Some(width) = new_width {
+            entry.n_features.store(width, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Aggregated metrics across all workers and models plus
+    /// admission-time events (latency histograms merge, counters sum).
+    /// Admission-time events — unknown-model/width rejections and
+    /// reject-new sheds — happen before any worker is involved and are
+    /// counted lock-free on the coordinator, so they appear in this
+    /// aggregate (and in [`Coordinator::metrics_for`]) but not in
     /// [`Coordinator::worker_metrics`]; drop-oldest sheds and batch
-    /// failures are worker-side and appear in both. (The worker-side
-    /// assembly guard in `execute_batch` — unreachable through the
-    /// public API — attributes its rejection to the worker that caught
-    /// it.)
+    /// failures are worker-side and appear in both. Per-model snapshots
+    /// sum exactly to this aggregate: every event is recorded under the
+    /// model it belongs to, and histogram merges are bucket-wise.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut agg = Metrics::default();
         for w in &self.workers {
-            agg.merge(&w.metrics.lock().unwrap());
+            for m in w.metrics.lock().unwrap().iter() {
+                agg.merge(m);
+            }
         }
-        agg.record_rejected(self.admission_rejected.load(Ordering::Relaxed));
-        agg.record_shed(self.admission_shed.load(Ordering::Relaxed));
+        for e in &self.models {
+            agg.record_rejected(e.admission_rejected.load(Ordering::Relaxed));
+            agg.record_shed(e.admission_shed.load(Ordering::Relaxed));
+        }
         agg.snapshot()
     }
 
-    /// Per-worker metrics snapshots, in worker-index order.
+    /// One model's metrics, merged across every worker (its share of the
+    /// pool aggregate: same histograms and counters, restricted to this
+    /// tenant — so per-model p50/p99 and fail-soft counters are
+    /// observable independently). `None` for an unknown id.
+    pub fn metrics_for(&self, model: ModelId) -> Option<MetricsSnapshot> {
+        let entry = self.entry(model)?;
+        let mut agg = Metrics::default();
+        for w in &self.workers {
+            agg.merge(&w.metrics.lock().unwrap()[model.index()]);
+        }
+        agg.record_rejected(entry.admission_rejected.load(Ordering::Relaxed));
+        agg.record_shed(entry.admission_shed.load(Ordering::Relaxed));
+        Some(agg.snapshot())
+    }
+
+    /// Per-worker metrics snapshots (each worker's models merged), in
+    /// worker-index order.
     pub fn worker_metrics(&self) -> Vec<MetricsSnapshot> {
         self.workers
             .iter()
-            .map(|w| w.metrics.lock().unwrap().snapshot())
+            .map(|w| {
+                let per_model = w.metrics.lock().unwrap();
+                let mut agg = Metrics::default();
+                for m in per_model.iter() {
+                    agg.merge(m);
+                }
+                agg.snapshot()
+            })
             .collect()
     }
 
@@ -563,7 +875,7 @@ impl Coordinator {
     fn stop_and_join(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         // Drop all senders first so every worker sees Disconnected and
-        // flushes its pending queue, then join.
+        // flushes its pending queues, then join.
         for w in &mut self.workers {
             w.tx = None;
         }
@@ -581,6 +893,28 @@ impl Drop for Coordinator {
     }
 }
 
+/// Open one worker's registry and a backend per served model, reporting
+/// the models' feature widths (serve-list order). Runs inside the worker
+/// thread; any failure (missing artifact, unknown model name) aborts
+/// pool startup.
+fn open_worker_models(
+    root: &Path,
+    spec: BackendSpec,
+    names: &[String],
+) -> Result<(ModelRegistry, Vec<ModelSlot>, Vec<usize>)> {
+    let registry = ModelRegistry::open_with(root, spec)?;
+    let mut slots = Vec::with_capacity(names.len());
+    let mut widths = Vec::with_capacity(names.len());
+    for name in names {
+        let backend = registry
+            .backend(name)
+            .with_context(|| format!("opening model {name:?}"))?;
+        widths.push(backend.n_features());
+        slots.push(ModelSlot { name: name.clone(), generation: 0, backend });
+    }
+    Ok((registry, slots, widths))
+}
+
 /// Reject-new admission spill: when the dispatcher's pick is at the
 /// queue limit, the least-loaded worker with room (ties → lowest index)
 /// should take the request instead; `None` means the whole pool is
@@ -593,124 +927,248 @@ fn spill_target<I: Iterator<Item = usize>>(depths: I, limit: usize) -> Option<us
         .map(|(i, _)| i)
 }
 
-/// Greedily drain ready channel items into `pending`, never growing it
-/// past `max_batch`. Regression guard: the old loop pushed *before*
-/// checking the bound, so a queue the `recv_timeout` arm had already
-/// filled to `max_batch` could over-fill on the next pass.
-fn drain_ready(rx: &mpsc::Receiver<WorkItem>, pending: &mut Vec<WorkItem>, max_batch: usize) {
-    while pending.len() < max_batch {
-        match rx.try_recv() {
-            Ok(item) => pending.push(item),
-            Err(_) => break,
-        }
-    }
+/// The model (by slot index) with the oldest head request (ties →
+/// lowest index) and a plan to flush up to `max_batch` of it — the
+/// forced-flush decision used on graceful drain and post-shed overload,
+/// where waiting on the age deadline would be wrong. `None` ⇔ every
+/// queue is empty.
+fn force_flush(pending: &[Vec<WorkItem>], max_batch: usize) -> Option<(usize, BatchPlan)> {
+    pending
+        .iter()
+        .enumerate()
+        .filter(|(_, q)| !q.is_empty())
+        .min_by_key(|&(i, q)| (q[0].req.submitted, i))
+        .map(|(i, q)| (i, BatchPlan { take: q.len().min(max_batch) }))
 }
 
-/// Drop-oldest shedding: trim `pending` to its freshest `limit` rows,
-/// answering each evicted (stalest-first) request with
-/// [`InferError::QueueFull`] and releasing its load. Trims by the
-/// *local* queue length, never the global gauge: the gauge counts
-/// channel backlog too, and shedding against it would evict rows the
-/// very flush that follows is about to serve.
+/// Drop-oldest shedding across a worker's per-model queues: trim the
+/// *total* pending load to its freshest `limit` rows, answering each
+/// evicted request with [`InferError::QueueFull`] and releasing its
+/// load. Staleness is global: request ids are issued monotonically at
+/// submit and each per-model queue is FIFO, so the globally stalest
+/// rows are found by a heads-first merge on id. Trims by the *local*
+/// queue lengths, never the global gauge: the gauge counts channel
+/// backlog too, and shedding against it would evict rows the very
+/// flush that follows is about to serve.
 fn shed_to_limit(
     limit: usize,
-    pending: &mut Vec<WorkItem>,
+    pending: &mut [Vec<WorkItem>],
     depth: &AtomicUsize,
-    metrics: &Mutex<Metrics>,
+    metrics: &Mutex<Vec<Metrics>>,
 ) {
-    let overflow = pending.len().saturating_sub(limit);
+    let total: usize = pending.iter().map(Vec::len).sum();
+    let overflow = total.saturating_sub(limit);
     if overflow == 0 {
         return;
     }
-    // One O(n) drain of the stalest prefix, not per-item remove(0) —
-    // this runs on the overload hot path against a just-drained backlog.
-    let mut shed: Vec<(WorkItem, usize)> = Vec::with_capacity(overflow);
-    for item in pending.drain(..overflow) {
-        let observed = depth.fetch_sub(1, Ordering::Relaxed);
-        shed.push((item, observed));
+    // Count how many to evict from each queue's stalest prefix: repeat
+    // "take the smallest head id" `overflow` times (queues are FIFO in
+    // id order, so prefixes are exactly the globally stalest rows).
+    let mut evict = vec![0usize; pending.len()];
+    for _ in 0..overflow {
+        let qi = (0..pending.len())
+            .filter(|&q| evict[q] < pending[q].len())
+            .min_by_key(|&q| pending[q][evict[q]].id)
+            .expect("overflow < total pending");
+        evict[qi] += 1;
     }
-    // Count before replying (metrics are complete the moment a caller
-    // sees its answer), then deliver the typed sheds.
-    metrics.lock().unwrap().record_shed(shed.len() as u64);
+    // One O(n) drain per queue, not per-item remove(0) — this runs on
+    // the overload hot path against a just-drained backlog.
+    let mut shed: Vec<(WorkItem, usize)> = Vec::with_capacity(overflow);
+    {
+        // Count before replying (metrics are complete the moment a
+        // caller sees its answer), under one lock for all models.
+        let mut per_model = metrics.lock().unwrap();
+        for (qi, q) in pending.iter_mut().enumerate() {
+            if evict[qi] == 0 {
+                continue;
+            }
+            per_model[qi].record_shed(evict[qi] as u64);
+            for item in q.drain(..evict[qi]) {
+                let observed = depth.fetch_sub(1, Ordering::Relaxed);
+                shed.push((item, observed));
+            }
+        }
+    }
     for (item, observed) in shed {
         let _ = item.req.reply.send(Err(InferError::QueueFull { depth: observed, limit }));
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    worker: usize,
-    backend: &dyn InferenceBackend,
+/// One worker's view of one served model: the name it re-opens under,
+/// the hot-swap generation it is currently serving, and the backend
+/// itself.
+struct ModelSlot {
+    name: String,
+    generation: u64,
+    backend: Arc<dyn InferenceBackend>,
+}
+
+/// A worker thread: one backend per model (via its own registry), one
+/// pending queue per model, one metrics slot per model, one load gauge.
+struct Worker {
+    index: usize,
+    registry: ModelRegistry,
+    slots: Vec<ModelSlot>,
+    /// Pending rows, one FIFO per model (the batching key).
+    pending: Vec<Vec<WorkItem>>,
+    /// Scratch for [`BatcherConfig::plan_multi`] (hoisted out of the
+    /// poll loop).
+    states: Vec<QueueState>,
     cfg: BatcherConfig,
     queue_limit: Option<usize>,
     shed: ShedPolicy,
     replay: ReplayPolicy,
-    rx: mpsc::Receiver<WorkItem>,
-    metrics: Arc<Mutex<Metrics>>,
-    shutdown: Arc<AtomicBool>,
+    metrics: Arc<Mutex<Vec<Metrics>>>,
     depth: Arc<AtomicUsize>,
-) {
-    let mut pending: Vec<WorkItem> = Vec::new();
-    // Rows this worker has served, for 1-in-N replay sampling.
-    let mut replay_seq: u64 = 0;
-    loop {
-        // Collect until the batch plan says flush. The channel is drained
-        // greedily before each planning decision: the deadline is measured
-        // from *submission*, so leaving ready work in the channel would
-        // make every item individually overdue and collapse batching.
-        let plan = loop {
-            drain_ready(&rx, &mut pending, cfg.max_batch);
-            if let (ShedPolicy::DropOldest, Some(limit)) = (shed, queue_limit) {
-                if depth.load(Ordering::Relaxed) > limit {
-                    // Over the bound. The channel backlog has to come out
-                    // either way — to be shed or served — so drain it
-                    // all, keep the freshest `limit` rows, shed the rest,
-                    // and flush *now*: eviction keeps replacing the head,
-                    // so waiting on the head-age deadline would starve
-                    // serving under sustained overload, and at the limit
-                    // there is nothing to gain by batching longer.
-                    drain_ready(&rx, &mut pending, usize::MAX);
-                    shed_to_limit(limit, &mut pending, &depth, &metrics);
-                    if !pending.is_empty() {
-                        break BatchPlan { take: pending.len().min(cfg.max_batch) };
-                    }
-                }
-            }
-            if let Some(plan) = cfg.plan(pending.len(), pending.first().map(|w| w.req.submitted)) {
-                break plan;
-            }
-            match rx.recv_timeout(cfg.poll_interval()) {
-                // `plan` returned None, so pending is below max_batch and
-                // this push cannot over-fill it.
-                Ok(item) => pending.push(item),
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    if pending.is_empty() && shutdown.load(Ordering::SeqCst) {
-                        return;
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    if pending.is_empty() {
-                        return;
-                    }
-                    // Flush whatever is left (graceful drain).
-                    break BatchPlan { take: pending.len() };
-                }
-            }
-        };
+    shutdown: Arc<AtomicBool>,
+    /// Rows this worker has served, for 1-in-N replay sampling (shared
+    /// across models: sampling amortizes the *worker's* simulation
+    /// budget).
+    replay_seq: u64,
+}
 
-        let batch: Vec<WorkItem> = pending.drain(..plan.take.min(pending.len())).collect();
-        if batch.is_empty() {
-            continue;
+impl Worker {
+    fn run(mut self, rx: mpsc::Receiver<WorkMsg>) {
+        loop {
+            // Collect until the batch plan says flush. The channel is
+            // drained greedily before each planning decision — grouping
+            // rows by model as they come out — because the deadline is
+            // measured from *submission*: leaving ready work in the
+            // channel would make every item individually overdue and
+            // collapse batching. Control messages are handled inline, in
+            // channel order (the zero-loss reload contract).
+            let (model_ix, plan) = loop {
+                // Bounded per planning round so a firehose of producers
+                // cannot livelock the drain: once every model could fill
+                // a batch, stop pulling and go plan (the channel keeps
+                // the rest).
+                let drain_cap = self.cfg.max_batch.saturating_mul(self.slots.len()).max(64);
+                for _ in 0..drain_cap {
+                    match rx.try_recv() {
+                        Ok(msg) => self.handle(msg),
+                        Err(_) => break,
+                    }
+                }
+                if let (ShedPolicy::DropOldest, Some(limit)) = (self.shed, self.queue_limit) {
+                    if self.depth.load(Ordering::Relaxed) > limit {
+                        // Over the bound. The channel backlog has to come
+                        // out either way — to be shed or served — so pull
+                        // it *all* local (past the drain cap), keep the
+                        // freshest `limit` rows across all models, shed
+                        // the rest, and flush *now*: eviction keeps
+                        // replacing the heads, so waiting on the head-age
+                        // deadline would starve serving under sustained
+                        // overload, and at the limit there is nothing to
+                        // gain by batching longer.
+                        while let Ok(msg) = rx.try_recv() {
+                            self.handle(msg);
+                        }
+                        shed_to_limit(limit, &mut self.pending, &self.depth, &self.metrics);
+                        if let Some(flush) = force_flush(&self.pending, self.cfg.max_batch) {
+                            break flush;
+                        }
+                    }
+                }
+                if let Some(planned) = self.replan() {
+                    break planned;
+                }
+                match rx.recv_timeout(self.cfg.poll_interval()) {
+                    Ok(msg) => self.handle(msg),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if self.all_empty() && self.shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        // Flush whatever is left, oldest-head model
+                        // first (graceful drain; the disconnected
+                        // channel returns instantly, so the remaining
+                        // queues drain in consecutive iterations).
+                        match force_flush(&self.pending, self.cfg.max_batch) {
+                            Some(flush) => break flush,
+                            None => return,
+                        }
+                    }
+                }
+            };
+            self.flush(model_ix, plan.take);
         }
-        execute_batch(worker, backend, batch, replay, &mut replay_seq, &metrics, &depth);
+    }
+
+    fn handle(&mut self, msg: WorkMsg) {
+        match msg {
+            WorkMsg::Infer(item) => self.pending[item.req.model.index()].push(item),
+            WorkMsg::Reload { model_ix, generation, ack } => {
+                let result = self.swap(model_ix, generation);
+                let _ = ack.send(ReloadReport { worker: self.index, result });
+            }
+        }
+    }
+
+    /// Hot-swap one model slot: drain its pending rows against the old
+    /// backend (they were submitted before the reload), then invalidate
+    /// and re-open through the registry. On failure the slot is left
+    /// untouched — the worker keeps serving the previous generation.
+    fn swap(&mut self, ix: usize, generation: u64) -> Result<usize> {
+        while !self.pending[ix].is_empty() {
+            let take = self.pending[ix].len().min(self.cfg.max_batch);
+            self.flush(ix, take);
+        }
+        let name = self.slots[ix].name.clone();
+        self.registry.invalidate(&name);
+        let backend = self
+            .registry
+            .backend(&name)
+            .with_context(|| format!("re-opening model {name:?}"))?;
+        let width = backend.n_features();
+        let slot = &mut self.slots[ix];
+        slot.backend = backend;
+        slot.generation = generation;
+        Ok(width)
+    }
+
+    fn replan(&mut self) -> Option<(usize, BatchPlan)> {
+        self.states.clear();
+        self.states.extend(self.pending.iter().map(|q| QueueState {
+            queued: q.len(),
+            oldest: q.first().map(|w| w.req.submitted),
+        }));
+        self.cfg.plan_multi(&self.states)
+    }
+
+    fn all_empty(&self) -> bool {
+        self.pending.iter().all(Vec::is_empty)
+    }
+
+    /// Drain up to `take` rows of one model's queue and execute them as
+    /// a batch.
+    fn flush(&mut self, ix: usize, take: usize) {
+        let queue = &mut self.pending[ix];
+        let n = take.min(queue.len());
+        if n == 0 {
+            return;
+        }
+        let batch: Vec<WorkItem> = queue.drain(..n).collect();
+        execute_batch(
+            self.index,
+            ix,
+            &self.slots[ix],
+            batch,
+            self.replay,
+            &mut self.replay_seq,
+            &self.metrics,
+            &self.depth,
+        );
     }
 }
 
-/// Execute one batch fail-soft, delivering exactly one [`Reply`] per
-/// item. Failure isolation, in order:
+/// Execute one single-model batch fail-soft, delivering exactly one
+/// [`Reply`] per item. Failure isolation, in order:
 ///
 /// 1. a row that fails packed assembly (unreachable through the public
-///    API — [`Coordinator::submit`] gates width at ingestion) is
+///    API — [`Coordinator::submit`] gates width per model at ingestion;
+///    reachable transiently when a reload changes a model's width) is
 ///    answered with [`InferError::WidthMismatch`] and excluded instead
 ///    of poisoning its neighbors;
 /// 2. a failed multi-row forward pass falls back to per-row retry, so
@@ -718,18 +1176,21 @@ fn worker_loop(
 ///    served — and each caller whose row really cannot be served gets a
 ///    typed [`InferError::BackendFailed`];
 /// 3. metrics accumulate into a local delta and fold into the worker's
-///    [`Metrics`] under one lock per batch (not one per row), before any
-///    reply goes out so aggregate counters are complete the moment a
-///    client has seen the last response (no settle race).
+///    per-model [`Metrics`] slot under one lock per batch (not one per
+///    row), before any reply goes out so aggregate counters are complete
+///    the moment a client has seen the last response (no settle race).
+#[allow(clippy::too_many_arguments)]
 fn execute_batch(
     worker: usize,
-    backend: &dyn InferenceBackend,
+    model_ix: usize,
+    slot: &ModelSlot,
     batch: Vec<WorkItem>,
     replay: ReplayPolicy,
     replay_seq: &mut u64,
-    metrics: &Mutex<Metrics>,
+    metrics: &Mutex<Vec<Metrics>>,
     depth: &AtomicUsize,
 ) {
+    let backend = slot.backend.as_ref();
     let expected = backend.n_features();
     let mut rows = PackedBatch::new(expected);
     let mut items: Vec<WorkItem> = Vec::with_capacity(batch.len());
@@ -754,7 +1215,7 @@ fn execute_batch(
                 delta.record_batch(n, t0.elapsed().as_secs_f64() * 1e6);
                 for (i, item) in items.into_iter().enumerate() {
                     let resp =
-                        make_response(worker, backend, &out, i, n, replay, replay_seq, &item);
+                        make_response(worker, slot, &out, i, n, replay, replay_seq, &item);
                     delta.record(&resp);
                     outbox.push((item, Ok(resp)));
                 }
@@ -781,14 +1242,7 @@ fn execute_batch(
                         Ok(out) => {
                             delta.record_batch(1, t1.elapsed().as_secs_f64() * 1e6);
                             let resp = make_response(
-                                worker,
-                                backend,
-                                &out,
-                                0,
-                                1,
-                                replay,
-                                replay_seq,
-                                &item,
+                                worker, slot, &out, 0, 1, replay, replay_seq, &item,
                             );
                             delta.record(&resp);
                             outbox.push((item, Ok(resp)));
@@ -806,8 +1260,9 @@ fn execute_batch(
 
     // One metrics lock per batch, taken before any reply goes out so
     // aggregate counters are complete the moment a client has seen the
-    // last response.
-    metrics.lock().unwrap().merge(&delta);
+    // last response. The delta folds into this model's slot, keeping the
+    // per-model breakdown exact.
+    metrics.lock().unwrap()[model_ix].merge(&delta);
     for (item, reply) in outbox {
         // Release the load gauge *before* replying so a blocking caller's
         // next submit observes the decrement (least-loaded determinism).
@@ -840,11 +1295,12 @@ fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
 }
 
 /// Build the reply for `row` of a forward output: replay-policy-driven
-/// hardware timing, service latency stamped at delivery time.
+/// hardware timing, model identity and hot-swap generation from the
+/// serving slot, service latency stamped at delivery time.
 #[allow(clippy::too_many_arguments)]
 fn make_response(
     worker: usize,
-    backend: &dyn InferenceBackend,
+    slot: &ModelSlot,
     out: &ForwardOutput,
     row: usize,
     batch_size: usize,
@@ -857,6 +1313,7 @@ fn make_response(
     // is telemetry, so a panicking engine degrades to "no hardware
     // fields" rather than killing the worker (and every queued reply
     // sender) mid-batch.
+    let backend = slot.backend.as_ref();
     let seq = *replay_seq;
     *replay_seq += 1;
     let (hw_latency, hw_winner) = if replay.take(seq) {
@@ -876,6 +1333,8 @@ fn make_response(
     };
     InferResponse {
         request_id: item.id,
+        model: item.req.model,
+        generation: slot.generation,
         pred: out.pred[row] as usize,
         sums: out.sums_row(row).to_vec(),
         hw_decision_latency: hw_latency,
@@ -946,8 +1405,10 @@ mod tests {
     #[test]
     fn infer_error_messages_are_actionable() {
         fn is_error<E: std::error::Error>(_: &E) {}
-        let e = InferError::WidthMismatch { got: 17, expected: 16 };
+        let e = InferError::UnknownModel { name: "ghost".into() };
         is_error(&e);
+        assert!(e.to_string().contains("ghost") && e.to_string().contains("not served"));
+        let e = InferError::WidthMismatch { got: 17, expected: 16 };
         assert!(e.to_string().contains("17") && e.to_string().contains("16"));
         let e = InferError::QueueFull { depth: 9, limit: 8 };
         assert!(e.to_string().contains('9') && e.to_string().contains('8'));
@@ -955,73 +1416,77 @@ mod tests {
         assert!(InferError::ShuttingDown.to_string().contains("shutting down"));
     }
 
-    /// Regression for the worker drain over-fill: `pending` already at
-    /// `max_batch` (the `recv_timeout` arm filled it) plus a non-empty
-    /// channel used to grow `pending` to `max_batch + 1`, because the old
-    /// loop pushed before checking the bound.
     #[test]
-    fn drain_ready_never_grows_pending_past_max_batch() {
-        let (tx, rx) = mpsc::channel::<WorkItem>();
-        let (reply_tx, _reply_rx) = mpsc::channel::<Reply>();
-        let item = |id: u64| WorkItem {
-            id,
-            req: InferRequest {
-                features: BitVec64::from_bools(&[true, false, true, false]),
-                reply: reply_tx.clone(),
-                submitted: Instant::now(),
-            },
-        };
-        let max_batch = 4;
-        let mut pending: Vec<WorkItem> = (0..max_batch as u64).map(item).collect();
-        for id in 10..13 {
-            tx.send(item(id)).unwrap();
-        }
-        drain_ready(&rx, &mut pending, max_batch);
-        assert_eq!(pending.len(), max_batch, "pending must never exceed max_batch");
-
-        // The queued items stayed in the channel and drain on the next
-        // pass, oldest first.
-        pending.clear();
-        drain_ready(&rx, &mut pending, max_batch);
-        assert_eq!(pending.len(), 3);
-        assert_eq!(pending[0].id, 10);
-
-        // A partial queue fills up to the bound and no further.
-        for id in 20..30 {
-            tx.send(item(id)).unwrap();
-        }
-        drain_ready(&rx, &mut pending, max_batch);
-        assert_eq!(pending.len(), max_batch);
-        assert_eq!(pending[3].id, 20);
+    fn model_id_display_index_and_pool_tag() {
+        let mid = ModelId::new(7, 3);
+        assert_eq!(mid.index(), 3);
+        assert_eq!(mid.to_string(), "model#3@pool7");
+        // Same index, different pool: distinct identities.
+        assert_ne!(mid, ModelId::new(8, 3));
     }
 
-    /// Drop-oldest shedding trims the *local* queue to its freshest
-    /// `limit` rows — it must not consult the global gauge, which also
-    /// counts channel backlog (shedding against that starves serving
-    /// under sustained overload).
+    fn item_for(model: u32, id: u64, reply: &mpsc::Sender<Reply>) -> WorkItem {
+        WorkItem {
+            id,
+            req: InferRequest {
+                model: ModelId::new(0, model),
+                features: BitVec64::from_bools(&[true, false, true, false]),
+                reply: reply.clone(),
+                submitted: Instant::now(),
+            },
+        }
+    }
+
+    /// Forced flush picks the model whose *head* is oldest, regardless
+    /// of queue lengths, and never takes more than `max_batch`.
     #[test]
-    fn shed_to_limit_evicts_stalest_keeps_freshest() {
+    fn force_flush_picks_oldest_head_model() {
+        let (reply_tx, _reply_rx) = mpsc::channel::<Reply>();
+        assert!(force_flush(&[Vec::new(), Vec::new()], 8).is_none());
+        // Queue 0 filled first (older heads), queue 1 longer but newer.
+        let mut pending = vec![Vec::new(), Vec::new()];
+        for id in 0..3u64 {
+            pending[0].push(item_for(0, id, &reply_tx));
+        }
+        for id in 10..20u64 {
+            pending[1].push(item_for(1, id, &reply_tx));
+        }
+        let (ix, plan) = force_flush(&pending, 8).unwrap();
+        assert_eq!((ix, plan.take), (0, 3));
+        // With queue 0 drained, queue 1 flushes in max_batch chunks.
+        pending[0].clear();
+        let (ix, plan) = force_flush(&pending, 8).unwrap();
+        assert_eq!((ix, plan.take), (1, 8));
+    }
+
+    /// Drop-oldest shedding trims the worker's *total* pending load to
+    /// its freshest `limit` rows, evicting globally stalest-first across
+    /// the per-model queues (id order == submission order), and records
+    /// each eviction under its own model.
+    #[test]
+    fn shed_to_limit_evicts_globally_stalest_across_models() {
         let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
-        // Gauge above pending.len(): two more requests still in the
-        // channel backlog. Only the local overflow (5 − 2 = 3) sheds.
-        let depth = AtomicUsize::new(7);
-        let metrics = Mutex::new(Metrics::default());
-        let mut pending: Vec<WorkItem> = (0..5u64)
-            .map(|id| WorkItem {
-                id,
-                req: InferRequest {
-                    features: BitVec64::from_bools(&[true; 4]),
-                    reply: reply_tx.clone(),
-                    submitted: Instant::now(),
-                },
-            })
-            .collect();
+        // Gauge above the local total: two more requests still in the
+        // channel backlog. Only the local overflow (6 − 2 = 4) sheds.
+        let depth = AtomicUsize::new(8);
+        let metrics = Mutex::new(vec![Metrics::default(), Metrics::default()]);
+        // Interleaved submission order: ids 0,2,4 → model 0; 1,3,5 → model 1.
+        let mut pending = vec![Vec::new(), Vec::new()];
+        for id in 0..6u64 {
+            pending[(id % 2) as usize].push(item_for((id % 2) as u32, id, &reply_tx));
+        }
         shed_to_limit(2, &mut pending, &depth, &metrics);
-        assert_eq!(pending.len(), 2, "freshest work survives");
-        assert_eq!(pending[0].id, 3);
-        assert_eq!(depth.load(Ordering::Relaxed), 4, "3 shed, backlog untouched");
-        assert_eq!(metrics.lock().unwrap().snapshot().shed_requests, 3);
-        for _ in 0..3 {
+        assert_eq!(pending[0].len() + pending[1].len(), 2, "freshest work survives");
+        // The survivors are exactly the freshest ids, one per model here.
+        assert_eq!(pending[0][0].id, 4);
+        assert_eq!(pending[1][0].id, 5);
+        assert_eq!(depth.load(Ordering::Relaxed), 4, "4 shed, backlog untouched");
+        let shed: Vec<u64> = {
+            let guard = metrics.lock().unwrap();
+            guard.iter().map(|m| m.snapshot().shed_requests).collect()
+        };
+        assert_eq!(shed, vec![2, 2], "evictions recorded under their own model");
+        for _ in 0..4 {
             match reply_rx.try_recv().unwrap() {
                 Err(InferError::QueueFull { limit: 2, .. }) => {}
                 other => panic!("expected QueueFull, got {other:?}"),
@@ -1031,7 +1496,11 @@ mod tests {
 
         // At or under the limit nothing sheds.
         shed_to_limit(2, &mut pending, &depth, &metrics);
-        assert_eq!(pending.len(), 2);
-        assert_eq!(metrics.lock().unwrap().snapshot().shed_requests, 3);
+        assert_eq!(pending[0].len() + pending[1].len(), 2);
+
+        // Zero limit sheds everything that is local.
+        shed_to_limit(0, &mut pending, &depth, &metrics);
+        assert!(pending.iter().all(Vec::is_empty));
+        assert!(reply_rx.try_recv().is_ok());
     }
 }

@@ -29,13 +29,21 @@
 //!
 //! The default build is pure Rust and is what CI builds, tests, lints and
 //! benches on every change (`.github/workflows/ci.yml`). The
-//! [`coordinator`] runs a pool of `n_workers ≥ 1` worker threads, each
-//! owning its backend (PJRT clients are not `Send`), with round-robin or
-//! least-loaded dispatch, per-worker dynamic batching, width-gated
+//! [`coordinator`] runs a pool of `n_workers ≥ 1` worker threads serving
+//! **one or many models** at once, each worker owning one backend per
+//! model (PJRT clients are not `Send`), with round-robin or least-loaded
+//! dispatch, **model-keyed** per-worker dynamic batching (requests
+//! intern to a [`coordinator::ModelId`]; one pending queue per model, so
+//! a batch never mixes widths or backends), per-model width-gated
 //! admission over bounded queues with typed fail-soft errors
-//! ([`coordinator::InferError`]: reject / shed / per-row-retried backend
-//! failure, never a silently dropped reply channel), and metrics that
-//! aggregate across the pool.
+//! ([`coordinator::InferError`]: unknown model / reject / shed /
+//! per-row-retried backend failure, never a silently dropped reply
+//! channel), live hot-swap ([`coordinator::Coordinator::reload`]:
+//! generation-stamped, zero lost requests, built on
+//! `ModelRegistry::invalidate` → `util::sync::OnceMap::remove`), and
+//! metrics that aggregate across the pool — per tenant via
+//! [`coordinator::Coordinator::metrics_for`], per worker via
+//! `worker_metrics`.
 //!
 //! # The hardware-engine seam
 //!

@@ -9,7 +9,10 @@
 //!               --backend hw:<arch> for simulated-hardware serving with
 //!               --hw-replay off|sample:N|full row replay; --queue-limit N
 //!               bounds each worker's in-flight load, 0 = unbounded, with
-//!               --shed reject-new|drop-oldest deciding what QueueFull drops)
+//!               --shed reject-new|drop-oldest deciding what QueueFull drops;
+//!               --models a,b,c serves several models through one pool,
+//!               batched per model, and --reload <model> hot-swaps that
+//!               model mid-burst with zero lost requests)
 //!   flow      — run the FPGA implementation flow and print the skew audit
 //!   table1 / fig6 / fig9 / fig10 / fig11 / fig12 — regenerate the paper's
 //!               tables/figures (markdown to stdout, CSV via --csv DIR)
@@ -150,10 +153,22 @@ fn cmd_infer(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(&[
-        "artifacts", "model", "requests", "batch", "deadline-us", "workers", "dispatch",
-        "backend", "hw-replay", "queue-limit", "shed", "csv",
+        "artifacts", "model", "models", "requests", "batch", "deadline-us", "workers",
+        "dispatch", "backend", "hw-replay", "queue-limit", "shed", "reload", "csv",
     ])?;
-    let model = args.opt_or("model", "mnist_c100");
+    // `--models a,b,c` serves several models through one pool (requests
+    // alternate across them); `--model` remains the single-model form.
+    let models_arg = args
+        .opt("models")
+        .map(str::to_string)
+        .unwrap_or_else(|| args.opt_or("model", "mnist_c100").to_string());
+    let names: Vec<String> = models_arg
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    anyhow::ensure!(!names.is_empty(), "--models needs at least one model name");
     let n_requests = args.opt_usize("requests", 500)?;
     let n_workers = args.opt_usize("workers", 1)?;
     // `--backend hw:<async|adder|fpt18>` serves through simulated hardware
@@ -179,19 +194,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let root = artifacts_root(args);
     let manifest = Manifest::load(&root)?;
-    let entry = manifest.entry(model)?.clone();
-    let test = TestSet::load(&entry.test_data_path)?;
+    let mut tests = Vec::with_capacity(names.len());
+    for name in &names {
+        let entry = manifest.entry(name)?.clone();
+        tests.push(TestSet::load(&entry.test_data_path)?);
+    }
 
-    let coord = Coordinator::start(root, model, cfg)?;
+    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    let coord = Coordinator::start_multi(root, &name_refs, cfg)?;
+    let mids: Vec<_> = names
+        .iter()
+        .map(|n| coord.model_id(n).expect("started models resolve"))
+        .collect();
+    // `--reload <model>`: hot-swap that model halfway through the burst,
+    // demonstrating the zero-loss reload path under live traffic.
+    let reload_mid = match args.opt("reload") {
+        Some(name) => Some(coord.model_id(name).with_context(|| {
+            format!("--reload {name:?} must name one of the served models {names:?}")
+        })?),
+        None => None,
+    };
     let (tx, rx) = std::sync::mpsc::channel();
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
-        coord.submit(&test.x[i % test.len()], tx.clone());
+        if i == n_requests / 2 {
+            if let Some(mid) = reload_mid {
+                coord.reload(mid)?;
+            }
+        }
+        let m = i % names.len();
+        let test = &tests[m];
+        coord.submit(mids[m], &test.x[(i / names.len()) % test.len()], tx.clone());
     }
     drop(tx);
     // Every submit is answered exactly once: a response, or a typed
     // InferError (QueueFull under --queue-limit saturation).
-    let mut correct = 0usize;
+    let mut correct = vec![0usize; names.len()];
     let mut served = 0usize;
     let mut failed = 0usize;
     let mut got = 0usize;
@@ -199,8 +237,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         got += 1;
         match reply {
             Ok(resp) => {
-                let idx = resp.request_id as usize % test.len();
-                correct += (resp.pred == test.y[idx]) as usize;
+                let m = resp.model.index();
+                let test = &tests[m];
+                let idx = (resp.request_id as usize / names.len()) % test.len();
+                correct[m] += (resp.pred == test.y[idx]) as usize;
                 served += 1;
             }
             Err(e) => {
@@ -215,16 +255,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let m = coord.metrics();
     println!(
-        "model {model}: {served} served / {failed} failed of {got} replies in {wall:.3}s \
+        "pool [{}]: {served} served / {failed} failed of {got} replies in {wall:.3}s \
          = {:.0} req/s ({} workers)",
+        names.join(", "),
         got as f64 / wall,
         coord.n_workers()
     );
-    println!("accuracy {:.1}%", 100.0 * correct as f64 / served.max(1) as f64);
     println!(
         "service latency: p50 {:.0} us p99 {:.0} us mean {:.0} us (mean batch {:.1}, exec {:.0} us)",
         m.service_p50_us, m.service_p99_us, m.service_mean_us, m.mean_batch_size, m.mean_batch_exec_us
     );
+    // Per-tenant breakdown: each model's share of the pool, with its own
+    // latency percentiles.
+    for (mid, name) in coord.served_models() {
+        let pm = coord.metrics_for(mid).expect("served model has metrics");
+        println!(
+            "  model {name}: {} requests in {} batches, accuracy {:.1}%, \
+             p50 {:.0} us p99 {:.0} us",
+            pm.requests,
+            pm.batches,
+            100.0 * correct[mid.index()] as f64 / (pm.requests.max(1)) as f64,
+            pm.service_p50_us,
+            pm.service_p99_us
+        );
+    }
     for (i, wm) in coord.worker_metrics().iter().enumerate() {
         println!(
             "  worker {i}: {} requests in {} batches (mean batch {:.1})",

@@ -73,6 +73,12 @@ pub enum BackendSpec {
     /// Pure-Rust evaluation of an in-memory model — no artifacts required
     /// (synthetic workloads, tests, CI).
     InMemory(Arc<TmModel>),
+    /// Pure-Rust evaluation over a *set* of in-memory models, looked up
+    /// by name at open time — the artifact-free way to drive a
+    /// multi-model coordinator pool (`Coordinator::start_multi`) from
+    /// tests and benches. Unknown names fail at open, like the
+    /// manifest-backed specs.
+    InMemorySet(Arc<Vec<Arc<TmModel>>>),
     /// [`FaultInjectingBackend`] over an in-memory model: native
     /// evaluation whose `forward` fails whenever the batch contains the
     /// all-true poison row. Chaos drills and the coordinator's fail-soft
@@ -123,6 +129,7 @@ impl BackendSpec {
         match self {
             BackendSpec::Native => "native",
             BackendSpec::InMemory(_) => "native(in-memory)",
+            BackendSpec::InMemorySet(_) => "native(in-memory-set)",
             BackendSpec::FaultInjecting(_) => "native+faults",
             BackendSpec::TimeDomain { arch: HwArch::Async, .. } => "hw:async",
             BackendSpec::TimeDomain { arch: HwArch::Adder, .. } => "hw:adder",
@@ -137,6 +144,7 @@ impl BackendSpec {
         !matches!(
             self,
             BackendSpec::InMemory(_)
+                | BackendSpec::InMemorySet(_)
                 | BackendSpec::FaultInjecting(_)
                 | BackendSpec::TimeDomain { model: Some(_), .. }
         )
@@ -168,6 +176,13 @@ impl BackendSpec {
                     "in-memory spec holds model {:?}, not {model:?}",
                     m.name
                 );
+                Ok(Box::new(NativeBackend::new(m.clone())))
+            }
+            BackendSpec::InMemorySet(models) => {
+                let m = models.iter().find(|m| m.name == model).ok_or_else(|| {
+                    let held: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+                    anyhow::anyhow!("in-memory set holds models {held:?}, not {model:?}")
+                })?;
                 Ok(Box::new(NativeBackend::new(m.clone())))
             }
             BackendSpec::FaultInjecting(m) => {
@@ -457,5 +472,21 @@ mod tests {
         assert_eq!(b.kind(), "native");
         assert_eq!(b.model_name(), "toy");
         assert_eq!(b.n_classes(), 2);
+    }
+
+    #[test]
+    fn in_memory_set_opens_each_model_by_name() {
+        let other = Arc::new(crate::tm::TmModel::synthetic("other", 3, 4, 7, 0.2, 1));
+        let spec = BackendSpec::InMemorySet(Arc::new(vec![Arc::new(toy()), other]));
+        assert!(!spec.needs_manifest());
+        assert_eq!(spec.name(), "native(in-memory-set)");
+        let root = std::path::Path::new("/nonexistent");
+        let a = spec.open(root, "toy").unwrap();
+        assert_eq!((a.model_name(), a.n_features()), ("toy", 2));
+        let b = spec.open(root, "other").unwrap();
+        assert_eq!((b.model_name(), b.n_features()), ("other", 7));
+        // Unknown names fail at open with the held set listed.
+        let err = spec.open(root, "missing").unwrap_err().to_string();
+        assert!(err.contains("toy") && err.contains("other"), "{err}");
     }
 }

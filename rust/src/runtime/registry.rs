@@ -73,6 +73,23 @@ impl ModelRegistry {
                 .map(|b| -> Arc<dyn InferenceBackend> { Arc::from(b) })
         })
     }
+
+    /// Drop the cached backend for `model`, forcing the next
+    /// [`ModelRegistry::backend`] call to re-open it from the artifacts
+    /// on disk — the registry-level primitive behind coordinator
+    /// hot-swap (`Coordinator::reload`). [`BackendSpec::open`] re-reads
+    /// the manifest itself, so a rewritten artifact is picked up even
+    /// though this registry cached the manifest at open time (the
+    /// cached [`ModelRegistry::manifest`] view keeps describing the
+    /// models as first opened).
+    ///
+    /// Safe against a concurrent in-flight construction of the same
+    /// model: the in-flight backend is delivered to its own caller but
+    /// not re-cached (see [`OnceMap::remove`]). Returns whether a
+    /// cached or in-flight entry existed.
+    pub fn invalidate(&self, model: &str) -> bool {
+        self.backends.remove(model)
+    }
 }
 
 #[cfg(test)]
@@ -96,5 +113,18 @@ mod tests {
     #[test]
     fn native_registry_fails_cleanly_without_manifest() {
         assert!(ModelRegistry::open(Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn invalidate_forces_reopen() {
+        let spec = BackendSpec::InMemory(std::sync::Arc::new(toy()));
+        let reg = ModelRegistry::open_with(Path::new("/nonexistent"), spec).unwrap();
+        let b = reg.backend("toy").unwrap();
+        assert!(reg.invalidate("toy"), "cached entry existed");
+        assert!(!reg.invalidate("toy"), "already invalidated");
+        assert!(!reg.invalidate("never-opened"));
+        // The next lookup re-constructs instead of hitting the cache.
+        let b2 = reg.backend("toy").unwrap();
+        assert!(!Arc::ptr_eq(&b, &b2), "invalidate must force a fresh construction");
     }
 }

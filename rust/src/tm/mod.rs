@@ -137,6 +137,56 @@ impl Manifest {
             .min()
             .or_else(|| self.batch_sizes.iter().copied().max())
     }
+
+    /// Write a minimal artifact tree at `root` serving `models` —
+    /// `manifest.json` plus one `models/<name>.json` per model in
+    /// [`TmModel::load`]'s interchange layout. The result is loadable by
+    /// [`Manifest::load`] and every manifest-backed [`crate::runtime::BackendSpec`]
+    /// (HLO and golden/test-data entries are placeholders: nothing on
+    /// the native serving path reads them).
+    ///
+    /// This is the substrate for hot-swap exercises without the Python
+    /// build path: write v1, serve, overwrite the model file with v2,
+    /// `Coordinator::reload`. Calling it again with a changed model
+    /// overwrites in place.
+    pub fn write_synthetic(root: &Path, models: &[&TmModel]) -> Result<()> {
+        let model_dir = root.join("models");
+        std::fs::create_dir_all(&model_dir)
+            .with_context(|| format!("creating {}", model_dir.display()))?;
+        let mut entries = Vec::with_capacity(models.len());
+        for m in models {
+            anyhow::ensure!(
+                !m.name.is_empty()
+                    && m.name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+                "synthetic artifact names must be [A-Za-z0-9_-]+, got {:?}",
+                m.name
+            );
+            let path = model_dir.join(format!("{}.json", m.name));
+            std::fs::write(&path, m.to_json())
+                .with_context(|| format!("writing {}", path.display()))?;
+            entries.push(format!(
+                "    \"{n}\": {{\n      \"dataset\": \"synthetic\",\n      \
+                 \"n_classes\": {k},\n      \"n_features\": {f},\n      \
+                 \"clauses_per_class\": {c},\n      \"T\": 0,\n      \"s\": 0,\n      \
+                 \"accuracy\": {a},\n      \"paper_accuracy\": 0,\n      \
+                 \"model\": \"models/{n}.json\",\n      \
+                 \"golden\": \"models/{n}.golden.json\",\n      \
+                 \"test_data\": \"models/{n}.test.json\",\n      \"hlo\": {{}}\n    }}",
+                n = m.name,
+                k = m.n_classes,
+                f = m.n_features,
+                c = m.clauses_per_class,
+                a = m.accuracy,
+            ));
+        }
+        let manifest = format!(
+            "{{\n  \"batch_sizes\": [1, 32],\n  \"models\": {{\n{}\n  }}\n}}\n",
+            entries.join(",\n")
+        );
+        std::fs::write(root.join("manifest.json"), manifest)
+            .with_context(|| format!("writing {}", root.join("manifest.json").display()))?;
+        Ok(())
+    }
 }
 
 /// Decode a "0101…" bitstring (the artifact JSON compaction).
@@ -180,5 +230,35 @@ mod tests {
         let empty = Manifest { root: PathBuf::from("/x"), batch_sizes: vec![], models: vec![] };
         assert_eq!(empty.best_batch(4), None);
         assert_eq!(empty.exec_batch(4), None);
+    }
+
+    #[test]
+    fn write_synthetic_roundtrips_through_manifest_load() {
+        let root =
+            std::env::temp_dir().join(format!("tdpc-synth-artifacts-{}", std::process::id()));
+        let a = TmModel::synthetic("synth_a", 3, 6, 17, 0.2, 1);
+        let b = TmModel::synthetic("synth_b", 2, 4, 33, 0.3, 2);
+        Manifest::write_synthetic(&root, &[&a, &b]).unwrap();
+        let manifest = Manifest::load(&root).unwrap();
+        assert_eq!(manifest.models.len(), 2);
+        for (m, entry_name) in [(&a, "synth_a"), (&b, "synth_b")] {
+            let e = manifest.entry(entry_name).unwrap();
+            assert_eq!(e.n_features, m.n_features);
+            assert_eq!(e.n_classes, m.n_classes);
+            let loaded = TmModel::load(&e.model_path).unwrap();
+            assert_eq!(loaded.include, m.include);
+        }
+        // Overwriting one model in place is the hot-swap write path.
+        let a2 = TmModel::synthetic("synth_a", 3, 6, 17, 0.2, 99);
+        Manifest::write_synthetic(&root, &[&a2, &b]).unwrap();
+        let reloaded =
+            TmModel::load(&Manifest::load(&root).unwrap().entry("synth_a").unwrap().model_path)
+                .unwrap();
+        assert_eq!(reloaded.include, a2.include);
+        assert_ne!(reloaded.include, a.include, "the rewrite must actually change the model");
+        // Names that would corrupt the JSON are refused.
+        let bad = TmModel::synthetic("bad\"name", 2, 2, 4, 0.2, 3);
+        assert!(Manifest::write_synthetic(&root, &[&bad]).is_err());
+        std::fs::remove_dir_all(&root).ok();
     }
 }

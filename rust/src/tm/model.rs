@@ -274,6 +274,35 @@ impl TmModel {
         )
     }
 
+    /// Serialize to the artifact-JSON interchange layout —
+    /// [`TmModel::load`]'s exact inverse (include masks as `"0101…"`
+    /// bitstrings, `nonempty` as 0/1). This is how tests and the
+    /// multi-model smoke driver materialize (and *re*-materialize, for
+    /// hot-swap) model artifacts on disk without the Python build path.
+    pub fn to_json(&self) -> String {
+        fn bitstring(bits: &[bool]) -> String {
+            bits.iter().map(|&b| if b { '1' } else { '0' }).collect()
+        }
+        let include: Vec<String> =
+            self.include.iter().map(|row| format!("\"{}\"", bitstring(row))).collect();
+        let polarity: Vec<String> = self.polarity.iter().map(|p| p.to_string()).collect();
+        let nonempty: Vec<String> =
+            self.nonempty.iter().map(|&b| if b { "1" } else { "0" }.to_string()).collect();
+        format!(
+            "{{\n  \"name\": \"{}\",\n  \"n_classes\": {},\n  \"n_features\": {},\n  \
+             \"clauses_per_class\": {},\n  \"accuracy\": {},\n  \"include\": [{}],\n  \
+             \"polarity\": [{}],\n  \"nonempty\": [{}]\n}}\n",
+            self.name,
+            self.n_classes,
+            self.n_features,
+            self.clauses_per_class,
+            self.accuracy,
+            include.join(", "),
+            polarity.join(", "),
+            nonempty.join(", ")
+        )
+    }
+
     pub fn load(path: &Path) -> Result<TmModel> {
         let doc = json::parse_file(path)?;
         let n_classes = doc.get("n_classes")?.as_usize()?;
@@ -720,6 +749,35 @@ pub(crate) mod tests {
             assert_eq!(out.sums_row(i), &sums[..], "row {i}");
             assert_eq!(out.pred[i] as usize, pred, "row {i}");
             assert_eq!(out.fired_row(i), fired, "row {i}");
+        }
+    }
+
+    #[test]
+    fn to_json_roundtrips_through_load() {
+        let dir = std::env::temp_dir();
+        for (tag, m) in [
+            ("toy", toy()),
+            ("synth", TmModel::synthetic("round_trip", 3, 7, 19, 0.25, 42)),
+        ] {
+            let path = dir.join(format!("tdpc-roundtrip-{}-{tag}.json", std::process::id()));
+            std::fs::write(&path, m.to_json()).unwrap();
+            let loaded = TmModel::load(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert_eq!(loaded.name, m.name, "{tag}");
+            assert_eq!(loaded.n_classes, m.n_classes, "{tag}");
+            assert_eq!(loaded.n_features, m.n_features, "{tag}");
+            assert_eq!(loaded.clauses_per_class, m.clauses_per_class, "{tag}");
+            assert_eq!(loaded.include, m.include, "{tag}");
+            assert_eq!(loaded.polarity, m.polarity, "{tag}");
+            assert_eq!(loaded.nonempty, m.nonempty, "{tag}");
+            assert_eq!(loaded.accuracy, m.accuracy, "{tag}");
+            // Behavior identical, not just fields.
+            let mut rng = crate::util::SplitMix64::new(7);
+            for _ in 0..16 {
+                let x: Vec<bool> =
+                    (0..m.n_features).map(|_| rng.next_bool(0.5)).collect();
+                assert_eq!(loaded.class_sums(&x), m.class_sums(&x), "{tag}");
+            }
         }
     }
 

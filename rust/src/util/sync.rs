@@ -1,15 +1,25 @@
 //! Concurrency helpers for the runtime's compile-once caches.
 
+use std::borrow::Borrow;
 use std::collections::BTreeMap;
 use std::sync::{Condvar, Mutex};
 
 enum Slot<V> {
-    /// Some caller is running the builder for this key right now.
-    Building,
+    /// Some caller is running the builder for this key right now. The
+    /// token identifies *which* claim: [`OnceMap::remove`] can release a
+    /// claim mid-build, and the builder must not cache its (now stale)
+    /// result over whatever claimed the key after it.
+    Building { token: u64 },
     Ready(V),
 }
 
-/// A keyed build-at-most-once cache.
+struct MapState<K, V> {
+    slots: BTreeMap<K, Slot<V>>,
+    /// Monotone claim counter; every `Building` slot gets a fresh token.
+    next_token: u64,
+}
+
+/// A keyed build-at-most-once cache with invalidation.
 ///
 /// [`OnceMap::get_or_try_insert`] runs the builder *outside* the map
 /// lock, so builds for two different keys proceed concurrently while a
@@ -18,17 +28,28 @@ enum Slot<V> {
 /// cache invites). A failed build releases its claim so a later caller
 /// can retry.
 ///
-/// Used by `ModelRegistry` (backend per model) and `PjrtBackend`
-/// (compiled executable per batch size), where a build is an expensive
-/// model load or PJRT compilation.
+/// [`OnceMap::remove`] invalidates a key — the primitive model hot-swap
+/// stands on. It is safe against an in-flight build of the same key:
+/// the claim is token-stamped, so a builder that finishes after its key
+/// was removed returns its value to its own caller but does **not**
+/// re-cache it, and condvar waiters re-check the slot state when woken
+/// (they see the cleared slot and re-claim instead of waiting forever
+/// on a build whose claim is gone).
+///
+/// Used by `ModelRegistry` (backend per model, invalidated on reload)
+/// and `PjrtBackend` (compiled executable per batch size), where a
+/// build is an expensive model load or PJRT compilation.
 pub struct OnceMap<K, V> {
-    slots: Mutex<BTreeMap<K, Slot<V>>>,
+    state: Mutex<MapState<K, V>>,
     ready: Condvar,
 }
 
 impl<K: Ord + Clone, V: Clone> OnceMap<K, V> {
     pub fn new() -> OnceMap<K, V> {
-        OnceMap { slots: Mutex::new(BTreeMap::new()), ready: Condvar::new() }
+        OnceMap {
+            state: Mutex::new(MapState { slots: BTreeMap::new(), next_token: 0 }),
+            ready: Condvar::new(),
+        }
     }
 
     /// Return the cached value for `key`, or claim the key and run
@@ -38,36 +59,71 @@ impl<K: Ord + Clone, V: Clone> OnceMap<K, V> {
         key: K,
         build: impl FnOnce() -> Result<V, E>,
     ) -> Result<V, E> {
+        let my_token;
         {
-            let mut slots = self.slots.lock().unwrap();
+            let mut st = self.state.lock().unwrap();
             loop {
-                match slots.get(&key) {
+                match st.slots.get(&key) {
                     Some(Slot::Ready(v)) => return Ok(v.clone()),
                     // Same key in flight elsewhere: wait, don't duplicate.
-                    Some(Slot::Building) => {}
+                    // The wait loop re-checks on every wake, so a claim
+                    // released by `remove` is re-claimed, not waited on.
+                    Some(Slot::Building { .. }) => {}
                     None => {
-                        slots.insert(key.clone(), Slot::Building);
+                        my_token = st.next_token;
+                        st.next_token += 1;
+                        st.slots.insert(key.clone(), Slot::Building { token: my_token });
                         break;
                     }
                 }
-                slots = self.ready.wait(slots).unwrap();
+                st = self.ready.wait(st).unwrap();
             }
         }
         let result = build();
-        let mut slots = self.slots.lock().unwrap();
+        let mut st = self.state.lock().unwrap();
+        // Cache (or clear) only if the claim is still ours. `remove` may
+        // have released it mid-build — then the value we just built is
+        // stale by definition (the remove *happened after* our build
+        // began), so it goes to our caller but never into the cache,
+        // and we must not clobber whoever claimed the key after us.
+        let still_mine =
+            matches!(st.slots.get(&key), Some(Slot::Building { token }) if *token == my_token);
         match result {
             Ok(v) => {
-                slots.insert(key, Slot::Ready(v.clone()));
+                if still_mine {
+                    st.slots.insert(key, Slot::Ready(v.clone()));
+                }
                 self.ready.notify_all();
                 Ok(v)
             }
             Err(e) => {
-                // Clear the claim so a later caller can retry.
-                slots.remove(&key);
+                if still_mine {
+                    // Clear the claim so a later caller can retry.
+                    st.slots.remove(&key);
+                }
                 self.ready.notify_all();
                 Err(e)
             }
         }
+    }
+
+    /// Invalidate `key`: drop its cached value, or — if a build is in
+    /// flight — release that build's claim so the next caller re-builds
+    /// (the in-flight result will be returned to its own caller but not
+    /// cached). Returns whether an entry (ready or in flight) existed.
+    pub fn remove<Q>(&self, key: &Q) -> bool
+    where
+        K: Borrow<Q>,
+        Q: Ord + ?Sized,
+    {
+        let mut st = self.state.lock().unwrap();
+        let removed = st.slots.remove(key).is_some();
+        if removed {
+            // Wake condvar holders parked on a Building slot we just
+            // released: they re-check, see the empty slot, and re-claim.
+            self.ready.notify_all();
+        }
+        removed
     }
 }
 
@@ -81,7 +137,7 @@ impl<K: Ord + Clone, V: Clone> Default for OnceMap<K, V> {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::Arc;
+    use std::sync::{mpsc, Arc};
 
     #[test]
     fn builds_once_per_key_under_contention() {
@@ -119,5 +175,90 @@ mod tests {
         // Cached now: builder must not run again.
         let cached = map.get_or_try_insert("k", || panic!("must not rebuild"));
         assert_eq!(cached.unwrap(), 7);
+    }
+
+    #[test]
+    fn remove_ready_value_forces_rebuild() {
+        let map: OnceMap<&'static str, i32> = OnceMap::new();
+        assert!(!map.remove("k"), "removing an absent key reports false");
+        assert_eq!(map.get_or_try_insert("k", || Ok::<i32, ()>(1)).unwrap(), 1);
+        assert!(map.remove("k"));
+        assert_eq!(map.get_or_try_insert("k", || Ok::<i32, ()>(2)).unwrap(), 2);
+        assert_eq!(map.get_or_try_insert("k", || panic!("cached")).unwrap(), 2);
+    }
+
+    /// The hot-swap race: `remove` lands while a build for the same key
+    /// is in flight. The in-flight builder must deliver its value to its
+    /// own caller but *not* cache it (it is stale — the invalidation
+    /// happened after that build began), and a post-invalidation caller
+    /// must rebuild rather than inherit the stale value.
+    #[test]
+    fn remove_during_inflight_build_does_not_cache_stale_value() {
+        let map: Arc<OnceMap<&'static str, i32>> = Arc::new(OnceMap::new());
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let stale_builder = {
+            let map = map.clone();
+            std::thread::spawn(move || {
+                map.get_or_try_insert("k", || {
+                    started_tx.send(()).unwrap();
+                    // Park mid-build (outside the map lock) until the
+                    // main thread has removed the key.
+                    release_rx.recv().unwrap();
+                    Ok::<i32, ()>(1)
+                })
+            })
+        };
+        started_rx.recv().unwrap();
+        // A second caller that reaches the map while the stale build is
+        // still claimed ends up in the condvar wait; give it a head
+        // start so `remove`'s notify is what wakes it (the assertion
+        // holds either way — a late arrival just sees the empty slot).
+        let waiter = {
+            let map = map.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                map.get_or_try_insert("k", || Ok::<i32, ()>(2))
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        assert!(map.remove("k"), "an in-flight claim is removable");
+        // The waiter re-checks on wake, re-claims, and builds the fresh
+        // value.
+        assert_eq!(waiter.join().unwrap().unwrap(), 2);
+        // Now let the stale build finish: its own caller gets 1, but the
+        // cache must still hold the post-invalidation value.
+        release_tx.send(()).unwrap();
+        assert_eq!(stale_builder.join().unwrap().unwrap(), 1);
+        assert_eq!(
+            map.get_or_try_insert("k", || panic!("must not rebuild")).unwrap(),
+            2,
+            "stale in-flight build must not overwrite the rebuilt value"
+        );
+    }
+
+    /// A failing stale build must not clear another thread's claim or
+    /// cached value.
+    #[test]
+    fn stale_failed_build_leaves_fresh_value_cached() {
+        let map: Arc<OnceMap<&'static str, i32>> = Arc::new(OnceMap::new());
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let stale = {
+            let map = map.clone();
+            std::thread::spawn(move || {
+                map.get_or_try_insert("k", || {
+                    started_tx.send(()).unwrap();
+                    release_rx.recv().unwrap();
+                    Err::<i32, &str>("stale boom")
+                })
+            })
+        };
+        started_rx.recv().unwrap();
+        assert!(map.remove("k"));
+        assert_eq!(map.get_or_try_insert("k", || Ok::<i32, &str>(9)).unwrap(), 9);
+        release_tx.send(()).unwrap();
+        assert_eq!(stale.join().unwrap().unwrap_err(), "stale boom");
+        assert_eq!(map.get_or_try_insert("k", || panic!("cached")).unwrap(), 9);
     }
 }

@@ -75,8 +75,9 @@ fn serves_requests_with_correct_predictions() {
     let model = test_model(1);
     let cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
     for (i, x) in test_inputs(&model, 20, 2).into_iter().enumerate() {
-        let resp = coord.infer_blocking(&x).unwrap();
+        let resp = coord.infer_blocking(mid, &x).unwrap();
         assert_eq!(resp.pred, model.predict(&x), "request {i}");
         assert_eq!(resp.sums, model.class_sums(&x), "request {i}");
         assert!(resp.hw_decision_latency.is_none());
@@ -98,13 +99,14 @@ fn four_worker_pool_answers_each_request_once_and_metrics_sum() {
     let model = test_model(3);
     let cfg = pool_config(4, DispatchPolicy::RoundRobin, model.clone());
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
     assert_eq!(coord.n_workers(), 4);
 
     let n = 200;
     let inputs = test_inputs(&model, n, 4);
     let (tx, rx) = std::sync::mpsc::channel();
     for x in &inputs {
-        coord.submit(x, tx.clone());
+        coord.submit(mid, x, tx.clone());
     }
     drop(tx);
     let responses: Vec<_> =
@@ -153,17 +155,18 @@ fn least_loaded_prefers_idle_workers() {
     let model = test_model(5);
     let cfg = pool_config(2, DispatchPolicy::LeastLoaded, model.clone());
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
     // Sequential blocking requests: the pool is idle at each submit, so the
     // tie-break (lowest index) pins every request to worker 0.
     for x in test_inputs(&model, 10, 6) {
-        let resp = coord.infer_blocking(&x).unwrap();
+        let resp = coord.infer_blocking(mid, &x).unwrap();
         assert_eq!(resp.worker, 0);
     }
     // A burst deepens worker 0's queue, so worker 1 must pick up load.
     let n = 100;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 7) {
-        coord.submit(&x, tx.clone());
+        coord.submit(mid, &x, tx.clone());
     }
     drop(tx);
     let responses: Vec<_> =
@@ -186,10 +189,11 @@ fn batches_form_under_burst_load() {
         ..CoordinatorConfig::default()
     };
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
     let n = 200;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 9) {
-        coord.submit(&x, tx.clone());
+        coord.submit(mid, &x, tx.clone());
     }
     drop(tx);
     assert_eq!(rx.iter().take(n).filter(|r| r.is_ok()).count(), n);
@@ -215,12 +219,13 @@ fn four_worker_time_domain_pool_replays_every_response() {
     cfg.backend = hw_spec(HwArch::Async, model.clone());
     cfg.replay = ReplayPolicy::Full;
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
 
     let n = 80;
     let inputs = test_inputs(&model, n, 11);
     let (tx, rx) = std::sync::mpsc::channel();
     for x in &inputs {
-        coord.submit(x, tx.clone());
+        coord.submit(mid, x, tx.clone());
     }
     drop(tx);
     let responses: Vec<_> =
@@ -256,10 +261,11 @@ fn sampled_replay_tags_exactly_one_in_n() {
     cfg.backend = hw_spec(HwArch::Adder, model.clone());
     cfg.replay = ReplayPolicy::Sample(NonZeroU32::new(4).unwrap());
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
     let n = 64;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 18) {
-        coord.submit(&x, tx.clone());
+        coord.submit(mid, &x, tx.clone());
     }
     drop(tx);
     let responses: Vec<_> =
@@ -282,10 +288,11 @@ fn shutdown_drains_queued_requests() {
     let model = test_model(12);
     let cfg = pool_config(3, DispatchPolicy::RoundRobin, model.clone());
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
     let n = 120;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 13) {
-        coord.submit(&x, tx.clone());
+        coord.submit(mid, &x, tx.clone());
     }
     drop(tx);
     // Graceful shutdown must answer everything already accepted.
@@ -339,7 +346,8 @@ fn drop_without_shutdown_does_not_hang() {
     let model = test_model(15);
     let cfg = pool_config(2, DispatchPolicy::RoundRobin, model.clone());
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
-    let _ = coord.infer_blocking(&test_inputs(&model, 1, 16)[0]).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
+    let _ = coord.infer_blocking(mid, &test_inputs(&model, 1, 16)[0]).unwrap();
     drop(coord); // Drop impl joins all workers — must not deadlock.
 }
 
@@ -354,11 +362,12 @@ fn word_boundary_models_batch_correctly_through_four_workers() {
             Arc::new(TmModel::synthetic("e2e_model", k, cpc, f, 0.15, (k * cpc + f) as u64));
         let cfg = pool_config(4, DispatchPolicy::RoundRobin, model.clone());
         let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+        let mid = coord.model_id("e2e_model").unwrap();
         let n = 64;
         let inputs = test_inputs(&model, n, 21);
         let (tx, rx) = std::sync::mpsc::channel();
         for x in &inputs {
-            coord.submit(x, tx.clone());
+            coord.submit(mid, x, tx.clone());
         }
         drop(tx);
         let responses: Vec<_> =
@@ -384,8 +393,9 @@ fn width_mismatch_rejected_typed_while_neighbors_serve() {
     let model = test_model(30);
     let cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
     let f = model.n_features;
-    assert_eq!(coord.n_features(), f, "model width cached at startup");
+    assert_eq!(coord.n_features_for(mid), Some(f), "model width cached at startup");
 
     let inputs = test_inputs(&model, 10, 31);
     let (tx, rx) = std::sync::mpsc::channel();
@@ -393,9 +403,9 @@ fn width_mismatch_rejected_typed_while_neighbors_serve() {
     let mut expected: HashMap<u64, &Vec<bool>> = HashMap::new();
     for (i, x) in inputs.iter().enumerate() {
         if i == 5 {
-            coord.submit(&vec![true; f + 3], bad_tx.clone());
+            coord.submit(mid, &vec![true; f + 3], bad_tx.clone());
         }
-        let id = coord.submit(x, tx.clone());
+        let id = coord.submit(mid, x, tx.clone());
         expected.insert(id, x);
     }
     drop(tx);
@@ -439,12 +449,13 @@ fn saturation_sheds_exactly_beyond_queue_limit() {
     cfg.queue_limit = Some(4);
     cfg.shed = ShedPolicy::RejectNew;
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
 
     let n = 20;
     let limit = 4;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 41) {
-        coord.submit(&x, tx.clone());
+        coord.submit(mid, &x, tx.clone());
     }
     drop(tx);
 
@@ -486,6 +497,7 @@ fn drop_oldest_sheds_stalest_never_freshest() {
     cfg.queue_limit = Some(4);
     cfg.shed = ShedPolicy::DropOldest;
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
 
     let n = 200;
     let limit = 4u64;
@@ -493,7 +505,7 @@ fn drop_oldest_sheds_stalest_never_freshest() {
     let (tx, rx) = std::sync::mpsc::channel();
     let mut ids = Vec::with_capacity(n);
     for x in &inputs {
-        ids.push(coord.submit(x, tx.clone()));
+        ids.push(coord.submit(mid, x, tx.clone()));
     }
     drop(tx);
     // A fresh pool assigns sequential ids, so id order == submission age.
@@ -542,10 +554,11 @@ fn drop_oldest_with_zero_limit_sheds_everything() {
     cfg.queue_limit = Some(0);
     cfg.shed = ShedPolicy::DropOldest;
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
     let n = 30;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 48) {
-        coord.submit(&x, tx.clone());
+        coord.submit(mid, &x, tx.clone());
     }
     drop(tx);
     let replies: Vec<_> = rx.iter().collect();
@@ -575,12 +588,13 @@ fn reject_new_sheds_only_when_whole_pool_is_full() {
     cfg.queue_limit = Some(3);
     cfg.shed = ShedPolicy::RejectNew;
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
 
     let n = 20;
     let pool_capacity = 2 * 3;
     let (tx, rx) = std::sync::mpsc::channel();
     for x in test_inputs(&model, n, 50) {
-        coord.submit(&x, tx.clone());
+        coord.submit(mid, &x, tx.clone());
     }
     drop(tx);
 
@@ -611,6 +625,7 @@ fn backend_panic_contained_as_typed_error() {
     cfg.backend = BackendSpec::FaultInjecting(model.clone());
     cfg.batcher = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(200) };
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
 
     let inputs = test_inputs(&model, 7, 56);
     for x in &inputs {
@@ -625,9 +640,9 @@ fn backend_panic_contained_as_typed_error() {
     let mut expected: HashMap<u64, &Vec<bool>> = HashMap::new();
     for (i, x) in inputs.iter().enumerate() {
         if i == 2 {
-            coord.submit(&FaultInjectingBackend::panic_row(model.n_features), bad_tx.clone());
+            coord.submit(mid, &FaultInjectingBackend::panic_row(model.n_features), bad_tx.clone());
         }
-        let id = coord.submit(x, tx.clone());
+        let id = coord.submit(mid, x, tx.clone());
         expected.insert(id, x);
     }
     drop(tx);
@@ -649,7 +664,7 @@ fn backend_panic_contained_as_typed_error() {
     }
     // The worker thread survived the panic and keeps serving.
     let x = &inputs[0];
-    assert_eq!(coord.infer_blocking(x).unwrap().pred, model.predict(x));
+    assert_eq!(coord.infer_blocking(mid, x).unwrap().pred, model.predict(x));
     assert!(coord.metrics().failed_batches >= 1);
     coord.shutdown();
 }
@@ -664,6 +679,7 @@ fn backend_failure_isolated_to_poison_row_neighbors_served() {
     cfg.backend = BackendSpec::FaultInjecting(model.clone());
     cfg.batcher = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(200) };
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
 
     let inputs = test_inputs(&model, 7, 51);
     for x in &inputs {
@@ -674,9 +690,9 @@ fn backend_failure_isolated_to_poison_row_neighbors_served() {
     let mut expected: HashMap<u64, &Vec<bool>> = HashMap::new();
     for (i, x) in inputs.iter().enumerate() {
         if i == 3 {
-            coord.submit(&FaultInjectingBackend::poison_row(model.n_features), bad_tx.clone());
+            coord.submit(mid, &FaultInjectingBackend::poison_row(model.n_features), bad_tx.clone());
         }
-        let id = coord.submit(x, tx.clone());
+        let id = coord.submit(mid, x, tx.clone());
         expected.insert(id, x);
     }
     drop(tx);
@@ -716,7 +732,8 @@ fn infer_blocking_surfaces_typed_errors() {
     // Rejected: the admission width gate.
     let cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
-    let err = coord.infer_blocking(&vec![true; model.n_features + 1]).unwrap_err();
+    let mid = coord.model_id("e2e_model").unwrap();
+    let err = coord.infer_blocking(mid, &vec![true; model.n_features + 1]).unwrap_err();
     let want = InferError::WidthMismatch {
         got: model.n_features + 1,
         expected: model.n_features,
@@ -728,8 +745,9 @@ fn infer_blocking_surfaces_typed_errors() {
     let mut cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
     cfg.queue_limit = Some(0);
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
     let x = test_inputs(&model, 1, 61).remove(0);
-    let err = coord.infer_blocking(&x).unwrap_err();
+    let err = coord.infer_blocking(mid, &x).unwrap_err();
     assert_eq!(
         err.downcast_ref::<InferError>(),
         Some(&InferError::QueueFull { depth: 0, limit: 0 })
@@ -742,8 +760,9 @@ fn infer_blocking_surfaces_typed_errors() {
     let mut cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
     cfg.backend = BackendSpec::FaultInjecting(model.clone());
     let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
     let err = coord
-        .infer_blocking(&FaultInjectingBackend::poison_row(model.n_features))
+        .infer_blocking(mid, &FaultInjectingBackend::poison_row(model.n_features))
         .unwrap_err();
     match err.downcast_ref::<InferError>() {
         Some(InferError::BackendFailed(msg)) => {
@@ -753,7 +772,7 @@ fn infer_blocking_surfaces_typed_errors() {
     }
     assert_eq!(coord.metrics().failed_batches, 1);
     // The pool survives the failure and keeps serving.
-    let resp = coord.infer_blocking(&x).unwrap();
+    let resp = coord.infer_blocking(mid, &x).unwrap();
     assert_eq!(resp.pred, model.predict(&x));
     coord.shutdown();
 }

@@ -1,0 +1,405 @@
+//! Multi-model serving e2e: one pool routing, batching, and hot-swapping
+//! several TM models.
+//!
+//! Covers the model-keyed refactor's acceptance invariants:
+//! * a mixed pool serving two models of different feature widths / class
+//!   counts produces **bit-identical** predictions to two dedicated
+//!   single-model pools, with zero mixed-width batches ever formed;
+//! * per-model metrics (`metrics_for`) sum exactly to the pool totals;
+//! * `reload` under live traffic loses zero requests — every reply is
+//!   the old or the new generation's prediction, never an error — and a
+//!   failed reload leaves the previous generation serving;
+//! * unregistered models are answered with a typed `UnknownModel`.
+//!
+//! The artifact-free pools run on `BackendSpec::InMemorySet`; the
+//! hot-swap tests write real artifacts (`Manifest::write_synthetic`) to
+//! a temp dir so the registry's invalidate + re-open path reads a
+//! genuinely rewritten file.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tdpc::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy, InferError, ReplayPolicy,
+    ShedPolicy,
+};
+use tdpc::runtime::BackendSpec;
+use tdpc::tm::{Manifest, TmModel};
+use tdpc::util::SplitMix64;
+
+/// Two tenants whose widths straddle a u64 word boundary (63 vs 65
+/// features) and whose class counts differ — any batch that mixed them
+/// would fail loudly.
+fn model_a() -> Arc<TmModel> {
+    Arc::new(TmModel::synthetic("tenant_a", 3, 11, 63, 0.2, 101))
+}
+
+fn model_b() -> Arc<TmModel> {
+    Arc::new(TmModel::synthetic("tenant_b", 2, 9, 65, 0.25, 202))
+}
+
+fn inputs_for(model: &TmModel, n: usize, seed: u64) -> Vec<Vec<bool>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| (0..model.n_features).map(|_| rng.next_bool(0.5)).collect()).collect()
+}
+
+fn unused_root() -> PathBuf {
+    PathBuf::from("/nonexistent-artifacts-root")
+}
+
+fn set_spec() -> BackendSpec {
+    BackendSpec::InMemorySet(Arc::new(vec![model_a(), model_b()]))
+}
+
+fn pool_config(n_workers: usize, backend: BackendSpec) -> CoordinatorConfig {
+    CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(300) },
+        n_workers,
+        dispatch: DispatchPolicy::RoundRobin,
+        backend,
+        replay: ReplayPolicy::Off,
+        queue_limit: None,
+        shed: ShedPolicy::RejectNew,
+    }
+}
+
+fn tmp_root(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tdpc-mm-{tag}-{}", std::process::id()))
+}
+
+/// The tentpole acceptance path: a 4-worker pool serving two models of
+/// different widths under interleaved burst load. Every response must
+/// match that model's own golden — and be bit-identical to what two
+/// dedicated single-model pools produce — with `failed_batches == 0`
+/// and `rejected_requests == 0` (a mixed-width batch would surface as
+/// one or the other), and the per-model metrics must sum to the pool
+/// totals.
+#[test]
+fn mixed_pool_matches_dedicated_single_model_pools() {
+    let (a, b) = (model_a(), model_b());
+    let n_each = 150;
+    let xa = inputs_for(&a, n_each, 1);
+    let xb = inputs_for(&b, n_each, 2);
+
+    let names = ["tenant_a", "tenant_b"];
+    let coord =
+        Coordinator::start_multi(unused_root(), &names, pool_config(4, set_spec())).unwrap();
+    let mid_a = coord.model_id("tenant_a").unwrap();
+    let mid_b = coord.model_id("tenant_b").unwrap();
+    assert_ne!(mid_a, mid_b);
+    assert_eq!(coord.n_features_for(mid_a), Some(63));
+    assert_eq!(coord.n_features_for(mid_b), Some(65));
+    assert_eq!(
+        coord.served_models().map(|(_, n)| n.to_string()).collect::<Vec<_>>(),
+        vec!["tenant_a", "tenant_b"]
+    );
+
+    // Interleaved open-loop burst: submissions alternate models, so both
+    // tenants are pending in every worker at once.
+    let (tx, rx) = mpsc::channel();
+    for i in 0..n_each {
+        coord.submit(mid_a, &xa[i], tx.clone());
+        coord.submit(mid_b, &xb[i], tx.clone());
+    }
+    drop(tx);
+    let responses: Vec<_> =
+        rx.iter().map(|r| r.expect("no request may fail in a healthy mixed pool")).collect();
+    assert_eq!(responses.len(), 2 * n_each);
+
+    // Dedicated single-model pools over the same inputs, for the
+    // bit-identical comparison.
+    let solo_a = Coordinator::start(
+        unused_root(),
+        "tenant_a",
+        pool_config(4, BackendSpec::InMemory(a.clone())),
+    )
+    .unwrap();
+    let solo_b = Coordinator::start(
+        unused_root(),
+        "tenant_b",
+        pool_config(4, BackendSpec::InMemory(b.clone())),
+    )
+    .unwrap();
+    let sid_a = solo_a.model_id("tenant_a").unwrap();
+    let sid_b = solo_b.model_id("tenant_b").unwrap();
+
+    for r in &responses {
+        // Ids alternate a,b in submission order: even → a, odd → b.
+        let round = (r.request_id / 2) as usize;
+        let (x, solo, sid, model) = if r.model == mid_a {
+            (&xa[round], &solo_a, sid_a, &a)
+        } else {
+            assert_eq!(r.model, mid_b);
+            (&xb[round], &solo_b, sid_b, &b)
+        };
+        assert_eq!(r.pred, model.predict(x), "request {}", r.request_id);
+        assert_eq!(r.sums, model.class_sums(x), "request {}", r.request_id);
+        let solo_resp = solo.infer_blocking(sid, x).unwrap();
+        assert_eq!(r.pred, solo_resp.pred, "mixed pool diverged from dedicated pool");
+        assert_eq!(r.sums, solo_resp.sums, "mixed pool diverged from dedicated pool");
+        assert_eq!(r.generation, 0, "no reload happened");
+    }
+    solo_a.shutdown();
+    solo_b.shutdown();
+
+    // No mixed-width batch can have formed: assembly rejections or
+    // forward failures would have counted it.
+    let pool = coord.metrics();
+    assert_eq!(pool.failed_batches, 0, "a mixed-width batch would fail its forward pass");
+    assert_eq!(pool.rejected_requests, 0, "a mixed-width batch would reject at assembly");
+    assert_eq!(pool.requests, 2 * n_each as u64);
+
+    // Per-model metrics sum exactly to the pool totals.
+    let ma = coord.metrics_for(mid_a).unwrap();
+    let mb = coord.metrics_for(mid_b).unwrap();
+    assert_eq!(ma.requests, n_each as u64);
+    assert_eq!(mb.requests, n_each as u64);
+    assert_eq!(ma.requests + mb.requests, pool.requests);
+    assert_eq!(ma.batches + mb.batches, pool.batches);
+    assert_eq!(ma.shed_requests + mb.shed_requests, pool.shed_requests);
+    assert_eq!(ma.failed_batches + mb.failed_batches, pool.failed_batches);
+    assert!(ma.batches >= 1 && mb.batches >= 1);
+    assert!(
+        ma.service_p50_us > 0.0 && mb.service_p50_us > 0.0,
+        "per-model latency percentiles are populated"
+    );
+    // Per-worker snapshots cover the same traffic along the other axis.
+    let per_worker = coord.worker_metrics();
+    assert_eq!(per_worker.iter().map(|w| w.requests).sum::<u64>(), pool.requests);
+    assert_eq!(per_worker.iter().map(|w| w.batches).sum::<u64>(), pool.batches);
+    coord.shutdown();
+}
+
+/// Per-model admission: the width gate checks the *request's* model, so
+/// a row of the other tenant's width is rejected with that model's
+/// expected width, and the rejection is attributed to the right tenant.
+#[test]
+fn width_gate_is_per_model() {
+    let names = ["tenant_a", "tenant_b"];
+    let coord =
+        Coordinator::start_multi(unused_root(), &names, pool_config(1, set_spec())).unwrap();
+    let mid_a = coord.model_id("tenant_a").unwrap();
+    let mid_b = coord.model_id("tenant_b").unwrap();
+
+    // A 65-wide row is valid for B but not for A.
+    let row = vec![true; 65];
+    let err = coord.infer_blocking(mid_a, &row).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<InferError>(),
+        Some(&InferError::WidthMismatch { got: 65, expected: 63 })
+    );
+    let resp = coord.infer_blocking(mid_b, &row).unwrap();
+    assert_eq!(resp.pred, model_b().predict(&row));
+
+    assert_eq!(coord.metrics_for(mid_a).unwrap().rejected_requests, 1);
+    assert_eq!(coord.metrics_for(mid_b).unwrap().rejected_requests, 0);
+    assert_eq!(coord.metrics().rejected_requests, 1);
+    coord.shutdown();
+}
+
+/// Unregistered names and foreign/stale ids are answered with a typed
+/// `UnknownModel` — exactly one reply, never a dead channel.
+#[test]
+fn unknown_model_is_a_typed_error() {
+    let names = ["tenant_a", "tenant_b"];
+    let coord =
+        Coordinator::start_multi(unused_root(), &names, pool_config(1, set_spec())).unwrap();
+    assert_eq!(coord.model_id("ghost"), None);
+
+    let (tx, rx) = mpsc::channel();
+    coord.submit_named("ghost", &[true; 63], tx);
+    match rx.recv().unwrap() {
+        Err(InferError::UnknownModel { name }) => assert_eq!(name, "ghost"),
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+
+    // A ModelId minted by a *different* pool does not resolve here even
+    // when its index is in range for this pool: ids are pool-tagged, so
+    // a cross-pool mixup is a typed UnknownModel, never a silent
+    // misroute to whatever model occupies that index.
+    let other = Coordinator::start_multi(
+        unused_root(),
+        &["tenant_a", "tenant_b"],
+        pool_config(1, set_spec()),
+    )
+    .unwrap();
+    let foreign = other.model_id("tenant_a").unwrap();
+    assert_eq!(foreign.index(), 0, "in range for `coord`, yet still foreign");
+    assert_ne!(foreign, coord.model_id("tenant_a").unwrap());
+    assert_eq!(coord.n_features_for(foreign), None);
+    let err = coord.infer_blocking(foreign, &[true; 63]).unwrap_err();
+    match err.downcast_ref::<InferError>() {
+        Some(InferError::UnknownModel { .. }) => {}
+        otherwise => panic!("expected UnknownModel, got {otherwise:?}"),
+    }
+    // submit_named still resolves real tenants.
+    let mid_a = coord.model_id("tenant_a").unwrap();
+    let (tx, rx) = mpsc::channel();
+    let id = coord.submit_named("tenant_a", &inputs_for(&model_a(), 1, 9)[0], tx);
+    let resp = rx.recv().unwrap().unwrap();
+    assert_eq!((resp.request_id, resp.model), (id, mid_a));
+    other.shutdown();
+    coord.shutdown();
+}
+
+/// The hot-swap acceptance path, against *real* on-disk artifacts:
+/// a retrained artifact replaces the served one under concurrent
+/// submits, and zero requests are lost — every reply is the old or the
+/// new generation's prediction (both goldens computed in-test), never
+/// an error. Rows submitted before the reload are served by generation
+/// 0; rows submitted after `reload` returns by generation 1; rows
+/// racing the reload by whichever generation computed them.
+#[test]
+fn hot_swap_reload_loses_zero_requests() {
+    let root = tmp_root("hotswap");
+    let v1 = TmModel::synthetic("swap", 3, 8, 20, 0.2, 1);
+    let v2 = TmModel::synthetic("swap", 3, 8, 20, 0.2, 2);
+    Manifest::write_synthetic(&root, &[&v1]).unwrap();
+
+    let n_phase = 150;
+    let inputs = inputs_for(&v1, 3 * n_phase, 5);
+    // The swap must be observable: at least one input where the
+    // generations disagree.
+    assert!(
+        inputs.iter().any(|x| v1.predict(x) != v2.predict(x)),
+        "seeded models must disagree somewhere"
+    );
+
+    let coord =
+        Coordinator::start_multi(root.clone(), &["swap"], pool_config(4, BackendSpec::Native))
+            .unwrap();
+    let mid = coord.model_id("swap").unwrap();
+
+    let (tx, rx) = mpsc::channel();
+    // Phase 1: submitted (and therefore enqueued) before the reload —
+    // every worker flushes these against generation 0 before swapping.
+    for x in &inputs[..n_phase] {
+        coord.submit(mid, x, tx.clone());
+    }
+    // Rewrite the artifact on disk, then hot-swap while phase-1 rows are
+    // still in flight and a concurrent submitter keeps the traffic
+    // continuous through the swap window.
+    Manifest::write_synthetic(&root, &[&v2]).unwrap();
+    std::thread::scope(|s| {
+        let coord = &coord;
+        let racing = &inputs[n_phase..2 * n_phase];
+        let tx2 = tx.clone();
+        s.spawn(move || {
+            for x in racing {
+                coord.submit(mid, x, tx2.clone());
+            }
+        });
+        coord.reload(mid).unwrap();
+    });
+    // Phase 3: strictly after the reload returned — all workers have
+    // swapped, so these must be generation 1.
+    for x in &inputs[2 * n_phase..] {
+        coord.submit(mid, x, tx.clone());
+    }
+    drop(tx);
+
+    let replies: Vec<_> = rx.iter().collect();
+    assert_eq!(replies.len(), 3 * n_phase, "zero requests lost across the swap");
+    let mut gen0 = 0usize;
+    let mut gen1 = 0usize;
+    for reply in replies {
+        let resp = reply.expect("every reply is a prediction, never an error");
+        let i = resp.request_id as usize;
+        let want = match resp.generation {
+            0 => {
+                gen0 += 1;
+                v1.predict(&inputs[i])
+            }
+            1 => {
+                gen1 += 1;
+                v2.predict(&inputs[i])
+            }
+            g => panic!("impossible generation {g}"),
+        };
+        assert_eq!(resp.pred, want, "request {i} (generation {})", resp.generation);
+        if i < n_phase {
+            assert_eq!(resp.generation, 0, "pre-reload rows drain against the old backend");
+        }
+        if i >= 2 * n_phase {
+            assert_eq!(resp.generation, 1, "post-reload rows meet the new backend");
+        }
+    }
+    assert!(gen0 >= n_phase && gen1 >= n_phase, "both generations actually served");
+    assert_eq!(coord.metrics().requests, 3 * n_phase as u64);
+    assert_eq!(coord.metrics().failed_batches, 0);
+
+    // The pool stays on the new generation afterwards.
+    let resp = coord.infer_blocking(mid, &inputs[0]).unwrap();
+    assert_eq!((resp.generation, resp.pred), (1, v2.predict(&inputs[0])));
+    coord.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Reload is fail-soft: if the rewritten artifact is corrupt, `reload`
+/// returns the error and every worker keeps serving the previous
+/// generation; fixing the artifact and retrying converges.
+#[test]
+fn failed_reload_keeps_previous_generation_serving() {
+    let root = tmp_root("badswap");
+    let v1 = TmModel::synthetic("swap", 2, 6, 16, 0.25, 3);
+    let v3 = TmModel::synthetic("swap", 2, 6, 16, 0.25, 4);
+    Manifest::write_synthetic(&root, &[&v1]).unwrap();
+
+    let coord =
+        Coordinator::start_multi(root.clone(), &["swap"], pool_config(2, BackendSpec::Native))
+            .unwrap();
+    let mid = coord.model_id("swap").unwrap();
+    let xs = inputs_for(&v1, 8, 6);
+
+    // Corrupt the artifact: the swap must fail and change nothing.
+    std::fs::write(root.join("models").join("swap.json"), "{ this is not json").unwrap();
+    let err = coord.reload(mid).unwrap_err().to_string();
+    assert!(err.contains("swap"), "actionable reload error, got {err}");
+    for x in &xs {
+        let resp = coord.infer_blocking(mid, x).unwrap();
+        assert_eq!(
+            (resp.generation, resp.pred),
+            (0, v1.predict(x)),
+            "previous generation keeps serving after a failed reload"
+        );
+    }
+
+    // Fix the artifact: the retry converges onto the newest generation
+    // (the failed attempt consumed generation 1).
+    Manifest::write_synthetic(&root, &[&v3]).unwrap();
+    coord.reload(mid).unwrap();
+    for x in &xs {
+        let resp = coord.infer_blocking(mid, x).unwrap();
+        assert_eq!((resp.generation, resp.pred), (2, v3.predict(x)));
+    }
+    coord.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Reload also works on artifact-free in-memory pools (the set spec
+/// rebuilds the same model): generations advance, predictions stay.
+#[test]
+fn reload_on_in_memory_pool_bumps_generation() {
+    let names = ["tenant_a", "tenant_b"];
+    let coord =
+        Coordinator::start_multi(unused_root(), &names, pool_config(2, set_spec())).unwrap();
+    let mid_a = coord.model_id("tenant_a").unwrap();
+    let mid_b = coord.model_id("tenant_b").unwrap();
+    let (a, b) = (model_a(), model_b());
+    let xa = inputs_for(&a, 4, 11);
+    let xb = inputs_for(&b, 4, 12);
+
+    coord.reload(mid_a).unwrap();
+    for x in &xa {
+        let resp = coord.infer_blocking(mid_a, x).unwrap();
+        assert_eq!((resp.generation, resp.pred), (1, a.predict(x)));
+    }
+    // Tenant B is untouched by A's reload.
+    for x in &xb {
+        let resp = coord.infer_blocking(mid_b, x).unwrap();
+        assert_eq!((resp.generation, resp.pred), (0, b.predict(x)));
+    }
+    coord.shutdown();
+}
