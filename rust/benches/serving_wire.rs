@@ -1,0 +1,149 @@
+//! §Perf L4 bench: the network serving wire itself.
+//!
+//! Artifact-free, three measurements:
+//!
+//! 1. **Frame codec, in memory** — `InferRequestMsg` encode+decode
+//!    throughput through `write_frame`/`read_frame` over a byte buffer
+//!    (the pure CPU cost of the protocol, no sockets).
+//! 2. **TCP loopback round-trip** — a pipelined window of requests over a
+//!    real socket against a live synthetic-model server.
+//! 3. **Direct submission baseline** — the same burst through
+//!    `Coordinator::submit_packed` on the same pool, so the wire's
+//!    overhead above the coordinator is a directly-reported delta.
+//!
+//! Registered in CI as a compile target (`cargo bench --no-run`).
+
+use std::io::Cursor;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tdpc::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy, ReplayPolicy,
+};
+use tdpc::runtime::BackendSpec;
+use tdpc::server::{
+    read_frame, write_frame, Client, InferRequestMsg, Kind, Server, ServerConfig,
+};
+use tdpc::tm::{BitVec64, TmModel};
+use tdpc::util::{benchkit, SplitMix64};
+
+const N_FEATURES: usize = 128;
+const BURST: usize = 256;
+
+fn random_rows(n: usize, seed: u64) -> Vec<BitVec64> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|_| {
+            BitVec64::from_bools(
+                &(0..N_FEATURES).map(|_| rng.next_bool(0.5)).collect::<Vec<bool>>(),
+            )
+        })
+        .collect()
+}
+
+/// Measurement 1: pure codec throughput, no sockets.
+fn bench_codec(rows: &[BitVec64]) {
+    let frames: Vec<Vec<u8>> = rows
+        .iter()
+        .enumerate()
+        .map(|(i, row)| {
+            InferRequestMsg {
+                corr: i as u64,
+                model: "wire_bench".to_string(),
+                n_features: row.len() as u32,
+                words: row.words().to_vec(),
+            }
+            .encode()
+        })
+        .collect();
+
+    let mut buf = Vec::with_capacity(frames.iter().map(|f| f.len() + 16).sum());
+    let mean = benchkit::bench_with(
+        &format!("serving_wire/codec_roundtrip_x{}", frames.len()),
+        Duration::from_millis(200),
+        Duration::from_secs(2),
+        || {
+            buf.clear();
+            for payload in &frames {
+                write_frame(&mut buf, Kind::InferRequest.as_u8(), payload).unwrap();
+            }
+            let mut rd = Cursor::new(buf.as_slice());
+            let mut decoded = 0usize;
+            while let Some((kind, payload)) = read_frame(&mut rd).unwrap() {
+                assert_eq!(kind, Kind::InferRequest.as_u8());
+                let req = InferRequestMsg::decode(&payload).unwrap();
+                decoded += req.words.len();
+            }
+            assert_eq!(decoded, frames.len() * N_FEATURES.div_ceil(64));
+        },
+    );
+    println!("  codec: {:.0} frames/s", benchkit::throughput(mean, frames.len()));
+}
+
+fn main() {
+    let rows = random_rows(BURST, 31);
+    bench_codec(&rows);
+
+    // One pool behind both the TCP and the direct measurements, so the
+    // wire overhead is the only difference.
+    let model = Arc::new(TmModel::synthetic("wire_bench", 4, 16, N_FEATURES, 0.15, 17));
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(300) },
+        n_workers: 2,
+        dispatch: DispatchPolicy::RoundRobin,
+        backend: BackendSpec::InMemorySet(Arc::new(vec![model])),
+        replay: ReplayPolicy::Off,
+        ..CoordinatorConfig::default()
+    };
+    let coord = Arc::new(
+        Coordinator::start_multi(std::path::PathBuf::from("/unused"), &["wire_bench"], cfg)
+            .unwrap(),
+    );
+    let server = Server::start(coord.clone(), "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    // Measurement 2: pipelined TCP round-trips (one connection; the
+    // blocking client serializes request/reply, so this is per-request
+    // wire latency, not peak pool throughput).
+    let mean_tcp = benchkit::bench_with(
+        &format!("serving_wire/tcp_roundtrip_x{BURST}"),
+        Duration::from_millis(200),
+        Duration::from_secs(2),
+        || {
+            for row in &rows {
+                let resp =
+                    client.infer_packed("wire_bench", row.len(), row.words().to_vec()).unwrap();
+                assert!((resp.pred as usize) < 4);
+            }
+        },
+    );
+    let tcp_rps = benchkit::throughput(mean_tcp, BURST);
+    println!("  tcp round-trip: {tcp_rps:.0} req/s");
+
+    // Measurement 3: the same burst submitted directly to the pool.
+    let mid = coord.model_id("wire_bench").unwrap();
+    let mean_direct = benchkit::bench_with(
+        &format!("serving_wire/direct_submit_x{BURST}"),
+        Duration::from_millis(200),
+        Duration::from_secs(2),
+        || {
+            let (tx, rx) = std::sync::mpsc::channel();
+            for row in &rows {
+                coord.submit_packed(mid, row.clone(), tx.clone());
+            }
+            drop(tx);
+            let got = rx.iter().take(BURST).filter(|r| r.is_ok()).count();
+            assert_eq!(got, BURST);
+        },
+    );
+    let direct_rps = benchkit::throughput(mean_direct, BURST);
+    println!("  direct submit: {direct_rps:.0} req/s");
+    println!(
+        "  wire overhead: tcp at {:.1}% of direct-submission throughput",
+        100.0 * tcp_rps / direct_rps
+    );
+
+    server.shutdown();
+    drop(client);
+    drop(coord); // last Arc: the pool drains and joins via Drop
+}

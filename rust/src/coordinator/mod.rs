@@ -366,12 +366,12 @@ enum WorkMsg {
     },
 }
 
-/// One worker's answer to a `Reload` control: the new backend's feature
-/// width, or why the swap failed (in which case the worker keeps serving
-/// the previous generation).
+/// One worker's answer to a `Reload` control: the new backend's shape
+/// (feature width, class count), or why the swap failed (in which case
+/// the worker keeps serving the previous generation).
 struct ReloadReport {
     worker: usize,
-    result: Result<usize>,
+    result: Result<(usize, usize)>,
 }
 
 /// One worker thread's handle: its queue, load gauge, per-model metrics,
@@ -395,6 +395,10 @@ struct ModelEntry {
     /// refreshed by reload acks — atomic because a reload commits the
     /// new width while submitters read it.
     n_features: AtomicUsize,
+    /// Class count of the served backend, maintained alongside
+    /// `n_features` (startup report + reload acks). Read by the network
+    /// front end to answer model-shape queries without touching a worker.
+    n_classes: AtomicUsize,
     /// Hot-swap generation counter; each [`Coordinator::reload`] attempt
     /// consumes the next value.
     generation: AtomicU64,
@@ -465,7 +469,7 @@ impl Coordinator {
         }
         let names: Arc<Vec<String>> = Arc::new(models.iter().map(|s| s.to_string()).collect());
         let shutdown = Arc::new(AtomicBool::new(false));
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<usize>>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<(usize, usize)>>>();
         let mut workers = Vec::with_capacity(cfg.n_workers);
         for w in 0..cfg.n_workers {
             let (tx, rx) = mpsc::channel::<WorkMsg>();
@@ -488,7 +492,7 @@ impl Coordinator {
                     .spawn(move || {
                         // Build the registry and every model's backend
                         // inside the owning thread.
-                        let (registry, slots, widths) =
+                        let (registry, slots, shapes) =
                             match open_worker_models(&root, spec, &names) {
                                 Ok(opened) => opened,
                                 Err(e) => {
@@ -496,7 +500,7 @@ impl Coordinator {
                                     return;
                                 }
                             };
-                        let _ = ready_tx.send(Ok(widths));
+                        let _ = ready_tx.send(Ok(shapes));
                         drop(ready_tx);
                         Worker {
                             index: w,
@@ -521,23 +525,23 @@ impl Coordinator {
         drop(ready_tx);
 
         // Collect one readiness report per worker before declaring the
-        // pool up; the first successful report populates the width table.
+        // pool up; the first successful report populates the shape table.
         let mut startup_err: Option<anyhow::Error> = None;
-        let mut widths: Option<Vec<usize>> = None;
+        let mut shapes: Option<Vec<(usize, usize)>> = None;
         for _ in 0..cfg.n_workers {
             let report = ready_rx
                 .recv()
                 .unwrap_or_else(|_| Err(anyhow!("coordinator worker died during startup")));
             match report {
                 Ok(ws) => {
-                    widths.get_or_insert(ws);
+                    shapes.get_or_insert(ws);
                 }
                 Err(e) => {
                     startup_err.get_or_insert(e);
                 }
             }
         }
-        let widths = match (startup_err, widths) {
+        let shapes = match (startup_err, shapes) {
             (None, Some(ws)) => ws,
             (err, _) => {
                 shutdown.store(true, Ordering::SeqCst);
@@ -556,10 +560,11 @@ impl Coordinator {
 
         let entries = names
             .iter()
-            .zip(&widths)
-            .map(|(name, &width)| ModelEntry {
+            .zip(&shapes)
+            .map(|(name, &(width, classes))| ModelEntry {
                 name: name.clone(),
                 n_features: AtomicUsize::new(width),
+                n_classes: AtomicUsize::new(classes),
                 generation: AtomicU64::new(0),
                 admission_rejected: AtomicU64::new(0),
                 admission_shed: AtomicU64::new(0),
@@ -618,6 +623,47 @@ impl Coordinator {
         Some(self.entry(model)?.n_features.load(Ordering::Relaxed))
     }
 
+    /// Class count of one served model (`None` for a foreign or unknown
+    /// id). Tracked alongside the width table, so model-shape queries —
+    /// e.g. the network front end's `ModelQuery` — never touch a worker.
+    pub fn n_classes_for(&self, model: ModelId) -> Option<usize> {
+        Some(self.entry(model)?.n_classes.load(Ordering::Relaxed))
+    }
+
+    /// Current hot-swap generation of one served model: 0 until its
+    /// first successful [`Coordinator::reload`]. `None` for a foreign or
+    /// unknown id.
+    pub fn generation_for(&self, model: ModelId) -> Option<u64> {
+        Some(self.entry(model)?.generation.load(Ordering::Relaxed))
+    }
+
+    /// The pool's per-worker queue bound, if one is configured.
+    pub fn queue_limit(&self) -> Option<usize> {
+        self.queue_limit
+    }
+
+    /// Total in-flight load across all workers (dispatched but not yet
+    /// answered) — a point-in-time gauge, approximate under concurrency.
+    pub fn total_depth(&self) -> usize {
+        self.workers.iter().map(|w| w.depth.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Whether every worker is at (or over) the configured queue limit —
+    /// the condition under which a reject-new submit would shed. Always
+    /// `false` without a queue limit. The network listener reads this at
+    /// accept time to refuse whole connections while the pool is
+    /// saturated, shedding overload at the socket instead of
+    /// accumulating per-request errors in RAM.
+    pub fn is_saturated(&self) -> bool {
+        match self.queue_limit {
+            None => false,
+            Some(limit) => self
+                .workers
+                .iter()
+                .all(|w| w.depth.load(Ordering::Relaxed) >= limit),
+        }
+    }
+
     fn pick_worker(&self) -> usize {
         match self.dispatch {
             DispatchPolicy::RoundRobin => {
@@ -646,6 +692,20 @@ impl Coordinator {
     /// per-model batching, the backend forward pass) works on `u64`
     /// words.
     pub fn submit(&self, model: ModelId, features: &[bool], reply: mpsc::Sender<Reply>) -> u64 {
+        self.submit_packed(model, BitVec64::from_bools(features), reply)
+    }
+
+    /// [`Coordinator::submit`] for callers that already hold the packed
+    /// form — the network front end decodes wire frames straight into
+    /// [`BitVec64`] words, so this path never materializes a bool slice.
+    /// Same admission gates and fail-soft contract; the width check runs
+    /// against the packed row's logical length.
+    pub fn submit_packed(
+        &self,
+        model: ModelId,
+        features: BitVec64,
+        reply: mpsc::Sender<Reply>,
+    ) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let Some(entry) = self.entry(model) else {
             let _ = reply.send(Err(InferError::UnknownModel { name: model.to_string() }));
@@ -690,12 +750,7 @@ impl Coordinator {
         worker.depth.fetch_add(1, Ordering::Relaxed);
         let item = WorkItem {
             id,
-            req: InferRequest {
-                model,
-                features: BitVec64::from_bools(features),
-                reply,
-                submitted: Instant::now(),
-            },
+            req: InferRequest { model, features, reply, submitted: Instant::now() },
         };
         if let Err(mpsc::SendError(msg)) = tx.send(WorkMsg::Infer(item)) {
             // The worker died; the item comes back, so its caller still
@@ -724,6 +779,26 @@ impl Coordinator {
         }
     }
 
+    /// [`Coordinator::submit_packed`] with per-call name resolution —
+    /// the network request path: an unregistered name is answered with a
+    /// typed [`InferError::UnknownModel`] on the reply channel (still
+    /// exactly one [`Reply`] per call).
+    pub fn submit_packed_named(
+        &self,
+        model: &str,
+        features: BitVec64,
+        reply: mpsc::Sender<Reply>,
+    ) -> u64 {
+        match self.model_id(model) {
+            Some(mid) => self.submit_packed(mid, features, reply),
+            None => {
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Err(InferError::UnknownModel { name: model.to_string() }));
+                id
+            }
+        }
+    }
+
     /// Convenience blocking call. Rejected, shed, and backend-failed
     /// requests surface as a typed [`InferError`] (recoverable via
     /// `err.downcast_ref::<InferError>()`), never a bare closed-channel
@@ -731,8 +806,7 @@ impl Coordinator {
     pub fn infer_blocking(&self, model: ModelId, features: &[bool]) -> Result<InferResponse> {
         let (tx, rx) = mpsc::channel();
         self.submit(model, features, tx);
-        let reply = rx.recv().context("coordinator dropped the reply channel")?;
-        reply.map_err(anyhow::Error::from)
+        await_reply(&rx).map_err(anyhow::Error::from)
     }
 
     /// Hot-swap one model: re-open its artifact in every worker while
@@ -782,12 +856,12 @@ impl Coordinator {
         }
         drop(ack_tx);
         ensure!(sent == self.workers.len(), "coordinator is shutting down");
-        let mut new_width: Option<usize> = None;
+        let mut new_shape: Option<(usize, usize)> = None;
         let mut first_err: Option<anyhow::Error> = None;
         for _ in 0..sent {
             match ack_rx.recv() {
-                Ok(ReloadReport { result: Ok(width), .. }) => {
-                    new_width.get_or_insert(width);
+                Ok(ReloadReport { result: Ok(shape), .. }) => {
+                    new_shape.get_or_insert(shape);
                 }
                 Ok(ReloadReport { worker, result: Err(e) }) => {
                     first_err
@@ -806,8 +880,9 @@ impl Coordinator {
                 )
             });
         }
-        if let Some(width) = new_width {
+        if let Some((width, classes)) = new_shape {
             entry.n_features.store(width, Ordering::Relaxed);
+            entry.n_classes.store(classes, Ordering::Relaxed);
         }
         Ok(())
     }
@@ -893,26 +968,37 @@ impl Drop for Coordinator {
     }
 }
 
+/// Wait for the single [`Reply`] a submit guarantees. A closed channel —
+/// possible only if the pool is torn down around the caller — degrades
+/// to a typed [`InferError::ShuttingDown`] instead of a panic or a bare
+/// `RecvError`, keeping the fail-soft contract airtight for every
+/// consumer. This is the one reply-wait implementation shared by
+/// [`Coordinator::infer_blocking`] and the network connection handler
+/// (`server::conn`).
+pub fn await_reply(rx: &mpsc::Receiver<Reply>) -> Reply {
+    rx.recv().unwrap_or(Err(InferError::ShuttingDown))
+}
+
 /// Open one worker's registry and a backend per served model, reporting
-/// the models' feature widths (serve-list order). Runs inside the worker
-/// thread; any failure (missing artifact, unknown model name) aborts
-/// pool startup.
+/// the models' shapes (feature width, class count) in serve-list order.
+/// Runs inside the worker thread; any failure (missing artifact, unknown
+/// model name) aborts pool startup.
 fn open_worker_models(
     root: &Path,
     spec: BackendSpec,
     names: &[String],
-) -> Result<(ModelRegistry, Vec<ModelSlot>, Vec<usize>)> {
+) -> Result<(ModelRegistry, Vec<ModelSlot>, Vec<(usize, usize)>)> {
     let registry = ModelRegistry::open_with(root, spec)?;
     let mut slots = Vec::with_capacity(names.len());
-    let mut widths = Vec::with_capacity(names.len());
+    let mut shapes = Vec::with_capacity(names.len());
     for name in names {
         let backend = registry
             .backend(name)
             .with_context(|| format!("opening model {name:?}"))?;
-        widths.push(backend.n_features());
+        shapes.push((backend.n_features(), backend.n_classes()));
         slots.push(ModelSlot { name: name.clone(), generation: 0, backend });
     }
-    Ok((registry, slots, widths))
+    Ok((registry, slots, shapes))
 }
 
 /// Reject-new admission spill: when the dispatcher's pick is at the
@@ -1110,7 +1196,7 @@ impl Worker {
     /// backend (they were submitted before the reload), then invalidate
     /// and re-open through the registry. On failure the slot is left
     /// untouched — the worker keeps serving the previous generation.
-    fn swap(&mut self, ix: usize, generation: u64) -> Result<usize> {
+    fn swap(&mut self, ix: usize, generation: u64) -> Result<(usize, usize)> {
         while !self.pending[ix].is_empty() {
             let take = self.pending[ix].len().min(self.cfg.max_batch);
             self.flush(ix, take);
@@ -1121,11 +1207,11 @@ impl Worker {
             .registry
             .backend(&name)
             .with_context(|| format!("re-opening model {name:?}"))?;
-        let width = backend.n_features();
+        let shape = (backend.n_features(), backend.n_classes());
         let slot = &mut self.slots[ix];
         slot.backend = backend;
         slot.generation = generation;
-        Ok(width)
+        Ok(shape)
     }
 
     fn replan(&mut self) -> Option<(usize, BatchPlan)> {

@@ -14,8 +14,9 @@
 //!   simulator ([`timing`]), the asynchronous MOUSETRAP TM engine
 //!   ([`asynctm`]), all adder-based baselines ([`baselines`]), power and
 //!   resource models ([`power`]), the unified executable hardware-engine
-//!   seam ([`hw`]), the pluggable inference runtime ([`runtime`]) and a
-//!   multi-worker batch-serving coordinator ([`coordinator`]).
+//!   seam ([`hw`]), the pluggable inference runtime ([`runtime`]), a
+//!   multi-worker batch-serving coordinator ([`coordinator`]), and a
+//!   dependency-free TCP serving front end + load harness ([`server`]).
 //!
 //! # Execution backends
 //!
@@ -44,6 +45,19 @@
 //! metrics that aggregate across the pool — per tenant via
 //! [`coordinator::Coordinator::metrics_for`], per worker via
 //! `worker_metrics`.
+//!
+//! On top of the coordinator sits the **network serving layer**
+//! ([`server`]): a length-prefixed binary protocol over TCP (magic +
+//! version + model name + packed feature words — rows never unpack on
+//! the wire path), a multi-threaded accept/connection loop that decodes
+//! frames into [`coordinator::Coordinator::submit_packed_named`] and
+//! streams replies back in submission order, typed
+//! [`coordinator::InferError`]s mapped to protocol error codes
+//! ([`server::protocol::error_code`]), accept-time overload refusal tied
+//! to the pool's admission state
+//! ([`coordinator::Coordinator::is_saturated`]), and an open/closed-loop
+//! load generator ([`server::loadgen`]) that writes `BENCH_serving.json`
+//! — CI's per-run perf datapoint.
 //!
 //! # The hardware-engine seam
 //!
@@ -94,6 +108,7 @@ pub mod hw;
 pub mod pdl;
 pub mod power;
 pub mod runtime;
+pub mod server;
 pub mod timing;
 pub mod tm;
 pub mod util;

@@ -12,7 +12,17 @@
 //!               --shed reject-new|drop-oldest deciding what QueueFull drops;
 //!               --models a,b,c serves several models through one pool,
 //!               batched per model, and --reload <model> hot-swaps that
-//!               model mid-burst with zero lost requests)
+//!               model mid-burst with zero lost requests).
+//!               With --listen ADDR the pool serves the binary wire
+//!               protocol over TCP instead of a local burst: --synthetic N
+//!               serves N in-memory synthetic models (no artifacts needed),
+//!               --conn-limit caps concurrent connections, --port-file P
+//!               writes the bound addr for scripts, --duration-s bounds the
+//!               run (0 = forever)
+//!   loadgen   — drive a serve --listen front end and write
+//!               BENCH_serving.json (--addr or --port-file, --mode
+//!               closed|open, --conns N, --rate RPS, --models a:3,b:1,
+//!               --burst steady|square:<ms>:<pct>, --assert for CI gating)
 //!   flow      — run the FPGA implementation flow and print the skew audit
 //!   table1 / fig6 / fig9 / fig10 / fig11 / fig12 — regenerate the paper's
 //!               tables/figures (markdown to stdout, CSV via --csv DIR)
@@ -32,7 +42,8 @@ use tdpc::experiments::{ablation, fig10, fig11, fig12, fig6, fig9, table1, Table
 use tdpc::fabric::Device;
 use tdpc::flow::{self, skew_report, FlowConfig};
 use tdpc::runtime::{BackendSpec, InferenceBackend, ModelRegistry};
-use tdpc::tm::{Manifest, PackedBatch, TestSet};
+use tdpc::server::{loadgen, Server, ServerConfig};
+use tdpc::tm::{Manifest, PackedBatch, TestSet, TmModel};
 use tdpc::util::Ps;
 
 fn main() {
@@ -105,6 +116,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("infer") => cmd_infer(args),
         Some("serve") => cmd_serve(args),
+        Some("loadgen") => cmd_loadgen(args),
         Some("flow") => cmd_flow(args),
         Some("table1") => cmd_table1(args),
         Some("fig6") => cmd_fig6(args),
@@ -114,10 +126,10 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("fig12") => cmd_fig12(args),
         Some("ablation") => cmd_ablation(args),
         Some("all") => cmd_all(args),
-        Some(other) => bail!("unknown subcommand {other:?}; try: infer serve flow table1 fig6 fig9 fig10 fig11 fig12 ablation all"),
+        Some(other) => bail!("unknown subcommand {other:?}; try: infer serve loadgen flow table1 fig6 fig9 fig10 fig11 fig12 ablation all"),
         None => {
             println!("tdpc — time-domain popcount for low-complexity ML (paper reproduction)");
-            println!("usage: tdpc <infer|serve|flow|table1|fig6|fig9|fig10|fig11|fig12|all> [--options]");
+            println!("usage: tdpc <infer|serve|loadgen|flow|table1|fig6|fig9|fig10|fig11|fig12|all> [--options]");
             Ok(())
         }
     }
@@ -155,6 +167,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(&[
         "artifacts", "model", "models", "requests", "batch", "deadline-us", "workers",
         "dispatch", "backend", "hw-replay", "queue-limit", "shed", "reload", "csv",
+        "listen", "synthetic", "conn-limit", "port-file", "duration-s",
     ])?;
     // `--models a,b,c` serves several models through one pool (requests
     // alternate across them); `--model` remains the single-model form.
@@ -192,6 +205,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         shed: ShedPolicy::from_name(args.opt_or("shed", "reject-new"))?,
     };
+    // `--listen ADDR` switches from the self-driving local burst to the
+    // TCP front end: the pool serves the wire protocol until killed (or
+    // for --duration-s seconds).
+    if let Some(listen) = args.opt("listen") {
+        return serve_network(args, cfg, names, listen);
+    }
     let root = artifacts_root(args);
     let manifest = Manifest::load(&root)?;
     let mut tests = Vec::with_capacity(names.len());
@@ -298,6 +317,127 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     coord.shutdown();
+    Ok(())
+}
+
+/// `serve --listen ADDR`: expose the coordinator pool over TCP.
+///
+/// `--synthetic N` swaps the artifact-backed serve list for N in-memory
+/// synthetic models (`synth_0..synth_{N-1}`, varied shapes straddling the
+/// 64-bit word boundary) so CI and smoke tests need no artifacts on disk.
+fn serve_network(
+    args: &Args,
+    mut cfg: CoordinatorConfig,
+    mut names: Vec<String>,
+    listen: &str,
+) -> Result<()> {
+    let root;
+    if let Some(n) = args.opt("synthetic") {
+        let n: usize = n.parse().context("--synthetic expects a model count")?;
+        anyhow::ensure!(n >= 1, "--synthetic needs at least one model");
+        const WIDTHS: [usize; 5] = [63, 65, 31, 128, 96];
+        let models: Vec<std::sync::Arc<TmModel>> = (0..n)
+            .map(|i| {
+                std::sync::Arc::new(TmModel::synthetic(
+                    &format!("synth_{i}"),
+                    2 + i % 3,
+                    8 + 4 * (i % 4),
+                    WIDTHS[i % WIDTHS.len()],
+                    0.2,
+                    1000 + i as u64,
+                ))
+            })
+            .collect();
+        names = models.iter().map(|m| m.name.clone()).collect();
+        cfg.backend = BackendSpec::InMemorySet(std::sync::Arc::new(models));
+        root = PathBuf::from("/nonexistent-synthetic-root");
+    } else {
+        root = artifacts_root(args);
+    }
+    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    let coord = std::sync::Arc::new(Coordinator::start_multi(root, &name_refs, cfg)?);
+    let server_cfg = ServerConfig { max_conns: args.opt_usize("conn-limit", 256)? };
+    let server = Server::start(coord.clone(), listen, server_cfg)?;
+    let addr = server.local_addr();
+    println!("serving [{}] on {addr} ({} workers)", names.join(", "), coord.n_workers());
+    // `--port-file P`: publish the bound address for scripts (written to
+    // a temp file first, then renamed, so a poller never reads a partial
+    // write).
+    if let Some(path) = args.opt("port-file") {
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, format!("{addr}\n"))
+            .with_context(|| format!("writing {tmp}"))?;
+        std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp} -> {path}"))?;
+    }
+    let duration_s = args.opt_f64("duration-s", 0.0)?;
+    if duration_s > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(duration_s));
+    } else {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    server.shutdown();
+    let m = coord.metrics();
+    println!(
+        "served {} requests in {} batches; {} rejected, {} shed, {} failed forward calls",
+        m.requests, m.batches, m.rejected_requests, m.shed_requests, m.failed_batches
+    );
+    Ok(())
+}
+
+/// `loadgen`: drive a `serve --listen` front end and write
+/// `BENCH_serving.json` (schema `tdpc-bench-serving/v1`).
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "addr", "port-file", "mode", "conns", "rate", "duration-s", "requests", "models",
+        "burst", "seed", "out", "assert",
+    ])?;
+    let addr = match (args.opt("addr"), args.opt("port-file")) {
+        (Some(a), _) => a.to_string(),
+        (None, Some(path)) => std::fs::read_to_string(path)
+            .with_context(|| format!("reading --port-file {path}"))?
+            .trim()
+            .to_string(),
+        (None, None) => bail!("loadgen needs --addr HOST:PORT or --port-file PATH"),
+    };
+    let conns = args.opt_usize("conns", 4)?;
+    let mode = match args.opt_or("mode", "closed") {
+        "closed" => loadgen::Mode::Closed { conns },
+        "open" => loadgen::Mode::Open { rate_rps: args.opt_f64("rate", 1000.0)?, conns },
+        other => bail!("unknown loadgen mode {other:?} (expected: closed, open)"),
+    };
+    let models = loadgen::parse_mix(
+        args.opt("models")
+            .context("loadgen needs --models name[:weight][,name[:weight]...]")?,
+    )?;
+    let cfg = loadgen::LoadgenConfig {
+        addr,
+        mode,
+        duration: std::time::Duration::from_secs_f64(args.opt_f64("duration-s", 5.0)?),
+        max_requests: match args.opt_u64("requests", 0)? {
+            0 => None,
+            n => Some(n),
+        },
+        models,
+        burst: loadgen::BurstShape::from_name(args.opt_or("burst", "steady"))?,
+        seed: args.opt_u64("seed", 42)?,
+    };
+    let report = loadgen::run(&cfg)?;
+    println!("{}", report.summary());
+    let out = PathBuf::from(args.opt_or("out", "BENCH_serving.json"));
+    loadgen::write_report(&report, &out)?;
+    eprintln!("wrote {}", out.display());
+    // `--assert`: the CI gate — zero protocol/decode errors and nonzero
+    // goodput, or a nonzero exit.
+    if args.flag("assert") {
+        anyhow::ensure!(
+            report.protocol_errors == 0,
+            "loadgen observed {} protocol errors (the wire must stay clean under load)",
+            report.protocol_errors
+        );
+        anyhow::ensure!(report.ok > 0, "loadgen got zero successful replies");
+    }
     Ok(())
 }
 

@@ -1,0 +1,189 @@
+//! Minimal blocking client for the wire protocol.
+//!
+//! One [`Client`] owns one TCP connection and issues one request at a
+//! time (send, then wait for the reply). Server-side typed failures —
+//! unknown model, width mismatch, a shed request, an accept-time
+//! `OVERLOADED` refusal — surface as [`ClientError::Server`] carrying
+//! the protocol error code, so callers can distinguish "retry later"
+//! (`QUEUE_FULL`, `OVERLOADED`) from "fix the request" without string
+//! matching.
+
+use std::io::{self, BufReader};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::tm::BitVec64;
+
+use super::codec::{read_frame, write_frame, WireError};
+use super::protocol::{
+    code_name, ErrorMsg, InferRequestMsg, InferResponseMsg, Kind, ModelInfoMsg, ModelQueryMsg,
+};
+
+/// Everything a client call can fail with.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport failure.
+    Io(io::Error),
+    /// The server's bytes broke the framing contract.
+    Wire(WireError),
+    /// A structurally valid exchange that made no protocol sense (e.g.
+    /// an unexpected frame kind, a correlation-id mismatch).
+    Protocol(String),
+    /// The server answered with a typed error frame.
+    Server { code: u16, message: String },
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "i/o error: {e}"),
+            ClientError::Wire(e) => write!(f, "wire error: {e}"),
+            ClientError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            ClientError::Server { code, message } => {
+                write!(f, "server error {} ({code}): {message}", code_name(*code))
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Io(e) => Some(e),
+            ClientError::Wire(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> ClientError {
+        ClientError::Io(e)
+    }
+}
+
+impl From<WireError> for ClientError {
+    fn from(e: WireError) -> ClientError {
+        ClientError::Wire(e)
+    }
+}
+
+/// One blocking connection to a serving front end.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_corr: u64,
+}
+
+impl Client {
+    /// Connect to a running `serve --listen` front end.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client, ClientError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer, next_corr: 1 })
+    }
+
+    fn bump(&mut self) -> u64 {
+        let corr = self.next_corr;
+        self.next_corr += 1;
+        corr
+    }
+
+    /// Read one frame, surfacing error frames as [`ClientError::Server`]
+    /// whatever their correlation id (connection-scoped refusals arrive
+    /// with `corr = 0`).
+    fn read_reply(&mut self) -> Result<(Kind, Vec<u8>), ClientError> {
+        let (kind, payload) = read_frame(&mut self.reader)?
+            .ok_or_else(|| ClientError::Protocol("server closed the connection".into()))?;
+        let kind = Kind::from_u8(kind)
+            .ok_or_else(|| ClientError::Protocol(format!("unknown frame kind {kind}")))?;
+        if kind == Kind::Error {
+            let err = ErrorMsg::decode(&payload).map_err(ClientError::Protocol)?;
+            return Err(ClientError::Server { code: err.code, message: err.message });
+        }
+        Ok((kind, payload))
+    }
+
+    /// Query one served model's shape (feature width, class count,
+    /// hot-swap generation).
+    pub fn model_info(&mut self, model: &str) -> Result<ModelInfoMsg, ClientError> {
+        let corr = self.bump();
+        let q = ModelQueryMsg { corr, model: model.to_string() };
+        write_frame(&mut self.writer, Kind::ModelQuery.as_u8(), &q.encode())?;
+        let (kind, payload) = self.read_reply()?;
+        if kind != Kind::ModelInfo {
+            return Err(ClientError::Protocol(format!(
+                "expected ModelInfo, got frame kind {}",
+                kind.as_u8()
+            )));
+        }
+        let info = ModelInfoMsg::decode(&payload).map_err(ClientError::Protocol)?;
+        if info.corr != corr {
+            return Err(ClientError::Protocol(format!(
+                "correlation mismatch: sent {corr}, got {}",
+                info.corr
+            )));
+        }
+        Ok(info)
+    }
+
+    /// Run one inference on a row already in packed form (`u64` words,
+    /// LSB-first, zero tail bits).
+    pub fn infer_packed(
+        &mut self,
+        model: &str,
+        n_features: usize,
+        words: Vec<u64>,
+    ) -> Result<InferResponseMsg, ClientError> {
+        let corr = self.bump();
+        let req = InferRequestMsg {
+            corr,
+            model: model.to_string(),
+            n_features: n_features as u32,
+            words,
+        };
+        write_frame(&mut self.writer, Kind::InferRequest.as_u8(), &req.encode())?;
+        let (kind, payload) = self.read_reply()?;
+        if kind != Kind::InferResponse {
+            return Err(ClientError::Protocol(format!(
+                "expected InferResponse, got frame kind {}",
+                kind.as_u8()
+            )));
+        }
+        let resp = InferResponseMsg::decode(&payload).map_err(ClientError::Protocol)?;
+        if resp.corr != corr {
+            return Err(ClientError::Protocol(format!(
+                "correlation mismatch: sent {corr}, got {}",
+                resp.corr
+            )));
+        }
+        Ok(resp)
+    }
+
+    /// Run one inference on a Boolean feature row (packed here, once).
+    pub fn infer(
+        &mut self,
+        model: &str,
+        features: &[bool],
+    ) -> Result<InferResponseMsg, ClientError> {
+        let packed = BitVec64::from_bools(features);
+        let n = packed.len();
+        self.infer_packed(model, n, packed.into_words())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_error_display_names_the_code() {
+        let e = ClientError::Server {
+            code: super::super::protocol::code::QUEUE_FULL,
+            message: "shed".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("queue-full") && s.contains('3') && s.contains("shed"), "{s}");
+        assert!(ClientError::Protocol("odd".into()).to_string().contains("odd"));
+    }
+}

@@ -1,0 +1,272 @@
+//! Frame codec: length-prefixed framing over any `Read`/`Write` pair.
+//!
+//! A frame is a fixed 12-byte header followed by `payload_len` payload
+//! bytes:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic        = b"TDPC"
+//!      4     1  version      = 1
+//!      5     1  kind         (see [`super::protocol::Kind`])
+//!      6     2  reserved     = 0
+//!      8     4  payload_len  (u32 LE, ≤ MAX_PAYLOAD)
+//! ```
+//!
+//! The declared payload length is validated against
+//! [`super::protocol::MAX_PAYLOAD`] **before** the payload buffer is
+//! allocated, so a hostile header can never drive an allocation. A clean
+//! EOF at a frame boundary reads as `Ok(None)`; an EOF mid-header or
+//! mid-payload is an [`std::io::ErrorKind::UnexpectedEof`] I/O error.
+
+use std::io::{self, Read, Write};
+
+use super::protocol::{HEADER_LEN, MAGIC, MAX_PAYLOAD, VERSION};
+
+/// Everything that can go wrong reading a frame off the wire.
+#[derive(Debug)]
+pub enum WireError {
+    /// Transport failure (including mid-frame disconnects, which surface
+    /// as [`std::io::ErrorKind::UnexpectedEof`]).
+    Io(io::Error),
+    /// The first four bytes were not [`MAGIC`] — the peer is not speaking
+    /// this protocol at all.
+    BadMagic([u8; 4]),
+    /// The peer speaks a protocol version this build does not.
+    VersionMismatch { got: u8 },
+    /// The header declared a payload larger than [`MAX_PAYLOAD`]; the
+    /// payload was neither allocated nor read.
+    TooLarge { declared: u32, limit: u32 },
+    /// A structurally valid frame carried a payload that failed to decode.
+    Protocol(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "i/o error: {e}"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:?}"),
+            WireError::VersionMismatch { got } => write!(
+                f,
+                "protocol version mismatch: peer speaks v{got}, this build speaks v{VERSION}"
+            ),
+            WireError::TooLarge { declared, limit } => {
+                write!(f, "declared payload length {declared} exceeds the limit {limit}")
+            }
+            WireError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// Write one frame (header + payload). The caller is responsible for any
+/// buffering; this flushes so a lone frame is never stuck in a
+/// `BufWriter`.
+pub fn write_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> io::Result<()> {
+    debug_assert!(payload.len() <= MAX_PAYLOAD as usize);
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4] = VERSION;
+    header[5] = kind;
+    // bytes 6..8 reserved, zero
+    header[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Fill `buf` from `r`. Returns `Ok(false)` on a clean EOF before the
+/// first byte, `Err(UnexpectedEof)` on an EOF after a partial read.
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame. `Ok(None)` means the peer closed cleanly at a frame
+/// boundary. `Ok(Some((kind, payload)))` is one complete frame; the kind
+/// byte is returned raw so callers can answer unknown kinds explicitly.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<(u8, Vec<u8>)>, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    if !read_exact_or_eof(r, &mut header)? {
+        return Ok(None);
+    }
+    if header[..4] != MAGIC {
+        return Err(WireError::BadMagic(header[..4].try_into().unwrap()));
+    }
+    if header[4] != VERSION {
+        return Err(WireError::VersionMismatch { got: header[4] });
+    }
+    let kind = header[5];
+    let len = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    // The cap check precedes the allocation: a hostile length field is
+    // refused before it can cost memory.
+    if len > MAX_PAYLOAD {
+        return Err(WireError::TooLarge { declared: len, limit: MAX_PAYLOAD });
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(Some((kind, payload)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn frame_bytes(kind: u8, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, kind, payload).unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrip_including_empty_payload() {
+        for payload in [&b""[..], b"x", b"hello frame"] {
+            let bytes = frame_bytes(3, payload);
+            assert_eq!(bytes.len(), HEADER_LEN + payload.len());
+            let mut cur = Cursor::new(bytes);
+            let (kind, got) = read_frame(&mut cur).unwrap().unwrap();
+            assert_eq!(kind, 3);
+            assert_eq!(got, payload);
+            // The stream is now at a clean frame boundary.
+            assert!(read_frame(&mut cur).unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames() {
+        let mut bytes = frame_bytes(1, b"first");
+        bytes.extend_from_slice(&frame_bytes(2, b"second"));
+        let mut cur = Cursor::new(bytes);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), (1, b"first".to_vec()));
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), (2, b"second".to_vec()));
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn clean_eof_is_none_partial_header_is_unexpected_eof() {
+        let mut empty = Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut empty).unwrap().is_none());
+
+        let bytes = frame_bytes(1, b"payload");
+        for cut in 1..HEADER_LEN {
+            let mut cur = Cursor::new(bytes[..cut].to_vec());
+            match read_frame(&mut cur) {
+                Err(WireError::Io(e)) => {
+                    assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof, "cut={cut}")
+                }
+                other => panic!("cut={cut}: expected UnexpectedEof, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_payload_is_unexpected_eof() {
+        let bytes = frame_bytes(1, b"full payload body");
+        for cut in HEADER_LEN..bytes.len() {
+            let mut cur = Cursor::new(bytes[..cut].to_vec());
+            match read_frame(&mut cur) {
+                Err(WireError::Io(e)) => {
+                    assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof, "cut={cut}")
+                }
+                other => panic!("cut={cut}: expected UnexpectedEof, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn garbage_magic_is_rejected() {
+        let mut bytes = frame_bytes(1, b"p");
+        bytes[0] = b'X';
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(WireError::BadMagic(m)) => assert_eq!(&m, b"XDPC"),
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut bytes = frame_bytes(1, b"p");
+        bytes[4] = VERSION + 1;
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(WireError::VersionMismatch { got }) => assert_eq!(got, VERSION + 1),
+            other => panic!("expected VersionMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_declared_length_rejected_before_reading_payload() {
+        // A header declaring u32::MAX with *no* payload bytes behind it:
+        // if the length check ran after allocation/read we would see an
+        // UnexpectedEof (or worse, a 4 GiB allocation). TooLarge proves
+        // the check fires first.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(VERSION);
+        bytes.push(1);
+        bytes.extend_from_slice(&[0, 0]);
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(WireError::TooLarge { declared, limit }) => {
+                assert_eq!(declared, u32::MAX);
+                assert_eq!(limit, MAX_PAYLOAD);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // One past the cap is refused; exactly at the cap passes the
+        // length check (and then hits EOF reading the absent payload).
+        let mut at_cap = Vec::new();
+        at_cap.extend_from_slice(&MAGIC);
+        at_cap.push(VERSION);
+        at_cap.push(1);
+        at_cap.extend_from_slice(&[0, 0]);
+        at_cap.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut Cursor::new(at_cap)),
+            Err(WireError::TooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn wire_error_display_names_the_failure() {
+        let cases: Vec<(WireError, &str)> = vec![
+            (WireError::BadMagic(*b"ABCD"), "magic"),
+            (WireError::VersionMismatch { got: 9 }, "version"),
+            (WireError::TooLarge { declared: 10, limit: 5 }, "exceeds"),
+            (WireError::Protocol("x".into()), "protocol"),
+            (io::Error::new(io::ErrorKind::UnexpectedEof, "gone").into(), "i/o"),
+        ];
+        for (e, needle) in cases {
+            assert!(e.to_string().contains(needle), "{e}");
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Per-connection protocol handling.
+//!
+//! Each accepted connection gets two threads: the *reader* decodes
+//! frames and submits them into the coordinator (so a client may
+//! pipeline many requests without waiting), and the *writer* answers
+//! them **in submission order** — it consumes a queue of pending reply
+//! receivers and encodes each reply as it resolves. Per-request reply
+//! channels give exact error attribution (a shed row answers only its
+//! own frame) without a thread per request; the coordinator's
+//! exactly-one-reply contract guarantees the writer never waits on a
+//! request forever, so the drain on disconnect terminates.
+//!
+//! Framing violations — garbage magic, a version this build does not
+//! speak, an over-cap declared length, an undecodable payload — are
+//! answered with a best-effort `BAD_FRAME` error frame (`corr = 0`) and
+//! then the connection is closed: after a framing error the byte stream
+//! has no trustworthy frame boundary left to resynchronize on.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::{mpsc, Arc};
+
+use crate::coordinator::{await_reply, Coordinator, Reply};
+use crate::tm::BitVec64;
+
+use super::codec::{read_frame, write_frame, WireError};
+use super::protocol::{
+    code, error_code, ErrorMsg, InferRequestMsg, InferResponseMsg, Kind, ModelInfoMsg,
+    ModelQueryMsg,
+};
+
+/// One unit of writer-queue work, enqueued in submission order.
+enum Out {
+    /// A submitted inference whose reply is still in flight.
+    Pending { corr: u64, rx: mpsc::Receiver<Reply> },
+    /// An already-encoded frame (model info, protocol errors).
+    Frame { kind: Kind, payload: Vec<u8> },
+}
+
+/// Serve one accepted connection to completion. Runs on its own thread
+/// (spawned by the listener); returns when the peer disconnects or
+/// breaks the protocol.
+pub(super) fn handle(stream: TcpStream, coord: Arc<Coordinator>) {
+    let _ = stream.set_nodelay(true);
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            log::warn!("server: could not clone a connection stream: {e}");
+            return;
+        }
+    };
+    let (out_tx, out_rx) = mpsc::channel::<Out>();
+    let writer = std::thread::Builder::new()
+        .name("tdpc-conn-writer".to_string())
+        .spawn(move || writer_loop(write_half, out_rx));
+    let writer = match writer {
+        Ok(j) => j,
+        Err(e) => {
+            log::warn!("server: could not spawn a connection writer: {e}");
+            return;
+        }
+    };
+
+    let mut reader = BufReader::new(&stream);
+    loop {
+        match read_frame(&mut reader) {
+            Ok(Some((kind, payload))) => {
+                if !dispatch_frame(kind, &payload, &coord, &out_tx) {
+                    break;
+                }
+            }
+            Ok(None) => break, // clean close at a frame boundary
+            Err(WireError::Io(_)) => break, // peer gone mid-frame; nobody to answer
+            Err(e) => {
+                // Framing violation with a live peer: name the offense,
+                // then hang up — the stream has no trustworthy frame
+                // boundary left.
+                send_error(&out_tx, 0, code::BAD_FRAME, &e.to_string());
+                break;
+            }
+        }
+    }
+
+    // Let the writer drain every queued reply (the coordinator answers
+    // each submitted request exactly once, so this terminates), then
+    // drop the socket.
+    drop(out_tx);
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Decode and act on one frame. Returns `false` when the connection must
+/// close (protocol violation).
+fn dispatch_frame(
+    kind: u8,
+    payload: &[u8],
+    coord: &Coordinator,
+    out: &mpsc::Sender<Out>,
+) -> bool {
+    match Kind::from_u8(kind) {
+        Some(Kind::InferRequest) => match InferRequestMsg::decode(payload) {
+            Ok(req) => {
+                // Decode validated the word count and zero tail bits, so
+                // the packed row is constructible as-is — no unpack,
+                // no repack, no bool slice.
+                let features = BitVec64::from_words(req.n_features as usize, req.words);
+                let (tx, rx) = mpsc::channel::<Reply>();
+                coord.submit_packed_named(&req.model, features, tx);
+                let _ = out.send(Out::Pending { corr: req.corr, rx });
+                true
+            }
+            Err(msg) => {
+                send_error(out, 0, code::BAD_FRAME, &format!("bad InferRequest: {msg}"));
+                false
+            }
+        },
+        Some(Kind::ModelQuery) => match ModelQueryMsg::decode(payload) {
+            Ok(q) => {
+                let info = coord.model_id(&q.model).map(|mid| ModelInfoMsg {
+                    corr: q.corr,
+                    model: q.model.clone(),
+                    n_features: coord.n_features_for(mid).unwrap_or(0) as u32,
+                    n_classes: coord.n_classes_for(mid).unwrap_or(0) as u32,
+                    generation: coord.generation_for(mid).unwrap_or(0),
+                });
+                match info {
+                    Some(info) => {
+                        let _ = out.send(Out::Frame {
+                            kind: Kind::ModelInfo,
+                            payload: info.encode(),
+                        });
+                    }
+                    None => send_error(
+                        out,
+                        q.corr,
+                        code::UNKNOWN_MODEL,
+                        &format!("model {:?} is not served by this pool", q.model),
+                    ),
+                }
+                true
+            }
+            Err(msg) => {
+                send_error(out, 0, code::BAD_FRAME, &format!("bad ModelQuery: {msg}"));
+                false
+            }
+        },
+        // Server→client kinds arriving at the server, or unknown bytes:
+        // the peer is confused; close after naming the offense.
+        Some(other) => {
+            send_error(
+                out,
+                0,
+                code::BAD_FRAME,
+                &format!("unexpected client frame kind {}", other.as_u8()),
+            );
+            false
+        }
+        None => {
+            send_error(out, 0, code::BAD_FRAME, &format!("unknown frame kind {kind}"));
+            false
+        }
+    }
+}
+
+fn send_error(out: &mpsc::Sender<Out>, corr: u64, code: u16, message: &str) {
+    let msg = ErrorMsg { corr, code, message: message.to_string() };
+    let _ = out.send(Out::Frame { kind: Kind::Error, payload: msg.encode() });
+}
+
+/// The writer thread: answer queued work in submission order. A write
+/// failure (peer gone) stops the loop; remaining `Pending` receivers are
+/// dropped, which is safe — the coordinator's reply sends are
+/// best-effort by contract.
+fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<Out>) {
+    let mut w = BufWriter::new(stream);
+    for item in rx {
+        let (kind, payload) = match item {
+            Out::Pending { corr, rx } => {
+                // The one shared reply-wait implementation (also behind
+                // `infer_blocking`): a torn-down pool reads as a typed
+                // ShuttingDown, never a hang or panic.
+                let reply = await_reply(&rx);
+                (Kind::from_reply(&reply), encode_reply(corr, reply))
+            }
+            Out::Frame { kind, payload } => (kind, payload),
+        };
+        if write_frame(&mut w, kind.as_u8(), &payload).is_err() {
+            return;
+        }
+    }
+    let _ = w.flush();
+}
+
+impl Kind {
+    fn from_reply(reply: &Reply) -> Kind {
+        match reply {
+            Ok(_) => Kind::InferResponse,
+            Err(_) => Kind::Error,
+        }
+    }
+}
+
+/// Encode one coordinator reply as a wire payload: a success carries the
+/// generation, argmax, and class sums; a typed [`crate::coordinator::InferError`]
+/// maps to its protocol error code with the human-readable message.
+fn encode_reply(corr: u64, reply: Reply) -> Vec<u8> {
+    match reply {
+        Ok(resp) => InferResponseMsg {
+            corr,
+            generation: resp.generation,
+            pred: resp.pred as u32,
+            sums: resp.sums,
+        }
+        .encode(),
+        Err(e) => ErrorMsg { corr, code: error_code(&e), message: e.to_string() }.encode(),
+    }
+}
+
+/// Refuse a connection at accept time with a single `OVERLOADED` error
+/// frame (`corr = 0`), then close. Best-effort: the refused peer may
+/// already be gone.
+pub(super) fn refuse(stream: TcpStream, message: &str) {
+    let msg = ErrorMsg { corr: 0, code: code::OVERLOADED, message: message.to_string() };
+    let mut w = BufWriter::new(&stream);
+    let _ = write_frame(&mut w, Kind::Error.as_u8(), &msg.encode());
+    let _ = w.flush();
+    drop(w);
+    let _ = stream.shutdown(Shutdown::Both);
+}

@@ -1,0 +1,176 @@
+//! TCP accept loop with socket-level overload shedding.
+//!
+//! [`Server::start`] binds a listener and spawns one accept thread; each
+//! accepted connection is served by [`super::conn::handle`] on its own
+//! thread. Admission control composes with the coordinator's: when the
+//! live-connection count reaches [`ServerConfig::max_conns`], or every
+//! worker queue is at its bound ([`Coordinator::is_saturated`]), the
+//! connection is *refused at accept* with one `OVERLOADED` error frame —
+//! overload sheds at the socket before any request bytes are read,
+//! instead of accumulating decoded requests in RAM.
+//!
+//! Shutdown choreography (race-free by ownership): the accept thread is
+//! the *only* registrar of connections, holding the handler list as a
+//! plain `Vec`. [`Server::shutdown`] sets the stop flag and nudges the
+//! listener with a throwaway self-connection to unblock `accept`; the
+//! accept thread then exits its loop, shuts down every live connection
+//! socket (unblocking blocked readers), and joins every handler — no
+//! handler can slip through between "snapshot the registry" and "stop",
+//! because registration and teardown happen on the same thread.
+
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Coordinator;
+
+use super::conn;
+
+/// Listener-level admission knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Maximum concurrently served connections; the next accept past
+    /// this is refused with `OVERLOADED`.
+    pub max_conns: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_conns: 256 }
+    }
+}
+
+/// One live connection as the accept thread tracks it.
+struct Conn {
+    stream: TcpStream,
+    join: JoinHandle<()>,
+}
+
+/// Handle to a running TCP front end. Dropping it (or calling
+/// [`Server::shutdown`]) stops accepting, closes every live connection,
+/// and joins all serving threads. The coordinator itself is *not* shut
+/// down — it is shared, and may outlive the listener.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an OS-assigned port) and
+    /// start serving `coord` on it.
+    pub fn start<A: ToSocketAddrs + std::fmt::Debug>(
+        coord: Arc<Coordinator>,
+        addr: A,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        let listener =
+            TcpListener::bind(&addr).with_context(|| format!("binding {addr:?}"))?;
+        let local = listener.local_addr().context("reading the bound address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("tdpc-accept".to_string())
+                .spawn(move || accept_loop(listener, coord, cfg, stop))
+                .context("spawning the accept thread")?
+        };
+        Ok(Server { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The actually bound address (the resolved port when the caller
+    /// bound port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, close every live connection, and join all
+    /// serving threads.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        let Some(accept) = self.accept.take() else { return };
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the blocking `accept` with a throwaway self-connection;
+        // the accept thread re-checks the flag after every accept.
+        let _ = TcpStream::connect(self.addr);
+        let _ = accept.join();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coord: Arc<Coordinator>,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+) {
+    // This thread is the sole owner of the connection registry, so
+    // registration, reaping, and final teardown cannot race.
+    let mut conns: Vec<Conn> = Vec::new();
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(e) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                log::warn!("server: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            // The shutdown nudge (or a late real client); drop it.
+            break;
+        }
+        conns.retain(|c| !c.join.is_finished());
+        if conns.len() >= cfg.max_conns {
+            conn::refuse(stream, "connection limit reached; retry later");
+            continue;
+        }
+        if coord.is_saturated() {
+            conn::refuse(stream, "serving pool is saturated; retry later");
+            continue;
+        }
+        let for_handler = match stream.try_clone() {
+            Ok(s) => s,
+            Err(e) => {
+                log::warn!("server: could not clone an accepted stream: {e}");
+                continue;
+            }
+        };
+        let spawned = {
+            let coord = coord.clone();
+            std::thread::Builder::new()
+                .name("tdpc-conn".to_string())
+                .spawn(move || conn::handle(for_handler, coord))
+        };
+        match spawned {
+            Ok(join) => conns.push(Conn { stream, join }),
+            Err(e) => {
+                log::warn!("server: could not spawn a connection handler: {e}");
+                conn::refuse(stream, "server cannot spawn a handler; retry later");
+            }
+        }
+    }
+    // Teardown: force every live connection's reader off its socket,
+    // then join the handlers (each drains its in-flight replies first).
+    for c in &conns {
+        let _ = c.stream.shutdown(std::net::Shutdown::Both);
+    }
+    for c in conns {
+        let _ = c.join.join();
+    }
+}

@@ -1,0 +1,712 @@
+//! Closed- and open-loop load generation against a serving front end.
+//!
+//! The harness measures the *end-to-end* serving path — TCP, framing,
+//! admission, batching, the backend forward pass, and the reply wire —
+//! under a configurable tenant mix and burst shape, and reports goodput,
+//! shed rate, and latency percentiles in a stable JSON schema
+//! (`BENCH_serving.json`, schema `tdpc-bench-serving/v1`) so CI can keep
+//! a perf datapoint per run.
+//!
+//! Two arrival disciplines:
+//!
+//! * **closed-loop** ([`Mode::Closed`]): `conns` connections, each with
+//!   exactly one request outstanding — measures the pipeline's capacity
+//!   at a fixed concurrency;
+//! * **open-loop** ([`Mode::Open`]): arrivals are *scheduled* at a fixed
+//!   rate on a shared clock and claimed by `conns` sender threads.
+//!   Latency is measured from each request's **scheduled** arrival time,
+//!   not from when a sender got around to it, so a slow server inflates
+//!   the tail instead of silently slowing the load (the classic
+//!   coordinated-omission trap).
+//!
+//! Burst shapes gate the schedule: [`BurstShape::Square`] concentrates
+//! the same arrival process into a duty window of each period (e.g.
+//! `square:100:20` → all load lands in the first 20 ms of every 100 ms),
+//! which is what drives admission control into visible shedding.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::tm::bits::{tail_mask, words_for};
+use crate::util::json::{self, num, obj, s, Value};
+use crate::util::stats::{mean, percentile};
+use crate::util::SplitMix64;
+
+use super::client::{Client, ClientError};
+use super::protocol::code;
+
+/// Arrival discipline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mode {
+    /// `conns` connections, one outstanding request each.
+    Closed { conns: usize },
+    /// Arrivals scheduled at `rate_rps` on a shared clock, sent by
+    /// `conns` sender threads.
+    Open { rate_rps: f64, conns: usize },
+}
+
+impl Mode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Closed { .. } => "closed",
+            Mode::Open { .. } => "open",
+        }
+    }
+}
+
+/// When, within each period, arrivals are admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BurstShape {
+    /// Arrivals flow whenever the discipline produces them.
+    Steady,
+    /// Arrivals only land inside the first `duty_pct`% of each `period`;
+    /// an arrival scheduled in the off-window is deferred to the start
+    /// of the next period.
+    Square { period: Duration, duty_pct: u8 },
+}
+
+impl BurstShape {
+    /// Parse `steady` or `square:<period_ms>:<duty_pct>`.
+    pub fn from_name(name: &str) -> Result<BurstShape> {
+        if name == "steady" {
+            return Ok(BurstShape::Steady);
+        }
+        if let Some(rest) = name.strip_prefix("square:") {
+            let (period_ms, duty) = rest
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("expected square:<period_ms>:<duty_pct>"))?;
+            let period_ms: u64 = period_ms
+                .parse()
+                .with_context(|| format!("square burst period {period_ms:?} must be integer ms"))?;
+            let duty_pct: u8 = duty
+                .parse()
+                .with_context(|| format!("square burst duty {duty:?} must be an integer percent"))?;
+            ensure!(period_ms >= 1, "square burst period must be ≥ 1 ms");
+            ensure!(
+                (1..=100).contains(&duty_pct),
+                "square burst duty must be in 1..=100 percent"
+            );
+            return Ok(BurstShape::Square {
+                period: Duration::from_millis(period_ms),
+                duty_pct,
+            });
+        }
+        bail!("unknown burst shape {name:?} (expected: steady, square:<period_ms>:<duty_pct>)")
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            BurstShape::Steady => "steady".to_string(),
+            BurstShape::Square { period, duty_pct } => {
+                format!("square:{}:{duty_pct}", period.as_millis())
+            }
+        }
+    }
+
+    /// Earliest admissible time at or after `t`. Pure, so the schedule
+    /// is unit-testable without a clock.
+    pub fn next_on(&self, t: Duration) -> Duration {
+        match *self {
+            BurstShape::Steady => t,
+            BurstShape::Square { period, duty_pct } => {
+                let p = period.as_nanos() as u64;
+                let on = p * u64::from(duty_pct) / 100;
+                let ts = t.as_nanos() as u64;
+                let phase = ts % p;
+                if phase < on {
+                    t
+                } else {
+                    Duration::from_nanos(ts - phase + p)
+                }
+            }
+        }
+    }
+}
+
+/// Parse a tenant mix like `"tenant_a:3,tenant_b:1"` (bare names weigh 1).
+pub fn parse_mix(text: &str) -> Result<Vec<(String, u32)>> {
+    let mut mix = Vec::new();
+    for part in text.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, weight) = match part.rsplit_once(':') {
+            Some((name, w)) => {
+                let weight: u32 = w
+                    .parse()
+                    .with_context(|| format!("tenant weight {w:?} must be a positive integer"))?;
+                ensure!(weight >= 1, "tenant weight for {name:?} must be ≥ 1");
+                (name.to_string(), weight)
+            }
+            None => (part.to_string(), 1),
+        };
+        ensure!(!name.is_empty(), "empty tenant name in mix {text:?}");
+        mix.push((name, weight));
+    }
+    ensure!(!mix.is_empty(), "the tenant mix must name at least one model");
+    Ok(mix)
+}
+
+/// Everything one load run needs.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:4700`.
+    pub addr: String,
+    pub mode: Mode,
+    /// Wall-clock budget; senders stop scheduling past this.
+    pub duration: Duration,
+    /// Optional request budget shared across senders (`None` = bounded
+    /// by duration only).
+    pub max_requests: Option<u64>,
+    /// Weighted tenant mix (see [`parse_mix`]).
+    pub models: Vec<(String, u32)>,
+    pub burst: BurstShape,
+    pub seed: u64,
+}
+
+/// What one run measured.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub mode: String,
+    pub conns: usize,
+    /// Target arrival rate (open-loop only; 0 for closed-loop).
+    pub rate_rps: f64,
+    pub burst: String,
+    pub duration_s: f64,
+    pub models: Vec<String>,
+    /// Requests actually sent (scheduled arrivals that got a connection).
+    pub sent: u64,
+    /// Requests answered with a prediction.
+    pub ok: u64,
+    /// Requests shed by admission control (`QUEUE_FULL` frames) or
+    /// refused at accept (`OVERLOADED` frames).
+    pub shed: u64,
+    /// Other typed server errors (unknown model, width, backend).
+    pub errors: u64,
+    /// Framing/decode violations observed by the client — the CI gate:
+    /// any nonzero value here is a protocol bug, not an overload symptom.
+    pub protocol_errors: u64,
+    /// Reconnections (dropped or refused connections re-established).
+    pub reconnects: u64,
+    /// `ok / wall` — answered requests per second.
+    pub goodput_rps: f64,
+    /// `shed / sent`.
+    pub shed_rate: f64,
+    /// End-to-end latency of answered requests, µs (open-loop: measured
+    /// from the *scheduled* arrival, coordinated-omission-free).
+    pub lat_mean_us: f64,
+    pub lat_p50_us: f64,
+    pub lat_p90_us: f64,
+    pub lat_p99_us: f64,
+    pub lat_p999_us: f64,
+    pub lat_max_us: f64,
+}
+
+impl LoadReport {
+    /// Stable JSON schema `tdpc-bench-serving/v1` — CI uploads this
+    /// verbatim as the run's perf datapoint.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("schema", s("tdpc-bench-serving/v1")),
+            ("mode", s(&self.mode)),
+            ("conns", num(self.conns as f64)),
+            ("rate_rps", num(self.rate_rps)),
+            ("burst", s(&self.burst)),
+            ("duration_s", num(self.duration_s)),
+            (
+                "models",
+                Value::Arr(self.models.iter().map(|m| s(m)).collect()),
+            ),
+            ("sent", num(self.sent as f64)),
+            ("ok", num(self.ok as f64)),
+            ("shed", num(self.shed as f64)),
+            ("errors", num(self.errors as f64)),
+            ("protocol_errors", num(self.protocol_errors as f64)),
+            ("reconnects", num(self.reconnects as f64)),
+            ("goodput_rps", num(self.goodput_rps)),
+            ("shed_rate", num(self.shed_rate)),
+            (
+                "latency_us",
+                obj(vec![
+                    ("mean", num(self.lat_mean_us)),
+                    ("p50", num(self.lat_p50_us)),
+                    ("p90", num(self.lat_p90_us)),
+                    ("p99", num(self.lat_p99_us)),
+                    ("p999", num(self.lat_p999_us)),
+                    ("max", num(self.lat_max_us)),
+                ]),
+            ),
+        ])
+    }
+
+    /// One-paragraph human summary for terminal output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} mode, {} conns, burst {}: {} sent over {:.2}s → {} ok \
+             ({:.0} req/s goodput), {} shed ({:.1}% of sent), {} errors, \
+             {} protocol errors, {} reconnects; latency µs \
+             p50={:.0} p90={:.0} p99={:.0} p99.9={:.0} max={:.0}",
+            self.mode,
+            self.conns,
+            self.burst,
+            self.sent,
+            self.duration_s,
+            self.ok,
+            self.goodput_rps,
+            self.shed,
+            self.shed_rate * 100.0,
+            self.errors,
+            self.protocol_errors,
+            self.reconnects,
+            self.lat_p50_us,
+            self.lat_p90_us,
+            self.lat_p99_us,
+            self.lat_p999_us,
+            self.lat_max_us,
+        )
+    }
+}
+
+/// Per-sender tallies, merged after join.
+#[derive(Debug, Default)]
+struct ThreadStats {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    errors: u64,
+    protocol_errors: u64,
+    reconnects: u64,
+    lat_us: Vec<f64>,
+}
+
+impl ThreadStats {
+    fn merge(&mut self, other: ThreadStats) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.errors += other.errors;
+        self.protocol_errors += other.protocol_errors;
+        self.reconnects += other.reconnects;
+        self.lat_us.extend(other.lat_us);
+    }
+}
+
+/// One tenant as a sender thread sees it: name, packed width, and its
+/// cumulative weight bound for the weighted pick.
+#[derive(Debug, Clone)]
+struct Tenant {
+    name: String,
+    n_features: usize,
+    cum_weight: u32,
+}
+
+/// Shared sender context (bundled so the worker loop takes one argument).
+struct SenderCtx {
+    addr: String,
+    tenants: Vec<Tenant>,
+    total_weight: u32,
+    burst: BurstShape,
+    deadline: Duration,
+    /// Open-loop arrival counter / shared request budget. In closed-loop
+    /// runs it only enforces `max_requests`.
+    next_arrival: AtomicU64,
+    max_requests: u64,
+    /// Open-loop inter-arrival gap in nanoseconds (0 ⇔ closed-loop).
+    gap_ns: f64,
+    start: Instant,
+}
+
+impl SenderCtx {
+    /// Claim the next arrival index, or `None` when the request budget
+    /// is spent.
+    fn claim(&self) -> Option<u64> {
+        let i = self.next_arrival.fetch_add(1, Ordering::Relaxed);
+        if i >= self.max_requests {
+            None
+        } else {
+            Some(i)
+        }
+    }
+
+    /// The claimed arrival's scheduled send time, after burst gating.
+    /// `None` when it falls past the deadline.
+    fn schedule(&self, arrival: u64) -> Option<Duration> {
+        let base = if self.gap_ns > 0.0 {
+            Duration::from_nanos((arrival as f64 * self.gap_ns) as u64)
+        } else {
+            // Closed-loop: "now" is the schedule; only the burst gate
+            // defers it.
+            self.start.elapsed()
+        };
+        let gated = self.burst.next_on(base);
+        if gated >= self.deadline {
+            None
+        } else {
+            Some(gated)
+        }
+    }
+
+    /// Weighted tenant pick.
+    fn pick<'a>(&'a self, rng: &mut SplitMix64) -> &'a Tenant {
+        let draw = rng.next_below(self.total_weight as usize) as u32;
+        self.tenants
+            .iter()
+            .find(|t| draw < t.cum_weight)
+            .expect("cumulative weights cover the draw range")
+    }
+}
+
+/// Connect with capped exponential backoff; counts each failed attempt.
+/// `None` once the deadline passes.
+fn connect_with_backoff(ctx: &SenderCtx, stats: &mut ThreadStats) -> Option<Client> {
+    let mut wait = Duration::from_millis(1);
+    loop {
+        if ctx.start.elapsed() >= ctx.deadline {
+            return None;
+        }
+        match Client::connect(&ctx.addr) {
+            Ok(c) => return Some(c),
+            Err(_) => {
+                stats.reconnects += 1;
+                std::thread::sleep(wait);
+                wait = (wait * 2).min(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// One sender thread: claim scheduled arrivals, send them, classify the
+/// outcomes.
+fn sender_loop(ctx: &SenderCtx, thread_ix: usize, seed: u64) -> ThreadStats {
+    let mut rng = SplitMix64::new(seed ^ (0x5EED_0000 + thread_ix as u64));
+    let mut stats = ThreadStats::default();
+    let mut client: Option<Client> = None;
+    while let Some(arrival) = ctx.claim() {
+        let Some(sched) = ctx.schedule(arrival) else { break };
+        let now = ctx.start.elapsed();
+        if sched > now {
+            std::thread::sleep(sched - now);
+        }
+        let c = match client.as_mut() {
+            Some(c) => c,
+            None => match connect_with_backoff(ctx, &mut stats) {
+                Some(c) => client.insert(c),
+                None => break,
+            },
+        };
+        let tenant = ctx.pick(&mut rng);
+        let words = random_row(&mut rng, tenant.n_features);
+        stats.sent += 1;
+        match c.infer_packed(&tenant.name, tenant.n_features, words) {
+            Ok(_) => {
+                stats.ok += 1;
+                // Latency from the *scheduled* arrival: backpressure
+                // shows up in the tail instead of silently thinning the
+                // offered load.
+                let e2e = ctx.start.elapsed().saturating_sub(sched);
+                stats.lat_us.push(e2e.as_secs_f64() * 1e6);
+            }
+            Err(ClientError::Server { code: c2, .. }) if c2 == code::QUEUE_FULL => {
+                stats.shed += 1;
+            }
+            Err(ClientError::Server { code: c2, .. }) if c2 == code::OVERLOADED => {
+                // Refused at accept: the socket is closing; reconnect.
+                stats.shed += 1;
+                client = None;
+            }
+            Err(ClientError::Server { code: c2, .. }) if c2 == code::BAD_FRAME => {
+                // The server judged our bytes malformed — a protocol bug
+                // by definition, and connection-fatal.
+                stats.protocol_errors += 1;
+                client = None;
+            }
+            Err(ClientError::Server { .. }) => {
+                stats.errors += 1;
+            }
+            Err(ClientError::Wire(_)) | Err(ClientError::Protocol(_)) => {
+                stats.protocol_errors += 1;
+                client = None;
+            }
+            Err(ClientError::Io(_)) => {
+                stats.errors += 1;
+                client = None;
+            }
+        }
+    }
+    stats
+}
+
+/// A random packed feature row of `bits` bits (tail bits zeroed).
+fn random_row(rng: &mut SplitMix64, bits: usize) -> Vec<u64> {
+    let mut words: Vec<u64> = (0..words_for(bits)).map(|_| rng.next_u64()).collect();
+    if let Some(last) = words.last_mut() {
+        *last &= tail_mask(bits);
+    }
+    words
+}
+
+/// Run one load measurement. Probes every tenant's shape up front (so an
+/// unknown model fails fast, before any load), then drives the arrival
+/// schedule through `conns` sender threads and aggregates.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    ensure!(!cfg.models.is_empty(), "loadgen needs at least one tenant model");
+    let (conns, rate_rps) = match cfg.mode {
+        Mode::Closed { conns } => (conns, 0.0),
+        Mode::Open { rate_rps, conns } => {
+            ensure!(rate_rps > 0.0, "open-loop rate must be > 0 req/s");
+            (conns, rate_rps)
+        }
+    };
+    ensure!(conns >= 1, "loadgen needs at least one connection");
+
+    // Probe tenant shapes over the wire — validates every model name and
+    // learns the width to generate rows at.
+    let mut probe = Client::connect(&cfg.addr)
+        .map_err(|e| anyhow::anyhow!("connecting to {}: {e}", cfg.addr))?;
+    let mut tenants = Vec::with_capacity(cfg.models.len());
+    let mut cum = 0u32;
+    for (name, weight) in &cfg.models {
+        let info = probe
+            .model_info(name)
+            .map_err(|e| anyhow::anyhow!("probing model {name:?}: {e}"))?;
+        cum += weight;
+        tenants.push(Tenant {
+            name: name.clone(),
+            n_features: info.n_features as usize,
+            cum_weight: cum,
+        });
+    }
+    drop(probe);
+
+    let ctx = Arc::new(SenderCtx {
+        addr: cfg.addr.clone(),
+        tenants,
+        total_weight: cum,
+        burst: cfg.burst,
+        deadline: cfg.duration,
+        next_arrival: AtomicU64::new(0),
+        max_requests: cfg.max_requests.unwrap_or(u64::MAX),
+        gap_ns: if rate_rps > 0.0 { 1e9 / rate_rps } else { 0.0 },
+        start: Instant::now(),
+    });
+
+    let mut handles = Vec::with_capacity(conns);
+    for t in 0..conns {
+        let ctx = ctx.clone();
+        let seed = cfg.seed;
+        let h = std::thread::Builder::new()
+            .name(format!("tdpc-loadgen-{t}"))
+            .spawn(move || sender_loop(&ctx, t, seed))
+            .context("spawning a loadgen sender")?;
+        handles.push(h);
+    }
+    let mut total = ThreadStats::default();
+    for h in handles {
+        match h.join() {
+            Ok(stats) => total.merge(stats),
+            Err(_) => bail!("a loadgen sender thread panicked"),
+        }
+    }
+    let wall = ctx.start.elapsed().as_secs_f64().max(1e-9);
+
+    Ok(LoadReport {
+        mode: cfg.mode.name().to_string(),
+        conns,
+        rate_rps,
+        burst: cfg.burst.name(),
+        duration_s: wall,
+        models: cfg.models.iter().map(|(n, _)| n.clone()).collect(),
+        sent: total.sent,
+        ok: total.ok,
+        shed: total.shed,
+        errors: total.errors,
+        protocol_errors: total.protocol_errors,
+        reconnects: total.reconnects,
+        goodput_rps: total.ok as f64 / wall,
+        shed_rate: if total.sent == 0 {
+            0.0
+        } else {
+            total.shed as f64 / total.sent as f64
+        },
+        lat_mean_us: mean(&total.lat_us),
+        lat_p50_us: percentile(&total.lat_us, 50.0),
+        lat_p90_us: percentile(&total.lat_us, 90.0),
+        lat_p99_us: percentile(&total.lat_us, 99.0),
+        lat_p999_us: percentile(&total.lat_us, 99.9),
+        lat_max_us: total.lat_us.iter().copied().fold(0.0, f64::max),
+    })
+}
+
+/// Serialize a report to disk (stable: `util::json` emits object keys
+/// in sorted order, so identical reports yield identical bytes).
+pub fn write_report(report: &LoadReport, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, json::emit(&report.to_json()) + "\n")
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_shape_parsing() {
+        assert_eq!(BurstShape::from_name("steady").unwrap(), BurstShape::Steady);
+        assert_eq!(
+            BurstShape::from_name("square:100:20").unwrap(),
+            BurstShape::Square { period: Duration::from_millis(100), duty_pct: 20 }
+        );
+        for bad in ["square", "square:0:20", "square:100:0", "square:100:101", "sine"] {
+            assert!(BurstShape::from_name(bad).is_err(), "{bad} must be rejected");
+        }
+        // name() round-trips through from_name().
+        for shape in [
+            BurstShape::Steady,
+            BurstShape::Square { period: Duration::from_millis(50), duty_pct: 7 },
+        ] {
+            assert_eq!(BurstShape::from_name(&shape.name()).unwrap(), shape);
+        }
+    }
+
+    #[test]
+    fn square_burst_defers_off_window_arrivals() {
+        let b = BurstShape::Square { period: Duration::from_millis(100), duty_pct: 20 };
+        // In the on-window: pass through unchanged.
+        assert_eq!(b.next_on(Duration::from_millis(0)), Duration::from_millis(0));
+        assert_eq!(b.next_on(Duration::from_millis(19)), Duration::from_millis(19));
+        assert_eq!(b.next_on(Duration::from_millis(119)), Duration::from_millis(119));
+        // In the off-window: defer to the next period start.
+        assert_eq!(b.next_on(Duration::from_millis(20)), Duration::from_millis(100));
+        assert_eq!(b.next_on(Duration::from_millis(99)), Duration::from_millis(100));
+        assert_eq!(b.next_on(Duration::from_millis(150)), Duration::from_millis(200));
+        // Steady never defers.
+        assert_eq!(
+            BurstShape::Steady.next_on(Duration::from_millis(37)),
+            Duration::from_millis(37)
+        );
+    }
+
+    #[test]
+    fn mix_parsing() {
+        assert_eq!(
+            parse_mix("a:3,b:1").unwrap(),
+            vec![("a".to_string(), 3), ("b".to_string(), 1)]
+        );
+        assert_eq!(parse_mix("solo").unwrap(), vec![("solo".to_string(), 1)]);
+        assert_eq!(
+            parse_mix(" a , b:2 ").unwrap(),
+            vec![("a".to_string(), 1), ("b".to_string(), 2)]
+        );
+        for bad in ["", "a:0", "a:x", ":3"] {
+            assert!(parse_mix(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn weighted_pick_respects_cumulative_bounds() {
+        let ctx = SenderCtx {
+            addr: String::new(),
+            tenants: vec![
+                Tenant { name: "a".into(), n_features: 8, cum_weight: 3 },
+                Tenant { name: "b".into(), n_features: 8, cum_weight: 4 },
+            ],
+            total_weight: 4,
+            burst: BurstShape::Steady,
+            deadline: Duration::from_secs(1),
+            next_arrival: AtomicU64::new(0),
+            max_requests: u64::MAX,
+            gap_ns: 0.0,
+            start: Instant::now(),
+        };
+        let mut rng = SplitMix64::new(9);
+        let mut counts = [0u32; 2];
+        for _ in 0..4000 {
+            match ctx.pick(&mut rng).name.as_str() {
+                "a" => counts[0] += 1,
+                _ => counts[1] += 1,
+            }
+        }
+        // 3:1 mix → a ≈ 75% of picks.
+        let frac_a = counts[0] as f64 / 4000.0;
+        assert!((0.70..0.80).contains(&frac_a), "frac_a = {frac_a}");
+    }
+
+    #[test]
+    fn open_loop_schedule_is_rate_driven() {
+        let ctx = SenderCtx {
+            addr: String::new(),
+            tenants: Vec::new(),
+            total_weight: 1,
+            burst: BurstShape::Steady,
+            deadline: Duration::from_secs(10),
+            next_arrival: AtomicU64::new(0),
+            max_requests: u64::MAX,
+            gap_ns: 1e6, // 1000 req/s
+            start: Instant::now(),
+        };
+        assert_eq!(ctx.schedule(0).unwrap(), Duration::ZERO);
+        assert_eq!(ctx.schedule(1000).unwrap(), Duration::from_secs(1));
+        // Past the deadline: no schedule.
+        assert!(ctx.schedule(20_000_000).is_none());
+    }
+
+    #[test]
+    fn request_budget_is_shared() {
+        let ctx = SenderCtx {
+            addr: String::new(),
+            tenants: Vec::new(),
+            total_weight: 1,
+            burst: BurstShape::Steady,
+            deadline: Duration::from_secs(1),
+            next_arrival: AtomicU64::new(0),
+            max_requests: 3,
+            gap_ns: 0.0,
+            start: Instant::now(),
+        };
+        assert_eq!(ctx.claim(), Some(0));
+        assert_eq!(ctx.claim(), Some(1));
+        assert_eq!(ctx.claim(), Some(2));
+        assert_eq!(ctx.claim(), None);
+        assert_eq!(ctx.claim(), None);
+    }
+
+    #[test]
+    fn report_json_schema_is_stable_and_parses() {
+        let report = LoadReport {
+            mode: "closed".into(),
+            conns: 4,
+            rate_rps: 0.0,
+            burst: "steady".into(),
+            duration_s: 1.5,
+            models: vec!["a".into(), "b".into()],
+            sent: 100,
+            ok: 90,
+            shed: 10,
+            errors: 0,
+            protocol_errors: 0,
+            reconnects: 2,
+            goodput_rps: 60.0,
+            shed_rate: 0.1,
+            lat_mean_us: 120.0,
+            lat_p50_us: 100.0,
+            lat_p90_us: 180.0,
+            lat_p99_us: 250.0,
+            lat_p999_us: 400.0,
+            lat_max_us: 512.0,
+        };
+        let text = json::emit(&report.to_json());
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back.get("schema").unwrap().as_str().unwrap(), "tdpc-bench-serving/v1");
+        assert_eq!(back.get("ok").unwrap().as_usize().unwrap(), 90);
+        assert_eq!(back.get("shed").unwrap().as_usize().unwrap(), 10);
+        assert!((back.get("shed_rate").unwrap().as_f64().unwrap() - 0.1).abs() < 1e-12);
+        let lat = back.get("latency_us").unwrap();
+        for key in ["mean", "p50", "p90", "p99", "p999", "max"] {
+            assert!(lat.get(key).unwrap().as_f64().unwrap() > 0.0, "{key}");
+        }
+        assert_eq!(back.get("models").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,46 @@
+//! L4 network serving: a dependency-free TCP front end over the
+//! coordinator, plus a load-generation harness.
+//!
+//! The wire is a length-prefixed binary protocol (std-only — no tokio,
+//! no serde): every frame is a 12-byte header (`b"TDPC"` magic, version,
+//! kind, payload length) followed by one payload from
+//! [`protocol`]. Feature rows travel *packed* (`u64` words, LSB-first,
+//! zero tail bits — the request path's native currency), so a request
+//! decodes straight into a [`crate::tm::BitVec64`] and enters
+//! [`crate::coordinator::Coordinator::submit_packed_named`] without ever
+//! materializing a bool slice.
+//!
+//! Layers inside this module:
+//!
+//! * [`protocol`] — payload encode/decode, error-code mapping
+//!   ([`protocol::error_code`]) from typed
+//!   [`crate::coordinator::InferError`]s;
+//! * [`codec`] — frame framing over any `Read`/`Write`
+//!   ([`codec::read_frame`] / [`codec::write_frame`]), with the declared
+//!   payload length validated *before* allocation;
+//! * `conn` (private) — per-connection reader/writer threads: pipelined
+//!   decode-and-submit, replies streamed back in submission order via
+//!   the shared [`crate::coordinator::await_reply`] helper;
+//! * [`listener`] — the accept loop: connection cap and
+//!   coordinator-saturation checks refuse connections with one
+//!   `OVERLOADED` frame at accept time, shedding overload at the socket;
+//! * [`client`] — a minimal blocking client (used by the loopback tests
+//!   and the load generator; external clients only need the wire format);
+//! * [`loadgen`] — open/closed-loop load harness writing
+//!   `BENCH_serving.json` (schema `tdpc-bench-serving/v1`).
+
+pub mod client;
+pub mod codec;
+mod conn;
+pub mod listener;
+pub mod loadgen;
+pub mod protocol;
+
+pub use client::{Client, ClientError};
+pub use codec::{read_frame, write_frame, WireError};
+pub use listener::{Server, ServerConfig};
+pub use loadgen::{parse_mix, BurstShape, LoadReport, LoadgenConfig, Mode};
+pub use protocol::{
+    code, code_name, error_code, ErrorMsg, InferRequestMsg, InferResponseMsg, Kind,
+    ModelInfoMsg, ModelQueryMsg, HEADER_LEN, MAGIC, MAX_PAYLOAD, VERSION,
+};

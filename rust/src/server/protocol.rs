@@ -1,0 +1,565 @@
+//! Wire protocol v1: message payloads and error codes.
+//!
+//! Every frame on the wire is a 12-byte header (see [`super::codec`])
+//! followed by one of the payloads defined here. All integers are
+//! little-endian; feature rows travel *packed* — the same `u64` LSB-first
+//! words with zero tail bits that are the request path's native currency
+//! (`crate::tm::bits`) — so a request decodes straight into a
+//! [`crate::tm::BitVec64`] with no bool materialization on either side.
+//!
+//! Payload layouts (after the frame header):
+//!
+//! | kind | payload |
+//! |---|---|
+//! | `InferRequest` (1) | `corr u64 · name_len u16 · name bytes · n_features u32 · ceil(n/64) × word u64` |
+//! | `InferResponse` (2) | `corr u64 · generation u64 · pred u32 · n_classes u32 · n_classes × sum i32` |
+//! | `Error` (3) | `corr u64 · code u16 · msg_len u16 · msg bytes` |
+//! | `ModelQuery` (4) | `corr u64 · name_len u16 · name bytes` |
+//! | `ModelInfo` (5) | `corr u64 · name_len u16 · name bytes · n_features u32 · n_classes u32 · generation u64` |
+//!
+//! `corr` is an opaque client-chosen correlation id echoed verbatim in the
+//! reply, so pipelined clients can match responses to requests (the server
+//! answers each connection's requests in submission order). Error frames
+//! raised by the server outside any one request (a malformed frame, an
+//! accept-time overload refusal) carry `corr = 0`.
+//!
+//! Decoding is defensive: name and feature-width caps are enforced before
+//! any length-driven allocation, trailing payload bytes are rejected, and
+//! nonzero tail bits in the last feature word are refused (the packed
+//! invariant every downstream popcount relies on).
+
+use crate::coordinator::InferError;
+use crate::tm::bits::{tail_mask, words_for};
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"TDPC";
+
+/// Protocol version this build speaks. A frame with any other version is
+/// refused with [`super::codec::WireError::VersionMismatch`].
+pub const VERSION: u8 = 1;
+
+/// Frame header length in bytes (magic 4 + version 1 + kind 1 +
+/// reserved 2 + payload_len 4).
+pub const HEADER_LEN: usize = 12;
+
+/// Hard cap on a frame's declared payload length. [`super::codec::read_frame`]
+/// checks the declared length against this *before* allocating the payload
+/// buffer, so a hostile 4 GiB length field costs nothing.
+pub const MAX_PAYLOAD: u32 = 2 * 1024 * 1024;
+
+/// Cap on a request's declared feature width (1 Mi bits = 16 Ki words).
+pub const MAX_FEATURE_BITS: u32 = 1 << 20;
+
+/// Cap on a model name's byte length.
+pub const MAX_NAME_LEN: usize = 256;
+
+/// Cap on a response's declared class count.
+pub const MAX_CLASSES: u32 = 4096;
+
+/// Frame kinds (header byte 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Kind {
+    /// Client → server: one inference request.
+    InferRequest = 1,
+    /// Server → client: the successful answer to an `InferRequest`.
+    InferResponse = 2,
+    /// Server → client: a typed failure (see [`code`]).
+    Error = 3,
+    /// Client → server: look up one served model's shape.
+    ModelQuery = 4,
+    /// Server → client: the answer to a `ModelQuery`.
+    ModelInfo = 5,
+}
+
+impl Kind {
+    pub fn from_u8(b: u8) -> Option<Kind> {
+        match b {
+            1 => Some(Kind::InferRequest),
+            2 => Some(Kind::InferResponse),
+            3 => Some(Kind::Error),
+            4 => Some(Kind::ModelQuery),
+            5 => Some(Kind::ModelInfo),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+}
+
+/// Protocol error codes carried by `Error` frames. Codes 1–5 map the
+/// coordinator's typed [`InferError`] variants one-to-one (see
+/// [`error_code`]); codes ≥ 16 are raised by the serving layer itself.
+pub mod code {
+    /// [`super::InferError::UnknownModel`].
+    pub const UNKNOWN_MODEL: u16 = 1;
+    /// [`super::InferError::WidthMismatch`].
+    pub const WIDTH_MISMATCH: u16 = 2;
+    /// [`super::InferError::QueueFull`] — the request was shed by
+    /// admission control; retry later.
+    pub const QUEUE_FULL: u16 = 3;
+    /// [`super::InferError::BackendFailed`].
+    pub const BACKEND_FAILED: u16 = 4;
+    /// [`super::InferError::ShuttingDown`].
+    pub const SHUTTING_DOWN: u16 = 5;
+    /// The client broke the framing or payload contract; the server
+    /// closes the connection after sending this (connection-fatal).
+    pub const BAD_FRAME: u16 = 16;
+    /// The server refused the *connection* at accept time (connection
+    /// limit reached, or every worker queue at its bound) — overload is
+    /// shed at the socket instead of accumulating in RAM.
+    pub const OVERLOADED: u16 = 17;
+}
+
+/// The wire error code for a typed coordinator error.
+pub fn error_code(e: &InferError) -> u16 {
+    match e {
+        InferError::UnknownModel { .. } => code::UNKNOWN_MODEL,
+        InferError::WidthMismatch { .. } => code::WIDTH_MISMATCH,
+        InferError::QueueFull { .. } => code::QUEUE_FULL,
+        InferError::BackendFailed(_) => code::BACKEND_FAILED,
+        InferError::ShuttingDown => code::SHUTTING_DOWN,
+    }
+}
+
+/// Human-readable name of a wire error code (operator-facing output).
+pub fn code_name(c: u16) -> &'static str {
+    match c {
+        code::UNKNOWN_MODEL => "unknown-model",
+        code::WIDTH_MISMATCH => "width-mismatch",
+        code::QUEUE_FULL => "queue-full",
+        code::BACKEND_FAILED => "backend-failed",
+        code::SHUTTING_DOWN => "shutting-down",
+        code::BAD_FRAME => "bad-frame",
+        code::OVERLOADED => "overloaded",
+        _ => "unknown-code",
+    }
+}
+
+/// One inference request: which model, and the packed feature row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InferRequestMsg {
+    pub corr: u64,
+    pub model: String,
+    /// Logical feature width in bits; `words` holds `ceil(n_features/64)`
+    /// LSB-first words with zero tail bits.
+    pub n_features: u32,
+    pub words: Vec<u64>,
+}
+
+/// The successful answer to an [`InferRequestMsg`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InferResponseMsg {
+    pub corr: u64,
+    /// Hot-swap generation of the backend that served the request.
+    pub generation: u64,
+    /// Argmax class.
+    pub pred: u32,
+    /// Signed per-class sums (length = the model's class count).
+    pub sums: Vec<i32>,
+}
+
+/// A typed failure (request-scoped when `corr != 0`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ErrorMsg {
+    pub corr: u64,
+    pub code: u16,
+    pub message: String,
+}
+
+/// Look up one served model's shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelQueryMsg {
+    pub corr: u64,
+    pub model: String,
+}
+
+/// The answer to a [`ModelQueryMsg`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelInfoMsg {
+    pub corr: u64,
+    pub model: String,
+    pub n_features: u32,
+    pub n_classes: u32,
+    /// The model's current hot-swap generation.
+    pub generation: u64,
+}
+
+// ---- little-endian payload primitives -----------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i32(out: &mut Vec<u8>, v: i32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked payload reader. Every accessor fails with a message
+/// instead of panicking — payload bytes are attacker-controlled.
+struct Rd<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.b.len() < n {
+            return Err(format!(
+                "truncated payload: needed {n} more bytes, have {}",
+                self.b.len()
+            ));
+        }
+        let (head, rest) = self.b.split_at(n);
+        self.b = rest;
+        Ok(head)
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, String> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn name(&mut self) -> Result<String, String> {
+        let len = self.u16()? as usize;
+        if len > MAX_NAME_LEN {
+            return Err(format!("model name length {len} exceeds the cap {MAX_NAME_LEN}"));
+        }
+        std::str::from_utf8(self.take(len)?)
+            .map(str::to_string)
+            .map_err(|_| "model name is not valid UTF-8".to_string())
+    }
+
+    fn done(self) -> Result<(), String> {
+        if self.b.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes after the payload", self.b.len()))
+        }
+    }
+}
+
+fn put_name(out: &mut Vec<u8>, name: &str) {
+    debug_assert!(name.len() <= MAX_NAME_LEN);
+    put_u16(out, name.len() as u16);
+    out.extend_from_slice(name.as_bytes());
+}
+
+impl InferRequestMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(8 + 2 + self.model.len() + 4 + self.words.len() * 8);
+        put_u64(&mut out, self.corr);
+        put_name(&mut out, &self.model);
+        put_u32(&mut out, self.n_features);
+        for &w in &self.words {
+            put_u64(&mut out, w);
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<InferRequestMsg, String> {
+        let mut r = Rd::new(payload);
+        let corr = r.u64()?;
+        let model = r.name()?;
+        let n_features = r.u32()?;
+        if n_features > MAX_FEATURE_BITS {
+            return Err(format!(
+                "feature width {n_features} exceeds the cap {MAX_FEATURE_BITS}"
+            ));
+        }
+        let n_words = words_for(n_features as usize);
+        let mut words = Vec::with_capacity(n_words);
+        for _ in 0..n_words {
+            words.push(r.u64()?);
+        }
+        r.done()?;
+        if let Some(&last) = words.last() {
+            if last & !tail_mask(n_features as usize) != 0 {
+                return Err(
+                    "tail bits beyond the declared feature width must be zero".to_string()
+                );
+            }
+        }
+        Ok(InferRequestMsg { corr, model, n_features, words })
+    }
+}
+
+impl InferResponseMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 8 + 4 + 4 + self.sums.len() * 4);
+        put_u64(&mut out, self.corr);
+        put_u64(&mut out, self.generation);
+        put_u32(&mut out, self.pred);
+        put_u32(&mut out, self.sums.len() as u32);
+        for &s in &self.sums {
+            put_i32(&mut out, s);
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<InferResponseMsg, String> {
+        let mut r = Rd::new(payload);
+        let corr = r.u64()?;
+        let generation = r.u64()?;
+        let pred = r.u32()?;
+        let n_classes = r.u32()?;
+        if n_classes > MAX_CLASSES {
+            return Err(format!("class count {n_classes} exceeds the cap {MAX_CLASSES}"));
+        }
+        let mut sums = Vec::with_capacity(n_classes as usize);
+        for _ in 0..n_classes {
+            sums.push(r.i32()?);
+        }
+        r.done()?;
+        Ok(InferResponseMsg { corr, generation, pred, sums })
+    }
+}
+
+impl ErrorMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        // Cap the message so one error can never approach the frame
+        // payload limit (messages are diagnostics, not data).
+        let msg = if self.message.len() > u16::MAX as usize {
+            &self.message[..u16::MAX as usize]
+        } else {
+            &self.message[..]
+        };
+        let mut out = Vec::with_capacity(8 + 2 + 2 + msg.len());
+        put_u64(&mut out, self.corr);
+        put_u16(&mut out, self.code);
+        put_u16(&mut out, msg.len() as u16);
+        out.extend_from_slice(msg.as_bytes());
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<ErrorMsg, String> {
+        let mut r = Rd::new(payload);
+        let corr = r.u64()?;
+        let code = r.u16()?;
+        let len = r.u16()? as usize;
+        let message = String::from_utf8_lossy(r.take(len)?).into_owned();
+        r.done()?;
+        Ok(ErrorMsg { corr, code, message })
+    }
+}
+
+impl ModelQueryMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 2 + self.model.len());
+        put_u64(&mut out, self.corr);
+        put_name(&mut out, &self.model);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<ModelQueryMsg, String> {
+        let mut r = Rd::new(payload);
+        let corr = r.u64()?;
+        let model = r.name()?;
+        r.done()?;
+        Ok(ModelQueryMsg { corr, model })
+    }
+}
+
+impl ModelInfoMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 2 + self.model.len() + 4 + 4 + 8);
+        put_u64(&mut out, self.corr);
+        put_name(&mut out, &self.model);
+        put_u32(&mut out, self.n_features);
+        put_u32(&mut out, self.n_classes);
+        put_u64(&mut out, self.generation);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<ModelInfoMsg, String> {
+        let mut r = Rd::new(payload);
+        let corr = r.u64()?;
+        let model = r.name()?;
+        let n_features = r.u32()?;
+        let n_classes = r.u32()?;
+        let generation = r.u64()?;
+        r.done()?;
+        Ok(ModelInfoMsg { corr, model, n_features, n_classes, generation })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    /// encode → decode ≡ id for feature widths straddling the word
+    /// boundary (31 fits one partial word, 64 exactly one, 65 spills).
+    #[test]
+    fn infer_request_roundtrip_across_word_boundaries() {
+        for &bits in &[31u32, 64, 65] {
+            let mut rng = SplitMix64::new(bits as u64);
+            for trial in 0..50 {
+                let n_words = words_for(bits as usize);
+                let mut words: Vec<u64> = (0..n_words).map(|_| rng.next_u64()).collect();
+                if let Some(last) = words.last_mut() {
+                    *last &= tail_mask(bits as usize);
+                }
+                let msg = InferRequestMsg {
+                    corr: rng.next_u64(),
+                    model: format!("tenant_{bits}"),
+                    n_features: bits,
+                    words,
+                };
+                let back = InferRequestMsg::decode(&msg.encode()).unwrap();
+                assert_eq!(back, msg, "bits={bits} trial={trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn response_error_query_info_roundtrip() {
+        let resp = InferResponseMsg {
+            corr: 7,
+            generation: 3,
+            pred: 2,
+            sums: vec![-5, 0, 17],
+        };
+        assert_eq!(InferResponseMsg::decode(&resp.encode()).unwrap(), resp);
+        let err = ErrorMsg { corr: 9, code: code::QUEUE_FULL, message: "shed".into() };
+        assert_eq!(ErrorMsg::decode(&err.encode()).unwrap(), err);
+        let q = ModelQueryMsg { corr: 1, model: "mnist_c100".into() };
+        assert_eq!(ModelQueryMsg::decode(&q.encode()).unwrap(), q);
+        let info = ModelInfoMsg {
+            corr: 1,
+            model: "mnist_c100".into(),
+            n_features: 784,
+            n_classes: 10,
+            generation: 4,
+        };
+        assert_eq!(ModelInfoMsg::decode(&info.encode()).unwrap(), info);
+    }
+
+    #[test]
+    fn truncated_payloads_are_rejected_not_panicked() {
+        let msg = InferRequestMsg {
+            corr: 1,
+            model: "m".into(),
+            n_features: 65,
+            words: vec![u64::MAX, 1],
+        };
+        let full = msg.encode();
+        for cut in 0..full.len() {
+            let err = InferRequestMsg::decode(&full[..cut]).unwrap_err();
+            assert!(err.contains("truncated"), "cut={cut}: {err}");
+        }
+        // Trailing garbage is rejected too.
+        let mut padded = full.clone();
+        padded.push(0);
+        assert!(InferRequestMsg::decode(&padded).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn hostile_lengths_are_capped_before_allocation() {
+        // Feature width over the cap: rejected on the declared value,
+        // before any word is read or allocated.
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_name(&mut p, "m");
+        put_u32(&mut p, MAX_FEATURE_BITS + 1);
+        let err = InferRequestMsg::decode(&p).unwrap_err();
+        assert!(err.contains("cap"), "{err}");
+
+        // Name length over the cap.
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_u16(&mut p, (MAX_NAME_LEN + 1) as u16);
+        let err = ModelQueryMsg::decode(&p).unwrap_err();
+        assert!(err.contains("cap"), "{err}");
+
+        // Class count over the cap.
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_u64(&mut p, 0);
+        put_u32(&mut p, 0);
+        put_u32(&mut p, MAX_CLASSES + 1);
+        let err = InferResponseMsg::decode(&p).unwrap_err();
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn nonzero_tail_bits_are_refused() {
+        // 31 declared bits but bit 31 set in the single word.
+        let msg = InferRequestMsg {
+            corr: 1,
+            model: "m".into(),
+            n_features: 31,
+            words: vec![1u64 << 31],
+        };
+        let err = InferRequestMsg::decode(&msg.encode()).unwrap_err();
+        assert!(err.contains("tail bits"), "{err}");
+        // Exactly-at-the-boundary widths have no tail to violate.
+        let ok = InferRequestMsg {
+            corr: 1,
+            model: "m".into(),
+            n_features: 64,
+            words: vec![u64::MAX],
+        };
+        assert!(InferRequestMsg::decode(&ok.encode()).is_ok());
+    }
+
+    #[test]
+    fn infer_error_variants_map_to_distinct_codes() {
+        let cases = [
+            (InferError::UnknownModel { name: "g".into() }, code::UNKNOWN_MODEL),
+            (InferError::WidthMismatch { got: 1, expected: 2 }, code::WIDTH_MISMATCH),
+            (InferError::QueueFull { depth: 8, limit: 8 }, code::QUEUE_FULL),
+            (InferError::BackendFailed("x".into()), code::BACKEND_FAILED),
+            (InferError::ShuttingDown, code::SHUTTING_DOWN),
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for (e, expected) in cases {
+            assert_eq!(error_code(&e), expected, "{e}");
+            assert!(seen.insert(expected), "codes must be distinct");
+            assert_ne!(code_name(expected), "unknown-code");
+        }
+        assert_eq!(code_name(code::BAD_FRAME), "bad-frame");
+        assert_eq!(code_name(code::OVERLOADED), "overloaded");
+        assert_eq!(code_name(999), "unknown-code");
+    }
+
+    #[test]
+    fn kind_byte_roundtrip() {
+        for k in [
+            Kind::InferRequest,
+            Kind::InferResponse,
+            Kind::Error,
+            Kind::ModelQuery,
+            Kind::ModelInfo,
+        ] {
+            assert_eq!(Kind::from_u8(k.as_u8()), Some(k));
+        }
+        assert_eq!(Kind::from_u8(0), None);
+        assert_eq!(Kind::from_u8(6), None);
+    }
+}
