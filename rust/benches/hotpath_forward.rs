@@ -1,0 +1,258 @@
+//! The clause-evaluation hot-loop bench: seed-shaped scalar scan vs the
+//! chunked full scan vs the clause-indexed scan, plus the end-to-end
+//! production paths — the other half of the perf trajectory next to
+//! `BENCH_serving.json`.
+//!
+//! Every variant is cross-checked bit-for-bit against
+//! `TmModel::forward_reference` *before* anything is timed, and the
+//! result is written as `BENCH_hotpath.json` (schema
+//! `tdpc-bench-hotpath/v1`):
+//!
+//! ```text
+//! {
+//!   "schema": "tdpc-bench-hotpath/v1",
+//!   "config": { "batch", "clauses_per_class", "density",
+//!               "n_classes", "n_features", "smoke" },
+//!   "cross_check": "pass",
+//!   "index": { "buckets", "fallback", "indexed" },
+//!   "skip_rate": 0.87,
+//!   "variants": [ { "mean_us_per_iter", "name", "rows_per_s" }, … ],
+//!   "best_speedup_vs_baseline": 2.3
+//! }
+//! ```
+//!
+//! Variants (each iterates one batch, reporting rows/s):
+//! - `baseline`      — the seed `forward_packed` inner shape: word-serial
+//!   scalar clause scan, bit-at-a-time fired stores, per-row sums `Vec`;
+//! - `simd`          — chunked 4×u64-lane full scan + caller-scratch sums;
+//! - `indexed_simd`  — the production kernel: clause-indexed scan +
+//!   chunked lanes + caller-scratch sums;
+//! - `forward_packed` — the public end-to-end entry (builds `ForwardOutput`);
+//! - `predict_packed` — argmax-only with the exact class-sum early exit.
+//!
+//! Usage: `cargo bench --bench hotpath_forward -- [--smoke] [--out PATH]`
+
+use std::time::Duration;
+
+use tdpc::tm::{bits, ForwardScratch, PackedBatch, TmModel};
+use tdpc::util::{benchkit, json, SplitMix64};
+
+struct Config {
+    n_classes: usize,
+    clauses_per_class: usize,
+    n_features: usize,
+    density: f64,
+    batch: usize,
+    smoke: bool,
+    warmup: Duration,
+    budget: Duration,
+}
+
+fn config(smoke: bool) -> Config {
+    if smoke {
+        Config {
+            n_classes: 4,
+            clauses_per_class: 20,
+            n_features: 128,
+            density: 0.05,
+            batch: 16,
+            smoke,
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(80),
+        }
+    } else {
+        Config {
+            n_classes: 10,
+            clauses_per_class: 100,
+            n_features: 784,
+            density: 0.05,
+            batch: 64,
+            smoke,
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_millis(900),
+        }
+    }
+}
+
+/// Argmax with ties → lowest index (jnp.argmax), shared by the kernels.
+fn argmax(sums: &[i32]) -> usize {
+    let mut best = 0usize;
+    for (k, &s) in sums.iter().enumerate() {
+        if s > sums[best] {
+            best = k;
+        }
+    }
+    best
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_hotpath.json".to_string());
+    let cfg = config(smoke);
+
+    let model = TmModel::synthetic(
+        "hotpath",
+        cfg.n_classes,
+        cfg.clauses_per_class,
+        cfg.n_features,
+        cfg.density,
+        7,
+    );
+    let mut rng = SplitMix64::new(13);
+    let rows: Vec<Vec<bool>> = (0..cfg.batch)
+        .map(|_| (0..cfg.n_features).map(|_| rng.next_bool(0.5)).collect())
+        .collect();
+    let batch = PackedBatch::from_rows(&rows).unwrap();
+
+    let lit_words = bits::words_for(2 * model.n_features);
+    let fired_words = bits::words_for(model.c_total());
+
+    // -- bit-exact cross-check (every variant vs forward_reference) ------
+    // Runs before any timing: a fast wrong kernel must never get a number.
+    let out = model.forward_packed(&batch).unwrap();
+    let preds_early = model.predict_packed(&batch).unwrap();
+    {
+        let mut lits = vec![0u64; lit_words];
+        let mut negated = Vec::new();
+        let (mut scalar, mut chunked, mut indexed) =
+            (vec![0u64; fired_words], vec![0u64; fired_words], vec![0u64; fired_words]);
+        for (r, row) in rows.iter().enumerate() {
+            let (fired_ref, sums_ref, pred_ref) = model.forward_reference(row);
+            model.packed_literals_into(batch.row(r), &mut negated, &mut lits);
+            model.fired_words_into_scalar(&lits, &mut scalar);
+            model.fired_words_into(&lits, &mut chunked);
+            model.fired_words_into_indexed(&lits, &mut indexed);
+            assert_eq!(scalar, chunked, "row {r}: scalar vs chunked scan");
+            assert_eq!(scalar, indexed, "row {r}: scalar vs indexed scan");
+            assert_eq!(out.fired_words_row(r), &scalar[..], "row {r}: forward_packed fired");
+            assert_eq!(out.fired_row(r), fired_ref, "row {r}: fired vs reference");
+            assert_eq!(out.sums_row(r), &sums_ref[..], "row {r}: sums vs reference");
+            assert_eq!(out.pred[r] as usize, pred_ref, "row {r}: pred vs reference");
+            assert_eq!(preds_early[r], out.pred[r], "row {r}: early-exit pred");
+            assert_eq!(model.class_sums_from_fired(&scalar), sums_ref, "row {r}: voter");
+        }
+    }
+    println!("cross-check PASS: scalar == chunked == indexed == reference ({} rows)", cfg.batch);
+
+    // Skip rate on this workload (CI gates on > 0: the index must be
+    // doing real work on the synthetic model, not falling back).
+    let mut telemetry = ForwardScratch::new();
+    model.forward_packed_with(&batch, &mut telemetry).unwrap();
+    let skip_rate = telemetry.skip_rate();
+    let stats = model.index_stats();
+    println!(
+        "index: {} clauses in {} buckets, {} fallback; skip rate {:.1}%",
+        stats.indexed,
+        stats.buckets,
+        stats.fallback,
+        100.0 * skip_rate
+    );
+    assert!(skip_rate > 0.0, "clause index skipped nothing on the synthetic workload");
+
+    // -- timed variants ---------------------------------------------------
+    let mut variants: Vec<(String, f64, f64)> = Vec::new(); // (name, mean_us, rows/s)
+    let mut run = |name: &str, warmup: Duration, budget: Duration, f: &mut dyn FnMut()| {
+        let mean = benchkit::bench_with(&format!("hotpath/{name}"), warmup, budget, f);
+        let rate = benchkit::report_rows_per_s(&format!("hotpath/{name}"), mean, cfg.batch);
+        (name.to_string(), mean, rate)
+    };
+
+    // baseline: the seed forward_packed body — scalar scan, bit-at-a-time
+    // stores, per-row sums Vec allocation.
+    let mut lits = vec![0u64; lit_words];
+    let mut negated: Vec<u64> = Vec::new();
+    let mut fired = vec![0u64; fired_words];
+    let v = run("baseline", cfg.warmup, cfg.budget, &mut || {
+        for r in 0..batch.rows() {
+            model.packed_literals_into(batch.row(r), &mut negated, &mut lits);
+            model.fired_words_into_scalar(&lits, &mut fired);
+            let sums = model.class_sums_from_fired(&fired);
+            std::hint::black_box(argmax(&sums));
+        }
+    });
+    variants.push(v);
+
+    // simd: chunked 4×u64-lane full scan, caller-scratch sums.
+    let mut sums = vec![0i32; model.n_classes];
+    let v = run("simd", cfg.warmup, cfg.budget, &mut || {
+        for r in 0..batch.rows() {
+            model.packed_literals_into(batch.row(r), &mut negated, &mut lits);
+            model.fired_words_into(&lits, &mut fired);
+            model.class_sums_into(&fired, &mut sums);
+            std::hint::black_box(argmax(&sums));
+        }
+    });
+    variants.push(v);
+
+    // indexed_simd: the production kernel.
+    let v = run("indexed_simd", cfg.warmup, cfg.budget, &mut || {
+        for r in 0..batch.rows() {
+            model.packed_literals_into(batch.row(r), &mut negated, &mut lits);
+            model.fired_words_into_indexed(&lits, &mut fired);
+            model.class_sums_into(&fired, &mut sums);
+            std::hint::black_box(argmax(&sums));
+        }
+    });
+    variants.push(v);
+
+    // End-to-end public entries (include ForwardOutput assembly / the
+    // early-exit argmax) for the trajectory record.
+    let mut scratch = ForwardScratch::new();
+    let v = run("forward_packed", cfg.warmup, cfg.budget, &mut || {
+        std::hint::black_box(model.forward_packed_with(&batch, &mut scratch).unwrap());
+    });
+    variants.push(v);
+    let v = run("predict_packed", cfg.warmup, cfg.budget, &mut || {
+        std::hint::black_box(model.predict_packed_with(&batch, &mut scratch).unwrap());
+    });
+    variants.push(v);
+
+    let baseline_rate = variants[0].2;
+    let best = variants.iter().skip(1).map(|v| v.2).fold(0.0f64, f64::max);
+    let best_speedup = best / baseline_rate;
+    println!("best variant over baseline: ×{best_speedup:.2}");
+
+    // -- artifact ---------------------------------------------------------
+    let doc = json::obj(vec![
+        ("schema", json::s("tdpc-bench-hotpath/v1")),
+        (
+            "config",
+            json::obj(vec![
+                ("n_classes", json::num(cfg.n_classes as f64)),
+                ("clauses_per_class", json::num(cfg.clauses_per_class as f64)),
+                ("n_features", json::num(cfg.n_features as f64)),
+                ("density", json::num(cfg.density)),
+                ("batch", json::num(cfg.batch as f64)),
+                ("smoke", json::num(cfg.smoke as u8 as f64)),
+            ]),
+        ),
+        ("cross_check", json::s("pass")),
+        (
+            "index",
+            json::obj(vec![
+                ("indexed", json::num(stats.indexed as f64)),
+                ("fallback", json::num(stats.fallback as f64)),
+                ("buckets", json::num(stats.buckets as f64)),
+            ]),
+        ),
+        ("skip_rate", json::num(skip_rate)),
+        (
+            "variants",
+            json::Value::Arr(
+                variants
+                    .iter()
+                    .map(|(name, mean, rate)| benchkit::variant_json(name, *mean, *rate))
+                    .collect(),
+            ),
+        ),
+        ("best_speedup_vs_baseline", json::num(best_speedup)),
+    ]);
+    std::fs::write(&out_path, json::emit(&doc) + "\n").unwrap();
+    println!("wrote {out_path}");
+}

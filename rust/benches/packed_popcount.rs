@@ -102,6 +102,26 @@ fn main() {
         );
     }
 
+    // The hot-loop rework (clause index, chunked subset scan, early-exit
+    // argmax) must also agree bit-for-bit with all of the above.
+    assert_eq!(
+        model.predict_packed(&batch).unwrap(),
+        packed_out.pred,
+        "early-exit argmax diverges"
+    );
+    let n_words = bits::words_for(model.c_total());
+    let (mut full, mut scalar, mut indexed) =
+        (vec![0u64; n_words], vec![0u64; n_words], vec![0u64; n_words]);
+    for r in 0..BATCH {
+        let lits = model.packed_literals(batch.row(r));
+        model.fired_words_into(lits.words(), &mut full);
+        model.fired_words_into_scalar(lits.words(), &mut scalar);
+        model.fired_words_into_indexed(lits.words(), &mut indexed);
+        assert_eq!(full, scalar, "chunked vs scalar scan diverge at row {r}");
+        assert_eq!(full, indexed, "indexed scan diverges at row {r}");
+        assert_eq!(&full[..], packed_out.fired_words_row(r), "scan vs forward at row {r}");
+    }
+
     // -- 2 & 3. end-to-end forward passes ---------------------------------
     let m_packed = benchkit::bench("packed_popcount/forward_packed_b32", || {
         std::hint::black_box(model.forward_packed(&batch).unwrap());

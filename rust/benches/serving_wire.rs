@@ -136,8 +136,9 @@ fn main() {
             assert_eq!(got, BURST);
         },
     );
-    let direct_rps = benchkit::throughput(mean_direct, BURST);
-    println!("  direct submit: {direct_rps:.0} req/s");
+    // Rows/s through the shared reporting helper so this number lines up
+    // with the `BENCH_hotpath.json` variants.
+    let direct_rps = benchkit::report_rows_per_s("serving_wire/direct_submit", mean_direct, BURST);
     println!(
         "  wire overhead: tcp at {:.1}% of direct-submission throughput",
         100.0 * tcp_rps / direct_rps

@@ -89,7 +89,15 @@
 //! `popcount(fired & pos) − popcount(fired & neg)` over precomputed
 //! class-major polarity masks — the software mirror of the paper's
 //! time-domain popcount voter, where votes are never materialized as
-//! integers either. Only the PJRT backend unpacks, at the HLO boundary,
+//! integers either. Clause evaluation itself runs the **clause-indexed
+//! hot loop**: include masks live in one flat arena scanned through
+//! chunked 4×`u64`-lane subset tests, and an index built at model
+//! construction buckets each clause under a rarely-set included literal
+//! so whole buckets are skipped when a sample leaves that literal 0 —
+//! bit-exact with the full scan, with per-worker scratch and skip
+//! telemetry in [`tm::ForwardScratch`] and an exact early-exit argmax
+//! behind [`tm::TmModel::predict_packed`] (§Data plane, "The hot loop",
+//! rust/README.md). Only the PJRT backend unpacks, at the HLO boundary,
 //! because the AOT artifact was lowered against f32 lanes.
 //!
 //! See rust/README.md for the feature matrix and local verify commands,

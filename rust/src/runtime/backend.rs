@@ -7,13 +7,13 @@
 //! default pure-Rust implementation.
 
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure, Result};
 
 use crate::flow::FlowConfig;
 use crate::hw::{HwArch, HwOutcome};
-use crate::tm::{Manifest, PackedBatch, TmModel};
+use crate::tm::{ForwardScratch, Manifest, PackedBatch, TmModel};
 
 use super::ForwardOutput;
 
@@ -222,18 +222,23 @@ impl BackendSpec {
 }
 
 /// Pure-Rust execution of the TM forward pass, fully packed: clause
-/// evaluation over bit-packed `u64` literal words, class sums via
-/// `popcount(fired & polarity_mask)`, argmax — directly from the trained
-/// model weights, with no bool/int materialization anywhere. `Send +
-/// Sync`: the model is immutable shared data, so one model can serve any
-/// number of worker threads.
+/// evaluation over bit-packed `u64` literal words (through the
+/// clause-indexed hot loop — `TmModel::forward_packed_with`), class sums
+/// via `popcount(fired & polarity_mask)`, argmax — directly from the
+/// trained model weights, with no bool/int materialization anywhere.
+/// `Send + Sync`: the model is immutable shared data, and the per-batch
+/// scratch (buffer reuse + skip telemetry) sits behind a `Mutex` that
+/// is uncontended in practice — each pool worker constructs its own
+/// backend from the spec (same ownership shape as the hw engine mutex
+/// in `HwBackend`).
 pub struct NativeBackend {
     model: Arc<TmModel>,
+    scratch: Mutex<ForwardScratch>,
 }
 
 impl NativeBackend {
     pub fn new(model: Arc<TmModel>) -> NativeBackend {
-        NativeBackend { model }
+        NativeBackend { model, scratch: Mutex::new(ForwardScratch::new()) }
     }
 
     /// Load `model` from the artifact manifest at `root`.
@@ -245,6 +250,14 @@ impl NativeBackend {
 
     pub fn model(&self) -> &TmModel {
         &self.model
+    }
+
+    /// Fraction of clause evaluations the clause index skipped over the
+    /// backend's lifetime (telemetry; 0.0 before any batch).
+    pub fn skip_rate(&self) -> f64 {
+        // A poisoned scratch only means a panicking thread died mid-
+        // forward; the counters are still coherent enough for telemetry.
+        self.scratch.lock().unwrap_or_else(|e| e.into_inner()).skip_rate()
     }
 }
 
@@ -270,7 +283,8 @@ impl InferenceBackend for NativeBackend {
     }
 
     fn forward(&self, batch: &PackedBatch) -> Result<ForwardOutput> {
-        self.model.forward_packed(batch)
+        let mut scratch = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        self.model.forward_packed_with(batch, &mut scratch)
     }
 }
 

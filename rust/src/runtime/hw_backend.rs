@@ -16,7 +16,7 @@ use anyhow::Result;
 
 use crate::flow::FlowConfig;
 use crate::hw::{HwArch, HwEngine, HwOutcome};
-use crate::tm::{PackedBatch, TmModel};
+use crate::tm::{ForwardScratch, PackedBatch, TmModel};
 
 use super::backend::InferenceBackend;
 use super::ForwardOutput;
@@ -26,6 +26,9 @@ pub struct HwBackend {
     model: Arc<TmModel>,
     arch: HwArch,
     engine: Mutex<Box<dyn HwEngine>>,
+    /// Hot-loop buffers + skip telemetry; same per-worker uncontended
+    /// mutex shape as `engine`.
+    scratch: Mutex<ForwardScratch>,
 }
 
 impl HwBackend {
@@ -37,7 +40,12 @@ impl HwBackend {
     /// via `BackendSpec::for_worker`).
     pub fn build(model: Arc<TmModel>, arch: HwArch, flow: &FlowConfig) -> Result<HwBackend> {
         let engine = arch.build_for_model(&model, flow, flow.die_seed)?;
-        Ok(HwBackend { model, arch, engine: Mutex::new(engine) })
+        Ok(HwBackend {
+            model,
+            arch,
+            engine: Mutex::new(engine),
+            scratch: Mutex::new(ForwardScratch::new()),
+        })
     }
 
     pub fn arch(&self) -> HwArch {
@@ -71,7 +79,8 @@ impl InferenceBackend for HwBackend {
     }
 
     fn forward(&self, batch: &PackedBatch) -> Result<ForwardOutput> {
-        self.model.forward_packed(batch)
+        let mut scratch = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        self.model.forward_packed_with(batch, &mut scratch)
     }
 
     fn replay(&self, out: &ForwardOutput, row: usize) -> Option<HwOutcome> {

@@ -43,6 +43,38 @@ pub fn tail_mask(bits: usize) -> u64 {
     }
 }
 
+/// Bitwise subset test over word slices: true iff every bit set in `sub`
+/// is also set in `sup` (`sub & !sup == 0` in every word). This is the
+/// clause-evaluation kernel — `include ⊆ literals` — restructured for
+/// autovectorization: words are consumed in 4×`u64` chunks whose four
+/// AND-NOTs reduce through one OR accumulator (no per-word branch, so
+/// LLVM can lift the chunk body into SIMD lanes), with one early-exit
+/// check per chunk so a clause that dies in its first words still stops
+/// after at most 4 of them.
+///
+/// Slices may differ in length; the comparison covers the shorter prefix
+/// (callers pass equal-length slices; the zip keeps the contract of the
+/// scalar loop this replaced).
+#[inline]
+pub fn is_subset(sub: &[u64], sup: &[u64]) -> bool {
+    const LANES: usize = 4;
+    let n = sub.len().min(sup.len());
+    let (sub, sup) = (&sub[..n], &sup[..n]);
+    let mut chunks_a = sub.chunks_exact(LANES);
+    let mut chunks_b = sup.chunks_exact(LANES);
+    for (a, b) in (&mut chunks_a).zip(&mut chunks_b) {
+        let viol = (a[0] & !b[0]) | (a[1] & !b[1]) | (a[2] & !b[2]) | (a[3] & !b[3]);
+        if viol != 0 {
+            return false;
+        }
+    }
+    let mut viol = 0u64;
+    for (&a, &b) in chunks_a.remainder().iter().zip(chunks_b.remainder()) {
+        viol |= a & !b;
+    }
+    viol == 0
+}
+
 /// Copy the low `n_bits` of `src` into `dst` starting at bit offset
 /// `dst_off`, OR-ing into whatever is already there (callers start from
 /// zeroed destinations). Bits of `src` beyond `n_bits` are ignored.
@@ -320,6 +352,38 @@ mod tests {
         v.set(63, false);
         assert!(!v.get(63));
         assert_eq!(v.count_ones(), 3);
+    }
+
+    #[test]
+    fn is_subset_matches_bitwise_definition() {
+        let mut rng = SplitMix64::new(41);
+        // Lengths straddling the 4-word chunk boundary: remainder of 0–3
+        // words, plus the empty slice (vacuously a subset).
+        for words in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 12, 13] {
+            for _ in 0..50 {
+                let sup: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+                // Derive `sub` from `sup` so true subsets actually occur.
+                let sub: Vec<u64> = sup
+                    .iter()
+                    .map(|&w| {
+                        let mask = rng.next_u64();
+                        if rng.next_bool(0.5) {
+                            w & mask // subset of this word
+                        } else {
+                            mask // arbitrary
+                        }
+                    })
+                    .collect();
+                let expect = sub.iter().zip(&sup).all(|(&a, &b)| a & !b == 0);
+                assert_eq!(is_subset(&sub, &sup), expect, "words={words}");
+            }
+        }
+        assert!(is_subset(&[], &[]));
+        assert!(is_subset(&[0, 0, 0, 0, 0], &[1, 2, 3, 4, 5]));
+        assert!(!is_subset(&[0, 0, 0, 0, 1], &[u64::MAX, 2, 3, 4, 0]));
+        // A violation inside a full chunk and inside the remainder.
+        assert!(!is_subset(&[0, 4, 0, 0], &[u64::MAX, 3, u64::MAX, u64::MAX]));
+        assert!(!is_subset(&[0, 0, 0, 0, 0, 4], &[0, 0, 0, 0, 0, 3]));
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod model;
 
 pub use bits::{BitVec64, PackedBatch};
 pub use datasets::TestSet;
-pub use model::{TmModel, WorkloadSpec};
+pub use model::{ClauseIndexStats, ForwardScratch, TmModel, WorkloadSpec};
 
 use std::path::{Path, PathBuf};
 

@@ -12,14 +12,28 @@
 //! `popcount(fired & pos) − popcount(fired & neg)` over precomputed
 //! class-major polarity masks — the software analogue of the paper's
 //! time-domain popcount voter.
+//!
+//! On top of that sits the **clause-indexed hot loop** (§Data plane,
+//! "The hot loop"): every clause is indexed at construction by one of
+//! its included literals (the one with the lowest set-probability under
+//! the provided or uniform prior — see [`TmModel::reindex_with_stats`]),
+//! clauses sharing an index literal form a bucket, and a sample only
+//! evaluates the buckets whose index literal it sets — a clause whose
+//! index literal reads 0 cannot fire, so whole buckets are skipped
+//! without touching their include words (Gorji et al., arXiv
+//! 2004.03188). Clauses with no usable index literal land in a fallback
+//! bucket that is scanned for every sample, so the index is
+//! correctness-preserving by construction: every path below is bit-exact
+//! against [`TmModel::forward_reference`].
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{ensure, Result};
 
 use crate::util::json;
 
-use super::bits::{copy_bits, tail_mask, words_for, BitVec64, PackedBatch, WORD_BITS};
+use super::bits::{copy_bits, is_subset, tail_mask, words_for, BitVec64, PackedBatch, WORD_BITS};
 use super::parse_bits;
 
 /// Output of one batched TM forward pass (mirrors `model.tm_forward` on the
@@ -118,13 +132,25 @@ pub struct TmModel {
     pub nonempty: Vec<bool>,
     /// Training-time test accuracy (%).
     pub accuracy: f64,
-    /// Bit-packed include masks (64 literals per word, same clause order) —
-    /// the clause-evaluation hot path works word-wise (§Perf L3: ~50×
-    /// over the bool-wise loop on MNIST-scale literal counts).
-    packed_include: Vec<Vec<u64>>,
+    /// Bit-packed include masks in one flat, cache-contiguous arena:
+    /// `include_words` words per clause, same class-major clause order —
+    /// the clause-evaluation hot path reads word rows out of this single
+    /// allocation (§Perf L3: ~50× over the bool-wise loop at MNIST-scale
+    /// literal counts, with no per-clause `Vec` indirection).
+    packed_include: Vec<u64>,
+    /// Words per clause row of `packed_include` (`words_for(2 * n_features)`).
+    include_words: usize,
     /// Per-class polarity masks over the packed fired-clause words
     /// (§Perf L3: class sums by word-level popcount, no per-clause loop).
     class_masks: Vec<ClassMasks>,
+    /// The clause skip index (see the module docs and
+    /// [`TmModel::fired_words_into_indexed`]).
+    clause_index: ClauseIndex,
+    /// `class_ub_suffix[k]` = the largest sum any class `≥ k` can reach
+    /// (its count of positive-polarity non-empty clauses; sums only lose
+    /// votes from there), with an `i32::MIN` sentinel at `n_classes`.
+    /// Drives the exact early-exit argmax of [`TmModel::predict_packed`].
+    class_ub_suffix: Vec<i32>,
 }
 
 /// Polarity masks for one class over the flat class-major fired bit
@@ -137,6 +163,154 @@ struct ClassMasks {
     start: usize,
     pos: Vec<u64>,
     neg: Vec<u64>,
+}
+
+/// One bucket of the clause index: the clauses (scan slots
+/// `start..end`) whose chosen index literal is `lit`. When a sample's
+/// literal `lit` reads 0, none of them can fire and the whole bucket is
+/// skipped without touching its include words.
+#[derive(Debug, Clone)]
+struct IndexBucket {
+    lit: u32,
+    start: u32,
+    end: u32,
+}
+
+/// The clause skip index, built once at model construction.
+///
+/// Scan slots are laid out fallback-first, then bucket-major, and
+/// `arena` holds a *permuted copy* of the include rows in that same
+/// order — so scanning a bucket walks memory sequentially even though
+/// its clause ids are scattered across classes. `clause_of[slot]` maps a
+/// scan slot back to the flat class-major clause id for the fired-bit
+/// write. Clauses whose stored `nonempty` flag is false never fire and
+/// are omitted entirely (their fired bits stay 0); non-empty clauses
+/// with no included literal (the flag is authoritative — such a clause
+/// fires on *every* sample) go to the fallback range `0..n_fallback`,
+/// which is scanned unconditionally.
+#[derive(Debug, Clone, Default)]
+struct ClauseIndex {
+    stride: usize,
+    arena: Vec<u64>,
+    clause_of: Vec<u32>,
+    n_fallback: usize,
+    buckets: Vec<IndexBucket>,
+    /// Total clauses in skippable buckets (the skip-rate denominator's
+    /// indexable part).
+    n_skippable: usize,
+}
+
+/// Observable shape of a model's clause index (docs/benches/tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClauseIndexStats {
+    /// Clauses in skippable buckets.
+    pub indexed: usize,
+    /// Clauses scanned on every sample (non-empty flag with no included
+    /// literal — the correctness fallback).
+    pub fallback: usize,
+    /// Distinct index literals in use.
+    pub buckets: usize,
+}
+
+fn build_clause_index(
+    packed_include: &[u64],
+    stride: usize,
+    nonempty: &[bool],
+    lit_one_prob: Option<&[f64]>,
+) -> ClauseIndex {
+    let mut fallback: Vec<u32> = Vec::new();
+    let mut by_lit: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+    for (c, &live) in nonempty.iter().enumerate() {
+        if !live {
+            continue; // never fires; needs no scan slot at all
+        }
+        let row = &packed_include[c * stride..(c + 1) * stride];
+        // Pick the included literal with the lowest set-probability
+        // (uniform prior without stats → the lowest literal index, via
+        // the strict `<`). Rarely-set index literals skip their bucket
+        // on most samples.
+        let mut best: Option<(f64, u32)> = None;
+        for (w, &word) in row.iter().enumerate() {
+            let mut word = word;
+            while word != 0 {
+                let lit = w * WORD_BITS + word.trailing_zeros() as usize;
+                let p = lit_one_prob.map_or(0.5, |ps| ps[lit]);
+                if best.is_none_or(|(bp, _)| p < bp) {
+                    best = Some((p, lit as u32));
+                }
+                word &= word - 1;
+            }
+        }
+        match best {
+            Some((_, lit)) => by_lit.entry(lit).or_default().push(c as u32),
+            None => fallback.push(c as u32),
+        }
+    }
+    let n_fallback = fallback.len();
+    let mut order = fallback;
+    let mut buckets = Vec::with_capacity(by_lit.len());
+    let mut n_skippable = 0usize;
+    for (lit, clauses) in by_lit {
+        let start = order.len() as u32;
+        n_skippable += clauses.len();
+        order.extend(clauses);
+        buckets.push(IndexBucket { lit, start, end: order.len() as u32 });
+    }
+    let mut arena = vec![0u64; order.len() * stride];
+    for (slot, &c) in order.iter().enumerate() {
+        let c = c as usize;
+        arena[slot * stride..(slot + 1) * stride]
+            .copy_from_slice(&packed_include[c * stride..(c + 1) * stride]);
+    }
+    ClauseIndex { stride, arena, clause_of: order, n_fallback, buckets, n_skippable }
+}
+
+/// Reusable buffers + skip telemetry for the batched hot loop.
+///
+/// [`TmModel::forward_packed_with`] and [`TmModel::predict_packed_with`]
+/// take one of these so the per-sample body allocates nothing *and* the
+/// per-batch setup reuses prior capacity — workers hold one scratch per
+/// backend for the lifetime of the pool (see `runtime::NativeBackend`).
+/// The counters accumulate across calls; snapshot or [`ForwardScratch::reset`]
+/// at whatever granularity telemetry wants.
+#[derive(Debug, Default)]
+pub struct ForwardScratch {
+    lits: Vec<u64>,
+    negated: Vec<u64>,
+    fired: Vec<u64>,
+    sums: Vec<i32>,
+    /// Rows evaluated through this scratch.
+    pub rows: u64,
+    /// Clauses the index skipped without evaluation.
+    pub clauses_skipped: u64,
+    /// Clauses an unindexed scan would have evaluated (`rows × c_total`).
+    pub clauses_eligible: u64,
+    /// Class sums [`TmModel::predict_packed_with`] never computed because
+    /// the running leader was already uncatchable.
+    pub classes_pruned: u64,
+}
+
+impl ForwardScratch {
+    pub fn new() -> ForwardScratch {
+        ForwardScratch::default()
+    }
+
+    /// Fraction of eligible clause evaluations the index skipped.
+    pub fn skip_rate(&self) -> f64 {
+        if self.clauses_eligible == 0 {
+            0.0
+        } else {
+            self.clauses_skipped as f64 / self.clauses_eligible as f64
+        }
+    }
+
+    /// Zero the telemetry counters (buffers keep their capacity).
+    pub fn reset(&mut self) {
+        self.rows = 0;
+        self.clauses_skipped = 0;
+        self.clauses_eligible = 0;
+        self.classes_pruned = 0;
+    }
 }
 
 /// A synthetic workload description used by the scaling sweeps (Figs.
@@ -192,6 +366,20 @@ fn build_class_masks(
         .collect()
 }
 
+/// Suffix maxima of the per-class sum upper bounds. A class's sum can
+/// never exceed its count of positive-polarity (non-empty) clauses —
+/// exactly `popcount` of its `pos` masks — so once a running argmax
+/// leader meets `class_ub_suffix[k]`, no class `≥ k` can strictly beat
+/// it and ties already resolve to the lower index.
+fn build_class_ub_suffix(class_masks: &[ClassMasks], n_classes: usize) -> Vec<i32> {
+    let mut suffix = vec![i32::MIN; n_classes + 1];
+    for k in (0..n_classes).rev() {
+        let ub: i32 = class_masks[k].pos.iter().map(|w| w.count_ones() as i32).sum();
+        suffix[k] = ub.max(suffix[k + 1]);
+    }
+    suffix
+}
+
 impl TmModel {
     /// Construct from parts (computes the packed representation).
     pub fn assemble(
@@ -204,8 +392,15 @@ impl TmModel {
         nonempty: Vec<bool>,
         accuracy: f64,
     ) -> TmModel {
-        let packed_include = include.iter().map(|row| pack_bits(row)).collect();
+        let include_words = words_for(2 * n_features);
+        let mut packed_include = vec![0u64; include.len() * include_words];
+        for (c, row) in include.iter().enumerate() {
+            packed_include[c * include_words..(c + 1) * include_words]
+                .copy_from_slice(&pack_bits(row));
+        }
         let class_masks = build_class_masks(n_classes, clauses_per_class, &polarity, &nonempty);
+        let clause_index = build_clause_index(&packed_include, include_words, &nonempty, None);
+        let class_ub_suffix = build_class_ub_suffix(&class_masks, n_classes);
         TmModel {
             name,
             n_classes,
@@ -216,7 +411,46 @@ impl TmModel {
             nonempty,
             accuracy,
             packed_include,
+            include_words,
             class_masks,
+            clause_index,
+            class_ub_suffix,
+        }
+    }
+
+    /// Rebuild the clause index against an empirical literal
+    /// distribution: `lit_one_prob[l]` is the probability literal `l`
+    /// (layout `[x, ~x]`, so `2 * n_features` entries) reads 1 on a
+    /// sample. Each clause re-picks the *rarest* of its included
+    /// literals as its index literal, which maximizes the expected
+    /// bucket skip rate; results stay bit-exact (the index only decides
+    /// what gets *scanned*, never what fires). Without this call the
+    /// construction-time index uses a uniform prior (lowest included
+    /// literal).
+    pub fn reindex_with_stats(&mut self, lit_one_prob: &[f64]) -> Result<()> {
+        ensure!(
+            lit_one_prob.len() == 2 * self.n_features,
+            "literal stats length {} != {} literals (2 × {} features)",
+            lit_one_prob.len(),
+            2 * self.n_features,
+            self.n_features
+        );
+        self.clause_index = build_clause_index(
+            &self.packed_include,
+            self.include_words,
+            &self.nonempty,
+            Some(lit_one_prob),
+        );
+        Ok(())
+    }
+
+    /// Shape of the clause index (skippable / always-scanned / bucket
+    /// counts) — telemetry for benches and the skip-rate gate in CI.
+    pub fn index_stats(&self) -> ClauseIndexStats {
+        ClauseIndexStats {
+            indexed: self.clause_index.n_skippable,
+            fallback: self.clause_index.n_fallback,
+            buckets: self.clause_index.buckets.len(),
         }
     }
 
@@ -261,8 +495,7 @@ impl TmModel {
         let include: Vec<Vec<bool>> = (0..c_total)
             .map(|_| (0..2 * n_features).map(|_| rng.next_bool(density)).collect())
             .collect();
-        let polarity: Vec<i8> =
-            (0..c_total).map(|c| if c % 2 == 0 { 1 } else { -1 }).collect();
+        let polarity: Vec<i8> = (0..c_total).map(|c| if c % 2 == 0 { 1 } else { -1 }).collect();
         TmModel::assemble_derived(
             name.to_string(),
             n_classes,
@@ -399,8 +632,9 @@ impl TmModel {
     /// Allocation-free core of [`TmModel::packed_literals`]: writes the
     /// literal words into `out` (length `words_for(2 * n_features)`,
     /// overwritten) using `negated` as reusable scratch — the batched
-    /// forward pass hoists both buffers out of its row loop.
-    fn packed_literals_into(&self, x_words: &[u64], negated: &mut Vec<u64>, out: &mut [u64]) {
+    /// forward pass hoists both buffers out of its row loop (public so
+    /// the hotpath bench can reproduce the production loop shape).
+    pub fn packed_literals_into(&self, x_words: &[u64], negated: &mut Vec<u64>, out: &mut [u64]) {
         let f = self.n_features;
         debug_assert_eq!(x_words.len(), words_for(f));
         debug_assert_eq!(out.len(), words_for(2 * f));
@@ -422,16 +656,33 @@ impl TmModel {
         self.clause_fires_packed(clause, lits.words())
     }
 
+    /// Packed include-mask words of one clause (a row of the flat arena).
+    #[inline]
+    fn include_row(&self, clause: usize) -> &[u64] {
+        &self.packed_include[clause * self.include_words..(clause + 1) * self.include_words]
+    }
+
     /// Word-wise clause evaluation: fires iff the clause is non-empty and
     /// every included literal is 1, i.e. `include & !literals == 0` in
-    /// every word. This is the single `nonempty` checkpoint on the
-    /// evaluation path.
+    /// every word — evaluated through the chunked 4×`u64`-lane
+    /// [`super::bits::is_subset`]. This is the single `nonempty`
+    /// checkpoint on the evaluation path.
     #[inline]
     pub fn clause_fires_packed(&self, clause: usize, lit_words: &[u64]) -> bool {
+        self.nonempty[clause] && is_subset(self.include_row(clause), lit_words)
+    }
+
+    /// Word-serial scalar clause evaluation — the hot loop this crate
+    /// shipped before the chunked/indexed rework, kept public as the
+    /// differential baseline for `benches/hotpath_forward.rs` and the
+    /// property suites. Semantically identical to
+    /// [`TmModel::clause_fires_packed`].
+    #[inline]
+    pub fn clause_fires_scalar(&self, clause: usize, lit_words: &[u64]) -> bool {
         if !self.nonempty[clause] {
             return false;
         }
-        self.packed_include[clause]
+        self.include_row(clause)
             .iter()
             .zip(lit_words)
             .all(|(&inc, &lit)| inc & !lit == 0)
@@ -439,33 +690,117 @@ impl TmModel {
 
     /// Fired-clause words for one pre-packed literal vector: one bit per
     /// clause, class-major, `words_for(c_total)` words. `out` is
-    /// overwritten.
-    fn fired_words_into(&self, lit_words: &[u64], out: &mut [u64]) {
+    /// overwritten. Unindexed full scan; fired bits accumulate in a
+    /// local word flushed once per 64 clauses, so the output slice is
+    /// stored to once per word instead of once per fired clause.
+    pub fn fired_words_into(&self, lit_words: &[u64], out: &mut [u64]) {
+        debug_assert_eq!(out.len(), words_for(self.c_total()));
+        let c_total = self.c_total();
+        let mut word = 0u64;
+        let mut w = 0usize;
+        for c in 0..c_total {
+            if self.clause_fires_packed(c, lit_words) {
+                word |= 1u64 << (c % WORD_BITS);
+            }
+            if c % WORD_BITS == WORD_BITS - 1 {
+                out[w] = word;
+                word = 0;
+                w += 1;
+            }
+        }
+        if c_total % WORD_BITS != 0 {
+            out[w] = word;
+        }
+    }
+
+    /// [`TmModel::fired_words_into`] with the pre-rework scalar clause
+    /// loop and bit-at-a-time stores — the seed `forward_packed` inner
+    /// shape, kept as the timing baseline (`benches/hotpath_forward.rs`).
+    pub fn fired_words_into_scalar(&self, lit_words: &[u64], out: &mut [u64]) {
         debug_assert_eq!(out.len(), words_for(self.c_total()));
         out.fill(0);
         for c in 0..self.c_total() {
-            if self.clause_fires_packed(c, lit_words) {
+            if self.clause_fires_scalar(c, lit_words) {
                 out[c / WORD_BITS] |= 1u64 << (c % WORD_BITS);
             }
         }
     }
 
-    /// Class sums from packed fired-clause words via the polarity masks:
-    /// `popcount(fired & pos) − popcount(fired & neg)` per class — the
-    /// software analogue of the paper's time-domain popcount voter.
-    pub fn class_sums_from_fired(&self, fired_words: &[u64]) -> Vec<i32> {
-        debug_assert_eq!(fired_words.len(), words_for(self.c_total()));
-        self.class_masks
-            .iter()
-            .map(|m| {
-                let mut s = 0i32;
-                for (w, (&p, &n)) in m.pos.iter().zip(&m.neg).enumerate() {
-                    let f = fired_words[m.start + w];
-                    s += (f & p).count_ones() as i32 - (f & n).count_ones() as i32;
+    /// One scan slot of the clause index: evaluate its (arena-local)
+    /// include row and set the original clause's fired bit.
+    #[inline]
+    fn scan_slot(&self, slot: usize, lit_words: &[u64], out: &mut [u64]) {
+        let idx = &self.clause_index;
+        let inc = &idx.arena[slot * idx.stride..(slot + 1) * idx.stride];
+        if is_subset(inc, lit_words) {
+            let c = idx.clause_of[slot] as usize;
+            out[c / WORD_BITS] |= 1u64 << (c % WORD_BITS);
+        }
+    }
+
+    /// Clause-indexed fired-word computation — the production hot path.
+    /// Scans the fallback bucket, then only the buckets whose index
+    /// literal the sample sets; every other bucket is skipped whole (its
+    /// clauses cannot fire — their index literal reads 0). Bit-exact
+    /// with [`TmModel::fired_words_into`]; returns the number of clauses
+    /// skipped without evaluation (the skip-rate numerator).
+    pub fn fired_words_into_indexed(&self, lit_words: &[u64], out: &mut [u64]) -> usize {
+        debug_assert_eq!(out.len(), words_for(self.c_total()));
+        out.fill(0);
+        let idx = &self.clause_index;
+        for slot in 0..idx.n_fallback {
+            self.scan_slot(slot, lit_words, out);
+        }
+        let mut skipped = 0usize;
+        for b in &idx.buckets {
+            let lit = b.lit as usize;
+            if (lit_words[lit / WORD_BITS] >> (lit % WORD_BITS)) & 1 == 1 {
+                for slot in b.start as usize..b.end as usize {
+                    self.scan_slot(slot, lit_words, out);
                 }
-                s
-            })
-            .collect()
+            } else {
+                skipped += (b.end - b.start) as usize;
+            }
+        }
+        skipped
+    }
+
+    /// Class sums from packed fired-clause words into caller scratch:
+    /// `popcount(fired & pos) − popcount(fired & neg)` per class — the
+    /// software analogue of the paper's time-domain popcount voter. Each
+    /// class's mask slices are resolved once, outside its word loop;
+    /// `out` (length `n_classes`) is overwritten.
+    pub fn class_sums_into(&self, fired_words: &[u64], out: &mut [i32]) {
+        debug_assert_eq!(fired_words.len(), words_for(self.c_total()));
+        debug_assert_eq!(out.len(), self.n_classes);
+        for (k, m) in self.class_masks.iter().enumerate() {
+            let mut s = 0i32;
+            for (w, (&p, &n)) in m.pos.iter().zip(&m.neg).enumerate() {
+                let f = fired_words[m.start + w];
+                s += (f & p).count_ones() as i32 - (f & n).count_ones() as i32;
+            }
+            out[k] = s;
+        }
+    }
+
+    /// Allocating convenience over [`TmModel::class_sums_into`].
+    pub fn class_sums_from_fired(&self, fired_words: &[u64]) -> Vec<i32> {
+        let mut out = vec![0i32; self.n_classes];
+        self.class_sums_into(fired_words, &mut out);
+        out
+    }
+
+    /// One class's signed sum (the early-exit argmax computes classes
+    /// lazily, so this exists separately from the batch form).
+    #[inline]
+    fn class_sum_one(&self, k: usize, fired_words: &[u64]) -> i32 {
+        let m = &self.class_masks[k];
+        let mut s = 0i32;
+        for (w, (&p, &n)) in m.pos.iter().zip(&m.neg).enumerate() {
+            let f = fired_words[m.start + w];
+            s += (f & p).count_ones() as i32 - (f & n).count_ones() as i32;
+        }
+        s
     }
 
     /// Per-clause signed summation over packed fired words — the pre-
@@ -485,8 +820,24 @@ impl TmModel {
     /// Batched packed forward pass — the request path. Consumes packed
     /// feature rows, emits packed fired words per sample, class sums via
     /// the polarity-mask popcount, and argmax predictions (ties → lowest
-    /// index, matching `jnp.argmax`).
+    /// index, matching `jnp.argmax`). Allocates a fresh scratch; callers
+    /// on the serving path hold a [`ForwardScratch`] and use
+    /// [`TmModel::forward_packed_with`] instead.
     pub fn forward_packed(&self, batch: &PackedBatch) -> Result<ForwardOutput> {
+        self.forward_packed_with(batch, &mut ForwardScratch::new())
+    }
+
+    /// [`TmModel::forward_packed`] with caller-held scratch: the
+    /// per-sample body allocates nothing, literal/fired/sums buffers are
+    /// reused across batches, and clause evaluation runs through the
+    /// clause-indexed scan of [`TmModel::fired_words_into_indexed`]
+    /// (bit-exact with the full scan — the index only decides what gets
+    /// *scanned*). Skip telemetry accumulates on `scratch`.
+    pub fn forward_packed_with(
+        &self,
+        batch: &PackedBatch,
+        scratch: &mut ForwardScratch,
+    ) -> Result<ForwardOutput> {
         ensure!(
             batch.is_empty() || batch.bits() == self.n_features,
             "batch feature width {} != model features {}",
@@ -494,19 +845,20 @@ impl TmModel {
             self.n_features
         );
         let k = self.n_classes;
-        let mut out = ForwardOutput::empty(k, self.c_total());
+        let c_total = self.c_total();
+        let mut out = ForwardOutput::empty(k, c_total);
         out.batch = batch.rows();
         out.sums.reserve(batch.rows() * k);
         out.pred.reserve(batch.rows());
-        // All scratch is hoisted out of the row loop: the per-sample body
-        // allocates nothing (§Perf L3).
-        let mut lits = vec![0u64; words_for(2 * self.n_features)];
-        let mut negated = Vec::with_capacity(words_for(self.n_features));
-        let mut fired = vec![0u64; words_for(self.c_total())];
+        scratch.lits.resize(words_for(2 * self.n_features), 0);
+        scratch.fired.resize(words_for(c_total), 0);
+        scratch.sums.resize(k, 0);
         for r in 0..batch.rows() {
-            self.packed_literals_into(batch.row(r), &mut negated, &mut lits);
-            self.fired_words_into(&lits, &mut fired);
-            let sums = self.class_sums_from_fired(&fired);
+            // Field-by-field borrows keep the scratch buffers disjoint.
+            let ForwardScratch { lits, negated, fired, sums, .. } = scratch;
+            self.packed_literals_into(batch.row(r), negated, lits);
+            let skipped = self.fired_words_into_indexed(lits, fired);
+            self.class_sums_into(fired, sums);
             let mut best = 0usize;
             for (ki, &s) in sums.iter().enumerate() {
                 // Ties resolve to the lowest class index (jnp.argmax).
@@ -514,11 +866,75 @@ impl TmModel {
                     best = ki;
                 }
             }
-            out.fired.push_words(&fired);
-            out.sums.extend_from_slice(&sums);
+            out.fired.push_words(fired);
+            out.sums.extend_from_slice(sums);
             out.pred.push(best as i32);
+            scratch.rows += 1;
+            scratch.clauses_skipped += skipped as u64;
+            scratch.clauses_eligible += c_total as u64;
         }
         Ok(out)
+    }
+
+    /// Argmax-only batched forward pass with the exact class-sum early
+    /// exit: classes are scanned in index order and the scan stops as
+    /// soon as the running leader meets `class_ub_suffix[k]` — no
+    /// remaining class can strictly beat it, and a tie would resolve to
+    /// the (lower) leader index anyway, so predictions are identical to
+    /// [`TmModel::forward_packed`]'s. For callers that consume only
+    /// `pred` (no sums, no fired bits).
+    pub fn predict_packed(&self, batch: &PackedBatch) -> Result<Vec<i32>> {
+        self.predict_packed_with(batch, &mut ForwardScratch::new())
+    }
+
+    /// [`TmModel::predict_packed`] with caller-held scratch; pruned-class
+    /// telemetry accumulates in `scratch.classes_pruned`.
+    pub fn predict_packed_with(
+        &self,
+        batch: &PackedBatch,
+        scratch: &mut ForwardScratch,
+    ) -> Result<Vec<i32>> {
+        ensure!(
+            batch.is_empty() || batch.bits() == self.n_features,
+            "batch feature width {} != model features {}",
+            batch.bits(),
+            self.n_features
+        );
+        let c_total = self.c_total();
+        scratch.lits.resize(words_for(2 * self.n_features), 0);
+        scratch.fired.resize(words_for(c_total), 0);
+        let mut pred = Vec::with_capacity(batch.rows());
+        for r in 0..batch.rows() {
+            let ForwardScratch { lits, negated, fired, .. } = scratch;
+            self.packed_literals_into(batch.row(r), negated, lits);
+            let skipped = self.fired_words_into_indexed(lits, fired);
+            let mut pruned = 0u64;
+            if self.n_classes == 0 {
+                pred.push(0);
+            } else {
+                let mut best = 0usize;
+                let mut best_sum = self.class_sum_one(0, fired);
+                let mut k = 1;
+                while k < self.n_classes {
+                    if best_sum >= self.class_ub_suffix[k] {
+                        pruned = (self.n_classes - k) as u64;
+                        break;
+                    }
+                    let s = self.class_sum_one(k, fired);
+                    if s > best_sum {
+                        best = k;
+                        best_sum = s;
+                    }
+                    k += 1;
+                }
+                pred.push(best as i32);
+            }
+            scratch.classes_pruned += pruned;
+            scratch.rows += 1;
+            scratch.clauses_skipped += skipped as u64;
+            scratch.clauses_eligible += c_total as u64;
+        }
+        Ok(pred)
     }
 
     /// Clause outputs for one sample, grouped per class — the PDL select
@@ -788,5 +1204,124 @@ pub(crate) mod tests {
         assert!(m.forward_packed(&batch).is_err());
         // Empty batches pass regardless of their (zero) width.
         assert_eq!(m.forward_packed(&PackedBatch::new(0)).unwrap().batch, 0);
+    }
+
+    #[test]
+    fn index_shape_on_toy() {
+        // Three live clauses each with one include → three one-clause
+        // buckets; the dead clause (nonempty=false) gets no slot at all.
+        let stats = toy().index_stats();
+        assert_eq!(stats, ClauseIndexStats { indexed: 3, fallback: 0, buckets: 3 });
+    }
+
+    #[test]
+    fn vacuous_nonempty_clause_lands_in_fallback_and_always_fires() {
+        // The stored nonempty flag is authoritative: a flagged clause
+        // with an all-false include mask fires on EVERY sample (vacuous
+        // subset), so it must be scanned unconditionally — the fallback
+        // bucket — and never be skipped by the index.
+        let m = TmModel::assemble(
+            "vacuous".into(),
+            1,
+            2,
+            2,
+            vec![vec![false; 4], vec![true, false, false, false]],
+            vec![1, -1],
+            vec![true, true], // clause 0 vacuous-but-live
+            0.0,
+        );
+        let stats = m.index_stats();
+        assert_eq!(stats.fallback, 1);
+        assert_eq!(stats.indexed, 1);
+        for x in [[false, false], [true, true], [false, true]] {
+            let (fired_ref, sums_ref, _) = m.forward_reference(&x);
+            assert!(fired_ref[0], "vacuous clause fires on {x:?}");
+            let out = m.forward_packed(&PackedBatch::from_rows(&[x.to_vec()]).unwrap()).unwrap();
+            assert_eq!(out.fired_row(0), fired_ref, "{x:?}");
+            assert_eq!(out.sums_row(0), &sums_ref[..], "{x:?}");
+        }
+    }
+
+    #[test]
+    fn indexed_scan_matches_full_scan_and_scalar() {
+        let m = TmModel::synthetic("idx", 3, 25, 40, 0.1, 11);
+        let mut rng = crate::util::SplitMix64::new(23);
+        let n_words = words_for(m.c_total());
+        for _ in 0..32 {
+            let x: Vec<bool> = (0..40).map(|_| rng.next_bool(0.5)).collect();
+            let lits = m.packed_literals(BitVec64::from_bools(&x).words());
+            let (mut full, mut scalar, mut indexed) =
+                (vec![0u64; n_words], vec![0u64; n_words], vec![0u64; n_words]);
+            m.fired_words_into(lits.words(), &mut full);
+            m.fired_words_into_scalar(lits.words(), &mut scalar);
+            m.fired_words_into_indexed(lits.words(), &mut indexed);
+            assert_eq!(full, scalar);
+            assert_eq!(full, indexed);
+        }
+    }
+
+    #[test]
+    fn predict_packed_agrees_with_forward_packed_including_ties() {
+        // Duplicate every class's clauses so cross-class ties are common;
+        // both paths must resolve them to the lowest index.
+        let base = TmModel::synthetic("tie", 2, 8, 16, 0.15, 31);
+        let include: Vec<Vec<bool>> =
+            base.include.iter().chain(base.include.iter()).cloned().collect();
+        let polarity: Vec<i8> = base.polarity.iter().chain(base.polarity.iter()).copied().collect();
+        let m = TmModel::assemble_derived("tie2".into(), 4, 16, 8, include, polarity, 0.0);
+        let mut rng = crate::util::SplitMix64::new(5);
+        let rows: Vec<Vec<bool>> =
+            (0..64).map(|_| (0..16).map(|_| rng.next_bool(0.5)).collect()).collect();
+        let batch = PackedBatch::from_rows(&rows).unwrap();
+        let out = m.forward_packed(&batch).unwrap();
+        let mut scratch = ForwardScratch::new();
+        assert_eq!(m.predict_packed_with(&batch, &mut scratch).unwrap(), out.pred);
+        // The duplicated halves tie on every row, so the early exit can
+        // never prune past a strictly-better later class by accident;
+        // check at least one genuine tie occurred.
+        assert!(
+            (0..out.batch).any(|r| {
+                let s = out.sums_row(r);
+                s.iter().filter(|&&v| v == *s.iter().max().unwrap()).count() > 1
+            }),
+            "tie construction failed to produce ties"
+        );
+    }
+
+    #[test]
+    fn reindex_with_stats_is_bit_exact_and_validates_length() {
+        let mut m = TmModel::synthetic("restat", 2, 10, 12, 0.3, 47);
+        let batch = PackedBatch::from_rows(
+            &(0..16)
+                .map(|i| (0..12).map(|j| (i + j) % 3 == 0).collect::<Vec<bool>>())
+                .collect::<Vec<_>>(),
+        )
+        .unwrap();
+        let before = m.forward_packed(&batch).unwrap();
+        assert!(m.reindex_with_stats(&[0.5; 7]).is_err(), "wrong stats length");
+        // Skewed stats: literal 0 almost always set, the rest rare.
+        let mut probs = vec![0.05; 24];
+        probs[0] = 0.99;
+        m.reindex_with_stats(&probs).unwrap();
+        let after = m.forward_packed(&batch).unwrap();
+        assert_eq!(before, after, "reindexing must never change results");
+    }
+
+    #[test]
+    fn scratch_telemetry_accumulates() {
+        // Sparse-ish model + all-zero sample: every positive-x index
+        // literal reads 0, so the index must skip at least one bucket.
+        let m = TmModel::synthetic("telemetry", 2, 20, 32, 0.2, 3);
+        let batch = PackedBatch::from_rows(&[vec![false; 32], vec![true; 32]]).unwrap();
+        let mut scratch = ForwardScratch::new();
+        let out = m.forward_packed_with(&batch, &mut scratch).unwrap();
+        assert_eq!(out.batch, 2);
+        assert_eq!(scratch.rows, 2);
+        assert_eq!(scratch.clauses_eligible, 2 * m.c_total() as u64);
+        assert!(scratch.clauses_skipped > 0, "index skipped nothing");
+        assert!(scratch.skip_rate() > 0.0 && scratch.skip_rate() <= 1.0);
+        scratch.reset();
+        assert_eq!(scratch.rows, 0);
+        assert_eq!(scratch.skip_rate(), 0.0);
     }
 }

@@ -12,6 +12,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json;
+
 /// Measure `f` repeatedly; returns per-iteration timings in µs.
 pub fn measure(warmup: Duration, budget: Duration, mut f: impl FnMut()) -> Vec<f64> {
     let w0 = Instant::now();
@@ -54,6 +56,26 @@ pub fn throughput(mean_us_per_iter: f64, items_per_iter: usize) -> f64 {
     items_per_iter as f64 / (mean_us_per_iter / 1e6)
 }
 
+/// Rows/second reporting shared by the throughput benches
+/// (`hotpath_forward`, `serving_wire`): one stable printed line per
+/// variant plus the computed rate, so the two JSON artifacts
+/// (`BENCH_hotpath.json`, `BENCH_serving.json`) stay comparable.
+pub fn report_rows_per_s(name: &str, mean_us_per_iter: f64, rows_per_iter: usize) -> f64 {
+    let rate = throughput(mean_us_per_iter, rows_per_iter);
+    println!("bench {name:<44} {rate:>14.0} rows/s  ({rows_per_iter} rows/iter)");
+    rate
+}
+
+/// One throughput variant as a JSON object for the bench artifacts:
+/// `{"mean_us_per_iter": …, "name": …, "rows_per_s": …}`.
+pub fn variant_json(name: &str, mean_us_per_iter: f64, rows_per_s: f64) -> json::Value {
+    json::obj(vec![
+        ("name", json::s(name)),
+        ("mean_us_per_iter", json::num(mean_us_per_iter)),
+        ("rows_per_s", json::num(rows_per_s)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +96,14 @@ mod tests {
     #[test]
     fn throughput_math() {
         assert!((throughput(1000.0, 32) - 32_000.0).abs() < 1e-6);
+        assert!((report_rows_per_s("t", 1000.0, 32) - 32_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn variant_json_shape() {
+        let v = variant_json("indexed_simd", 12.5, 5_120_000.0);
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "indexed_simd");
+        assert_eq!(v.get("rows_per_s").unwrap().as_f64().unwrap(), 5_120_000.0);
+        assert_eq!(v.get("mean_us_per_iter").unwrap().as_f64().unwrap(), 12.5);
     }
 }

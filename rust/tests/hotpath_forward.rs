@@ -1,0 +1,220 @@
+//! Hot-loop property suites: the clause-indexed scan, the chunked full
+//! scan, and the early-exit argmax must all be bit-exact with the naive
+//! bool-wise reference (`TmModel::forward_reference`) — across word-
+//! boundary shapes, degenerate models, and reindexing.
+//!
+//! Shapes deliberately straddle `u64` word edges: feature counts
+//! f ∈ {31, 63, 64, 65} (literal vectors of 62/126/128/130 bits) crossed
+//! with clause totals c_total ∈ {63, 64, 65, 127} (fired words with
+//! partial tails and word-unaligned class boundaries).
+
+use tdpc::tm::{bits, ForwardScratch, PackedBatch, TmModel};
+use tdpc::util::prop;
+
+/// (n_classes, clauses_per_class) pairs hitting the mandated word-edge
+/// clause totals 63 / 64 / 65 / 127.
+const CLAUSE_SHAPES: [(usize, usize); 4] = [(3, 21), (4, 16), (5, 13), (1, 127)];
+const FEATURES: [usize; 4] = [31, 63, 64, 65];
+
+fn random_model_shaped(g: &mut prop::Gen, k: usize, cpc: usize, f: usize, dens: f64) -> TmModel {
+    let c_total = k * cpc;
+    let include: Vec<Vec<bool>> = (0..c_total).map(|_| g.bits(2 * f, dens)).collect();
+    let polarity: Vec<i8> = (0..c_total).map(|_| if g.boolean(0.5) { 1 } else { -1 }).collect();
+    TmModel::assemble_derived("prop".into(), k, f, cpc, include, polarity, 0.0)
+}
+
+/// Every evaluation path vs the reference, on one model + rows: the
+/// scalar scan, the chunked scan, the indexed scan, the batched forward,
+/// and the early-exit argmax.
+fn assert_all_paths_match(model: &TmModel, rows: &[Vec<bool>], ctx: &str) {
+    let batch = PackedBatch::from_rows(rows).unwrap();
+    let mut scratch = ForwardScratch::new();
+    let out = model.forward_packed_with(&batch, &mut scratch).unwrap();
+    let preds = model.predict_packed(&batch).unwrap();
+    let n_words = bits::words_for(model.c_total());
+    let (mut scalar, mut chunked, mut indexed) =
+        (vec![0u64; n_words], vec![0u64; n_words], vec![0u64; n_words]);
+    for (i, row) in rows.iter().enumerate() {
+        let (fired_ref, sums_ref, pred_ref) = model.forward_reference(row);
+        assert_eq!(out.fired_row(i), fired_ref, "{ctx}: fired, row {i}");
+        assert_eq!(out.sums_row(i), &sums_ref[..], "{ctx}: sums, row {i}");
+        assert_eq!(out.pred[i] as usize, pred_ref, "{ctx}: pred, row {i}");
+        assert_eq!(preds[i], out.pred[i], "{ctx}: early-exit pred, row {i}");
+        let lits = model.packed_literals(batch.row(i));
+        model.fired_words_into_scalar(lits.words(), &mut scalar);
+        model.fired_words_into(lits.words(), &mut chunked);
+        model.fired_words_into_indexed(lits.words(), &mut indexed);
+        assert_eq!(scalar, chunked, "{ctx}: scalar vs chunked, row {i}");
+        assert_eq!(scalar, indexed, "{ctx}: scalar vs indexed, row {i}");
+        assert_eq!(out.fired_words_row(i), &scalar[..], "{ctx}: forward fired, row {i}");
+    }
+    assert_eq!(scratch.rows as usize, rows.len(), "{ctx}: scratch row telemetry");
+    assert_eq!(
+        scratch.clauses_eligible as usize,
+        rows.len() * model.c_total(),
+        "{ctx}: scratch eligible telemetry"
+    );
+}
+
+#[test]
+fn prop_all_paths_match_reference_at_word_boundaries() {
+    prop::check("hot-loop paths at word-boundary shapes", 80, |g| {
+        let f = *g.choose(&FEATURES);
+        let &(k, cpc) = g.choose(&CLAUSE_SHAPES);
+        let density = g.float(0.0, 0.4);
+        let model = random_model_shaped(g, k, cpc, f, density);
+        let n_rows = g.int(1, 5) as usize;
+        let rows: Vec<Vec<bool>> = (0..n_rows).map(|_| g.bits(f, 0.5)).collect();
+        assert_all_paths_match(&model, &rows, &format!("k={k} cpc={cpc} f={f}"));
+    });
+}
+
+#[test]
+fn degenerate_all_empty_and_all_include_models() {
+    for &(k, cpc) in &CLAUSE_SHAPES {
+        for &f in &FEATURES {
+            let c_total = k * cpc;
+            // All-empty: every clause is dead (derived nonempty=false),
+            // nothing ever fires, every class sums to 0, pred = 0.
+            let empty = TmModel::assemble_derived(
+                "empty".into(),
+                k,
+                f,
+                cpc,
+                vec![vec![false; 2 * f]; c_total],
+                vec![1; c_total],
+                0.0,
+            );
+            let stats = empty.index_stats();
+            assert_eq!((stats.indexed, stats.fallback), (0, 0), "dead clauses get no slots");
+            // All-include: a clause fires only when every literal is 1 —
+            // impossible for f ≥ 1 (x and ~x can't both be 1).
+            let full = TmModel::assemble_derived(
+                "full".into(),
+                k,
+                f,
+                cpc,
+                vec![vec![true; 2 * f]; c_total],
+                vec![1; c_total],
+                0.0,
+            );
+            assert_eq!(full.index_stats().indexed, c_total);
+            let rows = vec![vec![false; f], vec![true; f]];
+            assert_all_paths_match(&empty, &rows, &format!("all-empty k={k} cpc={cpc} f={f}"));
+            assert_all_paths_match(&full, &rows, &format!("all-include k={k} cpc={cpc} f={f}"));
+            let out = empty.forward_packed(&PackedBatch::from_rows(&rows).unwrap()).unwrap();
+            assert!(out.sums.iter().all(|&s| s == 0));
+            assert!(out.pred.iter().all(|&p| p == 0));
+        }
+    }
+}
+
+#[test]
+fn vacuous_nonempty_flag_is_authoritative_through_every_path() {
+    // Direct `assemble` with a lying-but-authoritative nonempty flag: a
+    // flagged clause with an all-false mask fires on every sample (it
+    // must live in the index's fallback bucket), and an unflagged clause
+    // with a real mask never fires (it gets no scan slot at all).
+    let f = 64usize; // literal vector exactly 2 words
+    let include = vec![
+        vec![false; 2 * f],                                // vacuous, flagged
+        (0..2 * f).map(|i| i == 0).collect::<Vec<bool>>(), // real, flagged
+        (0..2 * f).map(|i| i == 1).collect::<Vec<bool>>(), // real, UNflagged
+        vec![false; 2 * f],                                // dead
+    ];
+    let m = TmModel::assemble(
+        "vacuous".into(),
+        2,
+        f,
+        2,
+        include,
+        vec![1, -1, 1, -1],
+        vec![true, true, false, false],
+        0.0,
+    );
+    let stats = m.index_stats();
+    assert_eq!(stats.fallback, 1, "vacuous clause scanned every sample");
+    assert_eq!(stats.indexed, 1, "only the live masked clause is indexed");
+    let rows = vec![vec![false; f], vec![true; f]];
+    assert_all_paths_match(&m, &rows, "vacuous flags");
+    let out = m.forward_packed(&PackedBatch::from_rows(&rows).unwrap()).unwrap();
+    for r in 0..rows.len() {
+        let fired = out.fired_row(r);
+        assert!(fired[0], "vacuous clause fires on row {r}");
+        assert!(!fired[2], "unflagged clause never fires on row {r}");
+        assert!(!fired[3], "dead clause never fires on row {r}");
+    }
+}
+
+#[test]
+fn prop_predict_packed_agrees_with_full_argmax_1000_cases() {
+    // 1000 random (model, row) pairs; half the cases duplicate the class
+    // block so cross-class ties are guaranteed, pinning the early exit
+    // to the lowest-index tie convention.
+    prop::check("early-exit argmax vs full argmax", 1000, |g| {
+        let f = g.int(1, 40) as usize;
+        let cpc = g.int(1, 10) as usize;
+        let k = g.int(1, 5) as usize;
+        let model = if g.boolean(0.5) {
+            random_model_shaped(g, k, cpc, f, g.float(0.0, 0.4))
+        } else {
+            // Duplicate every class's clauses: class i and class i+k are
+            // identical, so the top sum is always tied across classes.
+            let base = random_model_shaped(g, k, cpc, f, g.float(0.0, 0.4));
+            let include: Vec<Vec<bool>> =
+                base.include.iter().chain(base.include.iter()).cloned().collect();
+            let polarity: Vec<i8> =
+                base.polarity.iter().chain(base.polarity.iter()).copied().collect();
+            TmModel::assemble_derived("tied".into(), 2 * k, f, cpc, include, polarity, 0.0)
+        };
+        let row = g.bits(f, 0.5);
+        let batch = PackedBatch::single(&row);
+        let out = model.forward_packed(&batch).unwrap();
+        let sums = out.sums_row(0);
+        let top = *sums.iter().max().unwrap();
+        let first_top = sums.iter().position(|&s| s == top).unwrap();
+        let pred = model.predict_packed(&batch).unwrap();
+        assert_eq!(pred[0] as usize, first_top, "early exit broke the tie convention");
+        assert_eq!(pred[0], out.pred[0]);
+    });
+}
+
+#[test]
+fn prop_reindexing_with_stats_never_changes_results() {
+    prop::check("reindex_with_stats is bit-exact", 60, |g| {
+        let f = *g.choose(&FEATURES);
+        let &(k, cpc) = g.choose(&CLAUSE_SHAPES);
+        let mut model = random_model_shaped(g, k, cpc, f, g.float(0.05, 0.4));
+        let rows: Vec<Vec<bool>> = (0..4).map(|_| g.bits(f, 0.5)).collect();
+        let batch = PackedBatch::from_rows(&rows).unwrap();
+        let before = model.forward_packed(&batch).unwrap();
+        let probs: Vec<f64> = (0..2 * f).map(|_| g.float(0.0, 1.0)).collect();
+        model.reindex_with_stats(&probs).unwrap();
+        let after = model.forward_packed(&batch).unwrap();
+        assert_eq!(before, after);
+        assert_all_paths_match(&model, &rows, "post-reindex");
+    });
+}
+
+#[test]
+fn scratch_reuse_across_batches_is_equivalent_to_fresh_scratch() {
+    // One long-lived scratch (the worker shape) vs a fresh scratch per
+    // batch, across models of different shapes sharing nothing.
+    let m1 = TmModel::synthetic("reuse1", 3, 21, 31, 0.2, 1);
+    let m2 = TmModel::synthetic("reuse2", 5, 13, 65, 0.1, 2);
+    let mut shared = ForwardScratch::new();
+    let mut rng = tdpc::util::SplitMix64::new(9);
+    for round in 0..6 {
+        let m = if round % 2 == 0 { &m1 } else { &m2 };
+        let rows: Vec<Vec<bool>> = (0..3)
+            .map(|_| (0..m.n_features).map(|_| rng.next_bool(0.5)).collect())
+            .collect();
+        let batch = PackedBatch::from_rows(&rows).unwrap();
+        let reused = m.forward_packed_with(&batch, &mut shared).unwrap();
+        let fresh = m.forward_packed(&batch).unwrap();
+        assert_eq!(reused, fresh, "round {round}");
+        let p_reused = m.predict_packed_with(&batch, &mut shared).unwrap();
+        assert_eq!(p_reused, fresh.pred, "round {round}: predict");
+    }
+    assert_eq!(shared.rows, 6 * 2 * 3, "forward + predict each count 3 rows per round");
+}
