@@ -1,0 +1,218 @@
+//! Clause-sharded forward-pass bench: the scatter/reduce perf story next
+//! to `BENCH_hotpath.json`'s single-scan one.
+//!
+//! For each shard count the batch is cross-checked bit-for-bit against the
+//! unsharded `forward_packed` (merged partials must reproduce sums, fired
+//! bits, and argmax ties exactly) *before* anything is timed, then each
+//! shard's partial pass is timed on its own. A sharded pool runs shards on
+//! parallel workers, so the modeled per-batch latency is the *critical
+//! path* — the slowest shard plus the reduce — not the sum of shard times
+//! (summing would re-serialize the plan and, on the single-core CI box,
+//! report ≤ 1/N efficiency for any N by construction):
+//!
+//! ```text
+//! rows/s(n) = batch / (max over shards of mean partial time + mean merge time)
+//! ```
+//!
+//! The result is written as `BENCH_shard.json` (schema
+//! `tdpc-bench-shard/v1`):
+//!
+//! ```text
+//! {
+//!   "schema": "tdpc-bench-shard/v1",
+//!   "config": { "batch", "clauses_per_class", "density",
+//!               "n_classes", "n_features", "smoke" },
+//!   "cross_check": "pass",
+//!   "variants": [ { "name": "shards_4", "n_shards": 4,
+//!                   "critical_path_us", "merge_us",
+//!                   "mean_us_per_iter", "rows_per_s" }, … ],
+//!   "scaling_efficiency": 0.9   // (rate@4 / rate@1) / 4
+//! }
+//! ```
+//!
+//! Usage: `cargo bench --bench sharded_forward -- [--smoke] [--out PATH]`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tdpc::tm::{merge_partials, ClauseShard, ForwardScratch, PackedBatch, PartialOutput, TmModel};
+use tdpc::util::{benchkit, json, SplitMix64};
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+struct Config {
+    n_classes: usize,
+    clauses_per_class: usize,
+    n_features: usize,
+    density: f64,
+    batch: usize,
+    smoke: bool,
+    warmup: Duration,
+    budget: Duration,
+}
+
+fn config(smoke: bool) -> Config {
+    if smoke {
+        Config {
+            n_classes: 4,
+            clauses_per_class: 40,
+            n_features: 128,
+            density: 0.05,
+            batch: 16,
+            smoke,
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(60),
+        }
+    } else {
+        // Big enough in c_total (4000 clauses) that one shard's slice of
+        // the scan dominates the per-batch fixed costs (literal packing,
+        // merge) — the regime sharding exists for.
+        Config {
+            n_classes: 10,
+            clauses_per_class: 400,
+            n_features: 784,
+            density: 0.05,
+            batch: 64,
+            smoke,
+            warmup: Duration::from_millis(150),
+            budget: Duration::from_millis(600),
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_shard.json".to_string());
+    let cfg = config(smoke);
+
+    let model = Arc::new(TmModel::synthetic(
+        "shard_bench",
+        cfg.n_classes,
+        cfg.clauses_per_class,
+        cfg.n_features,
+        cfg.density,
+        7,
+    ));
+    let mut rng = SplitMix64::new(13);
+    let rows: Vec<Vec<bool>> = (0..cfg.batch)
+        .map(|_| (0..cfg.n_features).map(|_| rng.next_bool(0.5)).collect())
+        .collect();
+    let batch = PackedBatch::from_rows(&rows).unwrap();
+    let full = model.forward_packed(&batch).unwrap();
+
+    // -- bit-exact cross-check (every shard count vs forward_packed) -----
+    // Runs before any timing: a fast wrong shard split must never get a
+    // number. merge_partials re-argmaxes with the same lowest-index tie
+    // rule, so `pred` equality covers tie handling too.
+    for &n_shards in &SHARD_COUNTS {
+        let shards = ClauseShard::split(&model, n_shards).unwrap();
+        let parts: Vec<PartialOutput> =
+            shards.iter().map(|s| s.partial(&batch).unwrap()).collect();
+        let merged = merge_partials(&parts).unwrap();
+        assert_eq!(merged, full, "n_shards={n_shards}: merged != unsharded forward_packed");
+    }
+    println!(
+        "cross-check PASS: merged partials == forward_packed for shards {SHARD_COUNTS:?} \
+         ({} rows)",
+        cfg.batch
+    );
+
+    // -- timed variants ---------------------------------------------------
+    let mut variants: Vec<(usize, f64, f64, f64, f64)> = Vec::new();
+    for &n_shards in &SHARD_COUNTS {
+        let shards = ClauseShard::split(&model, n_shards).unwrap();
+        // Time each shard's partial pass separately (its own scratch and
+        // output, as on a real worker); the critical path is the max.
+        let mut critical_us = 0.0f64;
+        let mut parts = Vec::with_capacity(n_shards);
+        for shard in &shards {
+            let mut scratch = ForwardScratch::new();
+            let mut out = PartialOutput::empty(
+                cfg.n_classes,
+                model.c_total(),
+                shard.index(),
+                n_shards,
+            );
+            let mean = benchkit::bench_with(
+                &format!("shard/{n_shards}way/part{}", shard.index()),
+                cfg.warmup,
+                cfg.budget,
+                || {
+                    shard.partial_class_sums_into(&batch, &mut scratch, &mut out).unwrap();
+                    std::hint::black_box(&out);
+                },
+            );
+            critical_us = critical_us.max(mean);
+            parts.push(out);
+        }
+        let merge_us = benchkit::bench_with(
+            &format!("shard/{n_shards}way/merge"),
+            cfg.warmup,
+            cfg.budget,
+            || {
+                std::hint::black_box(merge_partials(&parts).unwrap());
+            },
+        );
+        let iter_us = critical_us + merge_us;
+        let rate = benchkit::report_rows_per_s(
+            &format!("shard/{n_shards}way/critical_path"),
+            iter_us,
+            cfg.batch,
+        );
+        variants.push((n_shards, critical_us, merge_us, iter_us, rate));
+    }
+
+    let rate_at = |n: usize| {
+        variants
+            .iter()
+            .find(|v| v.0 == n)
+            .map(|v| v.4)
+            .expect("shard count timed")
+    };
+    let scaling_efficiency = rate_at(4) / rate_at(1) / 4.0;
+    println!("scaling efficiency at 4 shards: {scaling_efficiency:.2} (1.0 = perfect)");
+
+    // -- artifact ---------------------------------------------------------
+    let doc = json::obj(vec![
+        ("schema", json::s("tdpc-bench-shard/v1")),
+        (
+            "config",
+            json::obj(vec![
+                ("n_classes", json::num(cfg.n_classes as f64)),
+                ("clauses_per_class", json::num(cfg.clauses_per_class as f64)),
+                ("n_features", json::num(cfg.n_features as f64)),
+                ("density", json::num(cfg.density)),
+                ("batch", json::num(cfg.batch as f64)),
+                ("smoke", json::num(cfg.smoke as u8 as f64)),
+            ]),
+        ),
+        ("cross_check", json::s("pass")),
+        (
+            "variants",
+            json::Value::Arr(
+                variants
+                    .iter()
+                    .map(|&(n_shards, critical_us, merge_us, iter_us, rate)| {
+                        json::obj(vec![
+                            ("name", json::s(&format!("shards_{n_shards}"))),
+                            ("n_shards", json::num(n_shards as f64)),
+                            ("critical_path_us", json::num(critical_us)),
+                            ("merge_us", json::num(merge_us)),
+                            ("mean_us_per_iter", json::num(iter_us)),
+                            ("rows_per_s", json::num(rate)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("scaling_efficiency", json::num(scaling_efficiency)),
+    ]);
+    std::fs::write(&out_path, json::emit(&doc) + "\n").unwrap();
+    println!("wrote {out_path}");
+}

@@ -73,6 +73,7 @@ fn main() -> Result<()> {
         // instead of unbounded queueing.
         queue_limit: Some(4096),
         shed: ShedPolicy::RejectNew,
+        ..CoordinatorConfig::default()
     };
     println!(
         "starting {N_WORKERS}-worker coordinator for {MODEL} (backend {}, batch ≤ {}, deadline {:?})",
@@ -187,6 +188,7 @@ fn smoke_in(root: &std::path::Path) -> Result<()> {
         replay: ReplayPolicy::Off,
         queue_limit: None,
         shed: ShedPolicy::RejectNew,
+        ..CoordinatorConfig::default()
     };
     println!("smoke: 2-worker pool over synthetic artifacts at {}", root.display());
     let coord = Coordinator::start_multi(root.to_path_buf(), &["smoke_a", "smoke_b"], cfg)?;

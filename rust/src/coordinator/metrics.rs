@@ -12,6 +12,7 @@
 //! order-independent (bucket-wise sums; percentile inputs are sorted at
 //! snapshot), so the per-model snapshots always sum to the pool totals.
 
+use crate::tm::HotLoopStats;
 use crate::util::stats::Histogram;
 use crate::util::Ps;
 
@@ -30,6 +31,10 @@ pub struct Metrics {
     rejected_requests: u64,
     shed_requests: u64,
     failed_batches: u64,
+    /// Clause-index hot-loop telemetry, accumulated from the per-batch
+    /// deltas `execute_batch` diffs out of the backend's `ForwardScratch`
+    /// counters (see `InferenceBackend::hot_loop_stats`).
+    hot: HotLoopStats,
 }
 
 /// Point-in-time copy for reporting.
@@ -67,6 +72,20 @@ pub struct MetricsSnapshot {
     /// batch counts once for the batch, plus once per row whose solo
     /// retry also failed (those rows were answered with `BackendFailed`).
     pub failed_batches: u64,
+    /// Rows that went through a backend's clause-indexed hot loop
+    /// (backends without one — e.g. PJRT — contribute nothing here).
+    pub hot_rows: u64,
+    /// Clause-evaluation slots the clause index skipped outright.
+    pub clauses_skipped: u64,
+    /// Clause-evaluation slots the hot loop was responsible for
+    /// (`skipped ≤ eligible`).
+    pub clauses_eligible: u64,
+    /// Classes whose popcount pass was pruned by the suffix upper bound.
+    pub classes_pruned: u64,
+    /// `clauses_skipped / clauses_eligible` (0.0 before any hot-loop
+    /// row) — the serving-time effectiveness of the clause index, now
+    /// visible per tenant without touching a worker's backend.
+    pub clause_skip_rate: f64,
 }
 
 impl Metrics {
@@ -106,6 +125,15 @@ impl Metrics {
         self.failed_batches += 1;
     }
 
+    /// Fold one batch's hot-loop telemetry delta in (counters sum, like
+    /// every other counter here, so merging stays exact).
+    pub fn record_hot(&mut self, delta: HotLoopStats) {
+        self.hot.rows += delta.rows;
+        self.hot.clauses_skipped += delta.clauses_skipped;
+        self.hot.clauses_eligible += delta.clauses_eligible;
+        self.hot.classes_pruned += delta.classes_pruned;
+    }
+
     /// Fold another worker's metrics into this one.
     pub fn merge(&mut self, other: &Metrics) {
         self.requests += other.requests;
@@ -122,6 +150,7 @@ impl Metrics {
         self.rejected_requests += other.rejected_requests;
         self.shed_requests += other.shed_requests;
         self.failed_batches += other.failed_batches;
+        self.record_hot(other.hot);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -150,6 +179,11 @@ impl Metrics {
             rejected_requests: self.rejected_requests,
             shed_requests: self.shed_requests,
             failed_batches: self.failed_batches,
+            hot_rows: self.hot.rows,
+            clauses_skipped: self.hot.clauses_skipped,
+            clauses_eligible: self.hot.clauses_eligible,
+            classes_pruned: self.hot.classes_pruned,
+            clause_skip_rate: self.hot.skip_rate(),
         }
     }
 }
@@ -331,6 +365,35 @@ mod tests {
             per_model.iter().map(|s| s.shed_requests).sum::<u64>(),
             pool.shed_requests
         );
+    }
+
+    #[test]
+    fn hot_loop_telemetry_records_and_merges() {
+        let mut w0 = Metrics::default();
+        let mut w1 = Metrics::default();
+        w0.record_hot(HotLoopStats {
+            rows: 4,
+            clauses_skipped: 30,
+            clauses_eligible: 40,
+            classes_pruned: 2,
+        });
+        w1.record_hot(HotLoopStats {
+            rows: 1,
+            clauses_skipped: 10,
+            clauses_eligible: 40,
+            classes_pruned: 0,
+        });
+        let mut agg = Metrics::default();
+        agg.merge(&w0);
+        agg.merge(&w1);
+        let s = agg.snapshot();
+        assert_eq!(s.hot_rows, 5);
+        assert_eq!(s.clauses_skipped, 40);
+        assert_eq!(s.clauses_eligible, 80);
+        assert_eq!(s.classes_pruned, 2);
+        assert!((s.clause_skip_rate - 0.5).abs() < 1e-12);
+        // Empty metrics report a well-defined zero rate.
+        assert_eq!(Metrics::default().snapshot().clause_skip_rate, 0.0);
     }
 
     #[test]

@@ -49,6 +49,24 @@
 //! [`MetricsSnapshot`] — pool-wide via [`Coordinator::metrics`], per
 //! tenant via [`Coordinator::metrics_for`]. Everything is std-threads +
 //! channels (tokio is not in the offline crate set — DESIGN.md §7).
+//!
+//! **Scatter/reduce (clause sharding).** Alongside route-to-one-worker,
+//! [`Coordinator::start_sharded`] serves *one model across all workers*:
+//! worker `w` opens a `BackendSpec::Sharded` backend pinned to clause
+//! shard `w` (a contiguous slice of the clause-index arena — see
+//! `tm::ClauseShard`), every admitted request is scattered to all
+//! shards, and a reduce collector accumulates the per-shard partial
+//! class sums in a reduce slot keyed by request id: sums add, the
+//! merged argmax is re-taken (ties → lowest class, bit-exact with the
+//! unsharded forward pass — `tm::merge_partials` is the pure statement
+//! of the merge), per-shard replay latencies max into a critical-path
+//! estimate, and generations must agree (a mid-reload mix is answered
+//! with a typed error, never a Frankenstein prediction). Admission
+//! control, typed errors, per-row retry, and shedding all apply per
+//! shard group, and a straggler deadline
+//! ([`CoordinatorConfig::straggler_deadline`]) converts one slow shard
+//! into a typed `BackendFailed` for the affected requests instead of a
+//! wedged pool.
 
 pub mod batcher;
 pub mod metrics;
@@ -56,17 +74,18 @@ pub mod metrics;
 pub use batcher::{BatchPlan, BatcherConfig, QueueState};
 pub use metrics::{Metrics, MetricsSnapshot};
 
+use std::collections::HashMap;
 use std::num::NonZeroU32;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::runtime::{BackendSpec, ForwardOutput, InferenceBackend, ModelRegistry};
-use crate::tm::{BitVec64, PackedBatch};
+use crate::runtime::{BackendSpec, ForwardOutput, InferenceBackend, ModelRegistry, ShardSpec};
+use crate::tm::{BitVec64, HotLoopStats, PackedBatch};
 use crate::util::Ps;
 
 /// Interned identity of one served model: a dense index into the pool's
@@ -115,8 +134,9 @@ pub struct InferRequest {
     /// pending rows by model, so a batch never mixes widths or backends.
     pub model: ModelId,
     pub features: BitVec64,
-    /// Where to deliver the response (or the typed error).
-    pub reply: mpsc::Sender<Reply>,
+    /// Where to deliver the response (or the typed error): straight to
+    /// the caller, or into a sharded pool's reduce collector.
+    pub reply: ReplySink,
     submitted: Instant,
 }
 
@@ -201,6 +221,58 @@ impl std::error::Error for InferError {}
 /// What a caller receives on its reply channel: exactly one per
 /// submitted request.
 pub type Reply = Result<InferResponse, InferError>;
+
+/// Where a worker delivers a finished [`Reply`].
+///
+/// Route-to-one-worker requests answer the submitting caller directly.
+/// A sharded pool's scatter path instead points every shard's copy of a
+/// request at the reduce collector, with the request id riding outside
+/// the [`Reply`] — [`InferError`] carries no id, so a bare error could
+/// not be routed back to its reduce slot otherwise.
+#[derive(Debug, Clone)]
+pub enum ReplySink {
+    /// Deliver straight to the submitting caller.
+    Caller(mpsc::Sender<Reply>),
+    /// Deliver to the sharded pool's reduce collector as one shard's
+    /// partial answer for request `id`.
+    Reduce(mpsc::Sender<ReduceMsg>),
+}
+
+impl ReplySink {
+    /// Deliver one reply for request `id`. Send failures are ignored in
+    /// both arms: a caller that hung up forfeits its answer, and a
+    /// collector that is gone means the pool is tearing down.
+    fn deliver(&self, id: u64, reply: Reply) {
+        match self {
+            ReplySink::Caller(tx) => {
+                let _ = tx.send(reply);
+            }
+            ReplySink::Reduce(tx) => {
+                let _ = tx.send(ReduceMsg::Partial { id, reply });
+            }
+        }
+    }
+}
+
+/// One message into a sharded pool's reduce collector.
+#[derive(Debug)]
+pub enum ReduceMsg {
+    /// Open the reduce slot for a scattered request. Sent by
+    /// [`Coordinator::submit_packed`] *before* any shard copy is
+    /// enqueued, so the slot exists before the first partial can arrive
+    /// (worker sends happen-after the scatter, and the channel is
+    /// causally ordered).
+    Register {
+        id: u64,
+        model: ModelId,
+        caller: mpsc::Sender<Reply>,
+        submitted: Instant,
+    },
+    /// One shard's answer for request `id`: a partial [`InferResponse`]
+    /// (partial class sums, shard-local replay latency, `worker` ==
+    /// shard index) or that shard's typed error.
+    Partial { id: u64, reply: Reply },
+}
 
 /// How the dispatcher assigns incoming requests to workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -330,6 +402,13 @@ pub struct CoordinatorConfig {
     pub queue_limit: Option<usize>,
     /// What to shed when a worker is at `queue_limit`.
     pub shed: ShedPolicy,
+    /// Sharded pools only ([`Coordinator::start_sharded`]): how long the
+    /// reduce collector waits, from submission, for all shard partials
+    /// of a request before failing it with a typed
+    /// [`InferError::BackendFailed`] naming the missing shards — one
+    /// slow or wedged shard degrades its requests instead of wedging
+    /// the pool. Ignored by route-to-one-worker pools.
+    pub straggler_deadline: Duration,
 }
 
 impl Default for CoordinatorConfig {
@@ -342,6 +421,7 @@ impl Default for CoordinatorConfig {
             replay: ReplayPolicy::default(),
             queue_limit: None,
             shed: ShedPolicy::default(),
+            straggler_deadline: Duration::from_secs(2),
         }
     }
 }
@@ -387,21 +467,36 @@ struct WorkerHandle {
     join: Option<std::thread::JoinHandle<()>>,
 }
 
+/// Shape-and-version record of one served model — the **single home**
+/// for the metadata admission control, the network front end, and the
+/// sharded scatter plan all read. Populated from worker ready-reports at
+/// pool startup, updated under one `RwLock` write by
+/// [`Coordinator::reload`] acks (and, for `n_shards`, fixed at
+/// [`Coordinator::start_sharded`]), so a width/class/generation triple
+/// can never be observed half-updated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelShape {
+    /// Feature width the admission gate validates rows against.
+    pub n_features: usize,
+    /// Class count of the served backend. Read by the network front end
+    /// to answer model-shape queries without touching a worker.
+    pub n_classes: usize,
+    /// Hot-swap generation: 0 until the first successful
+    /// [`Coordinator::reload`]; each reload *attempt* consumes the next
+    /// value.
+    pub generation: u64,
+    /// Clause shards this model is served over — 1 in a
+    /// route-to-one-worker pool, the shard count of the scatter plan in
+    /// a sharded pool.
+    pub n_shards: usize,
+}
+
 /// Coordinator-side state for one served model.
 struct ModelEntry {
     name: String,
-    /// Feature width gate for admission, populated from worker
-    /// ready-reports at startup (every successful start has one) and
-    /// refreshed by reload acks — atomic because a reload commits the
-    /// new width while submitters read it.
-    n_features: AtomicUsize,
-    /// Class count of the served backend, maintained alongside
-    /// `n_features` (startup report + reload acks). Read by the network
-    /// front end to answer model-shape queries without touching a worker.
-    n_classes: AtomicUsize,
-    /// Hot-swap generation counter; each [`Coordinator::reload`] attempt
-    /// consumes the next value.
-    generation: AtomicU64,
+    /// The shape table entry (see [`ModelShape`]); reads on the submit
+    /// hot path take the read lock, reloads the write lock.
+    shape: RwLock<ModelShape>,
     /// Admission-time counters (width rejections, unknown-model hits
     /// resolved to this entry never happen — unknown models have no
     /// entry — and reject-new sheds). Lock-free on purpose: the
@@ -410,6 +505,14 @@ struct ModelEntry {
     /// [`Coordinator::metrics_for`] at snapshot time.
     admission_rejected: AtomicU64,
     admission_shed: AtomicU64,
+}
+
+impl ModelEntry {
+    /// Point-in-time copy of the shape entry (poisoning is impossible:
+    /// no panic can happen under the shape lock, but recover anyway).
+    fn shape(&self) -> ModelShape {
+        *self.shape.read().unwrap_or_else(|e| e.into_inner())
+    }
 }
 
 /// Process-wide pool-instance counter behind [`ModelId`]'s pool tag.
@@ -432,7 +535,22 @@ pub struct Coordinator {
     /// would interleave their per-worker control messages and could
     /// leave workers on different final backends.
     reload_lock: Mutex<()>,
+    /// `Some` when this pool scatters each request across clause shards
+    /// ([`Coordinator::start_sharded`]): the reduce collector's inbox
+    /// and thread handle.
+    sharded: Option<ShardedPlan>,
     shutdown: Arc<AtomicBool>,
+}
+
+/// Reduce side of a sharded pool: worker `w` serves clause shard `w`,
+/// `submit_packed` scatters each admitted request to every worker, and
+/// the collector thread merges the partials (see [`ReduceSlot`]).
+struct ShardedPlan {
+    n_shards: usize,
+    /// The collector's inbox; dropped (set `None`) at shutdown so the
+    /// collector drains and exits.
+    reduce_tx: Option<mpsc::Sender<ReduceMsg>>,
+    collector: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
@@ -460,6 +578,78 @@ impl Coordinator {
         root: PathBuf,
         models: &[&str],
         cfg: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        Self::start_inner(root, models, cfg, None)
+    }
+
+    /// Start a scatter/reduce pool serving `model` across `n_shards`
+    /// clause shards — **one model, many workers**: worker `w` opens a
+    /// `BackendSpec::Sharded` backend pinned to shard `w` (a contiguous
+    /// slice of the model's clause-index arena, see `tm::ClauseShard`),
+    /// every admitted request is scattered to all workers, and a reduce
+    /// collector merges the partial class sums into one reply per
+    /// request, bit-exact with the unsharded forward pass (merged
+    /// argmax, ties → lowest class). Latency scales with the *largest
+    /// shard* instead of the whole clause count, which is the point.
+    ///
+    /// `cfg.backend` chooses the substrate: `Native` (manifest) and
+    /// `InMemory`/`InMemorySet` shard the native evaluator;
+    /// `TimeDomain { arch, .. }` gives every shard its own simulated die
+    /// of `arch`, so `ReplayPolicy` replay yields per-shard decision
+    /// latencies the reduce maxes into a critical-path estimate. An
+    /// explicit `Sharded` spec is re-pinned to `n_shards`.
+    /// `cfg.n_workers` is overridden to `n_shards` (one worker per
+    /// shard); `cfg.dispatch` is moot (every request visits every
+    /// worker). The fail-soft contract is unchanged: exactly one
+    /// [`Reply`] per submit, with shard errors, mixed mid-reload
+    /// generations, and straggler-deadline expiries
+    /// ([`CoordinatorConfig::straggler_deadline`]) all surfacing as
+    /// typed errors.
+    pub fn start_sharded(
+        root: PathBuf,
+        model: &str,
+        n_shards: usize,
+        mut cfg: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        ensure!(n_shards >= 1, "sharded pool needs at least one shard");
+        cfg.n_workers = n_shards;
+        cfg.backend = match cfg.backend {
+            BackendSpec::Sharded { model, hw, .. } => {
+                BackendSpec::Sharded { model, shard: ShardSpec::first_of(n_shards), hw }
+            }
+            BackendSpec::Native => {
+                BackendSpec::Sharded { model: None, shard: ShardSpec::first_of(n_shards), hw: None }
+            }
+            BackendSpec::InMemory(m) => BackendSpec::Sharded {
+                model: Some(m),
+                shard: ShardSpec::first_of(n_shards),
+                hw: None,
+            },
+            BackendSpec::InMemorySet(set) => {
+                let m = set.iter().find(|m| m.name == model).cloned().ok_or_else(|| {
+                    anyhow!("in-memory set does not hold model {model:?}")
+                })?;
+                BackendSpec::Sharded {
+                    model: Some(m),
+                    shard: ShardSpec::first_of(n_shards),
+                    hw: None,
+                }
+            }
+            BackendSpec::TimeDomain { arch, model, .. } => BackendSpec::Sharded {
+                model,
+                shard: ShardSpec::first_of(n_shards),
+                hw: Some(arch),
+            },
+            other => anyhow::bail!("backend {:?} cannot serve clause shards", other.name()),
+        };
+        Self::start_inner(root, &[model], cfg, Some(n_shards))
+    }
+
+    fn start_inner(
+        root: PathBuf,
+        models: &[&str],
+        cfg: CoordinatorConfig,
+        sharded: Option<usize>,
     ) -> Result<Coordinator> {
         ensure!(cfg.n_workers >= 1, "coordinator needs at least one worker");
         ensure!(!models.is_empty(), "coordinator needs at least one model");
@@ -563,13 +753,32 @@ impl Coordinator {
             .zip(&shapes)
             .map(|(name, &(width, classes))| ModelEntry {
                 name: name.clone(),
-                n_features: AtomicUsize::new(width),
-                n_classes: AtomicUsize::new(classes),
-                generation: AtomicU64::new(0),
+                shape: RwLock::new(ModelShape {
+                    n_features: width,
+                    n_classes: classes,
+                    generation: 0,
+                    n_shards: sharded.unwrap_or(1),
+                }),
                 admission_rejected: AtomicU64::new(0),
                 admission_shed: AtomicU64::new(0),
             })
             .collect();
+
+        let plan = match sharded {
+            None => None,
+            Some(n_shards) => {
+                let (reduce_tx, reduce_rx) = mpsc::channel::<ReduceMsg>();
+                let deadline = cfg.straggler_deadline;
+                let collector = std::thread::Builder::new()
+                    .name("tdpc-reduce".to_string())
+                    .spawn(move || run_reduce(reduce_rx, n_shards, deadline))?;
+                Some(ShardedPlan {
+                    n_shards,
+                    reduce_tx: Some(reduce_tx),
+                    collector: Some(collector),
+                })
+            }
+        };
 
         Ok(Coordinator {
             workers,
@@ -581,6 +790,7 @@ impl Coordinator {
             queue_limit: cfg.queue_limit,
             shed: cfg.shed,
             reload_lock: Mutex::new(()),
+            sharded: plan,
             shutdown,
         })
     }
@@ -616,25 +826,40 @@ impl Coordinator {
         self.models.get(model.index())
     }
 
+    /// The full shape table entry of one served model — width, class
+    /// count, hot-swap generation, and shard count in one atomically-
+    /// consistent [`ModelShape`]. `None` for a foreign or unknown id.
+    /// The thin accessors below are views of this.
+    pub fn shape_for(&self, model: ModelId) -> Option<ModelShape> {
+        Some(self.entry(model)?.shape())
+    }
+
     /// Feature width of one served model — the width
     /// [`Coordinator::submit`] admits that model's rows against. `None`
     /// for a foreign or unknown id.
     pub fn n_features_for(&self, model: ModelId) -> Option<usize> {
-        Some(self.entry(model)?.n_features.load(Ordering::Relaxed))
+        Some(self.shape_for(model)?.n_features)
     }
 
     /// Class count of one served model (`None` for a foreign or unknown
     /// id). Tracked alongside the width table, so model-shape queries —
     /// e.g. the network front end's `ModelQuery` — never touch a worker.
     pub fn n_classes_for(&self, model: ModelId) -> Option<usize> {
-        Some(self.entry(model)?.n_classes.load(Ordering::Relaxed))
+        Some(self.shape_for(model)?.n_classes)
     }
 
     /// Current hot-swap generation of one served model: 0 until its
     /// first successful [`Coordinator::reload`]. `None` for a foreign or
     /// unknown id.
     pub fn generation_for(&self, model: ModelId) -> Option<u64> {
-        Some(self.entry(model)?.generation.load(Ordering::Relaxed))
+        Some(self.shape_for(model)?.generation)
+    }
+
+    /// Clause shards this pool serves each model over: 1 for a
+    /// route-to-one-worker pool, the scatter width for a
+    /// [`Coordinator::start_sharded`] pool.
+    pub fn n_shards(&self) -> usize {
+        self.sharded.as_ref().map_or(1, |p| p.n_shards)
     }
 
     /// The pool's per-worker queue bound, if one is configured.
@@ -657,6 +882,12 @@ impl Coordinator {
     pub fn is_saturated(&self) -> bool {
         match self.queue_limit {
             None => false,
+            // A scatter needs room on *every* shard, so one full shard
+            // queue already sheds — `any`, not `all`.
+            Some(limit) if self.sharded.is_some() => self
+                .workers
+                .iter()
+                .any(|w| w.depth.load(Ordering::Relaxed) >= limit),
             Some(limit) => self
                 .workers
                 .iter()
@@ -711,7 +942,7 @@ impl Coordinator {
             let _ = reply.send(Err(InferError::UnknownModel { name: model.to_string() }));
             return id;
         };
-        let expected = entry.n_features.load(Ordering::Relaxed);
+        let expected = entry.shape().n_features;
         if features.len() != expected {
             entry.admission_rejected.fetch_add(1, Ordering::Relaxed);
             let _ = reply.send(Err(InferError::WidthMismatch {
@@ -719,6 +950,9 @@ impl Coordinator {
                 expected,
             }));
             return id;
+        }
+        if let Some(plan) = &self.sharded {
+            return self.scatter(plan, entry, id, model, features, reply);
         }
         let mut w = self.pick_worker();
         if let (ShedPolicy::RejectNew, Some(limit)) = (self.shed, self.queue_limit) {
@@ -750,14 +984,86 @@ impl Coordinator {
         worker.depth.fetch_add(1, Ordering::Relaxed);
         let item = WorkItem {
             id,
-            req: InferRequest { model, features, reply, submitted: Instant::now() },
+            req: InferRequest {
+                model,
+                features,
+                reply: ReplySink::Caller(reply),
+                submitted: Instant::now(),
+            },
         };
         if let Err(mpsc::SendError(msg)) = tx.send(WorkMsg::Infer(item)) {
             // The worker died; the item comes back, so its caller still
             // gets a typed answer instead of a dead channel.
             worker.depth.fetch_sub(1, Ordering::Relaxed);
             if let WorkMsg::Infer(item) = msg {
-                let _ = item.req.reply.send(Err(InferError::ShuttingDown));
+                item.req.reply.deliver(item.id, Err(InferError::ShuttingDown));
+            }
+        }
+        id
+    }
+
+    /// Scatter one admitted request to every shard worker and point the
+    /// shards' answers at the reduce collector.
+    ///
+    /// Admission against the bounded queue is all-or-nothing: a scatter
+    /// must land on every shard, so under reject-new *any* full shard
+    /// queue sheds the request — there is no other worker to spill to,
+    /// because each worker is a distinct shard, not spare capacity.
+    /// Once the reduce slot is registered it owns the exactly-one-reply
+    /// contract: every failure below is delivered as a partial error,
+    /// which finalizes the slot.
+    fn scatter(
+        &self,
+        plan: &ShardedPlan,
+        entry: &ModelEntry,
+        id: u64,
+        model: ModelId,
+        features: BitVec64,
+        reply: mpsc::Sender<Reply>,
+    ) -> u64 {
+        if let (ShedPolicy::RejectNew, Some(limit)) = (self.shed, self.queue_limit) {
+            let full = self
+                .workers
+                .iter()
+                .map(|h| h.depth.load(Ordering::Relaxed))
+                .find(|&d| d >= limit);
+            if let Some(depth) = full {
+                entry.admission_shed.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Err(InferError::QueueFull { depth, limit }));
+                return id;
+            }
+        }
+        let Some(reduce_tx) = plan.reduce_tx.as_ref() else {
+            let _ = reply.send(Err(InferError::ShuttingDown));
+            return id;
+        };
+        let submitted = Instant::now();
+        let register = ReduceMsg::Register { id, model, caller: reply.clone(), submitted };
+        if reduce_tx.send(register).is_err() {
+            let _ = reply.send(Err(InferError::ShuttingDown));
+            return id;
+        }
+        for worker in &self.workers {
+            let Some(tx) = worker.tx.as_ref() else {
+                let _ = reduce_tx
+                    .send(ReduceMsg::Partial { id, reply: Err(InferError::ShuttingDown) });
+                continue;
+            };
+            worker.depth.fetch_add(1, Ordering::Relaxed);
+            let item = WorkItem {
+                id,
+                req: InferRequest {
+                    model,
+                    features: features.clone(),
+                    reply: ReplySink::Reduce(reduce_tx.clone()),
+                    submitted,
+                },
+            };
+            if let Err(mpsc::SendError(msg)) = tx.send(WorkMsg::Infer(item)) {
+                worker.depth.fetch_sub(1, Ordering::Relaxed);
+                if let WorkMsg::Infer(item) = msg {
+                    item.req.reply.deliver(item.id, Err(InferError::ShuttingDown));
+                }
             }
         }
         id
@@ -842,7 +1148,11 @@ impl Coordinator {
             .entry(model)
             .ok_or_else(|| anyhow!("{model} is not served by this pool"))?;
         let _swap = self.reload_lock.lock().unwrap();
-        let generation = entry.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        let generation = {
+            let mut shape = entry.shape.write().unwrap_or_else(|e| e.into_inner());
+            shape.generation += 1;
+            shape.generation
+        };
         let (ack_tx, ack_rx) = mpsc::channel::<ReloadReport>();
         let mut sent = 0usize;
         for wk in &self.workers {
@@ -881,8 +1191,11 @@ impl Coordinator {
             });
         }
         if let Some((width, classes)) = new_shape {
-            entry.n_features.store(width, Ordering::Relaxed);
-            entry.n_classes.store(classes, Ordering::Relaxed);
+            // One write commits the whole shape: a reader can never see
+            // the new width with the old class count.
+            let mut shape = entry.shape.write().unwrap_or_else(|e| e.into_inner());
+            shape.n_features = width;
+            shape.n_classes = classes;
         }
         Ok(())
     }
@@ -959,6 +1272,17 @@ impl Coordinator {
                 let _ = h.join();
             }
         }
+        // Workers are drained: every shard partial they will ever
+        // produce is already in the reduce channel. Dropping the
+        // coordinator's sender disconnects the collector *after* it
+        // drains that backlog; slots still incomplete then can never
+        // complete and are answered with a typed shutdown error.
+        if let Some(plan) = &mut self.sharded {
+            plan.reduce_tx = None;
+            if let Some(h) = plan.collector.take() {
+                let _ = h.join();
+            }
+        }
     }
 }
 
@@ -979,6 +1303,203 @@ pub fn await_reply(rx: &mpsc::Receiver<Reply>) -> Reply {
     rx.recv().unwrap_or(Err(InferError::ShuttingDown))
 }
 
+/// Accumulator for one scattered request, keyed by request id in the
+/// reduce collector's map. Absorbs shard partials until the request is
+/// *decided*: all `n_shards` partials in (→ merged success), any shard's
+/// typed error (→ that error, first wins), shard generations disagreeing
+/// mid-reload (→ typed `BackendFailed`: merging sums computed by two
+/// different models would be a silent misprediction), or the straggler
+/// deadline passing (→ typed `BackendFailed` naming the missing shards).
+/// Pure accumulation logic — unit-tested directly, below.
+struct ReduceSlot {
+    model: ModelId,
+    caller: mpsc::Sender<Reply>,
+    submitted: Instant,
+    /// Which shards have answered (index == worker == shard).
+    seen: Vec<bool>,
+    parts: usize,
+    /// Element-wise sum of the shards' partial class sums.
+    sums: Vec<i32>,
+    /// Generation of the first partial; all others must match.
+    generation: Option<u64>,
+    /// Max per-shard replay decision latency — the plan's critical-path
+    /// estimate (votes merge after the slowest shard's race) — and the
+    /// shard that set it.
+    hw_max: Option<(Ps, usize)>,
+    /// Largest per-shard batch this request rode in.
+    batch_max: usize,
+    /// Shard of the most recent partial (the wall-clock critical path
+    /// when no shard replayed hardware).
+    last_worker: usize,
+}
+
+impl ReduceSlot {
+    fn new(model: ModelId, caller: mpsc::Sender<Reply>, submitted: Instant, n_shards: usize) -> ReduceSlot {
+        ReduceSlot {
+            model,
+            caller,
+            submitted,
+            seen: vec![false; n_shards],
+            parts: 0,
+            sums: Vec::new(),
+            generation: None,
+            hw_max: None,
+            batch_max: 0,
+            last_worker: 0,
+        }
+    }
+
+    /// Absorb one shard's reply. `Some(reply)` means the request is
+    /// decided: deliver it and drop the slot. `None` means more shards
+    /// are still owed.
+    fn absorb(&mut self, id: u64, reply: Reply) -> Option<Reply> {
+        let resp = match reply {
+            Ok(resp) => resp,
+            // Fail fast on the first shard error: the merged answer is
+            // already unreachable, and waiting for the rest only delays
+            // the caller.
+            Err(e) => return Some(Err(e)),
+        };
+        let shard = resp.worker;
+        if shard >= self.seen.len() || self.seen[shard] {
+            return Some(Err(InferError::BackendFailed(format!(
+                "reduce protocol violation: duplicate or out-of-range shard {shard}"
+            ))));
+        }
+        match self.generation {
+            None => self.generation = Some(resp.generation),
+            Some(g) if g != resp.generation => {
+                return Some(Err(InferError::BackendFailed(format!(
+                    "shards answered from mixed hot-swap generations ({g} and {}) \
+                     mid-reload; retry",
+                    resp.generation
+                ))));
+            }
+            Some(_) => {}
+        }
+        if self.sums.is_empty() {
+            self.sums = resp.sums;
+        } else if self.sums.len() != resp.sums.len() {
+            return Some(Err(InferError::BackendFailed(format!(
+                "shard {shard} answered {} class sums where {} were expected",
+                resp.sums.len(),
+                self.sums.len()
+            ))));
+        } else {
+            for (acc, part) in self.sums.iter_mut().zip(&resp.sums) {
+                *acc += part;
+            }
+        }
+        if let Some(ps) = resp.hw_decision_latency {
+            if self.hw_max.map_or(true, |(m, _)| ps > m) {
+                self.hw_max = Some((ps, shard));
+            }
+        }
+        self.batch_max = self.batch_max.max(resp.batch_size);
+        self.last_worker = shard;
+        self.seen[shard] = true;
+        self.parts += 1;
+        (self.parts == self.seen.len()).then(|| Ok(self.finish(id)))
+    }
+
+    /// Merge the complete set of partials into the final response:
+    /// re-argmax over the summed class sums (ties → lowest class,
+    /// matching the unsharded forward pass), max replay latency as the
+    /// critical path, `worker` = the critical shard.
+    fn finish(&self, id: u64) -> InferResponse {
+        let mut pred = 0usize;
+        for (k, &s) in self.sums.iter().enumerate() {
+            if s > self.sums[pred] {
+                pred = k;
+            }
+        }
+        InferResponse {
+            request_id: id,
+            model: self.model,
+            generation: self.generation.unwrap_or(0),
+            pred,
+            sums: self.sums.clone(),
+            hw_decision_latency: self.hw_max.map(|(ps, _)| ps),
+            // Per-shard hardware winners are shard-local argmaxes; they
+            // do not compose into a whole-model winner, so the merged
+            // reply reports none.
+            hw_winner: None,
+            service_latency_us: self.submitted.elapsed().as_secs_f64() * 1e6,
+            batch_size: self.batch_max,
+            worker: self.hw_max.map_or(self.last_worker, |(_, w)| w),
+        }
+    }
+
+    fn expired(&self, deadline: Duration) -> bool {
+        self.submitted.elapsed() >= deadline
+    }
+
+    /// The typed answer for a slot whose deadline passed with shards
+    /// still owed.
+    fn straggler_error(&self, deadline: Duration) -> Reply {
+        let missing: Vec<usize> = self
+            .seen
+            .iter()
+            .enumerate()
+            .filter(|(_, seen)| !**seen)
+            .map(|(i, _)| i)
+            .collect();
+        Err(InferError::BackendFailed(format!(
+            "straggler deadline ({deadline:?}) passed with shard(s) {missing:?} unanswered \
+             ({}/{} partials in)",
+            self.parts,
+            self.seen.len()
+        )))
+    }
+}
+
+/// The reduce collector of a sharded pool: owns the request-id → slot
+/// map, finalizes each scattered request exactly once (all partials in /
+/// first shard error / mixed generations / straggler deadline), and
+/// sweeps for stragglers every 50 ms even when the channel is quiet.
+/// When every sender is gone (workers joined, coordinator handle
+/// dropped) it drains the backlog, answers the undecidable remainder
+/// with a typed shutdown error, and exits.
+fn run_reduce(rx: mpsc::Receiver<ReduceMsg>, n_shards: usize, deadline: Duration) {
+    const SWEEP_EVERY: Duration = Duration::from_millis(50);
+    let mut slots: HashMap<u64, ReduceSlot> = HashMap::new();
+    let mut last_sweep = Instant::now();
+    loop {
+        match rx.recv_timeout(SWEEP_EVERY) {
+            Ok(ReduceMsg::Register { id, model, caller, submitted }) => {
+                slots.insert(id, ReduceSlot::new(model, caller, submitted, n_shards));
+            }
+            Ok(ReduceMsg::Partial { id, reply }) => {
+                // A partial for an already-decided request (post-error
+                // shard, late straggler) finds no slot and is dropped:
+                // its caller was answered long ago.
+                let decided = slots.get_mut(&id).and_then(|slot| slot.absorb(id, reply));
+                if let Some(final_reply) = decided {
+                    let slot = slots.remove(&id).expect("slot just absorbed");
+                    let _ = slot.caller.send(final_reply);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        if last_sweep.elapsed() >= SWEEP_EVERY {
+            let expired: Vec<u64> = slots
+                .iter()
+                .filter(|(_, slot)| slot.expired(deadline))
+                .map(|(&id, _)| id)
+                .collect();
+            for id in expired {
+                let slot = slots.remove(&id).expect("expired id came from the map");
+                let _ = slot.caller.send(slot.straggler_error(deadline));
+            }
+            last_sweep = Instant::now();
+        }
+    }
+    for (_, slot) in slots {
+        let _ = slot.caller.send(Err(InferError::ShuttingDown));
+    }
+}
+
 /// Open one worker's registry and a backend per served model, reporting
 /// the models' shapes (feature width, class count) in serve-list order.
 /// Runs inside the worker thread; any failure (missing artifact, unknown
@@ -996,7 +1517,12 @@ fn open_worker_models(
             .backend(name)
             .with_context(|| format!("opening model {name:?}"))?;
         shapes.push((backend.n_features(), backend.n_classes()));
-        slots.push(ModelSlot { name: name.clone(), generation: 0, backend });
+        slots.push(ModelSlot {
+            name: name.clone(),
+            generation: 0,
+            backend,
+            last_hot: HotLoopStats::default(),
+        });
     }
     Ok((registry, slots, shapes))
 }
@@ -1077,7 +1603,7 @@ fn shed_to_limit(
         }
     }
     for (item, observed) in shed {
-        let _ = item.req.reply.send(Err(InferError::QueueFull { depth: observed, limit }));
+        item.req.reply.deliver(item.id, Err(InferError::QueueFull { depth: observed, limit }));
     }
 }
 
@@ -1088,6 +1614,12 @@ struct ModelSlot {
     name: String,
     generation: u64,
     backend: Arc<dyn InferenceBackend>,
+    /// The backend's cumulative hot-loop counters as of the last batch —
+    /// `execute_batch` diffs the backend's running totals against this
+    /// to fold a per-batch telemetry delta into the worker's [`Metrics`]
+    /// slot. Reset on hot-swap (a fresh backend starts its counters at
+    /// zero).
+    last_hot: HotLoopStats,
 }
 
 /// A worker thread: one backend per model (via its own registry), one
@@ -1211,6 +1743,7 @@ impl Worker {
         let slot = &mut self.slots[ix];
         slot.backend = backend;
         slot.generation = generation;
+        slot.last_hot = HotLoopStats::default();
         Ok(shape)
     }
 
@@ -1230,16 +1763,18 @@ impl Worker {
     /// Drain up to `take` rows of one model's queue and execute them as
     /// a batch.
     fn flush(&mut self, ix: usize, take: usize) {
-        let queue = &mut self.pending[ix];
-        let n = take.min(queue.len());
-        if n == 0 {
-            return;
-        }
-        let batch: Vec<WorkItem> = queue.drain(..n).collect();
+        let batch: Vec<WorkItem> = {
+            let queue = &mut self.pending[ix];
+            let n = take.min(queue.len());
+            if n == 0 {
+                return;
+            }
+            queue.drain(..n).collect()
+        };
         execute_batch(
             self.index,
             ix,
-            &self.slots[ix],
+            &mut self.slots[ix],
             batch,
             self.replay,
             &mut self.replay_seq,
@@ -1269,14 +1804,15 @@ impl Worker {
 fn execute_batch(
     worker: usize,
     model_ix: usize,
-    slot: &ModelSlot,
+    slot: &mut ModelSlot,
     batch: Vec<WorkItem>,
     replay: ReplayPolicy,
     replay_seq: &mut u64,
     metrics: &Mutex<Vec<Metrics>>,
     depth: &AtomicUsize,
 ) {
-    let backend = slot.backend.as_ref();
+    let backend = slot.backend.clone();
+    let backend = backend.as_ref();
     let expected = backend.n_features();
     let mut rows = PackedBatch::new(expected);
     let mut items: Vec<WorkItem> = Vec::with_capacity(batch.len());
@@ -1344,6 +1880,14 @@ fn execute_batch(
         }
     }
 
+    // Hot-loop telemetry: the backend's counters run cumulatively, so
+    // the per-batch contribution is the delta since the last batch this
+    // slot executed.
+    if let Some(now) = backend.hot_loop_stats() {
+        delta.record_hot(now.delta_since(&slot.last_hot));
+        slot.last_hot = now;
+    }
+
     // One metrics lock per batch, taken before any reply goes out so
     // aggregate counters are complete the moment a client has seen the
     // last response. The delta folds into this model's slot, keeping the
@@ -1353,7 +1897,7 @@ fn execute_batch(
         // Release the load gauge *before* replying so a blocking caller's
         // next submit observes the decrement (least-loaded determinism).
         depth.fetch_sub(1, Ordering::Relaxed);
-        let _ = item.req.reply.send(reply); // receiver may have gone away
+        item.req.reply.deliver(item.id, reply); // receiver may have gone away
     }
 }
 
@@ -1517,7 +2061,7 @@ mod tests {
             req: InferRequest {
                 model: ModelId::new(0, model),
                 features: BitVec64::from_bools(&[true, false, true, false]),
-                reply: reply.clone(),
+                reply: ReplySink::Caller(reply.clone()),
                 submitted: Instant::now(),
             },
         }
@@ -1588,5 +2132,91 @@ mod tests {
         shed_to_limit(0, &mut pending, &depth, &metrics);
         assert!(pending.iter().all(Vec::is_empty));
         assert!(reply_rx.try_recv().is_ok());
+    }
+
+    /// One shard's partial reply, as a worker would produce it: partial
+    /// class sums, shard index in `worker`, shard-local replay latency.
+    fn partial(shard: usize, generation: u64, sums: Vec<i32>, hw: Option<Ps>, batch: usize) -> Reply {
+        Ok(InferResponse {
+            request_id: 7,
+            model: ModelId::new(0, 0),
+            generation,
+            pred: 0,
+            sums,
+            hw_decision_latency: hw,
+            hw_winner: None,
+            service_latency_us: 1.0,
+            batch_size: batch,
+            worker: shard,
+        })
+    }
+
+    fn slot(n_shards: usize) -> (ReduceSlot, mpsc::Receiver<Reply>) {
+        let (tx, rx) = mpsc::channel();
+        (ReduceSlot::new(ModelId::new(0, 0), tx, Instant::now(), n_shards), rx)
+    }
+
+    #[test]
+    fn reduce_slot_merges_partials_and_reargmaxes() {
+        let (mut s, _rx) = slot(3);
+        assert!(s.absorb(7, partial(0, 4, vec![1, 0, 0], None, 2)).is_none());
+        assert!(s.absorb(7, partial(2, 4, vec![0, 0, 1], Some(Ps(500)), 1)).is_none());
+        let decided = s.absorb(7, partial(1, 4, vec![0, 5, 0], Some(Ps(900)), 4)).unwrap();
+        let resp = decided.unwrap();
+        assert_eq!(resp.sums, vec![1, 5, 1]);
+        assert_eq!(resp.pred, 1, "argmax over MERGED sums, not any shard's local argmax");
+        assert_eq!(resp.generation, 4);
+        assert_eq!(resp.hw_decision_latency, Some(Ps(900)), "critical path = max over shards");
+        assert_eq!(resp.worker, 1, "the critical shard");
+        assert_eq!(resp.hw_winner, None, "shard-local hw winners do not compose");
+        assert_eq!(resp.batch_size, 4);
+        assert_eq!(resp.request_id, 7);
+    }
+
+    #[test]
+    fn reduce_slot_breaks_merged_ties_to_the_lowest_class() {
+        let (mut s, _rx) = slot(2);
+        assert!(s.absorb(1, partial(0, 0, vec![-1, 2, 4], None, 1)).is_none());
+        let resp = s.absorb(1, partial(1, 0, vec![5, 2, 0], None, 1)).unwrap().unwrap();
+        assert_eq!(resp.sums, vec![4, 4, 4]);
+        assert_eq!(resp.pred, 0, "ties go to the lowest class, like the unsharded argmax");
+    }
+
+    #[test]
+    fn reduce_slot_fails_fast_on_error_mixed_generations_and_duplicates() {
+        // First shard error decides the request immediately.
+        let (mut s, _rx) = slot(2);
+        let e = s.absorb(1, Err(InferError::QueueFull { depth: 9, limit: 8 })).unwrap();
+        assert_eq!(e.unwrap_err(), InferError::QueueFull { depth: 9, limit: 8 });
+
+        // Mixed hot-swap generations mid-reload: typed error, never a
+        // Frankenstein merge.
+        let (mut s, _rx) = slot(2);
+        assert!(s.absorb(1, partial(0, 1, vec![1], None, 1)).is_none());
+        let e = s.absorb(1, partial(1, 2, vec![1], None, 1)).unwrap().unwrap_err();
+        assert!(
+            matches!(&e, InferError::BackendFailed(m) if m.contains("generations")),
+            "{e}"
+        );
+
+        // A duplicate shard is a protocol violation, not a silent
+        // double-count.
+        let (mut s, _rx) = slot(2);
+        assert!(s.absorb(1, partial(0, 0, vec![1], None, 1)).is_none());
+        let e = s.absorb(1, partial(0, 0, vec![1], None, 1)).unwrap().unwrap_err();
+        assert!(
+            matches!(&e, InferError::BackendFailed(m) if m.contains("duplicate")),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn reduce_slot_straggler_error_names_missing_shards() {
+        let (mut s, _rx) = slot(3);
+        assert!(s.absorb(1, partial(1, 0, vec![1], None, 1)).is_none());
+        assert!(s.expired(Duration::ZERO));
+        assert!(!s.expired(Duration::from_secs(3600)));
+        let msg = s.straggler_error(Duration::from_millis(250)).unwrap_err().to_string();
+        assert!(msg.contains("[0, 2]") && msg.contains("1/3"), "{msg}");
     }
 }

@@ -44,7 +44,14 @@
 //! `ModelRegistry::invalidate` → `util::sync::OnceMap::remove`), and
 //! metrics that aggregate across the pool — per tenant via
 //! [`coordinator::Coordinator::metrics_for`], per worker via
-//! `worker_metrics`.
+//! `worker_metrics`. The pool also runs **clause-sharded
+//! scatter/reduce** ([`coordinator::Coordinator::start_sharded`]): one
+//! model's clause arena is carved into contiguous shards
+//! ([`tm::ClauseShard`]), one worker per shard serves partial class
+//! sums through [`runtime::ShardBackend`], and a reduce collector
+//! merges them ([`tm::merge_partials`]) bit-exactly with the unsharded
+//! forward pass — per-batch latency scales with `c_total / n_shards`,
+//! near-constant-time in clause count.
 //!
 //! On top of the coordinator sits the **network serving layer**
 //! ([`server`]): a length-prefixed binary protocol over TCP (magic +

@@ -12,7 +12,10 @@
 //!               --shed reject-new|drop-oldest deciding what QueueFull drops;
 //!               --models a,b,c serves several models through one pool,
 //!               batched per model, and --reload <model> hot-swaps that
-//!               model mid-burst with zero lost requests).
+//!               model mid-burst with zero lost requests;
+//!               --shards N scatters one model's clauses over N workers
+//!               and reduces partial sums, with --straggler-ms bounding
+//!               how long the reduce waits on a slow shard).
 //!               With --listen ADDR the pool serves the binary wire
 //!               protocol over TCP instead of a local burst: --synthetic N
 //!               serves N in-memory synthetic models (no artifacts needed),
@@ -167,7 +170,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(&[
         "artifacts", "model", "models", "requests", "batch", "deadline-us", "workers",
         "dispatch", "backend", "hw-replay", "queue-limit", "shed", "reload", "csv",
-        "listen", "synthetic", "conn-limit", "port-file", "duration-s",
+        "listen", "synthetic", "conn-limit", "port-file", "duration-s", "shards",
+        "straggler-ms",
     ])?;
     // `--models a,b,c` serves several models through one pool (requests
     // alternate across them); `--model` remains the single-model form.
@@ -204,12 +208,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             n => Some(n),
         },
         shed: ShedPolicy::from_name(args.opt_or("shed", "reject-new"))?,
+        straggler_deadline: std::time::Duration::from_millis(args.opt_u64("straggler-ms", 2000)?),
     };
+    // `--shards N` (N > 1) serves ONE model through the scatter/reduce
+    // plan: N workers each own a clause shard, every request fans out to
+    // all of them, and a reduce slot re-argmaxes the merged partial sums
+    // (bit-exact with the unsharded pool). `--straggler-ms` bounds how
+    // long the reduce waits for a slow shard before failing the request.
+    let n_shards = args.opt_usize("shards", 1)?;
     // `--listen ADDR` switches from the self-driving local burst to the
     // TCP front end: the pool serves the wire protocol until killed (or
     // for --duration-s seconds).
     if let Some(listen) = args.opt("listen") {
-        return serve_network(args, cfg, names, listen);
+        return serve_network(args, cfg, names, listen, n_shards);
     }
     let root = artifacts_root(args);
     let manifest = Manifest::load(&root)?;
@@ -219,8 +230,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         tests.push(TestSet::load(&entry.test_data_path)?);
     }
 
-    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
-    let coord = Coordinator::start_multi(root, &name_refs, cfg)?;
+    let coord = if n_shards > 1 {
+        anyhow::ensure!(
+            names.len() == 1,
+            "--shards serves exactly one model (got --models {names:?})"
+        );
+        Coordinator::start_sharded(root, &names[0], n_shards, cfg)?
+    } else {
+        let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        Coordinator::start_multi(root, &name_refs, cfg)?
+    };
     let mids: Vec<_> = names
         .iter()
         .map(|n| coord.model_id(n).expect("started models resolve"))
@@ -290,12 +309,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let pm = coord.metrics_for(mid).expect("served model has metrics");
         println!(
             "  model {name}: {} requests in {} batches, accuracy {:.1}%, \
-             p50 {:.0} us p99 {:.0} us",
+             p50 {:.0} us p99 {:.0} us, clause skip {:.1}% ({} skipped / {} eligible)",
             pm.requests,
             pm.batches,
             100.0 * correct[mid.index()] as f64 / (pm.requests.max(1)) as f64,
             pm.service_p50_us,
-            pm.service_p99_us
+            pm.service_p99_us,
+            100.0 * pm.clause_skip_rate,
+            pm.clauses_skipped,
+            pm.clauses_eligible
         );
     }
     for (i, wm) in coord.worker_metrics().iter().enumerate() {
@@ -330,6 +352,7 @@ fn serve_network(
     mut cfg: CoordinatorConfig,
     mut names: Vec<String>,
     listen: &str,
+    n_shards: usize,
 ) -> Result<()> {
     let root;
     if let Some(n) = args.opt("synthetic") {
@@ -354,12 +377,30 @@ fn serve_network(
     } else {
         root = artifacts_root(args);
     }
-    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
-    let coord = std::sync::Arc::new(Coordinator::start_multi(root, &name_refs, cfg)?);
+    let coord = if n_shards > 1 {
+        anyhow::ensure!(
+            names.len() == 1,
+            "--shards serves exactly one model (got --models {names:?})"
+        );
+        std::sync::Arc::new(Coordinator::start_sharded(root, &names[0], n_shards, cfg)?)
+    } else {
+        let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        std::sync::Arc::new(Coordinator::start_multi(root, &name_refs, cfg)?)
+    };
     let server_cfg = ServerConfig { max_conns: args.opt_usize("conn-limit", 256)? };
     let server = Server::start(coord.clone(), listen, server_cfg)?;
     let addr = server.local_addr();
-    println!("serving [{}] on {addr} ({} workers)", names.join(", "), coord.n_workers());
+    match coord.n_shards() {
+        1 => println!(
+            "serving [{}] on {addr} ({} workers)",
+            names.join(", "),
+            coord.n_workers()
+        ),
+        s => println!(
+            "serving [{}] on {addr} (scatter/reduce over {s} clause shards)",
+            names.join(", ")
+        ),
+    }
     // `--port-file P`: publish the bound address for scripts (written to
     // a temp file first, then renamed, so a poller never reads a partial
     // write).

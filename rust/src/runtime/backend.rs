@@ -13,7 +13,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::flow::FlowConfig;
 use crate::hw::{HwArch, HwOutcome};
-use crate::tm::{ForwardScratch, Manifest, PackedBatch, TmModel};
+use crate::tm::{ForwardScratch, HotLoopStats, Manifest, PackedBatch, PartialOutput, TmModel};
 
 use super::ForwardOutput;
 
@@ -61,6 +61,31 @@ pub trait InferenceBackend {
     fn hw_arch(&self) -> Option<HwArch> {
         None
     }
+    /// Run the forward pass and return this backend's *partial* view of
+    /// the batch (per-class i32 partial sums + shard-local fired words —
+    /// see `tm::PartialOutput`). An unsharded backend is, definitionally,
+    /// shard 0 of a 1-shard plan, so the default wraps [`InferenceBackend::forward`];
+    /// a shard-serving backend ([`super::ShardBackend`]) overrides this
+    /// with its genuine partial evaluation. The reduce side
+    /// (`tm::merge_partials`, the coordinator's scatter/reduce plan)
+    /// accepts either.
+    fn forward_partial(&self, batch: &PackedBatch) -> Result<PartialOutput> {
+        Ok(PartialOutput::from_full(self.forward(batch)?))
+    }
+    /// `(shard index, shard count)` when this backend serves one clause
+    /// shard of its model; `None` for whole-model backends.
+    fn shard(&self) -> Option<(usize, usize)> {
+        None
+    }
+    /// Cumulative hot-loop telemetry (rows / skipped / eligible /
+    /// pruned) for backends that run the clause-indexed scan; `None`
+    /// where no such loop exists (e.g. PJRT). The coordinator diffs
+    /// successive snapshots into per-batch metric deltas, which is how
+    /// `ForwardScratch`'s counters reach `MetricsSnapshot` and the
+    /// `serve` per-tenant breakdown.
+    fn hot_loop_stats(&self) -> Option<HotLoopStats> {
+        None
+    }
 }
 
 /// A `Send + Clone` recipe for constructing a backend inside a worker
@@ -94,10 +119,45 @@ pub enum BackendSpec {
         flow: FlowConfig,
         model: Option<Arc<TmModel>>,
     },
+    /// Serve one clause shard of a model ([`super::ShardBackend`] over a
+    /// `tm::ClauseShard` view): `forward_partial` returns the shard's
+    /// partial class sums + shard-local fired words, and `forward`
+    /// satisfies the whole-model contract with shard-local argmax (only
+    /// meaningful behind the coordinator's scatter/reduce plan, which
+    /// re-argmaxes over merged sums). `model: None` loads from the
+    /// artifact manifest; `hw: Some(arch)` attaches a per-shard
+    /// simulated engine so `ReplayPolicy` replay yields per-shard
+    /// decision latencies the reduce maxes into a critical-path
+    /// estimate. `for_worker` assigns worker `w` shard `w % n_shards`,
+    /// which is how `Coordinator::start_sharded` pins one shard per
+    /// worker.
+    Sharded {
+        model: Option<Arc<TmModel>>,
+        shard: ShardSpec,
+        hw: Option<HwArch>,
+    },
     /// Execute the AOT-compiled HLO on a PJRT client (requires artifacts
     /// and real xla bindings; see rust/README.md).
     #[cfg(feature = "pjrt")]
     Pjrt,
+}
+
+/// Which clause shard of a model a [`BackendSpec::Sharded`] spec serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Shard ordinal, `0..n_shards`.
+    pub index: usize,
+    /// Total shards in the plan.
+    pub n_shards: usize,
+}
+
+impl ShardSpec {
+    /// Shard 0 of an `n_shards` plan — the placeholder
+    /// `Coordinator::start_sharded` hands to `for_worker`, which picks
+    /// the real per-worker index.
+    pub fn first_of(n_shards: usize) -> ShardSpec {
+        ShardSpec { index: 0, n_shards }
+    }
 }
 
 impl BackendSpec {
@@ -134,6 +194,7 @@ impl BackendSpec {
             BackendSpec::TimeDomain { arch: HwArch::Async, .. } => "hw:async",
             BackendSpec::TimeDomain { arch: HwArch::Adder, .. } => "hw:adder",
             BackendSpec::TimeDomain { arch: HwArch::Fpt18, .. } => "hw:fpt18",
+            BackendSpec::Sharded { .. } => "sharded",
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt => "pjrt",
         }
@@ -147,15 +208,24 @@ impl BackendSpec {
                 | BackendSpec::InMemorySet(_)
                 | BackendSpec::FaultInjecting(_)
                 | BackendSpec::TimeDomain { model: Some(_), .. }
+                | BackendSpec::Sharded { model: Some(_), .. }
         )
     }
 
     /// Derive the spec worker `w` should open: time-domain specs get a
     /// distinct die seed per worker (independent simulated chips, like a
-    /// rack of boards), every other spec is unchanged.
+    /// rack of boards), sharded specs pin worker `w` to shard
+    /// `w % n_shards` (the coordinator's scatter plan: one shard per
+    /// worker), every other spec is unchanged.
     pub fn for_worker(mut self, w: usize) -> BackendSpec {
-        if let BackendSpec::TimeDomain { flow, .. } = &mut self {
-            flow.die_seed = flow.die_seed.wrapping_add(w as u64);
+        match &mut self {
+            BackendSpec::TimeDomain { flow, .. } => {
+                flow.die_seed = flow.die_seed.wrapping_add(w as u64);
+            }
+            BackendSpec::Sharded { shard, .. } => {
+                shard.index = w % shard.n_shards.max(1);
+            }
+            _ => {}
         }
         self
     }
@@ -210,6 +280,24 @@ impl BackendSpec {
                     }
                 };
                 Ok(Box::new(super::hw_backend::HwBackend::build(m, *arch, flow)?))
+            }
+            BackendSpec::Sharded { model: mem, shard, hw } => {
+                let m = match mem {
+                    Some(m) => {
+                        ensure!(
+                            m.name == model,
+                            "in-memory spec holds model {:?}, not {model:?}",
+                            m.name
+                        );
+                        m.clone()
+                    }
+                    None => {
+                        let manifest = Manifest::load(root)?;
+                        let entry = manifest.entry(model)?;
+                        Arc::new(TmModel::load(&entry.model_path)?)
+                    }
+                };
+                Ok(Box::new(super::shard_backend::ShardBackend::build(m, *shard, *hw)?))
             }
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt => {
@@ -285,6 +373,10 @@ impl InferenceBackend for NativeBackend {
     fn forward(&self, batch: &PackedBatch) -> Result<ForwardOutput> {
         let mut scratch = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
         self.model.forward_packed_with(batch, &mut scratch)
+    }
+
+    fn hot_loop_stats(&self) -> Option<HotLoopStats> {
+        Some(self.scratch.lock().unwrap_or_else(|e| e.into_inner()).stats())
     }
 }
 
@@ -362,6 +454,10 @@ impl InferenceBackend for FaultInjectingBackend {
             }
         }
         self.inner.forward(batch)
+    }
+
+    fn hot_loop_stats(&self) -> Option<HotLoopStats> {
+        self.inner.hot_loop_stats()
     }
 }
 

@@ -16,7 +16,7 @@ use anyhow::Result;
 
 use crate::flow::FlowConfig;
 use crate::hw::{HwArch, HwEngine, HwOutcome};
-use crate::tm::{ForwardScratch, PackedBatch, TmModel};
+use crate::tm::{ForwardScratch, HotLoopStats, PackedBatch, TmModel};
 
 use super::backend::InferenceBackend;
 use super::ForwardOutput;
@@ -95,6 +95,10 @@ impl InferenceBackend for HwBackend {
 
     fn hw_arch(&self) -> Option<HwArch> {
         Some(self.arch)
+    }
+
+    fn hot_loop_stats(&self) -> Option<HotLoopStats> {
+        Some(self.scratch.lock().unwrap_or_else(|e| e.into_inner()).stats())
     }
 }
 

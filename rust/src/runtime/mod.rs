@@ -11,6 +11,12 @@
 //!   hardware engine ([`crate::hw::HwEngine`]: the async time-domain
 //!   design, the generic adder tree, or FPT'18) reachable through
 //!   [`InferenceBackend::replay`] for per-request on-chip timing.
+//! * [`ShardBackend`] (`BackendSpec::Sharded`) — *partial* evaluation of
+//!   one clause shard ([`crate::tm::ClauseShard`]): per-class partial
+//!   sums + shard-local fired words through
+//!   [`InferenceBackend::forward_partial`], merged by the coordinator's
+//!   scatter/reduce plan (`Coordinator::start_sharded`) into answers
+//!   bit-exact with the unsharded forward pass.
 //! * `PjrtBackend` (`--features pjrt`) — compiles the AOT-lowered HLO text
 //!   emitted by `python/compile/aot.py` on the PJRT CPU client and executes
 //!   it. PJRT clients wrap raw pointers and are not `Send`, so PJRT
@@ -36,18 +42,26 @@ pub mod hw_backend;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod registry;
+pub mod shard_backend;
 
-pub use backend::{BackendSpec, FaultInjectingBackend, InferenceBackend, NativeBackend};
+pub use backend::{BackendSpec, FaultInjectingBackend, InferenceBackend, NativeBackend, ShardSpec};
 pub use hw_backend::HwBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::{ModelRunner, PjrtBackend};
 pub use registry::ModelRegistry;
+pub use shard_backend::ShardBackend;
 
 /// The forward-pass output every backend returns. Defined next to
 /// [`crate::tm::TmModel::forward_packed`] in the model layer (so `tm`
 /// has no dependency on the serving runtime) and re-exported here as the
 /// seam's interchange type.
 pub use crate::tm::model::ForwardOutput;
+
+/// One shard's partial view of a batch — what
+/// [`InferenceBackend::forward_partial`] returns (partial class sums +
+/// shard-local fired words). Defined in the model layer next to
+/// `tm::merge_partials`, the pure reduce.
+pub use crate::tm::model::PartialOutput;
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,210 @@
+//! One clause shard as a first-class inference backend.
+//!
+//! [`ShardBackend`] is how the scatter half of the scatter/reduce plan
+//! reaches the [`super::InferenceBackend`] seam: each coordinator worker
+//! of a sharded pool (`Coordinator::start_sharded`) opens a
+//! `BackendSpec::Sharded` spec pinned to its own shard, evaluates only
+//! that contiguous slice of the clause-index arena
+//! ([`crate::tm::ClauseShard`]), and answers with *partial* class sums
+//! plus shard-local fired words. The coordinator's reduce slot adds the
+//! partials and re-argmaxes; `tm::merge_partials` is the pure, tested
+//! statement of that merge.
+//!
+//! With `hw: Some(arch)` the shard carries its own simulated engine —
+//! one die per shard, built for the full model geometry but replayed
+//! with only the shard's fired bits, modeling a voter slice whose
+//! decision latency is the time *this shard's* votes take to race. The
+//! reduce takes the max of the per-shard decision latencies as the
+//! plan's critical-path estimate (votes merge after the slowest slice).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::flow::FlowConfig;
+use crate::hw::{HwArch, HwEngine, HwOutcome};
+use crate::tm::{ClauseShard, ForwardScratch, HotLoopStats, PackedBatch, PartialOutput, TmModel};
+
+use super::backend::{InferenceBackend, ShardSpec};
+use super::ForwardOutput;
+
+/// Partial (one-shard) evaluation behind the whole-model backend seam.
+pub struct ShardBackend {
+    shard: ClauseShard,
+    arch: Option<HwArch>,
+    engine: Option<Mutex<Box<dyn HwEngine>>>,
+    /// Same per-worker uncontended mutex shape as `NativeBackend`.
+    scratch: Mutex<ForwardScratch>,
+}
+
+impl ShardBackend {
+    /// Carve the shard view out of `model` and optionally attach a
+    /// simulated engine. Each shard gets a distinct die
+    /// (`die_seed + index`), mirroring how `BackendSpec::for_worker`
+    /// seeds time-domain workers.
+    pub fn build(model: Arc<TmModel>, spec: ShardSpec, hw: Option<HwArch>) -> Result<ShardBackend> {
+        let shard = ClauseShard::new(model, spec.index, spec.n_shards)?;
+        let engine = match hw {
+            Some(arch) => {
+                let mut flow = FlowConfig::table1_default();
+                flow.die_seed = flow.die_seed.wrapping_add(spec.index as u64);
+                Some(Mutex::new(arch.build_for_model(shard.model(), &flow, flow.die_seed)?))
+            }
+            None => None,
+        };
+        Ok(ShardBackend { shard, arch: hw, engine, scratch: Mutex::new(ForwardScratch::new()) })
+    }
+
+    pub fn shard_view(&self) -> &ClauseShard {
+        &self.shard
+    }
+}
+
+impl InferenceBackend for ShardBackend {
+    fn kind(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn platform(&self) -> String {
+        let base = match self.arch {
+            Some(arch) => format!("hw:{} (simulated)", arch.name()),
+            None => "native".to_string(),
+        };
+        format!("shard {}/{} over {base}", self.shard.index() + 1, self.shard.n_shards())
+    }
+
+    fn model_name(&self) -> &str {
+        &self.shard.model().name
+    }
+
+    // Shape accessors report the *whole model*: admission control gates
+    // request width against them, and every shard of a plan must accept
+    // exactly the rows the unsharded pool would.
+    fn n_features(&self) -> usize {
+        self.shard.model().n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.shard.model().n_classes
+    }
+
+    fn c_total(&self) -> usize {
+        self.shard.model().c_total()
+    }
+
+    /// Whole-model contract satisfied with shard-local data: sums are
+    /// this shard's partial sums, fired rows carry only shard-owned
+    /// bits, and `pred` is the shard-local argmax — meaningful only
+    /// through a reduce that re-argmaxes over merged sums.
+    fn forward(&self, batch: &PackedBatch) -> Result<ForwardOutput> {
+        Ok(self.forward_partial(batch)?.into_forward_output())
+    }
+
+    fn forward_partial(&self, batch: &PackedBatch) -> Result<PartialOutput> {
+        let mut out = PartialOutput::empty(
+            self.n_classes(),
+            self.c_total(),
+            self.shard.index(),
+            self.shard.n_shards(),
+        );
+        let mut scratch = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        self.shard.partial_class_sums_into(batch, &mut scratch, &mut out)?;
+        Ok(out)
+    }
+
+    /// Replay this shard's fired bits through its own die. The outcome's
+    /// decision latency is the shard's slice of the vote race; the
+    /// reduce takes the max over shards as the critical path.
+    fn replay(&self, out: &ForwardOutput, row: usize) -> Option<HwOutcome> {
+        let engine = self.engine.as_ref()?;
+        let mut engine = engine.lock().unwrap_or_else(|e| e.into_inner());
+        Some(engine.replay_row(&out.clause_bits_row(row), out.sums_row(row)))
+    }
+
+    fn hw_arch(&self) -> Option<HwArch> {
+        self.arch
+    }
+
+    fn shard(&self) -> Option<(usize, usize)> {
+        Some((self.shard.index(), self.shard.n_shards()))
+    }
+
+    fn hot_loop_stats(&self) -> Option<HotLoopStats> {
+        Some(self.scratch.lock().unwrap_or_else(|e| e.into_inner()).stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{BackendSpec, NativeBackend};
+    use crate::tm::merge_partials;
+
+    fn model() -> Arc<TmModel> {
+        Arc::new(TmModel::synthetic("shardb", 3, 22, 17, 0.15, 13))
+    }
+
+    fn rows(n: usize, f: usize, seed: u64) -> Vec<Vec<bool>> {
+        let mut rng = crate::util::SplitMix64::new(seed);
+        (0..n).map(|_| (0..f).map(|_| rng.next_bool(0.5)).collect()).collect()
+    }
+
+    #[test]
+    fn shard_backends_merge_to_the_native_answer() {
+        let m = model();
+        let native = NativeBackend::new(m.clone());
+        let batch = PackedBatch::from_rows(&rows(6, 17, 9)).unwrap();
+        let full = native.forward(&batch).unwrap();
+        for n_shards in [1usize, 2, 4] {
+            let backends: Vec<ShardBackend> = (0..n_shards)
+                .map(|i| {
+                    ShardBackend::build(m.clone(), ShardSpec { index: i, n_shards }, None).unwrap()
+                })
+                .collect();
+            let parts: Vec<PartialOutput> =
+                backends.iter().map(|b| b.forward_partial(&batch).unwrap()).collect();
+            assert_eq!(merge_partials(&parts).unwrap(), full, "n_shards={n_shards}");
+            for b in &backends {
+                assert_eq!(b.n_features(), m.n_features, "width contract is whole-model");
+                assert_eq!(b.shard().unwrap().1, n_shards);
+                assert!(b.hot_loop_stats().unwrap().rows > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn default_forward_partial_is_the_one_shard_view() {
+        let m = model();
+        let native = NativeBackend::new(m.clone());
+        let batch = PackedBatch::from_rows(&rows(3, 17, 2)).unwrap();
+        let p = native.forward_partial(&batch).unwrap();
+        assert_eq!((p.shard, p.n_shards), (0, 1));
+        assert_eq!(merge_partials(&[p]).unwrap(), native.forward(&batch).unwrap());
+        assert_eq!(native.shard(), None);
+    }
+
+    #[test]
+    fn sharded_spec_opens_pins_and_replays() {
+        let m = model();
+        let spec = BackendSpec::Sharded {
+            model: Some(m.clone()),
+            shard: ShardSpec::first_of(4),
+            hw: Some(HwArch::Adder),
+        };
+        assert_eq!(spec.name(), "sharded");
+        assert!(!spec.needs_manifest());
+        // for_worker pins worker w to shard w % n_shards.
+        let spec3 = spec.clone().for_worker(3);
+        let b = spec3.open(std::path::Path::new("/nonexistent"), "shardb").unwrap();
+        assert_eq!(b.kind(), "sharded");
+        assert_eq!(b.shard(), Some((3, 4)));
+        assert!(b.platform().contains("shard 4/4"), "{}", b.platform());
+        assert_eq!(b.hw_arch(), Some(HwArch::Adder));
+        let batch = PackedBatch::from_rows(&rows(2, 17, 5)).unwrap();
+        let out = b.forward(&batch).unwrap();
+        let o = b.replay(&out, 0).expect("hw-attached shard replays");
+        assert!(o.decision_latency > crate::util::Ps::ZERO);
+        // Wrong model name fails at open, like every in-memory spec.
+        assert!(spec.open(std::path::Path::new("/nonexistent"), "other").is_err());
+    }
+}

@@ -97,6 +97,19 @@ pub fn copy_bits(dst: &mut [u64], dst_off: usize, src: &[u64], n_bits: usize) {
     }
 }
 
+/// OR `src` into `dst` word-wise (equal lengths). The reduce half of
+/// clause sharding leans on this: shards of one plan own disjoint bit
+/// sets over the same `c_total`-bit row space, so OR-ing their
+/// shard-local fired rows reconstructs the unsharded fired row exactly
+/// (see `tm::model::merge_partials`).
+#[inline]
+pub fn or_into(dst: &mut [u64], src: &[u64]) {
+    debug_assert_eq!(dst.len(), src.len(), "or_into: word-length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d |= s;
+    }
+}
+
 /// One bit vector backed by `u64` words (LSB-first, zero tail).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct BitVec64 {
@@ -321,6 +334,26 @@ impl PackedBatch {
 mod tests {
     use super::*;
     use crate::util::SplitMix64;
+
+    #[test]
+    fn or_into_unions_disjoint_partitions() {
+        // Split a random word row bit-wise across three "shards"; OR-ing
+        // the parts back must reconstruct the original exactly.
+        let mut rng = SplitMix64::new(77);
+        let full: Vec<u64> = (0..5).map(|_| rng.next_u64()).collect();
+        let mask: Vec<u64> = (0..5).map(|_| rng.next_u64()).collect();
+        let mask2: Vec<u64> = (0..5).map(|_| rng.next_u64()).collect();
+        let a: Vec<u64> = full.iter().zip(&mask).map(|(&f, &m)| f & m).collect();
+        let b: Vec<u64> =
+            full.iter().zip(&mask).zip(&mask2).map(|((&f, &m), &m2)| f & !m & m2).collect();
+        let c: Vec<u64> =
+            full.iter().zip(&mask).zip(&mask2).map(|((&f, &m), &m2)| f & !m & !m2).collect();
+        let mut acc = vec![0u64; 5];
+        for part in [&a, &b, &c] {
+            or_into(&mut acc, part);
+        }
+        assert_eq!(acc, full);
+    }
 
     #[test]
     fn bitvec_roundtrip_across_word_boundaries() {

@@ -12,7 +12,10 @@ pub mod model;
 
 pub use bits::{BitVec64, PackedBatch};
 pub use datasets::TestSet;
-pub use model::{ClauseIndexStats, ForwardScratch, TmModel, WorkloadSpec};
+pub use model::{
+    merge_partials, ClauseIndexStats, ClauseShard, ForwardScratch, HotLoopStats, PartialOutput,
+    TmModel, WorkloadSpec,
+};
 
 use std::path::{Path, PathBuf};
 

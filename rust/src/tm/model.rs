@@ -28,12 +28,15 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
 use crate::util::json;
 
-use super::bits::{copy_bits, is_subset, tail_mask, words_for, BitVec64, PackedBatch, WORD_BITS};
+use super::bits::{
+    copy_bits, is_subset, or_into, tail_mask, words_for, BitVec64, PackedBatch, WORD_BITS,
+};
 use super::parse_bits;
 
 /// Output of one batched TM forward pass (mirrors `model.tm_forward` on the
@@ -114,6 +117,158 @@ impl ForwardOutput {
             .map(|k| (k * per..(k + 1) * per).map(|c| self.fired.bit(b, c)).collect())
             .collect()
     }
+}
+
+/// Output of one batched *partial* forward pass: one clause shard's
+/// contribution to a batch (see [`ClauseShard`]). Same layout as
+/// [`ForwardOutput`] minus predictions — a shard cannot argmax, only the
+/// reduce over all shards can — plus the shard coordinates needed to
+/// prove an exact cover at merge time. `fired` rows are full
+/// `c_total`-bit rows with only this shard's clause bits set, so shard
+/// outputs OR together into exactly the unsharded fired rows (hardware
+/// replay consumes them per shard: each shard models one voter slice,
+/// and the serving layer takes the max-over-shards decision latency as
+/// the critical path).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartialOutput {
+    pub batch: usize,
+    pub n_classes: usize,
+    pub c_total: usize,
+    /// Which shard produced this partial (`0..n_shards`).
+    pub shard: usize,
+    /// Total shards in the plan this partial belongs to.
+    pub n_shards: usize,
+    /// (batch × n_classes) row-major partial class sums — this shard's
+    /// signed votes only.
+    pub sums: Vec<i32>,
+    /// Bit-packed clause outputs, full-width rows, shard-owned bits only.
+    pub fired: PackedBatch,
+}
+
+impl PartialOutput {
+    /// A partial with zero rows, ready for [`ClauseShard::partial_class_sums_into`].
+    pub fn empty(n_classes: usize, c_total: usize, shard: usize, n_shards: usize) -> PartialOutput {
+        PartialOutput {
+            batch: 0,
+            n_classes,
+            c_total,
+            shard,
+            n_shards,
+            sums: Vec::new(),
+            fired: PackedBatch::new(c_total),
+        }
+    }
+
+    /// Wrap a full forward output as the single shard of a 1-shard plan
+    /// (the default [`crate::runtime::InferenceBackend`] partial path:
+    /// an unsharded backend *is* shard 0 of 1).
+    pub fn from_full(out: ForwardOutput) -> PartialOutput {
+        PartialOutput {
+            batch: out.batch,
+            n_classes: out.n_classes,
+            c_total: out.c_total,
+            shard: 0,
+            n_shards: 1,
+            sums: out.sums,
+            fired: out.fired,
+        }
+    }
+
+    pub fn sums_row(&self, b: usize) -> &[i32] {
+        &self.sums[b * self.n_classes..(b + 1) * self.n_classes]
+    }
+
+    /// Packed shard-local fired words of sample `b`.
+    pub fn fired_words_row(&self, b: usize) -> &[u64] {
+        self.fired.row(b)
+    }
+
+    /// View this partial as a [`ForwardOutput`] with *shard-local*
+    /// argmax predictions (ties → lowest index). Only meaningful behind
+    /// a reduce that recomputes the argmax over merged sums; exists so a
+    /// shard-serving backend can satisfy the unsharded `forward`
+    /// contract with its real partial data.
+    pub fn into_forward_output(self) -> ForwardOutput {
+        let pred = (0..self.batch).map(|b| argmax_lowest(self.sums_row(b))).collect();
+        ForwardOutput {
+            batch: self.batch,
+            n_classes: self.n_classes,
+            c_total: self.c_total,
+            sums: self.sums,
+            fired: self.fired,
+            pred,
+        }
+    }
+}
+
+/// Argmax with ties resolving to the lowest index (`jnp.argmax`).
+#[inline]
+fn argmax_lowest(sums: &[i32]) -> i32 {
+    let mut best = 0usize;
+    for (k, &s) in sums.iter().enumerate() {
+        if s > sums[best] {
+            best = k;
+        }
+    }
+    best as i32
+}
+
+/// Reduce one batch's shard partials into the unsharded result — the
+/// pure merge half of the scatter/reduce plan. Requires an *exact
+/// cover*: every shard `0..n_shards` present exactly once, all partials
+/// agreeing on shape and batch size. Class sums add element-wise (each
+/// clause votes in exactly one shard), fired rows OR together
+/// (shard-disjoint bit sets), and predictions re-argmax over the merged
+/// sums with ties still resolving to the lowest class index — bit-exact
+/// with [`TmModel::forward_packed`] on the same batch, for any shard
+/// count (see `tests/sharded_forward.rs`).
+pub fn merge_partials(parts: &[PartialOutput]) -> Result<ForwardOutput> {
+    ensure!(!parts.is_empty(), "merge_partials: no partials");
+    let p0 = &parts[0];
+    let (batch, k, c_total, n_shards) = (p0.batch, p0.n_classes, p0.c_total, p0.n_shards);
+    ensure!(
+        parts.len() == n_shards,
+        "merge_partials: {} partials for an {n_shards}-shard plan",
+        parts.len()
+    );
+    let mut seen = vec![false; n_shards];
+    for p in parts {
+        ensure!(
+            p.batch == batch && p.n_classes == k && p.c_total == c_total,
+            "merge_partials: shard {} shape ({}, {}, {}) != ({batch}, {k}, {c_total})",
+            p.shard,
+            p.batch,
+            p.n_classes,
+            p.c_total
+        );
+        ensure!(
+            p.n_shards == n_shards && p.shard < n_shards,
+            "merge_partials: shard {}/{} in an {n_shards}-shard merge",
+            p.shard,
+            p.n_shards
+        );
+        ensure!(!seen[p.shard], "merge_partials: shard {} present twice", p.shard);
+        seen[p.shard] = true;
+    }
+    let mut out = ForwardOutput::empty(k, c_total);
+    out.batch = batch;
+    out.sums = vec![0i32; batch * k];
+    for p in parts {
+        for (acc, &s) in out.sums.iter_mut().zip(&p.sums) {
+            *acc += s;
+        }
+    }
+    let words = words_for(c_total);
+    let mut row = vec![0u64; words];
+    for b in 0..batch {
+        row.fill(0);
+        for p in parts {
+            or_into(&mut row, p.fired_words_row(b));
+        }
+        out.fired.push_words(&row);
+    }
+    out.pred = (0..batch).map(|b| argmax_lowest(out.sums_row(b))).collect();
+    Ok(out)
 }
 
 /// A trained multi-class TM in the interchange layout (clause axis
@@ -290,6 +445,47 @@ pub struct ForwardScratch {
     pub classes_pruned: u64,
 }
 
+/// A copyable snapshot of [`ForwardScratch`]'s hot-loop telemetry — the
+/// form the counters travel in once they leave the scratch: backends
+/// expose it ([`crate::runtime::InferenceBackend::hot_loop_stats`]), the
+/// coordinator folds per-batch deltas into its pool metrics, and `serve`
+/// prints the per-tenant skip rate from the aggregated copy.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HotLoopStats {
+    /// Rows evaluated.
+    pub rows: u64,
+    /// Clauses the index skipped without evaluation.
+    pub clauses_skipped: u64,
+    /// Clauses an unindexed scan would have evaluated.
+    pub clauses_eligible: u64,
+    /// Classes the early-exit argmax never summed.
+    pub classes_pruned: u64,
+}
+
+impl HotLoopStats {
+    /// Fraction of eligible clause evaluations the index skipped.
+    pub fn skip_rate(&self) -> f64 {
+        if self.clauses_eligible == 0 {
+            0.0
+        } else {
+            self.clauses_skipped as f64 / self.clauses_eligible as f64
+        }
+    }
+
+    /// Counter-wise difference against an earlier snapshot of the same
+    /// scratch (saturating, so a mid-flight `reset` yields zeros rather
+    /// than wrapping) — how the coordinator turns cumulative backend
+    /// counters into additive per-batch metric deltas.
+    pub fn delta_since(&self, earlier: &HotLoopStats) -> HotLoopStats {
+        HotLoopStats {
+            rows: self.rows.saturating_sub(earlier.rows),
+            clauses_skipped: self.clauses_skipped.saturating_sub(earlier.clauses_skipped),
+            clauses_eligible: self.clauses_eligible.saturating_sub(earlier.clauses_eligible),
+            classes_pruned: self.classes_pruned.saturating_sub(earlier.classes_pruned),
+        }
+    }
+}
+
 impl ForwardScratch {
     pub fn new() -> ForwardScratch {
         ForwardScratch::default()
@@ -301,6 +497,16 @@ impl ForwardScratch {
             0.0
         } else {
             self.clauses_skipped as f64 / self.clauses_eligible as f64
+        }
+    }
+
+    /// Copyable snapshot of the telemetry counters.
+    pub fn stats(&self) -> HotLoopStats {
+        HotLoopStats {
+            rows: self.rows,
+            clauses_skipped: self.clauses_skipped,
+            clauses_eligible: self.clauses_eligible,
+            classes_pruned: self.classes_pruned,
         }
     }
 
@@ -335,11 +541,15 @@ pub(crate) fn pack_bits(bits: &[bool]) -> Vec<u64> {
 /// Build the per-class polarity masks. A clause contributes to the mask
 /// only if it is non-empty (an empty clause's fired bit is always 0
 /// anyway, but keeping the masks tight makes them self-describing).
+/// With `owned`, only clauses whose flag is set contribute — the
+/// [`ClauseShard`] view slices its partial-sum masks this way, so a
+/// shard's popcount can never count a fired bit another shard owns.
 fn build_class_masks(
     n_classes: usize,
     clauses_per_class: usize,
     polarity: &[i8],
     nonempty: &[bool],
+    owned: Option<&[bool]>,
 ) -> Vec<ClassMasks> {
     (0..n_classes)
         .map(|k| {
@@ -350,7 +560,7 @@ fn build_class_masks(
             let mut pos = vec![0u64; span];
             let mut neg = vec![0u64; span];
             for c in lo..hi {
-                if !nonempty[c] {
+                if !nonempty[c] || owned.is_some_and(|o| !o[c]) {
                     continue;
                 }
                 let w = c / WORD_BITS - start;
@@ -398,7 +608,8 @@ impl TmModel {
             packed_include[c * include_words..(c + 1) * include_words]
                 .copy_from_slice(&pack_bits(row));
         }
-        let class_masks = build_class_masks(n_classes, clauses_per_class, &polarity, &nonempty);
+        let class_masks =
+            build_class_masks(n_classes, clauses_per_class, &polarity, &nonempty, None);
         let clause_index = build_clause_index(&packed_include, include_words, &nonempty, None);
         let class_ub_suffix = build_class_ub_suffix(&class_masks, n_classes);
         TmModel {
@@ -1032,6 +1243,226 @@ impl TmModel {
     }
 }
 
+/// One clause shard of a model — the unit of the scatter/reduce plan
+/// (ROADMAP item 3; Abeyrathna et al., arXiv 2009.04861: clause
+/// evaluation is embarrassingly parallel once partial votes merge).
+///
+/// A shard is a *view*: a contiguous slice `[slot_lo, slot_hi)` of the
+/// clause index's scan slots (the permuted, cache-contiguous arena
+/// order of the PR-7 hot loop — fallback-first, then bucket-major), the
+/// fallback range and skip buckets clipped to that slice, per-class
+/// polarity masks sliced to the clauses the slice owns, and the
+/// shard-local `class_ub_suffix` bounds. Shards of one plan partition
+/// the scan slots exactly, so:
+///
+/// * partial class sums add across shards to the unsharded
+///   [`TmModel::class_sums_into`] result (each clause votes in exactly
+///   one shard),
+/// * shard-local fired rows OR to the unsharded fired rows (bit sets
+///   are disjoint), and
+/// * bucket skipping still works *within* a shard — a clipped bucket
+///   whose index literal reads 0 is skipped whole, so the near-constant
+///   scaling in clause count composes with the skip index.
+///
+/// Dead clauses (`nonempty` false) have no scan slot and belong to no
+/// shard; their fired bits stay 0 everywhere, as in the unsharded path.
+/// Shards may be empty when `n_shards` exceeds the live clause count —
+/// an empty shard contributes all-zero partials.
+#[derive(Debug, Clone)]
+pub struct ClauseShard {
+    model: Arc<TmModel>,
+    index: usize,
+    n_shards: usize,
+    /// Scan-slot range of this shard (contiguous in the index arena).
+    slot_lo: usize,
+    slot_hi: usize,
+    /// Fallback slots ∩ the shard's slice — scanned on every sample.
+    fallback_lo: usize,
+    fallback_hi: usize,
+    /// Skip buckets clipped to the slice (a bucket straddling a shard
+    /// boundary is evaluated partly by each neighbor).
+    buckets: Vec<IndexBucket>,
+    /// Per-class polarity masks over shard-owned clauses only.
+    class_masks: Vec<ClassMasks>,
+    /// `class_ub[k]` = this shard's positive-polarity clause count for
+    /// class `k`: the most the shard can add to class `k`'s sum. Across
+    /// shards these add to the model-level bound.
+    class_ub: Vec<i32>,
+    /// Suffix maxima of `class_ub` with the `i32::MIN` sentinel at
+    /// `n_classes` — the shard-local analogue of the model's early-exit
+    /// bound: once a reduce's running leader meets
+    /// `Σ_remaining-shards class_ub_suffix[k]`, no later class can win.
+    class_ub_suffix: Vec<i32>,
+}
+
+impl ClauseShard {
+    /// Carve shard `index` of `n_shards` out of a model. Slot ranges are
+    /// the balanced contiguous partition `[i·n/s, (i+1)·n/s)`, so shard
+    /// sizes differ by at most one slot.
+    pub fn new(model: Arc<TmModel>, index: usize, n_shards: usize) -> Result<ClauseShard> {
+        ensure!(n_shards >= 1, "shard plan needs at least one shard");
+        ensure!(index < n_shards, "shard index {index} out of range for {n_shards} shards");
+        let n_slots = model.clause_index.clause_of.len();
+        let slot_lo = index * n_slots / n_shards;
+        let slot_hi = (index + 1) * n_slots / n_shards;
+        let mut owned = vec![false; model.c_total()];
+        for slot in slot_lo..slot_hi {
+            owned[model.clause_index.clause_of[slot] as usize] = true;
+        }
+        let class_masks = build_class_masks(
+            model.n_classes,
+            model.clauses_per_class,
+            &model.polarity,
+            &model.nonempty,
+            Some(&owned),
+        );
+        let class_ub: Vec<i32> = class_masks
+            .iter()
+            .map(|m| m.pos.iter().map(|w| w.count_ones() as i32).sum())
+            .collect();
+        let class_ub_suffix = build_class_ub_suffix(&class_masks, model.n_classes);
+        let idx = &model.clause_index;
+        let fallback_lo = slot_lo.min(idx.n_fallback);
+        let fallback_hi = slot_hi.min(idx.n_fallback);
+        let buckets = idx
+            .buckets
+            .iter()
+            .filter_map(|b| {
+                let lo = (b.start as usize).max(slot_lo);
+                let hi = (b.end as usize).min(slot_hi);
+                (lo < hi).then(|| IndexBucket { lit: b.lit, start: lo as u32, end: hi as u32 })
+            })
+            .collect();
+        Ok(ClauseShard {
+            model,
+            index,
+            n_shards,
+            slot_lo,
+            slot_hi,
+            fallback_lo,
+            fallback_hi,
+            buckets,
+            class_masks,
+            class_ub,
+            class_ub_suffix,
+        })
+    }
+
+    /// All `n_shards` shards of a model — the full scatter plan.
+    pub fn split(model: &Arc<TmModel>, n_shards: usize) -> Result<Vec<ClauseShard>> {
+        (0..n_shards).map(|i| ClauseShard::new(Arc::clone(model), i, n_shards)).collect()
+    }
+
+    pub fn model(&self) -> &Arc<TmModel> {
+        &self.model
+    }
+
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Live scan slots this shard evaluates (0 for an empty shard).
+    pub fn n_slots(&self) -> usize {
+        self.slot_hi - self.slot_lo
+    }
+
+    /// Per-class positive-vote upper bounds within this shard.
+    pub fn class_ub(&self) -> &[i32] {
+        &self.class_ub
+    }
+
+    /// Shard-local suffix maxima of [`ClauseShard::class_ub`] (sentinel
+    /// `i32::MIN` at `n_classes`).
+    pub fn class_ub_suffix(&self) -> &[i32] {
+        &self.class_ub_suffix
+    }
+
+    /// Batched partial forward — the shard half of scatter/reduce.
+    /// Evaluates only this shard's scan slots (fallback slice
+    /// unconditionally, clipped buckets behind their index literal, so
+    /// skip telemetry keeps accumulating on `scratch`) and emits partial
+    /// class sums through the sliced polarity masks plus shard-local
+    /// fired rows into `out` (reset first; buffers keep their capacity).
+    /// `scratch.clauses_eligible` counts this shard's slots only — the
+    /// shard's share of the unindexed work.
+    pub fn partial_class_sums_into(
+        &self,
+        batch: &PackedBatch,
+        scratch: &mut ForwardScratch,
+        out: &mut PartialOutput,
+    ) -> Result<()> {
+        let m = &*self.model;
+        ensure!(
+            batch.is_empty() || batch.bits() == m.n_features,
+            "batch feature width {} != model features {}",
+            batch.bits(),
+            m.n_features
+        );
+        let k = m.n_classes;
+        let c_total = m.c_total();
+        out.batch = batch.rows();
+        out.n_classes = k;
+        out.c_total = c_total;
+        out.shard = self.index;
+        out.n_shards = self.n_shards;
+        out.sums.clear();
+        out.sums.reserve(batch.rows() * k);
+        if out.fired.bits() == c_total {
+            out.fired.truncate_rows(0);
+        } else {
+            out.fired = PackedBatch::new(c_total);
+        }
+        scratch.lits.resize(words_for(2 * m.n_features), 0);
+        scratch.fired.resize(words_for(c_total), 0);
+        scratch.sums.resize(k, 0);
+        for r in 0..batch.rows() {
+            let ForwardScratch { lits, negated, fired, sums, .. } = scratch;
+            m.packed_literals_into(batch.row(r), negated, lits);
+            fired.fill(0);
+            for slot in self.fallback_lo..self.fallback_hi {
+                m.scan_slot(slot, lits, fired);
+            }
+            let mut skipped = 0usize;
+            for b in &self.buckets {
+                let lit = b.lit as usize;
+                if (lits[lit / WORD_BITS] >> (lit % WORD_BITS)) & 1 == 1 {
+                    for slot in b.start as usize..b.end as usize {
+                        m.scan_slot(slot, lits, fired);
+                    }
+                } else {
+                    skipped += (b.end - b.start) as usize;
+                }
+            }
+            for (ki, cm) in self.class_masks.iter().enumerate() {
+                let mut s = 0i32;
+                for (w, (&p, &n)) in cm.pos.iter().zip(&cm.neg).enumerate() {
+                    let fw = fired[cm.start + w];
+                    s += (fw & p).count_ones() as i32 - (fw & n).count_ones() as i32;
+                }
+                sums[ki] = s;
+            }
+            out.fired.push_words(fired);
+            out.sums.extend_from_slice(sums);
+            scratch.rows += 1;
+            scratch.clauses_skipped += skipped as u64;
+            scratch.clauses_eligible += (self.slot_hi - self.slot_lo) as u64;
+        }
+        Ok(())
+    }
+
+    /// Allocating convenience over [`ClauseShard::partial_class_sums_into`].
+    pub fn partial(&self, batch: &PackedBatch) -> Result<PartialOutput> {
+        let mut out =
+            PartialOutput::empty(self.model.n_classes, self.model.c_total(), self.index, self.n_shards);
+        self.partial_class_sums_into(batch, &mut ForwardScratch::new(), &mut out)?;
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
@@ -1305,6 +1736,68 @@ pub(crate) mod tests {
         m.reindex_with_stats(&probs).unwrap();
         let after = m.forward_packed(&batch).unwrap();
         assert_eq!(before, after, "reindexing must never change results");
+    }
+
+    #[test]
+    fn shard_partials_add_up_and_merge_bit_exact() {
+        let m = Arc::new(TmModel::synthetic("shardy", 3, 25, 40, 0.1, 11));
+        let mut rng = crate::util::SplitMix64::new(41);
+        let rows: Vec<Vec<bool>> =
+            (0..9).map(|_| (0..40).map(|_| rng.next_bool(0.5)).collect()).collect();
+        let batch = PackedBatch::from_rows(&rows).unwrap();
+        let full = m.forward_packed(&batch).unwrap();
+        for n_shards in [1usize, 2, 3, 5] {
+            let shards = ClauseShard::split(&m, n_shards).unwrap();
+            // Shard-local positive-vote bounds partition the model bound.
+            for k in 0..m.n_classes {
+                let from_shards: i32 = shards.iter().map(|s| s.class_ub()[k]).sum();
+                let model_ub: i32 =
+                    m.class_masks[k].pos.iter().map(|w| w.count_ones() as i32).sum();
+                assert_eq!(from_shards, model_ub, "n_shards={n_shards} k={k}");
+            }
+            let parts: Vec<PartialOutput> =
+                shards.iter().map(|s| s.partial(&batch).unwrap()).collect();
+            let merged = merge_partials(&parts).unwrap();
+            assert_eq!(merged, full, "n_shards={n_shards}");
+        }
+    }
+
+    #[test]
+    fn merge_partials_rejects_bad_covers() {
+        let m = Arc::new(TmModel::synthetic("cover", 2, 8, 16, 0.2, 7));
+        let batch = PackedBatch::from_rows(&[vec![true; 16]]).unwrap();
+        let shards = ClauseShard::split(&m, 2).unwrap();
+        let parts: Vec<PartialOutput> =
+            shards.iter().map(|s| s.partial(&batch).unwrap()).collect();
+        assert!(merge_partials(&[]).is_err(), "empty");
+        assert!(merge_partials(&parts[..1]).is_err(), "missing shard");
+        assert!(
+            merge_partials(&[parts[0].clone(), parts[0].clone()]).is_err(),
+            "duplicate shard"
+        );
+        let mut other_batch = parts.clone();
+        other_batch[1].batch += 1;
+        assert!(merge_partials(&other_batch).is_err(), "batch mismatch");
+    }
+
+    #[test]
+    fn empty_shards_contribute_nothing() {
+        // toy() has 3 live scan slots; an 8-shard plan must leave some
+        // shards empty, and the merge must still be exact.
+        let m = Arc::new(toy());
+        let batch =
+            PackedBatch::from_rows(&[vec![true, false], vec![false, true]]).unwrap();
+        let shards = ClauseShard::split(&m, 8).unwrap();
+        assert!(shards.iter().any(|s| s.n_slots() == 0), "no empty shard in 8-way toy split");
+        let parts: Vec<PartialOutput> =
+            shards.iter().map(|s| s.partial(&batch).unwrap()).collect();
+        for (s, p) in shards.iter().zip(&parts) {
+            if s.n_slots() == 0 {
+                assert!(p.sums.iter().all(|&v| v == 0));
+                assert_eq!(p.fired.row(0).iter().copied().sum::<u64>(), 0);
+            }
+        }
+        assert_eq!(merge_partials(&parts).unwrap(), m.forward_packed(&batch).unwrap());
     }
 
     #[test]

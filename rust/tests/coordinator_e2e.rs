@@ -54,6 +54,7 @@ fn pool_config(
         replay: ReplayPolicy::Off,
         queue_limit: None,
         shed: ShedPolicy::RejectNew,
+        ..CoordinatorConfig::default()
     }
 }
 
@@ -775,4 +776,171 @@ fn infer_blocking_surfaces_typed_errors() {
     let resp = coord.infer_blocking(mid, &x).unwrap();
     assert_eq!(resp.pred, model.predict(&x));
     coord.shutdown();
+}
+
+// --- scatter/reduce (clause-sharded) pools -------------------------------
+
+/// The sharded tentpole acceptance path: a 3-shard scatter/reduce pool is
+/// *bit-identical* to the unsharded forward pass — class sums, argmax,
+/// and lowest-index tie behaviour — while `shape_for` reports the plan.
+#[test]
+fn sharded_pool_is_bit_identical_to_the_unsharded_forward() {
+    let model = test_model(70);
+    let cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    let coord = Coordinator::start_sharded(unused_root(), "e2e_model", 3, cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
+    assert_eq!(coord.n_shards(), 3);
+    assert_eq!(coord.n_workers(), 3, "sharded pools run one worker per shard");
+    let shape = coord.shape_for(mid).unwrap();
+    assert_eq!(
+        (shape.n_features, shape.n_classes, shape.generation, shape.n_shards),
+        (model.n_features, model.n_classes, 0, 3)
+    );
+
+    let n = 60;
+    let mut inputs = test_inputs(&model, n - 1, 71);
+    // All-false: with no literal set, sums often tie at zero — the merged
+    // re-argmax must still pick the lowest class, like forward_packed.
+    inputs.push(vec![false; model.n_features]);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut expected: HashMap<u64, &Vec<bool>> = HashMap::new();
+    for x in &inputs {
+        expected.insert(coord.submit(mid, x, tx.clone()), x);
+    }
+    drop(tx);
+    let responses: Vec<_> =
+        rx.iter().take(n).map(|r| r.expect("valid requests all serve")).collect();
+    assert_eq!(responses.len(), n);
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.request_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "each scattered request is answered exactly once");
+    for r in &responses {
+        let x = expected[&r.request_id];
+        let (_, sums, pred) = model.forward_reference(x);
+        assert_eq!(r.sums, sums, "request {}", r.request_id);
+        assert_eq!(r.pred, pred, "request {}", r.request_id);
+        assert_eq!(r.generation, 0);
+        assert!(r.worker < 3, "worker tags a shard index");
+        assert!(r.hw_decision_latency.is_none(), "no engine attached");
+    }
+    coord.shutdown();
+}
+
+/// Sharded serving through simulated hardware: every shard carries its
+/// own die, the merged reply's decision latency is the max over shards
+/// (the critical path), and `hw_winner` is cleared — a shard-local
+/// arbiter winner is meaningless for the merged argmax.
+#[test]
+fn sharded_hw_pool_reports_critical_path_latency() {
+    let model = test_model(72);
+    let mut cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    cfg.backend = hw_spec(HwArch::Adder, model.clone());
+    cfg.replay = ReplayPolicy::Full;
+    let coord = Coordinator::start_sharded(unused_root(), "e2e_model", 2, cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
+    for x in test_inputs(&model, 12, 73) {
+        let resp = coord.infer_blocking(mid, &x).unwrap();
+        assert_eq!(resp.pred, model.predict(&x), "functional path bit-exact");
+        let lat = resp.hw_decision_latency.expect("full replay tags every merged reply");
+        assert!(lat > Ps::ZERO);
+        assert!(resp.hw_winner.is_none(), "shard-local winners must not leak");
+    }
+    assert!(coord.metrics().hw_mean_ns > 0.0);
+    coord.shutdown();
+}
+
+/// Hot-swap through a sharded pool: a mid-burst reload loses nothing,
+/// and the generation bump lands in `shape_for` and later replies.
+#[test]
+fn sharded_pool_reloads_without_losing_requests() {
+    let model = test_model(74);
+    let cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    let coord = Coordinator::start_sharded(unused_root(), "e2e_model", 3, cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
+
+    let n = 90;
+    let inputs = test_inputs(&model, n, 75);
+    let (tx, rx) = std::sync::mpsc::channel();
+    for (i, x) in inputs.iter().enumerate() {
+        if i == n / 2 {
+            coord.reload(mid).unwrap();
+        }
+        coord.submit(mid, x, tx.clone());
+    }
+    drop(tx);
+    let responses: Vec<_> =
+        rx.iter().take(n).map(|r| r.expect("reload must lose nothing")).collect();
+    assert_eq!(responses.len(), n);
+    for r in &responses {
+        assert_eq!(r.pred, model.predict(&inputs[r.request_id as usize]));
+        assert!(r.generation <= 1, "generations only 0 (pre) or 1 (post)");
+    }
+    assert!(
+        responses.iter().any(|r| r.generation == 1),
+        "post-reload requests must carry the new generation"
+    );
+    assert_eq!(coord.shape_for(mid).unwrap().generation, 1);
+    // A straggler-free burst: no reduce slot ever timed out.
+    assert_eq!(coord.metrics().failed_batches, 0);
+    coord.shutdown();
+}
+
+/// Typed fail-soft still holds on the scatter path: width mismatches are
+/// rejected at admission (before any shard sees the row), and a
+/// zero-capacity queue sheds with `QueueFull` — exactly once per request,
+/// not once per shard.
+#[test]
+fn sharded_pool_admission_errors_stay_typed_and_single() {
+    let model = test_model(76);
+    let mut cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    cfg.queue_limit = Some(0);
+    cfg.shed = ShedPolicy::RejectNew;
+    let coord = Coordinator::start_sharded(unused_root(), "e2e_model", 4, cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
+
+    let err = coord.infer_blocking(mid, &vec![true; model.n_features + 2]).unwrap_err();
+    let want = InferError::WidthMismatch {
+        got: model.n_features + 2,
+        expected: model.n_features,
+    };
+    assert_eq!(err.downcast_ref::<InferError>(), Some(&want));
+
+    // Zero capacity: the scatter sheds before registering a reduce slot,
+    // so the caller sees exactly one QueueFull.
+    let x = test_inputs(&model, 1, 77).remove(0);
+    let (tx, rx) = std::sync::mpsc::channel();
+    coord.submit(mid, &x, tx.clone());
+    drop(tx);
+    let replies: Vec<_> = rx.iter().collect();
+    assert_eq!(replies.len(), 1, "one reply per request, never one per shard");
+    assert!(
+        matches!(replies[0], Err(InferError::QueueFull { limit: 0, .. })),
+        "expected QueueFull, got {:?}",
+        replies[0]
+    );
+    assert_eq!(coord.metrics().shed_requests, 1);
+    coord.shutdown();
+}
+
+/// Shutdown with a sharded plan neither hangs nor drops: queued work is
+/// drained through the reduce, then the collector exits.
+#[test]
+fn sharded_pool_shutdown_drains_and_joins() {
+    let model = test_model(78);
+    let cfg = pool_config(1, DispatchPolicy::RoundRobin, model.clone());
+    let coord = Coordinator::start_sharded(unused_root(), "e2e_model", 2, cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
+    let n = 40;
+    let (tx, rx) = std::sync::mpsc::channel();
+    for x in test_inputs(&model, n, 79) {
+        coord.submit(mid, &x, tx.clone());
+    }
+    drop(tx);
+    coord.shutdown();
+    assert_eq!(
+        rx.iter().filter(|r| r.is_ok()).count(),
+        n,
+        "graceful shutdown answers everything admitted to the scatter"
+    );
 }

@@ -62,6 +62,7 @@ fn pool_config(n_workers: usize, backend: BackendSpec) -> CoordinatorConfig {
         replay: ReplayPolicy::Off,
         queue_limit: None,
         shed: ShedPolicy::RejectNew,
+        ..CoordinatorConfig::default()
     }
 }
 

@@ -58,6 +58,7 @@ fn pool_config(n_workers: usize) -> CoordinatorConfig {
         replay: ReplayPolicy::Off,
         queue_limit: None,
         shed: ShedPolicy::RejectNew,
+        ..CoordinatorConfig::default()
     }
 }
 

@@ -1,0 +1,133 @@
+//! Property suite for the scatter/reduce merge: across feature widths and
+//! clause counts straddling the 64-bit word boundary, and shard counts
+//! that split class blocks mid-word, the sum of per-shard partial outputs
+//! must reproduce the unsharded `forward_packed` bit for bit — sums,
+//! fired words, and argmax (ties to the lowest class index) alike.
+
+use std::sync::Arc;
+
+use tdpc::tm::{merge_partials, ClauseShard, PackedBatch, PartialOutput, TmModel};
+use tdpc::util::SplitMix64;
+
+/// Random rows plus the two degenerate ones: all-false (no literal set —
+/// only empty-include clauses fire, often an all-zero-sums argmax tie)
+/// and all-true.
+fn test_rows(n: usize, f: usize, seed: u64) -> Vec<Vec<bool>> {
+    let mut rng = SplitMix64::new(seed);
+    let mut rows: Vec<Vec<bool>> =
+        (0..n).map(|_| (0..f).map(|_| rng.next_bool(0.5)).collect()).collect();
+    rows.push(vec![false; f]);
+    rows.push(vec![true; f]);
+    rows
+}
+
+fn partials(shards: &[ClauseShard], batch: &PackedBatch) -> Vec<PartialOutput> {
+    shards.iter().map(|s| s.partial(batch).unwrap()).collect()
+}
+
+/// The grid from the PR spec: f ∈ {31, 63, 64, 65} × c_total ∈
+/// {63, 64, 65, 127} (via (n_classes, clauses_per_class) pairs) ×
+/// n_shards ∈ {1, 2, 3, 7}. Odd shard counts against these clause counts
+/// force shard boundaries inside classes and inside fired words.
+#[test]
+fn shard_partials_merge_to_the_unsharded_forward_across_the_geometry_grid() {
+    for &f in &[31usize, 63, 64, 65] {
+        for &(k, cpc) in &[(3usize, 21usize), (4, 16), (5, 13), (1, 127)] {
+            let model = Arc::new(TmModel::synthetic(
+                &format!("prop_f{f}_k{k}x{cpc}"),
+                k,
+                cpc,
+                f,
+                0.3,
+                f as u64 * 1000 + (k * cpc) as u64,
+            ));
+            let batch = PackedBatch::from_rows(&test_rows(6, f, 99)).unwrap();
+            let full = model.forward_packed(&batch).unwrap();
+            let total_slots = ClauseShard::new(model.clone(), 0, 1).unwrap().n_slots();
+            for &n_shards in &[1usize, 2, 3, 7] {
+                let shards = ClauseShard::split(&model, n_shards).unwrap();
+                // The shards partition the scan arena: no slot lost, none
+                // double-counted.
+                assert_eq!(
+                    shards.iter().map(ClauseShard::n_slots).sum::<usize>(),
+                    total_slots,
+                    "f={f} k={k} cpc={cpc} n_shards={n_shards}: slot partition"
+                );
+                let merged = merge_partials(&partials(&shards, &batch)).unwrap();
+                assert_eq!(
+                    merged, full,
+                    "f={f} k={k} cpc={cpc} n_shards={n_shards}: merged != unsharded"
+                );
+            }
+        }
+    }
+}
+
+/// More shards than scan slots: the trailing shards own empty slot
+/// ranges, contribute all-zero partials, and the merge is unchanged.
+#[test]
+fn empty_shards_contribute_nothing_and_still_merge_exactly() {
+    let model = Arc::new(TmModel::synthetic("prop_tiny", 1, 2, 9, 0.5, 3));
+    let batch = PackedBatch::from_rows(&test_rows(4, 9, 7)).unwrap();
+    let full = model.forward_packed(&batch).unwrap();
+    let n_shards = 5; // c_total = 2 ⟹ at least three empty shards
+    let shards = ClauseShard::split(&model, n_shards).unwrap();
+    let empty = shards.iter().filter(|s| s.n_slots() == 0).count();
+    assert!(empty >= 3, "expected ≥ 3 empty shards, got {empty}");
+    let parts = partials(&shards, &batch);
+    for (s, p) in shards.iter().zip(&parts) {
+        if s.n_slots() == 0 {
+            assert!(p.sums.iter().all(|&v| v == 0), "empty shard emitted votes");
+            assert!(
+                (0..p.batch).all(|r| p.fired_words_row(r).iter().all(|&w| w == 0)),
+                "empty shard fired clauses"
+            );
+        }
+    }
+    assert_eq!(merge_partials(&parts).unwrap(), full);
+}
+
+/// Ties break to the lowest class index after the reduce, exactly as the
+/// unsharded argmax does. The all-false row on a model whose clauses all
+/// include at least one literal yields all-zero sums — a full k-way tie —
+/// and sharding must not perturb the winner.
+#[test]
+fn merged_argmax_breaks_ties_to_the_lowest_class() {
+    let model = Arc::new(TmModel::synthetic("prop_tie", 5, 13, 64, 0.3, 11));
+    let all_false = vec![vec![false; 64]];
+    let batch = PackedBatch::from_rows(&all_false).unwrap();
+    let full = model.forward_packed(&batch).unwrap();
+    for &n_shards in &[2usize, 3, 7] {
+        let shards = ClauseShard::split(&model, n_shards).unwrap();
+        let merged = merge_partials(&partials(&shards, &batch)).unwrap();
+        assert_eq!(merged.pred, full.pred, "n_shards={n_shards}");
+        // If the row really tied (no clause fired), the winner is class 0.
+        if merged.sums.iter().all(|&s| s == 0) {
+            assert_eq!(merged.pred[0], 0, "all-zero tie must go to class 0");
+        }
+    }
+}
+
+/// Per-class upper bounds decompose across shards: each shard's
+/// `class_ub` sums to the one-shard (whole-model) bound, and the suffix
+/// table is a proper suffix maximum with the `i32::MIN` sentinel.
+#[test]
+fn shard_class_bounds_partition_the_model_bound() {
+    let model = Arc::new(TmModel::synthetic("prop_ub", 4, 16, 65, 0.3, 17));
+    let whole = ClauseShard::new(model.clone(), 0, 1).unwrap();
+    for &n_shards in &[2usize, 3, 7] {
+        let shards = ClauseShard::split(&model, n_shards).unwrap();
+        for k in 0..model.n_classes {
+            let sum: i32 = shards.iter().map(|s| s.class_ub()[k]).sum();
+            assert_eq!(sum, whole.class_ub()[k], "class {k}, n_shards={n_shards}");
+        }
+        for s in &shards {
+            let suffix = s.class_ub_suffix();
+            assert_eq!(suffix.len(), model.n_classes + 1);
+            assert_eq!(suffix[model.n_classes], i32::MIN);
+            for k in (0..model.n_classes).rev() {
+                assert_eq!(suffix[k], s.class_ub()[k].max(suffix[k + 1]));
+            }
+        }
+    }
+}
