@@ -1,0 +1,216 @@
+//! Artifact-store bench: what the content-addressed v2 tree costs and
+//! what delta-aware reload buys.
+//!
+//! Before anything is timed, a cross-check asserts that a model opened
+//! through a warmed payload cache after a one-shard rewrite is
+//! bit-identical (clause arrays and all) to a cold full open of the same
+//! generation — a fast-but-wrong cache must never get a number. Then:
+//!
+//! * `pack` — publish a fresh multi-model tree (objects + manifest),
+//!   timed over fresh directories;
+//! * `verify` — full-tree integrity sweep (read + re-hash + parse +
+//!   assemble every object);
+//! * `open_cold` — full model load with an empty payload cache (every
+//!   object read from disk): the cost a full reload pays per worker;
+//! * `open_cached` — the same load with every hash already cached: the
+//!   floor delta reload converges to as the changed fraction → 0;
+//! * `delta_open` — single-shot: one shard rewritten, load through the
+//!   warmed cache (1 object from disk, N−1 from cache), with the
+//!   payload-stat delta asserted, not assumed.
+//!
+//! The result is written as `BENCH_artifact.json` (schema
+//! `tdpc-bench-artifact/v1`):
+//!
+//! ```text
+//! {
+//!   "schema": "tdpc-bench-artifact/v1",
+//!   "config": { "n_models", "n_shards", "n_classes", "clauses_per_class",
+//!               "n_features", "density", "smoke" },
+//!   "cross_check": "pass",
+//!   "pack_us", "verify_us", "open_cold_us", "open_cached_us",
+//!   "delta_open_us", "delta_opened_objects", "delta_reused_objects",
+//!   "cached_speedup": open_cold_us / open_cached_us
+//! }
+//! ```
+//!
+//! Usage: `cargo bench --bench artifact_store -- [--smoke] [--out PATH]`
+
+use std::time::{Duration, Instant};
+
+use tdpc::tm::artifact::{self, PackOptions, PayloadCache, Store};
+use tdpc::tm::TmModel;
+use tdpc::util::benchkit;
+use tdpc::util::json;
+
+struct Config {
+    n_models: usize,
+    n_shards: usize,
+    n_classes: usize,
+    clauses_per_class: usize,
+    n_features: usize,
+    density: f64,
+    smoke: bool,
+    warmup: Duration,
+    budget: Duration,
+}
+
+fn config(smoke: bool) -> Config {
+    if smoke {
+        Config {
+            n_models: 2,
+            n_shards: 4,
+            n_classes: 3,
+            clauses_per_class: 24,
+            n_features: 64,
+            density: 0.2,
+            smoke,
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(60),
+        }
+    } else {
+        // Big enough that payload IO + hashing dominates the per-open
+        // fixed costs (manifest parse, model assembly).
+        Config {
+            n_models: 4,
+            n_shards: 8,
+            n_classes: 10,
+            clauses_per_class: 200,
+            n_features: 784,
+            density: 0.1,
+            smoke,
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_millis(400),
+        }
+    }
+}
+
+fn models(cfg: &Config) -> Vec<TmModel> {
+    (0..cfg.n_models)
+        .map(|i| {
+            TmModel::synthetic(
+                &format!("bench_{i}"),
+                cfg.n_classes,
+                cfg.clauses_per_class,
+                cfg.n_features,
+                cfg.density,
+                100 + i as u64,
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_artifact.json".to_string());
+    let cfg = config(smoke);
+    let ms = models(&cfg);
+    let refs: Vec<&TmModel> = ms.iter().collect();
+    let opts = PackOptions { n_shards: cfg.n_shards, ..Default::default() };
+    let root = std::env::temp_dir().join(format!("tdpc-bench-art-{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+
+    artifact::pack(&root, &refs, &opts).unwrap();
+
+    // -- cross-check: delta-cached open == cold open, bit for bit --------
+    // Warm a cache on generation 1, rewrite one shard of bench_0, then
+    // compare the cache-assisted open against a cold open of the same
+    // (new) generation.
+    {
+        let cache = PayloadCache::new();
+        let store = Store::open(&root).unwrap();
+        store.load_model("bench_0", Some(&cache)).unwrap();
+        artifact::rewrite_shard(&root, "bench_0", 0, |b| b.polarity[0] = -b.polarity[0]).unwrap();
+        let store = Store::open(&root).unwrap();
+        let via_cache = store.load_model("bench_0", Some(&cache)).unwrap();
+        let cold = store.load_model("bench_0", None).unwrap();
+        assert_eq!(via_cache.include, cold.include, "cached open diverged from cold open");
+        assert_eq!(via_cache.polarity, cold.polarity, "cached open diverged from cold open");
+        assert_eq!(via_cache.nonempty, cold.nonempty, "cached open diverged from cold open");
+        // Put generation 2's first shard back so later phases see a
+        // settled tree.
+        artifact::rewrite_shard(&root, "bench_0", 0, |b| b.polarity[0] = -b.polarity[0]).unwrap();
+    }
+    println!("cross-check PASS: delta-cached open == cold open for bench_0");
+
+    // -- pack (fresh tree per iteration) ---------------------------------
+    let pack_root = std::env::temp_dir().join(format!("tdpc-bench-artp-{}", std::process::id()));
+    let pack_us = benchkit::bench_with("artifact/pack", cfg.warmup, cfg.budget, || {
+        std::fs::remove_dir_all(&pack_root).ok();
+        std::hint::black_box(artifact::pack(&pack_root, &refs, &opts).unwrap());
+    });
+    std::fs::remove_dir_all(&pack_root).ok();
+
+    // -- verify -----------------------------------------------------------
+    let verify_us = benchkit::bench_with("artifact/verify", cfg.warmup, cfg.budget, || {
+        std::hint::black_box(artifact::verify(&root).unwrap());
+    });
+
+    // -- open: cold vs fully cached ---------------------------------------
+    let open_cold_us = benchkit::bench_with("artifact/open_cold", cfg.warmup, cfg.budget, || {
+        let store = Store::open(&root).unwrap();
+        let cache = PayloadCache::new();
+        std::hint::black_box(store.load_model("bench_0", Some(&cache)).unwrap());
+    });
+    let warm = PayloadCache::new();
+    Store::open(&root).unwrap().load_model("bench_0", Some(&warm)).unwrap();
+    let open_cached_us = benchkit::bench_with("artifact/open_cached", cfg.warmup, cfg.budget, || {
+        let store = Store::open(&root).unwrap();
+        std::hint::black_box(store.load_model("bench_0", Some(&warm)).unwrap());
+    });
+
+    // -- delta open: 1 of n_shards objects changed, single-shot -----------
+    let delta_cache = PayloadCache::new();
+    Store::open(&root).unwrap().load_model("bench_0", Some(&delta_cache)).unwrap();
+    let (o0, r0) = delta_cache.stats();
+    artifact::rewrite_shard(&root, "bench_0", 0, |b| b.polarity[0] = -b.polarity[0]).unwrap();
+    let t = Instant::now();
+    let store = Store::open(&root).unwrap();
+    store.load_model("bench_0", Some(&delta_cache)).unwrap();
+    let delta_open_us = t.elapsed().as_secs_f64() * 1e6;
+    let (o1, r1) = delta_cache.stats();
+    let (delta_opened, delta_reused) = (o1 - o0, r1 - r0);
+    assert_eq!(delta_opened, 1, "a one-shard rewrite must re-read exactly one object");
+    assert_eq!(delta_reused, (cfg.n_shards - 1) as u64);
+    println!(
+        "bench artifact/delta_open ({} of {} objects from disk): {delta_open_us:.2} µs",
+        delta_opened, cfg.n_shards
+    );
+
+    let cached_speedup = open_cold_us / open_cached_us.max(1e-9);
+    println!("cached open speedup over cold: {cached_speedup:.2}x");
+
+    // -- artifact ----------------------------------------------------------
+    let doc = json::obj(vec![
+        ("schema", json::s("tdpc-bench-artifact/v1")),
+        (
+            "config",
+            json::obj(vec![
+                ("n_models", json::num(cfg.n_models as f64)),
+                ("n_shards", json::num(cfg.n_shards as f64)),
+                ("n_classes", json::num(cfg.n_classes as f64)),
+                ("clauses_per_class", json::num(cfg.clauses_per_class as f64)),
+                ("n_features", json::num(cfg.n_features as f64)),
+                ("density", json::num(cfg.density)),
+                ("smoke", json::num(cfg.smoke as u8 as f64)),
+            ]),
+        ),
+        ("cross_check", json::s("pass")),
+        ("pack_us", json::num(pack_us)),
+        ("verify_us", json::num(verify_us)),
+        ("open_cold_us", json::num(open_cold_us)),
+        ("open_cached_us", json::num(open_cached_us)),
+        ("delta_open_us", json::num(delta_open_us)),
+        ("delta_opened_objects", json::num(delta_opened as f64)),
+        ("delta_reused_objects", json::num(delta_reused as f64)),
+        ("cached_speedup", json::num(cached_speedup)),
+    ]);
+    std::fs::write(&out_path, json::emit(&doc) + "\n").unwrap();
+    println!("wrote {out_path}");
+    std::fs::remove_dir_all(&root).ok();
+}

@@ -31,6 +31,9 @@ pub struct Metrics {
     rejected_requests: u64,
     shed_requests: u64,
     failed_batches: u64,
+    reload_attempts: u64,
+    reload_failures: u64,
+    reload_shards_reused: u64,
     /// Clause-index hot-loop telemetry, accumulated from the per-batch
     /// deltas `execute_batch` diffs out of the backend's `ForwardScratch`
     /// counters (see `InferenceBackend::hot_loop_stats`).
@@ -86,6 +89,19 @@ pub struct MetricsSnapshot {
     /// row) — the serving-time effectiveness of the clause index, now
     /// visible per tenant without touching a worker's backend.
     pub clause_skip_rate: f64,
+    /// `Coordinator::reload` calls for this tenant (each consumes a
+    /// generation number whether or not it succeeded).
+    pub reload_attempts: u64,
+    /// Reload attempts where at least one worker refused to swap (the
+    /// pool kept serving — fully or mixed-generation — the old model).
+    pub reload_failures: u64,
+    /// Payload (clause-block) objects that reloads served from the
+    /// hash-keyed cache instead of re-reading from disk, summed over all
+    /// workers and attempts. On a v2 content-addressed tree, a reload
+    /// that changed 1 of N objects adds `N − 1` per worker — the
+    /// observable proof that reload cost is O(delta), not O(model). v1
+    /// trees always add 0 (nothing is hash-tracked).
+    pub reload_shards_reused: u64,
 }
 
 impl Metrics {
@@ -125,6 +141,16 @@ impl Metrics {
         self.failed_batches += 1;
     }
 
+    /// Fold in reload telemetry: attempts and failures of
+    /// `Coordinator::reload`, plus the payload objects those reloads
+    /// reused from the hash-keyed cache (delta-aware reload on v2
+    /// artifact trees). Counters sum, so merging stays exact.
+    pub fn record_reload(&mut self, attempts: u64, failures: u64, shards_reused: u64) {
+        self.reload_attempts += attempts;
+        self.reload_failures += failures;
+        self.reload_shards_reused += shards_reused;
+    }
+
     /// Fold one batch's hot-loop telemetry delta in (counters sum, like
     /// every other counter here, so merging stays exact).
     pub fn record_hot(&mut self, delta: HotLoopStats) {
@@ -150,6 +176,11 @@ impl Metrics {
         self.rejected_requests += other.rejected_requests;
         self.shed_requests += other.shed_requests;
         self.failed_batches += other.failed_batches;
+        self.record_reload(
+            other.reload_attempts,
+            other.reload_failures,
+            other.reload_shards_reused,
+        );
         self.record_hot(other.hot);
     }
 
@@ -184,6 +215,9 @@ impl Metrics {
             clauses_eligible: self.hot.clauses_eligible,
             classes_pruned: self.hot.classes_pruned,
             clause_skip_rate: self.hot.skip_rate(),
+            reload_attempts: self.reload_attempts,
+            reload_failures: self.reload_failures,
+            reload_shards_reused: self.reload_shards_reused,
         }
     }
 }
@@ -296,6 +330,11 @@ mod tests {
         w1.record_shed(3);
         combined.record_failed_batch();
         w1.record_failed_batch();
+        // Reload telemetry splits across workers the same way (the
+        // shards_reused sum is what a 2-worker delta reload would fold).
+        combined.record_reload(2, 1, 6);
+        w0.record_reload(1, 1, 3);
+        w1.record_reload(1, 0, 3);
 
         let mut agg = Metrics::default();
         agg.merge(&w0);
@@ -314,6 +353,9 @@ mod tests {
         assert_eq!(a.rejected_requests, c.rejected_requests);
         assert_eq!(a.shed_requests, c.shed_requests);
         assert_eq!(a.failed_batches, c.failed_batches);
+        assert_eq!(a.reload_attempts, c.reload_attempts);
+        assert_eq!(a.reload_failures, c.reload_failures);
+        assert_eq!(a.reload_shards_reused, c.reload_shards_reused);
     }
 
     /// The (worker × model) matrix merges to the same snapshot along

@@ -446,12 +446,28 @@ enum WorkMsg {
     },
 }
 
-/// One worker's answer to a `Reload` control: the new backend's shape
-/// (feature width, class count), or why the swap failed (in which case
-/// the worker keeps serving the previous generation).
+/// One worker's answer to a `Reload` control: what the swap did, or why
+/// it failed (in which case the worker keeps serving the previous
+/// generation).
 struct ReloadReport {
     worker: usize,
-    result: Result<(usize, usize)>,
+    result: Result<SwapReport>,
+}
+
+/// What one worker's successful swap did: the new backend's shape plus
+/// the payload delta its registry observed — on a v2 (content-addressed)
+/// artifact tree, `shards_reused` counts clause-block objects served
+/// from the hash-keyed cache (unchanged hash → no disk touch) and
+/// `shards_opened` the objects actually re-read, so a reload that
+/// changed 1 of N objects reports `(reused, opened) = (N−1, 1)`.
+/// Non-content-addressed paths (v1 trees, in-memory specs) report
+/// `(0, 0)`: nothing is hash-tracked, everything is rebuilt.
+#[derive(Debug, Clone, Copy)]
+struct SwapReport {
+    n_features: usize,
+    n_classes: usize,
+    shards_reused: u64,
+    shards_opened: u64,
 }
 
 /// One worker thread's handle: its queue, load gauge, per-model metrics,
@@ -505,6 +521,14 @@ struct ModelEntry {
     /// [`Coordinator::metrics_for`] at snapshot time.
     admission_rejected: AtomicU64,
     admission_shed: AtomicU64,
+    /// Reload observability (same lock-free fold-at-snapshot pattern as
+    /// the admission counters): attempts started, attempts that returned
+    /// an error, and payload shard-objects served from the hash cache
+    /// across all workers' swaps (the delta-reload signal — see
+    /// [`SwapReport`]).
+    reload_attempts: AtomicU64,
+    reload_failures: AtomicU64,
+    reload_shards_reused: AtomicU64,
 }
 
 impl ModelEntry {
@@ -527,6 +551,9 @@ pub struct Coordinator {
     /// This pool's [`ModelId`] tag: ids from other pools never resolve
     /// here, whatever their index.
     pool_tag: u32,
+    /// Artifact root the workers opened — the target of
+    /// [`Coordinator::gc_artifacts`].
+    root: PathBuf,
     /// Per-model table, indexed by [`ModelId`] (serve-list order).
     models: Vec<ModelEntry>,
     queue_limit: Option<usize>,
@@ -761,6 +788,9 @@ impl Coordinator {
                 }),
                 admission_rejected: AtomicU64::new(0),
                 admission_shed: AtomicU64::new(0),
+                reload_attempts: AtomicU64::new(0),
+                reload_failures: AtomicU64::new(0),
+                reload_shards_reused: AtomicU64::new(0),
             })
             .collect();
 
@@ -786,6 +816,7 @@ impl Coordinator {
             rr: AtomicUsize::new(0),
             dispatch: cfg.dispatch,
             pool_tag: POOL_TAG.fetch_add(1, Ordering::Relaxed) as u32,
+            root,
             models: entries,
             queue_limit: cfg.queue_limit,
             shed: cfg.shed,
@@ -1148,6 +1179,7 @@ impl Coordinator {
             .entry(model)
             .ok_or_else(|| anyhow!("{model} is not served by this pool"))?;
         let _swap = self.reload_lock.lock().unwrap();
+        entry.reload_attempts.fetch_add(1, Ordering::Relaxed);
         let generation = {
             let mut shape = entry.shape.write().unwrap_or_else(|e| e.into_inner());
             shape.generation += 1;
@@ -1168,10 +1200,14 @@ impl Coordinator {
         ensure!(sent == self.workers.len(), "coordinator is shutting down");
         let mut new_shape: Option<(usize, usize)> = None;
         let mut first_err: Option<anyhow::Error> = None;
+        let mut shards_reused = 0u64;
+        let mut shards_opened = 0u64;
         for _ in 0..sent {
             match ack_rx.recv() {
-                Ok(ReloadReport { result: Ok(shape), .. }) => {
-                    new_shape.get_or_insert(shape);
+                Ok(ReloadReport { result: Ok(rep), .. }) => {
+                    new_shape.get_or_insert((rep.n_features, rep.n_classes));
+                    shards_reused += rep.shards_reused;
+                    shards_opened += rep.shards_opened;
                 }
                 Ok(ReloadReport { worker, result: Err(e) }) => {
                     first_err
@@ -1182,7 +1218,16 @@ impl Coordinator {
                 }
             }
         }
+        // Workers that *did* swap reused what they reused even when a
+        // sibling failed — record the delta before deciding the outcome.
+        entry.reload_shards_reused.fetch_add(shards_reused, Ordering::Relaxed);
+        log::debug!(
+            "reload {:?} gen {generation}: {shards_opened} payload objects opened, \
+             {shards_reused} reused across {sent} workers",
+            entry.name
+        );
         if let Some(e) = first_err {
+            entry.reload_failures.fetch_add(1, Ordering::Relaxed);
             return Err(e).with_context(|| {
                 format!(
                     "reloading model {:?} (failed workers keep serving the previous generation)",
@@ -1198,6 +1243,21 @@ impl Coordinator {
             shape.n_classes = classes;
         }
         Ok(())
+    }
+
+    /// Garbage-collect the artifact tree this pool serves from: delete
+    /// (or with `dry_run`, just count) payload objects referenced by
+    /// neither the current manifest nor any object still pinned by a
+    /// live payload cache — i.e. objects only superseded generations
+    /// point at. Holding [`Coordinator::reload`]'s lock for the duration
+    /// means no worker can be mid-swap while the sweep runs, so an
+    /// object a worker is about to open is either manifest-referenced
+    /// (kept as live) or cache-pinned (kept as pinned) — never deleted
+    /// out from under an in-flight open. v1 trees have no object store
+    /// and return an error, as does [`crate::tm::artifact::gc`] itself.
+    pub fn gc_artifacts(&self, dry_run: bool) -> Result<crate::tm::artifact::GcReport> {
+        let _swap = self.reload_lock.lock().unwrap();
+        crate::tm::artifact::gc(&self.root, dry_run)
     }
 
     /// Aggregated metrics across all workers and models plus
@@ -1220,6 +1280,11 @@ impl Coordinator {
         for e in &self.models {
             agg.record_rejected(e.admission_rejected.load(Ordering::Relaxed));
             agg.record_shed(e.admission_shed.load(Ordering::Relaxed));
+            agg.record_reload(
+                e.reload_attempts.load(Ordering::Relaxed),
+                e.reload_failures.load(Ordering::Relaxed),
+                e.reload_shards_reused.load(Ordering::Relaxed),
+            );
         }
         agg.snapshot()
     }
@@ -1236,6 +1301,11 @@ impl Coordinator {
         }
         agg.record_rejected(entry.admission_rejected.load(Ordering::Relaxed));
         agg.record_shed(entry.admission_shed.load(Ordering::Relaxed));
+        agg.record_reload(
+            entry.reload_attempts.load(Ordering::Relaxed),
+            entry.reload_failures.load(Ordering::Relaxed),
+            entry.reload_shards_reused.load(Ordering::Relaxed),
+        );
         Some(agg.snapshot())
     }
 
@@ -1728,23 +1798,36 @@ impl Worker {
     /// backend (they were submitted before the reload), then invalidate
     /// and re-open through the registry. On failure the slot is left
     /// untouched — the worker keeps serving the previous generation.
-    fn swap(&mut self, ix: usize, generation: u64) -> Result<(usize, usize)> {
+    ///
+    /// The returned [`SwapReport`] carries the registry's payload-cache
+    /// delta across the re-open: on a v2 tree, `shards_reused` counts
+    /// clause-block objects served from the hash-keyed cache (unchanged
+    /// content) and `shards_opened` the objects actually re-read from
+    /// disk. v1 trees and in-memory specs report `(0, 0)`.
+    fn swap(&mut self, ix: usize, generation: u64) -> Result<SwapReport> {
         while !self.pending[ix].is_empty() {
             let take = self.pending[ix].len().min(self.cfg.max_batch);
             self.flush(ix, take);
         }
         let name = self.slots[ix].name.clone();
+        let (opened_before, reused_before) = self.registry.payload_stats();
         self.registry.invalidate(&name);
         let backend = self
             .registry
             .backend(&name)
             .with_context(|| format!("re-opening model {name:?}"))?;
-        let shape = (backend.n_features(), backend.n_classes());
+        let (opened_after, reused_after) = self.registry.payload_stats();
+        let report = SwapReport {
+            n_features: backend.n_features(),
+            n_classes: backend.n_classes(),
+            shards_opened: opened_after - opened_before,
+            shards_reused: reused_after - reused_before,
+        };
         let slot = &mut self.slots[ix];
         slot.backend = backend;
         slot.generation = generation;
         slot.last_hot = HotLoopStats::default();
-        Ok(shape)
+        Ok(report)
     }
 
     fn replan(&mut self) -> Option<(usize, BatchPlan)> {

@@ -66,6 +66,31 @@
 //! load generator ([`server::loadgen`]) that writes `BENCH_serving.json`
 //! — CI's per-run perf datapoint.
 //!
+//! # The artifact store
+//!
+//! Models reach the pool through the **content-addressed artifact
+//! store** ([`tm::artifact`]): a model is published as clause-block
+//! shards under `objects/<sha256>` plus a generation-versioned
+//! `manifest.json` recording every shard hash and its provenance
+//! (schema `tdpc-artifact/v2`; [`tm::artifact::pack`] /
+//! [`tm::artifact::pack_from_v1`] write it atomically, and the legacy
+//! v1 bare-directory layout still opens read-only through the same
+//! [`tm::artifact::Store`]). Every object read re-hashes the bytes and
+//! fails with a typed [`tm::artifact::ArtifactError`] — hash mismatch,
+//! missing object, malformed manifest — which
+//! [`coordinator::Coordinator::reload`] turns into fail-soft behaviour:
+//! a worker that cannot open the new generation keeps serving the old
+//! one. Because shards are keyed by content, reload is **delta-aware**:
+//! workers share a hash-keyed [`tm::artifact::PayloadCache`], so a
+//! 1-of-N-shard change re-reads exactly one object (`shards_reused` is
+//! counted per swap and surfaced as `reload_shards_reused` in
+//! [`coordinator::MetricsSnapshot`]), and sharded workers open only the
+//! objects overlapping their own clause range. Superseded objects are
+//! swept by [`tm::artifact::gc`] (CLI `tdpc gc`, or
+//! [`coordinator::Coordinator::gc_artifacts`] under the reload lock),
+//! which never deletes anything referenced by a live manifest or pinned
+//! by an in-flight open (§Artifact store, rust/README.md).
+//!
 //! # The hardware-engine seam
 //!
 //! Every architecture of the paper's comparison is *executable* behind

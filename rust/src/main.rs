@@ -26,6 +26,15 @@
 //!               BENCH_serving.json (--addr or --port-file, --mode
 //!               closed|open, --conns N, --rate RPS, --models a:3,b:1,
 //!               --burst steady|square:<ms>:<pct>, --assert for CI gating)
+//!   pack      — write a v2 content-addressed artifact tree: --synthetic N
+//!               models to --out DIR (--shards B clause blocks per model,
+//!               --seed S), or --from-v1 DIR to migrate a v1 bare
+//!               directory in place
+//!   verify    — full-tree integrity check of a v2 tree (every object
+//!               re-hashed and parsed, every model assembled); corrupt or
+//!               missing objects exit nonzero with a typed error
+//!   gc        — delete objects no live generation references
+//!               (--dry-run to count only)
 //!   flow      — run the FPGA implementation flow and print the skew audit
 //!   table1 / fig6 / fig9 / fig10 / fig11 / fig12 — regenerate the paper's
 //!               tables/figures (markdown to stdout, CSV via --csv DIR)
@@ -46,8 +55,8 @@ use tdpc::fabric::Device;
 use tdpc::flow::{self, skew_report, FlowConfig};
 use tdpc::runtime::{BackendSpec, InferenceBackend, ModelRegistry};
 use tdpc::server::{loadgen, Server, ServerConfig};
-use tdpc::tm::{Manifest, PackedBatch, TestSet, TmModel};
-use tdpc::util::Ps;
+use tdpc::tm::{artifact, Manifest, PackedBatch, Store, TestSet, TmModel};
+use tdpc::util::{Ps, SplitMix64};
 
 fn main() {
     env_logger_init();
@@ -120,6 +129,9 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("infer") => cmd_infer(args),
         Some("serve") => cmd_serve(args),
         Some("loadgen") => cmd_loadgen(args),
+        Some("pack") => cmd_pack(args),
+        Some("verify") => cmd_verify(args),
+        Some("gc") => cmd_gc(args),
         Some("flow") => cmd_flow(args),
         Some("table1") => cmd_table1(args),
         Some("fig6") => cmd_fig6(args),
@@ -129,10 +141,10 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("fig12") => cmd_fig12(args),
         Some("ablation") => cmd_ablation(args),
         Some("all") => cmd_all(args),
-        Some(other) => bail!("unknown subcommand {other:?}; try: infer serve loadgen flow table1 fig6 fig9 fig10 fig11 fig12 ablation all"),
+        Some(other) => bail!("unknown subcommand {other:?}; try: infer serve loadgen pack verify gc flow table1 fig6 fig9 fig10 fig11 fig12 ablation all"),
         None => {
             println!("tdpc — time-domain popcount for low-complexity ML (paper reproduction)");
-            println!("usage: tdpc <infer|serve|loadgen|flow|table1|fig6|fig9|fig10|fig11|fig12|all> [--options]");
+            println!("usage: tdpc <infer|serve|loadgen|pack|verify|gc|flow|table1|fig6|fig9|fig10|fig11|fig12|all> [--options]");
             Ok(())
         }
     }
@@ -166,12 +178,40 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Rows the local serve burst submits for one model: real labeled test
+/// rows on a v1 tree, deterministic synthetic rows (no labels, so no
+/// accuracy) on a v2 content-addressed tree.
+struct BurstData {
+    rows: Vec<Vec<bool>>,
+    labels: Option<Vec<usize>>,
+}
+
+impl BurstData {
+    fn for_model(store: &Store, name: &str) -> Result<BurstData> {
+        if let Some(manifest) = store.v1() {
+            let entry = manifest.entry(name)?;
+            let test = TestSet::load(&entry.test_data_path)?;
+            return Ok(BurstData { labels: Some(test.y.clone()), rows: test.x });
+        }
+        let (_, n_features, _, _) = store.model_shape(name)?;
+        let mut rng = SplitMix64::new(0xb065 ^ n_features as u64);
+        let rows = (0..64)
+            .map(|_| (0..n_features).map(|_| rng.next_bool(0.5)).collect())
+            .collect();
+        Ok(BurstData { rows, labels: None })
+    }
+
+    fn len(&self) -> usize {
+        self.rows.len()
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(&[
         "artifacts", "model", "models", "requests", "batch", "deadline-us", "workers",
-        "dispatch", "backend", "hw-replay", "queue-limit", "shed", "reload", "csv",
-        "listen", "synthetic", "conn-limit", "port-file", "duration-s", "shards",
-        "straggler-ms",
+        "dispatch", "backend", "hw-replay", "queue-limit", "shed", "reload",
+        "mutate-shard", "csv", "listen", "synthetic", "conn-limit", "port-file",
+        "duration-s", "shards", "straggler-ms",
     ])?;
     // `--models a,b,c` serves several models through one pool (requests
     // alternate across them); `--model` remains the single-model form.
@@ -223,11 +263,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return serve_network(args, cfg, names, listen, n_shards);
     }
     let root = artifacts_root(args);
-    let manifest = Manifest::load(&root)?;
-    let mut tests = Vec::with_capacity(names.len());
+    // v1 trees carry labeled test data the burst replays; v2
+    // (content-addressed) trees carry only model payloads, so the burst
+    // drives deterministic synthetic rows at each model's feature width
+    // and reports accuracy as n/a.
+    let store = Store::open(&root)?;
+    let mut bursts = Vec::with_capacity(names.len());
     for name in &names {
-        let entry = manifest.entry(name)?.clone();
-        tests.push(TestSet::load(&entry.test_data_path)?);
+        bursts.push(BurstData::for_model(&store, name)?);
     }
 
     let coord = if n_shards > 1 {
@@ -235,10 +278,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             names.len() == 1,
             "--shards serves exactly one model (got --models {names:?})"
         );
-        Coordinator::start_sharded(root, &names[0], n_shards, cfg)?
+        Coordinator::start_sharded(root.clone(), &names[0], n_shards, cfg)?
     } else {
         let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
-        Coordinator::start_multi(root, &name_refs, cfg)?
+        Coordinator::start_multi(root.clone(), &name_refs, cfg)?
     };
     let mids: Vec<_> = names
         .iter()
@@ -252,17 +295,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })?),
         None => None,
     };
+    // `--mutate-shard IX` (v2 trees, with --reload): rewrite clause block
+    // IX of the reloaded model right before the mid-burst swap, so the
+    // reload has a real one-object delta to pick up — the per-tenant
+    // report's `shard_objects_reused` count is the proof the other
+    // blocks never touched disk.
+    let mutate_shard = match args.opt("mutate-shard") {
+        Some(s) => {
+            let ix: usize = s.parse().context("--mutate-shard expects a shard index")?;
+            anyhow::ensure!(reload_mid.is_some(), "--mutate-shard needs --reload <model>");
+            anyhow::ensure!(
+                store.is_v2(),
+                "--mutate-shard needs a v2 (content-addressed) artifact tree — see `tdpc pack`"
+            );
+            Some(ix)
+        }
+        None => None,
+    };
     let (tx, rx) = std::sync::mpsc::channel();
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
         if i == n_requests / 2 {
             if let Some(mid) = reload_mid {
+                if let Some(ix) = mutate_shard {
+                    artifact::rewrite_shard(&root, &names[mid.index()], ix, |b| {
+                        // Prefer flipping an include bit of a dead clause:
+                        // the object's hash changes but no answer does
+                        // (dead clauses never fire). Fall back to a
+                        // polarity flip when every clause is live.
+                        match b.nonempty.iter().position(|&alive| !alive) {
+                            Some(c) => b.include[c][0] = !b.include[c][0],
+                            None => b.polarity[0] = -b.polarity[0],
+                        }
+                    })?;
+                }
                 coord.reload(mid)?;
             }
         }
         let m = i % names.len();
-        let test = &tests[m];
-        coord.submit(mids[m], &test.x[(i / names.len()) % test.len()], tx.clone());
+        let burst = &bursts[m];
+        coord.submit(mids[m], &burst.rows[(i / names.len()) % burst.len()], tx.clone());
     }
     drop(tx);
     // Every submit is answered exactly once: a response, or a typed
@@ -276,9 +348,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         match reply {
             Ok(resp) => {
                 let m = resp.model.index();
-                let test = &tests[m];
-                let idx = (resp.request_id as usize / names.len()) % test.len();
-                correct[m] += (resp.pred == test.y[idx]) as usize;
+                let burst = &bursts[m];
+                if let Some(labels) = &burst.labels {
+                    let idx = (resp.request_id as usize / names.len()) % burst.len();
+                    correct[m] += (resp.pred == labels[idx]) as usize;
+                }
                 served += 1;
             }
             Err(e) => {
@@ -307,18 +381,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // latency percentiles.
     for (mid, name) in coord.served_models() {
         let pm = coord.metrics_for(mid).expect("served model has metrics");
+        let accuracy = match bursts[mid.index()].labels {
+            Some(_) => {
+                format!("{:.1}%", 100.0 * correct[mid.index()] as f64 / (pm.requests.max(1)) as f64)
+            }
+            None => "n/a".to_string(),
+        };
         println!(
-            "  model {name}: {} requests in {} batches, accuracy {:.1}%, \
+            "  model {name}: {} requests in {} batches, accuracy {accuracy}, \
              p50 {:.0} us p99 {:.0} us, clause skip {:.1}% ({} skipped / {} eligible)",
             pm.requests,
             pm.batches,
-            100.0 * correct[mid.index()] as f64 / (pm.requests.max(1)) as f64,
             pm.service_p50_us,
             pm.service_p99_us,
             100.0 * pm.clause_skip_rate,
             pm.clauses_skipped,
             pm.clauses_eligible
         );
+        if pm.reload_attempts > 0 {
+            // One greppable line per reloaded tenant: on a v2 tree a
+            // 1-of-N-object change across W workers reuses (objects each
+            // worker holds − 1) · W from the hash-keyed cache.
+            println!(
+                "  model {name}: reloads {} ({} failed), shard_objects_reused {}",
+                pm.reload_attempts, pm.reload_failures, pm.reload_shards_reused
+            );
+        }
     }
     for (i, wm) in coord.worker_metrics().iter().enumerate() {
         println!(
@@ -479,6 +567,93 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         );
         anyhow::ensure!(report.ok > 0, "loadgen got zero successful replies");
     }
+    Ok(())
+}
+
+/// `pack`: publish a v2 content-addressed artifact tree.
+///
+/// `--synthetic N --out DIR` packs N deterministic synthetic models
+/// (`synth_0..`, the same shape family `serve --synthetic` uses) —
+/// what CI smoke tests and the artifact bench build on. `--from-v1 DIR`
+/// migrates a v1 bare-directory tree in place: every model is re-read
+/// through the v1 loader and re-published as content-addressed clause
+/// blocks (the v1 files stay; `Store::open` prefers the v2 manifest).
+fn cmd_pack(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "out", "from-v1", "synthetic", "shards", "seed"])?;
+    let n_shards = args.opt_usize("shards", 4)?;
+    let report = if let Some(dir) = args.opt("from-v1") {
+        artifact::pack_from_v1(&PathBuf::from(dir), n_shards)?
+    } else {
+        let n = args.opt_usize("synthetic", 2)?;
+        anyhow::ensure!(n >= 1, "--synthetic needs at least one model");
+        let out = PathBuf::from(
+            args.opt("out").context("pack needs --out DIR (or --from-v1 DIR)")?,
+        );
+        let seed = args.opt_u64("seed", 42)?;
+        const WIDTHS: [usize; 5] = [63, 65, 31, 128, 96];
+        let models: Vec<TmModel> = (0..n)
+            .map(|i| {
+                TmModel::synthetic(
+                    &format!("synth_{i}"),
+                    2 + i % 3,
+                    8 + 4 * (i % 4),
+                    WIDTHS[i % WIDTHS.len()],
+                    0.2,
+                    seed + i as u64,
+                )
+            })
+            .collect();
+        let refs: Vec<&TmModel> = models.iter().collect();
+        let opts = artifact::PackOptions {
+            n_shards,
+            profile: "synthetic".into(),
+            source: format!("tdpc pack --synthetic {n} --seed {seed}"),
+        };
+        artifact::pack(&out, &refs, &opts)?
+    };
+    println!(
+        "packed {} models: {} objects written ({} bytes), {} deduped, generation {}",
+        report.models,
+        report.objects_written,
+        report.bytes_written,
+        report.objects_deduped,
+        report.generation
+    );
+    Ok(())
+}
+
+/// `verify`: full-tree integrity check of a v2 tree (`--artifacts DIR`).
+/// A flipped byte, truncated object, or dangling hash exits nonzero with
+/// the typed [`artifact::ArtifactError`] naming the object.
+fn cmd_verify(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts"])?;
+    let root = artifacts_root(args);
+    let r = artifact::verify(&root)?;
+    println!(
+        "verified {} models: {} objects, {} bytes, {} unreferenced object(s)",
+        r.models, r.objects_verified, r.bytes_verified, r.unreferenced
+    );
+    Ok(())
+}
+
+/// `gc`: sweep objects no live generation references (`--dry-run` counts
+/// without deleting). Manifest-referenced and worker-pinned objects are
+/// never touched.
+fn cmd_gc(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "dry-run"])?;
+    let root = artifacts_root(args);
+    let dry = args.flag("dry-run");
+    let r = artifact::gc(&root, dry)?;
+    println!(
+        "gc{}: {} objects scanned, {} live, {} kept (pinned), {} {} ({} bytes)",
+        if dry { " (dry run)" } else { "" },
+        r.scanned,
+        r.live,
+        r.kept_pinned,
+        r.deleted,
+        if dry { "would delete" } else { "deleted" },
+        r.bytes_freed
+    );
     Ok(())
 }
 

@@ -13,7 +13,9 @@ use anyhow::{bail, ensure, Result};
 
 use crate::flow::FlowConfig;
 use crate::hw::{HwArch, HwOutcome};
-use crate::tm::{ForwardScratch, HotLoopStats, Manifest, PackedBatch, PartialOutput, TmModel};
+use crate::tm::{
+    ForwardScratch, HotLoopStats, PackedBatch, PartialOutput, PayloadCache, Store, TmModel,
+};
 
 use super::ForwardOutput;
 
@@ -236,8 +238,29 @@ impl BackendSpec {
     /// expensive startup work (model load, PJRT pre-compilation) so
     /// failures surface at startup rather than on the first request.
     pub fn open(&self, root: &Path, model: &str) -> Result<Box<dyn InferenceBackend>> {
+        self.open_cached(root, model, None)
+    }
+
+    /// [`BackendSpec::open`] with a shared payload cache. Manifest-backed
+    /// specs open the tree through [`Store::open`] (v1 directories and v2
+    /// content-addressed trees both work; v2 opens verify object hashes),
+    /// and a `cache` turns unchanged-hash payloads into no-disk-touch
+    /// hits — the mechanism behind the coordinator's delta-aware reload.
+    /// On a v2 tree a [`BackendSpec::Sharded`] spec loads **only the
+    /// objects overlapping its own clause range** instead of the whole
+    /// model.
+    pub fn open_cached(
+        &self,
+        root: &Path,
+        model: &str,
+        cache: Option<&PayloadCache>,
+    ) -> Result<Box<dyn InferenceBackend>> {
         match self {
-            BackendSpec::Native => Ok(Box::new(NativeBackend::open(root, model)?)),
+            BackendSpec::Native => {
+                let store = Store::open(root)?;
+                let m = Arc::new(store.load_model(model, cache)?);
+                Ok(Box::new(NativeBackend::new(m)))
+            }
             BackendSpec::InMemory(m) => {
                 // Keep the "unknown model fails at startup" guarantee the
                 // manifest-backed specs get from `Manifest::entry`.
@@ -274,9 +297,8 @@ impl BackendSpec {
                         m.clone()
                     }
                     None => {
-                        let manifest = Manifest::load(root)?;
-                        let entry = manifest.entry(model)?;
-                        Arc::new(TmModel::load(&entry.model_path)?)
+                        let store = Store::open(root)?;
+                        Arc::new(store.load_model(model, cache)?)
                     }
                 };
                 Ok(Box::new(super::hw_backend::HwBackend::build(m, *arch, flow)?))
@@ -292,9 +314,26 @@ impl BackendSpec {
                         m.clone()
                     }
                     None => {
-                        let manifest = Manifest::load(root)?;
-                        let entry = manifest.entry(model)?;
-                        Arc::new(TmModel::load(&entry.model_path)?)
+                        let store = Store::open(root)?;
+                        if store.is_v2() {
+                            // Content-addressed tree: this worker loads
+                            // only the objects overlapping its own clause
+                            // range; every other clause comes back dead.
+                            let sub = store.load_model_subset(
+                                model,
+                                shard.index,
+                                shard.n_shards,
+                                cache,
+                            )?;
+                            return Ok(Box::new(
+                                super::shard_backend::ShardBackend::build_subset(
+                                    Arc::new(sub),
+                                    *shard,
+                                    *hw,
+                                )?,
+                            ));
+                        }
+                        Arc::new(store.load_model(model, cache)?)
                     }
                 };
                 Ok(Box::new(super::shard_backend::ShardBackend::build(m, *shard, *hw)?))
@@ -329,11 +368,10 @@ impl NativeBackend {
         NativeBackend { model, scratch: Mutex::new(ForwardScratch::new()) }
     }
 
-    /// Load `model` from the artifact manifest at `root`.
+    /// Load `model` from the artifact tree at `root` (v1 or v2 — see
+    /// [`Store::open`]).
     pub fn open(root: &Path, model: &str) -> Result<NativeBackend> {
-        let manifest = Manifest::load(root)?;
-        let entry = manifest.entry(model)?;
-        Ok(NativeBackend::new(Arc::new(TmModel::load(&entry.model_path)?)))
+        Ok(NativeBackend::new(Arc::new(Store::open(root)?.load_model(model, None)?)))
     }
 
     pub fn model(&self) -> &TmModel {

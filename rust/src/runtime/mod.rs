@@ -30,6 +30,18 @@
 //! row) so chaos drills and the coordinator's fail-soft tests exercise
 //! per-row retry through the real seam.
 //!
+//! Manifest-backed specs open their artifact tree through
+//! [`crate::tm::Store`] — v1 bare directories and v2 content-addressed
+//! trees (`tm::artifact`) both work, and v2 opens verify every payload
+//! object's sha256. The registry shares one hash-keyed
+//! [`crate::tm::PayloadCache`] across all backends it opens, so an
+//! invalidate → re-open cycle touches disk only for objects whose hash
+//! changed (delta-aware reload; `ModelRegistry::payload_stats` is the
+//! counter pair the coordinator reports as `reload_shards_reused`), and
+//! on a v2 tree a `BackendSpec::Sharded` worker loads only the objects
+//! overlapping its own clause range
+//! (`Store::load_model_subset` → `ShardBackend::build_subset`).
+//!
 //! The data plane is *packed end-to-end*: [`InferenceBackend::forward`]
 //! consumes a [`crate::tm::PackedBatch`] of bit-packed feature rows (the
 //! coordinator packs each request once at ingestion) and produces a

@@ -8,13 +8,21 @@
 //! never across backend construction (which for PJRT includes executable
 //! compilation), so two different models open concurrently while a second
 //! request for the *same* model waits instead of duplicating the work.
+//!
+//! Below the backend cache sits a **hash-keyed payload cache**
+//! ([`PayloadCache`]): on a v2 (content-addressed) artifact tree, every
+//! clause-block object a backend opens is cached under its sha256, so an
+//! [`ModelRegistry::invalidate`] → re-open cycle re-reads from disk only
+//! the objects whose hash actually changed — the registry half of the
+//! coordinator's delta-aware reload ([`ModelRegistry::payload_stats`]
+//! exposes the opened/reused counters the coordinator diffs).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::tm::Manifest;
+use crate::tm::{Manifest, PayloadCache, Store};
 use crate::util::sync::OnceMap;
 
 use super::backend::{BackendSpec, InferenceBackend};
@@ -24,8 +32,11 @@ pub struct ModelRegistry {
     root: PathBuf,
     spec: BackendSpec,
     /// `None` for in-memory specs, which need no artifacts at all.
-    manifest: Option<Manifest>,
+    store: Option<Store>,
     backends: OnceMap<String, Arc<dyn InferenceBackend>>,
+    /// Content-addressed payloads shared by every backend this registry
+    /// opens (hits on v2 trees only; v1 model files are not objects).
+    payloads: Arc<PayloadCache>,
 }
 
 impl ModelRegistry {
@@ -34,24 +45,34 @@ impl ModelRegistry {
         Self::open_with(root, BackendSpec::Native)
     }
 
-    /// Open with an explicit backend spec. Loads the artifact manifest
-    /// unless the spec carries its own in-memory model.
+    /// Open with an explicit backend spec. Opens the artifact tree (v1
+    /// directory or v2 content-addressed store — [`Store::open`]) unless
+    /// the spec carries its own in-memory model.
     pub fn open_with(root: &Path, spec: BackendSpec) -> Result<ModelRegistry> {
-        let manifest = if spec.needs_manifest() {
-            Some(Manifest::load(root).context("loading artifact manifest")?)
+        let store = if spec.needs_manifest() {
+            Some(Store::open(root).context("opening artifact tree")?)
         } else {
             None
         };
         Ok(ModelRegistry {
             root: root.to_path_buf(),
             spec,
-            manifest,
+            store,
             backends: OnceMap::new(),
+            payloads: Arc::new(PayloadCache::new()),
         })
     }
 
+    /// The v1 manifest view, when this registry opened a v1 tree (HLO
+    /// paths, batch sizes, test data — fields v2 trees do not carry).
     pub fn manifest(&self) -> Option<&Manifest> {
-        self.manifest.as_ref()
+        self.store.as_ref().and_then(|s| s.v1())
+    }
+
+    /// The artifact tree this registry opened (`None` for in-memory
+    /// specs).
+    pub fn store(&self) -> Option<&Store> {
+        self.store.as_ref()
     }
 
     pub fn spec(&self) -> &BackendSpec {
@@ -63,15 +84,29 @@ impl ModelRegistry {
         self.spec.name().to_string()
     }
 
+    /// `(opened, reused)` payload-object counters of this registry's
+    /// cache: `opened` counts objects read + hash-verified + parsed from
+    /// disk, `reused` counts content-hash hits that touched nothing. The
+    /// coordinator diffs these around [`ModelRegistry::invalidate`] →
+    /// re-open to report how much of a swap was delta.
+    pub fn payload_stats(&self) -> (u64, u64) {
+        self.payloads.stats()
+    }
+
     /// Get (constructing on first use) the backend for `model`. The
     /// construction — model load, PJRT compilation — runs outside the
     /// cache lock, so unrelated models never serialize behind it.
     pub fn backend(&self, model: &str) -> Result<Arc<dyn InferenceBackend>> {
-        self.backends.get_or_try_insert(model.to_string(), || {
+        let b = self.backends.get_or_try_insert(model.to_string(), || {
             self.spec
-                .open(&self.root, model)
+                .open_cached(&self.root, model, Some(&self.payloads))
                 .map(|b| -> Arc<dyn InferenceBackend> { Arc::from(b) })
-        })
+        })?;
+        // A successful (re)open may have superseded payloads cached by a
+        // previous generation of this model; dropping them releases
+        // their GC pins.
+        self.payloads.evict_stale();
+        Ok(b)
     }
 
     /// Drop the cached backend for `model`, forcing the next
@@ -81,7 +116,8 @@ impl ModelRegistry {
     /// the manifest itself, so a rewritten artifact is picked up even
     /// though this registry cached the manifest at open time (the
     /// cached [`ModelRegistry::manifest`] view keeps describing the
-    /// models as first opened).
+    /// models as first opened). On a v2 tree the re-open goes through
+    /// the payload cache, so only changed-hash objects touch disk.
     ///
     /// Safe against a concurrent in-flight construction of the same
     /// model: the in-flight backend is delivered to its own caller but
@@ -102,12 +138,15 @@ mod tests {
         let spec = BackendSpec::InMemory(std::sync::Arc::new(toy()));
         let reg = ModelRegistry::open_with(Path::new("/nonexistent"), spec).unwrap();
         assert!(reg.manifest().is_none());
+        assert!(reg.store().is_none());
         assert_eq!(reg.platform(), "native(in-memory)");
         let b = reg.backend("toy").unwrap();
         assert_eq!(b.model_name(), "toy");
         // Second lookup hits the cache (same Arc).
         let b2 = reg.backend("toy").unwrap();
         assert!(Arc::ptr_eq(&b, &b2));
+        // In-memory specs never touch the payload cache.
+        assert_eq!(reg.payload_stats(), (0, 0));
     }
 
     #[test]
@@ -126,5 +165,28 @@ mod tests {
         // The next lookup re-constructs instead of hitting the cache.
         let b2 = reg.backend("toy").unwrap();
         assert!(!Arc::ptr_eq(&b, &b2), "invalidate must force a fresh construction");
+    }
+
+    /// On a v2 tree, invalidate → re-open after a one-shard rewrite
+    /// re-reads exactly one object — the registry half of delta reload.
+    #[test]
+    fn v2_reopen_is_delta_aware() {
+        use crate::tm::artifact::{pack, rewrite_shard, PackOptions};
+        use crate::tm::TmModel;
+        let root =
+            std::env::temp_dir().join(format!("tdpc-reg-delta-{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        let m = TmModel::synthetic("regd", 2, 8, 19, 0.25, 41);
+        pack(&root, &[&m], &PackOptions { n_shards: 4, ..Default::default() }).unwrap();
+        let reg = ModelRegistry::open(&root).unwrap();
+        assert!(reg.store().unwrap().is_v2());
+        reg.backend("regd").unwrap();
+        assert_eq!(reg.payload_stats(), (4, 0));
+        rewrite_shard(&root, "regd", 3, |b| b.polarity[0] = -b.polarity[0]).unwrap();
+        assert!(reg.invalidate("regd"));
+        reg.backend("regd").unwrap();
+        let (opened, reused) = reg.payload_stats();
+        assert_eq!((opened, reused), (5, 3), "one changed shard → one disk read");
+        std::fs::remove_dir_all(&root).ok();
     }
 }

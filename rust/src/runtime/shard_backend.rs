@@ -55,6 +55,32 @@ impl ShardBackend {
         Ok(ShardBackend { shard, arch: hw, engine, scratch: Mutex::new(ForwardScratch::new()) })
     }
 
+    /// [`ShardBackend::build`] over a **subset model**: `model` already
+    /// holds only this worker's live clause range (every other clause is
+    /// dead — the shape `Store::load_model_subset` produces from a v2
+    /// artifact tree), so the backend scans *all* of it
+    /// (`ClauseShard::new(model, 0, 1)`) and then claims its true plan
+    /// position via [`ClauseShard::with_plan_coords`] so the reduce sees
+    /// an exact `(index, n_shards)` cover. Engine seeding matches
+    /// [`ShardBackend::build`]: one die per shard index.
+    pub fn build_subset(
+        model: Arc<TmModel>,
+        spec: ShardSpec,
+        hw: Option<HwArch>,
+    ) -> Result<ShardBackend> {
+        let shard =
+            ClauseShard::new(model, 0, 1)?.with_plan_coords(spec.index, spec.n_shards)?;
+        let engine = match hw {
+            Some(arch) => {
+                let mut flow = FlowConfig::table1_default();
+                flow.die_seed = flow.die_seed.wrapping_add(spec.index as u64);
+                Some(Mutex::new(arch.build_for_model(shard.model(), &flow, flow.die_seed)?))
+            }
+            None => None,
+        };
+        Ok(ShardBackend { shard, arch: hw, engine, scratch: Mutex::new(ForwardScratch::new()) })
+    }
+
     pub fn shard_view(&self) -> &ClauseShard {
         &self.shard
     }
@@ -170,6 +196,40 @@ mod tests {
                 assert!(b.hot_loop_stats().unwrap().rows > 0);
             }
         }
+    }
+
+    /// Subset-model shards (each built from only its own v2 artifact
+    /// objects) must merge to the exact native answer — the bit-exactness
+    /// contract of the "a shard worker opens only its own bytes" path.
+    #[test]
+    fn subset_shard_backends_merge_to_the_native_answer() {
+        use crate::tm::artifact::{pack, PackOptions};
+        let root =
+            std::env::temp_dir().join(format!("tdpc-subset-shard-{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        let m = model();
+        pack(&root, &[&m], &PackOptions { n_shards: 5, ..Default::default() }).unwrap();
+        let store = crate::tm::Store::open(&root).unwrap();
+        let native = NativeBackend::new(m.clone());
+        let batch = PackedBatch::from_rows(&rows(5, 17, 21)).unwrap();
+        let full = native.forward(&batch).unwrap();
+        for n_shards in [1usize, 2, 4] {
+            let parts: Vec<PartialOutput> = (0..n_shards)
+                .map(|i| {
+                    let sub = store.load_model_subset("shardb", i, n_shards, None).unwrap();
+                    let b = ShardBackend::build_subset(
+                        Arc::new(sub),
+                        ShardSpec { index: i, n_shards },
+                        None,
+                    )
+                    .unwrap();
+                    assert_eq!(b.shard(), Some((i, n_shards)));
+                    b.forward_partial(&batch).unwrap()
+                })
+                .collect();
+            assert_eq!(merge_partials(&parts).unwrap(), full, "n_shards={n_shards}");
+        }
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]

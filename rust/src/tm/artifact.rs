@@ -1,0 +1,1397 @@
+//! Content-addressed artifact store (manifest v2).
+//!
+//! The v1 artifact tree is a bare directory: `manifest.json` naming whole
+//! model files, no checksums, no provenance, whole-model reloads. This
+//! module replaces it with the manifest-plus-payload design of artcode
+//! RFC 0005 (schema version, per-entry sha256, profile/toolchain
+//! provenance) crossed with PB-AI's sharded manifest (per-shard
+//! id/kind/bytes/hash):
+//!
+//! ```text
+//! root/
+//!   manifest.json              # v2: schema + generation + provenance +
+//!                              #     per-model shard records (hash-addressed)
+//!   objects/
+//!     <sha256-hex>             # clause-block payloads, stored once,
+//!     <sha256-hex>             # named by the digest of their bytes
+//! ```
+//!
+//! A model's payload is split into **clause blocks** — contiguous
+//! storage-order clause ranges serialized canonically ([`ClauseBlock`]) —
+//! and each block lands in `objects/` under its own SHA-256. Two
+//! generations that share 9 of 10 blocks share 9 object files, and a
+//! reload only has to re-open the block whose hash changed
+//! ([`PayloadCache`] makes that delta visible to the coordinator as
+//! `reload_shards_reused`). Every object read re-hashes the bytes and
+//! fails with a **typed** [`ArtifactError`] on corruption; [`Store::open`]
+//! dispatches on the manifest schema so v1 trees stay readable
+//! unchanged. [`gc`] removes objects no live generation references,
+//! refusing anything pinned by an in-flight open ([`ObjectPin`]).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+use crate::util::sha256;
+
+use super::{parse_bits, Manifest, TmModel};
+
+/// Manifest schema tag this module writes and requires for v2 trees.
+pub const SCHEMA_V2: &str = "tdpc-artifact/v2";
+
+/// Typed corruption/consistency errors of the artifact store. Returned
+/// through `anyhow::Error` everywhere below; callers that need to branch
+/// on the failure mode downcast with `err.downcast_ref::<ArtifactError>()`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArtifactError {
+    /// An object file's bytes no longer hash to the name/manifest digest
+    /// (bit rot, truncation, or a tampered write).
+    HashMismatch { object: PathBuf, expected: String, actual: String },
+    /// A manifest references an object that is not in the store (a
+    /// dangling hash — e.g. GC raced a writer, or a partial copy).
+    MissingObject { hash: String, referenced_by: String },
+    /// A manifest or payload that does not parse / violates the schema.
+    Malformed { path: PathBuf, detail: String },
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::HashMismatch { object, expected, actual } => write!(
+                f,
+                "corrupt artifact object {}: sha256 {} (manifest expects {})",
+                object.display(),
+                actual,
+                expected
+            ),
+            ArtifactError::MissingObject { hash, referenced_by } => {
+                write!(f, "missing artifact object {hash} (referenced by {referenced_by})")
+            }
+            ArtifactError::Malformed { path, detail } => {
+                write!(f, "malformed artifact {}: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+fn malformed(path: &Path, detail: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(ArtifactError::Malformed {
+        path: path.to_path_buf(),
+        detail: detail.into(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Payload: canonical clause blocks
+// ---------------------------------------------------------------------------
+
+/// One content-addressed payload shard: a contiguous storage-order clause
+/// range `[clause_lo, clause_hi)` of a model. Serialization is canonical
+/// (sorted keys, compact emit, bitstring masks) so identical clause data
+/// always produces identical bytes — and therefore the same object hash.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClauseBlock {
+    pub clause_lo: usize,
+    pub clause_hi: usize,
+    /// Per-clause include masks over `[x, ~x]` literals.
+    pub include: Vec<Vec<bool>>,
+    pub polarity: Vec<i8>,
+    pub nonempty: Vec<bool>,
+}
+
+impl ClauseBlock {
+    /// Slice a block out of a model's storage-order clause arrays.
+    pub fn from_model(m: &TmModel, clause_lo: usize, clause_hi: usize) -> ClauseBlock {
+        ClauseBlock {
+            clause_lo,
+            clause_hi,
+            include: m.include[clause_lo..clause_hi].to_vec(),
+            polarity: m.polarity[clause_lo..clause_hi].to_vec(),
+            nonempty: m.nonempty[clause_lo..clause_hi].to_vec(),
+        }
+    }
+
+    /// Canonical bytes: compact JSON with BTreeMap-ordered keys. The
+    /// object hash is the digest of exactly these bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        fn bitstring(bits: &[bool]) -> Value {
+            Value::Str(bits.iter().map(|&b| if b { '1' } else { '0' }).collect())
+        }
+        let doc = json::obj(vec![
+            ("clause_hi", json::num(self.clause_hi as f64)),
+            ("clause_lo", json::num(self.clause_lo as f64)),
+            ("include", Value::Arr(self.include.iter().map(|row| bitstring(row)).collect())),
+            ("kind", json::s(BLOCK_KIND)),
+            (
+                "nonempty",
+                Value::Arr(self.nonempty.iter().map(|&b| json::num(b as u8 as f64)).collect()),
+            ),
+            (
+                "polarity",
+                Value::Arr(self.polarity.iter().map(|&p| json::num(p as f64)).collect()),
+            ),
+        ]);
+        json::emit(&doc).into_bytes()
+    }
+
+    /// Parse an object payload. `object` names the file for error context.
+    pub fn parse(bytes: &[u8], object: &Path) -> Result<ClauseBlock> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| malformed(object, "payload is not UTF-8"))?;
+        let doc = json::parse(text).map_err(|e| malformed(object, format!("bad JSON: {e}")))?;
+        let inner = || -> Result<ClauseBlock> {
+            let kind = doc.get("kind")?.as_str()?;
+            anyhow::ensure!(kind == BLOCK_KIND, "unknown payload kind {kind:?}");
+            let clause_lo = doc.get("clause_lo")?.as_usize()?;
+            let clause_hi = doc.get("clause_hi")?.as_usize()?;
+            let include = doc
+                .get("include")?
+                .as_arr()?
+                .iter()
+                .map(|row| parse_bits(row.as_str()?))
+                .collect::<Result<Vec<_>>>()?;
+            let polarity = doc
+                .get("polarity")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_i64()? as i8))
+                .collect::<Result<Vec<_>>>()?;
+            let nonempty = doc
+                .get("nonempty")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_i64()? != 0))
+                .collect::<Result<Vec<_>>>()?;
+            let n = clause_hi.saturating_sub(clause_lo);
+            anyhow::ensure!(
+                clause_lo < clause_hi
+                    && include.len() == n
+                    && polarity.len() == n
+                    && nonempty.len() == n,
+                "clause range [{clause_lo}, {clause_hi}) does not match payload lengths \
+                 ({}/{}/{})",
+                include.len(),
+                polarity.len(),
+                nonempty.len()
+            );
+            Ok(ClauseBlock { clause_lo, clause_hi, include, polarity, nonempty })
+        };
+        inner().map_err(|e| malformed(object, e.to_string()))
+    }
+}
+
+/// The only payload kind today. New kinds (automata state for the online
+/// trainer, literal stats for reindexing) extend this enum of strings
+/// without a schema bump: readers skip kinds they don't know.
+pub const BLOCK_KIND: &str = "clause-block";
+
+// ---------------------------------------------------------------------------
+// Manifest v2
+// ---------------------------------------------------------------------------
+
+/// One shard record of a model: where `[clause_lo, clause_hi)` lives in
+/// the object store (PB-AI's per-shard id/kind/bytes/hash).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardRecord {
+    /// Stable id, `"<model>/clauses/<i>"`.
+    pub id: String,
+    pub kind: String,
+    pub clause_lo: usize,
+    pub clause_hi: usize,
+    /// Payload size in bytes (checked before hashing on verify).
+    pub bytes: u64,
+    /// Lowercase-hex SHA-256 of the payload — also the object file name.
+    pub sha256: String,
+}
+
+/// One model generation's entry: shape + accuracy + its shard records.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelRecord {
+    pub name: String,
+    pub n_classes: usize,
+    pub n_features: usize,
+    pub clauses_per_class: usize,
+    pub accuracy: f64,
+    pub shards: Vec<ShardRecord>,
+}
+
+impl ModelRecord {
+    pub fn c_total(&self) -> usize {
+        self.n_classes * self.clauses_per_class
+    }
+}
+
+/// Who wrote the tree, and from what (artcode RFC 0005's
+/// profile/toolchain fields).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// Writing toolchain, e.g. `"tdpc 0.1.0"`.
+    pub writer: String,
+    /// Build profile / flavor of the payloads (`"synthetic"`, `"trained"`).
+    pub profile: String,
+    /// Where the payloads came from (`"pack"`, `"v1-migration"`, …).
+    pub source: String,
+}
+
+/// A parsed v2 manifest: the index of one artifact-tree generation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreManifest {
+    pub root: PathBuf,
+    /// Monotone per-tree write counter; every `pack`/[`rewrite_shard`]
+    /// bumps it, and the coordinator stamps reloads with its own
+    /// generation counter on top.
+    pub generation: u64,
+    pub provenance: Provenance,
+    pub models: Vec<ModelRecord>,
+}
+
+impl StoreManifest {
+    pub fn load(root: &Path) -> Result<StoreManifest> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc =
+            json::parse(&text).map_err(|e| malformed(&path, format!("bad JSON: {e}")))?;
+        Self::from_doc(root, &doc, &path)
+    }
+
+    fn from_doc(root: &Path, doc: &Value, path: &Path) -> Result<StoreManifest> {
+        let inner = || -> Result<StoreManifest> {
+            let schema = doc.get("schema")?.as_str()?;
+            anyhow::ensure!(schema == SCHEMA_V2, "unsupported schema {schema:?}");
+            let generation = doc.get("generation")?.as_usize()? as u64;
+            let prov = doc.get("provenance")?;
+            let provenance = Provenance {
+                writer: prov.get("writer")?.as_str()?.to_string(),
+                profile: prov.get("profile")?.as_str()?.to_string(),
+                source: prov.get("source")?.as_str()?.to_string(),
+            };
+            let mut models = Vec::new();
+            for (name, m) in doc.get("models")?.as_obj()? {
+                let mut shards = Vec::new();
+                for s in m.get("shards")?.as_arr()? {
+                    let hash = s.get("sha256")?.as_str()?.to_string();
+                    anyhow::ensure!(
+                        hash.len() == 64 && hash.bytes().all(|b| b.is_ascii_hexdigit()),
+                        "shard {:?} has a malformed sha256 {hash:?}",
+                        s.get("id")?.as_str()?
+                    );
+                    shards.push(ShardRecord {
+                        id: s.get("id")?.as_str()?.to_string(),
+                        kind: s.get("kind")?.as_str()?.to_string(),
+                        clause_lo: s.get("clause_lo")?.as_usize()?,
+                        clause_hi: s.get("clause_hi")?.as_usize()?,
+                        bytes: s.get("bytes")?.as_usize()? as u64,
+                        sha256: hash,
+                    });
+                }
+                models.push(ModelRecord {
+                    name: name.clone(),
+                    n_classes: m.get("n_classes")?.as_usize()?,
+                    n_features: m.get("n_features")?.as_usize()?,
+                    clauses_per_class: m.get("clauses_per_class")?.as_usize()?,
+                    accuracy: m.get("accuracy")?.as_f64()?,
+                    shards,
+                });
+            }
+            models.sort_by(|a, b| a.name.cmp(&b.name));
+            Ok(StoreManifest {
+                root: root.to_path_buf(),
+                generation,
+                provenance,
+                models,
+            })
+        };
+        inner().map_err(|e| match e.downcast::<ArtifactError>() {
+            Ok(typed) => anyhow::Error::new(typed),
+            Err(e) => malformed(path, e.to_string()),
+        })
+    }
+
+    pub fn record(&self, name: &str) -> Result<&ModelRecord> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| format!("model {name:?} not in artifact manifest"))
+    }
+
+    fn to_doc(&self) -> Value {
+        let models: BTreeMap<String, Value> = self
+            .models
+            .iter()
+            .map(|m| {
+                let shards = Value::Arr(
+                    m.shards
+                        .iter()
+                        .map(|s| {
+                            json::obj(vec![
+                                ("bytes", json::num(s.bytes as f64)),
+                                ("clause_hi", json::num(s.clause_hi as f64)),
+                                ("clause_lo", json::num(s.clause_lo as f64)),
+                                ("id", json::s(&s.id)),
+                                ("kind", json::s(&s.kind)),
+                                ("sha256", json::s(&s.sha256)),
+                            ])
+                        })
+                        .collect(),
+                );
+                (
+                    m.name.clone(),
+                    json::obj(vec![
+                        ("accuracy", json::num(m.accuracy)),
+                        ("clauses_per_class", json::num(m.clauses_per_class as f64)),
+                        ("n_classes", json::num(m.n_classes as f64)),
+                        ("n_features", json::num(m.n_features as f64)),
+                        ("shards", shards),
+                    ]),
+                )
+            })
+            .collect();
+        json::obj(vec![
+            ("generation", json::num(self.generation as f64)),
+            ("models", Value::Obj(models)),
+            (
+                "provenance",
+                json::obj(vec![
+                    ("profile", json::s(&self.provenance.profile)),
+                    ("source", json::s(&self.provenance.source)),
+                    ("writer", json::s(&self.provenance.writer)),
+                ]),
+            ),
+            ("schema", json::s(SCHEMA_V2)),
+        ])
+    }
+
+    /// Atomic manifest publish: write to a pid-suffixed temp file in the
+    /// same directory, then rename over `manifest.json` (readers see the
+    /// old manifest or the new one, never a torn write).
+    pub fn write(&self) -> Result<()> {
+        std::fs::create_dir_all(&self.root)
+            .with_context(|| format!("creating {}", self.root.display()))?;
+        let path = self.root.join("manifest.json");
+        let tmp = self.root.join(format!("manifest.json.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, json::emit(&self.to_doc()) + "\n")
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Every object hash any model of this generation references.
+    pub fn referenced_hashes(&self) -> HashSet<String> {
+        self.models
+            .iter()
+            .flat_map(|m| m.shards.iter().map(|s| s.sha256.clone()))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Object store primitives
+// ---------------------------------------------------------------------------
+
+fn objects_dir(root: &Path) -> PathBuf {
+    root.join("objects")
+}
+
+/// Path of the object named `hash` under `root`.
+pub fn object_path(root: &Path, hash: &str) -> PathBuf {
+    objects_dir(root).join(hash)
+}
+
+/// Store `bytes` under its own digest. Returns `(hash, newly_written)`;
+/// an object that already exists is never rewritten (content addressing
+/// makes the write idempotent). New objects land via temp + rename so a
+/// crashed writer cannot leave a half-written object under a valid name.
+pub fn write_object(root: &Path, bytes: &[u8]) -> Result<(String, bool)> {
+    let hash = sha256::hex_digest(bytes);
+    let dir = objects_dir(root);
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+    let path = dir.join(&hash);
+    if path.exists() {
+        return Ok((hash, false));
+    }
+    let tmp = dir.join(format!("{hash}.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publishing {}", path.display()))?;
+    Ok((hash, true))
+}
+
+/// Read and **verify** the object named `hash`. A missing file is a
+/// typed [`ArtifactError::MissingObject`]; bytes that do not hash back
+/// to the name are a typed [`ArtifactError::HashMismatch`].
+pub fn read_object(root: &Path, hash: &str, referenced_by: &str) -> Result<Vec<u8>> {
+    let path = object_path(root, hash);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Err(anyhow::Error::new(ArtifactError::MissingObject {
+                hash: hash.to_string(),
+                referenced_by: referenced_by.to_string(),
+            }));
+        }
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    let actual = sha256::hex_digest(&bytes);
+    if actual != hash {
+        return Err(anyhow::Error::new(ArtifactError::HashMismatch {
+            object: path,
+            expected: hash.to_string(),
+            actual,
+        }));
+    }
+    Ok(bytes)
+}
+
+// ---------------------------------------------------------------------------
+// In-flight object pins (GC safety)
+// ---------------------------------------------------------------------------
+
+type PinMap = HashMap<(PathBuf, String), usize>;
+
+fn pins() -> &'static Mutex<PinMap> {
+    static PINS: OnceLock<Mutex<PinMap>> = OnceLock::new();
+    PINS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Stable per-root key for the pin registry (symlink/relative-path
+/// aliases of the same tree must share pins).
+fn pin_root_key(root: &Path) -> PathBuf {
+    std::fs::canonicalize(root).unwrap_or_else(|_| root.to_path_buf())
+}
+
+/// RAII pin on one object of one tree: while any pin is alive, [`gc`]
+/// will not delete that object even if no manifest references it (e.g.
+/// a worker still serving a superseded generation). Workers hold a pin
+/// per cached block for exactly as long as the block is resident
+/// ([`PayloadCache`]).
+#[derive(Debug)]
+pub struct ObjectPin {
+    root: PathBuf,
+    hash: String,
+}
+
+impl Drop for ObjectPin {
+    fn drop(&mut self) {
+        let mut map = pins().lock().unwrap();
+        let key = (self.root.clone(), self.hash.clone());
+        if let Some(n) = map.get_mut(&key) {
+            *n -= 1;
+            if *n == 0 {
+                map.remove(&key);
+            }
+        }
+    }
+}
+
+/// Pin `hash` under `root` for the lifetime of the returned guard.
+pub fn pin_object(root: &Path, hash: &str) -> ObjectPin {
+    let root = pin_root_key(root);
+    *pins().lock().unwrap().entry((root.clone(), hash.to_string())).or_insert(0) += 1;
+    ObjectPin { root, hash: hash.to_string() }
+}
+
+/// Hashes currently pinned under `root` (in-flight workers).
+pub fn pinned_for(root: &Path) -> HashSet<String> {
+    let root = pin_root_key(root);
+    pins()
+        .lock()
+        .unwrap()
+        .keys()
+        .filter(|(r, _)| *r == root)
+        .map(|(_, h)| h.clone())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Payload cache: the delta-reload mechanism
+// ---------------------------------------------------------------------------
+
+struct CacheEntry {
+    block: Arc<ClauseBlock>,
+    /// Keeps the backing object alive against [`gc`] while cached.
+    _pin: ObjectPin,
+}
+
+/// Hash-keyed cache of parsed clause blocks, shared by every backend a
+/// [`crate::runtime::ModelRegistry`] opens. Because keys are content
+/// hashes, a reload whose new manifest repeats a hash is a **cache hit**
+/// — no disk read, no re-verify, no re-parse — and the `opened`/`reused`
+/// counters are exactly the delta the coordinator reports as
+/// `reload_shards_reused`.
+#[derive(Default)]
+pub struct PayloadCache {
+    blocks: Mutex<HashMap<String, CacheEntry>>,
+    /// Hashes each model's most recent open referenced (the live set
+    /// [`PayloadCache::evict_stale`] retains).
+    by_model: Mutex<HashMap<String, Vec<String>>>,
+    /// Objects read + verified + parsed from disk.
+    opened: AtomicU64,
+    /// Cache hits (object bytes not re-read).
+    reused: AtomicU64,
+}
+
+impl PayloadCache {
+    pub fn new() -> PayloadCache {
+        PayloadCache::default()
+    }
+
+    /// Fetch the block for `rec`, from cache or (verified) from disk.
+    pub fn get_or_load(&self, root: &Path, rec: &ShardRecord) -> Result<Arc<ClauseBlock>> {
+        if let Some(e) = self.blocks.lock().unwrap().get(&rec.sha256) {
+            self.reused.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(&e.block));
+        }
+        let block = Arc::new(load_block(root, rec)?);
+        self.opened.fetch_add(1, Ordering::Relaxed);
+        let pin = pin_object(root, &rec.sha256);
+        self.blocks
+            .lock()
+            .unwrap()
+            .entry(rec.sha256.clone())
+            .or_insert(CacheEntry { block: Arc::clone(&block), _pin: pin });
+        Ok(block)
+    }
+
+    /// Record the hashes model `name`'s latest open referenced.
+    pub fn note_model(&self, name: &str, hashes: Vec<String>) {
+        self.by_model.lock().unwrap().insert(name.to_string(), hashes);
+    }
+
+    /// Drop cached blocks (and their GC pins) that no model's latest
+    /// open references — called after a successful swap so superseded
+    /// generations release their objects.
+    pub fn evict_stale(&self) {
+        let live: HashSet<String> =
+            self.by_model.lock().unwrap().values().flatten().cloned().collect();
+        self.blocks.lock().unwrap().retain(|hash, _| live.contains(hash));
+    }
+
+    /// `(opened, reused)` lifetime counters.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.opened.load(Ordering::Relaxed), self.reused.load(Ordering::Relaxed))
+    }
+}
+
+/// Read + verify + parse one shard record's payload (no cache).
+fn load_block(root: &Path, rec: &ShardRecord) -> Result<ClauseBlock> {
+    let bytes = read_object(root, &rec.sha256, &rec.id)?;
+    let path = object_path(root, &rec.sha256);
+    if bytes.len() as u64 != rec.bytes {
+        return Err(malformed(
+            &path,
+            format!("object is {} bytes, manifest records {}", bytes.len(), rec.bytes),
+        ));
+    }
+    let block = ClauseBlock::parse(&bytes, &path)?;
+    if block.clause_lo != rec.clause_lo || block.clause_hi != rec.clause_hi {
+        return Err(malformed(
+            &path,
+            format!(
+                "payload covers clauses [{}, {}) but record {} says [{}, {})",
+                block.clause_lo, block.clause_hi, rec.id, rec.clause_lo, rec.clause_hi
+            ),
+        ));
+    }
+    Ok(block)
+}
+
+// ---------------------------------------------------------------------------
+// Store: version-dispatching open + model loading
+// ---------------------------------------------------------------------------
+
+/// An opened artifact tree, v1 or v2. [`Store::open`] dispatches on the
+/// manifest's `schema` field, so every caller that used to call
+/// `Manifest::load` keeps working on old trees while new trees get hash
+/// verification and delta-aware payload loading.
+#[derive(Debug, Clone)]
+pub enum Store {
+    /// Legacy bare-directory tree (`Manifest::load`): whole-model JSON
+    /// files, no hashes. Read-only compatibility path.
+    V1(Manifest),
+    /// Content-addressed tree (this module).
+    V2(StoreManifest),
+}
+
+impl Store {
+    pub fn open(root: &Path) -> Result<Store> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (artifact tree root?)", path.display()))?;
+        let doc =
+            json::parse(&text).map_err(|e| malformed(&path, format!("bad JSON: {e}")))?;
+        if doc.get_opt("schema").is_some() {
+            return Ok(Store::V2(StoreManifest::from_doc(root, &doc, &path)?));
+        }
+        if doc.get_opt("batch_sizes").is_some() {
+            return Ok(Store::V1(Manifest::load(root)?));
+        }
+        Err(malformed(&path, "neither a v2 manifest (schema) nor a v1 manifest (batch_sizes)"))
+    }
+
+    pub fn root(&self) -> &Path {
+        match self {
+            Store::V1(m) => &m.root,
+            Store::V2(m) => &m.root,
+        }
+    }
+
+    pub fn is_v2(&self) -> bool {
+        matches!(self, Store::V2(_))
+    }
+
+    /// The v1 view, if this is a v1 tree (HLO paths, batch sizes, test
+    /// data — fields v2 does not carry).
+    pub fn v1(&self) -> Option<&Manifest> {
+        match self {
+            Store::V1(m) => Some(m),
+            Store::V2(_) => None,
+        }
+    }
+
+    pub fn v2(&self) -> Option<&StoreManifest> {
+        match self {
+            Store::V1(_) => None,
+            Store::V2(m) => Some(m),
+        }
+    }
+
+    /// Store generation (v1 trees have none; reported as 0).
+    pub fn generation(&self) -> u64 {
+        match self {
+            Store::V1(_) => 0,
+            Store::V2(m) => m.generation,
+        }
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        match self {
+            Store::V1(m) => m.models.iter().map(|e| e.name.clone()).collect(),
+            Store::V2(m) => m.models.iter().map(|r| r.name.clone()).collect(),
+        }
+    }
+
+    /// Shape of one model without loading payloads:
+    /// `(n_classes, n_features, clauses_per_class, accuracy)`.
+    pub fn model_shape(&self, name: &str) -> Result<(usize, usize, usize, f64)> {
+        match self {
+            Store::V1(m) => {
+                let e = m.entry(name)?;
+                Ok((e.n_classes, e.n_features, e.clauses_per_class, e.accuracy))
+            }
+            Store::V2(m) => {
+                let r = m.record(name)?;
+                Ok((r.n_classes, r.n_features, r.clauses_per_class, r.accuracy))
+            }
+        }
+    }
+
+    /// Load a full model. v2 trees verify every object hash on the way
+    /// in; a `cache` turns repeat hashes into no-disk-touch hits.
+    pub fn load_model(&self, name: &str, cache: Option<&PayloadCache>) -> Result<TmModel> {
+        match self {
+            Store::V1(m) => {
+                let entry = m.entry(name)?;
+                let mut model = TmModel::load(&entry.model_path)?;
+                model.name = entry.name.clone();
+                Ok(model)
+            }
+            Store::V2(m) => {
+                let rec = m.record(name)?;
+                let blocks = self.fetch_blocks(rec, &rec.shards, cache)?;
+                if let Some(c) = cache {
+                    c.note_model(name, rec.shards.iter().map(|s| s.sha256.clone()).collect());
+                }
+                assemble_from_blocks(rec, &blocks, None)
+            }
+        }
+    }
+
+    /// Load only the clause range shard `index`-of-`n_shards` owns
+    /// (`[i·C/n, (i+1)·C/n)`), touching only the objects that overlap
+    /// it — the "a shard worker opens only its own bytes" path. Clauses
+    /// outside the range come back **dead** (`nonempty = false`), so a
+    /// `ClauseShard` built over the owned range produces partial sums
+    /// bit-identical to a slice of the full model. v2 trees only.
+    pub fn load_model_subset(
+        &self,
+        name: &str,
+        index: usize,
+        n_shards: usize,
+        cache: Option<&PayloadCache>,
+    ) -> Result<TmModel> {
+        let m = match self {
+            Store::V1(_) => anyhow::bail!(
+                "subset loads need a v2 artifact tree (run `tdpc pack --from-v1`)"
+            ),
+            Store::V2(m) => m,
+        };
+        anyhow::ensure!(index < n_shards, "shard {index} out of range ({n_shards} shards)");
+        let rec = m.record(name)?;
+        let c_total = rec.c_total();
+        let lo = index * c_total / n_shards;
+        let hi = (index + 1) * c_total / n_shards;
+        let wanted: Vec<ShardRecord> = rec
+            .shards
+            .iter()
+            .filter(|s| s.clause_lo < hi && s.clause_hi > lo)
+            .cloned()
+            .collect();
+        let blocks = self.fetch_blocks(rec, &wanted, cache)?;
+        if let Some(c) = cache {
+            c.note_model(
+                &format!("{name}#{index}/{n_shards}"),
+                wanted.iter().map(|s| s.sha256.clone()).collect(),
+            );
+        }
+        assemble_from_blocks(rec, &blocks, Some((lo, hi)))
+    }
+
+    fn fetch_blocks(
+        &self,
+        rec: &ModelRecord,
+        shards: &[ShardRecord],
+        cache: Option<&PayloadCache>,
+    ) -> Result<Vec<Arc<ClauseBlock>>> {
+        let root = self.root();
+        shards
+            .iter()
+            .map(|s| match cache {
+                Some(c) => c.get_or_load(root, s),
+                None => load_block(root, s).map(Arc::new),
+            })
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("loading payload of model {:?}", rec.name))
+    }
+}
+
+/// Assemble a [`TmModel`] from clause blocks. With `owned = Some((lo,
+/// hi))` only clauses in `[lo, hi)` are materialized (the rest stay
+/// all-zero and dead); coverage of the owned range must be exact — a
+/// gap or an overlap is a typed malformed-artifact error.
+fn assemble_from_blocks(
+    rec: &ModelRecord,
+    blocks: &[Arc<ClauseBlock>],
+    owned: Option<(usize, usize)>,
+) -> Result<TmModel> {
+    let c_total = rec.c_total();
+    let (lo, hi) = owned.unwrap_or((0, c_total));
+    let width = 2 * rec.n_features;
+    let mut include = vec![vec![false; width]; c_total];
+    let mut polarity = vec![1i8; c_total];
+    let mut nonempty = vec![false; c_total];
+    let mut covered = vec![false; c_total];
+    let err = |detail: String| {
+        malformed(&PathBuf::from(format!("model {}", rec.name)), detail)
+    };
+    for b in blocks {
+        if b.clause_hi > c_total {
+            return Err(err(format!(
+                "block [{}, {}) exceeds {} clauses",
+                b.clause_lo, b.clause_hi, c_total
+            )));
+        }
+        for (off, c) in (b.clause_lo..b.clause_hi).enumerate() {
+            if c < lo || c >= hi {
+                continue;
+            }
+            if covered[c] {
+                return Err(err(format!("clause {c} covered by two blocks")));
+            }
+            covered[c] = true;
+            if b.include[off].len() != width {
+                return Err(err(format!(
+                    "clause {c} has {} literals, model width is {width}",
+                    b.include[off].len()
+                )));
+            }
+            include[c] = b.include[off].clone();
+            polarity[c] = b.polarity[off];
+            nonempty[c] = b.nonempty[off];
+        }
+    }
+    if let Some(c) = (lo..hi).find(|&c| !covered[c]) {
+        return Err(err(format!("clause {c} not covered by any block")));
+    }
+    Ok(TmModel::assemble(
+        rec.name.clone(),
+        rec.n_classes,
+        rec.n_features,
+        rec.clauses_per_class,
+        include,
+        polarity,
+        nonempty,
+        rec.accuracy,
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Pack / verify / GC / rewrite
+// ---------------------------------------------------------------------------
+
+/// Options for [`pack`].
+#[derive(Debug, Clone)]
+pub struct PackOptions {
+    /// Clause blocks per model (each becomes one object). Clamped to
+    /// `[1, c_total]` per model.
+    pub n_shards: usize,
+    pub profile: String,
+    pub source: String,
+}
+
+impl Default for PackOptions {
+    fn default() -> Self {
+        PackOptions { n_shards: 4, profile: "synthetic".into(), source: "pack".into() }
+    }
+}
+
+/// What [`pack`] did.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackReport {
+    pub models: usize,
+    /// Objects newly written to the store.
+    pub objects_written: usize,
+    /// Objects that already existed (content-hash dedup hits).
+    pub objects_deduped: usize,
+    pub bytes_written: u64,
+    /// Generation of the manifest this pack published.
+    pub generation: u64,
+}
+
+fn default_writer() -> String {
+    format!("tdpc {}", env!("CARGO_PKG_VERSION"))
+}
+
+/// Pack `models` into a v2 tree at `root`: split each model's clause
+/// arrays into `opts.n_shards` contiguous blocks, store each block once
+/// under its content hash, and publish a new manifest generation
+/// atomically. Re-packing unchanged models writes zero new objects.
+pub fn pack(root: &Path, models: &[&TmModel], opts: &PackOptions) -> Result<PackReport> {
+    let generation = match StoreManifest::load(root) {
+        Ok(prev) => prev.generation + 1,
+        Err(_) => 1,
+    };
+    let mut records = Vec::with_capacity(models.len());
+    let mut written = 0usize;
+    let mut deduped = 0usize;
+    let mut bytes_written = 0u64;
+    for m in models {
+        anyhow::ensure!(
+            !m.name.is_empty()
+                && m.name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+            "artifact model names must be [A-Za-z0-9_-]+, got {:?}",
+            m.name
+        );
+        let c_total = m.c_total();
+        anyhow::ensure!(c_total > 0, "model {:?} has no clauses", m.name);
+        let n = opts.n_shards.clamp(1, c_total);
+        let mut shards = Vec::with_capacity(n);
+        for i in 0..n {
+            let lo = i * c_total / n;
+            let hi = (i + 1) * c_total / n;
+            let payload = ClauseBlock::from_model(m, lo, hi).to_bytes();
+            let (hash, new) = write_object(root, &payload)?;
+            if new {
+                written += 1;
+                bytes_written += payload.len() as u64;
+            } else {
+                deduped += 1;
+            }
+            shards.push(ShardRecord {
+                id: format!("{}/clauses/{i}", m.name),
+                kind: BLOCK_KIND.to_string(),
+                clause_lo: lo,
+                clause_hi: hi,
+                bytes: payload.len() as u64,
+                sha256: hash,
+            });
+        }
+        records.push(ModelRecord {
+            name: m.name.clone(),
+            n_classes: m.n_classes,
+            n_features: m.n_features,
+            clauses_per_class: m.clauses_per_class,
+            accuracy: m.accuracy,
+            shards,
+        });
+    }
+    records.sort_by(|a, b| a.name.cmp(&b.name));
+    let manifest = StoreManifest {
+        root: root.to_path_buf(),
+        generation,
+        provenance: Provenance {
+            writer: default_writer(),
+            profile: opts.profile.clone(),
+            source: opts.source.clone(),
+        },
+        models: records,
+    };
+    manifest.write()?;
+    Ok(PackReport {
+        models: models.len(),
+        objects_written: written,
+        objects_deduped: deduped,
+        bytes_written,
+        generation: manifest.generation,
+    })
+}
+
+/// Convert a v1 tree **in place**: load every model the v1 manifest
+/// names, pack them as content-addressed blocks, and publish a v2
+/// manifest over the old one. The v1 `models/` files are left behind
+/// (they are not objects; `gc` ignores them) so the conversion is easy
+/// to inspect. `load(v1) == load(pack_from_v1(v1))` by construction —
+/// the round-trip property test in `tests/artifact_store.rs`.
+pub fn pack_from_v1(root: &Path, n_shards: usize) -> Result<PackReport> {
+    let v1 = Manifest::load(root).context("pack --from-v1 needs a loadable v1 manifest")?;
+    let mut models = Vec::with_capacity(v1.models.len());
+    for entry in &v1.models {
+        let mut m = TmModel::load(&entry.model_path)
+            .with_context(|| format!("loading v1 model {:?}", entry.name))?;
+        m.name = entry.name.clone();
+        models.push(m);
+    }
+    let refs: Vec<&TmModel> = models.iter().collect();
+    pack(
+        root,
+        &refs,
+        &PackOptions {
+            n_shards,
+            profile: "v1".into(),
+            source: "v1-migration".into(),
+        },
+    )
+}
+
+/// What [`verify`] checked.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerifyReport {
+    pub models: usize,
+    /// Shard objects read, size-checked, re-hashed, and parsed.
+    pub objects_verified: usize,
+    pub bytes_verified: u64,
+    /// Objects in the store no current-manifest shard references
+    /// (candidates for [`gc`], not an error).
+    pub unreferenced: usize,
+}
+
+/// Full-tree integrity check of a v2 tree: every shard record's object
+/// must exist, match its recorded size, hash back to its name, parse as
+/// its kind, and assemble into a well-formed model. Any violation is a
+/// typed [`ArtifactError`].
+pub fn verify(root: &Path) -> Result<VerifyReport> {
+    let store = Store::open(root)?;
+    let m = match &store {
+        Store::V1(_) => anyhow::bail!(
+            "{} is a v1 tree (no hashes to verify) — run `tdpc pack --from-v1` first",
+            root.display()
+        ),
+        Store::V2(m) => m,
+    };
+    let mut objects = 0usize;
+    let mut bytes = 0u64;
+    for rec in &m.models {
+        for s in &rec.shards {
+            let block = load_block(root, s)?;
+            objects += 1;
+            bytes += s.bytes;
+            drop(block);
+        }
+        // The blocks must also assemble into a coherent model (coverage,
+        // widths) — re-reads via load_model keep this path identical to
+        // what serving does at open.
+        store.load_model(&rec.name, None)?;
+    }
+    let referenced = m.referenced_hashes();
+    let unreferenced = list_objects(root)?
+        .into_iter()
+        .filter(|(h, _)| !referenced.contains(h))
+        .count();
+    Ok(VerifyReport {
+        models: m.models.len(),
+        objects_verified: objects,
+        bytes_verified: bytes,
+        unreferenced,
+    })
+}
+
+/// `(hash, size_bytes)` of every object file in the store. Only names
+/// that look like sha256 hex are objects; temp files and strays are
+/// ignored (and never GC'd).
+fn list_objects(root: &Path) -> Result<Vec<(String, u64)>> {
+    let dir = objects_dir(root);
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(e).with_context(|| format!("listing {}", dir.display())),
+    };
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.len() == 64 && name.bytes().all(|b| b.is_ascii_hexdigit()) {
+            let size = entry.metadata().map(|m| m.len()).unwrap_or(0);
+            out.push((name, size));
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// What [`gc`] did (or would do, under `dry_run`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GcReport {
+    /// Objects in the store.
+    pub scanned: usize,
+    /// Objects referenced by the live manifest generation.
+    pub live: usize,
+    /// Unreferenced objects kept because an in-flight worker pins them.
+    pub kept_pinned: usize,
+    /// Objects deleted (or that would be, under `dry_run`).
+    pub deleted: usize,
+    pub bytes_freed: u64,
+}
+
+/// Delete objects no live generation references. The live set is the
+/// union of (a) every hash the current manifest references and (b)
+/// every hash pinned by an in-process open ([`pin_object`]) — so a
+/// worker still serving a superseded generation never loses its bytes.
+pub fn gc(root: &Path, dry_run: bool) -> Result<GcReport> {
+    let store = Store::open(root)?;
+    let referenced = match &store {
+        Store::V1(_) => anyhow::bail!(
+            "{} is a v1 tree (no object store to collect) — run `tdpc pack --from-v1` first",
+            root.display()
+        ),
+        Store::V2(m) => m.referenced_hashes(),
+    };
+    let pinned = pinned_for(root);
+    let mut report = GcReport { scanned: 0, live: 0, kept_pinned: 0, deleted: 0, bytes_freed: 0 };
+    for (hash, size) in list_objects(root)? {
+        report.scanned += 1;
+        if referenced.contains(&hash) {
+            report.live += 1;
+            continue;
+        }
+        if pinned.contains(&hash) {
+            report.kept_pinned += 1;
+            continue;
+        }
+        if !dry_run {
+            std::fs::remove_file(object_path(root, &hash))
+                .with_context(|| format!("deleting object {hash}"))?;
+        }
+        report.deleted += 1;
+        report.bytes_freed += size;
+    }
+    Ok(report)
+}
+
+/// Rewrite one shard of one model: load its block, apply `mutate`,
+/// store the result as a new object, and publish a bumped-generation
+/// manifest pointing at it. The old object stays in the store (a live
+/// pool may still serve it) until [`gc`]. Returns the new object hash.
+///
+/// This is the minimal "one shard changed" writer that delta-reload
+/// tests, `serve --mutate-shard`, and the artifact bench drive.
+pub fn rewrite_shard(
+    root: &Path,
+    model: &str,
+    shard_ix: usize,
+    mutate: impl FnOnce(&mut ClauseBlock),
+) -> Result<String> {
+    let mut manifest = StoreManifest::load(root)?;
+    let rec = manifest
+        .models
+        .iter_mut()
+        .find(|m| m.name == model)
+        .with_context(|| format!("model {model:?} not in artifact manifest"))?;
+    anyhow::ensure!(
+        shard_ix < rec.shards.len(),
+        "shard {shard_ix} out of range ({} shards)",
+        rec.shards.len()
+    );
+    let mut block = load_block(root, &rec.shards[shard_ix])?;
+    mutate(&mut block);
+    anyhow::ensure!(
+        block.clause_lo == rec.shards[shard_ix].clause_lo
+            && block.clause_hi == rec.shards[shard_ix].clause_hi,
+        "mutate must not change the shard's clause range"
+    );
+    let payload = block.to_bytes();
+    let (hash, _) = write_object(root, &payload)?;
+    rec.shards[shard_ix].sha256 = hash.clone();
+    rec.shards[shard_ix].bytes = payload.len() as u64;
+    manifest.generation += 1;
+    manifest.write()?;
+    Ok(hash)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_root(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("tdpc-artifact-{tag}-{}", std::process::id()))
+    }
+
+    fn two_models() -> (TmModel, TmModel) {
+        (
+            TmModel::synthetic("tenant_a", 3, 8, 17, 0.25, 11),
+            TmModel::synthetic("tenant_b", 2, 6, 33, 0.3, 12),
+        )
+    }
+
+    fn models_equal(a: &TmModel, b: &TmModel) -> bool {
+        a.n_classes == b.n_classes
+            && a.n_features == b.n_features
+            && a.clauses_per_class == b.clauses_per_class
+            && a.include == b.include
+            && a.polarity == b.polarity
+            && a.nonempty == b.nonempty
+    }
+
+    #[test]
+    fn clause_block_bytes_are_canonical_and_roundtrip() {
+        let (a, _) = two_models();
+        let block = ClauseBlock::from_model(&a, 3, 9);
+        let bytes = block.to_bytes();
+        assert_eq!(bytes, block.to_bytes(), "serialization must be deterministic");
+        let parsed = ClauseBlock::parse(&bytes, Path::new("test")).unwrap();
+        assert_eq!(parsed, block);
+        // Any content change must change the bytes (and thus the hash).
+        let mut mutated = block.clone();
+        mutated.include[0][0] = !mutated.include[0][0];
+        assert_ne!(mutated.to_bytes(), bytes);
+        assert_ne!(
+            sha256::hex_digest(&mutated.to_bytes()),
+            sha256::hex_digest(&bytes)
+        );
+    }
+
+    #[test]
+    fn pack_open_roundtrip_and_dedup() {
+        let root = temp_root("roundtrip");
+        std::fs::remove_dir_all(&root).ok();
+        let (a, b) = two_models();
+        let opts = PackOptions { n_shards: 4, ..Default::default() };
+        let r1 = pack(&root, &[&a, &b], &opts).unwrap();
+        assert_eq!(r1.generation, 1);
+        assert_eq!(r1.objects_written, 8);
+        assert_eq!(r1.objects_deduped, 0);
+        let store = Store::open(&root).unwrap();
+        assert!(store.is_v2());
+        assert_eq!(store.model_names(), vec!["tenant_a", "tenant_b"]);
+        let la = store.load_model("tenant_a", None).unwrap();
+        assert!(models_equal(&la, &a));
+        // Re-packing identical content writes zero new objects.
+        let r2 = pack(&root, &[&a, &b], &opts).unwrap();
+        assert_eq!(r2.generation, 2);
+        assert_eq!(r2.objects_written, 0);
+        assert_eq!(r2.objects_deduped, 8);
+        // Verify passes and sees no garbage.
+        let v = verify(&root).unwrap();
+        assert_eq!((v.models, v.objects_verified, v.unreferenced), (2, 8, 0));
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn flipped_byte_is_a_typed_hash_mismatch() {
+        let root = temp_root("corrupt");
+        std::fs::remove_dir_all(&root).ok();
+        let (a, _) = two_models();
+        pack(&root, &[&a], &PackOptions::default()).unwrap();
+        let m = StoreManifest::load(&root).unwrap();
+        let hash = &m.models[0].shards[0].sha256;
+        let path = object_path(&root, hash);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x20;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Store::open(&root).unwrap().load_model("tenant_a", None).unwrap_err();
+        match err.downcast_ref::<ArtifactError>() {
+            Some(ArtifactError::HashMismatch { expected, actual, .. }) => {
+                assert_eq!(expected, hash);
+                assert_ne!(actual, hash);
+            }
+            other => panic!("expected HashMismatch, got {other:?} ({err:#})"),
+        }
+        assert!(verify(&root).is_err());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn dangling_hash_is_a_typed_missing_object() {
+        let root = temp_root("dangling");
+        std::fs::remove_dir_all(&root).ok();
+        let (a, _) = two_models();
+        pack(&root, &[&a], &PackOptions::default()).unwrap();
+        let m = StoreManifest::load(&root).unwrap();
+        std::fs::remove_file(object_path(&root, &m.models[0].shards[1].sha256)).unwrap();
+        let err = Store::open(&root).unwrap().load_model("tenant_a", None).unwrap_err();
+        match err.downcast_ref::<ArtifactError>() {
+            Some(ArtifactError::MissingObject { referenced_by, .. }) => {
+                assert_eq!(referenced_by, "tenant_a/clauses/1");
+            }
+            other => panic!("expected MissingObject, got {other:?} ({err:#})"),
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn truncated_manifest_is_typed_malformed() {
+        let root = temp_root("truncated");
+        std::fs::remove_dir_all(&root).ok();
+        let (a, _) = two_models();
+        pack(&root, &[&a], &PackOptions::default()).unwrap();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        let err = Store::open(&root).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ArtifactError>(), Some(ArtifactError::Malformed { .. })),
+            "expected Malformed, got {err:#}"
+        );
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn subset_load_matches_full_model_slice() {
+        let root = temp_root("subset");
+        std::fs::remove_dir_all(&root).ok();
+        let (a, _) = two_models();
+        pack(&root, &[&a], &PackOptions { n_shards: 4, ..Default::default() }).unwrap();
+        let store = Store::open(&root).unwrap();
+        let n_shards = 3; // deliberately misaligned with the 4 packed blocks
+        let c_total = a.c_total();
+        let mut nonempty_seen = vec![false; c_total];
+        for i in 0..n_shards {
+            let sub = store.load_model_subset("tenant_a", i, n_shards, None).unwrap();
+            let (lo, hi) = (i * c_total / n_shards, (i + 1) * c_total / n_shards);
+            for c in 0..c_total {
+                if c >= lo && c < hi {
+                    assert_eq!(sub.include[c], a.include[c], "clause {c} shard {i}");
+                    assert_eq!(sub.polarity[c], a.polarity[c]);
+                    assert_eq!(sub.nonempty[c], a.nonempty[c]);
+                    if sub.nonempty[c] {
+                        assert!(!nonempty_seen[c], "clause {c} live in two shards");
+                        nonempty_seen[c] = true;
+                    }
+                } else {
+                    assert!(!sub.nonempty[c], "clause {c} must be dead outside shard {i}");
+                }
+            }
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn payload_cache_counts_delta_and_pins_survive_gc() {
+        let root = temp_root("cache");
+        std::fs::remove_dir_all(&root).ok();
+        let (a, _) = two_models();
+        pack(&root, &[&a], &PackOptions { n_shards: 4, ..Default::default() }).unwrap();
+        let cache = PayloadCache::new();
+        let store = Store::open(&root).unwrap();
+        store.load_model("tenant_a", Some(&cache)).unwrap();
+        assert_eq!(cache.stats(), (4, 0));
+        // Rewrite one shard: re-open touches exactly one object.
+        rewrite_shard(&root, "tenant_a", 2, |b| {
+            let c = b.nonempty.iter().position(|&x| !x).unwrap_or(0);
+            b.include[c][0] = !b.include[c][0];
+        })
+        .unwrap();
+        let store = Store::open(&root).unwrap();
+        store.load_model("tenant_a", Some(&cache)).unwrap();
+        assert_eq!(cache.stats(), (5, 3), "delta reload must re-open exactly 1 of 4");
+        // The superseded object is unreferenced but pinned by the cache.
+        let dry = gc(&root, true).unwrap();
+        assert_eq!((dry.scanned, dry.live, dry.kept_pinned, dry.deleted), (5, 4, 1, 0));
+        // Evicting stale blocks releases the pin; gc can then collect.
+        cache.evict_stale();
+        let swept = gc(&root, false).unwrap();
+        assert_eq!((swept.kept_pinned, swept.deleted), (0, 1));
+        assert_eq!(list_objects(&root).unwrap().len(), 4);
+        // Everything still referenced still loads.
+        Store::open(&root).unwrap().load_model("tenant_a", None).unwrap();
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn gc_never_deletes_referenced_objects() {
+        let root = temp_root("gc-ref");
+        std::fs::remove_dir_all(&root).ok();
+        let (a, b) = two_models();
+        pack(&root, &[&a, &b], &PackOptions::default()).unwrap();
+        let before = list_objects(&root).unwrap();
+        let swept = gc(&root, false).unwrap();
+        assert_eq!(swept.deleted, 0);
+        assert_eq!(swept.live, before.len());
+        assert_eq!(list_objects(&root).unwrap(), before);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn rewrite_shard_bumps_generation_and_changes_one_hash() {
+        let root = temp_root("rewrite");
+        std::fs::remove_dir_all(&root).ok();
+        let (a, _) = two_models();
+        pack(&root, &[&a], &PackOptions { n_shards: 4, ..Default::default() }).unwrap();
+        let before = StoreManifest::load(&root).unwrap();
+        let new_hash = rewrite_shard(&root, "tenant_a", 1, |blk| {
+            blk.polarity[0] = -blk.polarity[0];
+        })
+        .unwrap();
+        let after = StoreManifest::load(&root).unwrap();
+        assert_eq!(after.generation, before.generation + 1);
+        let (mb, ma) = (&before.models[0], &after.models[0]);
+        for i in 0..4 {
+            if i == 1 {
+                assert_eq!(ma.shards[i].sha256, new_hash);
+                assert_ne!(ma.shards[i].sha256, mb.shards[i].sha256);
+            } else {
+                assert_eq!(ma.shards[i].sha256, mb.shards[i].sha256);
+            }
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn v1_trees_open_through_the_store() {
+        let root = temp_root("v1-compat");
+        std::fs::remove_dir_all(&root).ok();
+        let (a, b) = two_models();
+        Manifest::write_synthetic(&root, &[&a, &b]).unwrap();
+        let store = Store::open(&root).unwrap();
+        assert!(!store.is_v2());
+        assert!(store.v1().is_some());
+        let la = store.load_model("tenant_a", None).unwrap();
+        assert!(models_equal(&la, &a));
+        assert!(store.load_model_subset("tenant_a", 0, 2, None).is_err());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn pack_from_v1_roundtrips() {
+        let root = temp_root("from-v1");
+        std::fs::remove_dir_all(&root).ok();
+        let (a, b) = two_models();
+        Manifest::write_synthetic(&root, &[&a, &b]).unwrap();
+        let v1_a = Store::open(&root).unwrap().load_model("tenant_a", None).unwrap();
+        let report = pack_from_v1(&root, 4).unwrap();
+        assert_eq!(report.models, 2);
+        let store = Store::open(&root).unwrap();
+        assert!(store.is_v2());
+        let v2_a = store.load_model("tenant_a", None).unwrap();
+        assert!(models_equal(&v1_a, &v2_a), "load(v1) == load(pack(v1))");
+        verify(&root).unwrap();
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -6,10 +6,12 @@
 //! for the hardware substrates (the simulators need per-sample clause bits)
 //! and for functional cross-checks against the PJRT-executed HLO.
 
+pub mod artifact;
 pub mod bits;
 pub mod datasets;
 pub mod model;
 
+pub use artifact::{ArtifactError, PayloadCache, Store, StoreManifest};
 pub use bits::{BitVec64, PackedBatch};
 pub use datasets::TestSet;
 pub use model::{
@@ -153,6 +155,18 @@ impl Manifest {
     /// `Coordinator::reload`. Calling it again with a changed model
     /// overwrites in place.
     pub fn write_synthetic(root: &Path, models: &[&TmModel]) -> Result<()> {
+        // Every file lands via temp + rename: a reader racing the writer
+        // (Coordinator::reload opens these mid-swap) sees the old
+        // complete file or the new complete file, never a torn write —
+        // and a crashed writer can't leave a half-written manifest that
+        // a later reload then opens.
+        fn write_atomic(path: &Path, contents: &str) -> Result<()> {
+            let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+            std::fs::write(&tmp, contents)
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            std::fs::rename(&tmp, path)
+                .with_context(|| format!("publishing {}", path.display()))
+        }
         let model_dir = root.join("models");
         std::fs::create_dir_all(&model_dir)
             .with_context(|| format!("creating {}", model_dir.display()))?;
@@ -165,7 +179,7 @@ impl Manifest {
                 m.name
             );
             let path = model_dir.join(format!("{}.json", m.name));
-            std::fs::write(&path, m.to_json())
+            write_atomic(&path, &m.to_json())
                 .with_context(|| format!("writing {}", path.display()))?;
             entries.push(format!(
                 "    \"{n}\": {{\n      \"dataset\": \"synthetic\",\n      \
@@ -186,7 +200,7 @@ impl Manifest {
             "{{\n  \"batch_sizes\": [1, 32],\n  \"models\": {{\n{}\n  }}\n}}\n",
             entries.join(",\n")
         );
-        std::fs::write(root.join("manifest.json"), manifest)
+        write_atomic(&root.join("manifest.json"), &manifest)
             .with_context(|| format!("writing {}", root.join("manifest.json").display()))?;
         Ok(())
     }

@@ -1353,6 +1353,26 @@ impl ClauseShard {
         (0..n_shards).map(|i| ClauseShard::new(Arc::clone(model), i, n_shards)).collect()
     }
 
+    /// Re-stamp this shard's plan coordinates without re-partitioning its
+    /// scan slots. This is the subset-model path of the v2 artifact
+    /// store: a worker loads only its own clause range from disk (the
+    /// other clauses come back dead — `nonempty = false`, so they can
+    /// never fire), builds a whole-model shard over it
+    /// (`ClauseShard::new(subset, 0, 1)`), and then claims its true
+    /// position in the scatter plan so [`merge_partials`] sees the exact
+    /// cover `(0, n) … (n-1, n)`. Correct because partials carry
+    /// full-width `c_total` rows and class sums only count live clauses:
+    /// a disjoint live-clause partition across workers merges
+    /// bit-identically with the unsharded forward pass regardless of
+    /// which slots each worker *scanned*.
+    pub fn with_plan_coords(mut self, index: usize, n_shards: usize) -> Result<ClauseShard> {
+        ensure!(n_shards >= 1, "shard plan needs at least one shard");
+        ensure!(index < n_shards, "shard index {index} out of range for {n_shards} shards");
+        self.index = index;
+        self.n_shards = n_shards;
+        Ok(self)
+    }
+
     pub fn model(&self) -> &Arc<TmModel> {
         &self.model
     }

@@ -13,6 +13,7 @@ pub mod benchkit;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sha256;
 pub mod stats;
 pub mod sync;
 pub mod time;

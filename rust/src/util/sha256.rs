@@ -1,0 +1,233 @@
+//! SHA-256 (FIPS 180-4), implemented in-tree.
+//!
+//! The content-addressed artifact store (`tm::artifact`) keys every
+//! clause-block object by its SHA-256 digest; the offline vendored crate
+//! set has no hashing crate (DESIGN.md §7), so the compression function
+//! lives here. Scalar, allocation-free, and fast enough for the store's
+//! workload (model payloads are at most a few MB; packing hashes each
+//! block once, opening re-hashes to verify).
+
+/// Per-round constants (fractional parts of the cube roots of the first
+/// 64 primes).
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+/// Incremental SHA-256 state. Feed bytes with [`Sha256::update`], close
+/// with [`Sha256::finish`] / [`Sha256::finish_hex`].
+pub struct Sha256 {
+    /// Working hash state (initialized from the square-root constants).
+    h: [u32; 8],
+    /// Partial input block awaiting compression.
+    block: [u8; 64],
+    block_len: usize,
+    /// Total message length in bytes (the padded trailer records bits).
+    total_len: u64,
+}
+
+impl Sha256 {
+    pub fn new() -> Sha256 {
+        Sha256 {
+            h: [
+                0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c,
+                0x1f83d9ab, 0x5be0cd19,
+            ],
+            block: [0u8; 64],
+            block_len: 0,
+            total_len: 0,
+        }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total_len = self.total_len.wrapping_add(data.len() as u64);
+        // Top up a partial block first.
+        if self.block_len > 0 {
+            let take = data.len().min(64 - self.block_len);
+            self.block[self.block_len..self.block_len + take].copy_from_slice(&data[..take]);
+            self.block_len += take;
+            data = &data[take..];
+            if self.block_len == 64 {
+                let block = self.block;
+                self.compress(&block);
+                self.block_len = 0;
+            }
+        }
+        // Whole blocks straight from the input.
+        while data.len() >= 64 {
+            let (head, rest) = data.split_at(64);
+            let mut block = [0u8; 64];
+            block.copy_from_slice(head);
+            self.compress(&block);
+            data = rest;
+        }
+        if !data.is_empty() {
+            self.block[..data.len()].copy_from_slice(data);
+            self.block_len = data.len();
+        }
+    }
+
+    /// Close the stream: pad (0x80, zeros, 64-bit big-endian bit length)
+    /// and return the 32-byte digest.
+    pub fn finish(mut self) -> [u8; 32] {
+        // Capture the message bit length first: the padding bytes below
+        // also go through `update`, but only the pre-padding length is
+        // recorded in the trailer.
+        let bit_len = self.total_len.wrapping_mul(8);
+        self.update(&[0x80]);
+        while self.block_len != 56 {
+            self.update(&[0x00]);
+        }
+        // The 8-byte length trailer completes the final block exactly.
+        self.update(&bit_len.to_be_bytes());
+        debug_assert_eq!(self.block_len, 0);
+        let mut out = [0u8; 32];
+        for (i, word) in self.h.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&word.to_be_bytes());
+        }
+        out
+    }
+
+    /// Close the stream and render the digest as lowercase hex — the
+    /// object-file naming convention of the artifact store.
+    pub fn finish_hex(self) -> String {
+        let digest = self.finish();
+        let mut out = String::with_capacity(64);
+        for b in digest {
+            out.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+            out.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+        }
+        out
+    }
+
+    fn compress(&mut self, block: &[u8; 64]) {
+        let mut w = [0u32; 64];
+        for (i, chunk) in block.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.h;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        self.h[0] = self.h[0].wrapping_add(a);
+        self.h[1] = self.h[1].wrapping_add(b);
+        self.h[2] = self.h[2].wrapping_add(c);
+        self.h[3] = self.h[3].wrapping_add(d);
+        self.h[4] = self.h[4].wrapping_add(e);
+        self.h[5] = self.h[5].wrapping_add(f);
+        self.h[6] = self.h[6].wrapping_add(g);
+        self.h[7] = self.h[7].wrapping_add(h);
+    }
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot digest of `data`, as lowercase hex.
+pub fn hex_digest(data: &[u8]) -> String {
+    let mut h = Sha256::new();
+    h.update(data);
+    h.finish_hex()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// FIPS 180-4 / NIST CAVP known-answer vectors.
+    #[test]
+    fn known_answer_vectors() {
+        assert_eq!(
+            hex_digest(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            hex_digest(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            hex_digest(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+        // One million 'a's (streamed, exercising the block loop).
+        let mut h = Sha256::new();
+        let chunk = [b'a'; 10_000];
+        for _ in 0..100 {
+            h.update(&chunk);
+        }
+        assert_eq!(
+            h.finish_hex(),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+        );
+    }
+
+    /// Update granularity must not matter (boundary-straddling chunks).
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data: Vec<u8> = (0u32..1000).map(|i| (i * 31 % 251) as u8).collect();
+        let whole = hex_digest(&data);
+        // Anchor to hashlib so chunked-vs-whole agreement can't hide a
+        // shared bug.
+        assert_eq!(whole, "f3f55c45264850b8475533289ff43ab81fa1eb3bf781267db645e1ce0c193379");
+        for chunk_size in [1usize, 7, 63, 64, 65, 129] {
+            let mut h = Sha256::new();
+            for c in data.chunks(chunk_size) {
+                h.update(c);
+            }
+            assert_eq!(h.finish_hex(), whole, "chunk size {chunk_size}");
+        }
+    }
+
+    /// Exact-block-length messages (55/56/64 bytes) hit every padding
+    /// branch.
+    #[test]
+    fn padding_boundaries() {
+        // Independently computed with Python's hashlib.
+        assert_eq!(
+            hex_digest(&[b'x'; 55]),
+            "d5e285683cd4efc02d021a5c62014694958901005d6f71e89e0989fac77e4072"
+        );
+        assert_eq!(
+            hex_digest(&[b'x'; 56]),
+            "04c26261370ee7541549d16dee320c723e3fd14671e66a099afe0a377c16888e"
+        );
+        assert_eq!(
+            hex_digest(&[b'x'; 64]),
+            "7ce100971f64e7001e8fe5a51973ecdfe1ced42befe7ee8d5fd6219506b5393c"
+        );
+    }
+}

@@ -1,0 +1,282 @@
+//! Content-addressed artifact store e2e: the v2 tree serving through a
+//! live coordinator pool.
+//!
+//! Covers the manifest-v2 acceptance invariants:
+//! * **delta-aware reload** on a live sharded pool: a reload that
+//!   changed 1 of N clause-block objects re-opens exactly 1 shard
+//!   (`reload_shards_reused == N − 1`), with bit-identical responses
+//!   across the swap (the rewritten shard mutates only a dead clause)
+//!   and zero request loss;
+//! * **corruption is fail-soft**: a flipped byte, a dangling hash, or a
+//!   truncated manifest fails `reload` with a typed error and the pool
+//!   keeps serving the previous generation;
+//! * **GC safety on a live pool**: objects referenced by the current
+//!   manifest or pinned by a worker's payload cache are never deleted;
+//!   a superseded object is collected only after the reload releases it;
+//! * **v1 migration**: `pack_from_v1` converts a bare-directory tree in
+//!   place and the migrated pool serves bit-identically.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use tdpc::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, DispatchPolicy, ReplayPolicy, ShedPolicy,
+};
+use tdpc::runtime::BackendSpec;
+use tdpc::tm::artifact::{self, PackOptions};
+use tdpc::tm::{Manifest, TmModel};
+use tdpc::util::SplitMix64;
+
+fn tmp_root(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tdpc-art-{tag}-{}", std::process::id()))
+}
+
+fn pool_config(n_workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(300) },
+        n_workers,
+        dispatch: DispatchPolicy::RoundRobin,
+        backend: BackendSpec::Native,
+        replay: ReplayPolicy::Off,
+        queue_limit: None,
+        shed: ShedPolicy::RejectNew,
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn inputs(n: usize, width: usize, seed: u64) -> Vec<Vec<bool>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| (0..width).map(|_| rng.next_bool(0.5)).collect()).collect()
+}
+
+/// A synthetic model with one clause forced dead (`nonempty` is the
+/// authoritative liveness flag: a dead clause never fires, whatever its
+/// include bits say). Rewriting that clause's include bits changes the
+/// containing object's content hash without changing a single answer —
+/// the lever every bit-identical delta-reload assertion below uses.
+fn model_with_dead_clause(name: &str, dead_ix: usize, seed: u64) -> TmModel {
+    let mut m = TmModel::synthetic(name, 2, 8, 20, 0.25, seed);
+    assert!(dead_ix < m.c_total());
+    m.nonempty[dead_ix] = false;
+    m
+}
+
+/// The tentpole acceptance path: a 4-shard scatter/reduce pool on a v2
+/// tree, where each worker opened only its own clause-block object.
+/// Rewriting exactly one object and reloading mid-burst must (a) lose
+/// zero requests, (b) answer bit-identically before and after (the
+/// mutation touches only a dead clause), and (c) re-open exactly one
+/// shard — `reload_shards_reused == n_shards − 1`.
+#[test]
+fn delta_reload_on_live_sharded_pool_reopens_one_shard() {
+    let root = tmp_root("delta");
+    std::fs::remove_dir_all(&root).ok();
+    let n_shards = 4;
+    // c_total = 16, packed as 4 blocks of 4; clause 13 lives in block 3.
+    let m = model_with_dead_clause("delta", 13, 7);
+    artifact::pack(&root, &[&m], &PackOptions { n_shards, ..Default::default() }).unwrap();
+
+    let coord =
+        Coordinator::start_sharded(root.clone(), "delta", n_shards, pool_config(1)).unwrap();
+    let mid = coord.model_id("delta").unwrap();
+    let n_phase = 120;
+    let xs = inputs(2 * n_phase, m.n_features, 11);
+
+    let (tx, rx) = mpsc::channel();
+    for x in &xs[..n_phase] {
+        coord.submit(mid, x, tx.clone());
+    }
+    // One object changes; its clause range (and every answer) does not.
+    let new_hash = artifact::rewrite_shard(&root, "delta", 3, |b| {
+        let c = 13 - b.clause_lo;
+        assert!(!b.nonempty[c], "the mutated clause must be dead");
+        b.include[c][0] = !b.include[c][0];
+    })
+    .unwrap();
+    assert_eq!(new_hash.len(), 64);
+    coord.reload(mid).unwrap();
+    for x in &xs[n_phase..] {
+        coord.submit(mid, x, tx.clone());
+    }
+    drop(tx);
+
+    let replies: Vec<_> = rx.iter().collect();
+    assert_eq!(replies.len(), 2 * n_phase, "zero requests lost across the delta reload");
+    for reply in replies {
+        let resp = reply.expect("every reply is a prediction, never an error");
+        let i = resp.request_id as usize;
+        assert_eq!(
+            (resp.pred, &resp.sums),
+            (m.predict(&xs[i]), &m.class_sums(&xs[i])),
+            "request {i} must be bit-identical across the dead-clause rewrite"
+        );
+    }
+
+    let pm = coord.metrics_for(mid).unwrap();
+    assert_eq!(pm.reload_attempts, 1);
+    assert_eq!(pm.reload_failures, 0);
+    assert_eq!(
+        pm.reload_shards_reused,
+        (n_shards - 1) as u64,
+        "exactly one of {n_shards} shard objects may be re-read"
+    );
+    // Worker-side metrics count per-shard partials: every request visits
+    // all n_shards workers.
+    assert_eq!(pm.requests, (2 * n_phase * n_shards) as u64);
+    assert_eq!(pm.failed_batches, 0);
+    // The pool aggregate carries the same counters.
+    assert_eq!(coord.metrics().reload_shards_reused, (n_shards - 1) as u64);
+    coord.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Corruption across all three typed failure modes, against a live
+/// multi-worker pool: each failed reload returns an actionable error and
+/// the previous generation keeps serving bit-identically; fixing the
+/// tree and retrying converges.
+#[test]
+fn corrupt_artifacts_fail_reload_and_keep_old_generation_serving() {
+    let root = tmp_root("corrupt");
+    std::fs::remove_dir_all(&root).ok();
+    let m = model_with_dead_clause("swap", 5, 9);
+    artifact::pack(&root, &[&m], &PackOptions { n_shards: 4, ..Default::default() }).unwrap();
+
+    let coord = Coordinator::start_multi(root.clone(), &["swap"], pool_config(2)).unwrap();
+    let mid = coord.model_id("swap").unwrap();
+    let xs = inputs(8, m.n_features, 13);
+    let assert_old_generation_serves = |expected_gen: u64| {
+        for x in &xs {
+            let resp = coord.infer_blocking(mid, x).unwrap();
+            assert_eq!(
+                (resp.generation, resp.pred),
+                (expected_gen, m.predict(x)),
+                "the surviving generation keeps serving"
+            );
+        }
+    };
+    assert_old_generation_serves(0);
+
+    // 1. Flipped byte: rewrite a shard (so the re-open has a genuinely
+    //    new object the worker's hash-keyed cache cannot satisfy — a
+    //    corrupted *unchanged* object would never be re-read), then
+    //    corrupt the new object in place.
+    let new_hash = artifact::rewrite_shard(&root, "swap", 1, |b| {
+        let c = 5 - b.clause_lo;
+        b.include[c][0] = !b.include[c][0];
+    })
+    .unwrap();
+    let obj = artifact::object_path(&root, &new_hash);
+    let clean = std::fs::read(&obj).unwrap();
+    let mut bytes = clean.clone();
+    bytes[0] ^= 0x01;
+    std::fs::write(&obj, &bytes).unwrap();
+    let err = format!("{:#}", coord.reload(mid).unwrap_err());
+    assert!(err.contains("sha256"), "typed hash-mismatch error, got: {err}");
+    assert_old_generation_serves(0);
+
+    // 2. Dangling hash: the referenced object vanishes entirely.
+    std::fs::remove_file(&obj).unwrap();
+    let err = format!("{:#}", coord.reload(mid).unwrap_err());
+    assert!(err.contains("missing artifact object"), "typed missing-object error, got: {err}");
+    assert_old_generation_serves(0);
+
+    // 3. Truncated manifest: unparseable → typed Malformed at open.
+    let manifest_path = root.join("manifest.json");
+    let full = std::fs::read(&manifest_path).unwrap();
+    std::fs::write(&manifest_path, &full[..full.len() / 2]).unwrap();
+    let err = format!("{:#}", coord.reload(mid).unwrap_err());
+    assert!(err.contains("malformed artifact"), "typed malformed error, got: {err}");
+    assert_old_generation_serves(0);
+
+    // Repair: restore the manifest and the clean object bytes; the retry
+    // converges (3 failed attempts consumed generations 1..=3), and the
+    // answers are unchanged because only a dead clause was rewritten.
+    std::fs::write(&manifest_path, &full).unwrap();
+    std::fs::write(&obj, &clean).unwrap();
+    coord.reload(mid).unwrap();
+    assert_old_generation_serves(4);
+
+    let pm = coord.metrics_for(mid).unwrap();
+    assert_eq!(pm.reload_attempts, 4);
+    assert_eq!(pm.reload_failures, 3);
+    coord.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// GC on a live pool: a superseded object stays on disk while any
+/// worker's payload cache still pins it, and is collected only after the
+/// reload releases it — never an object the manifest references.
+#[test]
+fn gc_on_live_pool_spares_pinned_and_referenced_objects() {
+    let root = tmp_root("gc");
+    std::fs::remove_dir_all(&root).ok();
+    let m = model_with_dead_clause("keep", 2, 17);
+    artifact::pack(&root, &[&m], &PackOptions { n_shards: 4, ..Default::default() }).unwrap();
+
+    // One worker, so exactly one payload cache holds the pins.
+    let coord = Coordinator::start_multi(root.clone(), &["keep"], pool_config(1)).unwrap();
+    let mid = coord.model_id("keep").unwrap();
+    let xs = inputs(6, m.n_features, 19);
+    for x in &xs {
+        assert_eq!(coord.infer_blocking(mid, x).unwrap().pred, m.predict(x));
+    }
+
+    // Supersede one object: the old one is now manifest-unreferenced but
+    // still pinned by the live (not yet reloaded) worker.
+    artifact::rewrite_shard(&root, "keep", 0, |b| b.include[2][0] = !b.include[2][0]).unwrap();
+    let report = coord.gc_artifacts(false).unwrap();
+    assert_eq!(report.scanned, 5);
+    assert_eq!(report.live, 4, "current manifest references 3 old + 1 new object");
+    assert_eq!(report.kept_pinned, 1, "the superseded object is pinned by the live worker");
+    assert_eq!(report.deleted, 0);
+
+    // The reload swaps the worker onto the new object and releases the
+    // stale pin; only then does GC collect the superseded object.
+    coord.reload(mid).unwrap();
+    let report = coord.gc_artifacts(false).unwrap();
+    assert_eq!((report.scanned, report.live, report.kept_pinned), (5, 4, 0));
+    assert_eq!(report.deleted, 1, "the superseded object is collected once unpinned");
+    assert!(report.bytes_freed > 0);
+
+    // The swept tree still serves (bit-identically: only a dead clause
+    // changed) and still verifies clean.
+    for x in &xs {
+        assert_eq!(coord.infer_blocking(mid, x).unwrap().pred, m.predict(x));
+    }
+    let v = artifact::verify(&root).unwrap();
+    assert_eq!((v.objects_verified, v.unreferenced), (4, 0));
+    coord.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// v1 → v2 migration round-trip through a live pool: a bare-directory
+/// tree converted in place by `pack_from_v1` serves bit-identically to
+/// the original model, and the converted tree verifies clean.
+#[test]
+fn migrated_v1_tree_serves_bit_identically() {
+    let root = tmp_root("fromv1");
+    std::fs::remove_dir_all(&root).ok();
+    let a = TmModel::synthetic("tenant_a", 3, 7, 33, 0.2, 23);
+    let b = TmModel::synthetic("tenant_b", 2, 5, 65, 0.3, 29);
+    Manifest::write_synthetic(&root, &[&a, &b]).unwrap();
+
+    let report = artifact::pack_from_v1(&root, 3).unwrap();
+    assert_eq!(report.models, 2);
+    assert_eq!(report.generation, 1);
+    let v = artifact::verify(&root).unwrap();
+    assert_eq!(v.models, 2);
+
+    let coord =
+        Coordinator::start_multi(root.clone(), &["tenant_a", "tenant_b"], pool_config(2)).unwrap();
+    for (model, name) in [(&a, "tenant_a"), (&b, "tenant_b")] {
+        let mid = coord.model_id(name).unwrap();
+        for x in &inputs(10, model.n_features, 31) {
+            let resp = coord.infer_blocking(mid, x).unwrap();
+            assert_eq!(resp.pred, model.predict(x), "migrated {name} diverged");
+            assert_eq!(resp.sums, model.class_sums(x), "migrated {name} diverged");
+        }
+    }
+    coord.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
