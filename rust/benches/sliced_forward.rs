@@ -1,0 +1,199 @@
+//! The bit-sliced forward engine bench: row-major clause-indexed scan vs
+//! the plane-major carry-save engine (`tm::slice`), plus the dispatched
+//! public entry — the trajectory record for the batch-transposed path
+//! next to `BENCH_hotpath.json`.
+//!
+//! Every variant is cross-checked bit-for-bit against
+//! `TmModel::forward_reference` *and* the row-major indexed kernel
+//! *before* anything is timed, and the result is written as
+//! `BENCH_slice.json` (schema `tdpc-bench-slice/v1`):
+//!
+//! ```text
+//! {
+//!   "schema": "tdpc-bench-slice/v1",
+//!   "config": { "batch", "clauses_per_class", "density",
+//!               "n_classes", "n_features", "smoke" },
+//!   "cross_check": "pass",
+//!   "sliced": { "groups", "rows" },
+//!   "variants": [ { "mean_us_per_iter", "name", "rows_per_s" }, … ],
+//!   "sliced_speedup_vs_indexed": 2.1
+//! }
+//! ```
+//!
+//! Variants (each iterates one batch, reporting rows/s):
+//! - `indexed`        — the row-major production kernel: per-row
+//!   clause-indexed scan + chunked lanes (`forward_indexed_with`);
+//! - `sliced`         — the plane-major engine: 64×64 batch transpose,
+//!   bucket-skipped plane ANDs, CSA vertical counters
+//!   (`forward_sliced_with`);
+//! - `forward_packed` — the public dispatched entry (routes this batch
+//!   to the sliced engine: batch ≥ `SLICED_MIN_ROWS`).
+//!
+//! Usage: `cargo bench --bench sliced_forward -- [--smoke] [--out PATH]`
+
+use std::time::Duration;
+
+use tdpc::tm::{ForwardScratch, PackedBatch, TmModel, SLICED_MIN_ROWS};
+use tdpc::util::{benchkit, json, SplitMix64};
+
+struct Config {
+    n_classes: usize,
+    clauses_per_class: usize,
+    n_features: usize,
+    density: f64,
+    batch: usize,
+    smoke: bool,
+    warmup: Duration,
+    budget: Duration,
+}
+
+fn config(smoke: bool) -> Config {
+    if smoke {
+        Config {
+            n_classes: 4,
+            clauses_per_class: 20,
+            n_features: 128,
+            density: 0.05,
+            // Must stay ≥ SLICED_MIN_ROWS so the smoke run still
+            // exercises the sliced engine through the dispatcher.
+            batch: 128,
+            smoke,
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(80),
+        }
+    } else {
+        // Seed-shaped model (MNIST-sized: 10 × 100 × 784) at the batch
+        // the CI gate measures.
+        Config {
+            n_classes: 10,
+            clauses_per_class: 100,
+            n_features: 784,
+            density: 0.05,
+            batch: 512,
+            smoke,
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_millis(900),
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_slice.json".to_string());
+    let cfg = config(smoke);
+    assert!(cfg.batch >= SLICED_MIN_ROWS, "bench batch must take the sliced path");
+
+    let model = TmModel::synthetic(
+        "sliced",
+        cfg.n_classes,
+        cfg.clauses_per_class,
+        cfg.n_features,
+        cfg.density,
+        7,
+    );
+    let mut rng = SplitMix64::new(13);
+    let rows: Vec<Vec<bool>> = (0..cfg.batch)
+        .map(|_| (0..cfg.n_features).map(|_| rng.next_bool(0.5)).collect())
+        .collect();
+    let batch = PackedBatch::from_rows(&rows).unwrap();
+
+    // -- bit-exact cross-check (sliced vs indexed vs reference) ----------
+    // Runs before any timing: a fast wrong kernel must never get a number.
+    let mut scratch = ForwardScratch::new();
+    let sliced = model.forward_sliced_with(&batch, &mut scratch).unwrap();
+    let mut scratch_idx = ForwardScratch::new();
+    let indexed = model.forward_indexed_with(&batch, &mut scratch_idx).unwrap();
+    assert_eq!(sliced, indexed, "sliced ForwardOutput vs indexed ForwardOutput");
+    let dispatched = model.forward_packed(&batch).unwrap();
+    assert_eq!(sliced, dispatched, "sliced ForwardOutput vs dispatched forward_packed");
+    for (r, row) in rows.iter().enumerate() {
+        let (fired_ref, sums_ref, pred_ref) = model.forward_reference(row);
+        assert_eq!(sliced.fired_row(r), fired_ref, "row {r}: fired vs reference");
+        assert_eq!(sliced.sums_row(r), &sums_ref[..], "row {r}: sums vs reference");
+        assert_eq!(sliced.pred[r] as usize, pred_ref, "row {r}: pred vs reference");
+    }
+    println!("cross-check PASS: sliced == indexed == dispatched == reference ({} rows)", cfg.batch);
+
+    // The dispatcher must actually have taken the sliced engine, and the
+    // group accounting must cover every row (CI reads these numbers).
+    let sliced_groups = scratch.sliced_groups;
+    let sliced_rows = scratch.sliced_rows;
+    assert!(sliced_groups > 0, "sliced engine reported no groups");
+    assert_eq!(sliced_rows as usize, cfg.batch, "sliced engine must cover every row");
+    println!("sliced: {} rows in {} groups of 64", sliced_rows, sliced_groups);
+
+    // -- timed variants ---------------------------------------------------
+    let mut variants: Vec<(String, f64, f64)> = Vec::new(); // (name, mean_us, rows/s)
+    let mut run = |name: &str, warmup: Duration, budget: Duration, f: &mut dyn FnMut()| {
+        let mean = benchkit::bench_with(&format!("sliced/{name}"), warmup, budget, f);
+        let rate = benchkit::report_rows_per_s(&format!("sliced/{name}"), mean, cfg.batch);
+        (name.to_string(), mean, rate)
+    };
+
+    // indexed: the row-major production kernel, forced past the dispatcher.
+    let v = run("indexed", cfg.warmup, cfg.budget, &mut || {
+        std::hint::black_box(model.forward_indexed_with(&batch, &mut scratch_idx).unwrap());
+    });
+    variants.push(v);
+
+    // sliced: the plane-major engine, forced past the dispatcher.
+    let v = run("sliced", cfg.warmup, cfg.budget, &mut || {
+        std::hint::black_box(model.forward_sliced_with(&batch, &mut scratch).unwrap());
+    });
+    variants.push(v);
+
+    // forward_packed: the public dispatched entry — at this batch size it
+    // routes to the sliced engine, so its rate should track `sliced`.
+    let mut scratch_dispatch = ForwardScratch::new();
+    let v = run("forward_packed", cfg.warmup, cfg.budget, &mut || {
+        std::hint::black_box(model.forward_packed_with(&batch, &mut scratch_dispatch).unwrap());
+    });
+    variants.push(v);
+
+    let indexed_rate = variants[0].2;
+    let sliced_rate = variants[1].2;
+    let speedup = sliced_rate / indexed_rate;
+    println!("sliced over indexed: ×{speedup:.2}");
+
+    // -- artifact ---------------------------------------------------------
+    let doc = json::obj(vec![
+        ("schema", json::s("tdpc-bench-slice/v1")),
+        (
+            "config",
+            json::obj(vec![
+                ("n_classes", json::num(cfg.n_classes as f64)),
+                ("clauses_per_class", json::num(cfg.clauses_per_class as f64)),
+                ("n_features", json::num(cfg.n_features as f64)),
+                ("density", json::num(cfg.density)),
+                ("batch", json::num(cfg.batch as f64)),
+                ("smoke", json::num(cfg.smoke as u8 as f64)),
+            ]),
+        ),
+        ("cross_check", json::s("pass")),
+        (
+            "sliced",
+            json::obj(vec![
+                ("groups", json::num(sliced_groups as f64)),
+                ("rows", json::num(sliced_rows as f64)),
+            ]),
+        ),
+        (
+            "variants",
+            json::Value::Arr(
+                variants
+                    .iter()
+                    .map(|(name, mean, rate)| benchkit::variant_json(name, *mean, *rate))
+                    .collect(),
+            ),
+        ),
+        ("sliced_speedup_vs_indexed", json::num(speedup)),
+    ]);
+    std::fs::write(&out_path, json::emit(&doc) + "\n").unwrap();
+    println!("wrote {out_path}");
+}

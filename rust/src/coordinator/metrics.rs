@@ -85,6 +85,12 @@ pub struct MetricsSnapshot {
     pub clauses_eligible: u64,
     /// Classes whose popcount pass was pruned by the suffix upper bound.
     pub classes_pruned: u64,
+    /// 64-row groups evaluated by the bit-sliced engine (`tm::slice`) —
+    /// nonzero proves batching actually reached the sliced crossover.
+    pub sliced_groups: u64,
+    /// Rows those sliced groups covered (`sliced_rows ≤ hot_rows`; the
+    /// remainder ran the row-major loop).
+    pub sliced_rows: u64,
     /// `clauses_skipped / clauses_eligible` (0.0 before any hot-loop
     /// row) — the serving-time effectiveness of the clause index, now
     /// visible per tenant without touching a worker's backend.
@@ -158,6 +164,8 @@ impl Metrics {
         self.hot.clauses_skipped += delta.clauses_skipped;
         self.hot.clauses_eligible += delta.clauses_eligible;
         self.hot.classes_pruned += delta.classes_pruned;
+        self.hot.sliced_groups += delta.sliced_groups;
+        self.hot.sliced_rows += delta.sliced_rows;
     }
 
     /// Fold another worker's metrics into this one.
@@ -214,6 +222,8 @@ impl Metrics {
             clauses_skipped: self.hot.clauses_skipped,
             clauses_eligible: self.hot.clauses_eligible,
             classes_pruned: self.hot.classes_pruned,
+            sliced_groups: self.hot.sliced_groups,
+            sliced_rows: self.hot.sliced_rows,
             clause_skip_rate: self.hot.skip_rate(),
             reload_attempts: self.reload_attempts,
             reload_failures: self.reload_failures,
@@ -418,12 +428,16 @@ mod tests {
             clauses_skipped: 30,
             clauses_eligible: 40,
             classes_pruned: 2,
+            sliced_groups: 1,
+            sliced_rows: 3,
         });
         w1.record_hot(HotLoopStats {
             rows: 1,
             clauses_skipped: 10,
             clauses_eligible: 40,
             classes_pruned: 0,
+            sliced_groups: 0,
+            sliced_rows: 0,
         });
         let mut agg = Metrics::default();
         agg.merge(&w0);
@@ -433,9 +447,22 @@ mod tests {
         assert_eq!(s.clauses_skipped, 40);
         assert_eq!(s.clauses_eligible, 80);
         assert_eq!(s.classes_pruned, 2);
+        assert_eq!(s.sliced_groups, 1);
+        assert_eq!(s.sliced_rows, 3);
         assert!((s.clause_skip_rate - 0.5).abs() < 1e-12);
         // Empty metrics report a well-defined zero rate.
         assert_eq!(Metrics::default().snapshot().clause_skip_rate, 0.0);
+        // Merge-equals-combined holds for the sliced counters too.
+        let mut combined = Metrics::default();
+        combined.record_hot(HotLoopStats {
+            rows: 5,
+            clauses_skipped: 40,
+            clauses_eligible: 80,
+            classes_pruned: 2,
+            sliced_groups: 1,
+            sliced_rows: 3,
+        });
+        assert_eq!(agg.snapshot(), combined.snapshot());
     }
 
     #[test]

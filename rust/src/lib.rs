@@ -129,8 +129,17 @@
 //! bit-exact with the full scan, with per-worker scratch and skip
 //! telemetry in [`tm::ForwardScratch`] and an exact early-exit argmax
 //! behind [`tm::TmModel::predict_packed`] (§Data plane, "The hot loop",
-//! rust/README.md). Only the PJRT backend unpacks, at the HLO boundary,
-//! because the AOT artifact was lowered against f32 lanes.
+//! rust/README.md). Batches of [`tm::SLICED_MIN_ROWS`] (64) rows or more
+//! dispatch to the **bit-sliced engine** ([`tm::slice`]): the batch is
+//! flipped plane-major by a word-level 64×64 bit-matrix transpose
+//! ([`tm::TransposedBatch`]), clauses evaluate 64 rows per word as ANDs
+//! of literal planes (reusing the same arena and bucket skips,
+//! group-wide), and class sums accumulate in carry-save vertical
+//! counters ([`tm::CsaAccumulator`], 3:2 compressors over fired planes)
+//! — bit-exact with the row-major path, observable only through
+//! `sliced_groups`/`sliced_rows` telemetry (§Data plane, "The sliced
+//! loop", rust/README.md). Only the PJRT backend unpacks, at the HLO
+//! boundary, because the AOT artifact was lowered against f32 lanes.
 //!
 //! See rust/README.md for the feature matrix and local verify commands,
 //! DESIGN.md for the system inventory and the experiment index, and

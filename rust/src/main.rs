@@ -208,8 +208,8 @@ impl BurstData {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(&[
-        "artifacts", "model", "models", "requests", "batch", "deadline-us", "workers",
-        "dispatch", "backend", "hw-replay", "queue-limit", "shed", "reload",
+        "artifacts", "model", "models", "requests", "batch", "max-batch", "deadline-us",
+        "workers", "dispatch", "backend", "hw-replay", "queue-limit", "shed", "reload",
         "mutate-shard", "csv", "listen", "synthetic", "conn-limit", "port-file",
         "duration-s", "shards", "straggler-ms",
     ])?;
@@ -234,9 +234,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // engine-less backends, so it only matters with hw:<arch>.
     // `--queue-limit 0` (the default) accepts without bound; any other N
     // bounds each worker's in-flight load, shedding per `--shed`.
+    // `--max-batch N` is the explicit batch-size cap (alias of the older
+    // `--batch`, which it overrides when both are given). Raising it past
+    // `tm::SLICED_MIN_ROWS` (64) is what lets the batcher form groups big
+    // enough for the bit-sliced forward engine; the default 32 keeps the
+    // latency-oriented small-batch behavior.
+    let max_batch = match args.opt("max-batch") {
+        Some(_) => args.opt_usize("max-batch", 32)?,
+        None => args.opt_usize("batch", 32)?,
+    };
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig {
-            max_batch: args.opt_usize("batch", 32)?,
+            max_batch,
             max_wait: std::time::Duration::from_micros(args.opt_u64("deadline-us", 500)?),
         },
         n_workers,
@@ -389,14 +398,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         };
         println!(
             "  model {name}: {} requests in {} batches, accuracy {accuracy}, \
-             p50 {:.0} us p99 {:.0} us, clause skip {:.1}% ({} skipped / {} eligible)",
+             p50 {:.0} us p99 {:.0} us, clause skip {:.1}% ({} skipped / {} eligible), \
+             sliced {} rows in {} groups",
             pm.requests,
             pm.batches,
             pm.service_p50_us,
             pm.service_p99_us,
             100.0 * pm.clause_skip_rate,
             pm.clauses_skipped,
-            pm.clauses_eligible
+            pm.clauses_eligible,
+            pm.sliced_rows,
+            pm.sliced_groups
         );
         if pm.reload_attempts > 0 {
             // One greppable line per reloaded tenant: on a v2 tree a

@@ -350,9 +350,12 @@ impl BackendSpec {
 
 /// Pure-Rust execution of the TM forward pass, fully packed: clause
 /// evaluation over bit-packed `u64` literal words (through the
-/// clause-indexed hot loop — `TmModel::forward_packed_with`), class sums
-/// via `popcount(fired & polarity_mask)`, argmax — directly from the
-/// trained model weights, with no bool/int materialization anywhere.
+/// adaptive `TmModel::forward_packed_with` dispatch — row-major
+/// clause-indexed scan for small batches, the bit-sliced transposed
+/// engine of `tm::slice` for batches of `tm::SLICED_MIN_ROWS` rows or
+/// more), class sums via word-level popcount or CSA vertical counters,
+/// argmax — directly from the trained model weights, with no bool/int
+/// materialization anywhere.
 /// `Send + Sync`: the model is immutable shared data, and the per-batch
 /// scratch (buffer reuse + skip telemetry) sits behind a `Mutex` that
 /// is uncontended in practice — each pool worker constructs its own
@@ -523,6 +526,26 @@ mod tests {
             assert_eq!(out.pred[i] as usize, b.model().predict(row), "row {i}");
             let per_class: Vec<Vec<bool>> = out.clause_bits_row(i);
             assert_eq!(per_class, b.model().clause_bits(row), "row {i}");
+        }
+    }
+
+    #[test]
+    fn large_batches_take_the_sliced_engine_and_report_it() {
+        let b = backend();
+        let rows: Vec<Vec<bool>> =
+            (0..100).map(|i| vec![i % 2 == 0, i % 3 == 0]).collect();
+        let batch = PackedBatch::from_rows(&rows).unwrap();
+        let out = b.forward(&batch).unwrap();
+        assert_eq!(out.batch, 100);
+        // Dispatch is observable only through the telemetry: a 100-row
+        // batch runs as two sliced groups, and predictions still match
+        // the scalar reference.
+        let stats = b.hot_loop_stats().unwrap();
+        assert_eq!(stats.sliced_groups, 2);
+        assert_eq!(stats.sliced_rows, 100);
+        assert_eq!(stats.rows, 100);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(out.pred[i] as usize, b.model().predict(row), "row {i}");
         }
     }
 

@@ -72,10 +72,11 @@ impl From<io::Error> for WireError {
     }
 }
 
-/// Write one frame (header + payload). The caller is responsible for any
-/// buffering; this flushes so a lone frame is never stuck in a
-/// `BufWriter`.
-pub fn write_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> io::Result<()> {
+/// Write one frame (header + payload) into `w` *without* flushing — the
+/// building block for coalesced writes: a writer that knows more frames
+/// are ready queues them all into its `BufWriter` and flushes once (see
+/// `server::conn::writer_loop`).
+pub fn write_frame_buffered<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> io::Result<()> {
     debug_assert!(payload.len() <= MAX_PAYLOAD as usize);
     let mut header = [0u8; HEADER_LEN];
     header[..4].copy_from_slice(&MAGIC);
@@ -84,7 +85,14 @@ pub fn write_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> io::Result<
     // bytes 6..8 reserved, zero
     header[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
     w.write_all(&header)?;
-    w.write_all(payload)?;
+    w.write_all(payload)
+}
+
+/// Write one frame (header + payload). The caller is responsible for any
+/// buffering; this flushes so a lone frame is never stuck in a
+/// `BufWriter`.
+pub fn write_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> io::Result<()> {
+    write_frame_buffered(w, kind, payload)?;
     w.flush()
 }
 
@@ -170,6 +178,37 @@ mod tests {
         assert_eq!(read_frame(&mut cur).unwrap().unwrap(), (1, b"first".to_vec()));
         assert_eq!(read_frame(&mut cur).unwrap().unwrap(), (2, b"second".to_vec()));
         assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn buffered_frames_coalesce_behind_one_flush() {
+        // The coalesced-writer building block: several frames queue into
+        // one BufWriter, nothing reaches the sink until the single
+        // flush, and the byte stream is identical to per-frame writes.
+        struct CountingSink {
+            bytes: Vec<u8>,
+            writes: usize,
+        }
+        impl Write for CountingSink {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                self.writes += 1;
+                self.bytes.extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut w = io::BufWriter::new(CountingSink { bytes: Vec::new(), writes: 0 });
+        write_frame_buffered(&mut w, 1, b"first").unwrap();
+        write_frame_buffered(&mut w, 2, b"second").unwrap();
+        assert_eq!(w.get_ref().writes, 0, "nothing hits the sink before the flush");
+        w.flush().unwrap();
+        let sink = w.into_inner().unwrap();
+        assert_eq!(sink.writes, 1, "both frames left in one write");
+        let mut expect = frame_bytes(1, b"first");
+        expect.extend_from_slice(&frame_bytes(2, b"second"));
+        assert_eq!(sink.bytes, expect);
     }
 
     #[test]

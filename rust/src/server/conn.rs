@@ -23,7 +23,7 @@ use std::sync::{mpsc, Arc};
 use crate::coordinator::{await_reply, Coordinator, Reply};
 use crate::tm::BitVec64;
 
-use super::codec::{read_frame, write_frame, WireError};
+use super::codec::{read_frame, write_frame, write_frame_buffered, WireError};
 use super::protocol::{
     code, error_code, ErrorMsg, InferRequestMsg, InferResponseMsg, Kind, ModelInfoMsg,
     ModelQueryMsg,
@@ -167,24 +167,53 @@ fn send_error(out: &mpsc::Sender<Out>, corr: u64, code: u16, message: &str) {
     let _ = out.send(Out::Frame { kind: Kind::Error, payload: msg.encode() });
 }
 
-/// The writer thread: answer queued work in submission order. A write
-/// failure (peer gone) stops the loop; remaining `Pending` receivers are
-/// dropped, which is safe — the coordinator's reply sends are
-/// best-effort by contract.
+/// The writer thread: answer queued work in submission order, coalescing
+/// ready replies. Each wakeup drains the queue as far as it can without
+/// blocking — every item whose reply has already resolved is encoded
+/// into the `BufWriter` — and flushes **once**, so a pipelining client
+/// whose batch resolved together costs one syscall, not one per
+/// response. The in-order contract is preserved by how the drain stalls:
+/// when the *head* reply is still in flight, the frames written so far
+/// are flushed first (nothing ready is ever held back behind a wait),
+/// then the loop blocks on that head reply alone. A write failure (peer
+/// gone) stops the loop; remaining `Pending` receivers are dropped,
+/// which is safe — the coordinator's reply sends are best-effort by
+/// contract.
 fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<Out>) {
     let mut w = BufWriter::new(stream);
-    for item in rx {
-        let (kind, payload) = match item {
-            Out::Pending { corr, rx } => {
-                // The one shared reply-wait implementation (also behind
-                // `infer_blocking`): a torn-down pool reads as a typed
-                // ShuttingDown, never a hang or panic.
-                let reply = await_reply(&rx);
-                (Kind::from_reply(&reply), encode_reply(corr, reply))
+    while let Ok(first) = rx.recv() {
+        let mut item = first;
+        loop {
+            let (kind, payload) = match item {
+                Out::Pending { corr, rx: reply_rx } => match reply_rx.try_recv() {
+                    Ok(reply) => (Kind::from_reply(&reply), encode_reply(corr, reply)),
+                    Err(_) => {
+                        // Head-of-line reply still in flight (or its pool
+                        // is gone): ship what is buffered, then fall back
+                        // to the one shared blocking wait (also behind
+                        // `infer_blocking`) — a torn-down pool reads as a
+                        // typed ShuttingDown, never a hang or panic.
+                        if w.flush().is_err() {
+                            return;
+                        }
+                        let reply = await_reply(&reply_rx);
+                        (Kind::from_reply(&reply), encode_reply(corr, reply))
+                    }
+                },
+                Out::Frame { kind, payload } => (kind, payload),
+            };
+            if write_frame_buffered(&mut w, kind.as_u8(), &payload).is_err() {
+                return;
             }
-            Out::Frame { kind, payload } => (kind, payload),
-        };
-        if write_frame(&mut w, kind.as_u8(), &payload).is_err() {
+            // Keep draining while more work is already queued; an empty
+            // (or closed) queue ends the wakeup, and the flush below
+            // publishes everything this drain coalesced.
+            match rx.try_recv() {
+                Ok(next) => item = next,
+                Err(_) => break,
+            }
+        }
+        if w.flush().is_err() {
             return;
         }
     }

@@ -97,6 +97,165 @@ pub fn copy_bits(dst: &mut [u64], dst_off: usize, src: &[u64], n_bits: usize) {
     }
 }
 
+/// In-place 64×64 bit-matrix transpose in the crate's LSB-first
+/// convention: bit `c` of word `r` moves to bit `r` of word `c`. This is
+/// the recursive block-swap of Hacker's Delight §7-3 adapted to
+/// LSB-first indexing (the shift directions flip): at each level, the
+/// off-diagonal `j×j` blocks of the current 2j×2j tiles are exchanged
+/// with three XORs, halving the block size from 32 down to 1 — 6 levels,
+/// no per-bit loop. It is its own inverse (a transpose is an
+/// involution), which the property suite pins down.
+///
+/// Both directions of the sliced data plane run through this one kernel:
+/// [`TransposedBatch::from_packed`] turns row-major feature words into
+/// per-literal planes, and the sliced forward pass turns per-clause
+/// fired planes back into row-major fired words.
+pub fn transpose_64x64(a: &mut [u64; 64]) {
+    let mut j = 32usize;
+    let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+    while j != 0 {
+        let mut k = 0usize;
+        while k < 64 {
+            // Swap the high-j block of words k..k+j with the low-j block
+            // of words k+j..k+2j (LSB-first mirror of HD's masks).
+            let t = ((a[k] >> j) ^ a[k + j]) & m;
+            a[k] ^= t << j;
+            a[k + j] ^= t;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+/// A plane-major transposed batch: one `u64` plane per bit position,
+/// where bit `r` of word `g` of plane `i` is bit `i` of row `64g + r` of
+/// the source [`PackedBatch`]. Rows group in blocks of 64 (`groups =
+/// ceil(rows / 64)`); lanes past the last row are zero in every plane,
+/// the plane-major mirror of the row-major zero-tail invariant.
+///
+/// This is the batch layout of the bit-sliced forward path
+/// (`tm::slice`): with one word per literal per 64-row group, a clause
+/// evaluates against 64 samples with one `AND` per included literal —
+/// the software shape of the paper's "evaluate everything at once, count
+/// votes without integers" move.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TransposedBatch {
+    rows: usize,
+    bits: usize,
+    groups: usize,
+    /// `bits * groups` words, plane-major: plane `i` is the word slice
+    /// `[i * groups, (i + 1) * groups)`.
+    planes: Vec<u64>,
+}
+
+/// Core of [`TransposedBatch::from_packed`], writing into a caller-held
+/// plane buffer (resized to `bits * groups`, fully overwritten) so the
+/// batched forward path can reuse one allocation across batches.
+pub fn transpose_into(batch: &PackedBatch, planes: &mut Vec<u64>) {
+    let (rows, bits) = (batch.rows(), batch.bits());
+    let groups = rows.div_ceil(WORD_BITS);
+    let wpr = batch.words_per_row();
+    planes.clear();
+    planes.resize(bits * groups, 0);
+    let mut tile = [0u64; 64];
+    for g in 0..groups {
+        let n_rows = (rows - g * WORD_BITS).min(WORD_BITS);
+        for w in 0..wpr {
+            // Gather word column `w` of the group's rows (missing rows
+            // stay zero — the zero-lane invariant), transpose the 64×64
+            // tile, and scatter each output word to its plane.
+            tile.fill(0);
+            for r in 0..n_rows {
+                tile[r] = batch.row(g * WORD_BITS + r)[w];
+            }
+            transpose_64x64(&mut tile);
+            let n_bits = (bits - w * WORD_BITS).min(WORD_BITS);
+            for (j, &word) in tile[..n_bits].iter().enumerate() {
+                planes[(w * WORD_BITS + j) * groups + g] = word;
+            }
+        }
+    }
+}
+
+impl TransposedBatch {
+    /// Transpose a row-major batch into plane-major form via the
+    /// word-level 64×64 tile transpose (no per-bit loop anywhere).
+    pub fn from_packed(batch: &PackedBatch) -> TransposedBatch {
+        let mut planes = Vec::new();
+        transpose_into(batch, &mut planes);
+        TransposedBatch {
+            rows: batch.rows(),
+            bits: batch.bits(),
+            groups: batch.rows().div_ceil(WORD_BITS),
+            planes,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Bits per source row == number of planes.
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// 64-row groups (`ceil(rows / 64)`).
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    /// Plane `i`: one word per 64-row group, bit `r` of word `g` = bit
+    /// `i` of row `64g + r`.
+    pub fn plane(&self, i: usize) -> &[u64] {
+        assert!(i < self.bits, "plane {i} out of range {}", self.bits);
+        &self.planes[i * self.groups..(i + 1) * self.groups]
+    }
+
+    /// All planes, plane-major.
+    pub fn planes(&self) -> &[u64] {
+        &self.planes
+    }
+
+    /// Bit `i` of row `r` (debug/test accessor — not a hot path).
+    pub fn get(&self, r: usize, i: usize) -> bool {
+        assert!(r < self.rows, "row {r} out of range {}", self.rows);
+        assert!(i < self.bits, "bit {i} out of range {}", self.bits);
+        (self.planes[i * self.groups + r / WORD_BITS] >> (r % WORD_BITS)) & 1 == 1
+    }
+
+    /// Transpose back to the row-major layout. Exact inverse of
+    /// [`TransposedBatch::from_packed`] (the transpose property suite
+    /// pins `untranspose(transpose(b)) == b` across ragged shapes).
+    pub fn untranspose(&self) -> PackedBatch {
+        let mut out = PackedBatch::new(self.bits);
+        let wpr = words_for(self.bits);
+        let mut tile = [0u64; 64];
+        let mut row_words = vec![0u64; wpr];
+        for g in 0..self.groups {
+            let n_rows = (self.rows - g * WORD_BITS).min(WORD_BITS);
+            let mut group_rows = vec![0u64; n_rows * wpr];
+            for w in 0..wpr {
+                let n_bits = (self.bits - w * WORD_BITS).min(WORD_BITS);
+                tile.fill(0);
+                for j in 0..n_bits {
+                    tile[j] = self.planes[(w * WORD_BITS + j) * self.groups + g];
+                }
+                transpose_64x64(&mut tile);
+                for r in 0..n_rows {
+                    group_rows[r * wpr + w] = tile[r];
+                }
+            }
+            for r in 0..n_rows {
+                row_words.copy_from_slice(&group_rows[r * wpr..(r + 1) * wpr]);
+                out.push_words(&row_words);
+            }
+        }
+        out
+    }
+}
+
 /// OR `src` into `dst` word-wise (equal lengths). The reduce half of
 /// clause sharding leans on this: shards of one plan own disjoint bit
 /// sets over the same `c_total`-bit row space, so OR-ing their
@@ -436,6 +595,65 @@ mod tests {
                 for i in 0..off {
                     assert_eq!((dst[i / 64] >> (i % 64)) & 1, 0, "n={n} off={off} low bit {i}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_64x64_matches_bit_definition_and_is_involutive() {
+        let mut rng = SplitMix64::new(2024);
+        for case in 0..20 {
+            let orig: [u64; 64] = std::array::from_fn(|_| rng.next_u64());
+            let mut t = orig;
+            transpose_64x64(&mut t);
+            for r in 0..64 {
+                for c in 0..64 {
+                    assert_eq!(
+                        (t[c] >> r) & 1,
+                        (orig[r] >> c) & 1,
+                        "case {case}: bit ({r},{c})"
+                    );
+                }
+            }
+            transpose_64x64(&mut t);
+            assert_eq!(t, orig, "case {case}: transpose is an involution");
+        }
+        // The identity matrix is its own transpose.
+        let mut eye: [u64; 64] = std::array::from_fn(|i| 1u64 << i);
+        let expect = eye;
+        transpose_64x64(&mut eye);
+        assert_eq!(eye, expect);
+    }
+
+    #[test]
+    fn transposed_batch_agrees_with_rows_and_roundtrips() {
+        let mut rng = SplitMix64::new(4096);
+        for &bits in &[1usize, 31, 63, 64, 65, 130] {
+            for &rows in &[1usize, 63, 64, 65, 130] {
+                let data: Vec<Vec<bool>> =
+                    (0..rows).map(|_| (0..bits).map(|_| rng.next_bool(0.5)).collect()).collect();
+                let b = PackedBatch::from_rows(&data).unwrap();
+                let t = TransposedBatch::from_packed(&b);
+                assert_eq!(t.rows(), rows);
+                assert_eq!(t.bits(), bits);
+                assert_eq!(t.groups(), rows.div_ceil(64), "bits={bits} rows={rows}");
+                for r in 0..rows {
+                    for i in 0..bits {
+                        assert_eq!(t.get(r, i), b.bit(r, i), "bits={bits} rows={rows} ({r},{i})");
+                    }
+                }
+                // Lanes past the last row are zero in every plane word.
+                if rows % 64 != 0 {
+                    let g = t.groups() - 1;
+                    for i in 0..bits {
+                        assert_eq!(
+                            t.plane(i)[g] & !tail_mask(rows),
+                            0,
+                            "bits={bits} rows={rows}: ragged-lane zeros, plane {i}"
+                        );
+                    }
+                }
+                assert_eq!(t.untranspose(), b, "bits={bits} rows={rows}: round trip");
             }
         }
     }

@@ -10,14 +10,16 @@ pub mod artifact;
 pub mod bits;
 pub mod datasets;
 pub mod model;
+pub mod slice;
 
 pub use artifact::{ArtifactError, PayloadCache, Store, StoreManifest};
-pub use bits::{BitVec64, PackedBatch};
+pub use bits::{BitVec64, PackedBatch, TransposedBatch};
 pub use datasets::TestSet;
 pub use model::{
     merge_partials, ClauseIndexStats, ClauseShard, ForwardScratch, HotLoopStats, PartialOutput,
     TmModel, WorkloadSpec,
 };
+pub use slice::{CsaAccumulator, SLICED_MIN_ROWS};
 
 use std::path::{Path, PathBuf};
 

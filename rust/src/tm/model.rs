@@ -292,15 +292,17 @@ pub struct TmModel {
     /// the clause-evaluation hot path reads word rows out of this single
     /// allocation (§Perf L3: ~50× over the bool-wise loop at MNIST-scale
     /// literal counts, with no per-clause `Vec` indirection).
-    packed_include: Vec<u64>,
+    pub(crate) packed_include: Vec<u64>,
     /// Words per clause row of `packed_include` (`words_for(2 * n_features)`).
-    include_words: usize,
+    pub(crate) include_words: usize,
     /// Per-class polarity masks over the packed fired-clause words
     /// (§Perf L3: class sums by word-level popcount, no per-clause loop).
     class_masks: Vec<ClassMasks>,
     /// The clause skip index (see the module docs and
-    /// [`TmModel::fired_words_into_indexed`]).
-    clause_index: ClauseIndex,
+    /// [`TmModel::fired_words_into_indexed`]). The bit-sliced engine
+    /// (`tm::slice`) scans the same arena in the same slot order, so both
+    /// forward paths share one include layout and one skip structure.
+    pub(crate) clause_index: ClauseIndex,
     /// `class_ub_suffix[k]` = the largest sum any class `≥ k` can reach
     /// (its count of positive-polarity non-empty clauses; sums only lose
     /// votes from there), with an `i32::MIN` sentinel at `n_classes`.
@@ -325,10 +327,10 @@ struct ClassMasks {
 /// literal `lit` reads 0, none of them can fire and the whole bucket is
 /// skipped without touching its include words.
 #[derive(Debug, Clone)]
-struct IndexBucket {
-    lit: u32,
-    start: u32,
-    end: u32,
+pub(crate) struct IndexBucket {
+    pub(crate) lit: u32,
+    pub(crate) start: u32,
+    pub(crate) end: u32,
 }
 
 /// The clause skip index, built once at model construction.
@@ -344,15 +346,15 @@ struct IndexBucket {
 /// fires on *every* sample) go to the fallback range `0..n_fallback`,
 /// which is scanned unconditionally.
 #[derive(Debug, Clone, Default)]
-struct ClauseIndex {
-    stride: usize,
-    arena: Vec<u64>,
-    clause_of: Vec<u32>,
-    n_fallback: usize,
-    buckets: Vec<IndexBucket>,
+pub(crate) struct ClauseIndex {
+    pub(crate) stride: usize,
+    pub(crate) arena: Vec<u64>,
+    pub(crate) clause_of: Vec<u32>,
+    pub(crate) n_fallback: usize,
+    pub(crate) buckets: Vec<IndexBucket>,
     /// Total clauses in skippable buckets (the skip-rate denominator's
     /// indexable part).
-    n_skippable: usize,
+    pub(crate) n_skippable: usize,
 }
 
 /// Observable shape of a model's clause index (docs/benches/tests).
@@ -434,6 +436,17 @@ pub struct ForwardScratch {
     negated: Vec<u64>,
     fired: Vec<u64>,
     sums: Vec<i32>,
+    /// Sliced-path buffers (see `tm::slice`): transposed feature planes,
+    /// per-group literal planes, per-clause fired planes, re-transposed
+    /// row-major fired words, and the per-class CSA vertical counters.
+    /// All keep their capacity across batches, like the row-major
+    /// buffers above.
+    pub(crate) planes: Vec<u64>,
+    pub(crate) lit_planes: Vec<u64>,
+    pub(crate) fired_planes: Vec<u64>,
+    pub(crate) fired_rows: Vec<u64>,
+    pub(crate) csa_pos: Vec<super::slice::CsaAccumulator>,
+    pub(crate) csa_neg: Vec<super::slice::CsaAccumulator>,
     /// Rows evaluated through this scratch.
     pub rows: u64,
     /// Clauses the index skipped without evaluation.
@@ -443,6 +456,11 @@ pub struct ForwardScratch {
     /// Class sums [`TmModel::predict_packed_with`] never computed because
     /// the running leader was already uncatchable.
     pub classes_pruned: u64,
+    /// 64-row groups evaluated by the bit-sliced engine (`tm::slice`).
+    pub sliced_groups: u64,
+    /// Rows those sliced groups covered (≤ 64 × `sliced_groups`; the
+    /// ragged tail group counts only its live lanes).
+    pub sliced_rows: u64,
 }
 
 /// A copyable snapshot of [`ForwardScratch`]'s hot-loop telemetry — the
@@ -460,6 +478,10 @@ pub struct HotLoopStats {
     pub clauses_eligible: u64,
     /// Classes the early-exit argmax never summed.
     pub classes_pruned: u64,
+    /// 64-row groups the bit-sliced engine evaluated.
+    pub sliced_groups: u64,
+    /// Rows that took the sliced path (subset of `rows`).
+    pub sliced_rows: u64,
 }
 
 impl HotLoopStats {
@@ -482,6 +504,8 @@ impl HotLoopStats {
             clauses_skipped: self.clauses_skipped.saturating_sub(earlier.clauses_skipped),
             clauses_eligible: self.clauses_eligible.saturating_sub(earlier.clauses_eligible),
             classes_pruned: self.classes_pruned.saturating_sub(earlier.classes_pruned),
+            sliced_groups: self.sliced_groups.saturating_sub(earlier.sliced_groups),
+            sliced_rows: self.sliced_rows.saturating_sub(earlier.sliced_rows),
         }
     }
 }
@@ -507,6 +531,8 @@ impl ForwardScratch {
             clauses_skipped: self.clauses_skipped,
             clauses_eligible: self.clauses_eligible,
             classes_pruned: self.classes_pruned,
+            sliced_groups: self.sliced_groups,
+            sliced_rows: self.sliced_rows,
         }
     }
 
@@ -516,6 +542,8 @@ impl ForwardScratch {
         self.clauses_skipped = 0;
         self.clauses_eligible = 0;
         self.classes_pruned = 0;
+        self.sliced_groups = 0;
+        self.sliced_rows = 0;
     }
 }
 
@@ -1038,13 +1066,38 @@ impl TmModel {
         self.forward_packed_with(batch, &mut ForwardScratch::new())
     }
 
-    /// [`TmModel::forward_packed`] with caller-held scratch: the
-    /// per-sample body allocates nothing, literal/fired/sums buffers are
-    /// reused across batches, and clause evaluation runs through the
-    /// clause-indexed scan of [`TmModel::fired_words_into_indexed`]
-    /// (bit-exact with the full scan — the index only decides what gets
-    /// *scanned*). Skip telemetry accumulates on `scratch`.
+    /// [`TmModel::forward_packed`] with caller-held scratch — the
+    /// adaptive dispatch seam. Small batches run the row-major
+    /// clause-indexed loop ([`TmModel::forward_indexed_with`]); batches
+    /// of at least [`super::slice::SLICED_MIN_ROWS`] rows take the
+    /// bit-sliced transposed engine ([`TmModel::forward_sliced_with`]),
+    /// which evaluates each clause against 64 rows per word op. The two
+    /// engines are bit-exact (sums, predictions, fired words, tie
+    /// resolution — the sliced property suite pins this), so callers
+    /// never observe which one ran except through the
+    /// `sliced_groups`/`sliced_rows` telemetry on `scratch`.
     pub fn forward_packed_with(
+        &self,
+        batch: &PackedBatch,
+        scratch: &mut ForwardScratch,
+    ) -> Result<ForwardOutput> {
+        if batch.rows() >= super::slice::SLICED_MIN_ROWS {
+            self.forward_sliced_with(batch, scratch)
+        } else {
+            self.forward_indexed_with(batch, scratch)
+        }
+    }
+
+    /// The row-major clause-indexed forward engine: the per-sample body
+    /// allocates nothing, literal/fired/sums buffers are reused across
+    /// batches, and clause evaluation runs through the clause-indexed
+    /// scan of [`TmModel::fired_words_into_indexed`] (bit-exact with the
+    /// full scan — the index only decides what gets *scanned*). Skip
+    /// telemetry accumulates on `scratch`. Public so benches and the
+    /// property suites can pin it against the sliced engine directly;
+    /// production callers go through the dispatching
+    /// [`TmModel::forward_packed_with`].
+    pub fn forward_indexed_with(
         &self,
         batch: &PackedBatch,
         scratch: &mut ForwardScratch,
@@ -1274,14 +1327,14 @@ pub struct ClauseShard {
     index: usize,
     n_shards: usize,
     /// Scan-slot range of this shard (contiguous in the index arena).
-    slot_lo: usize,
-    slot_hi: usize,
+    pub(crate) slot_lo: usize,
+    pub(crate) slot_hi: usize,
     /// Fallback slots ∩ the shard's slice — scanned on every sample.
-    fallback_lo: usize,
-    fallback_hi: usize,
+    pub(crate) fallback_lo: usize,
+    pub(crate) fallback_hi: usize,
     /// Skip buckets clipped to the slice (a bucket straddling a shard
     /// boundary is evaluated partly by each neighbor).
-    buckets: Vec<IndexBucket>,
+    pub(crate) buckets: Vec<IndexBucket>,
     /// Per-class polarity masks over shard-owned clauses only.
     class_masks: Vec<ClassMasks>,
     /// `class_ub[k]` = this shard's positive-polarity clause count for
@@ -1401,15 +1454,35 @@ impl ClauseShard {
         &self.class_ub_suffix
     }
 
-    /// Batched partial forward — the shard half of scatter/reduce.
-    /// Evaluates only this shard's scan slots (fallback slice
-    /// unconditionally, clipped buckets behind their index literal, so
-    /// skip telemetry keeps accumulating on `scratch`) and emits partial
-    /// class sums through the sliced polarity masks plus shard-local
-    /// fired rows into `out` (reset first; buffers keep their capacity).
-    /// `scratch.clauses_eligible` counts this shard's slots only — the
-    /// shard's share of the unindexed work.
+    /// Batched partial forward — the shard half of scatter/reduce, with
+    /// the same adaptive dispatch as [`TmModel::forward_packed_with`]:
+    /// batches of at least [`super::slice::SLICED_MIN_ROWS`] rows run
+    /// the bit-sliced engine over this shard's slot slice
+    /// ([`ClauseShard::partial_sliced_into`]); smaller batches keep the
+    /// row-major loop. Both emit identical partials, so the reduce never
+    /// observes which engine a shard ran.
     pub fn partial_class_sums_into(
+        &self,
+        batch: &PackedBatch,
+        scratch: &mut ForwardScratch,
+        out: &mut PartialOutput,
+    ) -> Result<()> {
+        if batch.rows() >= super::slice::SLICED_MIN_ROWS {
+            self.partial_sliced_into(batch, scratch, out)
+        } else {
+            self.partial_indexed_into(batch, scratch, out)
+        }
+    }
+
+    /// The row-major partial engine. Evaluates only this shard's scan
+    /// slots (fallback slice unconditionally, clipped buckets behind
+    /// their index literal, so skip telemetry keeps accumulating on
+    /// `scratch`) and emits partial class sums through the sliced
+    /// polarity masks plus shard-local fired rows into `out` (reset
+    /// first; buffers keep their capacity). `scratch.clauses_eligible`
+    /// counts this shard's slots only — the shard's share of the
+    /// unindexed work.
+    pub fn partial_indexed_into(
         &self,
         batch: &PackedBatch,
         scratch: &mut ForwardScratch,

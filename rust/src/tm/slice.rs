@@ -1,0 +1,563 @@
+//! The bit-sliced transposed forward engine: evaluate one clause against
+//! 64 samples per word op, count votes in carry-save vertical counters.
+//!
+//! The source paper's thesis is that popcount + argmax dominate TM
+//! inference and are worth moving into a cheaper evaluation domain. The
+//! row-major hot loop (`TmModel::forward_indexed_with`) already made
+//! clause evaluation word-parallel *across literals*; this module makes
+//! it word-parallel *across samples* — the software analogue of the
+//! paper's "count votes without ever materializing integers" move:
+//!
+//! 1. **Transpose** the batch ([`crate::tm::bits::TransposedBatch`]
+//!    layout): one `u64` plane per literal, bit `r` of word `g` = row
+//!    `64g + r`. Built by the word-level 64×64 tile transpose
+//!    ([`crate::tm::bits::transpose_64x64`]), never a per-bit loop.
+//! 2. **Evaluate** each clause as the AND of its included literal planes
+//!    over one 64-row group: the result word is the clause's fired bit
+//!    for all 64 rows at once. The scan walks the *same* flat scan-order
+//!    include arena as the row-major path (fallback slots first, then
+//!    skip buckets), with a group-level skip: if a bucket's index
+//!    literal plane word is 0, no row in the group sets that literal, so
+//!    the whole bucket is skipped for all 64 rows. An AND chain whose
+//!    accumulator hits 0 stops early — activity sparsity, the same lever
+//!    the paper's event-driven follow-up pulls in hardware.
+//! 3. **Count** per-class votes in CSA vertical counters
+//!    ([`CsaAccumulator`]): fired planes of one class and polarity feed
+//!    Harley–Seal style 3:2 compressors (three planes in, a sum plane at
+//!    weight 1 and a carry plane at weight 2 out), so 64 rows' signed
+//!    sums live in ~log₂(clauses_per_class) words and are expanded to
+//!    `i32` exactly once per group.
+//! 4. **Re-transpose** the per-clause fired planes back to row-major
+//!    fired words (same 64×64 kernel), so [`ForwardOutput`] is laid out
+//!    identically to the row-major engine's — bit-exact, fired words,
+//!    ties and all.
+//!
+//! Dispatch: `TmModel::forward_packed_with` and
+//! `ClauseShard::partial_class_sums_into` route batches of at least
+//! [`SLICED_MIN_ROWS`] rows here and keep smaller batches on the
+//! row-major loop, where transposition overhead would not amortize over
+//! mostly-idle lanes. The crossover is observable only through the
+//! `sliced_groups` / `sliced_rows` telemetry on
+//! [`crate::tm::ForwardScratch`].
+
+use std::ops::Range;
+
+use anyhow::{ensure, Result};
+
+use super::bits::{tail_mask, transpose_64x64, transpose_into, words_for, PackedBatch, WORD_BITS};
+use super::model::{
+    ClauseIndex, ClauseShard, ForwardOutput, ForwardScratch, IndexBucket, PartialOutput, TmModel,
+};
+
+/// Minimum batch size routed to the sliced engine. One full 64-lane
+/// group is the break-even shape: below it, lanes sit idle while the
+/// batch still pays the feature transpose and the counter expansion, and
+/// the row-major loop's per-row early exits win; from one full group up,
+/// every include-literal AND retires 64 rows of work and the sliced loop
+/// dominates (`benches/sliced_forward.rs` records the measured ratio).
+pub const SLICED_MIN_ROWS: usize = 64;
+
+/// A carry-save vertical counter over 64 lanes: `levels[i]` holds bit
+/// `i` of each lane's running count, so lane `r`'s count is
+/// `Σ_i ((levels[i] >> r) & 1) << i`. Adding a plane is a ripple of
+/// word-wide half-adders; [`CsaAccumulator::add3`] first compresses
+/// three planes through one 3:2 CSA stage (Harley–Seal style) so most
+/// planes never touch the ripple chain at weight 1. The level vector
+/// grows on demand and is reused across groups (capacity is retained by
+/// `clear`), so a counter allocates ~log₂(planes) words once per
+/// scratch lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct CsaAccumulator {
+    levels: Vec<u64>,
+}
+
+impl CsaAccumulator {
+    /// Zero the counter, keeping level capacity.
+    pub fn clear(&mut self) {
+        self.levels.clear();
+    }
+
+    /// Ripple `carry` into the counter starting at weight `2^lvl`. The
+    /// level vector may be shorter than `lvl` (a carry can land above
+    /// every populated level — e.g. `add3(a, a, 0)` produces a zero sum
+    /// and a weight-2 carry into an empty counter), so growth zero-fills
+    /// up to the landing level.
+    #[inline]
+    fn add_at(&mut self, mut carry: u64, mut lvl: usize) {
+        while carry != 0 {
+            if lvl >= self.levels.len() {
+                self.levels.resize(lvl, 0);
+                self.levels.push(carry);
+                return;
+            }
+            let sum = self.levels[lvl] ^ carry;
+            carry &= self.levels[lvl];
+            self.levels[lvl] = sum;
+            lvl += 1;
+        }
+    }
+
+    /// Add one plane (each lane's bit counts 1).
+    #[inline]
+    pub fn add(&mut self, plane: u64) {
+        self.add_at(plane, 0);
+    }
+
+    /// Add three planes through one 3:2 compressor: `sum = a ⊕ b ⊕ c`
+    /// enters at weight 1 and `carry = ab + (a⊕b)c` at weight 2, so the
+    /// ripple chain sees two words instead of three.
+    #[inline]
+    pub fn add3(&mut self, a: u64, b: u64, c: u64) {
+        let u = a ^ b;
+        let sum = u ^ c;
+        let carry = (a & b) | (u & c);
+        self.add_at(sum, 0);
+        self.add_at(carry, 1);
+    }
+
+    /// Lane `r`'s count, expanded to an integer.
+    #[inline]
+    pub fn count(&self, lane: usize) -> i32 {
+        debug_assert!(lane < WORD_BITS);
+        let mut n = 0i32;
+        for (i, &w) in self.levels.iter().enumerate() {
+            n += (((w >> lane) & 1) as i32) << i;
+        }
+        n
+    }
+}
+
+/// Assemble one group's literal planes `[x, ~x]` from the transposed
+/// feature planes: the positive half is the feature plane word itself,
+/// the negated half is its complement masked to the group's live lanes
+/// (so invalid lanes stay zero in every plane — the plane-major mirror
+/// of the row-major zero-tail invariant).
+fn literal_planes_into(
+    planes: &[u64],
+    groups: usize,
+    g: usize,
+    n_features: usize,
+    valid: u64,
+    out: &mut [u64],
+) {
+    debug_assert_eq!(out.len(), 2 * n_features);
+    for i in 0..n_features {
+        let p = planes[i * groups + g];
+        out[i] = p;
+        out[n_features + i] = !p & valid;
+    }
+}
+
+/// Evaluate one scan slot against a 64-row group: AND the included
+/// literal planes into an accumulator seeded with the live-lane mask (a
+/// vacuous-but-`nonempty` fallback clause therefore fires on every live
+/// lane — the flag stays authoritative), stopping as soon as no lane
+/// can still fire.
+#[inline]
+fn eval_slot(
+    idx: &ClauseIndex,
+    slot: usize,
+    lit_planes: &[u64],
+    valid: u64,
+    fired_planes: &mut [u64],
+) {
+    let row = &idx.arena[slot * idx.stride..(slot + 1) * idx.stride];
+    let mut acc = valid;
+    'literals: for (w, &word) in row.iter().enumerate() {
+        let mut word = word;
+        while word != 0 {
+            let lit = w * WORD_BITS + word.trailing_zeros() as usize;
+            acc &= lit_planes[lit];
+            if acc == 0 {
+                break 'literals;
+            }
+            word &= word - 1;
+        }
+    }
+    if acc != 0 {
+        fired_planes[idx.clause_of[slot] as usize] = acc;
+    }
+}
+
+/// One group's clause scan over a slot slice: fallback slots
+/// unconditionally, then each bucket behind its group-level index-literal
+/// check — a zero plane word means no row in the group sets the literal,
+/// so the bucket's clauses are skipped for all 64 rows at once. Returns
+/// the skipped clause count (per group; telemetry scales it by live
+/// lanes to stay comparable with the row-major counters).
+fn eval_group(
+    idx: &ClauseIndex,
+    fallback: Range<usize>,
+    buckets: &[IndexBucket],
+    lit_planes: &[u64],
+    valid: u64,
+    fired_planes: &mut [u64],
+) -> usize {
+    for slot in fallback {
+        eval_slot(idx, slot, lit_planes, valid, fired_planes);
+    }
+    let mut skipped = 0usize;
+    for b in buckets {
+        if lit_planes[b.lit as usize] == 0 {
+            skipped += (b.end - b.start) as usize;
+            continue;
+        }
+        for slot in b.start as usize..b.end as usize {
+            eval_slot(idx, slot, lit_planes, valid, fired_planes);
+        }
+    }
+    skipped
+}
+
+/// Fold one class's fired planes of one polarity into a CSA counter,
+/// three planes per compressor stage. Zero planes (clauses that fired on
+/// no lane — including dead clauses and, on the shard path, clauses this
+/// shard does not own) are skipped outright: vote counting inherits the
+/// batch's activity sparsity.
+fn fold_polarity(
+    csa: &mut CsaAccumulator,
+    class_planes: &[u64],
+    polarity: &[i8],
+    base: usize,
+    want_positive: bool,
+) {
+    csa.clear();
+    let (mut a, mut b) = (0u64, 0u64);
+    let mut staged = 0usize;
+    for (off, &plane) in class_planes.iter().enumerate() {
+        if plane == 0 || (polarity[base + off] > 0) != want_positive {
+            continue;
+        }
+        match staged {
+            0 => {
+                a = plane;
+                staged = 1;
+            }
+            1 => {
+                b = plane;
+                staged = 2;
+            }
+            _ => {
+                csa.add3(a, b, plane);
+                staged = 0;
+            }
+        }
+    }
+    match staged {
+        1 => csa.add(a),
+        2 => csa.add3(a, b, 0),
+        _ => {}
+    }
+}
+
+/// Re-transpose per-clause fired planes into row-major fired words: each
+/// 64-clause chunk is one 64×64 tile, so row `r`'s fired word `wc` drops
+/// out of the same transpose kernel that built the feature planes. Tail
+/// chunks pad with zero planes, so row words keep the zero-tail
+/// invariant `PackedBatch::push_words` asserts.
+fn retranspose_fired(fired_planes: &[u64], fired_words: usize, fired_rows: &mut [u64]) {
+    let c_total = fired_planes.len();
+    debug_assert_eq!(fired_rows.len(), WORD_BITS * fired_words);
+    let mut tile = [0u64; 64];
+    for wc in 0..fired_words {
+        let n = (c_total - wc * WORD_BITS).min(WORD_BITS);
+        tile[..n].copy_from_slice(&fired_planes[wc * WORD_BITS..wc * WORD_BITS + n]);
+        tile[n..].fill(0);
+        transpose_64x64(&mut tile);
+        for (r, &word) in tile.iter().enumerate() {
+            fired_rows[r * fired_words + wc] = word;
+        }
+    }
+}
+
+impl TmModel {
+    /// The bit-sliced batched forward pass: transpose the batch to
+    /// literal planes, evaluate each clause against 64 rows per word op
+    /// through the shared clause-index arena, count votes in per-class
+    /// CSA vertical counters, and re-transpose fired planes back to the
+    /// row-major [`ForwardOutput`] layout. Bit-exact with
+    /// [`TmModel::forward_indexed_with`] and
+    /// `TmModel::forward_reference` — sums, predictions, fired words,
+    /// and tie resolution (argmax ties → lowest class index). Public so
+    /// benches and property suites can pin it directly; production
+    /// callers go through the dispatching `TmModel::forward_packed_with`.
+    pub fn forward_sliced_with(
+        &self,
+        batch: &PackedBatch,
+        scratch: &mut ForwardScratch,
+    ) -> Result<ForwardOutput> {
+        ensure!(
+            batch.is_empty() || batch.bits() == self.n_features,
+            "batch feature width {} != model features {}",
+            batch.bits(),
+            self.n_features
+        );
+        let k = self.n_classes;
+        let c_total = self.c_total();
+        let cpc = self.clauses_per_class;
+        let fired_words = words_for(c_total);
+        let rows = batch.rows();
+        let groups = rows.div_ceil(WORD_BITS);
+        let mut out = ForwardOutput::empty(k, c_total);
+        out.batch = rows;
+        out.sums.reserve(rows * k);
+        out.pred.reserve(rows);
+        // One transpose per batch; every buffer below is per-group and
+        // reused across groups and batches.
+        let mut planes = std::mem::take(&mut scratch.planes);
+        transpose_into(batch, &mut planes);
+        scratch.lit_planes.resize(2 * self.n_features, 0);
+        scratch.fired_planes.resize(c_total, 0);
+        scratch.fired_rows.resize(WORD_BITS * fired_words, 0);
+        scratch.csa_pos.resize_with(k, Default::default);
+        scratch.csa_neg.resize_with(k, Default::default);
+        let idx = &self.clause_index;
+        for g in 0..groups {
+            let n_valid = (rows - g * WORD_BITS).min(WORD_BITS);
+            let valid = tail_mask(n_valid);
+            let ForwardScratch { lit_planes, fired_planes, fired_rows, csa_pos, csa_neg, .. } =
+                scratch;
+            literal_planes_into(&planes, groups, g, self.n_features, valid, lit_planes);
+            fired_planes.fill(0);
+            let skipped =
+                eval_group(idx, 0..idx.n_fallback, &idx.buckets, lit_planes, valid, fired_planes);
+            for ki in 0..k {
+                let base = ki * cpc;
+                let class_planes = &fired_planes[base..base + cpc];
+                fold_polarity(&mut csa_pos[ki], class_planes, &self.polarity, base, true);
+                fold_polarity(&mut csa_neg[ki], class_planes, &self.polarity, base, false);
+            }
+            retranspose_fired(fired_planes, fired_words, fired_rows);
+            for lane in 0..n_valid {
+                let mut best = 0usize;
+                let mut best_sum = i32::MIN;
+                for ki in 0..k {
+                    let s = csa_pos[ki].count(lane) - csa_neg[ki].count(lane);
+                    // Ties resolve to the lowest class index (jnp.argmax).
+                    if s > best_sum {
+                        best = ki;
+                        best_sum = s;
+                    }
+                    out.sums.push(s);
+                }
+                out.pred.push(best as i32);
+                out.fired.push_words(&fired_rows[lane * fired_words..(lane + 1) * fired_words]);
+            }
+            scratch.rows += n_valid as u64;
+            scratch.clauses_skipped += (skipped * n_valid) as u64;
+            scratch.clauses_eligible += (c_total * n_valid) as u64;
+            scratch.sliced_groups += 1;
+            scratch.sliced_rows += n_valid as u64;
+        }
+        scratch.planes = planes;
+        Ok(out)
+    }
+}
+
+impl ClauseShard {
+    /// The bit-sliced partial engine: same plane pipeline as
+    /// [`TmModel::forward_sliced_with`], scanning only this shard's slot
+    /// slice (fallback slice unconditionally, clipped buckets behind the
+    /// group-level index-literal skip). Clauses the shard does not own
+    /// keep zero fired planes, so the counters sum shard-owned votes
+    /// only and the re-transposed fired rows carry shard-owned bits only
+    /// — emitting partials bit-identical to
+    /// [`ClauseShard::partial_indexed_into`]'s.
+    pub fn partial_sliced_into(
+        &self,
+        batch: &PackedBatch,
+        scratch: &mut ForwardScratch,
+        out: &mut PartialOutput,
+    ) -> Result<()> {
+        let m: &TmModel = self.model();
+        ensure!(
+            batch.is_empty() || batch.bits() == m.n_features,
+            "batch feature width {} != model features {}",
+            batch.bits(),
+            m.n_features
+        );
+        let k = m.n_classes;
+        let c_total = m.c_total();
+        let cpc = m.clauses_per_class;
+        let fired_words = words_for(c_total);
+        let rows = batch.rows();
+        let groups = rows.div_ceil(WORD_BITS);
+        out.batch = rows;
+        out.n_classes = k;
+        out.c_total = c_total;
+        out.shard = self.index();
+        out.n_shards = self.n_shards();
+        out.sums.clear();
+        out.sums.reserve(rows * k);
+        if out.fired.bits() == c_total {
+            out.fired.truncate_rows(0);
+        } else {
+            out.fired = PackedBatch::new(c_total);
+        }
+        let mut planes = std::mem::take(&mut scratch.planes);
+        transpose_into(batch, &mut planes);
+        scratch.lit_planes.resize(2 * m.n_features, 0);
+        scratch.fired_planes.resize(c_total, 0);
+        scratch.fired_rows.resize(WORD_BITS * fired_words, 0);
+        scratch.csa_pos.resize_with(k, Default::default);
+        scratch.csa_neg.resize_with(k, Default::default);
+        let idx = &m.clause_index;
+        for g in 0..groups {
+            let n_valid = (rows - g * WORD_BITS).min(WORD_BITS);
+            let valid = tail_mask(n_valid);
+            let ForwardScratch { lit_planes, fired_planes, fired_rows, csa_pos, csa_neg, .. } =
+                scratch;
+            literal_planes_into(&planes, groups, g, m.n_features, valid, lit_planes);
+            fired_planes.fill(0);
+            let skipped = eval_group(
+                idx,
+                self.fallback_lo..self.fallback_hi,
+                &self.buckets,
+                lit_planes,
+                valid,
+                fired_planes,
+            );
+            for ki in 0..k {
+                let base = ki * cpc;
+                let class_planes = &fired_planes[base..base + cpc];
+                fold_polarity(&mut csa_pos[ki], class_planes, &m.polarity, base, true);
+                fold_polarity(&mut csa_neg[ki], class_planes, &m.polarity, base, false);
+            }
+            retranspose_fired(fired_planes, fired_words, fired_rows);
+            for lane in 0..n_valid {
+                for ki in 0..k {
+                    out.sums.push(csa_pos[ki].count(lane) - csa_neg[ki].count(lane));
+                }
+                out.fired.push_words(&fired_rows[lane * fired_words..(lane + 1) * fired_words]);
+            }
+            scratch.rows += n_valid as u64;
+            scratch.clauses_skipped += (skipped * n_valid) as u64;
+            scratch.clauses_eligible += ((self.slot_hi - self.slot_lo) * n_valid) as u64;
+            scratch.sliced_groups += 1;
+            scratch.sliced_rows += n_valid as u64;
+        }
+        scratch.planes = planes;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    /// Reference count of one lane across a plane list.
+    fn lane_count(planes: &[u64], lane: usize) -> i32 {
+        planes.iter().map(|p| ((p >> lane) & 1) as i32).sum()
+    }
+
+    #[test]
+    fn csa_counter_matches_scalar_counts() {
+        let mut rng = SplitMix64::new(31);
+        for n_planes in [0usize, 1, 2, 3, 4, 5, 7, 8, 63, 64, 100, 127] {
+            let planes: Vec<u64> = (0..n_planes).map(|_| rng.next_u64()).collect();
+            // Triple-compressed feed (the fold shape).
+            let mut csa = CsaAccumulator::default();
+            let mut chunks = planes.chunks_exact(3);
+            for t in &mut chunks {
+                csa.add3(t[0], t[1], t[2]);
+            }
+            for &p in chunks.remainder() {
+                csa.add(p);
+            }
+            for lane in 0..64 {
+                assert_eq!(csa.count(lane), lane_count(&planes, lane), "n={n_planes} lane={lane}");
+            }
+            // Plane-at-a-time feed reaches the same counts.
+            let mut one = CsaAccumulator::default();
+            for &p in &planes {
+                one.add(p);
+            }
+            for lane in 0..64 {
+                assert_eq!(one.count(lane), csa.count(lane), "n={n_planes} lane={lane}");
+            }
+            // clear() resets counts while keeping the counter reusable.
+            csa.clear();
+            assert_eq!(csa.count(0), 0);
+            csa.add3(u64::MAX, u64::MAX, u64::MAX);
+            for lane in 0..64 {
+                assert_eq!(csa.count(lane), 3, "post-clear lane={lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn csa_add3_with_zero_padding_is_exact() {
+        // The fold pads a 2-plane remainder with a zero third input.
+        let mut csa = CsaAccumulator::default();
+        csa.add3(0b1010, 0b0110, 0);
+        assert_eq!(csa.count(0), 0);
+        assert_eq!(csa.count(1), 2);
+        assert_eq!(csa.count(2), 1);
+        assert_eq!(csa.count(3), 1);
+    }
+
+    #[test]
+    fn csa_carry_can_land_above_every_populated_level() {
+        // add3(a, a, 0) has a zero sum and a weight-2 carry; into an
+        // empty counter the carry lands above every populated level, so
+        // the ripple must zero-fill on growth.
+        let mut csa = CsaAccumulator::default();
+        csa.add3(0b11, 0b11, 0);
+        assert_eq!(csa.count(0), 2);
+        assert_eq!(csa.count(1), 2);
+        assert_eq!(csa.count(2), 0);
+        // And the zero-filled level still participates in later adds.
+        csa.add(0b01);
+        assert_eq!(csa.count(0), 3);
+        assert_eq!(csa.count(1), 2);
+    }
+
+    #[test]
+    fn sliced_forward_matches_indexed_on_the_toy_model() {
+        let model = crate::tm::model::tests::toy();
+        let mut rng = SplitMix64::new(5);
+        for rows in [1usize, 63, 64, 65, 130] {
+            let data: Vec<Vec<bool>> = (0..rows)
+                .map(|_| (0..model.n_features).map(|_| rng.next_bool(0.5)).collect())
+                .collect();
+            let batch = PackedBatch::from_rows(&data).unwrap();
+            let mut s_idx = ForwardScratch::new();
+            let mut s_sl = ForwardScratch::new();
+            let indexed = model.forward_indexed_with(&batch, &mut s_idx).unwrap();
+            let sliced = model.forward_sliced_with(&batch, &mut s_sl).unwrap();
+            assert_eq!(sliced, indexed, "rows={rows}");
+            assert_eq!(s_sl.rows, rows as u64, "rows={rows}: row telemetry");
+            assert_eq!(s_sl.sliced_rows, rows as u64, "rows={rows}: sliced rows");
+            assert_eq!(
+                s_sl.sliced_groups,
+                rows.div_ceil(64) as u64,
+                "rows={rows}: sliced groups"
+            );
+            assert_eq!(
+                s_sl.clauses_eligible,
+                (rows * model.c_total()) as u64,
+                "rows={rows}: eligible telemetry"
+            );
+            assert_eq!(s_idx.sliced_groups, 0, "indexed path reports no sliced work");
+        }
+    }
+
+    #[test]
+    fn dispatch_threshold_routes_large_batches_to_the_sliced_engine() {
+        let model = crate::tm::model::tests::toy();
+        let mut rng = SplitMix64::new(6);
+        let data: Vec<Vec<bool>> = (0..SLICED_MIN_ROWS + 1)
+            .map(|_| (0..model.n_features).map(|_| rng.next_bool(0.5)).collect())
+            .collect();
+        let small = PackedBatch::from_rows(&data[..SLICED_MIN_ROWS - 1]).unwrap();
+        let large = PackedBatch::from_rows(&data).unwrap();
+        let mut scratch = ForwardScratch::new();
+        model.forward_packed_with(&small, &mut scratch).unwrap();
+        assert_eq!(scratch.sliced_groups, 0, "small batches keep the row-major path");
+        model.forward_packed_with(&large, &mut scratch).unwrap();
+        assert_eq!(scratch.sliced_groups, 2, "large batches take the sliced path");
+        assert_eq!(scratch.sliced_rows, (SLICED_MIN_ROWS + 1) as u64);
+        assert_eq!(scratch.rows, (2 * SLICED_MIN_ROWS) as u64);
+    }
+}

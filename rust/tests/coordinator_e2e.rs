@@ -208,6 +208,47 @@ fn batches_form_under_burst_load() {
     coord.shutdown();
 }
 
+#[test]
+fn big_batches_reach_the_sliced_engine_and_report_it_in_metrics() {
+    // A `--max-batch`-sized cap (≥ tm::SLICED_MIN_ROWS) with a generous
+    // deadline: a fast 64-request burst accumulates into one
+    // size-triggered batch, which the dispatcher routes to the bit-sliced
+    // engine — proven end to end by the sliced counters flowing from the
+    // backend's scratch through the per-batch delta into the pool
+    // metrics, while every answer stays bit-exact.
+    let model = test_model(21);
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(200) },
+        n_workers: 1,
+        backend: BackendSpec::InMemory(model.clone()),
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start(unused_root(), "e2e_model", cfg).unwrap();
+    let mid = coord.model_id("e2e_model").unwrap();
+    let inputs = test_inputs(&model, 64, 22);
+    let (tx, rx) = std::sync::mpsc::channel();
+    for x in &inputs {
+        coord.submit(mid, x, tx.clone());
+    }
+    drop(tx);
+    let replies: Vec<_> = rx.iter().take(inputs.len()).collect();
+    for (i, reply) in replies.iter().enumerate() {
+        let resp = reply.as_ref().expect("burst requests succeed");
+        assert_eq!(resp.pred, model.predict(&inputs[resp.request_id as usize]), "reply {i}");
+    }
+    let m = coord.metrics();
+    assert_eq!(m.requests, 64);
+    assert!(
+        m.sliced_groups >= 1,
+        "a 64-row batch must reach the sliced engine (groups={}, rows={})",
+        m.sliced_groups,
+        m.sliced_rows
+    );
+    assert_eq!(m.sliced_rows, 64, "every row of the burst ran sliced");
+    assert_eq!(m.hot_rows, 64);
+    coord.shutdown();
+}
+
 /// The tentpole acceptance path: a 4-worker pool served entirely through
 /// `BackendSpec::TimeDomain` with full replay. Every response must carry
 /// `hw_decision_latency`/`hw_winner`, and predictions must be identical

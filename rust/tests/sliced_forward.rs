@@ -1,0 +1,287 @@
+//! Bit-sliced engine property suites: the 64×64 transpose, the
+//! plane-major `TransposedBatch`, and `forward_sliced_with` /
+//! `partial_sliced_into` must be bit-exact with the row-major reference
+//! paths (`forward_reference`, `forward_indexed_with`,
+//! `partial_indexed_into`) — across word-boundary shapes, ragged tail
+//! groups, lying-`nonempty` authority cases, and cross-class ties.
+//!
+//! Shapes mirror `tests/hotpath_forward.rs` and deliberately straddle
+//! `u64` edges: f ∈ {31, 63, 64, 65} crossed with clause totals
+//! c_total ∈ {63, 64, 65, 127}, at row counts that leave the last
+//! 64-row group full, singleton, and partially filled.
+
+use std::sync::Arc;
+
+use tdpc::tm::{
+    merge_partials, ClauseShard, ForwardScratch, PackedBatch, PartialOutput, TmModel,
+    TransposedBatch, SLICED_MIN_ROWS,
+};
+use tdpc::util::{prop, SplitMix64};
+
+const CLAUSE_SHAPES: [(usize, usize); 4] = [(3, 21), (4, 16), (5, 13), (1, 127)];
+const FEATURES: [usize; 4] = [31, 63, 64, 65];
+/// Row counts hitting a lone partial group, exact group boundaries, one
+/// bit past a boundary, and a multi-group batch with a ragged tail.
+const ROW_COUNTS: [usize; 5] = [1, 63, 64, 65, 130];
+
+fn random_model_shaped(g: &mut prop::Gen, k: usize, cpc: usize, f: usize, dens: f64) -> TmModel {
+    let c_total = k * cpc;
+    let include: Vec<Vec<bool>> = (0..c_total).map(|_| g.bits(2 * f, dens)).collect();
+    let polarity: Vec<i8> = (0..c_total).map(|_| if g.boolean(0.5) { 1 } else { -1 }).collect();
+    TmModel::assemble_derived("prop".into(), k, f, cpc, include, polarity, 0.0)
+}
+
+fn random_rows(rng: &mut SplitMix64, n: usize, f: usize) -> Vec<Vec<bool>> {
+    (0..n).map(|_| (0..f).map(|_| rng.next_bool(0.5)).collect()).collect()
+}
+
+#[test]
+fn transpose_roundtrips_and_agrees_with_rows_across_the_grid() {
+    let mut rng = SplitMix64::new(0x51ce);
+    for &f in &FEATURES {
+        for &rows in &ROW_COUNTS {
+            let data = random_rows(&mut rng, rows, f);
+            let batch = PackedBatch::from_rows(&data).unwrap();
+            let t = TransposedBatch::from_packed(&batch);
+            let ctx = format!("f={f} rows={rows}");
+            assert_eq!((t.rows(), t.bits()), (rows, f), "{ctx}");
+            assert_eq!(t.groups(), rows.div_ceil(64), "{ctx}");
+            // Bit definition: bit r of plane word g == row 64g+r's bit i.
+            for (r, row) in data.iter().enumerate() {
+                for (i, &bit) in row.iter().enumerate() {
+                    assert_eq!(t.get(r, i), bit, "{ctx}: bit ({r},{i})");
+                    assert_eq!(
+                        (t.plane(i)[r / 64] >> (r % 64)) & 1 == 1,
+                        bit,
+                        "{ctx}: plane word ({r},{i})"
+                    );
+                }
+            }
+            // Ragged lanes beyond the last row stay zero in every plane
+            // (the invariant the sliced evaluator's `valid` mask rests on).
+            if rows % 64 != 0 {
+                let tail = t.groups() - 1;
+                let live = tdpc::tm::bits::tail_mask(rows);
+                for i in 0..f {
+                    assert_eq!(t.plane(i)[tail] & !live, 0, "{ctx}: ragged lanes, plane {i}");
+                }
+            }
+            // transpose(transpose(b)) == b, exactly.
+            assert_eq!(t.untranspose(), batch, "{ctx}: roundtrip");
+        }
+    }
+}
+
+#[test]
+fn prop_sliced_forward_matches_reference_at_word_boundaries() {
+    // The tentpole cross-check: sliced ≡ indexed ≡ reference on sums,
+    // preds, and fired words — forced through the sliced engine directly
+    // (no dispatch threshold), so 1-row batches exercise its ragged
+    // single-lane path too.
+    prop::check("sliced forward at word-boundary shapes", 40, |g| {
+        let f = *g.choose(&FEATURES);
+        let &(k, cpc) = g.choose(&CLAUSE_SHAPES);
+        let density = g.float(0.0, 0.4);
+        let model = random_model_shaped(g, k, cpc, f, density);
+        let n_rows = *g.choose(&ROW_COUNTS);
+        let rows: Vec<Vec<bool>> = (0..n_rows).map(|_| g.bits(f, 0.5)).collect();
+        let ctx = format!("k={k} cpc={cpc} f={f} rows={n_rows}");
+        let batch = PackedBatch::from_rows(&rows).unwrap();
+        let mut s_sliced = ForwardScratch::new();
+        let mut s_indexed = ForwardScratch::new();
+        let sliced = model.forward_sliced_with(&batch, &mut s_sliced).unwrap();
+        let indexed = model.forward_indexed_with(&batch, &mut s_indexed).unwrap();
+        assert_eq!(sliced, indexed, "{ctx}: sliced vs indexed");
+        for (i, row) in rows.iter().enumerate() {
+            let (fired_ref, sums_ref, pred_ref) = model.forward_reference(row);
+            assert_eq!(sliced.fired_row(i), fired_ref, "{ctx}: fired, row {i}");
+            assert_eq!(sliced.sums_row(i), &sums_ref[..], "{ctx}: sums, row {i}");
+            assert_eq!(sliced.pred[i] as usize, pred_ref, "{ctx}: pred, row {i}");
+        }
+        // Telemetry parity: both engines account for every eligible slot.
+        assert_eq!(s_sliced.rows, n_rows as u64, "{ctx}: rows telemetry");
+        assert_eq!(
+            s_sliced.clauses_eligible,
+            (n_rows * model.c_total()) as u64,
+            "{ctx}: eligible telemetry"
+        );
+        assert_eq!(s_sliced.sliced_groups, n_rows.div_ceil(64) as u64, "{ctx}: groups");
+        assert_eq!(s_sliced.sliced_rows, n_rows as u64, "{ctx}: sliced rows");
+        assert_eq!(s_indexed.sliced_groups, 0, "{ctx}: indexed engine never slices");
+    });
+}
+
+#[test]
+fn dispatch_is_transparent_and_observable_only_through_telemetry() {
+    let mut rng = SplitMix64::new(0xd15b);
+    let model = TmModel::synthetic("dispatch", 4, 16, 65, 0.2, 11);
+    for &n_rows in &[SLICED_MIN_ROWS - 1, SLICED_MIN_ROWS, 3 * SLICED_MIN_ROWS + 7] {
+        let rows = random_rows(&mut rng, n_rows, model.n_features);
+        let batch = PackedBatch::from_rows(&rows).unwrap();
+        let mut scratch = ForwardScratch::new();
+        let dispatched = model.forward_packed_with(&batch, &mut scratch).unwrap();
+        let indexed = model.forward_indexed_with(&batch, &mut ForwardScratch::new()).unwrap();
+        assert_eq!(dispatched, indexed, "rows={n_rows}");
+        let expect_sliced = n_rows >= SLICED_MIN_ROWS;
+        assert_eq!(
+            scratch.sliced_rows,
+            if expect_sliced { n_rows as u64 } else { 0 },
+            "rows={n_rows}: sliced row telemetry"
+        );
+        assert_eq!(
+            scratch.sliced_groups,
+            if expect_sliced { n_rows.div_ceil(64) as u64 } else { 0 },
+            "rows={n_rows}: sliced group telemetry"
+        );
+    }
+}
+
+#[test]
+fn vacuous_nonempty_flag_is_authoritative_through_the_sliced_engine() {
+    // Same lying-flag fixture as the hotpath suite: a flagged clause
+    // with an all-false mask fires on every sample, an unflagged clause
+    // with a real mask never fires. The sliced engine must honor both
+    // through its plane pipeline — across full and ragged groups.
+    let f = 64usize;
+    let include = vec![
+        vec![false; 2 * f],                                // vacuous, flagged
+        (0..2 * f).map(|i| i == 0).collect::<Vec<bool>>(), // real, flagged
+        (0..2 * f).map(|i| i == 1).collect::<Vec<bool>>(), // real, UNflagged
+        vec![false; 2 * f],                                // dead
+    ];
+    let m = TmModel::assemble(
+        "vacuous".into(),
+        2,
+        f,
+        2,
+        include,
+        vec![1, -1, 1, -1],
+        vec![true, true, false, false],
+        0.0,
+    );
+    let mut rng = SplitMix64::new(0xface);
+    for &n_rows in &[65usize, 128] {
+        let rows = random_rows(&mut rng, n_rows, f);
+        let batch = PackedBatch::from_rows(&rows).unwrap();
+        let mut scratch = ForwardScratch::new();
+        let out = m.forward_sliced_with(&batch, &mut scratch).unwrap();
+        let reference = m.forward_indexed_with(&batch, &mut ForwardScratch::new()).unwrap();
+        assert_eq!(out, reference, "rows={n_rows}");
+        for r in 0..n_rows {
+            let fired = out.fired_row(r);
+            assert!(fired[0], "vacuous clause fires on row {r}");
+            assert!(!fired[2], "unflagged clause never fires on row {r}");
+            assert!(!fired[3], "dead clause never fires on row {r}");
+        }
+    }
+}
+
+#[test]
+fn prop_sliced_ties_resolve_to_the_lowest_class_index() {
+    // Duplicated class blocks guarantee cross-class ties; the sliced
+    // argmax (expanded from the CSA counters per lane) must break them
+    // exactly like jnp.argmax — lowest index wins.
+    prop::check("sliced argmax tie convention", 60, |g| {
+        let f = g.int(1, 40) as usize;
+        let cpc = g.int(1, 10) as usize;
+        let k = g.int(1, 4) as usize;
+        let base = random_model_shaped(g, k, cpc, f, g.float(0.0, 0.4));
+        let include: Vec<Vec<bool>> =
+            base.include.iter().chain(base.include.iter()).cloned().collect();
+        let polarity: Vec<i8> =
+            base.polarity.iter().chain(base.polarity.iter()).copied().collect();
+        let tied = TmModel::assemble_derived("tied".into(), 2 * k, f, cpc, include, polarity, 0.0);
+        let rows: Vec<Vec<bool>> = (0..70).map(|_| g.bits(f, 0.5)).collect();
+        let batch = PackedBatch::from_rows(&rows).unwrap();
+        let out = tied.forward_sliced_with(&batch, &mut ForwardScratch::new()).unwrap();
+        for r in 0..rows.len() {
+            let sums = out.sums_row(r);
+            let top = *sums.iter().max().unwrap();
+            let first_top = sums.iter().position(|&s| s == top).unwrap();
+            assert_eq!(out.pred[r] as usize, first_top, "row {r} broke the tie convention");
+            assert_eq!(
+                sums[out.pred[r] as usize],
+                sums[out.pred[r] as usize + k],
+                "row {r}: duplicated blocks must actually tie"
+            );
+        }
+    });
+}
+
+#[test]
+fn sharded_partials_slice_cleanly_and_merge_to_the_unsharded_forward() {
+    // Per-shard slot ranges through the sliced engine: each shard's
+    // sliced partial must equal its indexed partial bit for bit, and the
+    // merged sliced partials must equal the unsharded forward.
+    let mut rng = SplitMix64::new(0x5a4d);
+    for &(k, cpc) in &[(3usize, 21usize), (1, 127)] {
+        for &n_shards in &[2usize, 3, 7] {
+            let model = Arc::new(TmModel::synthetic(
+                &format!("shard_k{k}x{cpc}_s{n_shards}"),
+                k,
+                cpc,
+                65,
+                0.25,
+                (k * cpc * n_shards) as u64,
+            ));
+            let rows = random_rows(&mut rng, 100, model.n_features);
+            let batch = PackedBatch::from_rows(&rows).unwrap();
+            let full = model.forward_packed(&batch).unwrap();
+            let shards = ClauseShard::split(&model, n_shards).unwrap();
+            let mut sliced_parts = Vec::new();
+            for shard in &shards {
+                let mut sliced = PartialOutput::empty(
+                    model.n_classes,
+                    model.c_total(),
+                    shard.index(),
+                    shard.n_shards(),
+                );
+                let mut indexed = PartialOutput::empty(
+                    model.n_classes,
+                    model.c_total(),
+                    shard.index(),
+                    shard.n_shards(),
+                );
+                let mut scratch = ForwardScratch::new();
+                shard.partial_sliced_into(&batch, &mut scratch, &mut sliced).unwrap();
+                shard
+                    .partial_indexed_into(&batch, &mut ForwardScratch::new(), &mut indexed)
+                    .unwrap();
+                assert_eq!(
+                    sliced, indexed,
+                    "k={k} cpc={cpc} n_shards={n_shards} shard={}",
+                    shard.index()
+                );
+                assert_eq!(scratch.sliced_groups, 2, "100 rows = 2 groups per shard");
+                sliced_parts.push(sliced);
+            }
+            let merged = merge_partials(&sliced_parts).unwrap();
+            assert_eq!(merged, full, "k={k} cpc={cpc} n_shards={n_shards}: merged");
+        }
+    }
+}
+
+#[test]
+fn scratch_reuse_across_engines_and_shapes_is_equivalent_to_fresh() {
+    // One long-lived scratch alternating between sliced and indexed
+    // batches of different model shapes — the worker lifecycle once the
+    // dispatcher starts flipping engines per batch size.
+    let m1 = TmModel::synthetic("mix1", 3, 21, 31, 0.2, 1);
+    let m2 = TmModel::synthetic("mix2", 5, 13, 65, 0.1, 2);
+    let mut shared = ForwardScratch::new();
+    let mut rng = SplitMix64::new(0x5eed);
+    let mut sliced_rows = 0u64;
+    for round in 0..8 {
+        let m = if round % 2 == 0 { &m1 } else { &m2 };
+        let n_rows = if round % 3 == 0 { 80 } else { 5 };
+        let rows = random_rows(&mut rng, n_rows, m.n_features);
+        let batch = PackedBatch::from_rows(&rows).unwrap();
+        let reused = m.forward_packed_with(&batch, &mut shared).unwrap();
+        let fresh = m.forward_packed(&batch).unwrap();
+        assert_eq!(reused, fresh, "round {round}");
+        if n_rows >= SLICED_MIN_ROWS {
+            sliced_rows += n_rows as u64;
+        }
+    }
+    assert_eq!(shared.sliced_rows, sliced_rows, "sliced telemetry across reuse");
+}
